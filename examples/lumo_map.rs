@@ -1,0 +1,130 @@
+//! LUMO visualization (paper Fig. 8): evaluate the lowest unoccupied
+//! molecular orbital on a real-space grid and emit a Gaussian cube file
+//! plus a coarse ASCII contour of the mid-plane.
+//!
+//!     cargo run --release --example lumo_map [-- <molecule> <out.cube>]
+
+use std::io::Write;
+use std::path::Path;
+
+use matryoshka::basis::{build_basis, cart_components, BasisSet};
+use matryoshka::engines::{MatryoshkaConfig, MatryoshkaEngine};
+use matryoshka::molecule::library;
+use matryoshka::scf::{run_rhf, ScfOptions, ScfResult};
+
+/// Evaluate basis function `mu` at a point (Bohr).
+fn basis_value(basis: &BasisSet, mu: usize, r: [f64; 3]) -> f64 {
+    for sh in &basis.shells {
+        let n = sh.ncomp();
+        if mu < sh.first_bf || mu >= sh.first_bf + n {
+            continue;
+        }
+        let comp = cart_components(sh.l)[mu - sh.first_bf];
+        let d = [r[0] - sh.center[0], r[1] - sh.center[1], r[2] - sh.center[2]];
+        let r2 = d[0] * d[0] + d[1] * d[1] + d[2] * d[2];
+        let ang = d[0].powi(comp[0] as i32) * d[1].powi(comp[1] as i32) * d[2].powi(comp[2] as i32);
+        let mut v = 0.0;
+        for (&a, &c) in sh.exps.iter().zip(sh.coefs.iter()) {
+            v += c * (-a * r2).exp();
+        }
+        return ang * v;
+    }
+    0.0
+}
+
+fn orbital_value(basis: &BasisSet, result: &ScfResult, orb: usize, r: [f64; 3]) -> f64 {
+    (0..basis.nbf).map(|mu| result.coefficients.at(mu, orb) * basis_value(basis, mu, r)).sum()
+}
+
+fn main() -> anyhow::Result<()> {
+    let name = std::env::args().nth(1).unwrap_or_else(|| "water".into());
+    let out_path = std::env::args().nth(2).unwrap_or_else(|| format!("{name}_lumo.cube"));
+    let mol = library::by_name(&name)?;
+    let basis = build_basis(&mol, "sto-3g")?;
+    let config = MatryoshkaConfig { stored: true, ..Default::default() };
+    let mut engine = MatryoshkaEngine::new(basis.clone(), Path::new("artifacts"), config)?;
+    let result = run_rhf(&mol, &basis, &mut engine, &ScfOptions::default())?;
+    let lumo = result.nocc; // first virtual orbital
+    println!(
+        "{name}: E = {:.8} Ha, LUMO index {lumo}, eps = {:.6} Ha",
+        result.energy, result.orbital_energies[lumo]
+    );
+
+    // bounding box + margin
+    let mut lo = [f64::MAX; 3];
+    let mut hi = [f64::MIN; 3];
+    for a in &mol.atoms {
+        for d in 0..3 {
+            lo[d] = lo[d].min(a.pos[d]) - f64::EPSILON;
+            hi[d] = hi[d].max(a.pos[d]);
+        }
+    }
+    let margin = 4.0;
+    for d in 0..3 {
+        lo[d] -= margin;
+        hi[d] += margin;
+    }
+    let n = 40usize;
+    let step = [
+        (hi[0] - lo[0]) / n as f64,
+        (hi[1] - lo[1]) / n as f64,
+        (hi[2] - lo[2]) / n as f64,
+    ];
+
+    // Gaussian cube format
+    let mut f = std::io::BufWriter::new(std::fs::File::create(&out_path)?);
+    writeln!(f, "Matryoshka LUMO map for {name}")?;
+    writeln!(f, "RHF/STO-3G, orbital {lumo} (LUMO)")?;
+    writeln!(f, "{:5} {:11.6} {:11.6} {:11.6}", mol.natoms(), lo[0], lo[1], lo[2])?;
+    for d in 0..3 {
+        let mut v = [0.0; 3];
+        v[d] = step[d];
+        writeln!(f, "{:5} {:11.6} {:11.6} {:11.6}", n, v[0], v[1], v[2])?;
+    }
+    for a in &mol.atoms {
+        writeln!(f, "{:5} {:11.6} {:11.6} {:11.6} {:11.6}", a.z, a.z as f64, a.pos[0], a.pos[1], a.pos[2])?;
+    }
+    let mut max_abs = 0.0f64;
+    for i in 0..n {
+        for j in 0..n {
+            let mut col = 0;
+            for k in 0..n {
+                let r = [
+                    lo[0] + i as f64 * step[0],
+                    lo[1] + j as f64 * step[1],
+                    lo[2] + k as f64 * step[2],
+                ];
+                let v = orbital_value(&basis, &result, lumo, r);
+                max_abs = max_abs.max(v.abs());
+                write!(f, " {v:12.5e}")?;
+                col += 1;
+                if col % 6 == 0 {
+                    writeln!(f)?;
+                }
+            }
+            writeln!(f)?;
+        }
+    }
+    drop(f);
+    println!("wrote {out_path} ({n}^3 grid), max |psi| = {max_abs:.4}");
+
+    // ASCII mid-plane contour
+    println!("LUMO mid-plane (x-y at z mid): '+' positive, '-' negative lobes");
+    let zmid = (lo[2] + hi[2]) / 2.0;
+    for j in (0..n).step_by(2) {
+        let mut line = String::new();
+        for i in 0..n {
+            let r = [lo[0] + i as f64 * step[0], lo[1] + j as f64 * step[1], zmid];
+            let v = orbital_value(&basis, &result, lumo, r);
+            line.push(if v > 0.05 * max_abs {
+                '+'
+            } else if v < -0.05 * max_abs {
+                '-'
+            } else {
+                '.'
+            });
+        }
+        println!("{line}");
+    }
+    Ok(())
+}

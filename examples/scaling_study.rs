@@ -1,0 +1,72 @@
+//! Scalability study (paper Fig. 13, single-device curve): execution time
+//! of one Fock build vs system size across water clusters, against the
+//! surviving-ERI count — on log axes the two curves must track each other
+//! (constant per-ERI cost is the paper's scalability claim).
+//!
+//!     cargo run --release --example scaling_study [-- <max_waters>]
+
+use std::path::Path;
+
+use matryoshka::basis::build_basis;
+use matryoshka::constructor::SchwarzMode;
+use matryoshka::engines::{MatryoshkaConfig, MatryoshkaEngine};
+use matryoshka::linalg::Matrix;
+use matryoshka::molecule::library;
+use matryoshka::scf::FockEngine;
+use matryoshka::util::Stopwatch;
+
+fn main() -> anyhow::Result<()> {
+    let max_n: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(16);
+    println!("waters  atoms   nbf      quads      time_s   quads/s   time/quad_us");
+    let mut prev: Option<(f64, u64)> = None;
+    let mut n = 1;
+    while n <= max_n {
+        let mol = library::water_cluster(n);
+        let basis = build_basis(&mol, "sto-3g")?;
+        let config = MatryoshkaConfig {
+            schwarz: SchwarzMode::Estimate,
+            threshold: 1e-9,
+            ..Default::default()
+        };
+        let mut engine = MatryoshkaEngine::new(basis.clone(), Path::new("artifacts"), config)?;
+        // density-like symmetric matrix (one Fock build, no full SCF)
+        let mut d = Matrix::identity(basis.nbf);
+        d.scale(0.5);
+        // warm up until the allocator converges (compiles its variants)
+        for _ in 0..4 {
+            engine.two_electron(&d)?;
+            if engine.tuner().all_converged() {
+                break;
+            }
+        }
+        engine.two_electron(&d)?;
+        let sw = Stopwatch::start();
+        engine.two_electron(&d)?;
+        let t = sw.elapsed_s();
+        let quads = engine.plan().stats.quadruples_surviving;
+        println!(
+            "{:>6} {:>6} {:>5} {:>10} {:>10.3} {:>9.0} {:>12.3}",
+            n,
+            mol.natoms(),
+            basis.nbf,
+            quads,
+            t,
+            quads as f64 / t,
+            t / quads as f64 * 1e6
+        );
+        if let Some((pt, pq)) = prev {
+            // Fig. 13 claim: time grows ~ with ERI count (stable per-ERI cost)
+            let time_ratio = t / pt;
+            let quad_ratio = quads as f64 / pq as f64;
+            if quad_ratio > 1.5 {
+                assert!(
+                    time_ratio < quad_ratio * 3.0,
+                    "per-ERI cost exploded: time x{time_ratio:.2} vs quads x{quad_ratio:.2}"
+                );
+            }
+        }
+        prev = Some((t, quads));
+        n *= 2;
+    }
+    Ok(())
+}

@@ -1,0 +1,114 @@
+"""AOT export: lower every (ERI class x workload variant) to HLO text.
+
+Python runs ONCE, at build time (`make artifacts`).  For each canonical
+s/p ERI class and each Workload-Allocator batch variant this script:
+
+  1. runs the Graph Compiler (path search + schedule),
+  2. traces the L2 function (which wraps the L1 Pallas kernel) to
+     StableHLO and converts it to **HLO text** — not `.serialize()`:
+     jax >= 0.5 emits protos with 64-bit instruction ids that the
+     xla_extension 0.5.1 backing the Rust `xla` crate rejects; the HLO
+     text parser reassigns ids and round-trips cleanly,
+  3. writes artifacts/<name>.hlo.txt, the generated-source rendering under
+     artifacts/gen/, and one manifest line the Rust runtime parses.
+
+Also exported: per-class *random-path* variants (the §8.3.3 baseline the
+Fig. 11 bench compares against).
+"""
+
+import argparse
+import os
+import sys
+import time
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+from jax._src.lib import xla_client as xc  # noqa: E402
+
+from .graph_compiler import CANONICAL_SP_CLASSES, class_name, emit_source  # noqa: E402
+from .model import KPAIR, VARIANT_BATCHES, class_variant_fn, example_args  # noqa: E402
+
+MANIFEST_VERSION = 1
+# batch size used for the random-path ablation artifacts
+RANDOM_PATH_BATCH = 512
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the interchange format)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def manifest_line(name, cls, batch, sched, fname, mode):
+    m = sched.metrics
+    return (
+        f"{name} {cls[0]} {cls[1]} {cls[2]} {cls[3]} {batch} "
+        f"{sched.kpair_bra} {sched.kpair_ket} {sched.ncomp} {m.max_m} "
+        f"{m.n_vrr_nodes} {m.n_hrr_nodes} {m.max_live} "
+        f"{m.flops_per_quadruple:.1f} {m.bytes_per_quadruple:.1f} {mode} {fname}"
+    )
+
+
+def export_variant(out_dir, cls, batch, mode, seed, lines):
+    cname = class_name(cls)
+    suffix = "" if mode == "greedy" else f"_{mode}{seed}"
+    name = f"eri_{cname}{suffix}_b{batch}"
+    fname = f"{name}.hlo.txt"
+    path = os.path.join(out_dir, fname)
+
+    t0 = time.time()
+    fn, sched = class_variant_fn(cls, batch, mode=mode, seed=seed)
+    lowered = jax.jit(fn).lower(*example_args(cls, batch))
+    text = to_hlo_text(lowered)
+    with open(path, "w") as f:
+        f.write(text)
+    lines.append(manifest_line(name, cls, batch, sched, fname, mode))
+
+    gen_dir = os.path.join(out_dir, "gen")
+    os.makedirs(gen_dir, exist_ok=True)
+    with open(os.path.join(gen_dir, f"{name}.py"), "w") as f:
+        f.write(emit_source(sched))
+    print(
+        f"  {name}: ncomp={sched.ncomp} vrr={sched.metrics.n_vrr_nodes} "
+        f"hlo={len(text) // 1024}KiB  {time.time() - t0:.1f}s",
+        flush=True,
+    )
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--batches", type=int, nargs="*", default=list(VARIANT_BATCHES))
+    ap.add_argument("--skip-random", action="store_true",
+                    help="skip the random-path ablation artifacts")
+    args = ap.parse_args(argv)
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    lines = []
+    t0 = time.time()
+    for cls in CANONICAL_SP_CLASSES:
+        print(f"class {class_name(cls)} {cls}", flush=True)
+        for batch in args.batches:
+            export_variant(args.out_dir, cls, batch, "greedy", 0, lines)
+        if not args.skip_random:
+            export_variant(args.out_dir, cls, RANDOM_PATH_BATCH, "random", 1, lines)
+
+    manifest = os.path.join(args.out_dir, "manifest.txt")
+    with open(manifest, "w") as f:
+        f.write(f"# matryoshka artifact manifest v{MANIFEST_VERSION}\n")
+        f.write(
+            "# name la lb lc ld batch kb kk ncomp max_m n_vrr n_hrr "
+            "max_live flops_per_quad bytes_per_quad mode file\n"
+        )
+        f.write("\n".join(lines) + "\n")
+    print(f"wrote {len(lines)} artifacts + manifest in {time.time() - t0:.1f}s")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,45 @@
+"""Matryoshka Graph Compiler (paper §6).
+
+Offline compiler that turns one ERI class (la, lb, lc, ld) into a
+straight-line schedule of arithmetic operations:
+
+  Stage 1  Computation Deconstruction — the contraction axis (EPT axis) is
+           deconstructed: the kernel evaluates all K*L*M*N primitive
+           quadruples as one vectorized tile and contracts by summation.
+  Stage 2  Graph Abstraction — the HRR/VRR recurrence process is abstracted
+           into a DAG whose nodes are intermediate integrals.
+  Stage 3  Path Searching — Algorithm 1 (greedy, cost = (n - r) + λ·a).
+  Stage 4  Code Generation — topological schedule → jnp straight-line code
+           (functional evaluator used inside the Pallas kernel, plus
+           emitted human-readable source and live-set/FLOP metrics).
+"""
+
+from .types import (
+    CART_COMPONENTS,
+    ncart,
+    cart_components,
+    class_name,
+    canonical_class,
+    CANONICAL_SP_CLASSES,
+)
+from .vrr import VrrDag, build_vrr_dag
+from .hrr import HrrPlan, build_hrr_plan
+from .schedule import Schedule, compile_class, ScheduleMetrics
+from .codegen import emit_source
+
+__all__ = [
+    "CART_COMPONENTS",
+    "ncart",
+    "cart_components",
+    "class_name",
+    "canonical_class",
+    "CANONICAL_SP_CLASSES",
+    "VrrDag",
+    "build_vrr_dag",
+    "HrrPlan",
+    "build_hrr_plan",
+    "Schedule",
+    "ScheduleMetrics",
+    "compile_class",
+    "emit_source",
+]

@@ -1,0 +1,99 @@
+"""Horizontal recurrence relation (HRR) planning.
+
+The HRR moves angular momentum between the two functions of a pair at the
+*contracted* level (its coefficients depend only on the fixed geometry
+A-B / C-D, not on exponents), which is why Matryoshka contracts the
+primitive axis first and applies the HRR once per contracted block:
+
+  (a (b+1_i) | cd) = ((a+1_i) b | cd) + AB_i (a b | cd)
+  (ab | c (d+1_i)) = (ab | (c+1_i) d) + CD_i (ab | c d)
+
+Leaves are (e 0 | f 0) contracted integrals — exactly the VRR targets.
+Position choice (which non-zero component of b/d to reduce) reuses the
+Algorithm-1 greedy cost.
+"""
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+from .types import AngMom, ZERO, add, angmom
+
+# Contracted node (a b | c d) by Cartesian component tuples.
+HrrKey = Tuple[AngMom, AngMom, AngMom, AngMom]
+# (symbol or None, const, dep). value = sum(const * symbol * value(dep)).
+HrrTerm = Tuple[Optional[str], float, HrrKey]
+
+_AXES = "xyz"
+
+
+@dataclass
+class HrrPlan:
+    # node -> terms; leaf nodes (b=d=0) are absent: they are inputs.
+    nodes: Dict[HrrKey, List[HrrTerm]] = field(default_factory=dict)
+    order: List[HrrKey] = field(default_factory=list)
+    # contracted (e, f) integrals the VRR stage must deliver
+    leaves: Set[Tuple[AngMom, AngMom]] = field(default_factory=set)
+
+
+def _reduce_b(key: HrrKey, i: int) -> List[HrrTerm]:
+    a, b, c, d = key
+    bm = add(b, i, -1)
+    return [
+        (None, 1.0, (add(a, i, 1), bm, c, d)),
+        (f"AB{_AXES[i]}", 1.0, (a, bm, c, d)),
+    ]
+
+
+def _reduce_d(key: HrrKey, i: int) -> List[HrrTerm]:
+    a, b, c, d = key
+    dm = add(d, i, -1)
+    return [
+        (None, 1.0, (a, b, add(c, i, 1), dm)),
+        (f"CD{_AXES[i]}", 1.0, (a, b, c, dm)),
+    ]
+
+
+class _HrrBuilder:
+    def __init__(self, lam: float):
+        self.lam = lam
+        self.plan = HrrPlan()
+
+    def build(self, key: HrrKey) -> None:
+        a, b, c, d = key
+        if b == ZERO and d == ZERO:
+            self.plan.leaves.add((a, c))
+            return
+        if key in self.plan.nodes:
+            return
+
+        # candidate positions: non-zero components of b, then of d
+        candidates: List[Tuple[str, int]] = [("b", i) for i in range(3) if b[i] > 0]
+        candidates += [("d", i) for i in range(3) if d[i] > 0]
+        best_cost, best_terms = None, None
+        for side, i in candidates:
+            terms = _reduce_b(key, i) if side == "b" else _reduce_d(key, i)
+            known = 0
+            for _, _, dep in terms:
+                da, db, dc, dd = dep
+                if (db == ZERO and dd == ZERO and (da, dc) in self.plan.leaves) or dep in self.plan.nodes:
+                    known += 1
+            n = len(terms) - known
+            rem = angmom(b) - 1 if side == "b" else angmom(d) - 1
+            cost = (n - known) + self.lam * rem
+            if best_cost is None or cost < best_cost:
+                best_cost, best_terms = cost, terms
+        assert best_terms is not None
+
+        for _, _, dep in best_terms:
+            self.build(dep)
+        if key not in self.plan.nodes:
+            self.plan.nodes[key] = best_terms
+            self.plan.order.append(key)
+
+
+def build_hrr_plan(targets: Sequence[HrrKey], lam: float = 0.1) -> HrrPlan:
+    """Plan the HRR for every output component quadruple of an ERI class."""
+    builder = _HrrBuilder(lam)
+    for t in targets:
+        builder.build(t)
+    return builder.plan

@@ -1,0 +1,162 @@
+"""Stage 3½: combine HRR plan + VRR DAG into one straight-line schedule.
+
+The schedule is the compiler's product: an ordered list of operations the
+kernel (or the emitted source) executes top to bottom.  It also carries the
+metrics the paper's evaluation reads off the generated code:
+
+* ``n_ops`` / ``n_terms``   — schedule length (per primitive tile and per
+  contracted block), the Fig. 11 "generated code size" proxy;
+* ``flops_per_quadruple``   — arithmetic cost model for Fig. 6 (OP/B) and
+  the Workload Allocator's intensity estimates;
+* ``max_live``              — peak number of simultaneously-live
+  intermediates, the register-pressure / local-memory proxy of Fig. 11
+  (deconstruction shrinks it exactly as it shrinks spills on a GPU);
+* path-search statistics    — reuse counts for §8.3.3.
+"""
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from .types import AngMom, ClassKey, cart_components, ncart
+from .vrr import VrrDag, VrrKey, Term, build_vrr_dag
+from .hrr import HrrPlan, HrrKey, HrrTerm, build_hrr_plan
+
+
+@dataclass
+class ScheduleMetrics:
+    n_vrr_nodes: int = 0
+    n_vrr_terms: int = 0
+    n_hrr_nodes: int = 0
+    n_hrr_terms: int = 0
+    n_contract: int = 0
+    max_m: int = 0
+    max_live: int = 0
+    flops_per_quadruple: float = 0.0
+    bytes_per_quadruple: float = 0.0
+    vrr_reused: int = 0
+    vrr_created: int = 0
+    positions_examined: int = 0
+
+    @property
+    def op_per_byte(self) -> float:
+        return self.flops_per_quadruple / max(self.bytes_per_quadruple, 1.0)
+
+
+@dataclass
+class Schedule:
+    cls: ClassKey
+    kpair_bra: int
+    kpair_ket: int
+    # VRR straight-line ops over [B, KB, KK] tiles, dependency order.
+    vrr_ops: List[Tuple[VrrKey, List[Term]]] = field(default_factory=list)
+    # contracted (e, f) integrals = sum over the primitive tile axes
+    contract: List[Tuple[AngMom, AngMom]] = field(default_factory=list)
+    # HRR straight-line ops over [B] contracted values, dependency order.
+    hrr_ops: List[Tuple[HrrKey, List[HrrTerm]]] = field(default_factory=list)
+    # output component quadruples in storage order (row-major over shells)
+    out_order: List[HrrKey] = field(default_factory=list)
+    metrics: ScheduleMetrics = field(default_factory=ScheduleMetrics)
+
+    @property
+    def ncomp(self) -> int:
+        return len(self.out_order)
+
+
+def _class_targets(cls: ClassKey) -> List[HrrKey]:
+    la, lb, lc, ld = cls
+    return [
+        (a, b, c, d)
+        for a in cart_components(la)
+        for b in cart_components(lb)
+        for c in cart_components(lc)
+        for d in cart_components(ld)
+    ]
+
+
+def _max_live(
+    n_inputs: int,
+    ops: Sequence[Tuple[object, Sequence[tuple]]],
+    outputs: Sequence[object],
+) -> int:
+    """Peak live-value count over a straight-line schedule (last-use scan)."""
+    last_use: Dict[object, int] = {}
+    out_set = set(outputs)
+    for idx, (key, terms) in enumerate(ops):
+        for t in terms:
+            dep = t[-1]
+            if dep is not None:
+                last_use[dep] = idx
+    live = 0
+    peak = 0
+    alive = set()
+    for idx, (key, terms) in enumerate(ops):
+        alive.add(key)
+        live = len(alive)
+        peak = max(peak, live)
+        dead = [d for d in alive if d not in out_set and last_use.get(d, -1) <= idx and d != key]
+        for d in dead:
+            if last_use.get(d, -1) <= idx:
+                alive.discard(d)
+    return peak + n_inputs
+
+
+def compile_class(
+    cls: ClassKey,
+    kpair_bra: int = 9,
+    kpair_ket: int = 9,
+    lam: float = 0.1,
+    mode: str = "greedy",
+    seed: int = 0,
+) -> Schedule:
+    """Run all compiler stages for one canonical ERI class."""
+    la, lb, lc, ld = cls
+    targets = _class_targets(cls)
+
+    # Stage 2/3 (contracted level): HRR plan down to (e0|f0) leaves.
+    hrr = build_hrr_plan(targets, lam=lam)
+    vrr_targets = sorted(hrr.leaves)
+
+    # Stage 2/3 (primitive level): VRR DAG with Algorithm-1 path search.
+    vrr = build_vrr_dag(vrr_targets, lam=lam, mode=mode, seed=seed)
+
+    sched = Schedule(cls=cls, kpair_bra=kpair_bra, kpair_ket=kpair_ket)
+    sched.vrr_ops = [(k, vrr.nodes[k]) for k in vrr.order]
+    sched.contract = vrr_targets
+    sched.hrr_ops = [(k, hrr.nodes[k]) for k in hrr.order]
+    sched.out_order = targets
+
+    m = sched.metrics
+    m.n_vrr_nodes = len(sched.vrr_ops)
+    m.n_vrr_terms = sum(len(t) for _, t in sched.vrr_ops)
+    m.n_hrr_nodes = len(sched.hrr_ops)
+    m.n_hrr_terms = sum(len(t) for _, t in sched.hrr_ops)
+    m.n_contract = len(vrr_targets)
+    m.max_m = vrr.max_m()
+    m.vrr_reused = vrr.reused
+    m.vrr_created = vrr.created
+    m.positions_examined = vrr.positions_examined
+
+    # Cost model per quadruple: every VRR term is ~(len(symbols) mul + 1
+    # fma) per primitive pair-combination; Boys ~ 30 flops per m order;
+    # contraction adds KB*KK-1 adds per target; HRR is per-block only.
+    prim = kpair_bra * kpair_ket
+    vrr_flops = sum(len(t[0]) + 1 for _, terms in sched.vrr_ops for t in terms)
+    boys_flops = 30.0 * (m.max_m + 1) + 40.0
+    setup_flops = 40.0  # rho, W, T, prefactor per primitive combination
+    contract_flops = float(len(vrr_targets))
+    hrr_flops = sum(
+        (0 if t[0] is None else 1) + 1 for _, terms in sched.hrr_ops for t in terms
+    )
+    m.flops_per_quadruple = prim * (vrr_flops + boys_flops + setup_flops + contract_flops) + hrr_flops
+
+    # Memory traffic per quadruple: bra/ket primitive rows + geometry in,
+    # ncomp doubles out (f64).
+    n_in = (kpair_bra + kpair_ket) * 5 + 12
+    m.bytes_per_quadruple = 8.0 * (n_in + len(targets))
+
+    # Live-set proxy: VRR tile values + contracted values live at once.
+    m.max_live = _max_live(
+        m.max_m + 1, sched.vrr_ops, [ (e, f, 0) for e, f in vrr_targets ]
+    ) + len(vrr_targets)
+
+    return sched

@@ -1,0 +1,93 @@
+"""Angular-momentum bookkeeping shared by the Graph Compiler stages.
+
+A *shell* has total angular momentum ``l``; its Cartesian components are
+integer triples ``(lx, ly, lz)`` with ``lx+ly+lz == l`` enumerated in the
+conventional lexicographic-descending order (x first), e.g. for ``l=1``:
+``(1,0,0), (0,1,0), (0,0,1)`` — the p_x, p_y, p_z functions.
+
+An *ERI class* is the 4-tuple of shell angular momenta ``(la, lb, lc, ld)``.
+The runtime canonicalizes every shell quadruple to ``la >= lb``,
+``lc >= ld`` and ``(la, lb) >= (lc, ld)`` by the 8-fold integral symmetry,
+so the compiler only ever sees canonical classes.
+"""
+
+from functools import lru_cache
+from typing import List, Tuple
+
+AngMom = Tuple[int, int, int]
+ClassKey = Tuple[int, int, int, int]
+
+
+def ncart(l: int) -> int:
+    """Number of Cartesian components of a shell with angular momentum l."""
+    return (l + 1) * (l + 2) // 2
+
+
+@lru_cache(maxsize=None)
+def cart_components(l: int) -> Tuple[AngMom, ...]:
+    """Cartesian component triples of shell l, conventional order."""
+    comps: List[AngMom] = []
+    for lx in range(l, -1, -1):
+        for ly in range(l - lx, -1, -1):
+            comps.append((lx, ly, l - lx - ly))
+    return tuple(comps)
+
+
+# Pre-computed component tables for s/p/d/f shells.
+CART_COMPONENTS = {l: cart_components(l) for l in range(4)}
+
+_SHELL_LETTER = "spdfgh"
+
+
+def class_name(cls: ClassKey) -> str:
+    """Human-readable class name, e.g. (1,1,1,0) -> 'ppps'."""
+    return "".join(_SHELL_LETTER[l] for l in cls)
+
+
+def canonical_class(cls: ClassKey) -> Tuple[ClassKey, bool, bool, bool]:
+    """Map an arbitrary class to canonical form.
+
+    Returns (canonical, swapped_ab, swapped_cd, swapped_braket); the swap
+    flags tell the caller how output components must be permuted back.
+    """
+    la, lb, lc, ld = cls
+    swap_ab = lb > la
+    if swap_ab:
+        la, lb = lb, la
+    swap_cd = ld > lc
+    if swap_cd:
+        lc, ld = ld, lc
+    swap_bk = (lc, ld) > (la, lb)
+    if swap_bk:
+        la, lb, lc, ld = lc, ld, la, lb
+    return (la, lb, lc, ld), swap_ab, swap_cd, swap_bk
+
+
+def all_canonical_classes(lmax: int) -> List[ClassKey]:
+    """All canonical ERI classes with shell angular momenta <= lmax."""
+    out = []
+    for la in range(lmax + 1):
+        for lb in range(la + 1):
+            for lc in range(la + 1):
+                for ld in range(lc + 1):
+                    if (lc, ld) <= (la, lb):
+                        out.append((la, lb, lc, ld))
+    return out
+
+
+# The classes an s/p basis set (STO-3G for H..Ar) exercises at runtime.
+CANONICAL_SP_CLASSES: List[ClassKey] = all_canonical_classes(1)
+
+
+def add(a: AngMom, i: int, delta: int = 1) -> AngMom:
+    """Return a with component i shifted by delta."""
+    v = list(a)
+    v[i] += delta
+    return tuple(v)  # type: ignore[return-value]
+
+
+def angmom(a: AngMom) -> int:
+    return a[0] + a[1] + a[2]
+
+
+ZERO: AngMom = (0, 0, 0)

@@ -1,0 +1,173 @@
+"""Stage 2+3: VRR DAG abstraction and Algorithm-1 greedy path search.
+
+The vertical recurrence relation (Obara–Saika / Head-Gordon–Pople form)
+derives a primitive integral ``[a0|c0]^(m)`` from integrals of lower
+angular momentum.  Reducing the bra at Cartesian position ``i``
+(``a = t - 1_i``):
+
+  [t0|c0]^m = PA_i [a0|c0]^m + WP_i [a0|c0]^{m+1}
+            + a_i/(2p)   ( [(a-1_i)0|c0]^m  -  rho/p [(a-1_i)0|c0]^{m+1} )
+            + c_i/(2(p+q)) [a0|(c-1_i)0]^{m+1}
+
+and symmetrically for the ket with ``QC/WQ``, ``1/(2q)``, ``rho/q`` and the
+bra cross-term through ``1/(2(p+q))``.  The base case ``[00|00]^m`` is the
+prefactored Boys value, exposed to the schedule as input symbol ``F{m}``.
+
+A target with both ``a != 0`` and ``c != 0`` admits up to six reduction
+positions (three bra, three ket); which one is chosen at each recursive
+entrance is exactly the paper's *ambiguous computational path*.  Algorithm 1
+resolves it greedily with cost ``(n - r) + lambda * a`` where ``r``/``n``
+count reused/new intermediate results and ``a`` is the angular momentum
+remaining at the position.  A seeded random-path mode provides the §8.3.3
+baseline.
+"""
+
+import random
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from .types import AngMom, ZERO, add, angmom
+
+# A node of the VRR DAG: [a 0 | c 0]^(m).
+VrrKey = Tuple[AngMom, AngMom, int]
+
+# One term of a recurrence: (symbol names multiplied together, constant
+# coefficient, dependency node).  The evaluator computes
+# sum(const * prod(symbols) * value(dep)) over the terms of a node.
+Term = Tuple[Tuple[str, ...], float, Optional[VrrKey]]
+
+_AXES = "xyz"
+
+
+@dataclass
+class VrrDag:
+    """Materialized VRR DAG with per-node recurrence terms."""
+
+    # node -> list of terms; base nodes ((0,0,0),(0,0,0),m) have a single
+    # term referencing the input symbol F{m} and no dependency.
+    nodes: Dict[VrrKey, List[Term]] = field(default_factory=dict)
+    # insertion order is a valid reverse-topological order (deps first)
+    order: List[VrrKey] = field(default_factory=list)
+    # path-search bookkeeping for §8.3.3 metrics
+    reused: int = 0
+    created: int = 0
+    positions_examined: int = 0
+
+    def max_m(self) -> int:
+        return max((k[2] for k in self.nodes), default=0)
+
+
+def _bra_terms(t: AngMom, c: AngMom, m: int, i: int) -> List[Term]:
+    """Terms of [t0|c0]^m reduced on bra position i."""
+    a = add(t, i, -1)
+    ax = _AXES[i]
+    terms: List[Term] = [
+        ((f"PA{ax}",), 1.0, (a, c, m)),
+        ((f"WP{ax}",), 1.0, (a, c, m + 1)),
+    ]
+    if a[i] > 0:
+        am = add(a, i, -1)
+        terms.append((("i2p",), float(a[i]), (am, c, m)))
+        terms.append((("i2p", "rop"), -float(a[i]), (am, c, m + 1)))
+    if c[i] > 0:
+        cm = add(c, i, -1)
+        terms.append((("i2pq",), float(c[i]), (a, cm, m + 1)))
+    return terms
+
+
+def _ket_terms(a: AngMom, t: AngMom, m: int, i: int) -> List[Term]:
+    """Terms of [a0|t0]^m reduced on ket position i."""
+    c = add(t, i, -1)
+    ax = _AXES[i]
+    terms: List[Term] = [
+        ((f"QC{ax}",), 1.0, (a, c, m)),
+        ((f"WQ{ax}",), 1.0, (a, c, m + 1)),
+    ]
+    if c[i] > 0:
+        cm = add(c, i, -1)
+        terms.append((("i2q",), float(c[i]), (a, cm, m)))
+        terms.append((("i2q", "roq"), -float(c[i]), (a, cm, m + 1)))
+    if a[i] > 0:
+        am = add(a, i, -1)
+        terms.append((("i2pq",), float(a[i]), (am, c, m + 1)))
+    return terms
+
+
+def _candidate_positions(a: AngMom, c: AngMom) -> List[Tuple[str, int]]:
+    """All valid reduction positions for node (a, c): ('bra'|'ket', axis)."""
+    pos: List[Tuple[str, int]] = []
+    pos += [("bra", i) for i in range(3) if a[i] > 0]
+    pos += [("ket", i) for i in range(3) if c[i] > 0]
+    return pos
+
+
+def _terms_for(key: VrrKey, side: str, i: int) -> List[Term]:
+    a, c, m = key
+    if side == "bra":
+        return _bra_terms(a, c, m, i)
+    return _ket_terms(a, c, m, i)
+
+
+class _PathSearcher:
+    """Greedy (Algorithm 1) or seeded-random path selection over the DAG."""
+
+    def __init__(self, lam: float, mode: str, seed: int):
+        assert mode in ("greedy", "random")
+        self.lam = lam
+        self.mode = mode
+        self.rng = random.Random(seed)
+        self.dag = VrrDag()
+
+    def build(self, key: VrrKey) -> None:
+        """Materialize `key` and (recursively) everything it depends on."""
+        if key in self.dag.nodes:
+            self.dag.reused += 1
+            return
+        a, c, m = key
+        if a == ZERO and c == ZERO:
+            # Base case: prefactored Boys value, an input of the schedule.
+            self.dag.nodes[key] = [((f"F{m}",), 1.0, None)]
+            self.dag.order.append(key)
+            self.dag.created += 1
+            return
+
+        positions = _candidate_positions(a, c)
+        self.dag.positions_examined += len(positions)
+        if self.mode == "random":
+            side, i = self.rng.choice(positions)
+            terms = _terms_for(key, side, i)
+        else:
+            # Algorithm 1: cost = (n - r) + lambda * a  per position.
+            best_cost, best_terms = None, None
+            for side, i in positions:
+                terms = _terms_for(key, side, i)
+                deps = [t[2] for t in terms if t[2] is not None]
+                r = sum(1 for d in deps if d in self.dag.nodes)
+                n = len(deps) - r
+                # angular momentum remaining on the reduced side
+                rem = angmom(a) - 1 if side == "bra" else angmom(c) - 1
+                cost = (n - r) + self.lam * rem
+                if best_cost is None or cost < best_cost:
+                    best_cost, best_terms = cost, terms
+            terms = best_terms  # type: ignore[assignment]
+
+        # Recurse on dependencies first so self.dag.order stays topological.
+        for _, _, dep in terms:
+            if dep is not None:
+                self.build(dep)
+        self.dag.nodes[key] = terms
+        self.dag.order.append(key)
+        self.dag.created += 1
+
+
+def build_vrr_dag(
+    targets: Sequence[Tuple[AngMom, AngMom]],
+    lam: float = 0.1,
+    mode: str = "greedy",
+    seed: int = 0,
+) -> VrrDag:
+    """Build the VRR DAG computing [e0|f0]^(0) for every (e, f) target."""
+    searcher = _PathSearcher(lam, mode, seed)
+    for e, f in targets:
+        searcher.build((e, f, 0))
+    return searcher.dag

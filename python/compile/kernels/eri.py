@@ -1,0 +1,127 @@
+"""L1: the ERI hot-spot as a Pallas kernel, one kernel per ERI class.
+
+The kernel consumes one *quadruple block* built by the Block Constructor —
+``B`` shell quadruples of a single class, i.e. uniform instruction stream
+(the paper's divergence-free property) — as four arrays:
+
+    bra_prim [B, KB, 5]   bra_geom [B, 6]
+    ket_prim [B, KK, 5]   ket_geom [B, 6]
+
+and produces the contracted ERI block ``out [B, ncomp]``.
+
+Inside, the EPT axes drive the structure:
+
+* the primitive contraction axis is *deconstructed* into a ``[B, KB, KK]``
+  tile evaluated by the Graph-Compiler schedule in one vectorized pass and
+  re-contracted by summation;
+* the batch axis ``B`` is the *combination* axis the Workload Allocator
+  tunes (kernel variants differ only in ``B``).
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom calls; interpret-mode lowers the kernel body to plain HLO, which is
+exactly what the Rust runtime loads.
+"""
+
+import math
+from functools import lru_cache
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..graph_compiler import compile_class
+from ..graph_compiler.codegen import evaluate_schedule
+from .boys import boys
+
+TWO_PI_POW_2_5 = 2.0 * math.pi ** 2.5
+
+
+def _symbols(bra_prim, bra_geom, ket_prim, ket_geom, mmax, xp):
+    """Compute the schedule's input symbols from block pair data.
+
+    VRR symbols are ``[B, KB, KK]`` tiles (broadcast products of bra
+    ``[B, KB, 1]`` and ket ``[B, 1, KK]`` primitive data); HRR symbols are
+    per-row ``[B]`` geometry factors.
+    """
+    p = bra_prim[:, :, 0][:, :, None]
+    px = bra_prim[:, :, 1][:, :, None]
+    py = bra_prim[:, :, 2][:, :, None]
+    pz = bra_prim[:, :, 3][:, :, None]
+    kab = bra_prim[:, :, 4][:, :, None]
+
+    q = ket_prim[:, None, :, 0]
+    qx = ket_prim[:, None, :, 1]
+    qy = ket_prim[:, None, :, 2]
+    qz = ket_prim[:, None, :, 3]
+    kcd = ket_prim[:, None, :, 4]
+
+    ax = bra_geom[:, 0][:, None, None]
+    ay = bra_geom[:, 1][:, None, None]
+    az = bra_geom[:, 2][:, None, None]
+    cx = ket_geom[:, 0][:, None, None]
+    cy = ket_geom[:, 1][:, None, None]
+    cz = ket_geom[:, 2][:, None, None]
+
+    psum = p + q
+    inv_ps = 1.0 / psum
+    rho = p * q * inv_ps
+    wx = (p * px + q * qx) * inv_ps
+    wy = (p * py + q * qy) * inv_ps
+    wz = (p * pz + q * qz) * inv_ps
+
+    dx = px - qx
+    dy = py - qy
+    dz = pz - qz
+    t = rho * (dx * dx + dy * dy + dz * dz)
+    pref = TWO_PI_POW_2_5 / (p * q * xp.sqrt(psum)) * kab * kcd
+
+    fvals = boys(mmax, t, xp)
+    sym = {
+        "PAx": px - ax, "PAy": py - ay, "PAz": pz - az,
+        "WPx": wx - px, "WPy": wy - py, "WPz": wz - pz,
+        "QCx": qx - cx, "QCy": qy - cy, "QCz": qz - cz,
+        "WQx": wx - qx, "WQy": wy - qy, "WQz": wz - qz,
+        "i2p": 0.5 / p, "i2q": 0.5 / q, "i2pq": 0.5 * inv_ps,
+        "rop": rho / p, "roq": rho / q,
+    }
+    for m in range(mmax + 1):
+        sym[f"F{m}"] = pref * fvals[m]
+
+    hsym = {
+        "ABx": bra_geom[:, 3], "ABy": bra_geom[:, 4], "ABz": bra_geom[:, 5],
+        "CDx": ket_geom[:, 3], "CDy": ket_geom[:, 4], "CDz": ket_geom[:, 5],
+    }
+    return sym, hsym
+
+
+def eri_block_math(sched, bra_prim, bra_geom, ket_prim, ket_geom, xp=jnp):
+    """Schedule-driven contracted ERI block (works under numpy or jnp)."""
+    sym, hsym = _symbols(bra_prim, bra_geom, ket_prim, ket_geom,
+                         sched.metrics.max_m, xp)
+    return evaluate_schedule(sched, sym, hsym, xp)
+
+
+@lru_cache(maxsize=None)
+def get_schedule(cls, kb=9, kk=9, lam=0.1, mode="greedy", seed=0):
+    return compile_class(cls, kpair_bra=kb, kpair_ket=kk, lam=lam,
+                         mode=mode, seed=seed)
+
+
+def make_eri_kernel(cls, batch, kb=9, kk=9, lam=0.1, mode="greedy", seed=0):
+    """Build the Pallas-wrapped ERI block function for one class/variant."""
+    sched = get_schedule(cls, kb, kk, lam, mode, seed)
+    ncomp = sched.ncomp
+
+    def kernel(bp_ref, bg_ref, kp_ref, kg_ref, o_ref):
+        o_ref[...] = eri_block_math(
+            sched, bp_ref[...], bg_ref[...], kp_ref[...], kg_ref[...], jnp
+        )
+
+    def fn(bra_prim, bra_geom, ket_prim, ket_geom):
+        return pl.pallas_call(
+            kernel,
+            out_shape=jax.ShapeDtypeStruct((batch, ncomp), jnp.float64),
+            interpret=True,
+        )(bra_prim, bra_geom, ket_prim, ket_geom)
+
+    return fn, sched

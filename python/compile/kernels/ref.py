@@ -1,0 +1,188 @@
+"""Pure-numpy McMurchie-Davidson ERI oracle.
+
+This is the correctness anchor of the whole stack: an implementation of
+general contracted two-electron repulsion integrals over Cartesian
+Gaussians using an algorithm *independent* of the HGP (HRR/VRR) scheme the
+Graph Compiler generates - Hermite expansion coefficients E_t^{ij} plus the
+Hermite Coulomb tensor R_tuv.  The Pallas kernels (and the Rust reference
+engine, which re-implements this same scheme) are validated against it.
+
+Scalar/recursive and deliberately simple; speed is irrelevant here.
+"""
+
+import math
+from typing import Sequence, Tuple
+
+import numpy as np
+
+from .boys import boys
+
+
+def _dfact(n: int) -> float:
+    """Double factorial with (-1)!! = 1."""
+    out = 1.0
+    while n > 1:
+        out *= n
+        n -= 2
+    return out
+
+
+def prim_norm(alpha: float, lmn: Tuple[int, int, int]) -> float:
+    """Normalization constant of a primitive Cartesian Gaussian."""
+    lx, ly, lz = lmn
+    l = lx + ly + lz
+    df = _dfact(2 * lx - 1) * _dfact(2 * ly - 1) * _dfact(2 * lz - 1)
+    return (2.0 * alpha / math.pi) ** 0.75 * (4.0 * alpha) ** (l / 2.0) / math.sqrt(df)
+
+
+def hermite_e(i: int, j: int, t: int, q_x: float, a: float, b: float) -> float:
+    """Hermite expansion coefficient E_t^{ij} for a 1-D Gaussian product.
+
+    q_x = A_x - B_x; a, b are the two exponents.
+    """
+    p = a + b
+    mu = a * b / p
+    if t < 0 or t > i + j:
+        return 0.0
+    if i == j == t == 0:
+        return math.exp(-mu * q_x * q_x)
+    if j == 0:
+        return (
+            hermite_e(i - 1, j, t - 1, q_x, a, b) / (2.0 * p)
+            - (b * q_x / p) * hermite_e(i - 1, j, t, q_x, a, b)
+            + (t + 1) * hermite_e(i - 1, j, t + 1, q_x, a, b)
+        )
+    return (
+        hermite_e(i, j - 1, t - 1, q_x, a, b) / (2.0 * p)
+        + (a * q_x / p) * hermite_e(i, j - 1, t, q_x, a, b)
+        + (t + 1) * hermite_e(i, j - 1, t + 1, q_x, a, b)
+    )
+
+
+def hermite_r(
+    t: int, u: int, v: int, n: int, alpha: float, pq: np.ndarray, fvals: Sequence[float]
+) -> float:
+    """Hermite Coulomb auxiliary R^n_{tuv}(alpha, PQ)."""
+    if t < 0 or u < 0 or v < 0:
+        return 0.0
+    if t == u == v == 0:
+        return (-2.0 * alpha) ** n * fvals[n]
+    if t > 0:
+        return (t - 1) * hermite_r(t - 2, u, v, n + 1, alpha, pq, fvals) + pq[0] * hermite_r(
+            t - 1, u, v, n + 1, alpha, pq, fvals
+        )
+    if u > 0:
+        return (u - 1) * hermite_r(t, u - 2, v, n + 1, alpha, pq, fvals) + pq[1] * hermite_r(
+            t, u - 1, v, n + 1, alpha, pq, fvals
+        )
+    return (v - 1) * hermite_r(t, u, v - 2, n + 1, alpha, pq, fvals) + pq[2] * hermite_r(
+        t, u, v - 1, n + 1, alpha, pq, fvals
+    )
+
+
+def primitive_eri(
+    a: float, la: Tuple[int, int, int], ca: np.ndarray,
+    b: float, lb: Tuple[int, int, int], cb: np.ndarray,
+    c: float, lc: Tuple[int, int, int], cc: np.ndarray,
+    d: float, ld: Tuple[int, int, int], cd: np.ndarray,
+) -> float:
+    """Unnormalized primitive ERI [ab|cd] (chemists' notation)."""
+    ca = np.asarray(ca, dtype=np.float64)
+    cb = np.asarray(cb, dtype=np.float64)
+    cc = np.asarray(cc, dtype=np.float64)
+    cd = np.asarray(cd, dtype=np.float64)
+    p = a + b
+    q = c + d
+    P = (a * ca + b * cb) / p
+    Q = (c * cc + d * cd) / q
+    alpha = p * q / (p + q)
+    pq = P - Q
+    t_arg = alpha * float(pq @ pq)
+
+    l1, m1, n1 = la
+    l2, m2, n2 = lb
+    l3, m3, n3 = lc
+    l4, m4, n4 = ld
+    mmax = sum(la) + sum(lb) + sum(lc) + sum(ld)
+    fvals = [float(f[0]) for f in boys(mmax, np.asarray([t_arg]), np)]
+
+    ab = ca - cb
+    cdv = cc - cd
+    val = 0.0
+    for t in range(l1 + l2 + 1):
+        e1 = hermite_e(l1, l2, t, ab[0], a, b)
+        if e1 == 0.0:
+            continue
+        for u in range(m1 + m2 + 1):
+            e2 = hermite_e(m1, m2, u, ab[1], a, b)
+            if e2 == 0.0:
+                continue
+            for v in range(n1 + n2 + 1):
+                e3 = hermite_e(n1, n2, v, ab[2], a, b)
+                if e3 == 0.0:
+                    continue
+                for tau in range(l3 + l4 + 1):
+                    e4 = hermite_e(l3, l4, tau, cdv[0], c, d)
+                    if e4 == 0.0:
+                        continue
+                    for nu in range(m3 + m4 + 1):
+                        e5 = hermite_e(m3, m4, nu, cdv[1], c, d)
+                        if e5 == 0.0:
+                            continue
+                        for phi in range(n3 + n4 + 1):
+                            e6 = hermite_e(n3, n4, phi, cdv[2], c, d)
+                            if e6 == 0.0:
+                                continue
+                            sign = -1.0 if (tau + nu + phi) % 2 else 1.0
+                            val += (
+                                e1 * e2 * e3 * e4 * e5 * e6 * sign
+                                * hermite_r(t + tau, u + nu, v + phi, 0, alpha, pq, fvals)
+                            )
+    val *= 2.0 * math.pi ** 2.5 / (p * q * math.sqrt(p + q))
+    return val
+
+
+class Shell:
+    """A contracted Cartesian Gaussian shell for oracle-side computations."""
+
+    def __init__(self, l: int, exps: Sequence[float], coefs: Sequence[float],
+                 center: Sequence[float]):
+        self.l = int(l)
+        self.exps = np.asarray(exps, dtype=np.float64)
+        self.coefs = np.asarray(coefs, dtype=np.float64)
+        self.center = np.asarray(center, dtype=np.float64)
+
+    def __repr__(self):
+        return f"Shell(l={self.l}, K={len(self.exps)})"
+
+
+def contracted_eri_class(sa: Shell, sb: Shell, sc: Shell, sd: Shell) -> np.ndarray:
+    """Contracted ERI block for a shell quadruple.
+
+    Coefficients are used as-is (callers fold any normalization into them),
+    matching the prefactor convention of the Block Constructor's pair data.
+    Returns array [ncomp_a, ncomp_b, ncomp_c, ncomp_d].
+    """
+    from ..graph_compiler.types import cart_components
+
+    comps = [cart_components(s.l) for s in (sa, sb, sc, sd)]
+    out = np.zeros(tuple(len(c) for c in comps))
+    for ia, la in enumerate(comps[0]):
+        for ib, lb in enumerate(comps[1]):
+            for ic, lc in enumerate(comps[2]):
+                for idd, ld in enumerate(comps[3]):
+                    v = 0.0
+                    for ka, aa in enumerate(sa.exps):
+                        for kb, bb in enumerate(sb.exps):
+                            for kc, gc in enumerate(sc.exps):
+                                for kd, gd in enumerate(sd.exps):
+                                    coef = (
+                                        sa.coefs[ka] * sb.coefs[kb]
+                                        * sc.coefs[kc] * sd.coefs[kd]
+                                    )
+                                    v += coef * primitive_eri(
+                                        aa, la, sa.center, bb, lb, sb.center,
+                                        gc, lc, sc.center, gd, ld, sd.center,
+                                    )
+                    out[ia, ib, ic, idd] = v
+    return out

@@ -1,0 +1,56 @@
+"""L2: the JAX compute graph for one ERI class variant (build-time only).
+
+The "model" of a quantum-chemistry system is not a neural network but the
+per-class contracted-ERI block computation the SCF Fock build consumes.
+This module assembles it from the L1 Pallas kernel, enables f64, and
+exposes the jitted/lowerable entry point `class_variant_fn` that aot.py
+exports to HLO text.  Nothing here is imported at runtime — the Rust
+coordinator only sees the HLO artifacts plus the manifest.
+"""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp  # noqa: E402
+
+from .graph_compiler.types import ClassKey  # noqa: E402
+from .kernels.eri import make_eri_kernel  # noqa: E402
+
+# Workload-variant batch sizes: the Combination axis the Workload
+# Allocator (Alg. 2) tunes over at runtime.  Small batches waste less
+# padding on scarce classes; large batches amortize dispatch overhead.
+VARIANT_BATCHES = (32, 128, 512, 2048)
+
+# STO-3G: every shell is a 3-primitive contraction => 9 products per pair.
+KPAIR = 9
+
+
+def class_variant_fn(cls: ClassKey, batch: int, kb: int = KPAIR,
+                     kk: int = KPAIR, lam: float = 0.1,
+                     mode: str = "greedy", seed: int = 0):
+    """Return (jittable fn, schedule) for one (class, batch) variant.
+
+    fn(bra_prim[b,kb,5], bra_geom[b,6], ket_prim[b,kk,5], ket_geom[b,6])
+      -> (eri[b, ncomp],)
+
+    The 1-tuple return matches the `return_tuple=True` convention the Rust
+    runtime unwraps with `to_tuple1`.
+    """
+    kernel_fn, sched = make_eri_kernel(cls, batch, kb, kk, lam, mode, seed)
+
+    def fn(bra_prim, bra_geom, ket_prim, ket_geom):
+        return (kernel_fn(bra_prim, bra_geom, ket_prim, ket_geom),)
+
+    return fn, sched
+
+
+def example_args(cls: ClassKey, batch: int, kb: int = KPAIR, kk: int = KPAIR):
+    """Abstract input specs for AOT lowering of one variant."""
+    f64 = jnp.float64
+    return (
+        jax.ShapeDtypeStruct((batch, kb, 5), f64),
+        jax.ShapeDtypeStruct((batch, 6), f64),
+        jax.ShapeDtypeStruct((batch, kk, 5), f64),
+        jax.ShapeDtypeStruct((batch, 6), f64),
+    )

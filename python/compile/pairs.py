@@ -1,0 +1,76 @@
+"""Shell-pair data layout shared between Python (tests/AOT) and Rust (L3).
+
+The Block Constructor (paper §5, stage 1) reduces the O(N^4) quadruple
+space to O(N^2) *pair* data.  A pair of contracted shells (A, B) with
+primitive exponents {alpha_k}, {beta_l} is stored as:
+
+  prim[KPAIR, 5]  per primitive product (k, l), row-major over (k, l):
+      [0] p    = alpha + beta
+      [1] Px/Py/Pz = (alpha*A + beta*B) / p        (columns 1..3)
+      [4] Kab  = c_k * c_l * exp(-alpha*beta/p * |A-B|^2)
+  geom[6] = [Ax, Ay, Az, ABx, ABy, ABz]            (AB = A - B)
+
+Contraction coefficients c include primitive + contracted normalization
+(folded by the caller).  Rows beyond the real K_a*K_b products are padding
+with p = 1 and Kab = 0 — they contribute exactly zero and keep every
+division in the kernel finite.  The Rust constructor
+(rust/src/constructor/pairs.rs) must produce byte-identical layout; the
+cross-language contract is pinned by python/tests/test_pairdata.py and the
+Rust integration tests.
+"""
+
+from typing import Tuple
+
+import numpy as np
+
+# STO-3G: K=3 primitives per shell => 9 primitive products per pair.
+DEFAULT_KPAIR = 9
+
+
+def build_pair(exps_a, coefs_a, center_a, exps_b, coefs_b, center_b,
+               kpair: int = DEFAULT_KPAIR) -> Tuple[np.ndarray, np.ndarray]:
+    """Build (prim[kpair,5], geom[6]) pair data for one shell pair."""
+    a = np.asarray(exps_a, dtype=np.float64)
+    b = np.asarray(exps_b, dtype=np.float64)
+    ca = np.asarray(coefs_a, dtype=np.float64)
+    cb = np.asarray(coefs_b, dtype=np.float64)
+    A = np.asarray(center_a, dtype=np.float64)
+    B = np.asarray(center_b, dtype=np.float64)
+    nk = len(a) * len(b)
+    if nk > kpair:
+        raise ValueError(f"pair has {nk} primitive products > kpair={kpair}")
+
+    prim = np.zeros((kpair, 5), dtype=np.float64)
+    prim[:, 0] = 1.0  # padding keeps p finite
+    ab = A - B
+    ab2 = float(ab @ ab)
+    row = 0
+    for k in range(len(a)):
+        for l in range(len(b)):
+            p = a[k] + b[l]
+            P = (a[k] * A + b[l] * B) / p
+            kab = ca[k] * cb[l] * np.exp(-a[k] * b[l] / p * ab2)
+            prim[row, 0] = p
+            prim[row, 1:4] = P
+            prim[row, 4] = kab
+            row += 1
+    geom = np.concatenate([A, ab]).astype(np.float64)
+    return prim, geom
+
+
+def pad_batch(prims, geoms, batch: int) -> Tuple[np.ndarray, np.ndarray]:
+    """Stack per-pair data into a padded [batch, ...] block.
+
+    Padding rows have Kab = 0 everywhere => contribute exactly zero.
+    """
+    kpair = prims[0].shape[0]
+    bp = np.zeros((batch, kpair, 5), dtype=np.float64)
+    bp[:, :, 0] = 1.0
+    bg = np.zeros((batch, 6), dtype=np.float64)
+    n = len(prims)
+    if n > batch:
+        raise ValueError(f"{n} quadrature rows > batch={batch}")
+    for i in range(n):
+        bp[i] = prims[i]
+        bg[i] = geoms[i]
+    return bp, bg

@@ -1,0 +1,9 @@
+import os
+import sys
+
+import jax
+
+# x64 must be set before any kernel module builds jnp arrays
+jax.config.update("jax_enable_x64", True)
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))

@@ -1,0 +1,65 @@
+"""Boys function: closed forms, recursions, branch continuity."""
+
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from scipy import special
+
+from compile.kernels.boys import boys
+
+
+def boys_hyp(m, t):
+    """Closed form via the confluent hypergeometric function 1F1."""
+    return special.hyp1f1(m + 0.5, m + 1.5, -t) / (2 * m + 1)
+
+
+@pytest.mark.parametrize("t", [0.0, 1e-8, 0.1, 1.0, 5.0, 20.0, 32.9, 33.1, 60.0, 500.0])
+@pytest.mark.parametrize("mmax", [0, 2, 4, 8])
+def test_matches_hypergeometric_closed_form(t, mmax):
+    f = boys(mmax, np.asarray([t]), np)
+    for m in range(mmax + 1):
+        want = boys_hyp(m, t)
+        assert abs(float(f[m][0]) - want) < 2e-12 * max(want, 1e-10), (m, t)
+
+
+def test_value_at_zero():
+    f = boys(6, np.asarray([0.0]), np)
+    for m in range(7):
+        assert float(f[m][0]) == pytest.approx(1.0 / (2 * m + 1), abs=1e-15)
+
+
+def test_f0_erf_closed_form():
+    t = np.asarray([0.7, 7.0, 70.0])
+    f0 = boys(0, t, np)[0]
+    want = 0.5 * np.sqrt(np.pi / t) * special.erf(np.sqrt(t))
+    np.testing.assert_allclose(np.asarray(f0), want, rtol=1e-13)
+
+
+@settings(max_examples=200, deadline=None)
+@given(t=st.floats(min_value=0.0, max_value=200.0), mmax=st.integers(0, 10))
+def test_downward_recursion_invariant(t, mmax):
+    """F_{m-1} = (2t F_m + e^-t) / (2m - 1) must hold for all outputs."""
+    f = [float(v[0]) for v in boys(mmax, np.asarray([t]), np)]
+    for m in range(1, mmax + 1):
+        lhs = f[m - 1]
+        rhs = (2 * t * f[m] + math.exp(-t)) / (2 * m - 1)
+        assert abs(lhs - rhs) <= 1e-11 * max(abs(lhs), 1e-12)
+
+
+@settings(max_examples=100, deadline=None)
+@given(t=st.floats(min_value=0.0, max_value=100.0))
+def test_monotone_decreasing_in_m(t):
+    f = [float(v[0]) for v in boys(5, np.asarray([t]), np)]
+    for m in range(1, 6):
+        assert f[m] <= f[m - 1] * (1 + 1e-14)
+
+
+def test_vectorized_matches_scalar_loop():
+    ts = np.linspace(0.0, 80.0, 37)
+    batch = boys(3, ts, np)
+    for i, t in enumerate(ts):
+        single = boys(3, np.asarray([t]), np)
+        for m in range(4):
+            assert float(batch[m][i]) == float(single[m][0])

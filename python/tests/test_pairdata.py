@@ -1,0 +1,39 @@
+"""Pair-data layout contract (python/compile/pairs.py <-> Rust constructor)."""
+
+import numpy as np
+import pytest
+
+from compile.pairs import DEFAULT_KPAIR, build_pair, pad_batch
+
+
+def test_layout_and_padding():
+    prim, geom = build_pair([1.0, 2.0], [0.5, 0.4], [0, 0, 0],
+                            [1.5], [0.7], [0, 0, 1.0])
+    assert prim.shape == (DEFAULT_KPAIR, 5)
+    # 2 real rows, rest padding
+    assert np.all(prim[2:, 0] == 1.0)
+    assert np.all(prim[2:, 4] == 0.0)
+    # row 0: alpha=1.0, beta=1.5 -> p = 2.5, P = (0,0,1.5/2.5)
+    assert prim[0, 0] == 2.5
+    assert prim[0, 3] == pytest.approx(1.5 / 2.5)
+    # Kab = ca*cb*exp(-ab/p |AB|^2)
+    assert prim[0, 4] == pytest.approx(0.5 * 0.7 * np.exp(-1.0 * 1.5 / 2.5 * 1.0))
+    # geom = [A, A-B]
+    np.testing.assert_allclose(geom, [0, 0, 0, 0, 0, -1.0])
+
+
+def test_too_many_primitives_rejected():
+    with pytest.raises(ValueError):
+        build_pair([1] * 4, [1] * 4, [0, 0, 0], [1] * 3, [1] * 3, [0, 0, 0])
+
+
+def test_pad_batch_contract():
+    prim, geom = build_pair([1.0], [1.0], [0, 0, 0], [1.0], [1.0], [0, 0, 0])
+    bp, bg = pad_batch([prim], [geom], 3)
+    assert bp.shape == (3, DEFAULT_KPAIR, 5)
+    # padding quadruple rows: p = 1, Kab = 0 everywhere
+    assert np.all(bp[1:, :, 0] == 1.0)
+    assert np.all(bp[1:, :, 4] == 0.0)
+    assert np.all(bg[1:] == 0.0)
+    with pytest.raises(ValueError):
+        pad_batch([prim, prim], [geom, geom], 1)

@@ -1,0 +1,79 @@
+"""McMurchie–Davidson oracle self-consistency and analytic anchors."""
+
+import math
+
+import numpy as np
+import pytest
+
+from compile.kernels.ref import (
+    Shell,
+    contracted_eri_class,
+    hermite_e,
+    prim_norm,
+    primitive_eri,
+)
+
+rng = np.random.default_rng(7)
+
+
+def rand_shell(l, k=3):
+    return Shell(l, rng.uniform(0.2, 3.0, k), rng.uniform(0.3, 1.0, k),
+                 rng.uniform(-1.5, 1.5, 3))
+
+
+def test_ssss_same_center_analytic():
+    # [00|00] with unit-exponent primitives at one center:
+    # 2 pi^{5/2} / (p q sqrt(p+q)), p = q = 2
+    a = 1.0
+    c = np.zeros(3)
+    v = primitive_eri(a, (0, 0, 0), c, a, (0, 0, 0), c,
+                      a, (0, 0, 0), c, a, (0, 0, 0), c)
+    want = 2 * math.pi ** 2.5 / (2.0 * 2.0 * math.sqrt(4.0))
+    assert v == pytest.approx(want, rel=1e-14)
+
+
+def test_prim_norm_s():
+    a = 1.3
+    n = prim_norm(a, (0, 0, 0))
+    assert n * n * (math.pi / (2 * a)) ** 1.5 == pytest.approx(1.0, rel=1e-14)
+
+
+def test_hermite_e_t0_at_same_center_odd_vanishes():
+    # E_0^{10}(qx=0) = 0 because the product is odd
+    assert hermite_e(1, 0, 0, 0.0, 1.1, 0.9) == 0.0
+
+
+def test_eri_8_fold_symmetry():
+    shells = [rand_shell(0, 1) for _ in range(4)]
+    v = lambda a, b, c, d: contracted_eri_class(shells[a], shells[b],
+                                                shells[c], shells[d])[0, 0, 0, 0]
+    base = v(0, 1, 2, 3)
+    for perm in [(1, 0, 2, 3), (0, 1, 3, 2), (2, 3, 0, 1), (3, 2, 1, 0)]:
+        assert v(*perm) == pytest.approx(base, rel=1e-12)
+
+
+def test_p_block_bra_swap_transposes_components():
+    pa, pb = rand_shell(1), rand_shell(1)
+    s = rand_shell(0)
+    block = contracted_eri_class(pa, pb, s, s)       # [3,3,1,1]
+    swapped = contracted_eri_class(pb, pa, s, s)
+    np.testing.assert_allclose(block[:, :, 0, 0], swapped[:, :, 0, 0].T,
+                               rtol=1e-12, atol=1e-15)
+
+
+def test_schwarz_inequality_holds():
+    a, b = rand_shell(1), rand_shell(0)
+    c, d = rand_shell(1), rand_shell(1)
+    ab = contracted_eri_class(a, b, c, d)
+    qab = np.sqrt(np.max(np.abs(contracted_eri_class(a, b, a, b))))
+    qcd = np.sqrt(np.max(np.abs(contracted_eri_class(c, d, c, d))))
+    assert np.max(np.abs(ab)) <= qab * qcd * (1 + 1e-10)
+
+
+def test_contraction_is_linear_in_coefficients():
+    s1 = rand_shell(0)
+    s2 = Shell(0, s1.exps, 2.0 * s1.coefs, s1.center)
+    o = rand_shell(0)
+    v1 = contracted_eri_class(s1, o, o, o)[0, 0, 0, 0]
+    v2 = contracted_eri_class(s2, o, o, o)[0, 0, 0, 0]
+    assert v2 == pytest.approx(2.0 * v1, rel=1e-13)

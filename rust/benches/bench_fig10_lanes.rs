@@ -1,0 +1,64 @@
+//! Fig. 10 — "average active threads per warp" → SIMD-lane utilization.
+//!
+//! Without the Block Constructor, consecutive quadruples mix ERI classes;
+//! every class switch forces a new padded execution, so most batch lanes
+//! are padding (the divergence analog).  With clustering, lanes fill up.
+//! Reported per ERI class on the paper's two showcase systems.
+
+mod common;
+
+use matryoshka::bench_harness as bh;
+use matryoshka::engines::MatryoshkaConfig;
+use matryoshka::scf::FockEngine;
+
+fn main() {
+    let Some(dir) = common::artifact_dir() else { return };
+    bh::header("Fig. 10 — lane utilization per ERI class (clustered vs unclustered)");
+    for name in ["chignolin", "crambin"] {
+        let (_, basis) = common::system(name);
+        let d = common::test_density(basis.nbf);
+
+        let mut baseline = common::engine(
+            basis.clone(),
+            &dir,
+            MatryoshkaConfig { clustered: false, autotune: false, fixed_batch: 128, ..Default::default() },
+        );
+        baseline.two_electron(&d).expect("unclustered build");
+
+        let mut clustered = common::engine(
+            basis.clone(),
+            &dir,
+            MatryoshkaConfig { autotune: false, fixed_batch: 128, ..Default::default() },
+        );
+        clustered.two_electron(&d).expect("clustered build");
+
+        println!("\n{name}:");
+        println!(
+            "{:<16} {:>12} {:>12} {:>9}",
+            "class", "unclustered", "clustered", "gain"
+        );
+        let base_mean = baseline.metrics.mean_lane_utilization();
+        for (class, s) in &clustered.metrics.per_class {
+            let b = baseline
+                .metrics
+                .per_class
+                .get(class)
+                .map(|x| x.lane_utilization())
+                .unwrap_or(base_mean);
+            println!(
+                "{:<16} {:>12.4} {:>12.4} {:>8.2}x",
+                format!("{class:?}"),
+                b,
+                s.lane_utilization(),
+                s.lane_utilization() / b.max(1e-6)
+            );
+        }
+        println!(
+            "mean             {:>12.4} {:>12.4} {:>8.2}x",
+            base_mean,
+            clustered.metrics.mean_lane_utilization(),
+            clustered.metrics.mean_lane_utilization() / base_mean.max(1e-6)
+        );
+        assert!(clustered.metrics.mean_lane_utilization() > 2.0 * base_mean);
+    }
+}

@@ -1,0 +1,72 @@
+//! Fig. 12 — Workload Allocator: arithmetic intensity and throughput per
+//! ERI class before vs after Algorithm-2 tuning.
+//!
+//! "Before" = every class pinned at the basic workload (smallest batch);
+//! "after" = the allocator's converged choice.  Effective arithmetic
+//! intensity folds the per-execution dispatch overhead the Combination
+//! primitive amortizes: FLOP / (data bytes + fixed dispatch-equivalent).
+
+mod common;
+
+use matryoshka::bench_harness as bh;
+use matryoshka::engines::MatryoshkaConfig;
+use matryoshka::runtime::Manifest;
+use matryoshka::scf::FockEngine;
+
+/// dispatch-equivalent bytes per PJRT execution (measured overhead folded
+/// into the intensity model; see DESIGN.md §Hardware-Adaptation)
+const DISPATCH_BYTES: f64 = 2.0e5;
+
+fn main() {
+    let Some(dir) = common::artifact_dir() else { return };
+    let manifest = Manifest::load(&dir).expect("manifest");
+    let name = if common::full_mode() { "crambin" } else { "chignolin" };
+    let (_, basis) = common::system(name);
+    let d = common::test_density(basis.nbf);
+
+    // before: pinned to the basic workload (smallest variant)
+    let mut before = common::engine(
+        basis.clone(),
+        &dir,
+        MatryoshkaConfig { autotune: false, fixed_batch: 32, ..Default::default() },
+    );
+    before.two_electron(&d).expect("warm");
+    before.metrics = Default::default();
+    before.two_electron(&d).expect("before build");
+
+    // after: Algorithm 2 online; measure once converged
+    let mut after = common::engine(basis.clone(), &dir, MatryoshkaConfig::default());
+    common::warm_until_converged(&mut after, &d, 5);
+    after.metrics = Default::default();
+    after.two_electron(&d).expect("after build");
+
+    bh::header(&format!("Fig. 12 — allocator tuning on {name} (per ERI class)"));
+    println!(
+        "{:<16} {:>7} {:>12} {:>12} {:>11} {:>11} {:>8}",
+        "class", "batch", "AI_before", "AI_after", "thr_before", "thr_after", "gain"
+    );
+    let mut total_b = 0.0;
+    let mut total_a = 0.0;
+    for (class, s_after) in &after.metrics.per_class {
+        let s_before = before.metrics.per_class.get(class).copied().unwrap_or_default();
+        let v = manifest.ladder(*class)[0];
+        let chosen = after.tuner().tuner(*class).map(|t| t.current_batch()).unwrap_or(0);
+        let ai = |batch: f64| {
+            v.flops_per_quad * batch / (v.bytes_per_quad * batch + DISPATCH_BYTES)
+        };
+        println!(
+            "{:<16} {:>7} {:>12.2} {:>12.2} {:>11.0} {:>11.0} {:>7.2}x",
+            format!("{class:?}"),
+            chosen,
+            ai(32.0),
+            ai(chosen as f64),
+            s_before.throughput(),
+            s_after.throughput(),
+            s_after.throughput() / s_before.throughput().max(1.0)
+        );
+        total_b += s_before.seconds;
+        total_a += s_after.seconds;
+    }
+    println!("{}", bh::speedup_row("total ERI wall (before vs after tuning)", total_b, total_a));
+    assert!(total_a < total_b, "tuning must not be slower overall");
+}

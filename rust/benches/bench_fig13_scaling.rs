@@ -1,0 +1,84 @@
+//! Fig. 13 — scalability.
+//!
+//! Single-device curve: Fock-build time vs water-cluster size against the
+//! surviving-ERI count (log-log slopes must track).  Multi-device weak
+//! scaling: quadruple blocks are dependency-free, so sharding them across
+//! W workers is exact; with one physical core we report *simulated* weak
+//! scaling — per-shard isolated wall time, T_parallel = max over shards
+//! (documented in DESIGN.md §Substitutions).
+
+mod common;
+
+use matryoshka::bench_harness as bh;
+use matryoshka::engines::MatryoshkaConfig;
+use matryoshka::scf::FockEngine;
+use matryoshka::util::Stopwatch;
+
+fn main() {
+    let Some(dir) = common::artifact_dir() else { return };
+
+    bh::header("Fig. 13a — single-device scaling (water clusters)");
+    println!(
+        "{:<8} {:>6} {:>12} {:>10} {:>11} {:>12}",
+        "waters", "nbf", "quads", "time_s", "quads/s", "log-slope"
+    );
+    let sizes: &[usize] = if common::full_mode() { &[1, 2, 4, 8, 16, 32] } else { &[1, 2, 4, 8, 16] };
+    let mut prev: Option<(u64, f64)> = None;
+    for &n in sizes {
+        let (_, basis) = common::system(&format!("water_cluster_{n}"));
+        let d = common::test_density(basis.nbf);
+        let mut engine = common::engine(basis.clone(), &dir, MatryoshkaConfig::default());
+        common::warm_until_converged(&mut engine, &d, 3);
+        let sw = Stopwatch::start();
+        engine.two_electron(&d).expect("measured");
+        let t = sw.elapsed_s();
+        let quads = engine.plan().stats.quadruples_surviving;
+        let slope = prev
+            .map(|(pq, pt)| (t / pt).ln() / (quads as f64 / pq as f64).ln())
+            .map(|s| format!("{s:>12.2}"))
+            .unwrap_or_else(|| format!("{:>12}", "-"));
+        println!("{:<8} {:>6} {:>12} {:>10.3} {:>11.0} {}", n, basis.nbf, quads, t, quads as f64 / t, slope);
+        prev = Some((quads, t));
+    }
+    println!("(slope ≈ 1 ⇒ time tracks ERI count — the paper's stability claim)");
+
+    bh::header("Fig. 13b — weak scaling (simulated multi-device, GluAla chains)");
+    println!(
+        "{:<9} {:>7} {:>12} {:>12} {:>12} {:>10}",
+        "workers", "units", "quads", "T_1dev_s", "T_Wdev_s", "efficiency"
+    );
+    let worker_counts: &[usize] = if common::full_mode() { &[1, 2, 4] } else { &[1, 2] };
+    for &workers in worker_counts {
+        // weak scaling: problem grows with worker count
+        let units = 2 * workers;
+        let (_, basis) = common::system(&format!("gluala_{units}"));
+        let d = common::test_density(basis.nbf);
+        let mut engine = common::engine(basis.clone(), &dir, MatryoshkaConfig::default());
+        common::warm_until_converged(&mut engine, &d, 3);
+
+        let nblocks = engine.plan().blocks.len();
+        // single-device time
+        let sw = Stopwatch::start();
+        engine.two_electron(&d).expect("t1");
+        let t1 = sw.elapsed_s();
+        // sharded: blocks are dependency-free; time each shard in isolation
+        let mut shard_times = Vec::new();
+        for w in 0..workers {
+            let shard: Vec<usize> = (0..nblocks).filter(|b| b % workers == w).collect();
+            let sw = Stopwatch::start();
+            engine.build_g_for_blocks(&d, &shard).expect("shard");
+            shard_times.push(sw.elapsed_s());
+        }
+        let t_par = shard_times.iter().cloned().fold(0.0f64, f64::max);
+        println!(
+            "{:<9} {:>7} {:>12} {:>12.3} {:>12.3} {:>9.2}%",
+            workers,
+            units,
+            engine.plan().stats.quadruples_surviving,
+            t1,
+            t_par,
+            100.0 * t1 / (workers as f64 * t_par)
+        );
+    }
+    println!("(efficiency ≈ 100% ⇒ speedup grows ∝ devices, paper's multi-GPU claim)");
+}

@@ -1,0 +1,53 @@
+//! Fig. 6 — OP/B (operational intensity) trend over ERI classes, from the
+//! Graph Compiler's cost model, cross-checked against measured per-class
+//! throughput on a real system (higher OP/B classes sustain more
+//! flops/s but fewer quads/s).
+
+mod common;
+
+use matryoshka::bench_harness as bh;
+use matryoshka::engines::MatryoshkaConfig;
+use matryoshka::runtime::Manifest;
+use matryoshka::scf::FockEngine;
+
+fn main() {
+    let Some(dir) = common::artifact_dir() else { return };
+    let manifest = Manifest::load(&dir).expect("manifest");
+    let (_, basis) = common::system("chignolin");
+    let d = common::test_density(basis.nbf);
+    let mut engine = common::engine(basis.clone(), &dir, MatryoshkaConfig::default());
+    engine.two_electron(&d).expect("warm");
+    engine.metrics = Default::default();
+    engine.two_electron(&d).expect("measured");
+
+    bh::header("Fig. 6 — OP/B per ERI class (model) + measured rates (chignolin)");
+    println!(
+        "{:<16} {:>4} {:>12} {:>12} {:>8} {:>11} {:>11}",
+        "class", "L", "flops/quad", "bytes/quad", "OP/B", "quads/s", "MFLOP/s"
+    );
+    let mut last_opb = 0.0;
+    let mut monotone = true;
+    for class in manifest.classes() {
+        let v = manifest.ladder(class)[0];
+        let l = class.0 + class.1 + class.2 + class.3;
+        let opb = v.flops_per_quad / v.bytes_per_quad;
+        let stats = engine.metrics.per_class.get(&class).copied().unwrap_or_default();
+        println!(
+            "{:<16} {:>4} {:>12.0} {:>12.0} {:>8.2} {:>11.0} {:>11.1}",
+            format!("{class:?}"),
+            l,
+            v.flops_per_quad,
+            v.bytes_per_quad,
+            opb,
+            stats.throughput(),
+            stats.throughput() * v.flops_per_quad / 1e6
+        );
+        // classes are sorted ascending; OP/B must rise with L overall
+        if opb < last_opb * 0.8 {
+            monotone = false;
+        }
+        last_opb = opb;
+    }
+    assert!(monotone, "OP/B should trend upward with angular momentum");
+    println!("\n(OP/B rises with angular momentum — Fig. 6's upward trend)");
+}

@@ -1,0 +1,57 @@
+//! Fig. 9 — performance breakdown: Base → +Block Constructor → +Graph
+//! Compiler → +Workload Allocator, cumulative Fock-build speedups.
+//!
+//! Measurement unit: one direct Fock build (the paper's ERI phase) on a
+//! fixed density; kernel compilation is excluded via one warm-up build.
+//! Default systems are the three smallest of the paper's performance set
+//! (the unclustered Base config pays the full divergence penalty and
+//! dominates wall time); FULL=1 runs all six.
+
+mod common;
+
+use matryoshka::bench_harness as bh;
+use matryoshka::engines::MatryoshkaConfig;
+use matryoshka::scf::FockEngine;
+use matryoshka::util::Stopwatch;
+
+fn main() {
+    let Some(dir) = common::artifact_dir() else { return };
+    // the unclustered Base config costs O(100x) the clustered ones: the
+    // default roster is chignolin (~2 min); FULL=1 runs all six (hours)
+    let systems: Vec<&str> = if common::full_mode() {
+        vec!["chignolin", "dna", "crambin", "collagen", "trna", "pepsin"]
+    } else {
+        vec!["chignolin"]
+    };
+    bh::header("Fig. 9 — component breakdown (one direct Fock build, warm kernels)");
+    println!("config legend: base = no clustering + random-path kernels + static batch");
+
+    for name in &systems {
+        let (_, basis) = common::system(name);
+        let d = common::test_density(basis.nbf);
+        let mut base_time = None;
+        for (label, bc, gc, wa) in [
+            ("base", false, false, false),
+            ("+BC (Permutation)", true, false, false),
+            ("+BC+GC (Deconstruction)", true, true, false),
+            ("+BC+GC+WA (Combination)", true, true, true),
+        ] {
+            let config = MatryoshkaConfig::ablation(bc, gc, wa);
+            let mut engine = common::engine(basis.clone(), &dir, config);
+            common::warm_until_converged(&mut engine, &d, 4);
+            let sw = Stopwatch::start();
+            engine.two_electron(&d).expect("measured build");
+            let t = sw.elapsed_s();
+            let speedup = base_time.get_or_insert(t);
+            println!(
+                "{:<12} {:<26} {:>9.3}s  cumulative speedup {:>7.2}x  lane_util {:.3}",
+                name,
+                label,
+                t,
+                *speedup / t,
+                engine.metrics.mean_lane_utilization()
+            );
+        }
+        println!();
+    }
+}

@@ -1,0 +1,71 @@
+#![allow(dead_code)] // shared across bench targets; each uses a subset
+
+//! Shared helpers for the bench targets.
+
+use std::path::{Path, PathBuf};
+
+use matryoshka::basis::{build_basis, BasisSet};
+use matryoshka::constructor::SchwarzMode;
+use matryoshka::engines::{MatryoshkaConfig, MatryoshkaEngine};
+use matryoshka::linalg::Matrix;
+use matryoshka::molecule::{library, Molecule};
+
+pub fn artifact_dir() -> Option<PathBuf> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.txt").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: artifacts/ missing — run `make artifacts` first");
+        None
+    }
+}
+
+pub fn system(name: &str) -> (Molecule, BasisSet) {
+    let mol = library::by_name(name).expect("known molecule");
+    let basis = build_basis(&mol, "sto-3g").expect("basis");
+    (mol, basis)
+}
+
+/// SCF-like symmetric test density (deterministic; not iteration-dependent
+/// so single-Fock-build timings are comparable across engines).
+pub fn test_density(n: usize) -> Matrix {
+    let mut d = Matrix::zeros(n, n);
+    for i in 0..n {
+        for j in 0..n {
+            let v = 0.4 / (1.0 + (i as f64 - j as f64).abs());
+            *d.at_mut(i, j) = v;
+            *d.at_mut(j, i) = v;
+        }
+    }
+    d
+}
+
+/// Build an engine with the bench defaults (estimate Schwarz for speed).
+pub fn engine(basis: BasisSet, dir: &Path, mut config: MatryoshkaConfig) -> MatryoshkaEngine {
+    config.schwarz = SchwarzMode::Estimate;
+    MatryoshkaEngine::new(basis, dir, config).expect("engine")
+}
+
+/// Warm an engine until the Workload Allocator has converged (or `cap`
+/// builds): later builds then measure steady state with every variant the
+/// tuner chose already compiled.
+pub fn warm_until_converged(engine: &mut MatryoshkaEngine, d: &Matrix, cap: usize) {
+    use matryoshka::scf::FockEngine;
+    engine.two_electron(d).expect("warm-up build");
+    if engine.tuner().all_converged() {
+        return; // static configs: first build compiled everything needed
+    }
+    for _ in 1..cap {
+        engine.two_electron(d).expect("warm-up build");
+        if engine.tuner().all_converged() {
+            break;
+        }
+    }
+    // one more build so the final variant choices are all compiled
+    engine.two_electron(d).expect("post-convergence warm-up");
+}
+
+/// `FULL=1 cargo bench` widens workloads to the complete paper roster.
+pub fn full_mode() -> bool {
+    std::env::var("FULL").map(|v| v == "1").unwrap_or(false)
+}

@@ -1,0 +1,237 @@
+//! Algorithm 2 (auto-tuning framework), adapted to the variant ladder.
+
+use std::collections::HashMap;
+
+use crate::runtime::{ClassKey, Manifest};
+
+/// What the tuner did after an observation (telemetry for Fig. 12).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TunerDecision {
+    /// still measuring the current variant
+    Measuring,
+    /// moved to a larger combination (paper: Combine)
+    Combined,
+    /// larger combination was worse; moved back (paper: Revert)
+    Reverted,
+    /// search finished for this class
+    Converged,
+}
+
+/// Per-class tuning state over the variant ladder (ascending batch).
+#[derive(Clone, Debug)]
+pub struct ClassTuner {
+    pub class: ClassKey,
+    /// batch sizes available, ascending
+    pub ladder: Vec<usize>,
+    /// current rung
+    pub idx: usize,
+    /// best observed seconds-per-quadruple per rung
+    best: Vec<f64>,
+    /// observations on the current rung
+    samples: usize,
+    pub converged: bool,
+    /// history of (batch, sec_per_quad) for reporting
+    pub history: Vec<(usize, f64)>,
+}
+
+/// Observations needed per rung before judging it.
+const SAMPLES_PER_RUNG: usize = 4;
+/// Relative improvement required to keep climbing.
+const IMPROVE_EPS: f64 = 0.02;
+
+impl ClassTuner {
+    /// Public for tests/benches; engines go through `AutoTuner`.
+    pub fn new(class: ClassKey, ladder: Vec<usize>) -> Self {
+        let n = ladder.len();
+        ClassTuner {
+            class,
+            ladder,
+            idx: 0,
+            best: vec![f64::INFINITY; n],
+            samples: 0,
+            converged: n <= 1,
+            history: Vec::new(),
+        }
+    }
+
+    /// Batch size to use for the next block of this class.
+    pub fn current_batch(&self) -> usize {
+        self.ladder[self.idx]
+    }
+
+    /// Feed one execution's (quadruples, wall seconds); returns decision.
+    pub fn observe(&mut self, quads: usize, seconds: f64) -> TunerDecision {
+        if self.converged || quads == 0 {
+            return TunerDecision::Converged;
+        }
+        let spq = seconds / quads as f64;
+        self.history.push((self.current_batch(), spq));
+        if spq < self.best[self.idx] {
+            self.best[self.idx] = spq;
+        }
+        self.samples += 1;
+        if self.samples < SAMPLES_PER_RUNG {
+            return TunerDecision::Measuring;
+        }
+        // judged: compare to the previous rung (if any)
+        if self.idx > 0 && self.best[self.idx] > self.best[self.idx - 1] * (1.0 - IMPROVE_EPS) {
+            // not better: revert and stop (Algorithm 2's improved=false)
+            self.idx -= 1;
+            self.converged = true;
+            return TunerDecision::Reverted;
+        }
+        if self.idx + 1 < self.ladder.len() {
+            self.idx += 1;
+            self.samples = 0;
+            TunerDecision::Combined
+        } else {
+            self.converged = true;
+            TunerDecision::Converged
+        }
+    }
+
+    /// Best observed seconds-per-quadruple at the final choice.
+    pub fn best_spq(&self) -> f64 {
+        self.best[self.idx]
+    }
+}
+
+/// The online auto-tuner over all ERI classes.
+pub struct AutoTuner {
+    tuners: HashMap<ClassKey, ClassTuner>,
+    /// when disabled, every class pins to `fixed_batch` (ablation mode)
+    enabled: bool,
+    fixed_batch: usize,
+}
+
+impl AutoTuner {
+    /// `enabled = false` freezes every class at the variant whose batch is
+    /// `fixed_batch` (the static-parallelism baseline).
+    pub fn new(manifest: &Manifest, enabled: bool, fixed_batch: usize) -> Self {
+        let mut tuners = HashMap::new();
+        for class in manifest.classes() {
+            let ladder: Vec<usize> = manifest.ladder(class).iter().map(|v| v.batch).collect();
+            if ladder.is_empty() {
+                continue;
+            }
+            let mut t = ClassTuner::new(class, ladder);
+            if !enabled {
+                // pin to the requested batch (or nearest available)
+                let idx = t
+                    .ladder
+                    .iter()
+                    .enumerate()
+                    .min_by_key(|(_, &b)| b.abs_diff(fixed_batch))
+                    .map(|(i, _)| i)
+                    .unwrap_or(0);
+                t.idx = idx;
+                t.converged = true;
+            }
+            tuners.insert(class, t);
+        }
+        AutoTuner { tuners, enabled, fixed_batch }
+    }
+
+    pub fn is_enabled(&self) -> bool {
+        self.enabled
+    }
+
+    pub fn fixed_batch(&self) -> usize {
+        self.fixed_batch
+    }
+
+    /// Batch size the engine should pack for this class right now.
+    pub fn batch_for(&self, class: ClassKey) -> usize {
+        self.tuners.get(&class).map(|t| t.current_batch()).unwrap_or(self.fixed_batch)
+    }
+
+    /// Report an execution result; drives Algorithm 2 when enabled.
+    pub fn observe(&mut self, class: ClassKey, quads: usize, seconds: f64) -> TunerDecision {
+        if !self.enabled {
+            return TunerDecision::Converged;
+        }
+        self.tuners
+            .get_mut(&class)
+            .map(|t| t.observe(quads, seconds))
+            .unwrap_or(TunerDecision::Converged)
+    }
+
+    pub fn tuner(&self, class: ClassKey) -> Option<&ClassTuner> {
+        self.tuners.get(&class)
+    }
+
+    pub fn all_converged(&self) -> bool {
+        self.tuners.values().all(|t| t.converged)
+    }
+
+    pub fn classes(&self) -> Vec<ClassKey> {
+        let mut c: Vec<ClassKey> = self.tuners.keys().copied().collect();
+        c.sort();
+        c
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tuner(ladder: &[usize]) -> ClassTuner {
+        ClassTuner::new((0, 0, 0, 0), ladder.to_vec())
+    }
+
+    #[test]
+    fn climbs_while_time_per_quad_improves() {
+        let mut t = tuner(&[32, 128, 512]);
+        // 32: 10 us/quad; 128: 5; 512: 2 -> should end at 512
+        for _ in 0..SAMPLES_PER_RUNG {
+            t.observe(32, 32.0 * 10e-6);
+        }
+        assert_eq!(t.current_batch(), 128);
+        for _ in 0..SAMPLES_PER_RUNG {
+            t.observe(128, 128.0 * 5e-6);
+        }
+        assert_eq!(t.current_batch(), 512);
+        for _ in 0..SAMPLES_PER_RUNG {
+            t.observe(512, 512.0 * 2e-6);
+        }
+        assert!(t.converged);
+        assert_eq!(t.current_batch(), 512);
+    }
+
+    #[test]
+    fn reverts_when_bigger_is_worse() {
+        let mut t = tuner(&[32, 128, 512]);
+        for _ in 0..SAMPLES_PER_RUNG {
+            t.observe(32, 32.0 * 4e-6);
+        }
+        assert_eq!(t.current_batch(), 128);
+        let mut last = TunerDecision::Measuring;
+        for _ in 0..SAMPLES_PER_RUNG {
+            last = t.observe(128, 128.0 * 9e-6); // worse
+        }
+        assert_eq!(last, TunerDecision::Reverted);
+        assert!(t.converged);
+        assert_eq!(t.current_batch(), 32);
+    }
+
+    #[test]
+    fn disabled_tuner_pins_to_fixed_batch() {
+        let manifest = crate::runtime::Manifest::parse(
+            "eri_ssss_b32 0 0 0 0 32 9 9 1 0 1 0 5 9.0 8.0 greedy a\n\
+             eri_ssss_b512 0 0 0 0 512 9 9 1 0 1 0 5 9.0 8.0 greedy b\n",
+            std::path::Path::new("/tmp"),
+        )
+        .unwrap();
+        let mut at = AutoTuner::new(&manifest, false, 512);
+        assert_eq!(at.batch_for((0, 0, 0, 0)), 512);
+        at.observe((0, 0, 0, 0), 512, 1.0);
+        assert_eq!(at.batch_for((0, 0, 0, 0)), 512); // never moves
+    }
+
+    #[test]
+    fn zero_quads_observation_is_ignored() {
+        let mut t = tuner(&[32, 128]);
+        assert_eq!(t.observe(0, 1.0), TunerDecision::Converged);
+        assert_eq!(t.current_batch(), 32);
+    }
+}

@@ -1,0 +1,16 @@
+//! Workload Allocator (paper §7): the Combination EPT primitive.
+//!
+//! Kernel variants of one ERI class differ in how many quadruples one
+//! execution combines (the batch axis) — the CPU/XLA analog of work per
+//! thread.  Memory-intensive classes (low OP/B, small ncomp) want large
+//! combinations to amortize dispatch + marshalling; compute-intensive
+//! classes saturate early and only pay padding for bigger batches.
+//!
+//! `AutoTuner` implements Algorithm 2 online: every class starts at the
+//! basic workload, and after each real execution the observed wall time
+//! per quadruple decides whether to Combine() to the next variant or
+//! Revert().  Tuning rides on the production stream — no warm-up runs.
+
+mod autotune;
+
+pub use autotune::{AutoTuner, ClassTuner, TunerDecision};

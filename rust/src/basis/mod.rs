@@ -1,0 +1,81 @@
+//! Gaussian basis-set machinery: shells, STO-3G data, normalization.
+//!
+//! A contracted shell ψ = Σ_k c_k φ(α_k) carries its angular momentum l,
+//! primitive exponents, and *effective* coefficients (raw tabulated
+//! coefficients × primitive normalization × contracted renormalization).
+//! All downstream integral code — the Rust MD reference engine, the pair
+//! data fed to the HLO kernels, and the one-electron integrals — consumes
+//! effective coefficients and computes unnormalized primitives, so the
+//! normalization convention lives in exactly one place: here.
+
+pub mod shell;
+mod sto3g;
+
+pub use shell::{cart_components, ncart, prim_norm, BasisSet, Shell};
+pub use sto3g::sto3g_shells;
+
+use crate::molecule::Molecule;
+
+/// Build the full basis for a molecule in the given basis set.
+///
+/// Only "sto-3g" is shipped; the machinery is general over any segmented
+/// contraction with s/p shells (d+ supported by the integrals code and the
+/// Graph Compiler, but no d basis is bundled).
+pub fn build_basis(mol: &Molecule, basis_name: &str) -> anyhow::Result<BasisSet> {
+    if basis_name.to_lowercase() != "sto-3g" {
+        anyhow::bail!("unknown basis set: {basis_name} (available: sto-3g)");
+    }
+    let mut shells = Vec::new();
+    let mut first_bf = 0usize;
+    for (atom_idx, atom) in mol.atoms.iter().enumerate() {
+        for (l, exps, coefs) in sto3g_shells(atom.z)? {
+            let mut sh = Shell::new(l, exps, coefs, atom.pos, atom_idx, first_bf);
+            sh.normalize();
+            first_bf += ncart(sh.l);
+            shells.push(sh);
+        }
+    }
+    Ok(BasisSet { shells, nbf: first_bf })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::molecule::library;
+
+    #[test]
+    fn water_sto3g_has_7_basis_functions() {
+        let mol = library::by_name("water").unwrap();
+        let basis = build_basis(&mol, "sto-3g").unwrap();
+        assert_eq!(basis.shells.len(), 5); // O: 1s,2s,2p + 2 H
+        assert_eq!(basis.nbf, 7);
+    }
+
+    #[test]
+    fn benzene_sto3g_has_36_basis_functions() {
+        let mol = library::by_name("benzene").unwrap();
+        let basis = build_basis(&mol, "sto-3g").unwrap();
+        assert_eq!(basis.nbf, 36);
+    }
+
+    #[test]
+    fn unknown_basis_is_an_error() {
+        let mol = library::by_name("water").unwrap();
+        assert!(build_basis(&mol, "6-31g").is_err());
+    }
+
+    #[test]
+    fn normalized_shell_has_unit_self_overlap() {
+        let mol = library::by_name("water").unwrap();
+        let basis = build_basis(&mol, "sto-3g").unwrap();
+        for sh in &basis.shells {
+            let s = crate::integrals::shell_self_overlap(sh);
+            assert!(
+                (s - 1.0).abs() < 1e-10,
+                "shell l={} self overlap {}",
+                sh.l,
+                s
+            );
+        }
+    }
+}

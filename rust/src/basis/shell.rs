@@ -1,0 +1,162 @@
+//! Shell and basis-set types.
+
+/// Number of Cartesian components of angular momentum l.
+pub fn ncart(l: u8) -> usize {
+    let l = l as usize;
+    (l + 1) * (l + 2) / 2
+}
+
+/// Cartesian component triples (lx, ly, lz) of shell l, conventional order
+/// (x-major, matching python/compile/graph_compiler/types.py).
+pub fn cart_components(l: u8) -> Vec<[u8; 3]> {
+    let mut comps = Vec::with_capacity(ncart(l));
+    for lx in (0..=l).rev() {
+        for ly in (0..=(l - lx)).rev() {
+            comps.push([lx, ly, l - lx - ly]);
+        }
+    }
+    comps
+}
+
+fn dfact(n: i32) -> f64 {
+    let mut out = 1.0;
+    let mut n = n;
+    while n > 1 {
+        out *= n as f64;
+        n -= 2;
+    }
+    out
+}
+
+/// Normalization constant of a primitive Cartesian Gaussian x^lx y^ly z^lz
+/// exp(-a r^2).
+pub fn prim_norm(alpha: f64, lmn: [u8; 3]) -> f64 {
+    let l = (lmn[0] + lmn[1] + lmn[2]) as f64;
+    let df = dfact(2 * lmn[0] as i32 - 1)
+        * dfact(2 * lmn[1] as i32 - 1)
+        * dfact(2 * lmn[2] as i32 - 1);
+    (2.0 * alpha / std::f64::consts::PI).powf(0.75) * (4.0 * alpha).powf(l / 2.0) / df.sqrt()
+}
+
+/// A contracted Cartesian Gaussian shell placed on an atom.
+#[derive(Clone, Debug)]
+pub struct Shell {
+    /// total angular momentum (0 = s, 1 = p, ...)
+    pub l: u8,
+    /// primitive exponents
+    pub exps: Vec<f64>,
+    /// effective contraction coefficients (normalization folded in)
+    pub coefs: Vec<f64>,
+    /// center, Bohr
+    pub center: [f64; 3],
+    /// index of the owning atom in the molecule
+    pub atom: usize,
+    /// index of this shell's first basis function in the full basis
+    pub first_bf: usize,
+}
+
+impl Shell {
+    pub fn new(
+        l: u8,
+        exps: Vec<f64>,
+        coefs: Vec<f64>,
+        center: [f64; 3],
+        atom: usize,
+        first_bf: usize,
+    ) -> Self {
+        assert_eq!(exps.len(), coefs.len());
+        Shell { l, exps, coefs, center, atom, first_bf }
+    }
+
+    pub fn nprim(&self) -> usize {
+        self.exps.len()
+    }
+
+    pub fn ncomp(&self) -> usize {
+        ncart(self.l)
+    }
+
+    /// Fold primitive normalization and contracted renormalization into
+    /// the coefficients.  After this, `coefs` are the *effective*
+    /// coefficients every integral path consumes.
+    ///
+    /// The renormalization uses the (l,0,0) component; for s/p shells all
+    /// components share it.  (Cartesian d+ shells would need per-component
+    /// factors — the bundled STO-3G never produces them at runtime.)
+    pub fn normalize(&mut self) {
+        let lmn = [self.l, 0, 0];
+        for (c, &a) in self.coefs.iter_mut().zip(self.exps.iter()) {
+            *c *= prim_norm(a, lmn);
+        }
+        // contracted self-overlap with primitive-normalized coefficients
+        let l = self.l as f64;
+        let mut s = 0.0;
+        for (&ai, &ci) in self.exps.iter().zip(self.coefs.iter()) {
+            for (&aj, &cj) in self.exps.iter().zip(self.coefs.iter()) {
+                let p = ai + aj;
+                // ∫ x^2l exp(-p r²): (π/p)^{3/2} (2l-1)!! / (2p)^l
+                s += ci * cj * (std::f64::consts::PI / p).powf(1.5) * dfact(2 * self.l as i32 - 1)
+                    / (2.0 * p).powf(l);
+            }
+        }
+        let renorm = 1.0 / s.sqrt();
+        for c in self.coefs.iter_mut() {
+            *c *= renorm;
+        }
+    }
+}
+
+/// A molecule's full basis: shells plus the basis-function count.
+#[derive(Clone, Debug)]
+pub struct BasisSet {
+    pub shells: Vec<Shell>,
+    pub nbf: usize,
+}
+
+impl BasisSet {
+    /// max number of primitive products over all shell pairs (pair rows)
+    pub fn max_kpair(&self) -> usize {
+        let kmax = self.shells.iter().map(|s| s.nprim()).max().unwrap_or(0);
+        kmax * kmax
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ncart_values() {
+        assert_eq!(ncart(0), 1);
+        assert_eq!(ncart(1), 3);
+        assert_eq!(ncart(2), 6);
+        assert_eq!(ncart(3), 10);
+    }
+
+    #[test]
+    fn cart_component_order_matches_python_convention() {
+        assert_eq!(cart_components(1), vec![[1, 0, 0], [0, 1, 0], [0, 0, 1]]);
+        assert_eq!(
+            cart_components(2),
+            vec![[2, 0, 0], [1, 1, 0], [1, 0, 1], [0, 2, 0], [0, 1, 1], [0, 0, 2]]
+        );
+    }
+
+    #[test]
+    fn prim_norm_normalizes_s_gaussian() {
+        // ∫ (N exp(-a r²))² = N² (π/2a)^{3/2} = 1
+        let a = 1.3;
+        let n = prim_norm(a, [0, 0, 0]);
+        let s = n * n * (std::f64::consts::PI / (2.0 * a)).powf(1.5);
+        assert!((s - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn prim_norm_normalizes_p_gaussian() {
+        // ∫ (N x exp(-a r²))² = N² (π/2a)^{3/2} / (4a) = 1
+        let a = 0.8;
+        let n = prim_norm(a, [1, 0, 0]);
+        let s = n * n * (std::f64::consts::PI / (2.0 * a)).powf(1.5) / (4.0 * a);
+        assert!((s - 1.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,96 @@
+//! STO-3G basis-set data (EMSL Basis Set Exchange tabulation).
+//!
+//! Each element maps to a list of (l, exponents, raw coefficients).
+//! SP shells of the tabulation are split into separate s and p shells
+//! sharing exponents.  Coefficients here are the raw tabulated values;
+//! `Shell::normalize` folds normalization in.
+
+type RawShell = (u8, Vec<f64>, Vec<f64>);
+
+// Shared contraction coefficient sets of the STO-3G expansion.
+const C_1S: [f64; 3] = [0.154_328_967_3, 0.535_328_142_3, 0.444_634_542_2];
+const C_2S: [f64; 3] = [-0.099_967_229_19, 0.399_512_826_1, 0.700_115_468_9];
+const C_2P: [f64; 3] = [0.155_916_275_0, 0.607_683_718_6, 0.391_957_393_1];
+const C_3S: [f64; 3] = [-0.219_620_369_0, 0.225_595_433_6, 0.900_398_426_0];
+const C_3P: [f64; 3] = [0.010_587_604_29, 0.595_167_005_3, 0.462_001_012_0];
+
+fn sp(exps: [f64; 3], cs: [f64; 3], cp: [f64; 3]) -> Vec<RawShell> {
+    vec![
+        (0, exps.to_vec(), cs.to_vec()),
+        (1, exps.to_vec(), cp.to_vec()),
+    ]
+}
+
+/// STO-3G shells for atomic number `z`.
+pub fn sto3g_shells(z: u32) -> anyhow::Result<Vec<RawShell>> {
+    let mut shells: Vec<RawShell> = Vec::new();
+    match z {
+        1 => {
+            // H
+            shells.push((0, vec![3.425_250_914, 0.623_913_729_8, 0.168_855_404_0], C_1S.to_vec()));
+        }
+        6 => {
+            // C
+            shells.push((0, vec![71.616_837_35, 13.045_096_32, 3.530_512_160], C_1S.to_vec()));
+            shells.extend(sp([2.941_249_355, 0.683_483_096_4, 0.222_289_915_9], C_2S, C_2P));
+        }
+        7 => {
+            // N
+            shells.push((0, vec![99.106_168_96, 18.052_312_39, 4.885_660_238], C_1S.to_vec()));
+            shells.extend(sp([3.780_455_879, 0.878_496_644_9, 0.285_714_374_4], C_2S, C_2P));
+        }
+        8 => {
+            // O
+            shells.push((0, vec![130.709_321_4, 23.808_866_05, 6.443_608_313], C_1S.to_vec()));
+            shells.extend(sp([5.033_151_319, 1.169_596_125, 0.380_388_960_0], C_2S, C_2P));
+        }
+        15 => {
+            // P
+            shells.push((0, vec![468.365_637_8, 85.313_385_59, 23.099_131_56], C_1S.to_vec()));
+            shells.extend(sp([28.032_639_58, 6.514_182_577, 1.697_699_172], C_2S, C_2P));
+            shells.extend(sp([1.743_103_231, 0.486_321_377_1, 0.190_342_890_9], C_3S, C_3P));
+        }
+        16 => {
+            // S
+            shells.push((0, vec![533.125_735_9, 97.109_518_30, 26.281_625_42], C_1S.to_vec()));
+            shells.extend(sp([33.329_751_73, 7.745_117_521, 2.018_558_410], C_2S, C_2P));
+            shells.extend(sp([2.029_194_274, 0.566_140_051_8, 0.221_583_379_2], C_3S, C_3P));
+        }
+        _ => anyhow::bail!("STO-3G data not bundled for Z={z}"),
+    }
+    Ok(shells)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hydrogen_has_one_s_shell() {
+        let shells = sto3g_shells(1).unwrap();
+        assert_eq!(shells.len(), 1);
+        assert_eq!(shells[0].0, 0);
+        assert_eq!(shells[0].1.len(), 3);
+    }
+
+    #[test]
+    fn carbon_has_1s_2s_2p() {
+        let shells = sto3g_shells(6).unwrap();
+        let ls: Vec<u8> = shells.iter().map(|s| s.0).collect();
+        assert_eq!(ls, vec![0, 0, 1]);
+        // SP shells share exponents
+        assert_eq!(shells[1].1, shells[2].1);
+    }
+
+    #[test]
+    fn sulfur_has_three_periods() {
+        let shells = sto3g_shells(16).unwrap();
+        let ls: Vec<u8> = shells.iter().map(|s| s.0).collect();
+        assert_eq!(ls, vec![0, 0, 1, 0, 1]);
+    }
+
+    #[test]
+    fn unsupported_element_errors() {
+        assert!(sto3g_shells(79).is_err());
+    }
+}

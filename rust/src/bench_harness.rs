@@ -1,0 +1,111 @@
+//! Hand-rolled benchmark harness (the vendored registry has no criterion).
+//!
+//! Provides warm-up + repeated timed runs with mean/min/stddev reporting in
+//! a fixed-width table format shared by every `rust/benches/*` target, so
+//! `cargo bench` output is regular enough to diff across runs and to paste
+//! into EXPERIMENTS.md.
+
+use crate::util::Stopwatch;
+
+/// Result of one benchmark case.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub runs: usize,
+    pub mean_s: f64,
+    pub min_s: f64,
+    pub stddev_s: f64,
+}
+
+impl BenchResult {
+    pub fn row(&self) -> String {
+        format!(
+            "{:<44} {:>4}  mean {:>10.4}s  min {:>10.4}s  sd {:>8.4}s",
+            self.name, self.runs, self.mean_s, self.min_s, self.stddev_s
+        )
+    }
+}
+
+/// Time `f` after `warmup` unmeasured calls; `runs` measured repetitions.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, runs: usize, mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut times = Vec::with_capacity(runs);
+    for _ in 0..runs.max(1) {
+        let sw = Stopwatch::start();
+        f();
+        times.push(sw.elapsed_s());
+    }
+    summarize(name, &times)
+}
+
+/// Build a result from externally collected times (for benches that must
+/// time phases inside a larger computation).
+pub fn summarize(name: &str, times: &[f64]) -> BenchResult {
+    let n = times.len().max(1) as f64;
+    let mean = times.iter().sum::<f64>() / n;
+    let min = times.iter().cloned().fold(f64::MAX, f64::min);
+    let var = times.iter().map(|t| (t - mean) * (t - mean)).sum::<f64>() / n;
+    BenchResult {
+        name: name.to_string(),
+        runs: times.len(),
+        mean_s: mean,
+        min_s: if times.is_empty() { 0.0 } else { min },
+        stddev_s: var.sqrt(),
+    }
+}
+
+/// Standard bench-table header.
+pub fn header(title: &str) {
+    println!("\n=== {title} ===");
+    println!("{:-<100}", "");
+}
+
+/// Print one result row.
+pub fn report(result: &BenchResult) {
+    println!("{}", result.row());
+}
+
+/// Speedup table row helper: baseline vs contender.
+pub fn speedup_row(name: &str, baseline_s: f64, contender_s: f64) -> String {
+    format!(
+        "{:<44} baseline {:>9.4}s  ours {:>9.4}s  speedup {:>6.2}x",
+        name,
+        baseline_s,
+        contender_s,
+        baseline_s / contender_s.max(1e-12)
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_counts_runs_and_orders_stats() {
+        let mut calls = 0;
+        let r = bench("t", 2, 5, || {
+            calls += 1;
+            std::thread::sleep(std::time::Duration::from_micros(200));
+        });
+        assert_eq!(calls, 7); // warmup + runs
+        assert_eq!(r.runs, 5);
+        assert!(r.min_s <= r.mean_s);
+        assert!(r.mean_s > 0.0);
+    }
+
+    #[test]
+    fn summarize_handles_singleton() {
+        let r = summarize("x", &[0.5]);
+        assert_eq!(r.mean_s, 0.5);
+        assert_eq!(r.min_s, 0.5);
+        assert_eq!(r.stddev_s, 0.0);
+    }
+
+    #[test]
+    fn speedup_row_formats() {
+        let row = speedup_row("case", 2.0, 0.5);
+        assert!(row.contains("4.00x"), "{row}");
+    }
+}

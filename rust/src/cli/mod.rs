@@ -1,0 +1,119 @@
+//! Minimal command-line argument parser (the vendored registry has no
+//! clap).  Supports `command [subcommand] --key value --flag` shapes with
+//! typed accessors and helpful errors.
+
+use std::collections::HashMap;
+
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    /// positional arguments in order
+    pub positional: Vec<String>,
+    /// --key value and --flag entries (flags map to "true")
+    options: HashMap<String, String>,
+}
+
+impl Args {
+    /// Parse an iterator of raw arguments (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> anyhow::Result<Args> {
+        let mut args = Args::default();
+        let mut it = raw.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(key) = tok.strip_prefix("--") {
+                if key.is_empty() {
+                    anyhow::bail!("bare `--` is not supported");
+                }
+                // `--key=value` or `--key value` or boolean `--flag`
+                if let Some((k, v)) = key.split_once('=') {
+                    args.options.insert(k.to_string(), v.to_string());
+                } else {
+                    let takes_value =
+                        it.peek().map(|n| !n.starts_with("--")).unwrap_or(false);
+                    if takes_value {
+                        args.options.insert(key.to_string(), it.next().unwrap());
+                    } else {
+                        args.options.insert(key.to_string(), "true".to_string());
+                    }
+                }
+            } else {
+                args.positional.push(tok);
+            }
+        }
+        Ok(args)
+    }
+
+    pub fn from_env() -> anyhow::Result<Args> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> anyhow::Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|e| anyhow::anyhow!("--{key}: {e}")),
+        }
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> anyhow::Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|e| anyhow::anyhow!("--{key}: {e}")),
+        }
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn positional_and_options() {
+        let a = parse("scf --molecule water --threshold 1e-8 --verbose");
+        assert_eq!(a.positional, vec!["scf"]);
+        assert_eq!(a.get("molecule"), Some("water"));
+        assert_eq!(a.f64_or("threshold", 0.0).unwrap(), 1e-8);
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn equals_syntax() {
+        let a = parse("--tile=128 run");
+        assert_eq!(a.usize_or("tile", 0).unwrap(), 128);
+        assert_eq!(a.positional, vec!["run"]);
+    }
+
+    #[test]
+    fn flag_followed_by_flag() {
+        let a = parse("--stored --verbose");
+        assert!(a.flag("stored"));
+        assert!(a.flag("verbose"));
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse("x");
+        assert_eq!(a.str_or("basis", "sto-3g"), "sto-3g");
+        assert_eq!(a.usize_or("iter", 7).unwrap(), 7);
+    }
+
+    #[test]
+    fn bad_number_is_error() {
+        let a = parse("--tile abc");
+        assert!(a.usize_or("tile", 0).is_err());
+    }
+}

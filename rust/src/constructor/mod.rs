@@ -1,0 +1,15 @@
+//! Block Constructor (paper §5): the Permutation EPT primitive.
+//!
+//! Stage 1 builds the O(N²) shell-pair data (killing the O(N⁴) quadruple
+//! storage), clusters pairs by ERI class (uniform instruction streams ⇒
+//! no divergence) and tiles them for locality.  Stage 2 permutes pair
+//! tiles into quadruple blocks — the dependency-free units the runtime
+//! executes and the Workload Allocator schedules.
+
+mod blocks;
+mod pairs;
+mod schwarz;
+
+pub use blocks::{BlockPlan, QuadBlock, BlockStats};
+pub use pairs::{PairClass, PairList, ShellPair, KPAIR};
+pub use schwarz::{schwarz_bound, schwarz_estimate, SchwarzMode};

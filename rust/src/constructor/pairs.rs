@@ -1,0 +1,205 @@
+//! Stage 1: basis function → basis function pair (paper Fig. 4, left).
+//!
+//! Pair data layout is the cross-language contract of
+//! python/compile/pairs.py: per primitive product `[p, Px, Py, Pz, Kab]`
+//! (padding rows `p = 1, Kab = 0`), per pair geometry `[A, A-B]`, with
+//! effective contraction coefficients folded into Kab.
+
+use crate::basis::BasisSet;
+
+use super::schwarz::{schwarz_bound, SchwarzMode};
+
+/// Primitive products per pair row (STO-3G: 3×3; shells with fewer
+/// primitives pad with zero-prefactor rows).
+pub const KPAIR: usize = 9;
+
+/// Angular-momentum class of a pair, canonical (la >= lb).
+pub type PairClass = (u8, u8);
+
+/// One shell pair with precomputed primitive-product data.
+#[derive(Clone, Debug)]
+pub struct ShellPair {
+    /// shell indices with l(si) >= l(sj) (swapped if needed)
+    pub si: usize,
+    pub sj: usize,
+    pub class: PairClass,
+    /// [KPAIR * 5]: p, Px, Py, Pz, Kab
+    pub prim: Vec<f64>,
+    /// [6]: Ax, Ay, Az, ABx, ABy, ABz
+    pub geom: [f64; 6],
+    /// Schwarz bound sqrt(max (ab|ab))
+    pub schwarz: f64,
+}
+
+/// All surviving pairs, clustered by class and sorted by descending
+/// Schwarz bound within each class.
+#[derive(Clone, Debug, Default)]
+pub struct PairList {
+    pub pairs: Vec<ShellPair>,
+    /// class -> contiguous index range in `pairs`
+    pub class_ranges: Vec<(PairClass, std::ops::Range<usize>)>,
+    /// pairs dropped entirely by the pair-level Schwarz filter
+    pub dropped: usize,
+    pub max_schwarz: f64,
+}
+
+impl PairList {
+    /// Build with exact Schwarz bounds (tests / small systems).
+    pub fn build(basis: &BasisSet, threshold: f64) -> PairList {
+        Self::build_with_mode(basis, threshold, SchwarzMode::Exact)
+    }
+
+    /// Build, screen, cluster and sort pair data for a basis.
+    ///
+    /// A pair whose Schwarz bound can never reach `threshold` against the
+    /// strongest partner in the system is dropped outright.
+    pub fn build_with_mode(basis: &BasisSet, threshold: f64, mode: SchwarzMode) -> PairList {
+        let ns = basis.shells.len();
+        let mut raw: Vec<ShellPair> = Vec::with_capacity(ns * (ns + 1) / 2);
+        let mut max_schwarz = 0.0f64;
+        for i in 0..ns {
+            for j in 0..=i {
+                // canonical within-pair order: higher l first
+                let (si, sj) = if basis.shells[i].l >= basis.shells[j].l { (i, j) } else { (j, i) };
+                let sa = &basis.shells[si];
+                let sb = &basis.shells[sj];
+
+                let mut prim = vec![0.0; KPAIR * 5];
+                for row in prim.chunks_mut(5) {
+                    row[0] = 1.0; // padding keeps p finite
+                }
+                let mut row = 0;
+                for (ka, &alpha) in sa.exps.iter().enumerate() {
+                    for (kb, &beta) in sb.exps.iter().enumerate() {
+                        let p = alpha + beta;
+                        let ab2 = dist2(sa.center, sb.center);
+                        let kab = sa.coefs[ka] * sb.coefs[kb] * (-alpha * beta / p * ab2).exp();
+                        let o = row * 5;
+                        prim[o] = p;
+                        for d in 0..3 {
+                            prim[o + 1 + d] = (alpha * sa.center[d] + beta * sb.center[d]) / p;
+                        }
+                        prim[o + 4] = kab;
+                        row += 1;
+                    }
+                }
+                debug_assert!(row <= KPAIR);
+                let q = schwarz_bound(mode, sa, sb, &prim);
+                max_schwarz = max_schwarz.max(q);
+                let geom = [
+                    sa.center[0],
+                    sa.center[1],
+                    sa.center[2],
+                    sa.center[0] - sb.center[0],
+                    sa.center[1] - sb.center[1],
+                    sa.center[2] - sb.center[2],
+                ];
+                raw.push(ShellPair { si, sj, class: (sa.l, sb.l), prim, geom, schwarz: q });
+            }
+        }
+
+        // pair-level screening: cannot survive against the best partner
+        let before = raw.len();
+        raw.retain(|p| p.schwarz * max_schwarz >= threshold);
+        let dropped = before - raw.len();
+
+        // cluster by class (Permutation primitive), magnitude-sorted within
+        raw.sort_by(|a, b| {
+            a.class
+                .cmp(&b.class)
+                .then(b.schwarz.partial_cmp(&a.schwarz).unwrap())
+        });
+        let mut class_ranges = Vec::new();
+        let mut start = 0;
+        for i in 1..=raw.len() {
+            if i == raw.len() || raw[i].class != raw[start].class {
+                class_ranges.push((raw[start].class, start..i));
+                start = i;
+            }
+        }
+        PairList { pairs: raw, class_ranges, dropped, max_schwarz }
+    }
+
+    pub fn len(&self) -> usize {
+        self.pairs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.pairs.is_empty()
+    }
+}
+
+fn dist2(a: [f64; 3], b: [f64; 3]) -> f64 {
+    (a[0] - b[0]).powi(2) + (a[1] - b[1]).powi(2) + (a[2] - b[2]).powi(2)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::basis::build_basis;
+    use crate::molecule::library;
+
+    fn water_pairs() -> PairList {
+        let mol = library::by_name("water").unwrap();
+        let basis = build_basis(&mol, "sto-3g").unwrap();
+        PairList::build(&basis, 1e-12)
+    }
+
+    #[test]
+    fn pair_count_is_n_shells_choose_2_plus_diagonal() {
+        let pl = water_pairs();
+        // water: 5 shells -> 15 pairs, nothing screened at this geometry
+        assert_eq!(pl.len() + pl.dropped, 15);
+        assert_eq!(pl.dropped, 0);
+    }
+
+    #[test]
+    fn pairs_are_clustered_and_sorted() {
+        let pl = water_pairs();
+        // classes appear in ascending order, contiguous
+        let classes: Vec<PairClass> = pl.class_ranges.iter().map(|(c, _)| *c).collect();
+        let mut sorted = classes.clone();
+        sorted.sort();
+        sorted.dedup();
+        assert_eq!(classes, sorted);
+        // within a class, Schwarz descending
+        for (_, range) in &pl.class_ranges {
+            let s: Vec<f64> = pl.pairs[range.clone()].iter().map(|p| p.schwarz).collect();
+            for w in s.windows(2) {
+                assert!(w[0] >= w[1]);
+            }
+        }
+    }
+
+    #[test]
+    fn within_pair_order_puts_higher_l_first() {
+        let pl = water_pairs();
+        for p in &pl.pairs {
+            assert!(p.class.0 >= p.class.1);
+        }
+    }
+
+    #[test]
+    fn padding_rows_have_zero_prefactor_and_unit_p() {
+        let mol = library::by_name("water").unwrap();
+        let basis = build_basis(&mol, "sto-3g").unwrap();
+        let pl = PairList::build(&basis, 1e-12);
+        for pair in &pl.pairs {
+            let nreal = basis.shells[pair.si].nprim() * basis.shells[pair.sj].nprim();
+            for row in nreal..KPAIR {
+                assert_eq!(pair.prim[row * 5], 1.0);
+                assert_eq!(pair.prim[row * 5 + 4], 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn screening_drops_remote_pairs() {
+        let mol = library::by_name("water_cluster_27").unwrap();
+        let basis = build_basis(&mol, "sto-3g").unwrap();
+        let loose = PairList::build(&basis, 1e-6);
+        let tight = PairList::build(&basis, 1e-14);
+        assert!(loose.dropped > tight.dropped);
+        assert!(loose.len() < tight.len());
+    }
+}

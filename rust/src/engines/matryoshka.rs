@@ -1,0 +1,297 @@
+//! The Matryoshka engine: Block Constructor → PJRT kernels → Workload
+//! Allocator → Fock digestion, orchestrated from the Rust hot path.
+//!
+//! Every paper ablation is a configuration of this engine:
+//!
+//! | paper variant        | config                                        |
+//! |----------------------|-----------------------------------------------|
+//! | full Matryoshka      | clustered + greedy_path + autotune            |
+//! | −Workload Allocator  | autotune = false (fixed batch)                |
+//! | −Graph Compiler      | greedy_path = false (random-path artifacts)   |
+//! | −Block Constructor   | clustered = false (divergent stream)          |
+//! | QUICK-analog         | clustered + greedy_path, autotune = false     |
+
+use std::path::Path;
+
+use crate::allocator::AutoTuner;
+use crate::basis::BasisSet;
+use crate::constructor::{BlockPlan, PairList, QuadBlock, SchwarzMode, KPAIR};
+use crate::fock::digest_block;
+use crate::linalg::Matrix;
+use crate::metrics::EngineMetrics;
+use crate::runtime::{ClassKey, Runtime, Variant};
+use crate::scf::FockEngine;
+use crate::util::Stopwatch;
+
+#[derive(Clone, Debug)]
+pub struct MatryoshkaConfig {
+    /// Schwarz screening threshold on |(ab|cd)|
+    pub threshold: f64,
+    /// pair-tile edge of the Block Constructor
+    pub tile: usize,
+    /// Block Constructor clustering (§5) — off = divergence ablation
+    pub clustered: bool,
+    /// Graph Compiler greedy path (§6) — off = random-path artifacts
+    pub greedy_path: bool,
+    /// Workload Allocator auto-tuning (§7) — off = static parallelism
+    pub autotune: bool,
+    /// batch variant used when autotune is off
+    pub fixed_batch: usize,
+    /// cache contracted ERI blocks across SCF iterations (the integrals
+    /// are density-independent; direct mode recomputes like the paper)
+    pub stored: bool,
+    /// Schwarz bound mode: Exact (small systems/tests) or Estimate (fast)
+    pub schwarz: SchwarzMode,
+}
+
+impl Default for MatryoshkaConfig {
+    fn default() -> Self {
+        MatryoshkaConfig {
+            threshold: 1e-10,
+            tile: 64,
+            clustered: true,
+            greedy_path: true,
+            autotune: true,
+            fixed_batch: 512,
+            stored: false,
+            schwarz: SchwarzMode::Exact,
+        }
+    }
+}
+
+impl MatryoshkaConfig {
+    /// The Fig. 9 progression: base, +BC, +BC+GC, +BC+GC+WA.
+    pub fn ablation(bc: bool, gc: bool, wa: bool) -> Self {
+        MatryoshkaConfig { clustered: bc, greedy_path: gc, autotune: wa, ..Default::default() }
+    }
+}
+
+/// One cached (stored-mode) block: quads + their contracted ERIs.
+struct CachedBlock {
+    block_idx: usize,
+    values: Vec<f64>,
+    ncomp: usize,
+}
+
+pub struct MatryoshkaEngine {
+    pub basis: BasisSet,
+    pub config: MatryoshkaConfig,
+    runtime: Runtime,
+    pairs: PairList,
+    plan: BlockPlan,
+    tuner: AutoTuner,
+    pub metrics: EngineMetrics,
+    cache: Vec<CachedBlock>,
+    cache_complete: bool,
+    eri_seconds: f64,
+}
+
+impl MatryoshkaEngine {
+    pub fn new(basis: BasisSet, artifact_dir: &Path, config: MatryoshkaConfig) -> anyhow::Result<Self> {
+        let runtime = Runtime::new(artifact_dir)?;
+        let pairs = PairList::build_with_mode(&basis, config.threshold, config.schwarz);
+        let plan = BlockPlan::build(&pairs, config.threshold, config.tile, config.clustered);
+        let tuner = AutoTuner::new(&runtime.manifest, config.autotune, config.fixed_batch);
+        Ok(MatryoshkaEngine {
+            basis,
+            config,
+            runtime,
+            pairs,
+            plan,
+            tuner,
+            metrics: EngineMetrics::default(),
+            cache: Vec::new(),
+            cache_complete: false,
+            eri_seconds: 0.0,
+        })
+    }
+
+    pub fn plan(&self) -> &BlockPlan {
+        &self.plan
+    }
+
+    pub fn pair_list(&self) -> &PairList {
+        &self.pairs
+    }
+
+    pub fn tuner(&self) -> &AutoTuner {
+        &self.tuner
+    }
+
+    pub fn runtime_stats(&self) -> crate::runtime::RuntimeStats {
+        self.runtime.stats()
+    }
+
+    /// Select the kernel variant for a class at the current tuner state;
+    /// `remaining` allows tail chunks to downshift to a snug variant.
+    fn variant_for(&self, class: ClassKey, want_batch: usize, remaining: usize) -> anyhow::Result<Variant> {
+        if !self.config.greedy_path {
+            // Graph-Compiler ablation: random-path artifact (fixed batch)
+            return self
+                .runtime
+                .manifest
+                .random_variant(class)
+                .cloned()
+                .ok_or_else(|| anyhow::anyhow!("no random-path artifact for class {class:?}"));
+        }
+        let ladder = self.runtime.manifest.ladder(class);
+        let batch = if remaining < want_batch {
+            // smallest rung that still holds the tail in one execution
+            ladder
+                .iter()
+                .map(|v| v.batch)
+                .find(|&b| b >= remaining)
+                .unwrap_or(want_batch)
+                .min(want_batch)
+        } else {
+            want_batch
+        };
+        ladder
+            .iter()
+            .find(|v| v.batch == batch)
+            .or_else(|| ladder.last())
+            .map(|v| (*v).clone())
+            .ok_or_else(|| anyhow::anyhow!("no kernel variant for class {class:?}"))
+    }
+
+    /// Gather the padded input buffers for a chunk of quadruples.
+    fn gather(&self, quads: &[(u32, u32)], batch: usize) -> (Vec<f64>, Vec<f64>, Vec<f64>, Vec<f64>) {
+        let k = KPAIR;
+        let mut bp = vec![0.0; batch * k * 5];
+        let mut bg = vec![0.0; batch * 6];
+        let mut kp = vec![0.0; batch * k * 5];
+        let mut kg = vec![0.0; batch * 6];
+        // padding rows must keep p finite (Kab = 0 makes them exact zeros)
+        for r in quads.len()..batch {
+            for kk in 0..k {
+                bp[(r * k + kk) * 5] = 1.0;
+                kp[(r * k + kk) * 5] = 1.0;
+            }
+        }
+        for (r, &(pidx, qidx)) in quads.iter().enumerate() {
+            let bra = &self.pairs.pairs[pidx as usize];
+            let ket = &self.pairs.pairs[qidx as usize];
+            bp[r * k * 5..(r + 1) * k * 5].copy_from_slice(&bra.prim);
+            kp[r * k * 5..(r + 1) * k * 5].copy_from_slice(&ket.prim);
+            bg[r * 6..(r + 1) * 6].copy_from_slice(&bra.geom);
+            kg[r * 6..(r + 1) * 6].copy_from_slice(&ket.geom);
+        }
+        (bp, bg, kp, kg)
+    }
+
+    /// Digest one executed chunk into G.
+    fn digest_chunk(&self, g: &mut Matrix, d: &Matrix, quads: &[(u32, u32)], values: &[f64], ncomp: usize) {
+        for (r, &(pidx, qidx)) in quads.iter().enumerate() {
+            let bra = &self.pairs.pairs[pidx as usize];
+            let ket = &self.pairs.pairs[qidx as usize];
+            let (sa, sb) = (&self.basis.shells[bra.si], &self.basis.shells[bra.sj]);
+            let (sc, sd) = (&self.basis.shells[ket.si], &self.basis.shells[ket.sj]);
+            digest_block(
+                g,
+                d,
+                sa,
+                sb,
+                sc,
+                sd,
+                bra.si == bra.sj,
+                ket.si == ket.sj,
+                pidx == qidx,
+                &values[r * ncomp..(r + 1) * ncomp],
+            );
+        }
+    }
+
+    /// Execute the quadruples of `block`, digest into `g`, optionally cache.
+    fn run_block(
+        &mut self,
+        g: &mut Matrix,
+        d: &Matrix,
+        block_idx: usize,
+        cache_values: bool,
+    ) -> anyhow::Result<()> {
+        let block: QuadBlock = self.plan.blocks[block_idx].clone();
+        let mut offset = 0;
+        let mut stored_values: Vec<f64> = Vec::new();
+        let mut stored_ncomp = 0;
+        while offset < block.quads.len() {
+            let remaining = block.quads.len() - offset;
+            let batch = self.tuner.batch_for(block.class);
+            // tail fitting (§Perf L3): the last chunk of a block uses the
+            // smallest variant that holds it instead of padding the tuned
+            // batch — cuts padded-lane waste on block tails
+            let variant = self.variant_for(block.class, batch, remaining)?;
+            let n = remaining.min(variant.batch);
+            let chunk = &block.quads[offset..offset + n];
+
+            let sw = Stopwatch::start();
+            let (bp, bg, kp, kg) = self.gather(chunk, variant.batch);
+            self.metrics.gather_seconds += sw.elapsed_s();
+
+            let exec = self.runtime.execute_eri(&variant, &bp, &bg, &kp, &kg)?;
+            // steady-state cost only: one-time kernel compilation must not
+            // poison Algorithm 2's combine/revert decisions or Fig. 12
+            self.metrics.record(block.class, n, variant.batch, exec.steady_seconds);
+            self.tuner.observe(block.class, n, exec.steady_seconds);
+
+            let sw = Stopwatch::start();
+            self.digest_chunk(g, d, chunk, &exec.values, exec.ncomp);
+            self.metrics.digest_seconds += sw.elapsed_s();
+
+            if cache_values {
+                stored_ncomp = exec.ncomp;
+                stored_values.extend_from_slice(&exec.values[..n * exec.ncomp]);
+            }
+            offset += n;
+        }
+        if cache_values {
+            self.cache.push(CachedBlock { block_idx, values: stored_values, ncomp: stored_ncomp });
+        }
+        Ok(())
+    }
+
+    /// Build G over a subset of blocks (weak-scaling shards, Fig. 13).
+    pub fn build_g_for_blocks(&mut self, d: &Matrix, block_indices: &[usize]) -> anyhow::Result<Matrix> {
+        let n = self.basis.nbf;
+        let mut g = Matrix::zeros(n, n);
+        for &bi in block_indices {
+            self.run_block(&mut g, d, bi, false)?;
+        }
+        g.symmetrize();
+        Ok(g)
+    }
+}
+
+impl FockEngine for MatryoshkaEngine {
+    fn name(&self) -> &str {
+        "matryoshka"
+    }
+
+    fn two_electron(&mut self, density: &Matrix) -> anyhow::Result<Matrix> {
+        let sw = Stopwatch::start();
+        let n = self.basis.nbf;
+        let mut g = Matrix::zeros(n, n);
+
+        if self.config.stored && self.cache_complete {
+            // digest-only fast path: ERIs are density-independent
+            for cb in &self.cache {
+                let quads = &self.plan.blocks[cb.block_idx].quads;
+                self.digest_chunk(&mut g, density, quads, &cb.values, cb.ncomp);
+            }
+        } else {
+            let want_cache = self.config.stored;
+            for bi in 0..self.plan.blocks.len() {
+                self.run_block(&mut g, density, bi, want_cache)?;
+            }
+            if want_cache {
+                self.cache_complete = true;
+            }
+        }
+        g.symmetrize();
+        self.eri_seconds += sw.elapsed_s();
+        Ok(g)
+    }
+
+    fn eri_seconds(&self) -> f64 {
+        self.eri_seconds
+    }
+}

@@ -1,0 +1,8 @@
+//! Fock-build engines: the Matryoshka system, the CPU baseline, and the
+//! ablation/baseline variants the paper's evaluation compares.
+
+mod matryoshka;
+mod reference;
+
+pub use matryoshka::{MatryoshkaConfig, MatryoshkaEngine};
+pub use reference::ReferenceEngine;

@@ -1,0 +1,33 @@
+//! Core Hamiltonian H = T + V.
+
+use crate::basis::BasisSet;
+use crate::integrals::{kinetic_matrix, nuclear_attraction_matrix};
+use crate::linalg::Matrix;
+use crate::molecule::Molecule;
+
+/// One-electron core Hamiltonian.
+pub fn core_hamiltonian(basis: &BasisSet, mol: &Molecule) -> Matrix {
+    let mut h = kinetic_matrix(basis);
+    let v = nuclear_attraction_matrix(basis, mol);
+    h.add_scaled(&v, 1.0);
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::basis::build_basis;
+    use crate::molecule::library;
+
+    #[test]
+    fn hcore_is_symmetric_and_attractive_on_diagonal() {
+        let mol = library::by_name("water").unwrap();
+        let basis = build_basis(&mol, "sto-3g").unwrap();
+        let h = core_hamiltonian(&basis, &mol);
+        assert!(h.diff_norm(&h.transpose()) < 1e-12);
+        // nuclear attraction dominates kinetic energy on the diagonal
+        for i in 0..basis.nbf {
+            assert!(h.at(i, i) < 0.0, "H[{i}][{i}] = {}", h.at(i, i));
+        }
+    }
+}

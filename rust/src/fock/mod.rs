@@ -1,0 +1,7 @@
+//! Fock-matrix assembly: core Hamiltonian + two-electron digestion.
+
+mod digest;
+mod hcore;
+
+pub use digest::{digest_block, digest_eri, symmetry_factor};
+pub use hcore::core_hamiltonian;

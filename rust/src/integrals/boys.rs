@@ -1,0 +1,122 @@
+//! Boys function F_m(T), scalar f64 — mirrors python/compile/kernels/boys.py
+//! (series + downward recursion below T=33, asymptotic + upward above).
+
+const T_SWITCH: f64 = 33.0;
+const N_SERIES: usize = 120;
+
+/// Fill `out[m] = F_m(t)` for m = 0..=mmax.
+pub fn boys(mmax: usize, t: f64, out: &mut [f64]) {
+    debug_assert!(out.len() > mmax);
+    if t < T_SWITCH {
+        // series for F_mmax
+        let two_t = 2.0 * t;
+        let mut denom = 2.0 * mmax as f64 + 1.0;
+        let mut term = 1.0 / denom;
+        let mut acc = term;
+        for _ in 1..N_SERIES {
+            denom += 2.0;
+            term *= two_t / denom;
+            acc += term;
+        }
+        let emt = (-t).exp();
+        out[mmax] = acc * emt;
+        for m in (0..mmax).rev() {
+            out[m] = (two_t * out[m + 1] + emt) / (2.0 * m as f64 + 1.0);
+        }
+    } else {
+        let emt = (-t).exp();
+        out[0] = 0.5 * (std::f64::consts::PI / t).sqrt();
+        let inv_2t = 0.5 / t;
+        for m in 0..mmax {
+            out[m + 1] = ((2.0 * m as f64 + 1.0) * out[m] - emt) * inv_2t;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn erf(x: f64) -> f64 {
+        // Abramowitz-Stegun 7.1.26-style is too coarse; integrate instead.
+        // Simpson on [0, x] with fine steps is plenty for test tolerances.
+        let n = 20_000;
+        let h = x / n as f64;
+        let f = |u: f64| (-u * u).exp();
+        let mut s = f(0.0) + f(x);
+        for i in 1..n {
+            s += f(i as f64 * h) * if i % 2 == 1 { 4.0 } else { 2.0 };
+        }
+        2.0 / std::f64::consts::PI.sqrt() * s * h / 3.0
+    }
+
+    #[test]
+    fn f0_matches_erf_closed_form() {
+        // F_0(t) = sqrt(pi/t)/2 * erf(sqrt(t))
+        for &t in &[1e-3, 0.1, 1.0, 5.0, 20.0, 32.9, 33.1, 50.0, 200.0] {
+            let mut f = [0.0; 1];
+            boys(0, t, &mut f);
+            let want = 0.5 * (std::f64::consts::PI / t).sqrt() * erf(t.sqrt());
+            assert!(
+                (f[0] - want).abs() < 1e-12 * want.max(1.0),
+                "t={t}: {} vs {want}",
+                f[0]
+            );
+        }
+    }
+
+    #[test]
+    fn f_at_zero_is_inverse_odd_numbers() {
+        let mut f = [0.0; 9];
+        boys(8, 0.0, &mut f);
+        for m in 0..=8 {
+            assert!((f[m] - 1.0 / (2.0 * m as f64 + 1.0)).abs() < 1e-15);
+        }
+    }
+
+    #[test]
+    fn downward_recursion_is_consistent() {
+        // F_{m-1} = (2t F_m + e^-t) / (2m - 1) must hold at the output
+        for &t in &[0.5, 10.0, 33.0, 40.0, 100.0] {
+            let mut f = [0.0; 7];
+            boys(6, t, &mut f);
+            for m in 1..=6 {
+                let lhs = f[m - 1];
+                let rhs = (2.0 * t * f[m] + (-t).exp()) / (2.0 * m as f64 - 1.0);
+                assert!((lhs - rhs).abs() < 1e-13 * lhs.abs().max(1e-10), "t={t} m={m}");
+            }
+        }
+    }
+
+    #[test]
+    fn continuous_across_switch_point() {
+        let mut lo = [0.0; 5];
+        let mut hi = [0.0; 5];
+        boys(4, T_SWITCH - 1e-9, &mut lo);
+        boys(4, T_SWITCH + 1e-9, &mut hi);
+        for m in 0..=4 {
+            // the two branches accumulate differently; ~1e-10 relative
+            // agreement at the seam is ample for 1e-12-threshold integrals
+            assert!(
+                ((lo[m] - hi[m]) / lo[m]).abs() < 2e-9,
+                "m={m}: {} vs {}",
+                lo[m],
+                hi[m]
+            );
+        }
+    }
+
+    #[test]
+    fn monotone_decreasing_in_m_and_t() {
+        let mut f = [0.0; 5];
+        boys(4, 2.0, &mut f);
+        for m in 1..=4 {
+            assert!(f[m] < f[m - 1]);
+        }
+        let mut g = [0.0; 5];
+        boys(4, 3.0, &mut g);
+        for m in 0..=4 {
+            assert!(g[m] < f[m]);
+        }
+    }
+}

@@ -1,0 +1,20 @@
+//! Molecular integrals substrate.
+//!
+//! * `boys` — the Boys function (same algorithm as the Python kernel side).
+//! * `hermite` — McMurchie–Davidson E coefficients and R tensor.
+//! * `one_electron` — overlap / kinetic / nuclear-attraction matrices.
+//! * `eri_ref` — the from-scratch MD two-electron engine: the CPU-centric
+//!   baseline of Fig. 14 *and* the independent oracle the HLO kernel path
+//!   is validated against.
+
+mod boys;
+mod eri_ref;
+mod hermite;
+mod one_electron;
+
+pub use boys::boys;
+pub use eri_ref::{eri_shell_quartet, schwarz_diagonal, EriRefStats};
+pub use hermite::{hermite_e, hermite_r};
+pub use one_electron::{
+    kinetic_matrix, nuclear_attraction_matrix, overlap_matrix, shell_self_overlap,
+};

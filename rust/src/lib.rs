@@ -1,0 +1,33 @@
+//! # Matryoshka — elastic-parallelism quantum chemistry on Rust + XLA
+//!
+//! Reproduction of *"Matryoshka: Optimization of Dynamic Diverse Quantum
+//! Chemistry Systems via Elastic Parallelism Transformation"* as a
+//! three-layer stack:
+//!
+//! * **L3 (this crate)** — the coordinator: SCF event loop, Block
+//!   Constructor (§5), Workload Allocator (§7), Fock digestion, metrics,
+//!   CLI; plus every substrate the paper depends on (basis sets, one- and
+//!   two-electron integral engines, dense linear algebra, molecule
+//!   generators).
+//! * **L2/L1 (python/compile, build-time only)** — the Graph Compiler
+//!   (§6) emits per-ERI-class straight-line schedules, wrapped in Pallas
+//!   kernels and AOT-lowered to HLO text artifacts.
+//! * **runtime** — loads the artifacts through PJRT and executes them
+//!   from the Rust hot path; Python is never on the request path.
+
+pub mod allocator;
+pub mod bench_harness;
+pub mod basis;
+pub mod cli;
+pub mod constructor;
+pub mod engines;
+pub mod fock;
+pub mod integrals;
+pub mod linalg;
+pub mod metrics;
+pub mod molecule;
+pub mod report;
+pub mod runtime;
+pub mod scf;
+pub mod testing;
+pub mod util;

@@ -1,0 +1,227 @@
+//! Dense row-major f64 matrix with the small op set the SCF layer needs.
+
+/// Dense row-major matrix of f64.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Matrix {
+    rows: usize,
+    cols: usize,
+    data: Vec<f64>,
+}
+
+impl Matrix {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Matrix { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn identity(n: usize) -> Self {
+        let mut m = Matrix::zeros(n, n);
+        for i in 0..n {
+            m.data[i * n + i] = 1.0;
+        }
+        m
+    }
+
+    pub fn from_rows(rows: usize, cols: usize, data: Vec<f64>) -> Self {
+        assert_eq!(data.len(), rows * cols);
+        Matrix { rows, cols, data }
+    }
+
+    #[inline]
+    pub fn nrows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    pub fn ncols(&self) -> usize {
+        self.cols
+    }
+
+    #[inline]
+    pub fn at(&self, i: usize, j: usize) -> f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, i: usize, j: usize) -> &mut f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &mut self.data[i * self.cols + j]
+    }
+
+    pub fn data(&self) -> &[f64] {
+        &self.data
+    }
+
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// C = self · other
+    pub fn matmul(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.cols, other.rows);
+        let mut out = Matrix::zeros(self.rows, other.cols);
+        // ikj loop order: stream through `other` rows for cache friendliness
+        for i in 0..self.rows {
+            for k in 0..self.cols {
+                let aik = self.data[i * self.cols + k];
+                if aik == 0.0 {
+                    continue;
+                }
+                let orow = &other.data[k * other.cols..(k + 1) * other.cols];
+                let crow = &mut out.data[i * other.cols..(i + 1) * other.cols];
+                for j in 0..other.cols {
+                    crow[j] += aik * orow[j];
+                }
+            }
+        }
+        out
+    }
+
+    /// C = self · otherᵀ
+    pub fn matmul_transb(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.cols, other.cols);
+        let mut out = Matrix::zeros(self.rows, other.rows);
+        for i in 0..self.rows {
+            let arow = self.row(i);
+            for j in 0..other.rows {
+                let brow = other.row(j);
+                let mut acc = 0.0;
+                for k in 0..self.cols {
+                    acc += arow[k] * brow[k];
+                }
+                out.data[i * other.rows + j] = acc;
+            }
+        }
+        out
+    }
+
+    /// C = selfᵀ · other
+    pub fn transa_matmul(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.rows, other.rows);
+        let mut out = Matrix::zeros(self.cols, other.cols);
+        for k in 0..self.rows {
+            let arow = self.row(k);
+            let brow = other.row(k);
+            for i in 0..self.cols {
+                let aki = arow[i];
+                if aki == 0.0 {
+                    continue;
+                }
+                let crow = &mut out.data[i * other.cols..(i + 1) * other.cols];
+                for j in 0..other.cols {
+                    crow[j] += aki * brow[j];
+                }
+            }
+        }
+        out
+    }
+
+    pub fn transpose(&self) -> Matrix {
+        let mut out = Matrix::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                out.data[j * self.rows + i] = self.data[i * self.cols + j];
+            }
+        }
+        out
+    }
+
+    pub fn add_scaled(&mut self, other: &Matrix, factor: f64) {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        for (a, b) in self.data.iter_mut().zip(other.data.iter()) {
+            *a += factor * b;
+        }
+    }
+
+    pub fn scale(&mut self, factor: f64) {
+        for a in self.data.iter_mut() {
+            *a *= factor;
+        }
+    }
+
+    /// Σ_ij A_ij B_ij — the trace inner product used for SCF energies.
+    pub fn dot(&self, other: &Matrix) -> f64 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data.iter().zip(other.data.iter()).map(|(a, b)| a * b).sum()
+    }
+
+    /// Largest |A_ij| — convergence / symmetry checks.
+    pub fn max_abs(&self) -> f64 {
+        self.data.iter().fold(0.0f64, |m, v| m.max(v.abs()))
+    }
+
+    /// Frobenius norm of (self - other).
+    pub fn diff_norm(&self, other: &Matrix) -> f64 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data
+            .iter()
+            .zip(other.data.iter())
+            .map(|(a, b)| (a - b) * (a - b))
+            .sum::<f64>()
+            .sqrt()
+    }
+
+    /// Enforce exact symmetry: A <- (A + Aᵀ)/2.
+    pub fn symmetrize(&mut self) {
+        assert_eq!(self.rows, self.cols);
+        for i in 0..self.rows {
+            for j in (i + 1)..self.cols {
+                let m = 0.5 * (self.at(i, j) + self.at(j, i));
+                *self.at_mut(i, j) = m;
+                *self.at_mut(j, i) = m;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn seq_matrix(r: usize, c: usize) -> Matrix {
+        Matrix::from_rows(r, c, (0..r * c).map(|v| v as f64 + 1.0).collect())
+    }
+
+    #[test]
+    fn matmul_small() {
+        let a = seq_matrix(2, 3);
+        let b = seq_matrix(3, 2);
+        let c = a.matmul(&b);
+        assert_eq!(c.data(), &[22.0, 28.0, 49.0, 64.0]);
+    }
+
+    #[test]
+    fn matmul_transb_matches_explicit_transpose() {
+        let a = seq_matrix(2, 3);
+        let b = seq_matrix(4, 3);
+        let c1 = a.matmul_transb(&b);
+        let c2 = a.matmul(&b.transpose());
+        assert_eq!(c1, c2);
+    }
+
+    #[test]
+    fn transa_matmul_matches_explicit_transpose() {
+        let a = seq_matrix(3, 2);
+        let b = seq_matrix(3, 4);
+        let c1 = a.transa_matmul(&b);
+        let c2 = a.transpose().matmul(&b);
+        assert_eq!(c1, c2);
+    }
+
+    #[test]
+    fn dot_is_trace_inner_product() {
+        let a = seq_matrix(2, 2);
+        assert_eq!(a.dot(&a), 1.0 + 4.0 + 9.0 + 16.0);
+    }
+
+    #[test]
+    fn symmetrize_enforces_symmetry() {
+        let mut a = seq_matrix(3, 3);
+        a.symmetrize();
+        for i in 0..3 {
+            for j in 0..3 {
+                assert_eq!(a.at(i, j), a.at(j, i));
+            }
+        }
+    }
+}

@@ -1,0 +1,77 @@
+//! Dense linear-algebra substrate.
+//!
+//! The vendored registry ships no linear-algebra crates, so the SCF layer's
+//! needs are implemented from scratch: a dense row-major matrix, a cyclic
+//! Jacobi eigensolver for real symmetric matrices (basis sizes here are a
+//! few hundred, well inside Jacobi's comfort zone), Gaussian-elimination
+//! solves for DIIS, and symmetric-orthogonalization helpers.
+
+mod matrix;
+mod eigen;
+mod solve;
+
+pub use eigen::{eigh, Eigh};
+pub use matrix::Matrix;
+pub use solve::solve;
+
+/// Build S^(-1/2) (symmetric / Löwdin orthogonalization) from an overlap
+/// matrix, dropping near-singular directions below `thresh`.
+pub fn inv_sqrt_symmetric(s: &Matrix, thresh: f64) -> Matrix {
+    let Eigh { values, vectors } = eigh(s);
+    let n = s.nrows();
+    let mut scaled = vectors.clone();
+    for j in 0..n {
+        let w = values[j];
+        let f = if w > thresh { 1.0 / w.sqrt() } else { 0.0 };
+        for i in 0..n {
+            *scaled.at_mut(i, j) *= f;
+        }
+    }
+    scaled.matmul_transb(&vectors)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn inv_sqrt_of_identity_is_identity() {
+        let s = Matrix::identity(4);
+        let x = inv_sqrt_symmetric(&s, 1e-10);
+        for i in 0..4 {
+            for j in 0..4 {
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((x.at(i, j) - want).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn inv_sqrt_squares_to_inverse() {
+        // S = A Aᵀ + I is symmetric positive definite.
+        let mut a = Matrix::zeros(3, 3);
+        let vals = [0.7, -0.2, 0.5, 0.1, 0.9, -0.3, 0.4, 0.2, 1.1];
+        for i in 0..3 {
+            for j in 0..3 {
+                *a.at_mut(i, j) = vals[i * 3 + j];
+            }
+        }
+        let mut s = a.matmul_transb(&a);
+        for i in 0..3 {
+            *s.at_mut(i, i) += 1.0;
+        }
+        let x = inv_sqrt_symmetric(&s, 1e-12);
+        // X S X = I
+        let xsx = x.matmul(&s).matmul(&x);
+        for i in 0..3 {
+            for j in 0..3 {
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!(
+                    (xsx.at(i, j) - want).abs() < 1e-10,
+                    "xsx[{i}][{j}] = {}",
+                    xsx.at(i, j)
+                );
+            }
+        }
+    }
+}

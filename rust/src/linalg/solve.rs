@@ -1,0 +1,104 @@
+//! Linear solve via Gaussian elimination with partial pivoting.
+//!
+//! Used by DIIS (small augmented-Lagrangian systems, dimension ≤ ~10) and
+//! by tests; numerical demands are light.
+
+use super::Matrix;
+
+/// Solve A x = b. Returns None if A is (numerically) singular.
+pub fn solve(a: &Matrix, b: &[f64]) -> Option<Vec<f64>> {
+    let n = a.nrows();
+    assert_eq!(n, a.ncols());
+    assert_eq!(n, b.len());
+    // augmented working copy
+    let mut m: Vec<f64> = Vec::with_capacity(n * (n + 1));
+    for i in 0..n {
+        m.extend_from_slice(a.row(i));
+        m.push(b[i]);
+    }
+    let w = n + 1;
+
+    for col in 0..n {
+        // partial pivot
+        let mut piv = col;
+        let mut best = m[col * w + col].abs();
+        for r in (col + 1)..n {
+            let v = m[r * w + col].abs();
+            if v > best {
+                best = v;
+                piv = r;
+            }
+        }
+        if best < 1e-14 {
+            return None;
+        }
+        if piv != col {
+            for k in 0..w {
+                m.swap(col * w + k, piv * w + k);
+            }
+        }
+        let d = m[col * w + col];
+        for r in (col + 1)..n {
+            let f = m[r * w + col] / d;
+            if f == 0.0 {
+                continue;
+            }
+            for k in col..w {
+                m[r * w + k] -= f * m[col * w + k];
+            }
+        }
+    }
+
+    // back substitution
+    let mut x = vec![0.0; n];
+    for i in (0..n).rev() {
+        let mut acc = m[i * w + n];
+        for k in (i + 1)..n {
+            acc -= m[i * w + k] * x[k];
+        }
+        x[i] = acc / m[i * w + i];
+    }
+    Some(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn solves_known_system() {
+        // x + 2y = 5; 3x - y = 1  =>  x = 1, y = 2
+        let a = Matrix::from_rows(2, 2, vec![1.0, 2.0, 3.0, -1.0]);
+        let x = solve(&a, &[5.0, 1.0]).unwrap();
+        assert!((x[0] - 1.0).abs() < 1e-12);
+        assert!((x[1] - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn pivoting_handles_zero_diagonal() {
+        let a = Matrix::from_rows(2, 2, vec![0.0, 1.0, 1.0, 0.0]);
+        let x = solve(&a, &[3.0, 4.0]).unwrap();
+        assert_eq!(x, vec![4.0, 3.0]);
+    }
+
+    #[test]
+    fn singular_returns_none() {
+        let a = Matrix::from_rows(2, 2, vec![1.0, 2.0, 2.0, 4.0]);
+        assert!(solve(&a, &[1.0, 2.0]).is_none());
+    }
+
+    #[test]
+    fn residual_is_small_on_random_like_system() {
+        let vals = [3.0, -1.0, 0.5, 0.2, -1.0, 4.0, 1.5, -0.3, 0.5, 1.5, 5.0, 0.7, 0.2, -0.3, 0.7, 2.0];
+        let a = Matrix::from_rows(4, 4, vals.to_vec());
+        let b = [1.0, -2.0, 0.5, 3.0];
+        let x = solve(&a, &b).unwrap();
+        for i in 0..4 {
+            let mut r = -b[i];
+            for j in 0..4 {
+                r += a.at(i, j) * x[j];
+            }
+            assert!(r.abs() < 1e-11);
+        }
+    }
+}

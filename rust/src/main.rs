@@ -1,0 +1,213 @@
+//! Matryoshka CLI — the L3 leader entrypoint.
+//!
+//! Subcommands:
+//!   scf     run one RHF calculation           (engine, molecule, options)
+//!   report  regenerate non-timing tables/figures (systems|tab4|fig6|compiler|all)
+//!   info    dump the artifact manifest
+//!
+//! Examples:
+//!   matryoshka scf --molecule water --engine matryoshka --stored --verbose
+//!   matryoshka scf --molecule benzene --engine reference
+//!   matryoshka report all
+
+use std::path::PathBuf;
+
+use matryoshka::basis::build_basis;
+use matryoshka::cli::Args;
+use matryoshka::constructor::SchwarzMode;
+use matryoshka::engines::{MatryoshkaConfig, MatryoshkaEngine, ReferenceEngine};
+use matryoshka::integrals::overlap_matrix;
+use matryoshka::linalg::Matrix;
+use matryoshka::molecule::{library, parse_xyz, Molecule};
+use matryoshka::report;
+use matryoshka::scf::{dipole_moment, mulliken_charges, run_rhf, ScfOptions};
+
+fn artifact_dir(args: &Args) -> PathBuf {
+    PathBuf::from(args.str_or("artifacts", "artifacts"))
+}
+
+fn usage() -> ! {
+    eprintln!(
+        "usage: matryoshka <scf|report|info> [options]\n\
+         \n  scf     --molecule NAME [--engine matryoshka|reference] [--stored]\n\
+         \u{20}         [--threshold T] [--max-iter N] [--tile N] [--fixed-batch N]\n\
+         \u{20}         [--no-autotune] [--no-cluster] [--random-path]\n\
+         \u{20}         [--schwarz exact|estimate] [--artifacts DIR] [--verbose]\n\
+         \u{20}         [--xyz FILE] [--damping A] [--properties]\n\
+         \n  report  systems|tab4|fig6|compiler|all [--artifacts DIR]\n\
+         \n  info    [--artifacts DIR]"
+    );
+    std::process::exit(2);
+}
+
+fn engine_config(args: &Args) -> anyhow::Result<MatryoshkaConfig> {
+    Ok(MatryoshkaConfig {
+        threshold: args.f64_or("threshold", 1e-10)?,
+        tile: args.usize_or("tile", 64)?,
+        clustered: !args.flag("no-cluster"),
+        greedy_path: !args.flag("random-path"),
+        autotune: !args.flag("no-autotune"),
+        fixed_batch: args.usize_or("fixed-batch", 512)?,
+        stored: args.flag("stored"),
+        schwarz: match args.str_or("schwarz", "estimate").as_str() {
+            "exact" => SchwarzMode::Exact,
+            "estimate" => SchwarzMode::Estimate,
+            other => anyhow::bail!("--schwarz: unknown mode {other}"),
+        },
+    })
+}
+
+fn load_molecule(args: &Args) -> anyhow::Result<Molecule> {
+    if let Some(path) = args.get("xyz") {
+        let text = std::fs::read_to_string(path)?;
+        let stem = std::path::Path::new(path)
+            .file_stem()
+            .and_then(|s| s.to_str())
+            .unwrap_or("xyz");
+        return parse_xyz(stem, &text);
+    }
+    let name = args
+        .get("molecule")
+        .ok_or_else(|| anyhow::anyhow!("scf requires --molecule NAME or --xyz FILE"))?;
+    library::by_name(name)
+}
+
+fn cmd_scf(args: &Args) -> anyhow::Result<()> {
+    let mol = load_molecule(args)?;
+    let basis = build_basis(&mol, &args.str_or("basis", "sto-3g"))?;
+    let opts = ScfOptions {
+        max_iterations: args.usize_or("max-iter", 60)?,
+        damping: args.f64_or("damping", 0.0)?,
+        verbose: args.flag("verbose"),
+        ..Default::default()
+    };
+    println!(
+        "system {}: {} atoms, {} electrons, {} shells, {} basis functions",
+        mol.name,
+        mol.natoms(),
+        mol.nelec(),
+        basis.shells.len(),
+        basis.nbf
+    );
+
+    let engine_name = args.str_or("engine", "matryoshka");
+    let result = match engine_name.as_str() {
+        "reference" => {
+            let mut engine = ReferenceEngine::new(basis.clone(), args.f64_or("threshold", 1e-10)?);
+            run_rhf(&mol, &basis, &mut engine, &opts)?
+        }
+        "matryoshka" => {
+            let config = engine_config(args)?;
+            let mut engine = MatryoshkaEngine::new(basis.clone(), &artifact_dir(args), config)?;
+            let res = run_rhf(&mol, &basis, &mut engine, &opts)?;
+            let m = &engine.metrics;
+            let rs = engine.runtime_stats();
+            println!(
+                "engine: {} executions, {} quads, lane utilization {:.3}, \
+                 compile {:.2}s, execute {:.2}s, marshal {:.2}s, gather {:.2}s, digest {:.2}s",
+                rs.executions,
+                m.total_real_quads(),
+                m.mean_lane_utilization(),
+                rs.compile_seconds,
+                rs.execute_seconds,
+                rs.marshal_seconds,
+                m.gather_seconds,
+                m.digest_seconds
+            );
+            res
+        }
+        other => anyhow::bail!("unknown engine {other}"),
+    };
+
+    let (homo, lumo) = result.homo_lumo();
+    println!(
+        "E({}) = {:.10} Ha  (E_nn = {:.6}, {} iterations, converged = {})",
+        engine_name, result.energy, result.nuclear_repulsion, result.iterations, result.converged
+    );
+    println!(
+        "HOMO = {:.6} Ha, LUMO = {} Ha, wall {:.2}s (ERI {:.2}s)",
+        homo,
+        lumo.map(|l| format!("{l:.6}")).unwrap_or_else(|| "n/a".into()),
+        result.total_seconds,
+        result.eri_seconds
+    );
+    // post-SCF properties (dipole + Mulliken) from the converged density
+    if args.flag("properties") {
+        let n = basis.nbf;
+        let mut density = Matrix::zeros(n, n);
+        for i in 0..n {
+            for j in 0..n {
+                let mut acc = 0.0;
+                for o in 0..result.nocc {
+                    acc += result.coefficients.at(i, o) * result.coefficients.at(j, o);
+                }
+                *density.at_mut(i, j) = 2.0 * acc;
+            }
+        }
+        let mu = dipole_moment(&basis, &mol, &density);
+        let mag = (mu[0] * mu[0] + mu[1] * mu[1] + mu[2] * mu[2]).sqrt();
+        println!(
+            "dipole = ({:.4}, {:.4}, {:.4}) a.u., |mu| = {:.4} a.u. = {:.4} D",
+            mu[0], mu[1], mu[2], mag, mag * 2.541_746
+        );
+        let s_mat = overlap_matrix(&basis);
+        let q = mulliken_charges(&basis, &mol, &density, &s_mat);
+        let qs: Vec<String> = mol
+            .atoms
+            .iter()
+            .zip(&q)
+            .map(|(a, q)| format!("{}{:+.3}", matryoshka::molecule::element_symbol(a.z), q))
+            .collect();
+        println!("mulliken: {}", qs.join(" "));
+    }
+    if !result.converged {
+        anyhow::bail!("SCF did not converge in {} iterations", result.iterations);
+    }
+    Ok(())
+}
+
+fn cmd_report(args: &Args) -> anyhow::Result<()> {
+    let what = args.positional.get(1).map(|s| s.as_str()).unwrap_or("all");
+    let dir = artifact_dir(args);
+    let sections: Vec<&str> = match what {
+        "all" => vec!["systems", "tab4", "fig6", "compiler"],
+        one => vec![one],
+    };
+    for s in sections {
+        let text = match s {
+            "systems" => report::systems_table()?,
+            "tab4" => report::tab4_counts(args.f64_or("threshold", 1e-10)?)?,
+            "fig6" => report::fig6_opb(&dir)?,
+            "compiler" => report::compiler_stats(&dir)?,
+            other => anyhow::bail!("unknown report {other}"),
+        };
+        println!("{text}");
+    }
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> anyhow::Result<()> {
+    let manifest = matryoshka::runtime::Manifest::load(&artifact_dir(args))?;
+    println!(
+        "artifacts: {} variants, {} classes",
+        manifest.variants.len(),
+        manifest.classes().len()
+    );
+    for v in &manifest.variants {
+        println!(
+            "  {:<28} class {:?} batch {:>5} ncomp {:>3} vrr {:>4} live {:>4} {}",
+            v.name, v.class, v.batch, v.ncomp, v.n_vrr, v.max_live, v.mode
+        );
+    }
+    Ok(())
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env()?;
+    match args.positional.first().map(|s| s.as_str()) {
+        Some("scf") => cmd_scf(&args),
+        Some("report") => cmd_report(&args),
+        Some("info") => cmd_info(&args),
+        _ => usage(),
+    }
+}

@@ -1,0 +1,103 @@
+//! Metrics the paper's evaluation reads off the system, translated to this
+//! substrate (DESIGN.md §Hardware-Adaptation):
+//!
+//! * lane utilization (Fig. 10, "average active threads per warp"):
+//!   real quadruples / padded batch slots, per ERI class;
+//! * live-set / generated-op counts (Fig. 11, register spill & occupancy):
+//!   read from the Graph-Compiler manifest;
+//! * arithmetic intensity & throughput (Figs. 6 and 12): FLOP/byte model
+//!   per class plus measured quadruple throughput before/after tuning.
+
+use std::collections::BTreeMap;
+
+use crate::runtime::ClassKey;
+
+/// Per-class execution accounting.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ClassStats {
+    pub executions: u64,
+    pub real_quads: u64,
+    pub padded_slots: u64,
+    pub seconds: f64,
+}
+
+impl ClassStats {
+    /// Fig. 10 metric: fraction of batch lanes doing real work.
+    pub fn lane_utilization(&self) -> f64 {
+        if self.padded_slots == 0 {
+            return 0.0;
+        }
+        self.real_quads as f64 / self.padded_slots as f64
+    }
+
+    /// Quadruples per second through this class's kernels.
+    pub fn throughput(&self) -> f64 {
+        if self.seconds == 0.0 {
+            return 0.0;
+        }
+        self.real_quads as f64 / self.seconds
+    }
+}
+
+/// Aggregated engine metrics, keyed by ERI class.
+#[derive(Clone, Debug, Default)]
+pub struct EngineMetrics {
+    pub per_class: BTreeMap<ClassKey, ClassStats>,
+    /// digestion wall-clock (L3 scatter phase)
+    pub digest_seconds: f64,
+    /// gather/marshal wall-clock (L3 pack phase)
+    pub gather_seconds: f64,
+}
+
+impl EngineMetrics {
+    pub fn record(&mut self, class: ClassKey, real: usize, padded: usize, seconds: f64) {
+        let s = self.per_class.entry(class).or_default();
+        s.executions += 1;
+        s.real_quads += real as u64;
+        s.padded_slots += padded as u64;
+        s.seconds += seconds;
+    }
+
+    pub fn total_real_quads(&self) -> u64 {
+        self.per_class.values().map(|s| s.real_quads).sum()
+    }
+
+    pub fn total_seconds(&self) -> f64 {
+        self.per_class.values().map(|s| s.seconds).sum()
+    }
+
+    /// Weighted average lane utilization across classes.
+    pub fn mean_lane_utilization(&self) -> f64 {
+        let real: u64 = self.per_class.values().map(|s| s.real_quads).sum();
+        let slots: u64 = self.per_class.values().map(|s| s.padded_slots).sum();
+        if slots == 0 {
+            0.0
+        } else {
+            real as f64 / slots as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lane_utilization_math() {
+        let mut m = EngineMetrics::default();
+        m.record((0, 0, 0, 0), 100, 128, 0.5);
+        m.record((0, 0, 0, 0), 28, 128, 0.5);
+        let s = m.per_class[&(0, 0, 0, 0)];
+        assert_eq!(s.executions, 2);
+        assert!((s.lane_utilization() - 0.5).abs() < 1e-12);
+        assert!((s.throughput() - 128.0).abs() < 1e-12);
+        assert!((m.mean_lane_utilization() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_metrics_are_zero_not_nan() {
+        let s = ClassStats::default();
+        assert_eq!(s.lane_utilization(), 0.0);
+        assert_eq!(s.throughput(), 0.0);
+    }
+}

@@ -1,0 +1,108 @@
+//! Core molecule types (positions in Bohr).
+
+pub const ANGSTROM_TO_BOHR: f64 = 1.889_726_124_626_36;
+
+/// An atom: nuclear charge + position (Bohr).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Atom {
+    pub z: u32,
+    pub pos: [f64; 3],
+}
+
+/// A neutral closed-shell molecule.
+#[derive(Clone, Debug)]
+pub struct Molecule {
+    pub name: String,
+    pub atoms: Vec<Atom>,
+}
+
+impl Molecule {
+    pub fn new(name: &str, atoms: Vec<Atom>) -> Self {
+        Molecule { name: name.to_string(), atoms }
+    }
+
+    /// Build from (Z, position-in-Angstrom) tuples.
+    pub fn from_angstrom(name: &str, atoms: &[(u32, [f64; 3])]) -> Self {
+        Molecule {
+            name: name.to_string(),
+            atoms: atoms
+                .iter()
+                .map(|&(z, p)| Atom {
+                    z,
+                    pos: [
+                        p[0] * ANGSTROM_TO_BOHR,
+                        p[1] * ANGSTROM_TO_BOHR,
+                        p[2] * ANGSTROM_TO_BOHR,
+                    ],
+                })
+                .collect(),
+        }
+    }
+
+    pub fn natoms(&self) -> usize {
+        self.atoms.len()
+    }
+
+    /// Total electron count (neutral molecule).
+    pub fn nelec(&self) -> usize {
+        self.atoms.iter().map(|a| a.z as usize).sum()
+    }
+
+    /// Doubly-occupied orbital count; requires an even electron count.
+    pub fn nocc(&self) -> anyhow::Result<usize> {
+        let n = self.nelec();
+        if n % 2 != 0 {
+            anyhow::bail!("{}: odd electron count {n}; RHF needs a closed shell", self.name);
+        }
+        Ok(n / 2)
+    }
+
+    /// Nuclear repulsion energy Σ Z_a Z_b / R_ab (Hartree).
+    pub fn nuclear_repulsion(&self) -> f64 {
+        let mut e = 0.0;
+        for i in 0..self.atoms.len() {
+            for j in (i + 1)..self.atoms.len() {
+                let a = &self.atoms[i];
+                let b = &self.atoms[j];
+                let dx = a.pos[0] - b.pos[0];
+                let dy = a.pos[1] - b.pos[1];
+                let dz = a.pos[2] - b.pos[2];
+                let r = (dx * dx + dy * dy + dz * dz).sqrt();
+                e += (a.z * b.z) as f64 / r;
+            }
+        }
+        e
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn h2_nuclear_repulsion() {
+        // two protons at 1.4 Bohr: E_nn = 1/1.4
+        let m = Molecule::new(
+            "h2",
+            vec![
+                Atom { z: 1, pos: [0.0, 0.0, 0.0] },
+                Atom { z: 1, pos: [0.0, 0.0, 1.4] },
+            ],
+        );
+        assert!((m.nuclear_repulsion() - 1.0 / 1.4).abs() < 1e-15);
+        assert_eq!(m.nelec(), 2);
+        assert_eq!(m.nocc().unwrap(), 1);
+    }
+
+    #[test]
+    fn odd_electron_count_is_an_error() {
+        let m = Molecule::new("h", vec![Atom { z: 1, pos: [0.0; 3] }]);
+        assert!(m.nocc().is_err());
+    }
+
+    #[test]
+    fn angstrom_conversion() {
+        let m = Molecule::from_angstrom("x", &[(1, [1.0, 0.0, 0.0])]);
+        assert!((m.atoms[0].pos[0] - ANGSTROM_TO_BOHR).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,9 @@
+//! Molecular geometries: types, XYZ parsing, the benchmark library, and
+//! deterministic synthetic-system generators.
+
+mod geometry;
+pub mod library;
+mod xyz;
+
+pub use geometry::{Atom, Molecule, ANGSTROM_TO_BOHR};
+pub use xyz::{parse_xyz, element_z, element_symbol};

@@ -1,0 +1,117 @@
+//! Minimal XYZ-format parser (coordinates in Angstrom, as conventional).
+
+use super::{Atom, Molecule, ANGSTROM_TO_BOHR};
+
+const SYMBOLS: &[(&str, u32)] = &[
+    ("H", 1),
+    ("He", 2),
+    ("Li", 3),
+    ("Be", 4),
+    ("B", 5),
+    ("C", 6),
+    ("N", 7),
+    ("O", 8),
+    ("F", 9),
+    ("Ne", 10),
+    ("Na", 11),
+    ("Mg", 12),
+    ("Al", 13),
+    ("Si", 14),
+    ("P", 15),
+    ("S", 16),
+    ("Cl", 17),
+    ("Ar", 18),
+];
+
+/// Atomic number from element symbol (case-insensitive).
+pub fn element_z(sym: &str) -> anyhow::Result<u32> {
+    let lower = sym.to_lowercase();
+    SYMBOLS
+        .iter()
+        .find(|(s, _)| s.to_lowercase() == lower)
+        .map(|&(_, z)| z)
+        .ok_or_else(|| anyhow::anyhow!("unknown element symbol: {sym}"))
+}
+
+/// Element symbol from atomic number.
+pub fn element_symbol(z: u32) -> &'static str {
+    SYMBOLS
+        .iter()
+        .find(|&&(_, zz)| zz == z)
+        .map(|&(s, _)| s)
+        .unwrap_or("X")
+}
+
+/// Parse standard XYZ text: first line atom count, second line a comment,
+/// then `symbol x y z` per atom (Angstrom).
+pub fn parse_xyz(name: &str, text: &str) -> anyhow::Result<Molecule> {
+    let mut lines = text.lines();
+    let n: usize = lines
+        .next()
+        .ok_or_else(|| anyhow::anyhow!("empty XYZ"))?
+        .trim()
+        .parse()
+        .map_err(|e| anyhow::anyhow!("bad atom count: {e}"))?;
+    let _comment = lines.next();
+    let mut atoms = Vec::with_capacity(n);
+    for (i, line) in lines.enumerate() {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        if atoms.len() == n {
+            break;
+        }
+        let mut parts = line.split_whitespace();
+        let sym = parts
+            .next()
+            .ok_or_else(|| anyhow::anyhow!("line {}: missing symbol", i + 3))?;
+        let mut coord = [0.0f64; 3];
+        for c in coord.iter_mut() {
+            *c = parts
+                .next()
+                .ok_or_else(|| anyhow::anyhow!("line {}: missing coordinate", i + 3))?
+                .parse::<f64>()
+                .map_err(|e| anyhow::anyhow!("line {}: {e}", i + 3))?
+                * ANGSTROM_TO_BOHR;
+        }
+        atoms.push(Atom { z: element_z(sym)?, pos: coord });
+    }
+    if atoms.len() != n {
+        anyhow::bail!("XYZ declared {n} atoms, found {}", atoms.len());
+    }
+    Ok(Molecule { name: name.to_string(), atoms })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_water_xyz() {
+        let text = "3\nwater\nO 0.0 0.0 0.1173\nH 0.0 0.7572 -0.4692\nH 0.0 -0.7572 -0.4692\n";
+        let m = parse_xyz("water", &text).unwrap();
+        assert_eq!(m.natoms(), 3);
+        assert_eq!(m.atoms[0].z, 8);
+        assert!((m.atoms[1].pos[1] - 0.7572 * ANGSTROM_TO_BOHR).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rejects_truncated_xyz() {
+        let text = "3\nwater\nO 0.0 0.0 0.0\n";
+        assert!(parse_xyz("w", text).is_err());
+    }
+
+    #[test]
+    fn rejects_unknown_element() {
+        let text = "1\nx\nXx 0 0 0\n";
+        assert!(parse_xyz("x", text).is_err());
+    }
+
+    #[test]
+    fn symbol_round_trip() {
+        for z in [1u32, 6, 7, 8, 15, 16] {
+            assert_eq!(element_z(element_symbol(z)).unwrap(), z);
+        }
+    }
+}

@@ -1,0 +1,152 @@
+//! PJRT client wrapper: compile artifacts once, execute blocks from the
+//! SCF hot path, count work for the Workload Allocator and the metrics.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use crate::util::Stopwatch;
+
+use super::manifest::{Manifest, Variant};
+
+/// Result of one ERI block execution.
+pub struct EriExecution {
+    /// contracted ERIs, row-major [batch, ncomp]
+    pub values: Vec<f64>,
+    pub ncomp: usize,
+    /// wall seconds inside PJRT execute (excl. literal marshalling)
+    pub execute_seconds: f64,
+    /// wall seconds marshalling literals in/out of PJRT
+    pub marshal_seconds: f64,
+    /// per-execution cost the Workload Allocator should optimize:
+    /// execute + marshal, but NEVER one-time kernel compilation
+    pub steady_seconds: f64,
+}
+
+/// Runtime statistics (metrics / §Perf reporting).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RuntimeStats {
+    pub executions: u64,
+    pub quadruple_slots: u64,
+    pub compile_seconds: f64,
+    pub execute_seconds: f64,
+    pub marshal_seconds: f64,
+}
+
+/// The PJRT CPU runtime: lazily compiles HLO-text artifacts into loaded
+/// executables, keyed by (class, batch, mode).
+pub struct Runtime {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    executables: HashMap<String, xla::PjRtLoadedExecutable>,
+    pub stats: RuntimeStats,
+}
+
+impl Runtime {
+    pub fn new(artifact_dir: &Path) -> anyhow::Result<Runtime> {
+        let manifest = Manifest::load(artifact_dir)?;
+        let client = xla::PjRtClient::cpu().map_err(anyhow::Error::msg)?;
+        Ok(Runtime { client, manifest, executables: HashMap::new(), stats: RuntimeStats::default() })
+    }
+
+    /// Compile (or fetch) the executable for a variant.
+    fn executable(&mut self, variant: &Variant) -> anyhow::Result<&xla::PjRtLoadedExecutable> {
+        if !self.executables.contains_key(&variant.name) {
+            let sw = Stopwatch::start();
+            let proto = xla::HloModuleProto::from_text_file(
+                variant.file.to_str().expect("artifact path must be utf-8"),
+            )
+            .map_err(anyhow::Error::msg)?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self.client.compile(&comp).map_err(anyhow::Error::msg)?;
+            self.stats.compile_seconds += sw.elapsed_s();
+            self.executables.insert(variant.name.clone(), exe);
+        }
+        Ok(&self.executables[&variant.name])
+    }
+
+    /// Copy of the accumulated runtime statistics.
+    pub fn stats(&self) -> RuntimeStats {
+        self.stats
+    }
+
+    /// Pre-compile every greedy variant (optional warm-up).
+    pub fn warm_up(&mut self) -> anyhow::Result<()> {
+        let variants: Vec<Variant> = self.manifest.variants.clone();
+        for v in variants.iter().filter(|v| v.mode == "greedy") {
+            self.executable(v)?;
+        }
+        Ok(())
+    }
+
+    /// Execute one ERI block through a variant's kernel.
+    ///
+    /// Inputs are the padded pair-data arrays of DESIGN.md layout:
+    /// bra_prim [b,kb,5] | bra_geom [b,6] | ket_prim [b,kk,5] | ket_geom [b,6].
+    pub fn execute_eri(
+        &mut self,
+        variant: &Variant,
+        bra_prim: &[f64],
+        bra_geom: &[f64],
+        ket_prim: &[f64],
+        ket_geom: &[f64],
+    ) -> anyhow::Result<EriExecution> {
+        let b = variant.batch as i64;
+        let (kb, kk) = (variant.kpair_bra as i64, variant.kpair_ket as i64);
+        debug_assert_eq!(bra_prim.len(), (b * kb * 5) as usize);
+        debug_assert_eq!(ket_prim.len(), (b * kk * 5) as usize);
+        debug_assert_eq!(bra_geom.len(), (b * 6) as usize);
+        debug_assert_eq!(ket_geom.len(), (b * 6) as usize);
+
+        let sw = Stopwatch::start();
+        let lit_bp = xla::Literal::vec1(bra_prim).reshape(&[b, kb, 5]).map_err(anyhow::Error::msg)?;
+        let lit_bg = xla::Literal::vec1(bra_geom).reshape(&[b, 6]).map_err(anyhow::Error::msg)?;
+        let lit_kp = xla::Literal::vec1(ket_prim).reshape(&[b, kk, 5]).map_err(anyhow::Error::msg)?;
+        let lit_kg = xla::Literal::vec1(ket_geom).reshape(&[b, 6]).map_err(anyhow::Error::msg)?;
+        let marshal_in = sw.elapsed_s();
+
+        // split borrows: compile first, then time pure execution
+        self.executable(variant)?;
+        let exe = &self.executables[&variant.name];
+        let sw_exec = Stopwatch::start();
+        let result = exe
+            .execute::<xla::Literal>(&[lit_bp, lit_bg, lit_kp, lit_kg])
+            .map_err(anyhow::Error::msg)?[0][0]
+            .to_literal_sync()
+            .map_err(anyhow::Error::msg)?;
+        let execute_seconds = sw_exec.elapsed_s();
+
+        let sw_out = Stopwatch::start();
+        let tuple = result.to_tuple1().map_err(anyhow::Error::msg)?;
+        let values = tuple.to_vec::<f64>().map_err(anyhow::Error::msg)?;
+        let marshal = marshal_in + sw_out.elapsed_s();
+
+        self.stats.executions += 1;
+        self.stats.quadruple_slots += variant.batch as u64;
+        self.stats.execute_seconds += execute_seconds;
+        self.stats.marshal_seconds += marshal;
+        Ok(EriExecution {
+            values,
+            ncomp: variant.ncomp,
+            execute_seconds,
+            marshal_seconds: marshal,
+            steady_seconds: execute_seconds + marshal,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Integration coverage for the full runtime lives in rust/tests/
+    // (requires `make artifacts`); here we test only the pure parts.
+
+    #[test]
+    fn missing_artifact_dir_is_a_clean_error() {
+        let err = match Runtime::new(Path::new("/nonexistent/artifacts")) {
+            Err(e) => e,
+            Ok(_) => panic!("expected an error for a missing artifact dir"),
+        };
+        assert!(err.to_string().contains("make artifacts"), "{err}");
+    }
+}

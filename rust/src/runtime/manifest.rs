@@ -1,0 +1,151 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and the
+//! Rust runtime.  Plain whitespace-separated text (the vendored registry
+//! has no serde), one line per artifact:
+//!
+//!   name la lb lc ld batch kb kk ncomp max_m n_vrr n_hrr max_live
+//!   flops_per_quad bytes_per_quad mode file
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// ERI class key (la, lb, lc, ld), canonical order.
+pub type ClassKey = (u8, u8, u8, u8);
+
+/// One AOT-compiled kernel variant.
+#[derive(Clone, Debug)]
+pub struct Variant {
+    pub name: String,
+    pub class: ClassKey,
+    pub batch: usize,
+    pub kpair_bra: usize,
+    pub kpair_ket: usize,
+    pub ncomp: usize,
+    pub max_m: usize,
+    pub n_vrr: usize,
+    pub n_hrr: usize,
+    pub max_live: usize,
+    pub flops_per_quad: f64,
+    pub bytes_per_quad: f64,
+    /// path-search mode: "greedy" (production) or "random" (ablation)
+    pub mode: String,
+    pub file: PathBuf,
+}
+
+/// Parsed manifest: variants grouped per class.
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    pub variants: Vec<Variant>,
+    by_class: HashMap<ClassKey, Vec<usize>>,
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> anyhow::Result<Manifest> {
+        let path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| anyhow::anyhow!("cannot read {} (run `make artifacts`): {e}", path.display()))?;
+        Self::parse(&text, dir)
+    }
+
+    pub fn parse(text: &str, dir: &Path) -> anyhow::Result<Manifest> {
+        let mut m = Manifest { dir: dir.to_path_buf(), ..Default::default() };
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let f: Vec<&str> = line.split_whitespace().collect();
+            if f.len() != 17 {
+                anyhow::bail!("manifest line {}: expected 17 fields, got {}", lineno + 1, f.len());
+            }
+            let v = Variant {
+                name: f[0].to_string(),
+                class: (f[1].parse()?, f[2].parse()?, f[3].parse()?, f[4].parse()?),
+                batch: f[5].parse()?,
+                kpair_bra: f[6].parse()?,
+                kpair_ket: f[7].parse()?,
+                ncomp: f[8].parse()?,
+                max_m: f[9].parse()?,
+                n_vrr: f[10].parse()?,
+                n_hrr: f[11].parse()?,
+                max_live: f[12].parse()?,
+                flops_per_quad: f[13].parse()?,
+                bytes_per_quad: f[14].parse()?,
+                mode: f[15].to_string(),
+                file: dir.join(f[16]),
+            };
+            m.by_class.entry(v.class).or_default().push(m.variants.len());
+            m.variants.push(v);
+        }
+        if m.variants.is_empty() {
+            anyhow::bail!("manifest has no artifacts");
+        }
+        Ok(m)
+    }
+
+    /// Greedy-path variants of a class, sorted by ascending batch size
+    /// (the Workload Allocator walks this ladder).
+    pub fn ladder(&self, class: ClassKey) -> Vec<&Variant> {
+        let mut out: Vec<&Variant> = self
+            .by_class
+            .get(&class)
+            .map(|idx| idx.iter().map(|&i| &self.variants[i]).collect())
+            .unwrap_or_default();
+        out.retain(|v| v.mode == "greedy");
+        out.sort_by_key(|v| v.batch);
+        out
+    }
+
+    /// The random-path ablation variant of a class, if exported.
+    pub fn random_variant(&self, class: ClassKey) -> Option<&Variant> {
+        self.by_class
+            .get(&class)?
+            .iter()
+            .map(|&i| &self.variants[i])
+            .find(|v| v.mode != "greedy")
+    }
+
+    pub fn classes(&self) -> Vec<ClassKey> {
+        let mut c: Vec<ClassKey> = self.by_class.keys().copied().collect();
+        c.sort();
+        c
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+# matryoshka artifact manifest v1
+# header
+eri_ssss_b32 0 0 0 0 32 9 9 1 0 1 0 5 900.0 800.0 greedy eri_ssss_b32.hlo.txt
+eri_ssss_b512 0 0 0 0 512 9 9 1 0 1 0 5 900.0 800.0 greedy eri_ssss_b512.hlo.txt
+eri_ssss_random1_b512 0 0 0 0 512 9 9 1 0 1 0 5 900.0 800.0 random eri_ssss_random1_b512.hlo.txt
+eri_psss_b32 1 0 0 0 32 9 9 3 1 4 0 9 1500.0 820.0 greedy eri_psss_b32.hlo.txt
+";
+
+    #[test]
+    fn parses_and_groups_variants() {
+        let m = Manifest::parse(SAMPLE, Path::new("/tmp/a")).unwrap();
+        assert_eq!(m.variants.len(), 4);
+        let ladder = m.ladder((0, 0, 0, 0));
+        assert_eq!(ladder.len(), 2);
+        assert!(ladder[0].batch < ladder[1].batch);
+        assert!(m.random_variant((0, 0, 0, 0)).is_some());
+        assert!(m.random_variant((1, 0, 0, 0)).is_none());
+        assert_eq!(m.classes().len(), 2);
+    }
+
+    #[test]
+    fn rejects_malformed_lines() {
+        assert!(Manifest::parse("a b c", Path::new("/tmp")).is_err());
+        assert!(Manifest::parse("# only comments\n", Path::new("/tmp")).is_err());
+    }
+
+    #[test]
+    fn file_paths_are_rooted_at_dir() {
+        let m = Manifest::parse(SAMPLE, Path::new("/x/y")).unwrap();
+        assert!(m.variants[0].file.starts_with("/x/y"));
+    }
+}

@@ -1,0 +1,9 @@
+//! PJRT runtime: load AOT HLO-text artifacts and execute them from the L3
+//! hot path.  Python never runs here — the artifacts directory is the only
+//! interface to the build-time layers.
+
+mod client;
+mod manifest;
+
+pub use client::{EriExecution, Runtime, RuntimeStats};
+pub use manifest::{ClassKey, Manifest, Variant};

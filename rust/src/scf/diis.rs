@@ -1,0 +1,116 @@
+//! DIIS (Pulay) convergence acceleration.
+//!
+//! Extrapolates the Fock matrix from the history of (F, error) pairs with
+//! error e = X᠎ᵀ(FDS − SDF)X, solving the standard augmented-Lagrangian
+//! system with the hand-built Gaussian-elimination solver.
+
+use crate::linalg::{solve, Matrix};
+
+pub struct Diis {
+    max_vecs: usize,
+    focks: Vec<Matrix>,
+    errors: Vec<Matrix>,
+}
+
+impl Diis {
+    pub fn new(max_vecs: usize) -> Self {
+        Diis { max_vecs: max_vecs.max(2), focks: Vec::new(), errors: Vec::new() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.focks.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.focks.is_empty()
+    }
+
+    /// Largest |e_ij| of the latest error — the convergence metric.
+    pub fn last_error_norm(&self) -> f64 {
+        self.errors.last().map(|e| e.max_abs()).unwrap_or(f64::MAX)
+    }
+
+    /// Push a new (Fock, error) pair and return the extrapolated Fock.
+    pub fn extrapolate(&mut self, fock: Matrix, error: Matrix) -> Matrix {
+        self.focks.push(fock);
+        self.errors.push(error);
+        if self.focks.len() > self.max_vecs {
+            self.focks.remove(0);
+            self.errors.remove(0);
+        }
+        let m = self.focks.len();
+        if m < 2 {
+            return self.focks[0].clone();
+        }
+
+        // B c = rhs with B_ij = tr(e_i e_j), Lagrange row/col of -1s.
+        let dim = m + 1;
+        let mut b = Matrix::zeros(dim, dim);
+        for i in 0..m {
+            for j in 0..m {
+                *b.at_mut(i, j) = self.errors[i].dot(&self.errors[j]);
+            }
+        }
+        for i in 0..m {
+            *b.at_mut(i, m) = -1.0;
+            *b.at_mut(m, i) = -1.0;
+        }
+        let mut rhs = vec![0.0; dim];
+        rhs[m] = -1.0;
+
+        match solve(&b, &rhs) {
+            Some(c) => {
+                let n = self.focks[0].nrows();
+                let mut f = Matrix::zeros(n, self.focks[0].ncols());
+                for (ci, fi) in c.iter().take(m).zip(self.focks.iter()) {
+                    f.add_scaled(fi, *ci);
+                }
+                f
+            }
+            // singular B (e.g. duplicated errors): fall back to latest F
+            None => self.focks.last().unwrap().clone(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn first_vector_passes_through() {
+        let mut diis = Diis::new(6);
+        let f = Matrix::identity(3);
+        let e = Matrix::zeros(3, 3);
+        let out = diis.extrapolate(f.clone(), e);
+        assert_eq!(out, f);
+    }
+
+    #[test]
+    fn exact_linear_problem_converges_in_one_extrapolation() {
+        // errors e1 = -e2 => c = (0.5, 0.5) mixes focks equally
+        let mut diis = Diis::new(6);
+        let mut e1 = Matrix::zeros(2, 2);
+        *e1.at_mut(0, 1) = 1.0;
+        let mut e2 = Matrix::zeros(2, 2);
+        *e2.at_mut(0, 1) = -1.0;
+        let mut f1 = Matrix::zeros(2, 2);
+        *f1.at_mut(0, 0) = 2.0;
+        let mut f2 = Matrix::zeros(2, 2);
+        *f2.at_mut(0, 0) = 4.0;
+        diis.extrapolate(f1, e1);
+        let f = diis.extrapolate(f2, e2);
+        assert!((f.at(0, 0) - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn history_is_bounded() {
+        let mut diis = Diis::new(3);
+        for k in 0..10 {
+            let mut e = Matrix::zeros(2, 2);
+            *e.at_mut(0, 0) = 1.0 / (k + 1) as f64;
+            diis.extrapolate(Matrix::identity(2), e);
+        }
+        assert_eq!(diis.len(), 3);
+    }
+}

@@ -1,0 +1,9 @@
+//! Self-consistent-field (restricted Hartree-Fock) driver.
+
+mod diis;
+mod driver;
+mod properties;
+
+pub use diis::Diis;
+pub use driver::{run_rhf, FockEngine, ScfOptions, ScfResult};
+pub use properties::{dipole_matrices, dipole_moment, mulliken_charges};

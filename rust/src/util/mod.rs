@@ -1,0 +1,7 @@
+//! Small shared utilities: deterministic RNG, timing helpers.
+
+mod rng;
+mod timer;
+
+pub use rng::XorShift;
+pub use timer::Stopwatch;

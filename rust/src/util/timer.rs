@@ -1,0 +1,51 @@
+//! Wall-clock stopwatch for the bench harness and the Workload Allocator.
+
+use std::time::Instant;
+
+#[derive(Debug)]
+pub struct Stopwatch {
+    start: Instant,
+}
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Stopwatch { start: Instant::now() }
+    }
+
+    pub fn elapsed_s(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    pub fn elapsed_ms(&self) -> f64 {
+        self.start.elapsed().as_secs_f64() * 1e3
+    }
+
+    pub fn restart(&mut self) -> f64 {
+        let e = self.elapsed_s();
+        self.start = Instant::now();
+        e
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn elapsed_is_monotone() {
+        let sw = Stopwatch::start();
+        let a = sw.elapsed_s();
+        let b = sw.elapsed_s();
+        assert!(b >= a);
+        assert!(a >= 0.0);
+    }
+
+    #[test]
+    fn restart_resets() {
+        let mut sw = Stopwatch::start();
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        let e = sw.restart();
+        assert!(e >= 0.002);
+        assert!(sw.elapsed_s() < e);
+    }
+}

@@ -1,0 +1,254 @@
+//! Property tests over the coordinator's invariants: block-plan coverage
+//! (routing), batching/tuner state, digestion algebra, and linear-algebra
+//! identities — driven by the hand-built mini property framework.
+
+use std::collections::HashSet;
+
+use matryoshka::allocator::{AutoTuner, ClassTuner, TunerDecision};
+use matryoshka::basis::build_basis;
+use matryoshka::constructor::{BlockPlan, PairList, SchwarzMode};
+use matryoshka::fock::digest_eri;
+use matryoshka::integrals::boys;
+use matryoshka::linalg::{eigh, solve, Matrix};
+use matryoshka::molecule::{library, Atom, Molecule};
+use matryoshka::prop_assert;
+use matryoshka::testing::{check, Gen};
+
+/// Random small closed-shell molecule of H/C/O atoms.
+fn random_molecule(g: &mut Gen) -> Molecule {
+    let n = g.usize_in(2, 6);
+    let mut atoms = Vec::new();
+    for _ in 0..n {
+        let z = *g.pick(&[1u32, 6, 8]);
+        atoms.push(Atom {
+            z,
+            pos: [g.f64_in(-4.0, 4.0), g.f64_in(-4.0, 4.0), g.f64_in(-4.0, 4.0)],
+        });
+    }
+    // enforce even electron count by appending one H if needed
+    let mut mol = Molecule::new("prop", atoms);
+    if mol.nelec() % 2 == 1 {
+        mol.atoms.push(Atom { z: 1, pos: [5.0, 5.0, 5.0] });
+    }
+    mol
+}
+
+#[test]
+fn prop_block_plan_enumerates_each_unordered_quadruple_once() {
+    check("plan-coverage", 12, |g| {
+        let mol = random_molecule(g);
+        let basis = build_basis(&mol, "sto-3g").map_err(|e| e.to_string())?;
+        let tile = g.usize_in(2, 80);
+        let clustered = g.bool();
+        let pairs = PairList::build_with_mode(&basis, 0.0, SchwarzMode::Estimate);
+        let plan = BlockPlan::build(&pairs, 0.0, tile, clustered);
+        let p = pairs.len() as u64;
+        prop_assert!(
+            plan.stats.quadruples_surviving == p * (p + 1) / 2,
+            "coverage {} != {}",
+            plan.stats.quadruples_surviving,
+            p * (p + 1) / 2
+        );
+        let mut seen = HashSet::new();
+        for b in &plan.blocks {
+            for &(x, y) in &b.quads {
+                let key = if x >= y { (x, y) } else { (y, x) };
+                prop_assert!(seen.insert(key), "duplicate quadruple {key:?}");
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_blocks_are_class_pure_and_canonical() {
+    check("class-purity", 10, |g| {
+        let mol = random_molecule(g);
+        let basis = build_basis(&mol, "sto-3g").map_err(|e| e.to_string())?;
+        let pairs = PairList::build_with_mode(&basis, 1e-9, SchwarzMode::Estimate);
+        let plan = BlockPlan::build(&pairs, 1e-9, g.usize_in(4, 64), g.bool());
+        for b in &plan.blocks {
+            let (la, lb, lc, ld) = b.class;
+            prop_assert!(la >= lb && lc >= ld && (la, lb) >= (lc, ld), "class {:?}", b.class);
+            for &(p, q) in &b.quads {
+                let bp = &pairs.pairs[p as usize];
+                let kp = &pairs.pairs[q as usize];
+                prop_assert!(
+                    bp.class == (la, lb) && kp.class == (lc, ld),
+                    "block class {:?} vs quad classes {:?} {:?}",
+                    b.class,
+                    bp.class,
+                    kp.class
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_tuner_batch_always_on_ladder_and_converges() {
+    check("tuner-state", 60, |g| {
+        let rungs = g.usize_in(1, 5);
+        let mut ladder: Vec<usize> = (0..rungs).map(|i| 32 << i).collect();
+        ladder.dedup();
+        let mut t = ClassTuner::new((0, 0, 0, 0), ladder.clone());
+        let mut observations = 0;
+        while !t.converged && observations < 1000 {
+            let quads = g.usize_in(1, 2048);
+            let secs = g.f64_in(1e-6, 1e-2);
+            let d = t.observe(quads, secs);
+            prop_assert!(ladder.contains(&t.current_batch()), "off-ladder batch");
+            if t.converged {
+                prop_assert!(
+                    matches!(d, TunerDecision::Converged | TunerDecision::Reverted),
+                    "bad terminal decision {d:?}"
+                );
+            }
+            observations += 1;
+        }
+        prop_assert!(t.converged, "tuner did not converge in 1000 observations");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_disabled_autotuner_is_frozen() {
+    let manifest = matryoshka::runtime::Manifest::parse(
+        "a 0 0 0 0 32 9 9 1 0 1 0 5 9.0 8.0 greedy a\n\
+         b 0 0 0 0 128 9 9 1 0 1 0 5 9.0 8.0 greedy b\n\
+         c 0 0 0 0 512 9 9 1 0 1 0 5 9.0 8.0 greedy c\n",
+        std::path::Path::new("/tmp"),
+    )
+    .unwrap();
+    check("frozen-tuner", 40, |g| {
+        let want = *g.pick(&[32usize, 128, 512, 777]);
+        let mut at = AutoTuner::new(&manifest, false, want);
+        let before = at.batch_for((0, 0, 0, 0));
+        for _ in 0..g.usize_in(1, 20) {
+            at.observe((0, 0, 0, 0), g.usize_in(1, 512), g.f64_in(1e-6, 1e-1));
+        }
+        prop_assert!(at.batch_for((0, 0, 0, 0)) == before, "frozen tuner moved");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_digestion_is_linear_in_the_integral_value() {
+    check("digest-linearity", 30, |g| {
+        let n = g.usize_in(2, 8);
+        let mut d = Matrix::zeros(n, n);
+        for i in 0..n {
+            for j in 0..=i {
+                let v = g.f64_in(-1.0, 1.0);
+                *d.at_mut(i, j) = v;
+                *d.at_mut(j, i) = v;
+            }
+        }
+        let (i, j) = (g.usize_in(0, n - 1), g.usize_in(0, n - 1));
+        let (k, l) = (g.usize_in(0, n - 1), g.usize_in(0, n - 1));
+        let (i, j) = if i >= j { (i, j) } else { (j, i) };
+        let (k, l) = if k >= l { (k, l) } else { (l, k) };
+        let ((i, j), (k, l)) = if (i, j) >= (k, l) { ((i, j), (k, l)) } else { ((k, l), (i, j)) };
+        let (v1, v2) = (g.f64_in(-2.0, 2.0), g.f64_in(-2.0, 2.0));
+
+        let mut g1 = Matrix::zeros(n, n);
+        digest_eri(&mut g1, &d, i, j, k, l, v1);
+        digest_eri(&mut g1, &d, i, j, k, l, v2);
+        let mut g2 = Matrix::zeros(n, n);
+        digest_eri(&mut g2, &d, i, j, k, l, v1 + v2);
+        prop_assert!(g1.diff_norm(&g2) < 1e-12, "digestion not linear: {}", g1.diff_norm(&g2));
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_eigh_reconstructs_random_symmetric_matrices() {
+    check("eigh-reconstruction", 20, |g| {
+        let n = g.usize_in(2, 10);
+        let mut m = Matrix::zeros(n, n);
+        for i in 0..n {
+            for j in 0..=i {
+                let v = g.f64_in(-3.0, 3.0);
+                *m.at_mut(i, j) = v;
+                *m.at_mut(j, i) = v;
+            }
+        }
+        let e = eigh(&m);
+        let mut vd = e.vectors.clone();
+        for j in 0..n {
+            for i in 0..n {
+                *vd.at_mut(i, j) *= e.values[j];
+            }
+        }
+        let rec = vd.matmul_transb(&e.vectors);
+        prop_assert!(rec.diff_norm(&m) < 1e-9 * (n as f64), "||VWV^T - M|| = {}", rec.diff_norm(&m));
+        // eigenvalues sorted
+        for w in e.values.windows(2) {
+            prop_assert!(w[0] <= w[1] + 1e-12, "unsorted eigenvalues");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_solve_residual_is_small_or_none() {
+    check("solve-residual", 30, |g| {
+        let n = g.usize_in(1, 8);
+        let mut a = Matrix::zeros(n, n);
+        for i in 0..n {
+            for j in 0..n {
+                *a.at_mut(i, j) = g.f64_in(-2.0, 2.0);
+            }
+            *a.at_mut(i, i) += 3.0; // diagonally dominant => solvable
+        }
+        let b = g.vec_f64(n, -1.0, 1.0);
+        let x = solve(&a, &b).ok_or("unexpected singular")?;
+        for i in 0..n {
+            let mut r = -b[i];
+            for j in 0..n {
+                r += a.at(i, j) * x[j];
+            }
+            prop_assert!(r.abs() < 1e-9, "residual {r}");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_boys_recursion_holds_for_random_arguments() {
+    check("boys-recursion", 100, |g| {
+        let t = g.f64_in(0.0, 150.0);
+        let mmax = g.usize_in(1, 10);
+        let mut f = vec![0.0; mmax + 1];
+        boys(mmax, t, &mut f);
+        for m in 1..=mmax {
+            let lhs = f[m - 1];
+            let rhs = (2.0 * t * f[m] + (-t).exp()) / (2.0 * m as f64 - 1.0);
+            prop_assert!(
+                (lhs - rhs).abs() < 1e-10 * lhs.abs().max(1e-12),
+                "recursion broken at m={m}, t={t}"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_screening_is_monotone_in_threshold() {
+    check("screening-monotone", 8, |g| {
+        let n = g.usize_in(4, 12);
+        let mol = library::water_cluster(n);
+        let basis = build_basis(&mol, "sto-3g").map_err(|e| e.to_string())?;
+        let pairs = PairList::build_with_mode(&basis, 0.0, SchwarzMode::Estimate);
+        let t1 = 10f64.powf(g.f64_in(-14.0, -10.0));
+        let t2 = t1 * 10f64.powf(g.f64_in(1.0, 4.0));
+        let loose = BlockPlan::build(&pairs, t2, 64, true);
+        let tight = BlockPlan::build(&pairs, t1, 64, true);
+        prop_assert!(
+            loose.stats.quadruples_surviving <= tight.stats.quadruples_surviving,
+            "screening not monotone"
+        );
+        Ok(())
+    });
+}
