@@ -12,7 +12,6 @@ use matryoshka::engines::MatryoshkaConfig;
 use matryoshka::scf::FockEngine;
 
 fn main() {
-    let Some(dir) = common::artifact_dir() else { return };
     bh::header("Fig. 10 — lane utilization per ERI class (clustered vs unclustered)");
     for name in ["chignolin", "crambin"] {
         let (_, basis) = common::system(name);
@@ -20,14 +19,12 @@ fn main() {
 
         let mut baseline = common::engine(
             basis.clone(),
-            &dir,
             MatryoshkaConfig { clustered: false, autotune: false, fixed_batch: 128, ..Default::default() },
         );
         baseline.two_electron(&d).expect("unclustered build");
 
         let mut clustered = common::engine(
             basis.clone(),
-            &dir,
             MatryoshkaConfig { autotune: false, fixed_batch: 128, ..Default::default() },
         );
         clustered.two_electron(&d).expect("clustered build");

@@ -16,7 +16,6 @@ use matryoshka::scf::FockEngine;
 use matryoshka::util::Stopwatch;
 
 fn main() {
-    let Some(dir) = common::artifact_dir() else { return };
     let full = common::full_mode();
     let systems: Vec<&str> = if full {
         vec!["chignolin", "dna", "crambin", "collagen", "trna", "pepsin"]
@@ -34,7 +33,7 @@ fn main() {
         let (_, basis) = common::system(name);
         let d = common::test_density(basis.nbf);
 
-        let mut m = common::engine(basis.clone(), &dir, MatryoshkaConfig::default());
+        let mut m = common::engine(basis.clone(), MatryoshkaConfig::default());
         common::warm_until_converged(&mut m, &d, 4);
         let sw = Stopwatch::start();
         m.two_electron(&d).expect("measured");
@@ -42,7 +41,6 @@ fn main() {
 
         let mut s = common::engine(
             basis.clone(),
-            &dir,
             MatryoshkaConfig { autotune: false, fixed_batch: 128, clustered: true, ..Default::default() },
         );
         s.two_electron(&d).expect("warm");

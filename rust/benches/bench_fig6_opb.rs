@@ -11,11 +11,10 @@ use matryoshka::runtime::Manifest;
 use matryoshka::scf::FockEngine;
 
 fn main() {
-    let Some(dir) = common::artifact_dir() else { return };
-    let manifest = Manifest::load(&dir).expect("manifest");
+    let manifest: Manifest = common::catalog();
     let (_, basis) = common::system("chignolin");
     let d = common::test_density(basis.nbf);
-    let mut engine = common::engine(basis.clone(), &dir, MatryoshkaConfig::default());
+    let mut engine = common::engine(basis.clone(), MatryoshkaConfig::default());
     engine.two_electron(&d).expect("warm");
     engine.metrics = Default::default();
     engine.two_electron(&d).expect("measured");

@@ -15,7 +15,6 @@ use matryoshka::scf::FockEngine;
 use matryoshka::util::Stopwatch;
 
 fn main() {
-    let Some(dir) = common::artifact_dir() else { return };
     // the unclustered Base config costs O(100x) the clustered ones: the
     // default roster is chignolin (~2 min); FULL=1 runs all six (hours)
     let systems: Vec<&str> = if common::full_mode() {
@@ -37,7 +36,7 @@ fn main() {
             ("+BC+GC+WA (Combination)", true, true, true),
         ] {
             let config = MatryoshkaConfig::ablation(bc, gc, wa);
-            let mut engine = common::engine(basis.clone(), &dir, config);
+            let mut engine = common::engine(basis.clone(), config);
             common::warm_until_converged(&mut engine, &d, 4);
             let sw = Stopwatch::start();
             engine.two_electron(&d).expect("measured build");

@@ -15,7 +15,6 @@ use matryoshka::engines::{MatryoshkaConfig, ReferenceEngine};
 use matryoshka::scf::{run_rhf, ScfOptions};
 
 fn main() {
-    let Some(dir) = common::artifact_dir() else { return };
     let full = common::full_mode();
     let systems: Vec<&str> = if full {
         vec!["water", "benzene", "water-10", "methanol-7", "c60"]
@@ -35,11 +34,11 @@ fn main() {
         let (mol, basis) = common::system(name);
 
         let config = MatryoshkaConfig { stored: true, ..Default::default() };
-        let mut engine = common::engine(basis.clone(), &dir, config);
+        let mut engine = common::engine(basis.clone(), config);
         let res = run_rhf(&mol, &basis, &mut engine, &opts).expect("matryoshka scf");
 
         let config_static = MatryoshkaConfig { stored: true, autotune: false, ..Default::default() };
-        let mut engine_static = common::engine(basis.clone(), &dir, config_static);
+        let mut engine_static = common::engine(basis.clone(), config_static);
         let res_static =
             run_rhf(&mol, &basis, &mut engine_static, &opts).expect("static scf");
 

@@ -1,6 +1,12 @@
 #![allow(dead_code)] // shared across bench targets; each uses a subset
 
 //! Shared helpers for the bench targets.
+//!
+//! Benches default to the native backend (no artifacts, no XLA) so
+//! `cargo bench` works on a bare checkout.  Set `MATRYOSHKA_BACKEND=pjrt`
+//! (with `--features pjrt` and a compiled artifacts/ directory) to measure
+//! the PJRT path instead; `MATRYOSHKA_THREADS=N` pins the Fock worker
+//! count (default: all cores).
 
 use std::path::{Path, PathBuf};
 
@@ -9,14 +15,21 @@ use matryoshka::constructor::SchwarzMode;
 use matryoshka::engines::{MatryoshkaConfig, MatryoshkaEngine};
 use matryoshka::linalg::Matrix;
 use matryoshka::molecule::{library, Molecule};
+use matryoshka::runtime::{BackendKind, EriBackend, Manifest, NativeBackend};
 
 pub fn artifact_dir() -> Option<PathBuf> {
     let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    if dir.join("manifest.txt").exists() {
-        Some(dir)
-    } else {
-        eprintln!("SKIP: artifacts/ missing — run `make artifacts` first");
-        None
+    dir.join("manifest.txt").exists().then_some(dir)
+}
+
+/// Variant catalog for per-class cost-model reporting: the real artifact
+/// manifest when one is compiled, else the native synthetic catalog.
+/// A manifest that exists but fails to parse is a real error — never
+/// silently report synthetic numbers as artifact statistics.
+pub fn catalog() -> Manifest {
+    match artifact_dir() {
+        Some(dir) => Manifest::load(&dir).expect("artifacts/manifest.txt exists but failed to parse"),
+        None => NativeBackend::new().manifest().clone(),
     }
 }
 
@@ -40,10 +53,25 @@ pub fn test_density(n: usize) -> Matrix {
     d
 }
 
-/// Build an engine with the bench defaults (estimate Schwarz for speed).
-pub fn engine(basis: BasisSet, dir: &Path, mut config: MatryoshkaConfig) -> MatryoshkaEngine {
+/// Build an engine with the bench defaults (estimate Schwarz for speed,
+/// backend/threads from the environment — see module docs).
+/// `MATRYOSHKA_THREADS` only applies when the bench left `threads` at the
+/// default 0 — benches that pin a thread count (e.g. the Fig. 13 scaling
+/// sections, which *measure* thread counts) keep their explicit setting.
+pub fn engine(basis: BasisSet, mut config: MatryoshkaConfig) -> MatryoshkaEngine {
     config.schwarz = SchwarzMode::Estimate;
-    MatryoshkaEngine::new(basis, dir, config).expect("engine")
+    if config.threads == 0 {
+        if let Ok(t) = std::env::var("MATRYOSHKA_THREADS") {
+            config.threads = t.parse().expect("MATRYOSHKA_THREADS must be a number");
+        }
+    }
+    let dir = if std::env::var("MATRYOSHKA_BACKEND").as_deref() == Ok("pjrt") {
+        config.backend = BackendKind::Pjrt;
+        artifact_dir().expect("MATRYOSHKA_BACKEND=pjrt needs artifacts/ (run `make artifacts`)")
+    } else {
+        PathBuf::from("unused")
+    };
+    MatryoshkaEngine::new(basis, &dir, config).expect("engine")
 }
 
 /// Warm an engine until the Workload Allocator has converged (or `cap`

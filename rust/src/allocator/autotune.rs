@@ -61,8 +61,22 @@ impl ClassTuner {
 
     /// Feed one execution's (quadruples, wall seconds); returns decision.
     pub fn observe(&mut self, quads: usize, seconds: f64) -> TunerDecision {
+        self.observe_at(self.current_batch(), quads, seconds)
+    }
+
+    /// Feed one execution observed while rung `batch` was the tuner's
+    /// choice.  The parallel Fock pipeline freezes the rung per SCF
+    /// iteration and merges worker observations afterwards; if the tuner
+    /// moves (Combine/Revert) mid-merge, the remaining observations of the
+    /// stale rung are discarded instead of polluting the new rung — this
+    /// keeps Algorithm 2's decisions well-defined under deferred,
+    /// thread-sharded observation.
+    pub fn observe_at(&mut self, batch: usize, quads: usize, seconds: f64) -> TunerDecision {
         if self.converged || quads == 0 {
             return TunerDecision::Converged;
+        }
+        if batch != self.current_batch() {
+            return TunerDecision::Measuring;
         }
         let spq = seconds / quads as f64;
         self.history.push((self.current_batch(), spq));
@@ -94,6 +108,20 @@ impl ClassTuner {
     pub fn best_spq(&self) -> f64 {
         self.best[self.idx]
     }
+}
+
+/// One execution's worth of tuner evidence, recorded by a Fock worker and
+/// merged into the [`AutoTuner`] after the parallel section (per-worker
+/// tuner shards, merged per iteration).
+#[derive(Clone, Copy, Debug)]
+pub struct TunerObservation {
+    pub class: ClassKey,
+    /// the rung (batch) the tuner had chosen when the iteration started
+    pub batch: usize,
+    /// real (non-padding) quadruples in the execution
+    pub quads: usize,
+    /// steady-state wall seconds of the execution
+    pub seconds: f64,
 }
 
 /// The online auto-tuner over all ERI classes.
@@ -154,6 +182,28 @@ impl AutoTuner {
             .get_mut(&class)
             .map(|t| t.observe(quads, seconds))
             .unwrap_or(TunerDecision::Converged)
+    }
+
+    /// Frozen per-class batch choices for one SCF iteration.  Workers read
+    /// this snapshot instead of the live tuner, so an N-thread build packs
+    /// exactly the chunks a 1-thread build would.
+    pub fn batch_snapshot(&self) -> std::collections::BTreeMap<ClassKey, usize> {
+        self.tuners.iter().map(|(c, t)| (*c, t.current_batch())).collect()
+    }
+
+    /// Merge one iteration's worth of sharded observations, in the
+    /// deterministic order the caller provides (unit order, then block
+    /// order).  Observations recorded under a rung the tuner has since
+    /// left are discarded (see [`ClassTuner::observe_at`]).
+    pub fn apply_observations(&mut self, observations: &[TunerObservation]) {
+        if !self.enabled {
+            return;
+        }
+        for ob in observations {
+            if let Some(t) = self.tuners.get_mut(&ob.class) {
+                t.observe_at(ob.batch, ob.quads, ob.seconds);
+            }
+        }
     }
 
     pub fn tuner(&self, class: ClassKey) -> Option<&ClassTuner> {
@@ -226,6 +276,46 @@ mod tests {
         assert_eq!(at.batch_for((0, 0, 0, 0)), 512);
         at.observe((0, 0, 0, 0), 512, 1.0);
         assert_eq!(at.batch_for((0, 0, 0, 0)), 512); // never moves
+    }
+
+    #[test]
+    fn stale_rung_observations_are_discarded_after_a_move() {
+        let mut t = tuner(&[32, 128, 512]);
+        // climb off rung 32 with good samples
+        for _ in 0..SAMPLES_PER_RUNG {
+            t.observe_at(32, 32, 32.0 * 10e-6);
+        }
+        assert_eq!(t.current_batch(), 128);
+        // leftover iteration observations still tagged with rung 32 must
+        // not count toward rung 128's judgement
+        for _ in 0..SAMPLES_PER_RUNG {
+            assert_eq!(t.observe_at(32, 32, 1.0), TunerDecision::Measuring);
+        }
+        assert_eq!(t.current_batch(), 128);
+        assert!(!t.converged);
+    }
+
+    #[test]
+    fn sharded_apply_matches_sequential_observe() {
+        let manifest = crate::runtime::Manifest::parse(
+            "eri_ssss_b32 0 0 0 0 32 9 9 1 0 1 0 5 9.0 8.0 greedy a\n\
+             eri_ssss_b128 0 0 0 0 128 9 9 1 0 1 0 5 9.0 8.0 greedy b\n",
+            std::path::Path::new("/tmp"),
+        )
+        .unwrap();
+        let class = (0, 0, 0, 0);
+        let mut sharded = AutoTuner::new(&manifest, true, 32);
+        let mut sequential = AutoTuner::new(&manifest, true, 32);
+
+        let obs: Vec<TunerObservation> = (0..SAMPLES_PER_RUNG)
+            .map(|_| TunerObservation { class, batch: 32, quads: 32, seconds: 32.0 * 5e-6 })
+            .collect();
+        for ob in &obs {
+            sequential.observe(ob.class, ob.quads, ob.seconds);
+        }
+        sharded.apply_observations(&obs);
+        assert_eq!(sharded.batch_for(class), sequential.batch_for(class));
+        assert_eq!(sharded.batch_snapshot()[&class], sharded.batch_for(class));
     }
 
     #[test]

@@ -10,7 +10,13 @@
 //! basic workload, and after each real execution the observed wall time
 //! per quadruple decides whether to Combine() to the next variant or
 //! Revert().  Tuning rides on the production stream — no warm-up runs.
+//!
+//! Thread-awareness: the parallel Fock pipeline freezes each class's rung
+//! per SCF iteration (`AutoTuner::batch_snapshot`), workers record
+//! [`TunerObservation`] shards, and the engine merges them in a
+//! deterministic order afterwards (`AutoTuner::apply_observations`) —
+//! Algorithm 2 never runs concurrently with itself.
 
 mod autotune;
 
-pub use autotune::{AutoTuner, ClassTuner, TunerDecision};
+pub use autotune::{AutoTuner, ClassTuner, TunerDecision, TunerObservation};

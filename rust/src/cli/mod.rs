@@ -70,6 +70,17 @@ impl Args {
     pub fn flag(&self, key: &str) -> bool {
         matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
     }
+
+    /// Enumerated option: the value (or `default`) must be one of
+    /// `allowed`, with a helpful error listing the alternatives.
+    pub fn choice(&self, key: &str, default: &str, allowed: &[&str]) -> anyhow::Result<String> {
+        let v = self.str_or(key, default);
+        if allowed.contains(&v.as_str()) {
+            Ok(v)
+        } else {
+            anyhow::bail!("--{key}: unknown value `{v}` (available: {})", allowed.join(", "))
+        }
+    }
 }
 
 #[cfg(test)]
@@ -115,5 +126,15 @@ mod tests {
     fn bad_number_is_error() {
         let a = parse("--tile abc");
         assert!(a.usize_or("tile", 0).is_err());
+    }
+
+    #[test]
+    fn choice_validates_against_the_allowed_set() {
+        let a = parse("--backend native");
+        assert_eq!(a.choice("backend", "native", &["native", "pjrt"]).unwrap(), "native");
+        assert_eq!(a.choice("schwarz", "estimate", &["exact", "estimate"]).unwrap(), "estimate");
+        let bad = parse("--backend tpu");
+        let err = bad.choice("backend", "native", &["native", "pjrt"]).unwrap_err();
+        assert!(err.to_string().contains("native, pjrt"), "{err}");
     }
 }

@@ -1,5 +1,14 @@
-//! The Matryoshka engine: Block Constructor → PJRT kernels → Workload
+//! The Matryoshka engine: Block Constructor → ERI backend → Workload
 //! Allocator → Fock digestion, orchestrated from the Rust hot path.
+//!
+//! The ERI evaluation is pluggable ([`EriBackend`]): the pure-Rust native
+//! backend is the always-available default, the PJRT artifact path lives
+//! behind the `pjrt` cargo feature.  The Fock build itself is parallel:
+//! quadruple blocks are dependency-free, so they are sharded across a
+//! worker pool, each worker digesting into its own partial G with its own
+//! reusable gather scratch, and the partials are merged through the
+//! deterministic accumulator path of `fock::accumulate` — an N-thread
+//! build is bitwise-identical to a 1-thread build.
 //!
 //! Every paper ablation is a configuration of this engine:
 //!
@@ -11,15 +20,18 @@
 //! | −Block Constructor   | clustered = false (divergent stream)          |
 //! | QUICK-analog         | clustered + greedy_path, autotune = false     |
 
+use std::collections::BTreeMap;
 use std::path::Path;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc;
 
-use crate::allocator::AutoTuner;
+use crate::allocator::{AutoTuner, TunerObservation};
 use crate::basis::BasisSet;
-use crate::constructor::{BlockPlan, PairList, QuadBlock, SchwarzMode, KPAIR};
-use crate::fock::digest_block;
+use crate::constructor::{BlockPlan, PairList, SchwarzMode, KPAIR};
+use crate::fock::{digest_block, merge_partials, merge_unit_count, unit_ranges};
 use crate::linalg::Matrix;
 use crate::metrics::EngineMetrics;
-use crate::runtime::{ClassKey, Runtime, Variant};
+use crate::runtime::{create_backend, BackendKind, ClassKey, EriBackend, Variant};
 use crate::scf::FockEngine;
 use crate::util::Stopwatch;
 
@@ -42,6 +54,11 @@ pub struct MatryoshkaConfig {
     pub stored: bool,
     /// Schwarz bound mode: Exact (small systems/tests) or Estimate (fast)
     pub schwarz: SchwarzMode,
+    /// which ERI execution backend evaluates the chunks
+    pub backend: BackendKind,
+    /// Fock-build worker threads; 0 = one per available hardware thread.
+    /// The thread count never changes results (deterministic merge).
+    pub threads: usize,
 }
 
 impl Default for MatryoshkaConfig {
@@ -55,6 +72,8 @@ impl Default for MatryoshkaConfig {
             fixed_batch: 512,
             stored: false,
             schwarz: SchwarzMode::Exact,
+            backend: BackendKind::Native,
+            threads: 0,
         }
     }
 }
@@ -73,68 +92,146 @@ struct CachedBlock {
     ncomp: usize,
 }
 
-pub struct MatryoshkaEngine {
-    pub basis: BasisSet,
-    pub config: MatryoshkaConfig,
-    runtime: Runtime,
-    pairs: PairList,
-    plan: BlockPlan,
-    tuner: AutoTuner,
-    pub metrics: EngineMetrics,
-    cache: Vec<CachedBlock>,
-    cache_complete: bool,
-    eri_seconds: f64,
+/// Reusable per-worker gather buffers (hoisted out of the chunk loop so a
+/// Fock build performs O(workers) allocations instead of O(chunks)).
+#[derive(Default)]
+struct GatherScratch {
+    bp: Vec<f64>,
+    bg: Vec<f64>,
+    kp: Vec<f64>,
+    kg: Vec<f64>,
 }
 
-impl MatryoshkaEngine {
-    pub fn new(basis: BasisSet, artifact_dir: &Path, config: MatryoshkaConfig) -> anyhow::Result<Self> {
-        let runtime = Runtime::new(artifact_dir)?;
-        let pairs = PairList::build_with_mode(&basis, config.threshold, config.schwarz);
-        let plan = BlockPlan::build(&pairs, config.threshold, config.tile, config.clustered);
-        let tuner = AutoTuner::new(&runtime.manifest, config.autotune, config.fixed_batch);
-        Ok(MatryoshkaEngine {
-            basis,
-            config,
-            runtime,
-            pairs,
-            plan,
-            tuner,
+/// Everything a Fock worker needs, borrowed immutably so one context is
+/// shared by all workers.  Mutation happens only on worker-local
+/// [`UnitResult`]s, merged deterministically afterwards.
+struct BlockContext<'a> {
+    basis: &'a BasisSet,
+    pairs: &'a PairList,
+    plan: &'a BlockPlan,
+    backend: &'a dyn EriBackend,
+    greedy_path: bool,
+    fixed_batch: usize,
+    /// per-class rung frozen for this iteration (tuner snapshot)
+    batches: &'a BTreeMap<ClassKey, usize>,
+}
+
+/// Worker-local accumulator for one merge unit.
+struct UnitResult {
+    g: Matrix,
+    metrics: EngineMetrics,
+    observations: Vec<TunerObservation>,
+    cache: Vec<CachedBlock>,
+}
+
+impl UnitResult {
+    fn new(n: usize) -> UnitResult {
+        UnitResult {
+            g: Matrix::zeros(n, n),
             metrics: EngineMetrics::default(),
+            observations: Vec::new(),
             cache: Vec::new(),
-            cache_complete: false,
-            eri_seconds: 0.0,
-        })
+        }
+    }
+}
+
+/// Run `nunits` work items over the pool with work stealing, returning
+/// each item's payload in unit order (shared scaffolding of the direct
+/// and cached Fock paths).  `f` receives the unit index plus a
+/// worker-local scratch state (`S::default()` once per worker).
+fn run_units_ordered<T, S, F>(
+    pool: &rayon::ThreadPool,
+    workers: usize,
+    nunits: usize,
+    f: F,
+) -> Vec<Option<T>>
+where
+    T: Send,
+    S: Default,
+    F: Fn(usize, &mut S) -> T + Sync,
+{
+    let next = AtomicUsize::new(0);
+    let (tx, rx) = mpsc::channel::<(usize, T)>();
+    {
+        let (f, next) = (&f, &next);
+        // `move` hands the Sender to the op closure (Sender is Send but
+        // not Sync); each worker task gets its own clone, and the
+        // original drops when the op body ends, so `rx` disconnects once
+        // the last worker finishes.
+        pool.scope(move |s| {
+            for _ in 0..workers {
+                let tx = tx.clone();
+                s.spawn(move |_| {
+                    let mut state = S::default();
+                    loop {
+                        let u = next.fetch_add(1, Ordering::Relaxed);
+                        if u >= nunits {
+                            break;
+                        }
+                        let payload = f(u, &mut state);
+                        if tx.send((u, payload)).is_err() {
+                            break;
+                        }
+                    }
+                });
+            }
+        });
+    }
+    let mut slots: Vec<Option<T>> = (0..nunits).map(|_| None).collect();
+    for (u, payload) in rx {
+        slots[u] = Some(payload);
+    }
+    slots
+}
+
+/// Digest one executed chunk into `g` (shared by direct and cached paths).
+fn digest_chunk_into(
+    basis: &BasisSet,
+    pairs: &PairList,
+    g: &mut Matrix,
+    d: &Matrix,
+    quads: &[(u32, u32)],
+    values: &[f64],
+    ncomp: usize,
+) {
+    for (r, &(pidx, qidx)) in quads.iter().enumerate() {
+        let bra = &pairs.pairs[pidx as usize];
+        let ket = &pairs.pairs[qidx as usize];
+        let (sa, sb) = (&basis.shells[bra.si], &basis.shells[bra.sj]);
+        let (sc, sd) = (&basis.shells[ket.si], &basis.shells[ket.sj]);
+        digest_block(
+            g,
+            d,
+            sa,
+            sb,
+            sc,
+            sd,
+            bra.si == bra.sj,
+            ket.si == ket.sj,
+            pidx == qidx,
+            &values[r * ncomp..(r + 1) * ncomp],
+        );
+    }
+}
+
+impl BlockContext<'_> {
+    /// Rung frozen for this iteration.
+    fn batch_for(&self, class: ClassKey) -> usize {
+        self.batches.get(&class).copied().unwrap_or(self.fixed_batch)
     }
 
-    pub fn plan(&self) -> &BlockPlan {
-        &self.plan
-    }
-
-    pub fn pair_list(&self) -> &PairList {
-        &self.pairs
-    }
-
-    pub fn tuner(&self) -> &AutoTuner {
-        &self.tuner
-    }
-
-    pub fn runtime_stats(&self) -> crate::runtime::RuntimeStats {
-        self.runtime.stats()
-    }
-
-    /// Select the kernel variant for a class at the current tuner state;
+    /// Select the kernel variant for a class at the frozen tuner state;
     /// `remaining` allows tail chunks to downshift to a snug variant.
     fn variant_for(&self, class: ClassKey, want_batch: usize, remaining: usize) -> anyhow::Result<Variant> {
-        if !self.config.greedy_path {
+        let manifest = self.backend.manifest();
+        if !self.greedy_path {
             // Graph-Compiler ablation: random-path artifact (fixed batch)
-            return self
-                .runtime
-                .manifest
+            return manifest
                 .random_variant(class)
                 .cloned()
                 .ok_or_else(|| anyhow::anyhow!("no random-path artifact for class {class:?}"));
         }
-        let ladder = self.runtime.manifest.ladder(class);
+        let ladder = manifest.ladder(class);
         let batch = if remaining < want_batch {
             // smallest rung that still holds the tail in one execution
             ladder
@@ -154,88 +251,78 @@ impl MatryoshkaEngine {
             .ok_or_else(|| anyhow::anyhow!("no kernel variant for class {class:?}"))
     }
 
-    /// Gather the padded input buffers for a chunk of quadruples.
-    fn gather(&self, quads: &[(u32, u32)], batch: usize) -> (Vec<f64>, Vec<f64>, Vec<f64>, Vec<f64>) {
+    /// Gather the padded input buffers for a chunk into reusable scratch.
+    fn gather(&self, quads: &[(u32, u32)], batch: usize, s: &mut GatherScratch) {
         let k = KPAIR;
-        let mut bp = vec![0.0; batch * k * 5];
-        let mut bg = vec![0.0; batch * 6];
-        let mut kp = vec![0.0; batch * k * 5];
-        let mut kg = vec![0.0; batch * 6];
+        s.bp.clear();
+        s.bp.resize(batch * k * 5, 0.0);
+        s.bg.clear();
+        s.bg.resize(batch * 6, 0.0);
+        s.kp.clear();
+        s.kp.resize(batch * k * 5, 0.0);
+        s.kg.clear();
+        s.kg.resize(batch * 6, 0.0);
         // padding rows must keep p finite (Kab = 0 makes them exact zeros)
         for r in quads.len()..batch {
             for kk in 0..k {
-                bp[(r * k + kk) * 5] = 1.0;
-                kp[(r * k + kk) * 5] = 1.0;
+                s.bp[(r * k + kk) * 5] = 1.0;
+                s.kp[(r * k + kk) * 5] = 1.0;
             }
         }
         for (r, &(pidx, qidx)) in quads.iter().enumerate() {
             let bra = &self.pairs.pairs[pidx as usize];
             let ket = &self.pairs.pairs[qidx as usize];
-            bp[r * k * 5..(r + 1) * k * 5].copy_from_slice(&bra.prim);
-            kp[r * k * 5..(r + 1) * k * 5].copy_from_slice(&ket.prim);
-            bg[r * 6..(r + 1) * 6].copy_from_slice(&bra.geom);
-            kg[r * 6..(r + 1) * 6].copy_from_slice(&ket.geom);
-        }
-        (bp, bg, kp, kg)
-    }
-
-    /// Digest one executed chunk into G.
-    fn digest_chunk(&self, g: &mut Matrix, d: &Matrix, quads: &[(u32, u32)], values: &[f64], ncomp: usize) {
-        for (r, &(pidx, qidx)) in quads.iter().enumerate() {
-            let bra = &self.pairs.pairs[pidx as usize];
-            let ket = &self.pairs.pairs[qidx as usize];
-            let (sa, sb) = (&self.basis.shells[bra.si], &self.basis.shells[bra.sj]);
-            let (sc, sd) = (&self.basis.shells[ket.si], &self.basis.shells[ket.sj]);
-            digest_block(
-                g,
-                d,
-                sa,
-                sb,
-                sc,
-                sd,
-                bra.si == bra.sj,
-                ket.si == ket.sj,
-                pidx == qidx,
-                &values[r * ncomp..(r + 1) * ncomp],
-            );
+            s.bp[r * k * 5..(r + 1) * k * 5].copy_from_slice(&bra.prim);
+            s.kp[r * k * 5..(r + 1) * k * 5].copy_from_slice(&ket.prim);
+            s.bg[r * 6..(r + 1) * 6].copy_from_slice(&bra.geom);
+            s.kg[r * 6..(r + 1) * 6].copy_from_slice(&ket.geom);
         }
     }
 
-    /// Execute the quadruples of `block`, digest into `g`, optionally cache.
+    /// Execute the quadruples of one block, digest into the unit's partial
+    /// G, record metrics + tuner evidence, optionally collect cache data.
     fn run_block(
-        &mut self,
-        g: &mut Matrix,
+        &self,
+        out: &mut UnitResult,
         d: &Matrix,
         block_idx: usize,
         cache_values: bool,
+        scratch: &mut GatherScratch,
     ) -> anyhow::Result<()> {
-        let block: QuadBlock = self.plan.blocks[block_idx].clone();
+        let block = &self.plan.blocks[block_idx];
+        let want_batch = self.batch_for(block.class);
         let mut offset = 0;
         let mut stored_values: Vec<f64> = Vec::new();
         let mut stored_ncomp = 0;
         while offset < block.quads.len() {
             let remaining = block.quads.len() - offset;
-            let batch = self.tuner.batch_for(block.class);
             // tail fitting (§Perf L3): the last chunk of a block uses the
             // smallest variant that holds it instead of padding the tuned
             // batch — cuts padded-lane waste on block tails
-            let variant = self.variant_for(block.class, batch, remaining)?;
+            let variant = self.variant_for(block.class, want_batch, remaining)?;
             let n = remaining.min(variant.batch);
             let chunk = &block.quads[offset..offset + n];
 
             let sw = Stopwatch::start();
-            let (bp, bg, kp, kg) = self.gather(chunk, variant.batch);
-            self.metrics.gather_seconds += sw.elapsed_s();
+            self.gather(chunk, variant.batch, scratch);
+            out.metrics.gather_seconds += sw.elapsed_s();
 
-            let exec = self.runtime.execute_eri(&variant, &bp, &bg, &kp, &kg)?;
+            let exec = self
+                .backend
+                .execute_eri(&variant, &scratch.bp, &scratch.bg, &scratch.kp, &scratch.kg)?;
             // steady-state cost only: one-time kernel compilation must not
             // poison Algorithm 2's combine/revert decisions or Fig. 12
-            self.metrics.record(block.class, n, variant.batch, exec.steady_seconds);
-            self.tuner.observe(block.class, n, exec.steady_seconds);
+            out.metrics.record(block.class, n, variant.batch, exec.steady_seconds);
+            out.observations.push(TunerObservation {
+                class: block.class,
+                batch: want_batch,
+                quads: n,
+                seconds: exec.steady_seconds,
+            });
 
             let sw = Stopwatch::start();
-            self.digest_chunk(g, d, chunk, &exec.values, exec.ncomp);
-            self.metrics.digest_seconds += sw.elapsed_s();
+            digest_chunk_into(self.basis, self.pairs, &mut out.g, d, chunk, &exec.values, exec.ncomp);
+            out.metrics.digest_seconds += sw.elapsed_s();
 
             if cache_values {
                 stored_ncomp = exec.ncomp;
@@ -244,18 +331,201 @@ impl MatryoshkaEngine {
             offset += n;
         }
         if cache_values {
-            self.cache.push(CachedBlock { block_idx, values: stored_values, ncomp: stored_ncomp });
+            out.cache.push(CachedBlock { block_idx, values: stored_values, ncomp: stored_ncomp });
         }
         Ok(())
     }
+}
 
-    /// Build G over a subset of blocks (weak-scaling shards, Fig. 13).
+pub struct MatryoshkaEngine {
+    pub basis: BasisSet,
+    pub config: MatryoshkaConfig,
+    backend: Box<dyn EriBackend>,
+    pairs: PairList,
+    plan: BlockPlan,
+    tuner: AutoTuner,
+    pub metrics: EngineMetrics,
+    cache: Vec<CachedBlock>,
+    cache_complete: bool,
+    eri_seconds: f64,
+    pool: rayon::ThreadPool,
+    threads: usize,
+}
+
+impl MatryoshkaEngine {
+    pub fn new(basis: BasisSet, artifact_dir: &Path, config: MatryoshkaConfig) -> anyhow::Result<Self> {
+        let backend = create_backend(config.backend, artifact_dir)?;
+        Self::with_backend(basis, backend, config)
+    }
+
+    /// Build over an already-constructed backend (tests, custom backends).
+    pub fn with_backend(
+        basis: BasisSet,
+        backend: Box<dyn EriBackend>,
+        config: MatryoshkaConfig,
+    ) -> anyhow::Result<Self> {
+        let pairs = PairList::build_with_mode(&basis, config.threshold, config.schwarz);
+        let plan = BlockPlan::build(&pairs, config.threshold, config.tile, config.clustered);
+        let tuner = AutoTuner::new(backend.manifest(), config.autotune, config.fixed_batch);
+        let threads = if config.threads == 0 {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        } else {
+            config.threads
+        };
+        let pool = rayon::ThreadPoolBuilder::new()
+            .num_threads(threads)
+            .build()
+            .map_err(anyhow::Error::msg)?;
+        Ok(MatryoshkaEngine {
+            basis,
+            config,
+            backend,
+            pairs,
+            plan,
+            tuner,
+            metrics: EngineMetrics::default(),
+            cache: Vec::new(),
+            cache_complete: false,
+            eri_seconds: 0.0,
+            pool,
+            threads,
+        })
+    }
+
+    pub fn plan(&self) -> &BlockPlan {
+        &self.plan
+    }
+
+    pub fn pair_list(&self) -> &PairList {
+        &self.pairs
+    }
+
+    pub fn tuner(&self) -> &AutoTuner {
+        &self.tuner
+    }
+
+    /// Resolved Fock-build worker count.
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.name()
+    }
+
+    pub fn runtime_stats(&self) -> crate::runtime::RuntimeStats {
+        self.backend.stats()
+    }
+
+    /// Pre-compile/prepare backend kernels (no-op for native).
+    pub fn warm_up(&self) -> anyhow::Result<()> {
+        self.backend.warm_up()
+    }
+
+    fn context<'a>(&'a self, batches: &'a BTreeMap<ClassKey, usize>) -> BlockContext<'a> {
+        BlockContext {
+            basis: &self.basis,
+            pairs: &self.pairs,
+            plan: &self.plan,
+            backend: self.backend.as_ref(),
+            greedy_path: self.config.greedy_path,
+            fixed_batch: self.config.fixed_batch,
+            batches,
+        }
+    }
+
+    /// Parallel direct build: shard merge units over the worker pool,
+    /// collect per-unit partials, merge in unit order (bitwise
+    /// reproducible for any thread count).
+    fn build_direct(&mut self, density: &Matrix, want_cache: bool) -> anyhow::Result<Matrix> {
+        let n = self.basis.nbf;
+        let units = unit_ranges(self.plan.blocks.len(), merge_unit_count(n));
+        let nunits = units.len();
+        if nunits == 0 {
+            return Ok(Matrix::zeros(n, n));
+        }
+        let batches = self.tuner.batch_snapshot();
+        let ctx = self.context(&batches);
+        let workers = self.threads.min(nunits);
+        let slots = run_units_ordered(
+            &self.pool,
+            workers,
+            nunits,
+            |u, scratch: &mut GatherScratch| -> anyhow::Result<UnitResult> {
+                let mut out = UnitResult::new(n);
+                for bi in units[u].clone() {
+                    ctx.run_block(&mut out, density, bi, want_cache, scratch)?;
+                }
+                Ok(out)
+            },
+        );
+        drop(ctx);
+
+        // surface failures in unit order so errors are deterministic too
+        let mut outs = Vec::with_capacity(nunits);
+        for slot in slots {
+            let payload = slot.ok_or_else(|| anyhow::anyhow!("Fock worker dropped a merge unit"))?;
+            outs.push(payload?);
+        }
+
+        let g = merge_partials(n, outs.iter().map(|o| &o.g));
+        for out in outs {
+            self.metrics.merge(&out.metrics);
+            self.tuner.apply_observations(&out.observations);
+            if want_cache {
+                self.cache.extend(out.cache);
+            }
+        }
+        if want_cache {
+            self.cache_complete = true;
+        }
+        Ok(g)
+    }
+
+    /// Parallel digest-only fast path over the stored-mode cache.
+    fn digest_cached(&self, density: &Matrix) -> Matrix {
+        let n = self.basis.nbf;
+        let units = unit_ranges(self.cache.len(), merge_unit_count(n));
+        let nunits = units.len();
+        if nunits == 0 {
+            return Matrix::zeros(n, n);
+        }
+        let workers = self.threads.min(nunits);
+        let (basis, pairs, plan, cache) = (&self.basis, &self.pairs, &self.plan, &self.cache);
+        let slots = run_units_ordered(&self.pool, workers, nunits, |u, _scratch: &mut ()| {
+            let mut part = Matrix::zeros(n, n);
+            for ci in units[u].clone() {
+                let cb = &cache[ci];
+                let quads = &plan.blocks[cb.block_idx].quads;
+                digest_chunk_into(basis, pairs, &mut part, density, quads, &cb.values, cb.ncomp);
+            }
+            part
+        });
+        merge_partials(n, slots.iter().map(|m| m.as_ref().expect("cached unit result")))
+    }
+
+    /// Build G over a subset of blocks (weak-scaling shards, Fig. 13) —
+    /// sequential, shard workers are the unit of parallelism here.
     pub fn build_g_for_blocks(&mut self, d: &Matrix, block_indices: &[usize]) -> anyhow::Result<Matrix> {
         let n = self.basis.nbf;
-        let mut g = Matrix::zeros(n, n);
+        let batches = self.tuner.batch_snapshot();
+        let ctx = self.context(&batches);
+        let mut out = UnitResult::new(n);
+        let mut scratch = GatherScratch::default();
+        let mut failure = None;
         for &bi in block_indices {
-            self.run_block(&mut g, d, bi, false)?;
+            if let Err(e) = ctx.run_block(&mut out, d, bi, false, &mut scratch) {
+                failure = Some(e);
+                break;
+            }
         }
+        drop(ctx);
+        if let Some(e) = failure {
+            return Err(e);
+        }
+        self.metrics.merge(&out.metrics);
+        self.tuner.apply_observations(&out.observations);
+        let mut g = out.g;
         g.symmetrize();
         Ok(g)
     }
@@ -268,24 +538,12 @@ impl FockEngine for MatryoshkaEngine {
 
     fn two_electron(&mut self, density: &Matrix) -> anyhow::Result<Matrix> {
         let sw = Stopwatch::start();
-        let n = self.basis.nbf;
-        let mut g = Matrix::zeros(n, n);
-
-        if self.config.stored && self.cache_complete {
+        let mut g = if self.config.stored && self.cache_complete {
             // digest-only fast path: ERIs are density-independent
-            for cb in &self.cache {
-                let quads = &self.plan.blocks[cb.block_idx].quads;
-                self.digest_chunk(&mut g, density, quads, &cb.values, cb.ncomp);
-            }
+            self.digest_cached(density)
         } else {
-            let want_cache = self.config.stored;
-            for bi in 0..self.plan.blocks.len() {
-                self.run_block(&mut g, density, bi, want_cache)?;
-            }
-            if want_cache {
-                self.cache_complete = true;
-            }
-        }
+            self.build_direct(density, self.config.stored)?
+        };
         g.symmetrize();
         self.eri_seconds += sw.elapsed_s();
         Ok(g)
@@ -293,5 +551,9 @@ impl FockEngine for MatryoshkaEngine {
 
     fn eri_seconds(&self) -> f64 {
         self.eri_seconds
+    }
+
+    fn parallelism(&self) -> usize {
+        self.threads
     }
 }

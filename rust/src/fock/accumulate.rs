@@ -1,0 +1,124 @@
+//! Deterministic accumulator merge for the parallel Fock build.
+//!
+//! Floating-point addition is not associative, so a parallel G build is
+//! only reproducible if the *summation tree* is fixed independently of the
+//! thread count.  The engine therefore digests blocks into a fixed number
+//! of partial accumulators — "merge units", a pure function of the block
+//! plan — and folds them in unit order.  A 1-thread and an N-thread build
+//! produce bitwise-identical G matrices; threads only change which worker
+//! happens to *compute* each unit.
+
+use std::ops::Range;
+
+use crate::linalg::Matrix;
+
+/// Maximum number of partial accumulators.  Large enough to keep dozens
+/// of workers busy; the actual count is budget-capped per system by
+/// [`merge_unit_count`].
+pub const MERGE_UNITS: usize = 64;
+
+/// Transient-memory budget for the partial accumulators (units × nbf² ×
+/// 8 bytes).  Direct mode holds all partials at the merge point, so this
+/// caps the peak overhead versus the serial build's single G.
+const PARTIAL_BUDGET_BYTES: usize = 1 << 30;
+
+/// Number of merge units for a system with `nbf` basis functions: up to
+/// [`MERGE_UNITS`], shrunk so the partial accumulators fit the budget on
+/// large systems.  A pure function of the system — NOT the thread count —
+/// so the summation tree (and therefore every bit of G) is identical for
+/// any `--threads` value.
+pub fn merge_unit_count(nbf: usize) -> usize {
+    let per_unit = (nbf * nbf * 8).max(1);
+    (PARTIAL_BUDGET_BYTES / per_unit).clamp(4, MERGE_UNITS)
+}
+
+/// Split `0..n_items` into at most `max_units` contiguous, near-equal
+/// ranges (every item covered exactly once, never an empty range).
+/// Depends only on the inputs — NOT on the thread count.
+pub fn unit_ranges(n_items: usize, max_units: usize) -> Vec<Range<usize>> {
+    if n_items == 0 {
+        return Vec::new();
+    }
+    let units = max_units.clamp(1, n_items);
+    let base = n_items / units;
+    let extra = n_items % units;
+    let mut out = Vec::with_capacity(units);
+    let mut start = 0;
+    for u in 0..units {
+        let len = base + usize::from(u < extra);
+        out.push(start..start + len);
+        start += len;
+    }
+    debug_assert_eq!(start, n_items);
+    out
+}
+
+/// Fold partial accumulators into one G, strictly in iteration order.
+pub fn merge_partials<'a>(n: usize, partials: impl IntoIterator<Item = &'a Matrix>) -> Matrix {
+    let mut g = Matrix::zeros(n, n);
+    for p in partials {
+        g.add_scaled(p, 1.0);
+    }
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unit_ranges_partition_exactly() {
+        for (n, units) in [(0, 8), (1, 8), (7, 8), (8, 8), (9, 8), (100, 8), (64, 64), (3, 64)] {
+            let ranges = unit_ranges(n, units);
+            if n == 0 {
+                assert!(ranges.is_empty());
+                continue;
+            }
+            assert!(ranges.len() <= units.max(1));
+            let mut covered = 0;
+            let mut next = 0;
+            for r in &ranges {
+                assert_eq!(r.start, next, "contiguous");
+                assert!(!r.is_empty(), "no empty units");
+                covered += r.len();
+                next = r.end;
+            }
+            assert_eq!(covered, n);
+            // near-equal: sizes differ by at most one
+            let min = ranges.iter().map(|r| r.len()).min().unwrap();
+            let max = ranges.iter().map(|r| r.len()).max().unwrap();
+            assert!(max - min <= 1);
+        }
+    }
+
+    #[test]
+    fn unit_ranges_are_thread_count_independent_by_construction() {
+        // same inputs -> same partition, every time
+        assert_eq!(unit_ranges(1000, MERGE_UNITS), unit_ranges(1000, MERGE_UNITS));
+    }
+
+    #[test]
+    fn merge_unit_count_is_budget_capped_but_never_degenerate() {
+        assert_eq!(merge_unit_count(7), MERGE_UNITS); // water: full fan-out
+        assert_eq!(merge_unit_count(36), MERGE_UNITS); // benzene
+        let huge = merge_unit_count(20_000); // ~3.2 GB per partial
+        assert!((4..=MERGE_UNITS).contains(&huge));
+        assert!(huge < MERGE_UNITS);
+        // deterministic in nbf alone
+        assert_eq!(merge_unit_count(3000), merge_unit_count(3000));
+    }
+
+    #[test]
+    fn merge_is_ordered_sum() {
+        let mut a = Matrix::zeros(2, 2);
+        *a.at_mut(0, 0) = 1.0;
+        let mut b = Matrix::zeros(2, 2);
+        *b.at_mut(0, 0) = 2.0;
+        *b.at_mut(1, 1) = -1.0;
+        let g = merge_partials(2, [&a, &b]);
+        assert_eq!(g.at(0, 0), 3.0);
+        assert_eq!(g.at(1, 1), -1.0);
+        let g2 = merge_partials(2, Vec::<&Matrix>::new());
+        assert_eq!(g2.at(0, 0), 0.0);
+    }
+}

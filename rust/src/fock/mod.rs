@@ -1,7 +1,10 @@
-//! Fock-matrix assembly: core Hamiltonian + two-electron digestion.
+//! Fock-matrix assembly: core Hamiltonian, two-electron digestion, and
+//! the deterministic accumulator-merge path of the parallel Fock build.
 
+mod accumulate;
 mod digest;
 mod hcore;
 
+pub use accumulate::{merge_partials, merge_unit_count, unit_ranges, MERGE_UNITS};
 pub use digest::{digest_block, digest_eri, symmetry_factor};
 pub use hcore::core_hamiltonian;

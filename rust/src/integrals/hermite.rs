@@ -26,6 +26,33 @@ pub fn hermite_e(i: i32, j: i32, t: i32, qx: f64, a: f64, b: f64) -> f64 {
     }
 }
 
+/// Hermite expansion coefficient E_t^{ij} from *pair data* instead of raw
+/// exponents: total exponent `p` and the Gaussian-product separations
+/// `xpa = P_x − A_x`, `xpb = P_x − B_x`.  The exponential prefactor
+/// exp(−μ·AB²) of `hermite_e` is NOT included — the pair-data contract
+/// (python/compile/pairs.py, `constructor::pairs`) folds it into Kab, so
+/// the native ERI backend multiplies it back via Kab·Kcd.
+///
+/// Identity: `hermite_e(i,j,t,qx,a,b) = exp(−μ qx²) ·
+/// hermite_e_pair(i,j,t,a+b, −b·qx/p, a·qx/p)` with `qx = A_x − B_x`.
+pub fn hermite_e_pair(i: i32, j: i32, t: i32, p: f64, xpa: f64, xpb: f64) -> f64 {
+    if t < 0 || t > i + j {
+        return 0.0;
+    }
+    if i == 0 && j == 0 && t == 0 {
+        return 1.0;
+    }
+    if j == 0 {
+        hermite_e_pair(i - 1, j, t - 1, p, xpa, xpb) / (2.0 * p)
+            + xpa * hermite_e_pair(i - 1, j, t, p, xpa, xpb)
+            + (t + 1) as f64 * hermite_e_pair(i - 1, j, t + 1, p, xpa, xpb)
+    } else {
+        hermite_e_pair(i, j - 1, t - 1, p, xpa, xpb) / (2.0 * p)
+            + xpb * hermite_e_pair(i, j - 1, t, p, xpa, xpb)
+            + (t + 1) as f64 * hermite_e_pair(i, j - 1, t + 1, p, xpa, xpb)
+    }
+}
+
 /// Hermite Coulomb auxiliary R^n_{tuv}(alpha, PQ); `fvals[n] = F_n(alpha·|PQ|²)`.
 pub fn hermite_r(t: i32, u: i32, v: i32, n: i32, alpha: f64, pq: [f64; 3], fvals: &[f64]) -> f64 {
     if t < 0 || u < 0 || v < 0 {
@@ -74,6 +101,26 @@ mod tests {
         let s = hermite_e(1, 1, 0, 0.0, a, b) * (std::f64::consts::PI / p).sqrt();
         let want = 0.5 / p * (std::f64::consts::PI / p).sqrt();
         assert!((s - want).abs() < 1e-14);
+    }
+
+    #[test]
+    fn pair_form_matches_exponent_form() {
+        // E from pair data (p, xpa, xpb) must equal E from (a, b, qx)
+        // once the folded-out Gaussian prefactor is restored.
+        let (a, b, qx) = (1.3, 0.6, 0.8);
+        let p = a + b;
+        let mu = a * b / p;
+        let pref = (-mu * qx * qx).exp();
+        let (xpa, xpb) = (-b * qx / p, a * qx / p);
+        for i in 0..=2 {
+            for j in 0..=2 {
+                for t in 0..=(i + j) {
+                    let want = hermite_e(i, j, t, qx, a, b);
+                    let got = pref * hermite_e_pair(i, j, t, p, xpa, xpb);
+                    assert!((want - got).abs() < 1e-13, "E[{i}{j}{t}]: {want} vs {got}");
+                }
+            }
+        }
     }
 
     #[test]

@@ -14,7 +14,7 @@ mod one_electron;
 
 pub use boys::boys;
 pub use eri_ref::{eri_shell_quartet, schwarz_diagonal, EriRefStats};
-pub use hermite::{hermite_e, hermite_r};
+pub use hermite::{hermite_e, hermite_e_pair, hermite_r};
 pub use one_electron::{
     kinetic_matrix, nuclear_attraction_matrix, overlap_matrix, shell_self_overlap,
 };

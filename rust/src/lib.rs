@@ -1,19 +1,37 @@
-//! # Matryoshka — elastic-parallelism quantum chemistry on Rust + XLA
+//! # Matryoshka — elastic-parallelism quantum chemistry in Rust
 //!
 //! Reproduction of *"Matryoshka: Optimization of Dynamic Diverse Quantum
 //! Chemistry Systems via Elastic Parallelism Transformation"* as a
 //! three-layer stack:
 //!
 //! * **L3 (this crate)** — the coordinator: SCF event loop, Block
-//!   Constructor (§5), Workload Allocator (§7), Fock digestion, metrics,
-//!   CLI; plus every substrate the paper depends on (basis sets, one- and
-//!   two-electron integral engines, dense linear algebra, molecule
-//!   generators).
-//! * **L2/L1 (python/compile, build-time only)** — the Graph Compiler
-//!   (§6) emits per-ERI-class straight-line schedules, wrapped in Pallas
-//!   kernels and AOT-lowered to HLO text artifacts.
-//! * **runtime** — loads the artifacts through PJRT and executes them
-//!   from the Rust hot path; Python is never on the request path.
+//!   Constructor (§5), Workload Allocator (§7), parallel Fock build with
+//!   deterministic accumulator merge, metrics, CLI; plus every substrate
+//!   the paper depends on (basis sets, one- and two-electron integral
+//!   engines, dense linear algebra, molecule generators).
+//! * **runtime / execution backends** — the ERI evaluator is pluggable
+//!   behind [`runtime::EriBackend`]:
+//!   - [`runtime::NativeBackend`] (default, pure Rust): evaluates padded
+//!     pair-data chunks with the McMurchie–Davidson machinery; no
+//!     artifacts, no XLA toolchain, builds everywhere.
+//!   - `PjrtBackend` (`--features pjrt`): loads AOT HLO-text artifacts
+//!     through PJRT and executes them from the Rust hot path.
+//! * **L2/L1 (python/compile, build-time only, pjrt path)** — the Graph
+//!   Compiler (§6) emits per-ERI-class straight-line schedules, wrapped
+//!   in Pallas kernels and AOT-lowered to HLO text artifacts.  Python is
+//!   never on the request path in either configuration.
+//!
+//! The Fock hot path shards the dependency-free quadruple blocks of the
+//! Block Constructor across a worker pool (`--threads N`); per-worker
+//! partial G accumulators are merged through a fixed summation tree, so
+//! the thread count changes wall time but never a single bit of the
+//! result.  See `rust/README.md` for the backend/feature matrix.
+
+// Numeric-kernel lint policy: index arithmetic over flat buffers and wide
+// argument lists are idiomatic in the integral/digestion hot paths; these
+// two pedantic lints fight that style without catching bugs here.
+#![allow(clippy::needless_range_loop)]
+#![allow(clippy::too_many_arguments)]
 
 pub mod allocator;
 pub mod bench_harness;

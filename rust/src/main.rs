@@ -20,6 +20,7 @@ use matryoshka::integrals::overlap_matrix;
 use matryoshka::linalg::Matrix;
 use matryoshka::molecule::{library, parse_xyz, Molecule};
 use matryoshka::report;
+use matryoshka::runtime::BackendKind;
 use matryoshka::scf::{dipole_moment, mulliken_charges, run_rhf, ScfOptions};
 
 fn artifact_dir(args: &Args) -> PathBuf {
@@ -30,12 +31,13 @@ fn usage() -> ! {
     eprintln!(
         "usage: matryoshka <scf|report|info> [options]\n\
          \n  scf     --molecule NAME [--engine matryoshka|reference] [--stored]\n\
+         \u{20}         [--backend native|pjrt] [--threads N (0 = all cores)]\n\
          \u{20}         [--threshold T] [--max-iter N] [--tile N] [--fixed-batch N]\n\
          \u{20}         [--no-autotune] [--no-cluster] [--random-path]\n\
          \u{20}         [--schwarz exact|estimate] [--artifacts DIR] [--verbose]\n\
          \u{20}         [--xyz FILE] [--damping A] [--properties]\n\
          \n  report  systems|tab4|fig6|compiler|all [--artifacts DIR]\n\
-         \n  info    [--artifacts DIR]"
+         \n  info    [--backend native|pjrt] [--artifacts DIR]"
     );
     std::process::exit(2);
 }
@@ -49,11 +51,12 @@ fn engine_config(args: &Args) -> anyhow::Result<MatryoshkaConfig> {
         autotune: !args.flag("no-autotune"),
         fixed_batch: args.usize_or("fixed-batch", 512)?,
         stored: args.flag("stored"),
-        schwarz: match args.str_or("schwarz", "estimate").as_str() {
+        schwarz: match args.choice("schwarz", "estimate", &["exact", "estimate"])?.as_str() {
             "exact" => SchwarzMode::Exact,
-            "estimate" => SchwarzMode::Estimate,
-            other => anyhow::bail!("--schwarz: unknown mode {other}"),
+            _ => SchwarzMode::Estimate,
         },
+        backend: BackendKind::parse(&args.choice("backend", "native", &["native", "pjrt"])?)?,
+        threads: args.usize_or("threads", 0)?,
     })
 }
 
@@ -103,8 +106,16 @@ fn cmd_scf(args: &Args) -> anyhow::Result<()> {
             let m = &engine.metrics;
             let rs = engine.runtime_stats();
             println!(
+                "engine: backend {} with {} Fock worker(s)",
+                engine.backend_name(),
+                engine.threads()
+            );
+            // phase timers are CPU-seconds summed across Fock workers;
+            // with --threads N they can exceed wall time by up to N×
+            println!(
                 "engine: {} executions, {} quads, lane utilization {:.3}, \
-                 compile {:.2}s, execute {:.2}s, marshal {:.2}s, gather {:.2}s, digest {:.2}s",
+                 compile {:.2}s, execute {:.2}s, marshal {:.2}s, gather {:.2}s, digest {:.2}s \
+                 (phase times are CPU-s across workers)",
                 rs.executions,
                 m.total_real_quads(),
                 m.mean_lane_utilization(),
@@ -187,9 +198,16 @@ fn cmd_report(args: &Args) -> anyhow::Result<()> {
 }
 
 fn cmd_info(args: &Args) -> anyhow::Result<()> {
-    let manifest = matryoshka::runtime::Manifest::load(&artifact_dir(args))?;
+    use matryoshka::runtime::{EriBackend, NativeBackend};
+    let kind = BackendKind::parse(&args.choice("backend", "native", &["native", "pjrt"])?)?;
+    let manifest = match kind {
+        // the native catalog is synthetic — no artifacts directory needed
+        BackendKind::Native => NativeBackend::new().manifest().clone(),
+        BackendKind::Pjrt => matryoshka::runtime::Manifest::load(&artifact_dir(args))?,
+    };
     println!(
-        "artifacts: {} variants, {} classes",
+        "{} catalog: {} variants, {} classes",
+        kind.name(),
         manifest.variants.len(),
         manifest.classes().len()
     );

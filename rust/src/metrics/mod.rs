@@ -40,12 +40,19 @@ impl ClassStats {
 }
 
 /// Aggregated engine metrics, keyed by ERI class.
+///
+/// Unit caveat under the parallel Fock pipeline: per-phase timers
+/// (`gather_seconds`, `digest_seconds`, `ClassStats::seconds`) are summed
+/// across concurrent workers, i.e. **CPU-seconds**, not wall time — with
+/// N threads they can exceed the build's wall clock by up to N×.
+/// Throughput/lane-utilization ratios are unaffected (numerator and
+/// denominator accumulate the same way).
 #[derive(Clone, Debug, Default)]
 pub struct EngineMetrics {
     pub per_class: BTreeMap<ClassKey, ClassStats>,
-    /// digestion wall-clock (L3 scatter phase)
+    /// digestion CPU-seconds, summed across workers (L3 scatter phase)
     pub digest_seconds: f64,
-    /// gather/marshal wall-clock (L3 pack phase)
+    /// gather/marshal CPU-seconds, summed across workers (L3 pack phase)
     pub gather_seconds: f64,
 }
 
@@ -56,6 +63,20 @@ impl EngineMetrics {
         s.real_quads += real as u64;
         s.padded_slots += padded as u64;
         s.seconds += seconds;
+    }
+
+    /// Fold a worker shard's metrics into this accumulator (the parallel
+    /// Fock pipeline records per-worker and merges deterministically).
+    pub fn merge(&mut self, other: &EngineMetrics) {
+        for (class, s) in &other.per_class {
+            let t = self.per_class.entry(*class).or_default();
+            t.executions += s.executions;
+            t.real_quads += s.real_quads;
+            t.padded_slots += s.padded_slots;
+            t.seconds += s.seconds;
+        }
+        self.digest_seconds += other.digest_seconds;
+        self.gather_seconds += other.gather_seconds;
     }
 
     pub fn total_real_quads(&self) -> u64 {
@@ -92,6 +113,34 @@ mod tests {
         assert!((s.lane_utilization() - 0.5).abs() < 1e-12);
         assert!((s.throughput() - 128.0).abs() < 1e-12);
         assert!((m.mean_lane_utilization() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn merge_combines_shards_like_sequential_recording() {
+        let mut seq = EngineMetrics::default();
+        seq.record((0, 0, 0, 0), 100, 128, 0.5);
+        seq.record((1, 0, 0, 0), 10, 32, 0.1);
+        seq.record((0, 0, 0, 0), 28, 128, 0.5);
+        seq.digest_seconds = 0.3;
+
+        let mut a = EngineMetrics::default();
+        a.record((0, 0, 0, 0), 100, 128, 0.5);
+        a.digest_seconds = 0.2;
+        let mut b = EngineMetrics::default();
+        b.record((1, 0, 0, 0), 10, 32, 0.1);
+        b.record((0, 0, 0, 0), 28, 128, 0.5);
+        b.digest_seconds = 0.1;
+        let mut merged = EngineMetrics::default();
+        merged.merge(&a);
+        merged.merge(&b);
+
+        assert_eq!(merged.total_real_quads(), seq.total_real_quads());
+        assert_eq!(
+            merged.per_class[&(0, 0, 0, 0)].executions,
+            seq.per_class[&(0, 0, 0, 0)].executions
+        );
+        assert!((merged.mean_lane_utilization() - seq.mean_lane_utilization()).abs() < 1e-12);
+        assert!((merged.digest_seconds - seq.digest_seconds).abs() < 1e-12);
     }
 
     #[test]

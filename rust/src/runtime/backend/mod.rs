@@ -1,0 +1,184 @@
+//! Pluggable ERI execution backends.
+//!
+//! The SCF hot path hands a backend padded pair-data chunks (the
+//! cross-language layout of `constructor::pairs`) and receives contracted
+//! ERIs per quadruple back — nothing above this trait knows *how* they
+//! were evaluated.  Two implementations ship:
+//!
+//! * [`NativeBackend`] — pure Rust, always available, no artifacts, no
+//!   XLA toolchain; evaluates chunks with the McMurchie–Davidson pair-data
+//!   machinery (`integrals::hermite_e_pair`).  The default.
+//! * `PjrtBackend` (`--features pjrt`) — the AOT HLO artifact path through
+//!   `xla::PjRtClient`, wrapping the historical [`crate::runtime::Runtime`].
+//!
+//! Backends are `Send + Sync` and take `&self` on the execute path so the
+//! parallel Fock pipeline can drive one backend from many worker threads;
+//! implementations serialize internally where they must (the PJRT client
+//! holds its executable cache behind a mutex, the native backend only
+//! locks to bump counters).
+
+mod native;
+#[cfg(feature = "pjrt")]
+mod pjrt;
+
+use std::path::Path;
+
+pub use native::NativeBackend;
+#[cfg(feature = "pjrt")]
+pub use pjrt::PjrtBackend;
+
+use super::manifest::{Manifest, Variant};
+
+/// Result of one ERI chunk execution.
+pub struct EriExecution {
+    /// contracted ERIs, row-major [batch, ncomp]
+    pub values: Vec<f64>,
+    pub ncomp: usize,
+    /// wall seconds inside the backend's evaluate/execute step
+    pub execute_seconds: f64,
+    /// wall seconds marshalling data in/out (zero for the native backend)
+    pub marshal_seconds: f64,
+    /// per-execution cost the Workload Allocator should optimize:
+    /// execute + marshal, but NEVER one-time kernel compilation
+    pub steady_seconds: f64,
+}
+
+/// Backend execution statistics (metrics / §Perf reporting).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RuntimeStats {
+    pub executions: u64,
+    pub quadruple_slots: u64,
+    pub compile_seconds: f64,
+    pub execute_seconds: f64,
+    pub marshal_seconds: f64,
+}
+
+impl RuntimeStats {
+    /// Fold another shard of statistics into this one (worker merge path).
+    pub fn merge(&mut self, other: &RuntimeStats) {
+        self.executions += other.executions;
+        self.quadruple_slots += other.quadruple_slots;
+        self.compile_seconds += other.compile_seconds;
+        self.execute_seconds += other.execute_seconds;
+        self.marshal_seconds += other.marshal_seconds;
+    }
+}
+
+/// An ERI execution backend: a variant catalog plus a chunk evaluator.
+pub trait EriBackend: Send + Sync {
+    /// Short identifier ("native", "pjrt") for logs and reports.
+    fn name(&self) -> &'static str;
+
+    /// The variant catalog the Workload Allocator tunes over.
+    fn manifest(&self) -> &Manifest;
+
+    /// Execute one padded chunk through a variant's kernel.
+    ///
+    /// Inputs are the padded pair-data arrays of the DESIGN.md layout:
+    /// bra_prim [b,kb,5] | bra_geom [b,6] | ket_prim [b,kk,5] | ket_geom
+    /// [b,6].  Padding rows carry Kab = 0 and must evaluate to exact
+    /// zeros.  Thread-safe: callers may invoke this concurrently.
+    fn execute_eri(
+        &self,
+        variant: &Variant,
+        bra_prim: &[f64],
+        bra_geom: &[f64],
+        ket_prim: &[f64],
+        ket_geom: &[f64],
+    ) -> anyhow::Result<EriExecution>;
+
+    /// Snapshot of the accumulated execution statistics.
+    fn stats(&self) -> RuntimeStats;
+
+    /// Optional ahead-of-need preparation (kernel compilation etc.).
+    fn warm_up(&self) -> anyhow::Result<()> {
+        Ok(())
+    }
+}
+
+/// Which execution backend to construct.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum BackendKind {
+    /// Pure-Rust McMurchie–Davidson evaluation (always available).
+    #[default]
+    Native,
+    /// AOT HLO artifacts through PJRT (requires `--features pjrt`).
+    Pjrt,
+}
+
+impl BackendKind {
+    pub fn parse(name: &str) -> anyhow::Result<BackendKind> {
+        match name {
+            "native" => Ok(BackendKind::Native),
+            "pjrt" => Ok(BackendKind::Pjrt),
+            other => anyhow::bail!("unknown backend {other} (available: native, pjrt)"),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            BackendKind::Native => "native",
+            BackendKind::Pjrt => "pjrt",
+        }
+    }
+}
+
+/// Construct a backend.  `artifact_dir` is only consulted by the PJRT
+/// backend; the native backend carries its own synthetic manifest.
+pub fn create_backend(kind: BackendKind, artifact_dir: &Path) -> anyhow::Result<Box<dyn EriBackend>> {
+    match kind {
+        BackendKind::Native => Ok(Box::new(NativeBackend::new())),
+        #[cfg(feature = "pjrt")]
+        BackendKind::Pjrt => Ok(Box::new(PjrtBackend::new(artifact_dir)?)),
+        #[cfg(not(feature = "pjrt"))]
+        BackendKind::Pjrt => {
+            let _ = artifact_dir;
+            anyhow::bail!(
+                "backend `pjrt` requires building with `--features pjrt` \
+                 (and a real xla-rs crate in place of rust/vendor/xla)"
+            )
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backend_kind_parses_and_rejects() {
+        assert_eq!(BackendKind::parse("native").unwrap(), BackendKind::Native);
+        assert_eq!(BackendKind::parse("pjrt").unwrap(), BackendKind::Pjrt);
+        assert!(BackendKind::parse("tpu").is_err());
+        assert_eq!(BackendKind::default().name(), "native");
+    }
+
+    #[test]
+    fn native_backend_is_always_constructible() {
+        let b = create_backend(BackendKind::Native, Path::new("/nonexistent")).unwrap();
+        assert_eq!(b.name(), "native");
+        assert!(!b.manifest().variants.is_empty());
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn pjrt_backend_errors_cleanly_without_the_feature() {
+        let err = create_backend(BackendKind::Pjrt, Path::new("/nonexistent")).unwrap_err();
+        assert!(err.to_string().contains("pjrt"), "{err}");
+    }
+
+    #[test]
+    fn runtime_stats_merge_adds_fields() {
+        let mut a = RuntimeStats { executions: 2, quadruple_slots: 64, ..Default::default() };
+        let b = RuntimeStats {
+            executions: 3,
+            quadruple_slots: 96,
+            execute_seconds: 0.5,
+            ..Default::default()
+        };
+        a.merge(&b);
+        assert_eq!(a.executions, 5);
+        assert_eq!(a.quadruple_slots, 160);
+        assert!((a.execute_seconds - 0.5).abs() < 1e-12);
+    }
+}

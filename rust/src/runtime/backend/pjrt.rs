@@ -1,0 +1,61 @@
+//! PJRT execution backend (`--features pjrt`): adapts the historical
+//! [`Runtime`] PJRT client to the [`EriBackend`] trait.
+//!
+//! The PJRT client caches lazily-compiled executables and therefore needs
+//! interior mutability; a single mutex serializes executions.  That is
+//! deliberate for now — one PJRT CPU client is itself internally threaded,
+//! and the parallel Fock pipeline still overlaps every worker's gather and
+//! digest phases with the serialized execute phase.  A per-worker client
+//! pool is the follow-up recorded in ROADMAP.md.
+
+use std::path::Path;
+use std::sync::Mutex;
+
+use crate::runtime::client::Runtime;
+use crate::runtime::{Manifest, Variant};
+
+use super::{EriBackend, EriExecution, RuntimeStats};
+
+pub struct PjrtBackend {
+    runtime: Mutex<Runtime>,
+    /// manifest copy so `manifest()` needs no lock
+    manifest: Manifest,
+}
+
+impl PjrtBackend {
+    pub fn new(artifact_dir: &Path) -> anyhow::Result<PjrtBackend> {
+        let runtime = Runtime::new(artifact_dir)?;
+        let manifest = runtime.manifest.clone();
+        Ok(PjrtBackend { runtime: Mutex::new(runtime), manifest })
+    }
+}
+
+impl EriBackend for PjrtBackend {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    fn execute_eri(
+        &self,
+        variant: &Variant,
+        bra_prim: &[f64],
+        bra_geom: &[f64],
+        ket_prim: &[f64],
+        ket_geom: &[f64],
+    ) -> anyhow::Result<EriExecution> {
+        let mut rt = self.runtime.lock().unwrap();
+        rt.execute_eri(variant, bra_prim, bra_geom, ket_prim, ket_geom)
+    }
+
+    fn stats(&self) -> RuntimeStats {
+        self.runtime.lock().unwrap().stats()
+    }
+
+    fn warm_up(&self) -> anyhow::Result<()> {
+        self.runtime.lock().unwrap().warm_up()
+    }
+}

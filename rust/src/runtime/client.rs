@@ -6,31 +6,8 @@ use std::path::Path;
 
 use crate::util::Stopwatch;
 
+use super::backend::{EriExecution, RuntimeStats};
 use super::manifest::{Manifest, Variant};
-
-/// Result of one ERI block execution.
-pub struct EriExecution {
-    /// contracted ERIs, row-major [batch, ncomp]
-    pub values: Vec<f64>,
-    pub ncomp: usize,
-    /// wall seconds inside PJRT execute (excl. literal marshalling)
-    pub execute_seconds: f64,
-    /// wall seconds marshalling literals in/out of PJRT
-    pub marshal_seconds: f64,
-    /// per-execution cost the Workload Allocator should optimize:
-    /// execute + marshal, but NEVER one-time kernel compilation
-    pub steady_seconds: f64,
-}
-
-/// Runtime statistics (metrics / §Perf reporting).
-#[derive(Clone, Copy, Debug, Default)]
-pub struct RuntimeStats {
-    pub executions: u64,
-    pub quadruple_slots: u64,
-    pub compile_seconds: f64,
-    pub execute_seconds: f64,
-    pub marshal_seconds: f64,
-}
 
 /// The PJRT CPU runtime: lazily compiles HLO-text artifacts into loaded
 /// executables, keyed by (class, batch, mode).

@@ -11,6 +11,17 @@ use std::path::{Path, PathBuf};
 /// ERI class key (la, lb, lc, ld), canonical order.
 pub type ClassKey = (u8, u8, u8, u8);
 
+/// Lowercase shell letters of an ERI class, e.g. (1,0,1,0) → "psps".
+/// Single source of truth for class pretty-printing (reports, the native
+/// backend's variant names).
+pub fn class_letters(class: ClassKey) -> String {
+    const LETTERS: [char; 8] = ['s', 'p', 'd', 'f', 'g', 'h', 'i', 'k'];
+    [class.0, class.1, class.2, class.3]
+        .iter()
+        .map(|&l| LETTERS[l as usize])
+        .collect()
+}
+
 /// One AOT-compiled kernel variant.
 #[derive(Clone, Debug)]
 pub struct Variant {
@@ -45,6 +56,17 @@ impl Manifest {
         let text = std::fs::read_to_string(&path)
             .map_err(|e| anyhow::anyhow!("cannot read {} (run `make artifacts`): {e}", path.display()))?;
         Self::parse(&text, dir)
+    }
+
+    /// Build a manifest directly from in-memory variants (the native
+    /// backend synthesizes its variant ladder; no artifact files exist).
+    pub fn from_variants(variants: Vec<Variant>, dir: &Path) -> Manifest {
+        let mut m = Manifest { dir: dir.to_path_buf(), ..Default::default() };
+        for v in variants {
+            m.by_class.entry(v.class).or_default().push(m.variants.len());
+            m.variants.push(v);
+        }
+        m
     }
 
     pub fn parse(text: &str, dir: &Path) -> anyhow::Result<Manifest> {

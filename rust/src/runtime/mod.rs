@@ -1,9 +1,21 @@
-//! PJRT runtime: load AOT HLO-text artifacts and execute them from the L3
-//! hot path.  Python never runs here — the artifacts directory is the only
-//! interface to the build-time layers.
+//! Execution runtime: the variant manifest (the contract between
+//! `python/compile/aot.py` and Rust) and the pluggable ERI backends.
+//!
+//! The default build ships the pure-Rust [`NativeBackend`]; the PJRT
+//! artifact path (`Runtime` + `PjrtBackend`) is behind the `pjrt` cargo
+//! feature so default builds need no XLA toolchain.  Python is never on
+//! the request path in either configuration.
 
-mod client;
+pub mod backend;
+#[cfg(feature = "pjrt")]
+pub(crate) mod client;
 mod manifest;
 
-pub use client::{EriExecution, Runtime, RuntimeStats};
-pub use manifest::{ClassKey, Manifest, Variant};
+pub use backend::{
+    create_backend, BackendKind, EriBackend, EriExecution, NativeBackend, RuntimeStats,
+};
+#[cfg(feature = "pjrt")]
+pub use backend::PjrtBackend;
+#[cfg(feature = "pjrt")]
+pub use client::Runtime;
+pub use manifest::{class_letters, ClassKey, Manifest, Variant};

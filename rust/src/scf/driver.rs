@@ -23,6 +23,10 @@ pub trait FockEngine {
     fn eri_seconds(&self) -> f64 {
         0.0
     }
+    /// worker threads the engine's Fock build uses (1 = serial engine)
+    fn parallelism(&self) -> usize {
+        1
+    }
 }
 
 #[derive(Clone, Debug)]
@@ -89,6 +93,14 @@ pub fn run_rhf(
     let nocc = mol.nocc()?;
     if nocc > basis.nbf {
         anyhow::bail!("{}: {} occupied orbitals > {} basis functions", mol.name, nocc, basis.nbf);
+    }
+    if opts.verbose {
+        eprintln!(
+            "  engine {} ({} Fock worker{})",
+            engine.name(),
+            engine.parallelism(),
+            if engine.parallelism() == 1 { "" } else { "s" }
+        );
     }
     let e_nn = mol.nuclear_repulsion();
 

@@ -1,0 +1,113 @@
+//! Backend parity + parallel-determinism acceptance tests.
+//!
+//! * The native backend's G matrices must match the independent
+//!   `ReferenceEngine` oracle (a different MD formulation) to ≤ 1e-8 on
+//!   water and benzene.
+//! * A 1-thread and an N-thread Fock build must agree **bitwise**: the
+//!   deterministic accumulator merge (`fock::accumulate`) fixes the
+//!   floating-point summation tree independently of the thread count.
+
+use std::path::Path;
+
+use matryoshka::basis::build_basis;
+use matryoshka::engines::{MatryoshkaConfig, MatryoshkaEngine, ReferenceEngine};
+use matryoshka::linalg::Matrix;
+use matryoshka::molecule::library;
+use matryoshka::scf::FockEngine;
+
+fn test_density(n: usize) -> Matrix {
+    let mut d = Matrix::zeros(n, n);
+    for i in 0..n {
+        for j in 0..n {
+            let v = 0.3 / (1.0 + (i as f64 - j as f64).abs());
+            *d.at_mut(i, j) = v;
+            *d.at_mut(j, i) = v;
+        }
+    }
+    d
+}
+
+fn native_engine(molecule: &str, threshold: f64, threads: usize) -> MatryoshkaEngine {
+    let mol = library::by_name(molecule).unwrap();
+    let basis = build_basis(&mol, "sto-3g").unwrap();
+    let config = MatryoshkaConfig { threshold, threads, ..Default::default() };
+    // the native backend needs no artifacts directory
+    MatryoshkaEngine::new(basis, Path::new("unused"), config).unwrap()
+}
+
+fn parity_on(molecule: &str) {
+    let mol = library::by_name(molecule).unwrap();
+    let basis = build_basis(&mol, "sto-3g").unwrap();
+    let d = test_density(basis.nbf);
+
+    let mut reference = ReferenceEngine::new(basis.clone(), 1e-14);
+    let g_ref = reference.two_electron(&d).unwrap();
+
+    let mut engine = native_engine(molecule, 1e-14, 0);
+    let g = engine.two_electron(&d).unwrap();
+
+    let diff = g.diff_norm(&g_ref);
+    assert!(diff < 1e-8, "{molecule}: ||G_native − G_ref|| = {diff:.3e}");
+}
+
+#[test]
+fn native_backend_matches_reference_engine_on_water() {
+    parity_on("water");
+}
+
+#[test]
+fn native_backend_matches_reference_engine_on_benzene() {
+    parity_on("benzene");
+}
+
+#[test]
+fn one_thread_and_n_thread_fock_builds_agree_bitwise() {
+    let mol = library::by_name("benzene").unwrap();
+    let basis = build_basis(&mol, "sto-3g").unwrap();
+    let d = test_density(basis.nbf);
+
+    let mut serial = native_engine("benzene", 1e-10, 1);
+    let g1 = serial.two_electron(&d).unwrap();
+    assert_eq!(serial.threads(), 1);
+
+    for threads in [2, 5, 8] {
+        let mut parallel = native_engine("benzene", 1e-10, threads);
+        let gn = parallel.two_electron(&d).unwrap();
+        // bitwise, not within-epsilon: the merge tree is thread-invariant
+        assert_eq!(
+            g1.data(),
+            gn.data(),
+            "{threads}-thread build diverged from the 1-thread build"
+        );
+    }
+}
+
+#[test]
+fn parallel_build_reports_worker_count_and_backend() {
+    let engine = native_engine("water", 1e-10, 3);
+    assert_eq!(engine.threads(), 3);
+    assert_eq!(engine.backend_name(), "native");
+    assert_eq!(engine.parallelism(), 3);
+}
+
+#[test]
+fn stored_mode_parallel_digest_is_bitwise_stable_too() {
+    let mol = library::by_name("water").unwrap();
+    let basis = build_basis(&mol, "sto-3g").unwrap();
+    let d = test_density(basis.nbf);
+
+    let build = |threads: usize| {
+        let config = MatryoshkaConfig {
+            threshold: 1e-12,
+            stored: true,
+            threads,
+            ..Default::default()
+        };
+        let mut e = MatryoshkaEngine::new(basis.clone(), Path::new("unused"), config).unwrap();
+        let _warm = e.two_electron(&d).unwrap(); // fills the cache
+        e.two_electron(&d).unwrap() // digest-only fast path
+    };
+    let g1 = build(1);
+    let g4 = build(4);
+    assert_eq!(g1.data(), g4.data());
+}

@@ -1,9 +1,13 @@
-//! End-to-end integration: the Matryoshka PJRT path must reproduce the
-//! reference (Rust McMurchie–Davidson) engine bit-for-bit at SCF level.
+//! End-to-end integration: the Matryoshka engine (native backend, parallel
+//! Fock pipeline) must reproduce the reference (serial per-quartet
+//! McMurchie–Davidson) engine at SCF level.
 //!
-//! Requires `make artifacts` (skipped with a clear message otherwise).
+//! These tests run on every default build — the native backend needs no
+//! artifacts.  The same assertions hold for the PJRT backend when built
+//! with `--features pjrt` against a real xla-rs and a compiled
+//! artifacts/ directory.
 
-use std::path::{Path, PathBuf};
+use std::path::Path;
 
 use matryoshka::basis::build_basis;
 use matryoshka::engines::{MatryoshkaConfig, MatryoshkaEngine, ReferenceEngine};
@@ -11,14 +15,9 @@ use matryoshka::linalg::Matrix;
 use matryoshka::molecule::library;
 use matryoshka::scf::{run_rhf, FockEngine, ScfOptions};
 
-fn artifact_dir() -> Option<PathBuf> {
-    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    if dir.join("manifest.txt").exists() {
-        Some(dir)
-    } else {
-        eprintln!("SKIP: no artifacts/ (run `make artifacts` first)");
-        None
-    }
+/// Placeholder artifact dir: the native backend ignores it.
+fn dir() -> &'static Path {
+    Path::new("unused")
 }
 
 fn test_density(n: usize) -> Matrix {
@@ -35,7 +34,6 @@ fn test_density(n: usize) -> Matrix {
 
 #[test]
 fn g_matrix_matches_reference_engine_water() {
-    let Some(dir) = artifact_dir() else { return };
     let mol = library::by_name("water").unwrap();
     let basis = build_basis(&mol, "sto-3g").unwrap();
     let d = test_density(basis.nbf);
@@ -44,7 +42,7 @@ fn g_matrix_matches_reference_engine_water() {
     let g_ref = reference.two_electron(&d).unwrap();
 
     let config = MatryoshkaConfig { threshold: 1e-14, ..Default::default() };
-    let mut engine = MatryoshkaEngine::new(basis, &dir, config).unwrap();
+    let mut engine = MatryoshkaEngine::new(basis, dir(), config).unwrap();
     let g = engine.two_electron(&d).unwrap();
 
     let diff = g.diff_norm(&g_ref);
@@ -53,7 +51,6 @@ fn g_matrix_matches_reference_engine_water() {
 
 #[test]
 fn all_ablation_configs_agree_on_g() {
-    let Some(dir) = artifact_dir() else { return };
     let mol = library::by_name("water").unwrap();
     let basis = build_basis(&mol, "sto-3g").unwrap();
     let d = test_density(basis.nbf);
@@ -69,7 +66,7 @@ fn all_ablation_configs_agree_on_g() {
     ] {
         let mut config = MatryoshkaConfig::ablation(bc, gc, wa);
         config.threshold = 1e-14;
-        let mut engine = MatryoshkaEngine::new(basis.clone(), &dir, config).unwrap();
+        let mut engine = MatryoshkaEngine::new(basis.clone(), dir(), config).unwrap();
         let g = engine.two_electron(&d).unwrap();
         let diff = g.diff_norm(&g_ref);
         assert!(diff < 1e-10, "ablation ({bc},{gc},{wa}): ||dG|| = {diff:.3e}");
@@ -77,8 +74,7 @@ fn all_ablation_configs_agree_on_g() {
 }
 
 #[test]
-fn water_scf_energy_matches_reference_engine() {
-    let Some(dir) = artifact_dir() else { return };
+fn water_scf_energy_matches_reference_engine_and_literature() {
     let mol = library::by_name("water").unwrap();
     let basis = build_basis(&mol, "sto-3g").unwrap();
     let opts = ScfOptions::default();
@@ -87,7 +83,7 @@ fn water_scf_energy_matches_reference_engine() {
     let res_ref = run_rhf(&mol, &basis, &mut reference, &opts).unwrap();
 
     let config = MatryoshkaConfig { threshold: 1e-12, stored: true, ..Default::default() };
-    let mut engine = MatryoshkaEngine::new(basis.clone(), &dir, config).unwrap();
+    let mut engine = MatryoshkaEngine::new(basis.clone(), dir(), config).unwrap();
     let res = run_rhf(&mol, &basis, &mut engine, &opts).unwrap();
 
     assert!(res_ref.converged && res.converged);
@@ -98,24 +94,25 @@ fn water_scf_energy_matches_reference_engine() {
         res.energy,
         res_ref.energy
     );
+    // literature RHF/STO-3G water ≈ −74.96 Ha
+    assert!((res.energy + 74.96).abs() < 0.01, "water E = {:.7}", res.energy);
 }
 
 #[test]
 fn stored_mode_matches_direct_mode() {
-    let Some(dir) = artifact_dir() else { return };
     let mol = library::by_name("water").unwrap();
     let basis = build_basis(&mol, "sto-3g").unwrap();
     let d = test_density(basis.nbf);
 
     let mut direct = MatryoshkaEngine::new(
         basis.clone(),
-        &dir,
+        dir(),
         MatryoshkaConfig { stored: false, ..Default::default() },
     )
     .unwrap();
     let mut stored = MatryoshkaEngine::new(
         basis,
-        &dir,
+        dir(),
         MatryoshkaConfig { stored: true, ..Default::default() },
     )
     .unwrap();
@@ -128,13 +125,11 @@ fn stored_mode_matches_direct_mode() {
 
 #[test]
 fn sharded_g_build_sums_to_full_g() {
-    let Some(dir) = artifact_dir() else { return };
     let mol = library::by_name("water").unwrap();
     let basis = build_basis(&mol, "sto-3g").unwrap();
     let d = test_density(basis.nbf);
 
-    let mut engine =
-        MatryoshkaEngine::new(basis.clone(), &dir, MatryoshkaConfig::default()).unwrap();
+    let mut engine = MatryoshkaEngine::new(basis.clone(), dir(), MatryoshkaConfig::default()).unwrap();
     let g_full = engine.two_electron(&d).unwrap();
 
     let nblocks = engine.plan().blocks.len();
@@ -144,4 +139,21 @@ fn sharded_g_build_sums_to_full_g() {
     let g_b = engine.build_g_for_blocks(&d, &shard_b).unwrap();
     g_a.add_scaled(&g_b, 1.0);
     assert!(g_a.diff_norm(&g_full) < 1e-11, "{}", g_a.diff_norm(&g_full));
+}
+
+#[test]
+fn engine_metrics_and_stats_are_populated_after_a_build() {
+    let mol = library::by_name("water").unwrap();
+    let basis = build_basis(&mol, "sto-3g").unwrap();
+    let d = test_density(basis.nbf);
+    let mut engine = MatryoshkaEngine::new(basis, dir(), MatryoshkaConfig::default()).unwrap();
+    engine.two_electron(&d).unwrap();
+
+    let quads = engine.plan().stats.quadruples_surviving;
+    assert_eq!(engine.metrics.total_real_quads(), quads);
+    let rs = engine.runtime_stats();
+    assert!(rs.executions > 0);
+    assert!(rs.quadruple_slots >= quads);
+    let util = engine.metrics.mean_lane_utilization();
+    assert!(util > 0.0 && util <= 1.0, "lane utilization {util}");
 }

@@ -1,0 +1,107 @@
+//! Vendored stand-in for the `anyhow` crate so the workspace builds with
+//! no network and no crates.io mirror (hermetic-build policy, see
+//! rust/Cargo.toml).  Implements exactly the API subset matryoshka uses:
+//!
+//! * [`Error`] — a message-carrying error type (`Display`/`Debug`, `Send`,
+//!   `Sync`), convertible from any `std::error::Error` via `?`;
+//! * [`Result`] — `Result<T, anyhow::Error>` with the same defaulted
+//!   second parameter as upstream;
+//! * [`anyhow!`] / [`bail!`] — the formatting constructor macros;
+//! * [`Error::msg`] — the `map_err(anyhow::Error::msg)` adaptor.
+//!
+//! Dropping the real anyhow crate back in place is source-compatible for
+//! every call site in this repository.
+
+use std::fmt;
+
+/// A boxed-free, message-carrying error.  Unlike upstream anyhow it does
+/// not capture backtraces or retain the source error object — the
+/// formatted message (which call sites assert on) is preserved exactly.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Construct from anything printable (the `map_err(anyhow::Error::msg)`
+    /// entry point).
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { msg: message.to_string() }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // upstream anyhow renders the message (plus backtrace) on Debug,
+        // which is what `fn main() -> anyhow::Result<()>` prints
+        f.write_str(&self.msg)
+    }
+}
+
+// `Error` intentionally does NOT implement std::error::Error: that keeps
+// this blanket conversion coherent with the reflexive `From<T> for T`
+// impl (the same trick upstream anyhow uses).
+impl<E: std::error::Error> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error::msg(e)
+    }
+}
+
+/// `anyhow::Result<T>` with the error type defaulted, as upstream.
+pub type Result<T, E = Error> = core::result::Result<T, E>;
+
+/// Construct an [`Error`] from a format string or a printable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($tt:tt)*) => {
+        return Err($crate::anyhow!($($tt)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse_and_double(s: &str) -> Result<i64> {
+        let v: i64 = s.parse()?; // From<ParseIntError> via the blanket impl
+        if v < 0 {
+            bail!("negative input {v}");
+        }
+        Ok(2 * v)
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        assert_eq!(parse_and_double("21").unwrap(), 42);
+        assert!(parse_and_double("xyz").is_err());
+    }
+
+    #[test]
+    fn bail_and_anyhow_format() {
+        let e = parse_and_double("-3").unwrap_err();
+        assert_eq!(e.to_string(), "negative input -3");
+        let e2 = anyhow!("class {:?} missing", (0u8, 1u8));
+        assert!(e2.to_string().contains("(0, 1)"));
+        let e3 = Error::msg("plain");
+        assert_eq!(format!("{e3:?}"), "plain");
+    }
+}

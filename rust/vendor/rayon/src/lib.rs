@@ -1,0 +1,172 @@
+//! Vendored stand-in for the `rayon` crate (hermetic-build policy, see
+//! rust/Cargo.toml).  Provides the thread-pool API subset the Matryoshka
+//! engine uses — `ThreadPoolBuilder`, `ThreadPool::scope`, `Scope::spawn`
+//! — with rayon-compatible signatures, backed by `std::thread::scope`.
+//!
+//! Semantics vs upstream rayon:
+//! * `scope` collects the tasks queued by `op` and then drains them on
+//!   `num_threads` OS threads (1 thread runs inline, no spawn at all);
+//!   upstream starts executing while `op` is still running.  Callers that
+//!   enqueue all work up front (the only pattern in this repo) observe no
+//!   difference.
+//! * Tasks spawned *by other tasks* are executed as long as at least one
+//!   worker is still draining the queue; upstream's work-stealing
+//!   guarantees are stronger.  The engine does not nest spawns.
+//!
+//! Swapping upstream rayon back in is a one-line Cargo.toml change.
+
+use std::collections::VecDeque;
+use std::fmt;
+use std::sync::Mutex;
+
+type Task<'scope> = Box<dyn FnOnce(&Scope<'scope>) + Send + 'scope>;
+
+/// Builder mirroring `rayon::ThreadPoolBuilder`.
+#[derive(Default)]
+pub struct ThreadPoolBuilder {
+    num_threads: usize,
+}
+
+/// Error type mirroring `rayon::ThreadPoolBuildError` (this shim never
+/// actually fails to build).
+#[derive(Debug)]
+pub struct ThreadPoolBuildError;
+
+impl fmt::Display for ThreadPoolBuildError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str("thread pool build error")
+    }
+}
+
+impl std::error::Error for ThreadPoolBuildError {}
+
+impl ThreadPoolBuilder {
+    pub fn new() -> ThreadPoolBuilder {
+        ThreadPoolBuilder { num_threads: 0 }
+    }
+
+    /// 0 (the default) means "one per available hardware thread".
+    pub fn num_threads(mut self, n: usize) -> ThreadPoolBuilder {
+        self.num_threads = n;
+        self
+    }
+
+    pub fn build(self) -> Result<ThreadPool, ThreadPoolBuildError> {
+        let n = if self.num_threads == 0 {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        } else {
+            self.num_threads
+        };
+        Ok(ThreadPool { num_threads: n })
+    }
+}
+
+/// A fixed-width pool.  The shim holds no persistent worker threads; they
+/// are scoped to each `scope` call, which keeps the implementation sound
+/// without lifetime erasure.
+pub struct ThreadPool {
+    num_threads: usize,
+}
+
+/// Task scope handed to `ThreadPool::scope` closures.
+pub struct Scope<'scope> {
+    queue: Mutex<VecDeque<Task<'scope>>>,
+}
+
+impl<'scope> Scope<'scope> {
+    pub fn spawn<F>(&self, f: F)
+    where
+        F: FnOnce(&Scope<'scope>) + Send + 'scope,
+    {
+        self.queue.lock().unwrap().push_back(Box::new(f));
+    }
+
+    fn next_task(&self) -> Option<Task<'scope>> {
+        self.queue.lock().unwrap().pop_front()
+    }
+}
+
+impl ThreadPool {
+    pub fn current_num_threads(&self) -> usize {
+        self.num_threads
+    }
+
+    /// Run `op`, then execute every task it spawned; returns after all
+    /// tasks (including tasks spawned by tasks) have completed.
+    pub fn scope<'scope, OP, R>(&self, op: OP) -> R
+    where
+        OP: FnOnce(&Scope<'scope>) -> R + Send,
+        R: Send,
+    {
+        let scope = Scope { queue: Mutex::new(VecDeque::new()) };
+        let result = op(&scope);
+        // all tasks are queued by now (op has returned): never spawn more
+        // OS threads than there are tasks to drain
+        let workers = self.num_threads.min(scope.queue.lock().unwrap().len());
+        if workers <= 1 {
+            while let Some(task) = scope.next_task() {
+                task(&scope);
+            }
+        } else {
+            std::thread::scope(|s| {
+                for _ in 0..workers {
+                    s.spawn(|| {
+                        while let Some(task) = scope.next_task() {
+                            task(&scope);
+                        }
+                    });
+                }
+            });
+        }
+        result
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn builder_resolves_zero_to_hardware_threads() {
+        let pool = ThreadPoolBuilder::new().build().unwrap();
+        assert!(pool.current_num_threads() >= 1);
+        let pool4 = ThreadPoolBuilder::new().num_threads(4).build().unwrap();
+        assert_eq!(pool4.current_num_threads(), 4);
+    }
+
+    #[test]
+    fn scope_runs_every_spawned_task_before_returning() {
+        for threads in [1, 2, 8] {
+            let pool = ThreadPoolBuilder::new().num_threads(threads).build().unwrap();
+            let counter = AtomicUsize::new(0);
+            let ret = pool.scope(|s| {
+                for _ in 0..37 {
+                    s.spawn(|_| {
+                        counter.fetch_add(1, Ordering::Relaxed);
+                    });
+                }
+                "op-result"
+            });
+            assert_eq!(ret, "op-result");
+            assert_eq!(counter.load(Ordering::Relaxed), 37);
+        }
+    }
+
+    #[test]
+    fn workers_share_a_queue_of_borrowing_tasks() {
+        let data: Vec<usize> = (0..100).collect();
+        let sums: Mutex<Vec<usize>> = Mutex::new(Vec::new());
+        let pool = ThreadPoolBuilder::new().num_threads(3).build().unwrap();
+        pool.scope(|s| {
+            for chunk in data.chunks(10) {
+                let sums = &sums;
+                s.spawn(move |_| {
+                    sums.lock().unwrap().push(chunk.iter().sum());
+                });
+            }
+        });
+        let total: usize = sums.lock().unwrap().iter().sum();
+        assert_eq!(total, 100 * 99 / 2);
+    }
+}
