@@ -10,7 +10,11 @@
 mod common;
 
 use matryoshka::bench_harness as bh;
+use matryoshka::basis::build_basis;
+use matryoshka::constructor::PairList;
 use matryoshka::engines::MatryoshkaConfig;
+use matryoshka::molecule::library;
+use matryoshka::runtime::{EriBackend, EriEvalStrategy, NativeBackend};
 use matryoshka::scf::FockEngine;
 use matryoshka::util::Stopwatch;
 
@@ -126,4 +130,71 @@ fn main() {
         }
     }
     println!("(thread count changes wall time, never results — bitwise-deterministic merge)");
+
+    bh::header("Fig. 13d — memoized Hermite E/R tables vs recursive baseline (p/d classes)");
+    println!(
+        "{:<14} {:>6} {:>7} {:>11} {:>11} {:>9}",
+        "class", "ncomp", "quads", "recur_s", "tables_s", "speedup"
+    );
+    let mol = library::by_name("water").expect("water");
+    let basis = build_basis(&mol, "6-31g*").expect("6-31g* basis");
+    let pairs = PairList::build(&basis, 1e-14);
+    // first pair of each pair-class, by the clustered class ranges
+    let pair_of = |class: (u8, u8)| {
+        pairs
+            .class_ranges
+            .iter()
+            .find(|(c, _)| *c == class)
+            .map(|(_, r)| &pairs.pairs[r.start])
+            .expect("pair class present in water/6-31G*")
+    };
+    let reps = if common::full_mode() { 20 } else { 6 };
+    for (bra_c, ket_c) in [((1, 1), (1, 1)), ((2, 0), (0, 0)), ((2, 2), (1, 1)), ((2, 2), (2, 2))] {
+        let (bra, ket) = (pair_of(bra_c), pair_of(ket_c));
+        let class = (bra_c.0, bra_c.1, ket_c.0, ket_c.1);
+        let time_with = |strategy: EriEvalStrategy| {
+            let backend = NativeBackend::with_options(pairs.kpair, strategy);
+            let variant = backend.manifest().ladder(class)[1].clone(); // 128 rung
+            let (b, kb, kk) = (variant.batch, variant.kpair_bra, variant.kpair_ket);
+            // replicate one real quad across every batch row
+            let mut bp = vec![0.0; b * kb * 5];
+            let mut bg = vec![0.0; b * 6];
+            let mut kp = vec![0.0; b * kk * 5];
+            let mut kg = vec![0.0; b * 6];
+            for r in 0..b {
+                bp[r * kb * 5..(r + 1) * kb * 5].copy_from_slice(&bra.prim);
+                kp[r * kk * 5..(r + 1) * kk * 5].copy_from_slice(&ket.prim);
+                bg[r * 6..(r + 1) * 6].copy_from_slice(&bra.geom);
+                kg[r * 6..(r + 1) * 6].copy_from_slice(&ket.geom);
+            }
+            backend.execute_eri(&variant, &bp, &bg, &kp, &kg).expect("warm");
+            let mut best = f64::INFINITY;
+            for _ in 0..reps {
+                let sw = Stopwatch::start();
+                backend.execute_eri(&variant, &bp, &bg, &kp, &kg).expect("measured");
+                best = best.min(sw.elapsed_s());
+            }
+            (best, variant.ncomp, b)
+        };
+        let (t_rec, ncomp, b) = time_with(EriEvalStrategy::Recursion);
+        let (t_tab, _, _) = time_with(EriEvalStrategy::Tables);
+        println!(
+            "{:<14} {:>6} {:>7} {:>11.5} {:>11.5} {:>8.2}x",
+            format!("{class:?}"),
+            ncomp,
+            b,
+            t_rec,
+            t_tab,
+            t_rec / t_tab.max(1e-12)
+        );
+        // the memoized tables must beat the recursion on d-heavy classes
+        // (10% noise allowance, as in 13c)
+        if class.0 == 2 && class.1 == 2 {
+            assert!(
+                t_tab < t_rec * 1.10,
+                "{class:?}: table evaluator not faster than the recursive baseline"
+            );
+        }
+    }
+    println!("(one (axis, primitive-pair) E-table serves all ncomp component quadruples)");
 }

@@ -24,8 +24,11 @@ fn main() {
         "{:<16} {:>4} {:>12} {:>12} {:>8} {:>11} {:>11}",
         "class", "L", "flops/quad", "bytes/quad", "OP/B", "quads/s", "MFLOP/s"
     );
-    let mut last_opb = 0.0;
-    let mut monotone = true;
+    // Fig. 6's claim is a trend over total angular momentum: the best
+    // OP/B of each L tier must rise with L (within one tier, small
+    // classes like (2,0,0,0) legitimately sit below big ones like
+    // (1,1,1,1) — the catalog sort order interleaves tiers)
+    let mut best_per_l: std::collections::BTreeMap<u8, f64> = std::collections::BTreeMap::new();
     for class in manifest.classes() {
         let v = manifest.ladder(class)[0];
         let l = class.0 + class.1 + class.2 + class.3;
@@ -41,12 +44,13 @@ fn main() {
             stats.throughput(),
             stats.throughput() * v.flops_per_quad / 1e6
         );
-        // classes are sorted ascending; OP/B must rise with L overall
-        if opb < last_opb * 0.8 {
-            monotone = false;
-        }
-        last_opb = opb;
+        let e = best_per_l.entry(l).or_insert(0.0);
+        *e = e.max(opb);
     }
-    assert!(monotone, "OP/B should trend upward with angular momentum");
+    let best: Vec<f64> = best_per_l.values().copied().collect();
+    assert!(
+        best.windows(2).all(|w| w[1] > w[0]),
+        "OP/B should trend upward with angular momentum: {best:?}"
+    );
     println!("\n(OP/B rises with angular momentum — Fig. 6's upward trend)");
 }

@@ -41,9 +41,20 @@ const IMPROVE_EPS: f64 = 0.02;
 
 impl ClassTuner {
     /// Public for tests/benches; engines go through `AutoTuner`.
-    pub fn new(class: ClassKey, ladder: Vec<usize>) -> Self {
+    ///
+    /// An empty ladder is rejected at construction: a tuner with no rungs
+    /// has no `current_batch`, and a class absent from the catalog must
+    /// surface as the engine's "no kernel variant" error *before* any
+    /// tuner exists — never as an index-out-of-bounds panic mid-build.
+    pub fn new(class: ClassKey, ladder: Vec<usize>) -> anyhow::Result<Self> {
+        if ladder.is_empty() {
+            anyhow::bail!(
+                "class {class:?}: cannot tune over an empty batch ladder \
+                 (no kernel variants in the catalog)"
+            );
+        }
         let n = ladder.len();
-        ClassTuner {
+        Ok(ClassTuner {
             class,
             ladder,
             idx: 0,
@@ -51,7 +62,7 @@ impl ClassTuner {
             samples: 0,
             converged: n <= 1,
             history: Vec::new(),
-        }
+        })
     }
 
     /// Batch size to use for the next block of this class.
@@ -142,7 +153,7 @@ impl AutoTuner {
             if ladder.is_empty() {
                 continue;
             }
-            let mut t = ClassTuner::new(class, ladder);
+            let mut t = ClassTuner::new(class, ladder).expect("ladder checked non-empty");
             if !enabled {
                 // pin to the requested batch (or nearest available)
                 let idx = t
@@ -210,8 +221,12 @@ impl AutoTuner {
         self.tuners.get(&class)
     }
 
+    /// True when every class with at least one observation has converged.
+    /// Classes the current system never executes (e.g. d classes of the
+    /// catalog under an s/p basis) have nothing to tune and must not keep
+    /// warm-up loops spinning forever.
     pub fn all_converged(&self) -> bool {
-        self.tuners.values().all(|t| t.converged)
+        self.tuners.values().all(|t| t.converged || t.history.is_empty())
     }
 
     pub fn classes(&self) -> Vec<ClassKey> {
@@ -226,7 +241,16 @@ mod tests {
     use super::*;
 
     fn tuner(ladder: &[usize]) -> ClassTuner {
-        ClassTuner::new((0, 0, 0, 0), ladder.to_vec())
+        ClassTuner::new((0, 0, 0, 0), ladder.to_vec()).unwrap()
+    }
+
+    #[test]
+    fn empty_ladder_is_rejected_at_construction() {
+        // regression: used to build a tuner whose current_batch() panicked
+        // with index-out-of-bounds on first use
+        let err = ClassTuner::new((3, 0, 0, 0), Vec::new()).unwrap_err().to_string();
+        assert!(err.contains("empty batch ladder"), "{err}");
+        assert!(err.contains("(3, 0, 0, 0)"), "{err}");
     }
 
     #[test]
@@ -316,6 +340,29 @@ mod tests {
         sharded.apply_observations(&obs);
         assert_eq!(sharded.batch_for(class), sequential.batch_for(class));
         assert_eq!(sharded.batch_snapshot()[&class], sharded.batch_for(class));
+    }
+
+    #[test]
+    fn unobserved_classes_do_not_block_all_converged() {
+        let manifest = crate::runtime::Manifest::parse(
+            "eri_ssss_b32 0 0 0 0 32 9 9 1 0 1 0 5 9.0 8.0 greedy a\n\
+             eri_ssss_b128 0 0 0 0 128 9 9 1 0 1 0 5 9.0 8.0 greedy b\n\
+             eri_dsss_b32 2 0 0 0 32 9 9 6 2 10 6 25 90.0 9.0 greedy c\n\
+             eri_dsss_b128 2 0 0 0 128 9 9 6 2 10 6 25 90.0 9.0 greedy d\n",
+            std::path::Path::new("/tmp"),
+        )
+        .unwrap();
+        let mut at = AutoTuner::new(&manifest, true, 32);
+        // only the s class is ever executed; the untouched d class must
+        // not keep all_converged() false forever
+        let class = (0, 0, 0, 0);
+        at.observe(class, 32, 32.0 * 5e-6);
+        assert!(!at.all_converged(), "s class is mid-measurement");
+        for _ in 0..(2 * SAMPLES_PER_RUNG) {
+            at.observe(class, 32, 32.0 * 5e-6);
+        }
+        assert!(at.tuner(class).unwrap().converged);
+        assert!(at.all_converged());
     }
 
     #[test]

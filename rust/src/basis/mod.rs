@@ -1,4 +1,4 @@
-//! Gaussian basis-set machinery: shells, STO-3G data, normalization.
+//! Gaussian basis-set machinery: shells, bundled basis data, normalization.
 //!
 //! A contracted shell ψ = Σ_k c_k φ(α_k) carries its angular momentum l,
 //! primitive exponents, and *effective* coefficients (raw tabulated
@@ -6,29 +6,71 @@
 //! All downstream integral code — the Rust MD reference engine, the pair
 //! data fed to the HLO kernels, and the one-electron integrals — consumes
 //! effective coefficients and computes unnormalized primitives, so the
-//! normalization convention lives in exactly one place: here.
+//! normalization convention lives in exactly one place: here (the
+//! per-component Cartesian factors of d+ shells via `shell::comp_norm`).
+//!
+//! Bundled basis sets live in a table-driven registry: each entry maps a
+//! name (plus aliases) to an element → raw-shell function.  `build_basis`
+//! and the CLI `--basis` flag resolve through it, so adding a basis is one
+//! data file plus one registry row.
 
 pub mod shell;
+mod six31g;
 mod sto3g;
 
-pub use shell::{cart_components, ncart, prim_norm, BasisSet, Shell};
+pub use shell::{cart_components, comp_norm, comp_norms, ncart, prim_norm, BasisSet, Shell};
+pub use six31g::six31gs_shells;
 pub use sto3g::sto3g_shells;
 
 use crate::molecule::Molecule;
 
+/// One tabulated shell before normalization: (l, exponents, raw coefs).
+pub type RawShell = (u8, Vec<f64>, Vec<f64>);
+
+/// One bundled basis set: canonical name, accepted aliases, data source.
+pub struct BasisSpec {
+    pub name: &'static str,
+    pub aliases: &'static [&'static str],
+    pub shells: fn(u32) -> anyhow::Result<Vec<RawShell>>,
+}
+
+/// Every basis set shipped with the crate.
+pub fn basis_registry() -> &'static [BasisSpec] {
+    &[
+        BasisSpec { name: "sto-3g", aliases: &["sto3g"], shells: sto3g_shells },
+        BasisSpec {
+            name: "6-31g*",
+            aliases: &["6-31gs", "6-31g(d)", "631g*", "631gs"],
+            shells: six31gs_shells,
+        },
+    ]
+}
+
+/// Canonical names of the bundled basis sets (for error text / help).
+pub fn available_basis_names() -> Vec<&'static str> {
+    basis_registry().iter().map(|b| b.name).collect()
+}
+
+/// Case-insensitive registry lookup by name or alias.
+pub fn lookup_basis(name: &str) -> Option<&'static BasisSpec> {
+    let lname = name.to_lowercase();
+    basis_registry()
+        .iter()
+        .find(|b| b.name == lname || b.aliases.contains(&lname.as_str()))
+}
+
 /// Build the full basis for a molecule in the given basis set.
-///
-/// Only "sto-3g" is shipped; the machinery is general over any segmented
-/// contraction with s/p shells (d+ supported by the integrals code and the
-/// Graph Compiler, but no d basis is bundled).
 pub fn build_basis(mol: &Molecule, basis_name: &str) -> anyhow::Result<BasisSet> {
-    if basis_name.to_lowercase() != "sto-3g" {
-        anyhow::bail!("unknown basis set: {basis_name} (available: sto-3g)");
-    }
+    let spec = lookup_basis(basis_name).ok_or_else(|| {
+        anyhow::anyhow!(
+            "unknown basis set: {basis_name} (available: {})",
+            available_basis_names().join(", ")
+        )
+    })?;
     let mut shells = Vec::new();
     let mut first_bf = 0usize;
     for (atom_idx, atom) in mol.atoms.iter().enumerate() {
-        for (l, exps, coefs) in sto3g_shells(atom.z)? {
+        for (l, exps, coefs) in (spec.shells)(atom.z)? {
             let mut sh = Shell::new(l, exps, coefs, atom.pos, atom_idx, first_bf);
             sh.normalize();
             first_bf += ncart(sh.l);
@@ -59,23 +101,53 @@ mod tests {
     }
 
     #[test]
-    fn unknown_basis_is_an_error() {
+    fn water_631gs_has_19_basis_functions_with_a_d_shell() {
         let mol = library::by_name("water").unwrap();
-        assert!(build_basis(&mol, "6-31g").is_err());
+        let basis = build_basis(&mol, "6-31g*").unwrap();
+        // O: 3s + 2p + 1d = 6 shells, 3 + 6 + 6 = 15 bf; H: 2s each
+        assert_eq!(basis.shells.len(), 10);
+        assert_eq!(basis.nbf, 19);
+        assert_eq!(basis.shells.iter().filter(|s| s.l == 2).count(), 1);
+        assert_eq!(basis.max_kpair(), 36); // 6-primitive core shells
+    }
+
+    #[test]
+    fn methane_631gs_has_23_basis_functions() {
+        let mol = library::by_name("methane").unwrap();
+        let basis = build_basis(&mol, "6-31g*").unwrap();
+        assert_eq!(basis.nbf, 23);
+    }
+
+    #[test]
+    fn basis_aliases_resolve_to_the_same_basis() {
+        let mol = library::by_name("water").unwrap();
+        for alias in ["6-31G*", "6-31gs", "6-31G(d)"] {
+            assert_eq!(build_basis(&mol, alias).unwrap().nbf, 19, "{alias}");
+        }
+        assert_eq!(build_basis(&mol, "STO3G").unwrap().nbf, 7);
+    }
+
+    #[test]
+    fn unknown_basis_error_enumerates_bundled_sets() {
+        let mol = library::by_name("water").unwrap();
+        let err = build_basis(&mol, "cc-pvdz").unwrap_err().to_string();
+        assert!(err.contains("sto-3g") && err.contains("6-31g*"), "{err}");
     }
 
     #[test]
     fn normalized_shell_has_unit_self_overlap() {
         let mol = library::by_name("water").unwrap();
-        let basis = build_basis(&mol, "sto-3g").unwrap();
-        for sh in &basis.shells {
-            let s = crate::integrals::shell_self_overlap(sh);
-            assert!(
-                (s - 1.0).abs() < 1e-10,
-                "shell l={} self overlap {}",
-                sh.l,
-                s
-            );
+        for basis_name in ["sto-3g", "6-31g*"] {
+            let basis = build_basis(&mol, basis_name).unwrap();
+            for sh in &basis.shells {
+                let s = crate::integrals::shell_self_overlap(sh);
+                assert!(
+                    (s - 1.0).abs() < 1e-10,
+                    "{basis_name} shell l={} self overlap {}",
+                    sh.l,
+                    s
+                );
+            }
         }
     }
 }

@@ -38,6 +38,33 @@ pub fn prim_norm(alpha: f64, lmn: [u8; 3]) -> f64 {
     (2.0 * alpha / std::f64::consts::PI).powf(0.75) * (4.0 * alpha).powf(l / 2.0) / df.sqrt()
 }
 
+/// Exponent-independent per-component normalization ratio
+/// `prim_norm(a, lmn) / prim_norm(a, (l,0,0))` =
+/// sqrt((2l−1)!! / ((2lx−1)!!(2ly−1)!!(2lz−1)!!)).
+///
+/// `Shell::normalize` folds the (l,0,0) norm into the contraction
+/// coefficients (one scalar per primitive — the pair-data layout shares a
+/// single `Kab` across all components of a shell pair, so per-component
+/// factors cannot live there).  Every integral path multiplies each
+/// Cartesian component by this ratio instead: 1 for s/p and the leading
+/// (l,0,0) component, √3 for d(xy/xz/yz), √5 / √15 for mixed f, …  With
+/// it applied, every Cartesian component has unit contracted self-overlap
+/// (the ratio of same-l self-overlaps is exponent-independent, so the
+/// contracted renormalization carries over component by component).
+pub fn comp_norm(lmn: [u8; 3]) -> f64 {
+    let l = lmn[0] + lmn[1] + lmn[2];
+    let df = dfact(2 * lmn[0] as i32 - 1)
+        * dfact(2 * lmn[1] as i32 - 1)
+        * dfact(2 * lmn[2] as i32 - 1);
+    (dfact(2 * l as i32 - 1) / df).sqrt()
+}
+
+/// Per-component normalization ratios of shell l, in `cart_components`
+/// order (all 1.0 for s/p shells).
+pub fn comp_norms(l: u8) -> Vec<f64> {
+    cart_components(l).into_iter().map(comp_norm).collect()
+}
+
 /// A contracted Cartesian Gaussian shell placed on an atom.
 #[derive(Clone, Debug)]
 pub struct Shell {
@@ -76,13 +103,20 @@ impl Shell {
         ncart(self.l)
     }
 
+    /// Per-component normalization ratios of this shell (see [`comp_norm`]).
+    pub fn comp_norms(&self) -> Vec<f64> {
+        comp_norms(self.l)
+    }
+
     /// Fold primitive normalization and contracted renormalization into
     /// the coefficients.  After this, `coefs` are the *effective*
     /// coefficients every integral path consumes.
     ///
-    /// The renormalization uses the (l,0,0) component; for s/p shells all
-    /// components share it.  (Cartesian d+ shells would need per-component
-    /// factors — the bundled STO-3G never produces them at runtime.)
+    /// The folded factors are those of the (l,0,0) component — one scalar
+    /// per primitive, as the pair-data `Kab` layout requires.  The
+    /// remaining per-component ratios (√3 for d(xy), …) are
+    /// exponent-independent, so the integral paths apply them per
+    /// Cartesian component via [`comp_norm`]; see [`Shell::comp_norms`].
     pub fn normalize(&mut self) {
         let lmn = [self.l, 0, 0];
         for (c, &a) in self.coefs.iter_mut().zip(self.exps.iter()) {
@@ -149,6 +183,34 @@ mod tests {
         let n = prim_norm(a, [0, 0, 0]);
         let s = n * n * (std::f64::consts::PI / (2.0 * a)).powf(1.5);
         assert!((s - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn comp_norm_is_prim_norm_ratio_and_exponent_independent() {
+        for &a in &[0.3, 1.1, 4.7] {
+            for l in 0..=3u8 {
+                for lmn in cart_components(l) {
+                    let want = prim_norm(a, lmn) / prim_norm(a, [l, 0, 0]);
+                    assert!(
+                        (comp_norm(lmn) - want).abs() < 1e-13,
+                        "a={a} lmn={lmn:?}: {} vs {want}",
+                        comp_norm(lmn)
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn comp_norm_values_for_d_and_f() {
+        // s/p and the leading component are 1; mixed d components need √3
+        assert_eq!(comp_norm([0, 0, 0]), 1.0);
+        assert_eq!(comp_norm([1, 0, 0]), 1.0);
+        assert_eq!(comp_norm([2, 0, 0]), 1.0);
+        assert!((comp_norm([1, 1, 0]) - 3.0f64.sqrt()).abs() < 1e-15);
+        assert!((comp_norm([2, 1, 0]) - 5.0f64.sqrt()).abs() < 1e-15);
+        assert!((comp_norm([1, 1, 1]) - 15.0f64.sqrt()).abs() < 1e-15);
+        assert_eq!(comp_norms(2).len(), 6);
     }
 
     #[test]

@@ -1,0 +1,113 @@
+//! 6-31G* (6-31G(d)) basis-set data (EMSL Basis Set Exchange tabulation).
+//!
+//! Split-valence 6-31G plus one Cartesian d polarization shell on heavy
+//! atoms — the repo's first d-shell basis, lighting up the l=2 classes of
+//! the native catalog.  SP shells of the tabulation are split into
+//! separate s and p shells sharing exponents, like `sto3g`.  Coefficients
+//! are the raw tabulated values; `Shell::normalize` folds the (l,0,0)
+//! normalization in and the integral paths apply the per-component
+//! Cartesian factors (`shell::comp_norm`).
+
+use super::RawShell;
+
+fn sp(exps: &[f64], cs: &[f64], cp: &[f64]) -> Vec<RawShell> {
+    vec![(0, exps.to_vec(), cs.to_vec()), (1, exps.to_vec(), cp.to_vec())]
+}
+
+/// 6-31G* shells for atomic number `z` (H, C, N, O bundled).
+pub fn six31gs_shells(z: u32) -> anyhow::Result<Vec<RawShell>> {
+    let mut shells: Vec<RawShell> = Vec::new();
+    match z {
+        1 => {
+            // H (no polarization in 6-31G*)
+            shells.push((
+                0,
+                vec![18.731_137_0, 2.825_393_7, 0.640_121_7],
+                vec![0.033_494_60, 0.234_726_95, 0.813_757_33],
+            ));
+            shells.push((0, vec![0.161_277_8], vec![1.0]));
+        }
+        6 => {
+            // C
+            shells.push((
+                0,
+                vec![3047.524_9, 457.369_51, 103.948_69, 29.210_155, 9.286_663_0, 3.163_927_0],
+                vec![0.001_834_7, 0.014_037_3, 0.068_842_6, 0.232_184_4, 0.467_941_3, 0.362_312_0],
+            ));
+            shells.extend(sp(
+                &[7.868_272_4, 1.881_288_5, 0.544_249_3],
+                &[-0.119_332_4, -0.160_854_2, 1.143_456_4],
+                &[0.068_999_1, 0.316_424_0, 0.744_308_3],
+            ));
+            shells.extend(sp(&[0.168_714_4], &[1.0], &[1.0]));
+            shells.push((2, vec![0.8], vec![1.0]));
+        }
+        7 => {
+            // N
+            shells.push((
+                0,
+                vec![4173.511_0, 627.457_90, 142.902_10, 40.234_330, 12.820_210, 4.390_437_0],
+                vec![0.001_834_8, 0.013_995_0, 0.068_587_0, 0.232_241_0, 0.469_070_0, 0.360_455_0],
+            ));
+            shells.extend(sp(
+                &[11.626_358, 2.716_280_0, 0.772_218_0],
+                &[-0.114_961_0, -0.169_118_0, 1.145_852_0],
+                &[0.067_580_0, 0.323_907_0, 0.740_895_0],
+            ));
+            shells.extend(sp(&[0.212_031_3], &[1.0], &[1.0]));
+            shells.push((2, vec![0.8], vec![1.0]));
+        }
+        8 => {
+            // O
+            shells.push((
+                0,
+                vec![5484.671_7, 825.234_95, 188.046_96, 52.964_500, 16.897_570, 5.799_635_3],
+                vec![0.001_831_1, 0.013_950_1, 0.068_445_1, 0.232_714_3, 0.470_193_0, 0.358_520_9],
+            ));
+            shells.extend(sp(
+                &[15.539_616, 3.599_933_6, 1.013_761_8],
+                &[-0.110_777_5, -0.148_026_3, 1.130_767_0],
+                &[0.070_874_3, 0.339_752_8, 0.727_158_6],
+            ));
+            shells.extend(sp(&[0.270_005_8], &[1.0], &[1.0]));
+            shells.push((2, vec![0.8], vec![1.0]));
+        }
+        _ => anyhow::bail!("6-31G* data not bundled for Z={z} (bundled: H, C, N, O)"),
+    }
+    Ok(shells)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hydrogen_is_split_valence_without_polarization() {
+        let shells = six31gs_shells(1).unwrap();
+        let ls: Vec<u8> = shells.iter().map(|s| s.0).collect();
+        assert_eq!(ls, vec![0, 0]);
+        assert_eq!(shells[0].1.len(), 3);
+        assert_eq!(shells[1].1.len(), 1);
+    }
+
+    #[test]
+    fn heavy_atoms_carry_one_d_shell() {
+        for z in [6u32, 7, 8] {
+            let shells = six31gs_shells(z).unwrap();
+            let ls: Vec<u8> = shells.iter().map(|s| s.0).collect();
+            assert_eq!(ls, vec![0, 0, 1, 0, 1, 2], "Z={z}");
+            assert_eq!(shells[0].1.len(), 6, "Z={z} core contraction");
+            // SP shells share exponents
+            assert_eq!(shells[1].1, shells[2].1);
+            assert_eq!(shells[3].1, shells[4].1);
+            // single uncontracted polarization d
+            assert_eq!(shells[5].1, vec![0.8]);
+        }
+    }
+
+    #[test]
+    fn unsupported_element_errors() {
+        let err = six31gs_shells(16).unwrap_err().to_string();
+        assert!(err.contains("6-31G*"), "{err}");
+    }
+}

@@ -5,7 +5,7 @@
 //! sharing exponents.  Coefficients here are the raw tabulated values;
 //! `Shell::normalize` folds normalization in.
 
-type RawShell = (u8, Vec<f64>, Vec<f64>);
+use super::RawShell;
 
 // Shared contraction coefficient sets of the STO-3G expansion.
 const C_1S: [f64; 3] = [0.154_328_967_3, 0.535_328_142_3, 0.444_634_542_2];

@@ -9,8 +9,11 @@ use crate::basis::BasisSet;
 
 use super::schwarz::{schwarz_bound, SchwarzMode};
 
-/// Primitive products per pair row (STO-3G: 3×3; shells with fewer
-/// primitives pad with zero-prefactor rows).
+/// Primitive products per pair row of the *AOT artifact contract*
+/// (STO-3G: 3×3).  The PJRT kernels are compiled against this fixed
+/// width; the pair data itself is sized per basis ([`PairList::kpair`] =
+/// `BasisSet::max_kpair()`, e.g. 36 for 6-31G*'s 6-primitive cores), and
+/// shells with fewer primitives pad with zero-prefactor rows.
 pub const KPAIR: usize = 9;
 
 /// Angular-momentum class of a pair, canonical (la >= lb).
@@ -23,7 +26,7 @@ pub struct ShellPair {
     pub si: usize,
     pub sj: usize,
     pub class: PairClass,
-    /// [KPAIR * 5]: p, Px, Py, Pz, Kab
+    /// [kpair * 5]: p, Px, Py, Pz, Kab (kpair = the owning PairList's)
     pub prim: Vec<f64>,
     /// [6]: Ax, Ay, Az, ABx, ABy, ABz
     pub geom: [f64; 6],
@@ -41,6 +44,9 @@ pub struct PairList {
     /// pairs dropped entirely by the pair-level Schwarz filter
     pub dropped: usize,
     pub max_schwarz: f64,
+    /// primitive-product rows per pair (`BasisSet::max_kpair()` of the
+    /// source basis); every `ShellPair::prim` holds `kpair * 5` values
+    pub kpair: usize,
 }
 
 impl PairList {
@@ -55,6 +61,7 @@ impl PairList {
     /// strongest partner in the system is dropped outright.
     pub fn build_with_mode(basis: &BasisSet, threshold: f64, mode: SchwarzMode) -> PairList {
         let ns = basis.shells.len();
+        let kpair = basis.max_kpair().max(1);
         let mut raw: Vec<ShellPair> = Vec::with_capacity(ns * (ns + 1) / 2);
         let mut max_schwarz = 0.0f64;
         for i in 0..ns {
@@ -64,7 +71,7 @@ impl PairList {
                 let sa = &basis.shells[si];
                 let sb = &basis.shells[sj];
 
-                let mut prim = vec![0.0; KPAIR * 5];
+                let mut prim = vec![0.0; kpair * 5];
                 for row in prim.chunks_mut(5) {
                     row[0] = 1.0; // padding keeps p finite
                 }
@@ -83,7 +90,7 @@ impl PairList {
                         row += 1;
                     }
                 }
-                debug_assert!(row <= KPAIR);
+                debug_assert!(row <= kpair);
                 let q = schwarz_bound(mode, sa, sb, &prim);
                 max_schwarz = max_schwarz.max(q);
                 let geom = [
@@ -117,7 +124,7 @@ impl PairList {
                 start = i;
             }
         }
-        PairList { pairs: raw, class_ranges, dropped, max_schwarz }
+        PairList { pairs: raw, class_ranges, dropped, max_schwarz, kpair }
     }
 
     pub fn len(&self) -> usize {
@@ -184,12 +191,24 @@ mod tests {
         let mol = library::by_name("water").unwrap();
         let basis = build_basis(&mol, "sto-3g").unwrap();
         let pl = PairList::build(&basis, 1e-12);
+        assert_eq!(pl.kpair, KPAIR); // STO-3G matches the artifact contract
         for pair in &pl.pairs {
             let nreal = basis.shells[pair.si].nprim() * basis.shells[pair.sj].nprim();
-            for row in nreal..KPAIR {
+            for row in nreal..pl.kpair {
                 assert_eq!(pair.prim[row * 5], 1.0);
                 assert_eq!(pair.prim[row * 5 + 4], 0.0);
             }
+        }
+    }
+
+    #[test]
+    fn kpair_widens_for_deep_contractions() {
+        let mol = library::by_name("water").unwrap();
+        let basis = build_basis(&mol, "6-31g*").unwrap();
+        let pl = PairList::build(&basis, 1e-12);
+        assert_eq!(pl.kpair, 36); // 6-primitive core shells → 36 products
+        for pair in &pl.pairs {
+            assert_eq!(pair.prim.len(), pl.kpair * 5);
         }
     }
 

@@ -40,9 +40,17 @@ pub fn schwarz_estimate(prim: &[f64]) -> f64 {
 }
 
 /// Dispatch on mode; `prim` is the pair-row data, shells the originals.
+///
+/// The s-type estimate is validated against exact bounds for s/p pairs
+/// only; d+ components carry angular/√3 factors it ignores, so screening
+/// with it could silently drop quads above threshold.  Estimate mode
+/// therefore falls back to the exact diagonal for any pair involving a
+/// shell with l ≥ 2 — pair diagonals are O(pairs), cheap next to the
+/// O(pairs²) quadruple space the estimate exists to screen.
 pub fn schwarz_bound(mode: SchwarzMode, sa: &Shell, sb: &Shell, prim: &[f64]) -> f64 {
     match mode {
         SchwarzMode::Exact => schwarz_diagonal(sa, sb),
+        SchwarzMode::Estimate if sa.l.max(sb.l) >= 2 => schwarz_diagonal(sa, sb),
         SchwarzMode::Estimate => schwarz_estimate(prim),
     }
 }
@@ -85,6 +93,20 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn estimate_mode_uses_exact_diagonals_for_d_pairs() {
+        // the s-type estimate has no angular correction; d pairs must get
+        // the exact bound even in Estimate mode so screening stays safe
+        let mol = library::by_name("water").unwrap();
+        let basis = build_basis(&mol, "6-31g*").unwrap();
+        let d_shell = basis.shells.iter().position(|s| s.l == 2).unwrap();
+        let s_shell = basis.shells.iter().position(|s| s.l == 0).unwrap();
+        let (sa, sb) = (&basis.shells[d_shell], &basis.shells[s_shell]);
+        let got = schwarz_bound(SchwarzMode::Estimate, sa, sb, &[]);
+        let exact = schwarz_diagonal(sa, sb);
+        assert_eq!(got, exact);
     }
 
     #[test]

@@ -27,7 +27,7 @@ use std::sync::mpsc;
 
 use crate::allocator::{AutoTuner, TunerObservation};
 use crate::basis::BasisSet;
-use crate::constructor::{BlockPlan, PairList, SchwarzMode, KPAIR};
+use crate::constructor::{BlockPlan, PairList, SchwarzMode};
 use crate::fock::{digest_block, merge_partials, merge_unit_count, unit_ranges};
 use crate::linalg::Matrix;
 use crate::metrics::EngineMetrics;
@@ -252,28 +252,33 @@ impl BlockContext<'_> {
     }
 
     /// Gather the padded input buffers for a chunk into reusable scratch.
-    fn gather(&self, quads: &[(u32, u32)], batch: usize, s: &mut GatherScratch) {
-        let k = KPAIR;
+    /// `kb`/`kk` are the variant's pair-row widths; they may exceed the
+    /// pair data's (`PairList::kpair`) — the excess rows stay padding.
+    fn gather(&self, quads: &[(u32, u32)], batch: usize, kb: usize, kk: usize, s: &mut GatherScratch) {
+        let pk = self.pairs.kpair;
         s.bp.clear();
-        s.bp.resize(batch * k * 5, 0.0);
+        s.bp.resize(batch * kb * 5, 0.0);
         s.bg.clear();
         s.bg.resize(batch * 6, 0.0);
         s.kp.clear();
-        s.kp.resize(batch * k * 5, 0.0);
+        s.kp.resize(batch * kk * 5, 0.0);
         s.kg.clear();
         s.kg.resize(batch * 6, 0.0);
-        // padding rows must keep p finite (Kab = 0 makes them exact zeros)
-        for r in quads.len()..batch {
-            for kk in 0..k {
-                s.bp[(r * k + kk) * 5] = 1.0;
-                s.kp[(r * k + kk) * 5] = 1.0;
+        // every row slot starts as padding (p = 1 keeps it finite, Kab = 0
+        // makes it an exact zero); real quads overwrite their pk-row prefix
+        for r in 0..batch {
+            for k in 0..kb {
+                s.bp[(r * kb + k) * 5] = 1.0;
+            }
+            for k in 0..kk {
+                s.kp[(r * kk + k) * 5] = 1.0;
             }
         }
         for (r, &(pidx, qidx)) in quads.iter().enumerate() {
             let bra = &self.pairs.pairs[pidx as usize];
             let ket = &self.pairs.pairs[qidx as usize];
-            s.bp[r * k * 5..(r + 1) * k * 5].copy_from_slice(&bra.prim);
-            s.kp[r * k * 5..(r + 1) * k * 5].copy_from_slice(&ket.prim);
+            s.bp[r * kb * 5..r * kb * 5 + pk * 5].copy_from_slice(&bra.prim);
+            s.kp[r * kk * 5..r * kk * 5 + pk * 5].copy_from_slice(&ket.prim);
             s.bg[r * 6..(r + 1) * 6].copy_from_slice(&bra.geom);
             s.kg[r * 6..(r + 1) * 6].copy_from_slice(&ket.geom);
         }
@@ -304,7 +309,7 @@ impl BlockContext<'_> {
             let chunk = &block.quads[offset..offset + n];
 
             let sw = Stopwatch::start();
-            self.gather(chunk, variant.batch, scratch);
+            self.gather(chunk, variant.batch, variant.kpair_bra, variant.kpair_ket, scratch);
             out.metrics.gather_seconds += sw.elapsed_s();
 
             let exec = self
@@ -354,7 +359,9 @@ pub struct MatryoshkaEngine {
 
 impl MatryoshkaEngine {
     pub fn new(basis: BasisSet, artifact_dir: &Path, config: MatryoshkaConfig) -> anyhow::Result<Self> {
-        let backend = create_backend(config.backend, artifact_dir)?;
+        // size the native catalog's pair-row width for this basis (9 for
+        // STO-3G, 36 for 6-31G*'s six-primitive cores)
+        let backend = create_backend(config.backend, artifact_dir, basis.max_kpair().max(1))?;
         Self::with_backend(basis, backend, config)
     }
 
@@ -366,6 +373,48 @@ impl MatryoshkaEngine {
     ) -> anyhow::Result<Self> {
         let pairs = PairList::build_with_mode(&basis, config.threshold, config.schwarz);
         let plan = BlockPlan::build(&pairs, config.threshold, config.tile, config.clustered);
+        // every class the plan will execute must have catalog coverage and
+        // compatible chunk shapes — surface the "no kernel variant" error
+        // here, before any ClassTuner exists, instead of mid-Fock-build
+        {
+            let manifest = backend.manifest();
+            let classes: std::collections::BTreeSet<ClassKey> =
+                plan.blocks.iter().map(|b| b.class).collect();
+            for class in classes {
+                let ladder = manifest.ladder(class);
+                if ladder.is_empty() {
+                    let lmax = manifest
+                        .classes()
+                        .iter()
+                        .map(|c| c.0.max(c.1).max(c.2).max(c.3))
+                        .max()
+                        .unwrap_or(0);
+                    anyhow::bail!(
+                        "no kernel variant for class {class:?} in the {} catalog \
+                         (catalog covers shells up to l = {lmax})",
+                        backend.name()
+                    );
+                }
+                let random = manifest.random_variant(class);
+                if !config.greedy_path && random.is_none() {
+                    anyhow::bail!("no random-path artifact for class {class:?}");
+                }
+                // shape-check every variant the build could select,
+                // including the random-path ablation variant
+                for v in ladder.into_iter().chain(random) {
+                    if v.kpair_bra < pairs.kpair || v.kpair_ket < pairs.kpair {
+                        anyhow::bail!(
+                            "variant {} holds {}×{} primitive products per pair but the basis \
+                             needs {} (construct the backend with the basis's max_kpair)",
+                            v.name,
+                            v.kpair_bra,
+                            v.kpair_ket,
+                            pairs.kpair
+                        );
+                    }
+                }
+            }
+        }
         let tuner = AutoTuner::new(backend.manifest(), config.autotune, config.fixed_batch);
         let threads = if config.threads == 0 {
             std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)

@@ -8,7 +8,7 @@
 //!    (VRR/HRR) schedule the Graph Compiler emits, so agreement between
 //!    the two paths is strong evidence of correctness.
 
-use crate::basis::{cart_components, ncart, Shell};
+use crate::basis::{cart_components, comp_norms, ncart, Shell};
 
 use super::boys::boys;
 use super::hermite::{hermite_e, hermite_r};
@@ -97,7 +97,7 @@ fn primitive_eri(
             }
         }
     }
-    2.0 * std::f64::consts::PI.powf(2.5) / (p * q * (p + q).sqrt()) * val
+    2.0 * super::PI_POW_2_5 / (p * q * (p + q).sqrt()) * val
 }
 
 /// Contracted ERI block for a shell quartet, row-major over
@@ -113,13 +113,17 @@ pub fn eri_shell_quartet(
     let comps_b = cart_components(sb.l);
     let comps_c = cart_components(sc.l);
     let comps_d = cart_components(sd.l);
+    // per-component Cartesian normalization (√3 for d(xy), …): the shell
+    // coefficients carry only the (l,0,0) factor — see `Shell::normalize`
+    let (cn_a, cn_b) = (comp_norms(sa.l), comp_norms(sb.l));
+    let (cn_c, cn_d) = (comp_norms(sc.l), comp_norms(sd.l));
     let n = comps_a.len() * comps_b.len() * comps_c.len() * comps_d.len();
     let mut out = vec![0.0; n];
     let mut idx = 0;
-    for &la in &comps_a {
-        for &lb in &comps_b {
-            for &lc in &comps_c {
-                for &ld in &comps_d {
+    for (ia, &la) in comps_a.iter().enumerate() {
+        for (ib, &lb) in comps_b.iter().enumerate() {
+            for (ic, &lc) in comps_c.iter().enumerate() {
+                for (id, &ld) in comps_d.iter().enumerate() {
                     let mut v = 0.0;
                     for (ka, &a) in sa.exps.iter().enumerate() {
                         for (kb, &b) in sb.exps.iter().enumerate() {
@@ -136,7 +140,7 @@ pub fn eri_shell_quartet(
                             }
                         }
                     }
-                    out[idx] = v;
+                    out[idx] = cn_a[ia] * cn_b[ib] * cn_c[ic] * cn_d[id] * v;
                     idx += 1;
                 }
             }

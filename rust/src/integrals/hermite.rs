@@ -53,6 +53,158 @@ pub fn hermite_e_pair(i: i32, j: i32, t: i32, p: f64, xpa: f64, xpb: f64) -> f64
     }
 }
 
+/// Memoized table of Hermite expansion coefficients E_t^{ij} for one
+/// (axis, primitive-pair), in the *pair-data* convention of
+/// [`hermite_e_pair`] (no exp(−μ·AB²) prefactor — that lives in Kab).
+///
+/// The plain recursion re-derives every coefficient from the (0,0,0) base
+/// case on each call — exponential in i+j and repeated for every
+/// component quadruple of a shell class.  `fill` instead walks the
+/// two-term recurrence once, i-ascending then j-ascending, filling all
+/// (i+1)(j+1)(i+j+1) coefficients in O((i+1)(j+1)(i+j+1)) work; the hot
+/// loop then reads `get(i, j, t)` as a table lookup.  Buffers are reused
+/// across `fill` calls, so steady-state filling allocates nothing.
+#[derive(Clone, Debug, Default)]
+pub struct HermiteETable {
+    imax: usize,
+    jmax: usize,
+    /// stride of the t axis; imax + jmax + 2 so `t+1` reads during the
+    /// fill stay in-bounds (those slots hold structural zeros)
+    tdim: usize,
+    data: Vec<f64>,
+}
+
+impl HermiteETable {
+    pub fn new() -> HermiteETable {
+        HermiteETable::default()
+    }
+
+    #[inline]
+    fn idx(&self, i: usize, j: usize, t: usize) -> usize {
+        (i * (self.jmax + 1) + j) * self.tdim + t
+    }
+
+    /// E_t^{ij}; caller guarantees i ≤ imax, j ≤ jmax, t ≤ i + j + 1
+    /// (entries with t > i + j are exact zeros).
+    #[inline]
+    pub fn get(&self, i: usize, j: usize, t: usize) -> f64 {
+        self.data[self.idx(i, j, t)]
+    }
+
+    /// Fill all E_t^{ij} for i ≤ imax, j ≤ jmax from pair data
+    /// (total exponent `p`, separations `xpa = P−A`, `xpb = P−B`).
+    pub fn fill(&mut self, imax: usize, jmax: usize, p: f64, xpa: f64, xpb: f64) {
+        self.imax = imax;
+        self.jmax = jmax;
+        self.tdim = imax + jmax + 2;
+        let n = (imax + 1) * (jmax + 1) * self.tdim;
+        self.data.clear();
+        self.data.resize(n, 0.0);
+        let inv2p = 0.5 / p;
+        self.data[self.idx(0, 0, 0)] = 1.0;
+        // raise i with j = 0: E^{i,0} from E^{i-1,0}
+        for i in 1..=imax {
+            for t in 0..=i {
+                let mut v = xpa * self.get(i - 1, 0, t) + (t + 1) as f64 * self.get(i - 1, 0, t + 1);
+                if t > 0 {
+                    v += inv2p * self.get(i - 1, 0, t - 1);
+                }
+                let o = self.idx(i, 0, t);
+                self.data[o] = v;
+            }
+        }
+        // raise j for every i: E^{i,j} from E^{i,j-1}
+        for j in 1..=jmax {
+            for i in 0..=imax {
+                for t in 0..=(i + j) {
+                    let mut v =
+                        xpb * self.get(i, j - 1, t) + (t + 1) as f64 * self.get(i, j - 1, t + 1);
+                    if t > 0 {
+                        v += inv2p * self.get(i, j - 1, t - 1);
+                    }
+                    let o = self.idx(i, j, t);
+                    self.data[o] = v;
+                }
+            }
+        }
+    }
+
+    /// Negate the odd-t entries: turns E_t into (−1)^t E_t, folding the
+    /// ket-side alternating sign of the MD contraction into the table so
+    /// the innermost loop carries no sign logic.
+    pub fn negate_odd_t(&mut self) {
+        for i in 0..=self.imax {
+            for j in 0..=self.jmax {
+                for t in (1..=(i + j)).step_by(2) {
+                    let o = self.idx(i, j, t);
+                    self.data[o] = -self.data[o];
+                }
+            }
+        }
+    }
+}
+
+/// Memoized table of Hermite Coulomb integrals R^0_{tuv}(alpha, PQ) for
+/// all t + u + v ≤ lmax, flattening the [`hermite_r`] recursion (which
+/// re-descends to the Boys base case for every (t,u,v) request) into one
+/// layer-by-layer sweep over the auxiliary order n = lmax..0.  Buffers are
+/// reused across `fill` calls.
+#[derive(Clone, Debug, Default)]
+pub struct HermiteRTable {
+    dim: usize,
+    data: Vec<f64>,
+    prev: Vec<f64>,
+}
+
+impl HermiteRTable {
+    pub fn new() -> HermiteRTable {
+        HermiteRTable::default()
+    }
+
+    /// R^0_{tuv}; caller guarantees t + u + v ≤ the `lmax` of the last fill.
+    #[inline]
+    pub fn get(&self, t: usize, u: usize, v: usize) -> f64 {
+        self.data[(t * self.dim + u) * self.dim + v]
+    }
+
+    /// Fill from `fvals[n] = F_n(alpha·|PQ|²)` (needs n = 0..=lmax).
+    pub fn fill(&mut self, lmax: usize, alpha: f64, pq: [f64; 3], fvals: &[f64]) {
+        self.dim = lmax + 1;
+        let n3 = self.dim * self.dim * self.dim;
+        self.data.clear();
+        self.data.resize(n3, 0.0);
+        self.prev.clear();
+        self.prev.resize(n3, 0.0);
+        let dim = self.dim;
+        let idx = |t: usize, u: usize, v: usize| (t * dim + u) * dim + v;
+        for n in (0..=lmax).rev() {
+            // data := R^n computed from prev = R^{n+1}
+            std::mem::swap(&mut self.data, &mut self.prev);
+            self.data.fill(0.0);
+            self.data[idx(0, 0, 0)] = (-2.0 * alpha).powi(n as i32) * fvals[n];
+            for total in 1..=(lmax - n) {
+                for t in 0..=total {
+                    for u in 0..=(total - t) {
+                        let v = total - t - u;
+                        // descend along the first axis with a positive index
+                        let val = if t > 0 {
+                            let lower = if t >= 2 { self.prev[idx(t - 2, u, v)] } else { 0.0 };
+                            (t - 1) as f64 * lower + pq[0] * self.prev[idx(t - 1, u, v)]
+                        } else if u > 0 {
+                            let lower = if u >= 2 { self.prev[idx(t, u - 2, v)] } else { 0.0 };
+                            (u - 1) as f64 * lower + pq[1] * self.prev[idx(t, u - 1, v)]
+                        } else {
+                            let lower = if v >= 2 { self.prev[idx(t, u, v - 2)] } else { 0.0 };
+                            (v - 1) as f64 * lower + pq[2] * self.prev[idx(t, u, v - 1)]
+                        };
+                        self.data[idx(t, u, v)] = val;
+                    }
+                }
+            }
+        }
+    }
+}
+
 /// Hermite Coulomb auxiliary R^n_{tuv}(alpha, PQ); `fvals[n] = F_n(alpha·|PQ|²)`.
 pub fn hermite_r(t: i32, u: i32, v: i32, n: i32, alpha: f64, pq: [f64; 3], fvals: &[f64]) -> f64 {
     if t < 0 || u < 0 || v < 0 {
@@ -118,6 +270,87 @@ mod tests {
                     let want = hermite_e(i, j, t, qx, a, b);
                     let got = pref * hermite_e_pair(i, j, t, p, xpa, xpb);
                     assert!((want - got).abs() < 1e-13, "E[{i}{j}{t}]: {want} vs {got}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn e_table_matches_recursive_pair_form() {
+        let (p, xpa, xpb) = (2.3, -0.35, 0.41);
+        let mut tab = HermiteETable::new();
+        for (imax, jmax) in [(0usize, 0usize), (1, 0), (2, 2), (3, 2)] {
+            tab.fill(imax, jmax, p, xpa, xpb);
+            for i in 0..=imax {
+                for j in 0..=jmax {
+                    for t in 0..=(i + j) {
+                        let want = hermite_e_pair(i as i32, j as i32, t as i32, p, xpa, xpb);
+                        let got = tab.get(i, j, t);
+                        assert!(
+                            (want - got).abs() < 1e-14,
+                            "E[{i}{j}{t}] ({imax},{jmax}): {got} vs {want}"
+                        );
+                    }
+                    // structural zero beyond t = i + j
+                    assert_eq!(tab.get(i, j, i + j + 1), 0.0);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn e_table_negate_odd_t_flips_odd_entries_only() {
+        let mut tab = HermiteETable::new();
+        tab.fill(2, 1, 1.7, 0.3, -0.2);
+        let mut signed = tab.clone();
+        signed.negate_odd_t();
+        for i in 0..=2usize {
+            for j in 0..=1usize {
+                for t in 0..=(i + j) {
+                    let sign = if t % 2 == 1 { -1.0 } else { 1.0 };
+                    assert_eq!(signed.get(i, j, t), sign * tab.get(i, j, t));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn e_table_refill_reuses_buffers_correctly() {
+        // a big fill followed by a small one must not leak stale entries
+        let mut tab = HermiteETable::new();
+        tab.fill(3, 3, 1.1, 0.9, -0.7);
+        tab.fill(1, 1, 2.0, -0.1, 0.4);
+        for i in 0..=1usize {
+            for j in 0..=1usize {
+                for t in 0..=(i + j) {
+                    let want = hermite_e_pair(i as i32, j as i32, t as i32, 2.0, -0.1, 0.4);
+                    assert!((tab.get(i, j, t) - want).abs() < 1e-14, "E[{i}{j}{t}]");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn r_table_matches_recursive_r() {
+        let pq = [0.45, -0.2, 0.95];
+        let alpha = 0.83;
+        for lmax in 0..=8usize {
+            let mut fvals = vec![0.0; lmax + 1];
+            let t_arg = alpha * (pq[0] * pq[0] + pq[1] * pq[1] + pq[2] * pq[2]);
+            crate::integrals::boys(lmax, t_arg, &mut fvals);
+            let mut tab = HermiteRTable::new();
+            tab.fill(lmax, alpha, pq, &fvals);
+            for t in 0..=lmax {
+                for u in 0..=(lmax - t) {
+                    for v in 0..=(lmax - t - u) {
+                        let want =
+                            hermite_r(t as i32, u as i32, v as i32, 0, alpha, pq, &fvals);
+                        let got = tab.get(t, u, v);
+                        assert!(
+                            (want - got).abs() < 1e-12 * want.abs().max(1.0),
+                            "R[{t}{u}{v}] lmax={lmax}: {got} vs {want}"
+                        );
+                    }
                 }
             }
         }

@@ -1,7 +1,9 @@
 //! Molecular integrals substrate.
 //!
 //! * `boys` — the Boys function (same algorithm as the Python kernel side).
-//! * `hermite` — McMurchie–Davidson E coefficients and R tensor.
+//! * `hermite` — McMurchie–Davidson E coefficients and R tensor, both as
+//!   plain recursion (reference paths) and as memoized tables
+//!   ([`HermiteETable`], [`HermiteRTable`]) for the native hot path.
 //! * `one_electron` — overlap / kinetic / nuclear-attraction matrices.
 //! * `eri_ref` — the from-scratch MD two-electron engine: the CPU-centric
 //!   baseline of Fig. 14 *and* the independent oracle the HLO kernel path
@@ -12,9 +14,23 @@ mod eri_ref;
 mod hermite;
 mod one_electron;
 
+/// π^{5/2} — the ERI prefactor constant, hoisted so hot loops never call
+/// `f64::powf` (which is not const-evaluable); checked against
+/// `PI.powf(2.5)` in tests.
+pub const PI_POW_2_5: f64 = 17.493_418_327_624_862;
+
 pub use boys::boys;
 pub use eri_ref::{eri_shell_quartet, schwarz_diagonal, EriRefStats};
-pub use hermite::{hermite_e, hermite_e_pair, hermite_r};
+pub use hermite::{hermite_e, hermite_e_pair, hermite_r, HermiteETable, HermiteRTable};
 pub use one_electron::{
     kinetic_matrix, nuclear_attraction_matrix, overlap_matrix, shell_self_overlap,
 };
+
+#[cfg(test)]
+mod const_tests {
+    #[test]
+    fn pi_pow_2_5_matches_powf() {
+        let want = std::f64::consts::PI.powf(2.5);
+        assert!((super::PI_POW_2_5 - want).abs() < 1e-13, "{want}");
+    }
+}

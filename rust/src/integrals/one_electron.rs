@@ -1,7 +1,7 @@
 //! One-electron integral matrices: overlap S, kinetic T, nuclear
 //! attraction V — McMurchie–Davidson formulation over contracted shells.
 
-use crate::basis::{cart_components, BasisSet, Shell};
+use crate::basis::{cart_components, comp_norms, BasisSet, Shell};
 use crate::linalg::Matrix;
 use crate::molecule::Molecule;
 
@@ -120,12 +120,15 @@ macro_rules! pairwise_matrix {
                 ];
                 let ca = cart_components(sa.l);
                 let cb = cart_components(sb.l);
+                // per-component Cartesian normalization (see Shell::normalize)
+                let (cn_a, cn_b) = (comp_norms(sa.l), comp_norms(sb.l));
                 for (ia, &la) in ca.iter().enumerate() {
                     for (ib, &lb) in cb.iter().enumerate() {
                         let mut v = 0.0;
                         shell_pair_loop(sa, sb, |_, _, coef, a, b| {
                             v += coef * $prim(a, la, b, lb, ab, sa, sb);
                         });
+                        v *= cn_a[ia] * cn_b[ib];
                         let (r, c) = (sa.first_bf + ia, sb.first_bf + ib);
                         *m.at_mut(r, c) = v;
                         *m.at_mut(c, r) = v;
@@ -191,6 +194,20 @@ mod tests {
         let s = overlap_matrix(&basis);
         for i in 0..basis.nbf {
             assert!((s.at(i, i) - 1.0).abs() < 1e-10, "S[{i}][{i}] = {}", s.at(i, i));
+        }
+    }
+
+    #[test]
+    fn d_shell_overlap_diagonal_is_one_for_every_component() {
+        // mixed-exponent d contraction: the per-component factors (√3 for
+        // xy/xz/yz) must give unit diagonal for ALL six components, not
+        // just the (2,0,0) one the coefficients are normalized against
+        let mut sh = Shell::new(2, vec![1.9, 0.4], vec![0.6, 0.5], [0.2, -0.1, 0.3], 0, 0);
+        sh.normalize();
+        let basis = BasisSet { shells: vec![sh], nbf: 6 };
+        let s = overlap_matrix(&basis);
+        for i in 0..6 {
+            assert!((s.at(i, i) - 1.0).abs() < 1e-12, "S[{i}][{i}] = {}", s.at(i, i));
         }
     }
 

@@ -30,8 +30,8 @@ fn artifact_dir(args: &Args) -> PathBuf {
 fn usage() -> ! {
     eprintln!(
         "usage: matryoshka <scf|report|info> [options]\n\
-         \n  scf     --molecule NAME [--engine matryoshka|reference] [--stored]\n\
-         \u{20}         [--backend native|pjrt] [--threads N (0 = all cores)]\n\
+         \n  scf     --molecule NAME [--basis sto-3g|6-31g*] [--engine matryoshka|reference]\n\
+         \u{20}         [--stored] [--backend native|pjrt] [--threads N (0 = all cores)]\n\
          \u{20}         [--threshold T] [--max-iter N] [--tile N] [--fixed-batch N]\n\
          \u{20}         [--no-autotune] [--no-cluster] [--random-path]\n\
          \u{20}         [--schwarz exact|estimate] [--artifacts DIR] [--verbose]\n\
@@ -77,7 +77,8 @@ fn load_molecule(args: &Args) -> anyhow::Result<Molecule> {
 
 fn cmd_scf(args: &Args) -> anyhow::Result<()> {
     let mol = load_molecule(args)?;
-    let basis = build_basis(&mol, &args.str_or("basis", "sto-3g"))?;
+    let basis_name = args.str_or("basis", "sto-3g");
+    let basis = build_basis(&mol, &basis_name)?;
     let opts = ScfOptions {
         max_iterations: args.usize_or("max-iter", 60)?,
         damping: args.f64_or("damping", 0.0)?,
@@ -85,8 +86,9 @@ fn cmd_scf(args: &Args) -> anyhow::Result<()> {
         ..Default::default()
     };
     println!(
-        "system {}: {} atoms, {} electrons, {} shells, {} basis functions",
+        "system {} ({}): {} atoms, {} electrons, {} shells, {} basis functions",
         mol.name,
+        basis_name,
         mol.natoms(),
         mol.nelec(),
         basis.shells.len(),

@@ -40,6 +40,7 @@ pub fn by_name(name: &str) -> anyhow::Result<Molecule> {
     }
     Ok(match lname.as_str() {
         "water" => water(),
+        "methane" => methane(),
         "benzene" => benzene(),
         "water-10" | "water10" => water_cluster(10),
         "methanol-7" | "methanol7" => methanol_cluster(7),
@@ -73,6 +74,21 @@ pub fn water() -> Molecule {
             (8, [0.0, 0.0, 0.1173]),
             (1, [0.0, 0.7572, -0.4692]),
             (1, [0.0, -0.7572, -0.4692]),
+        ],
+    )
+}
+
+/// Tetrahedral methane, C-H 1.087 Å (golden 6-31G* SCF system).
+pub fn methane() -> Molecule {
+    let d = 1.087 / 3.0f64.sqrt();
+    Molecule::from_angstrom(
+        "methane",
+        &[
+            (6, [0.0, 0.0, 0.0]),
+            (1, [d, d, d]),
+            (1, [d, -d, -d]),
+            (1, [-d, d, -d]),
+            (1, [-d, -d, d]),
         ],
     )
 }
@@ -339,6 +355,21 @@ mod tests {
     #[test]
     fn benzene_has_42_electrons() {
         assert_eq!(benzene().nelec(), 42);
+    }
+
+    #[test]
+    fn methane_is_tetrahedral_and_closed_shell() {
+        let m = methane();
+        assert_eq!(m.natoms(), 5);
+        assert_eq!(m.nelec(), 10);
+        // all four C-H bonds are 1.087 Å
+        let c = m.atoms[0].pos;
+        for h in &m.atoms[1..] {
+            let d = ((h.pos[0] - c[0]).powi(2) + (h.pos[1] - c[1]).powi(2)
+                + (h.pos[2] - c[2]).powi(2))
+            .sqrt();
+            assert!((d / super::super::ANGSTROM_TO_BOHR - 1.087).abs() < 1e-10);
+        }
     }
 
     #[test]

@@ -7,7 +7,9 @@
 //!
 //! * [`NativeBackend`] — pure Rust, always available, no artifacts, no
 //!   XLA toolchain; evaluates chunks with the McMurchie–Davidson pair-data
-//!   machinery (`integrals::hermite_e_pair`).  The default.
+//!   machinery over memoized Hermite E/R tables
+//!   (`integrals::HermiteETable`/`HermiteRTable`; see [`EriEvalStrategy`]).
+//!   The default.
 //! * `PjrtBackend` (`--features pjrt`) — the AOT HLO artifact path through
 //!   `xla::PjRtClient`, wrapping the historical [`crate::runtime::Runtime`].
 //!
@@ -23,7 +25,7 @@ mod pjrt;
 
 use std::path::Path;
 
-pub use native::NativeBackend;
+pub use native::{EriEvalStrategy, NativeBackend};
 #[cfg(feature = "pjrt")]
 pub use pjrt::PjrtBackend;
 
@@ -124,10 +126,18 @@ impl BackendKind {
 }
 
 /// Construct a backend.  `artifact_dir` is only consulted by the PJRT
-/// backend; the native backend carries its own synthetic manifest.
-pub fn create_backend(kind: BackendKind, artifact_dir: &Path) -> anyhow::Result<Box<dyn EriBackend>> {
+/// backend; the native backend carries its own synthetic manifest, sized
+/// for `kpair` primitive products per pair row (the target basis's
+/// `BasisSet::max_kpair()` — 9 for STO-3G, 36 for 6-31G*).  The AOT
+/// artifacts are compiled at a fixed width, so `kpair` does not apply to
+/// the PJRT path.
+pub fn create_backend(
+    kind: BackendKind,
+    artifact_dir: &Path,
+    kpair: usize,
+) -> anyhow::Result<Box<dyn EriBackend>> {
     match kind {
-        BackendKind::Native => Ok(Box::new(NativeBackend::new())),
+        BackendKind::Native => Ok(Box::new(NativeBackend::with_kpair(kpair))),
         #[cfg(feature = "pjrt")]
         BackendKind::Pjrt => Ok(Box::new(PjrtBackend::new(artifact_dir)?)),
         #[cfg(not(feature = "pjrt"))]
@@ -155,7 +165,7 @@ mod tests {
 
     #[test]
     fn native_backend_is_always_constructible() {
-        let b = create_backend(BackendKind::Native, Path::new("/nonexistent")).unwrap();
+        let b = create_backend(BackendKind::Native, Path::new("/nonexistent"), 9).unwrap();
         assert_eq!(b.name(), "native");
         assert!(!b.manifest().variants.is_empty());
     }
@@ -163,7 +173,7 @@ mod tests {
     #[cfg(not(feature = "pjrt"))]
     #[test]
     fn pjrt_backend_errors_cleanly_without_the_feature() {
-        let err = create_backend(BackendKind::Pjrt, Path::new("/nonexistent")).unwrap_err();
+        let err = create_backend(BackendKind::Pjrt, Path::new("/nonexistent"), 9).unwrap_err();
         assert!(err.to_string().contains("pjrt"), "{err}");
     }
 

@@ -4,7 +4,7 @@
 //! path and give the examples physically checkable outputs (water's
 //! dipole direction/magnitude, charge conservation).
 
-use crate::basis::{cart_components, BasisSet};
+use crate::basis::{cart_components, comp_norms, BasisSet};
 use crate::integrals::hermite_e;
 use crate::linalg::Matrix;
 use crate::molecule::Molecule;
@@ -23,6 +23,8 @@ pub fn dipole_matrices(basis: &BasisSet) -> [Matrix; 3] {
             ];
             let ca = cart_components(sa.l);
             let cb = cart_components(sb.l);
+            // per-component Cartesian normalization (see Shell::normalize)
+            let (cn_a, cn_b) = (comp_norms(sa.l), comp_norms(sb.l));
             for (ia, &la) in ca.iter().enumerate() {
                 for (ib, &lb) in cb.iter().enumerate() {
                     let mut vals = [0.0; 3];
@@ -49,9 +51,10 @@ pub fn dipole_matrices(basis: &BasisSet) -> [Matrix; 3] {
                         }
                     }
                     let (r, c) = (sa.first_bf + ia, sb.first_bf + ib);
+                    let cn = cn_a[ia] * cn_b[ib];
                     for d in 0..3 {
-                        *out[d].at_mut(r, c) = vals[d];
-                        *out[d].at_mut(c, r) = vals[d];
+                        *out[d].at_mut(r, c) = cn * vals[d];
+                        *out[d].at_mut(c, r) = cn * vals[d];
                     }
                 }
             }

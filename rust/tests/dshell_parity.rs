@@ -1,0 +1,246 @@
+//! d-shell pipeline acceptance tests (ISSUE 2):
+//!
+//! * native backend vs the `eri_shell_quartet` oracle on (ds|ss), (dd|ss)
+//!   and (dd|dd) quartets, for both evaluator strategies;
+//! * exact Schwarz bounds remain true upper bounds with d shells present
+//!   (screening can never drop a quad above threshold);
+//! * 6-31G* golden SCF energies: the native Matryoshka engine must match
+//!   the independent reference engine to ≤ 1e-8 on water and methane, and
+//!   both must land in the literature windows;
+//! * bitwise 1-vs-N-thread determinism re-asserted on a 6-31G* molecule.
+
+use std::path::Path;
+
+use matryoshka::basis::{build_basis, BasisSet, Shell};
+use matryoshka::constructor::PairList;
+use matryoshka::engines::{MatryoshkaConfig, MatryoshkaEngine, ReferenceEngine};
+use matryoshka::integrals::{eri_shell_quartet, EriRefStats};
+use matryoshka::linalg::Matrix;
+use matryoshka::molecule::library;
+use matryoshka::runtime::{EriBackend, EriEvalStrategy, NativeBackend};
+use matryoshka::scf::{run_rhf, FockEngine, ScfOptions};
+
+fn shell(l: u8, exps: &[f64], coefs: &[f64], center: [f64; 3], first_bf: usize) -> Shell {
+    let mut sh = Shell::new(l, exps.to_vec(), coefs.to_vec(), center, 0, first_bf);
+    sh.normalize();
+    sh
+}
+
+/// Two contracted d shells and two s shells on four centers.
+fn d_test_basis() -> BasisSet {
+    let d1 = shell(2, &[0.9, 0.35], &[0.7, 0.4], [0.1, -0.2, 0.3], 0);
+    let d2 = shell(2, &[1.4, 0.5], &[0.5, 0.6], [-0.6, 0.5, 0.0], 6);
+    let s1 = shell(0, &[1.2], &[1.0], [0.8, 0.4, -0.2], 12);
+    let s2 = shell(0, &[0.6], &[1.0], [0.0, -0.9, 0.7], 13);
+    BasisSet { shells: vec![d1, d2, s1, s2], nbf: 14 }
+}
+
+fn pair_index(pairs: &PairList, si: usize, sj: usize) -> usize {
+    pairs
+        .pairs
+        .iter()
+        .position(|p| (p.si, p.sj) == (si, sj) || (p.si, p.sj) == (sj, si))
+        .expect("pair present")
+}
+
+/// Run one (bra pair, ket pair) quad through the backend's first-rung
+/// variant and return (values, ncomp).
+fn chunk_eri(
+    backend: &NativeBackend,
+    pairs: &PairList,
+    bi: usize,
+    ki: usize,
+) -> (Vec<f64>, usize) {
+    let bra = &pairs.pairs[bi];
+    let ket = &pairs.pairs[ki];
+    assert!(bra.class >= ket.class, "test must pass canonical pair order");
+    let class = (bra.class.0, bra.class.1, ket.class.0, ket.class.1);
+    let variant = backend.manifest().ladder(class)[0].clone();
+    let (b, kb, kk) = (variant.batch, variant.kpair_bra, variant.kpair_ket);
+    assert_eq!(kb, pairs.kpair);
+
+    let mut bp = vec![0.0; b * kb * 5];
+    let mut bg = vec![0.0; b * 6];
+    let mut kp = vec![0.0; b * kk * 5];
+    let mut kg = vec![0.0; b * 6];
+    for r in 0..b {
+        for k in 0..kb {
+            bp[(r * kb + k) * 5] = 1.0;
+        }
+        for k in 0..kk {
+            kp[(r * kk + k) * 5] = 1.0;
+        }
+    }
+    bp[..kb * 5].copy_from_slice(&bra.prim);
+    kp[..kk * 5].copy_from_slice(&ket.prim);
+    bg[..6].copy_from_slice(&bra.geom);
+    kg[..6].copy_from_slice(&ket.geom);
+
+    let exec = backend.execute_eri(&variant, &bp, &bg, &kp, &kg).unwrap();
+    // padding rows must stay exact zeros with d shells too
+    assert!(exec.values[exec.ncomp..].iter().all(|&v| v == 0.0));
+    (exec.values, exec.ncomp)
+}
+
+#[test]
+fn d_class_chunks_match_shell_quartet_oracle() {
+    let basis = d_test_basis();
+    let pairs = PairList::build(&basis, 1e-14);
+    let p_dd = pair_index(&pairs, 0, 1);
+    let p_ds = pair_index(&pairs, 0, 2);
+    let p_ss = pair_index(&pairs, 2, 3);
+
+    for strategy in [EriEvalStrategy::Tables, EriEvalStrategy::Recursion] {
+        let backend = NativeBackend::with_options(pairs.kpair, strategy);
+        // (ds|ss), (dd|ss), (dd|dd)
+        for (bi, ki) in [(p_ds, p_ss), (p_dd, p_ss), (p_dd, p_dd)] {
+            let (values, ncomp) = chunk_eri(&backend, &pairs, bi, ki);
+            let bra = &pairs.pairs[bi];
+            let ket = &pairs.pairs[ki];
+            let mut stats = EriRefStats::default();
+            let oracle = eri_shell_quartet(
+                &basis.shells[bra.si],
+                &basis.shells[bra.sj],
+                &basis.shells[ket.si],
+                &basis.shells[ket.sj],
+                &mut stats,
+            );
+            assert_eq!(ncomp, oracle.len());
+            let mut max_abs = 0.0f64;
+            for (c, (got, want)) in values[..ncomp].iter().zip(&oracle).enumerate() {
+                max_abs = max_abs.max(want.abs());
+                assert!(
+                    (got - want).abs() < 1e-10,
+                    "{} quad ({bi},{ki}) comp {c}: {got} vs {want}",
+                    strategy.name()
+                );
+            }
+            // the block is not trivially zero
+            assert!(max_abs > 1e-4, "oracle block suspiciously small: {max_abs}");
+        }
+    }
+}
+
+#[test]
+fn exact_schwarz_bounds_hold_with_d_shells() {
+    let mol = library::by_name("water").unwrap();
+    let basis = build_basis(&mol, "6-31g*").unwrap();
+    let pairs = PairList::build(&basis, 1e-14); // exact mode
+    let mut stats = EriRefStats::default();
+    // |(ab|cd)| <= Q_ab * Q_cd for every pair combination — a quad whose
+    // true magnitude exceeds the threshold can therefore never be dropped
+    for (bi, bra) in pairs.pairs.iter().enumerate() {
+        for ket in pairs.pairs.iter().skip(bi) {
+            let block = eri_shell_quartet(
+                &basis.shells[bra.si],
+                &basis.shells[bra.sj],
+                &basis.shells[ket.si],
+                &basis.shells[ket.sj],
+                &mut stats,
+            );
+            let max_abs = block.iter().fold(0.0f64, |m, v| m.max(v.abs()));
+            let bound = bra.schwarz * ket.schwarz;
+            assert!(
+                max_abs <= bound * (1.0 + 1e-10),
+                "pair ({},{})x({},{}): |block| {max_abs:.3e} > bound {bound:.3e}",
+                bra.si,
+                bra.sj,
+                ket.si,
+                ket.sj
+            );
+        }
+    }
+}
+
+#[test]
+fn table_and_recursion_strategies_agree_on_631gs_g_matrix() {
+    let mol = library::by_name("water").unwrap();
+    let basis = build_basis(&mol, "6-31g*").unwrap();
+    let n = basis.nbf;
+    let mut d = Matrix::zeros(n, n);
+    for i in 0..n {
+        for j in 0..n {
+            let v = 0.3 / (1.0 + (i as f64 - j as f64).abs());
+            *d.at_mut(i, j) = v;
+            *d.at_mut(j, i) = v;
+        }
+    }
+    let build = |strategy: EriEvalStrategy| {
+        let backend = Box::new(NativeBackend::with_options(basis.max_kpair(), strategy));
+        let config = MatryoshkaConfig { threshold: 1e-12, ..Default::default() };
+        let mut e = MatryoshkaEngine::with_backend(basis.clone(), backend, config).unwrap();
+        e.two_electron(&d).unwrap()
+    };
+    let g_tab = build(EriEvalStrategy::Tables);
+    let g_rec = build(EriEvalStrategy::Recursion);
+    let diff = g_tab.diff_norm(&g_rec);
+    assert!(diff < 1e-10, "strategy mismatch: ||dG|| = {diff:.3e}");
+}
+
+fn golden_631gs(molecule: &str, literature: f64, window: f64) {
+    let mol = library::by_name(molecule).unwrap();
+    let basis = build_basis(&mol, "6-31g*").unwrap();
+    let opts = ScfOptions::default();
+
+    let mut reference = ReferenceEngine::new(basis.clone(), 1e-10);
+    let res_ref = run_rhf(&mol, &basis, &mut reference, &opts).unwrap();
+
+    let config = MatryoshkaConfig { threshold: 1e-10, stored: true, ..Default::default() };
+    let mut engine = MatryoshkaEngine::new(basis.clone(), Path::new("unused"), config).unwrap();
+    let res = run_rhf(&mol, &basis, &mut engine, &opts).unwrap();
+
+    assert!(res_ref.converged, "{molecule}: reference SCF did not converge");
+    assert!(res.converged, "{molecule}: native SCF did not converge");
+    assert!(
+        (res.energy - res_ref.energy).abs() < 1e-8,
+        "{molecule}: matryoshka {} vs reference {}",
+        res.energy,
+        res_ref.energy
+    );
+    assert!(
+        (res.energy - literature).abs() < window,
+        "{molecule}: E = {:.7}, literature ≈ {literature}",
+        res.energy
+    );
+}
+
+#[test]
+fn water_631gs_golden_scf_energy() {
+    // RHF/6-31G* water ≈ −76.01 Ha (Cartesian d functions)
+    golden_631gs("water", -76.01, 0.05);
+}
+
+#[test]
+fn methane_631gs_golden_scf_energy() {
+    // RHF/6-31G* methane ≈ −40.19 Ha (Cartesian d functions)
+    golden_631gs("methane", -40.19, 0.05);
+}
+
+#[test]
+fn one_thread_and_n_thread_631gs_builds_agree_bitwise() {
+    let mol = library::by_name("water").unwrap();
+    let basis = build_basis(&mol, "6-31g*").unwrap();
+    let n = basis.nbf;
+    let mut d = Matrix::zeros(n, n);
+    for i in 0..n {
+        for j in 0..n {
+            let v = 0.3 / (1.0 + (i as f64 - j as f64).abs());
+            *d.at_mut(i, j) = v;
+            *d.at_mut(j, i) = v;
+        }
+    }
+    let build = |threads: usize| {
+        let config = MatryoshkaConfig { threshold: 1e-10, threads, ..Default::default() };
+        let mut e = MatryoshkaEngine::new(basis.clone(), Path::new("unused"), config).unwrap();
+        e.two_electron(&d).unwrap()
+    };
+    let g1 = build(1);
+    for threads in [2, 6] {
+        let gn = build(threads);
+        assert_eq!(
+            g1.data(),
+            gn.data(),
+            "{threads}-thread 6-31G* build diverged from the 1-thread build"
+        );
+    }
+}

@@ -40,14 +40,34 @@ fn empty_manifest_is_rejected() {
 #[cfg(not(feature = "pjrt"))]
 #[test]
 fn requesting_pjrt_without_the_feature_is_a_clean_error() {
-    let err = create_backend(BackendKind::Pjrt, Path::new("anywhere")).unwrap_err();
+    let err = create_backend(BackendKind::Pjrt, Path::new("anywhere"), 9).unwrap_err();
     assert!(err.to_string().contains("pjrt"), "{err}");
 }
 
 #[test]
 fn native_backend_never_needs_an_artifact_dir() {
-    let backend = create_backend(BackendKind::Native, Path::new("/nonexistent/artifacts")).unwrap();
+    let backend =
+        create_backend(BackendKind::Native, Path::new("/nonexistent/artifacts"), 9).unwrap();
     assert_eq!(backend.name(), "native");
+}
+
+#[test]
+fn uncataloged_class_fails_at_engine_construction_not_mid_build() {
+    // regression: a class absent from the catalog used to reach
+    // ClassTuner with an empty ladder and panic with index-out-of-bounds;
+    // now engine construction itself reports "no kernel variant"
+    use matryoshka::basis::{BasisSet, Shell};
+    let mut f_shell = Shell::new(3, vec![0.7], vec![1.0], [0.0; 3], 0, 0);
+    f_shell.normalize();
+    let mut s_shell = Shell::new(0, vec![1.1], vec![1.0], [0.0, 0.0, 1.5], 0, 10);
+    s_shell.normalize();
+    let basis = BasisSet { shells: vec![f_shell, s_shell], nbf: 11 };
+    let err = MatryoshkaEngine::new(basis, Path::new("unused"), MatryoshkaConfig::default())
+        .err()
+        .expect("f shells are beyond the native catalog")
+        .to_string();
+    assert!(err.contains("no kernel variant"), "{err}");
+    assert!(err.contains('3'), "class should be named: {err}");
 }
 
 #[test]

@@ -92,7 +92,7 @@ fn prop_tuner_batch_always_on_ladder_and_converges() {
         let rungs = g.usize_in(1, 5);
         let mut ladder: Vec<usize> = (0..rungs).map(|i| 32 << i).collect();
         ladder.dedup();
-        let mut t = ClassTuner::new((0, 0, 0, 0), ladder.clone());
+        let mut t = ClassTuner::new((0, 0, 0, 0), ladder.clone()).unwrap();
         let mut observations = 0;
         while !t.converged && observations < 1000 {
             let quads = g.usize_in(1, 2048);
