@@ -11,8 +11,64 @@ mod common;
 
 use matryoshka::bench_harness as bh;
 use matryoshka::engines::MatryoshkaConfig;
+use matryoshka::pipeline::PipelineMode;
 use matryoshka::scf::FockEngine;
 use matryoshka::util::Stopwatch;
+
+/// 9e — staged-vs-lockstep pipeline A/B: the per-stage overlap report.
+/// The staged executor's win is gather+digest CPU time hidden under ERI
+/// execution; lockstep runs the identical schedule with the phases
+/// strictly sequential inside each worker, so its hidden time is ≈ 0.
+fn pipeline_overlap_section(systems: &[&str]) {
+    println!("Fig. 9e — staged pipeline overlap (same schedule, phases overlapped vs lockstep)");
+    println!(
+        "{:<12} {:<9} {:>9} {:>10} {:>10} {:>10} {:>10} {:>9}",
+        "system", "pipeline", "wall_s", "gather_s", "exec_s", "digest_s", "hidden_s", "speedup"
+    );
+    for name in systems {
+        let (_, basis) = common::system(name);
+        let d = common::test_density(basis.nbf);
+        let mut lockstep_time = None;
+        for mode in [PipelineMode::Lockstep, PipelineMode::Staged] {
+            let config = MatryoshkaConfig { pipeline: mode, ..Default::default() };
+            // pinned: this section measures the modes themselves, so the
+            // MATRYOSHKA_PIPELINE env override must not relabel the rows
+            let mut engine = common::engine_pinned_pipeline(basis.clone(), config);
+            common::warm_until_converged(&mut engine, &d, 4);
+            let baseline = engine.metrics.clone();
+            let sw = Stopwatch::start();
+            engine.two_electron(&d).expect("measured build");
+            let wall = sw.elapsed_s();
+            // metrics accumulate across builds; isolate the measured one
+            let gather = engine.metrics.gather_seconds - baseline.gather_seconds;
+            let digest = engine.metrics.digest_seconds - baseline.digest_seconds;
+            let exec = engine.metrics.total_seconds() - baseline.total_seconds();
+            let pipe_wall =
+                engine.metrics.pipeline_wall_seconds - baseline.pipeline_wall_seconds;
+            let hidden = (gather + digest + exec - pipe_wall).max(0.0);
+            let speedup = *lockstep_time.get_or_insert(wall) / wall;
+            println!(
+                "{:<12} {:<9} {:>9.3} {:>10.3} {:>10.3} {:>10.3} {:>10.3} {:>8.2}x",
+                name,
+                mode.name(),
+                wall,
+                gather,
+                exec,
+                digest,
+                hidden,
+                speedup
+            );
+            if mode == PipelineMode::Staged && hidden <= 0.0 {
+                println!(
+                    "  WARNING: staged build hid no gather/digest time — the cores are \
+                     likely oversubscribed (try MATRYOSHKA_THREADS=<cores/2>)"
+                );
+            }
+        }
+    }
+    println!("(hidden_s = gather + execute + digest − pipeline wall, CPU-s across workers)");
+    println!();
+}
 
 fn main() {
     // the unclustered Base config costs O(100x) the clustered ones: the
@@ -23,6 +79,7 @@ fn main() {
         vec!["chignolin"]
     };
     bh::header("Fig. 9 — component breakdown (one direct Fock build, warm kernels)");
+    pipeline_overlap_section(&systems);
     println!("config legend: base = no clustering + random-path kernels + static batch");
 
     for name in &systems {

@@ -6,7 +6,8 @@
 //! `cargo bench` works on a bare checkout.  Set `MATRYOSHKA_BACKEND=pjrt`
 //! (with `--features pjrt` and a compiled artifacts/ directory) to measure
 //! the PJRT path instead; `MATRYOSHKA_THREADS=N` pins the Fock worker
-//! count (default: all cores).
+//! count (default: all cores); `MATRYOSHKA_PIPELINE=staged|lockstep`
+//! overrides the worker pipeline mode (default: staged).
 
 use std::path::{Path, PathBuf};
 
@@ -15,6 +16,7 @@ use matryoshka::constructor::SchwarzMode;
 use matryoshka::engines::{MatryoshkaConfig, MatryoshkaEngine};
 use matryoshka::linalg::Matrix;
 use matryoshka::molecule::{library, Molecule};
+use matryoshka::pipeline::PipelineMode;
 use matryoshka::runtime::{BackendKind, EriBackend, Manifest, NativeBackend};
 
 pub fn artifact_dir() -> Option<PathBuf> {
@@ -59,6 +61,17 @@ pub fn test_density(n: usize) -> Matrix {
 /// default 0 — benches that pin a thread count (e.g. the Fig. 13 scaling
 /// sections, which *measure* thread counts) keep their explicit setting.
 pub fn engine(basis: BasisSet, mut config: MatryoshkaConfig) -> MatryoshkaEngine {
+    if let Ok(p) = std::env::var("MATRYOSHKA_PIPELINE") {
+        config.pipeline = PipelineMode::parse(&p).expect("MATRYOSHKA_PIPELINE");
+    }
+    engine_pinned_pipeline(basis, config)
+}
+
+/// Like [`engine`], but the caller's `pipeline` choice is final —
+/// `MATRYOSHKA_PIPELINE` is ignored.  For benches that *measure* pipeline
+/// modes (the Fig. 9e staged-vs-lockstep A/B), where an env override
+/// would silently mislabel both rows.
+pub fn engine_pinned_pipeline(basis: BasisSet, mut config: MatryoshkaConfig) -> MatryoshkaEngine {
     config.schwarz = SchwarzMode::Estimate;
     if config.threads == 0 {
         if let Ok(t) = std::env::var("MATRYOSHKA_THREADS") {

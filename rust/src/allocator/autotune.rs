@@ -121,12 +121,17 @@ impl ClassTuner {
     }
 }
 
-/// One execution's worth of tuner evidence, recorded by a Fock worker and
-/// merged into the [`AutoTuner`] after the parallel section (per-worker
-/// tuner shards, merged per iteration).
+/// One execution's worth of tuner evidence, recorded by a Fock worker
+/// against the schedule entry that produced it and merged into the
+/// [`AutoTuner`] after the parallel section.  The entry index gives the
+/// merge a total order independent of which worker ran which unit: the
+/// engine sorts observations by `entry` before applying, so Algorithm 2
+/// sees the exact sequence a 1-thread build would have produced.
 #[derive(Clone, Copy, Debug)]
 pub struct TunerObservation {
     pub class: ClassKey,
+    /// the `pipeline::ChunkSchedule` entry this execution came from
+    pub entry: usize,
     /// the rung (batch) the tuner had chosen when the iteration started
     pub batch: usize,
     /// real (non-padding) quadruples in the execution
@@ -203,9 +208,10 @@ impl AutoTuner {
     }
 
     /// Merge one iteration's worth of sharded observations, in the
-    /// deterministic order the caller provides (unit order, then block
-    /// order).  Observations recorded under a rung the tuner has since
-    /// left are discarded (see [`ClassTuner::observe_at`]).
+    /// deterministic order the caller provides (schedule-entry order —
+    /// the engine sorts by [`TunerObservation::entry`] first).
+    /// Observations recorded under a rung the tuner has since left are
+    /// discarded (see [`ClassTuner::observe_at`]).
     pub fn apply_observations(&mut self, observations: &[TunerObservation]) {
         if !self.enabled {
             return;
@@ -332,7 +338,7 @@ mod tests {
         let mut sequential = AutoTuner::new(&manifest, true, 32);
 
         let obs: Vec<TunerObservation> = (0..SAMPLES_PER_RUNG)
-            .map(|_| TunerObservation { class, batch: 32, quads: 32, seconds: 32.0 * 5e-6 })
+            .map(|entry| TunerObservation { class, entry, batch: 32, quads: 32, seconds: 32.0 * 5e-6 })
             .collect();
         for ob in &obs {
             sequential.observe(ob.class, ob.quads, ob.seconds);

@@ -1,14 +1,19 @@
 //! The Matryoshka engine: Block Constructor → ERI backend → Workload
 //! Allocator → Fock digestion, orchestrated from the Rust hot path.
 //!
+//! Since the staged-pipeline refactor this file is orchestration only:
+//! per Fock build the engine (1) materializes the iteration's work as an
+//! explicit [`ChunkSchedule`] from the frozen tuner snapshot, (2) shards
+//! the schedule's merge units across the worker pool where
+//! `pipeline::run_entries` executes them (staged: gather/digest
+//! overlapped with execution; lockstep: the sequential A/B baseline), and
+//! (3) merges per-unit partial G matrices through the deterministic
+//! summation tree of `fock::accumulate` — an N-thread build is
+//! bitwise-identical to a 1-thread build, staged or lockstep.
+//!
 //! The ERI evaluation is pluggable ([`EriBackend`]): the pure-Rust native
 //! backend is the always-available default, the PJRT artifact path lives
-//! behind the `pjrt` cargo feature.  The Fock build itself is parallel:
-//! quadruple blocks are dependency-free, so they are sharded across a
-//! worker pool, each worker digesting into its own partial G with its own
-//! reusable gather scratch, and the partials are merged through the
-//! deterministic accumulator path of `fock::accumulate` — an N-thread
-//! build is bitwise-identical to a 1-thread build.
+//! behind the `pjrt` cargo feature.
 //!
 //! Every paper ablation is a configuration of this engine:
 //!
@@ -20,20 +25,26 @@
 //! | −Block Constructor   | clustered = false (divergent stream)          |
 //! | QUICK-analog         | clustered + greedy_path, autotune = false     |
 
-use std::collections::BTreeMap;
 use std::path::Path;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc;
 
-use crate::allocator::{AutoTuner, TunerObservation};
+use crate::allocator::AutoTuner;
 use crate::basis::BasisSet;
 use crate::constructor::{BlockPlan, PairList, SchwarzMode};
-use crate::fock::{digest_block, merge_partials, merge_unit_count, unit_ranges};
+use crate::fock::merge_partials;
 use crate::linalg::Matrix;
 use crate::metrics::EngineMetrics;
-use crate::runtime::{create_backend, BackendKind, ClassKey, EriBackend, Variant};
+use crate::pipeline::{
+    run_entries, CachedChunk, ChunkSchedule, ExecContext, PipelineBuffers, PipelineMode,
+    SchedulePolicy, UnitOutput,
+};
+use crate::runtime::{create_backend, BackendKind, ClassKey, EriBackend};
 use crate::scf::FockEngine;
 use crate::util::Stopwatch;
+
+/// Default stored-mode cache budget (~1 GiB of contracted values).
+pub const DEFAULT_STORED_BUDGET_BYTES: usize = 1 << 30;
 
 #[derive(Clone, Debug)]
 pub struct MatryoshkaConfig {
@@ -52,13 +63,22 @@ pub struct MatryoshkaConfig {
     /// cache contracted ERI blocks across SCF iterations (the integrals
     /// are density-independent; direct mode recomputes like the paper)
     pub stored: bool,
+    /// stored-mode cache budget in bytes: once the schedule's running
+    /// value footprint hits it, the remaining entries stay direct-mode
+    /// (partial cache — cached entries digest-only, the rest recompute)
+    pub stored_budget_bytes: usize,
     /// Schwarz bound mode: Exact (small systems/tests) or Estimate (fast)
     pub schwarz: SchwarzMode,
     /// which ERI execution backend evaluates the chunks
     pub backend: BackendKind,
-    /// Fock-build worker threads; 0 = one per available hardware thread.
-    /// The thread count never changes results (deterministic merge).
+    /// Fock-build worker threads; 0 = auto (one per hardware thread in
+    /// lockstep mode; half of them in staged mode, since each staged
+    /// worker also runs a compute-companion thread).  The thread count
+    /// never changes results (deterministic merge).
     pub threads: usize,
+    /// how each worker walks its merge units: staged (overlapped
+    /// gather/execute/digest) or lockstep (sequential A/B baseline)
+    pub pipeline: PipelineMode,
 }
 
 impl Default for MatryoshkaConfig {
@@ -71,9 +91,11 @@ impl Default for MatryoshkaConfig {
             autotune: true,
             fixed_batch: 512,
             stored: false,
+            stored_budget_bytes: DEFAULT_STORED_BUDGET_BYTES,
             schwarz: SchwarzMode::Exact,
             backend: BackendKind::Native,
             threads: 0,
+            pipeline: PipelineMode::Staged,
         }
     }
 }
@@ -85,60 +107,31 @@ impl MatryoshkaConfig {
     }
 }
 
-/// One cached (stored-mode) block: quads + their contracted ERIs.
-struct CachedBlock {
-    block_idx: usize,
-    values: Vec<f64>,
-    ncomp: usize,
-}
-
-/// Reusable per-worker gather buffers (hoisted out of the chunk loop so a
-/// Fock build performs O(workers) allocations instead of O(chunks)).
-#[derive(Default)]
-struct GatherScratch {
-    bp: Vec<f64>,
-    bg: Vec<f64>,
-    kp: Vec<f64>,
-    kg: Vec<f64>,
-}
-
-/// Everything a Fock worker needs, borrowed immutably so one context is
-/// shared by all workers.  Mutation happens only on worker-local
-/// [`UnitResult`]s, merged deterministically afterwards.
-struct BlockContext<'a> {
-    basis: &'a BasisSet,
-    pairs: &'a PairList,
-    plan: &'a BlockPlan,
-    backend: &'a dyn EriBackend,
-    greedy_path: bool,
-    fixed_batch: usize,
-    /// per-class rung frozen for this iteration (tuner snapshot)
-    batches: &'a BTreeMap<ClassKey, usize>,
-}
-
-/// Worker-local accumulator for one merge unit.
-struct UnitResult {
-    g: Matrix,
-    metrics: EngineMetrics,
-    observations: Vec<TunerObservation>,
-    cache: Vec<CachedBlock>,
-}
-
-impl UnitResult {
-    fn new(n: usize) -> UnitResult {
-        UnitResult {
-            g: Matrix::zeros(n, n),
-            metrics: EngineMetrics::default(),
-            observations: Vec::new(),
-            cache: Vec::new(),
-        }
+/// Resolve `threads = 0` to a worker count for this config.  A staged
+/// worker runs two CPU-bound threads (memory stage + compute companion),
+/// so the staged default takes half the hardware threads — `--threads N`
+/// is always honored verbatim.  The worker count never changes results.
+fn resolve_threads(config: &MatryoshkaConfig) -> usize {
+    if config.threads != 0 {
+        return config.threads;
+    }
+    let hw = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    match config.pipeline {
+        PipelineMode::Staged => (hw + 1) / 2,
+        PipelineMode::Lockstep => hw,
     }
 }
 
 /// Run `nunits` work items over the pool with work stealing, returning
-/// each item's payload in unit order (shared scaffolding of the direct
-/// and cached Fock paths).  `f` receives the unit index plus a
-/// worker-local scratch state (`S::default()` once per worker).
+/// each item's payload in unit order (shared scaffolding of the Fock
+/// paths).  `f` receives the unit index plus a worker-local scratch state
+/// (`S::default()` once per worker).
+///
+/// Worker panics are caught per unit (`catch_unwind`) and re-raised here
+/// with their original payload after every worker has drained — the
+/// lowest panicked unit wins, so even the panic surfaced is deterministic.
+/// A worker that panics stops claiming units (its scratch state may be
+/// poisoned); surviving workers steal the remainder.
 fn run_units_ordered<T, S, F>(
     pool: &rayon::ThreadPool,
     workers: usize,
@@ -150,8 +143,9 @@ where
     S: Default,
     F: Fn(usize, &mut S) -> T + Sync,
 {
+    use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
     let next = AtomicUsize::new(0);
-    let (tx, rx) = mpsc::channel::<(usize, T)>();
+    let (tx, rx) = mpsc::channel::<(usize, std::thread::Result<T>)>();
     {
         let (f, next) = (&f, &next);
         // `move` hands the Sender to the op closure (Sender is Send but
@@ -168,8 +162,9 @@ where
                         if u >= nunits {
                             break;
                         }
-                        let payload = f(u, &mut state);
-                        if tx.send((u, payload)).is_err() {
+                        let payload = catch_unwind(AssertUnwindSafe(|| f(u, &mut state)));
+                        let poisoned = payload.is_err();
+                        if tx.send((u, payload)).is_err() || poisoned {
                             break;
                         }
                     }
@@ -177,169 +172,19 @@ where
             }
         });
     }
-    let mut slots: Vec<Option<T>> = (0..nunits).map(|_| None).collect();
+    let mut slots: Vec<Option<std::thread::Result<T>>> = (0..nunits).map(|_| None).collect();
     for (u, payload) in rx {
         slots[u] = Some(payload);
     }
-    slots
-}
-
-/// Digest one executed chunk into `g` (shared by direct and cached paths).
-fn digest_chunk_into(
-    basis: &BasisSet,
-    pairs: &PairList,
-    g: &mut Matrix,
-    d: &Matrix,
-    quads: &[(u32, u32)],
-    values: &[f64],
-    ncomp: usize,
-) {
-    for (r, &(pidx, qidx)) in quads.iter().enumerate() {
-        let bra = &pairs.pairs[pidx as usize];
-        let ket = &pairs.pairs[qidx as usize];
-        let (sa, sb) = (&basis.shells[bra.si], &basis.shells[bra.sj]);
-        let (sc, sd) = (&basis.shells[ket.si], &basis.shells[ket.sj]);
-        digest_block(
-            g,
-            d,
-            sa,
-            sb,
-            sc,
-            sd,
-            bra.si == bra.sj,
-            ket.si == ket.sj,
-            pidx == qidx,
-            &values[r * ncomp..(r + 1) * ncomp],
-        );
-    }
-}
-
-impl BlockContext<'_> {
-    /// Rung frozen for this iteration.
-    fn batch_for(&self, class: ClassKey) -> usize {
-        self.batches.get(&class).copied().unwrap_or(self.fixed_batch)
-    }
-
-    /// Select the kernel variant for a class at the frozen tuner state;
-    /// `remaining` allows tail chunks to downshift to a snug variant.
-    fn variant_for(&self, class: ClassKey, want_batch: usize, remaining: usize) -> anyhow::Result<Variant> {
-        let manifest = self.backend.manifest();
-        if !self.greedy_path {
-            // Graph-Compiler ablation: random-path artifact (fixed batch)
-            return manifest
-                .random_variant(class)
-                .cloned()
-                .ok_or_else(|| anyhow::anyhow!("no random-path artifact for class {class:?}"));
-        }
-        let ladder = manifest.ladder(class);
-        let batch = if remaining < want_batch {
-            // smallest rung that still holds the tail in one execution
-            ladder
-                .iter()
-                .map(|v| v.batch)
-                .find(|&b| b >= remaining)
-                .unwrap_or(want_batch)
-                .min(want_batch)
-        } else {
-            want_batch
-        };
-        ladder
-            .iter()
-            .find(|v| v.batch == batch)
-            .or_else(|| ladder.last())
-            .map(|v| (*v).clone())
-            .ok_or_else(|| anyhow::anyhow!("no kernel variant for class {class:?}"))
-    }
-
-    /// Gather the padded input buffers for a chunk into reusable scratch.
-    /// `kb`/`kk` are the variant's pair-row widths; they may exceed the
-    /// pair data's (`PairList::kpair`) — the excess rows stay padding.
-    fn gather(&self, quads: &[(u32, u32)], batch: usize, kb: usize, kk: usize, s: &mut GatherScratch) {
-        let pk = self.pairs.kpair;
-        s.bp.clear();
-        s.bp.resize(batch * kb * 5, 0.0);
-        s.bg.clear();
-        s.bg.resize(batch * 6, 0.0);
-        s.kp.clear();
-        s.kp.resize(batch * kk * 5, 0.0);
-        s.kg.clear();
-        s.kg.resize(batch * 6, 0.0);
-        // every row slot starts as padding (p = 1 keeps it finite, Kab = 0
-        // makes it an exact zero); real quads overwrite their pk-row prefix
-        for r in 0..batch {
-            for k in 0..kb {
-                s.bp[(r * kb + k) * 5] = 1.0;
-            }
-            for k in 0..kk {
-                s.kp[(r * kk + k) * 5] = 1.0;
-            }
-        }
-        for (r, &(pidx, qidx)) in quads.iter().enumerate() {
-            let bra = &self.pairs.pairs[pidx as usize];
-            let ket = &self.pairs.pairs[qidx as usize];
-            s.bp[r * kb * 5..r * kb * 5 + pk * 5].copy_from_slice(&bra.prim);
-            s.kp[r * kk * 5..r * kk * 5 + pk * 5].copy_from_slice(&ket.prim);
-            s.bg[r * 6..(r + 1) * 6].copy_from_slice(&bra.geom);
-            s.kg[r * 6..(r + 1) * 6].copy_from_slice(&ket.geom);
+    let mut out = Vec::with_capacity(nunits);
+    for slot in slots {
+        match slot {
+            Some(Err(panic)) => resume_unwind(panic),
+            Some(Ok(payload)) => out.push(Some(payload)),
+            None => out.push(None),
         }
     }
-
-    /// Execute the quadruples of one block, digest into the unit's partial
-    /// G, record metrics + tuner evidence, optionally collect cache data.
-    fn run_block(
-        &self,
-        out: &mut UnitResult,
-        d: &Matrix,
-        block_idx: usize,
-        cache_values: bool,
-        scratch: &mut GatherScratch,
-    ) -> anyhow::Result<()> {
-        let block = &self.plan.blocks[block_idx];
-        let want_batch = self.batch_for(block.class);
-        let mut offset = 0;
-        let mut stored_values: Vec<f64> = Vec::new();
-        let mut stored_ncomp = 0;
-        while offset < block.quads.len() {
-            let remaining = block.quads.len() - offset;
-            // tail fitting (§Perf L3): the last chunk of a block uses the
-            // smallest variant that holds it instead of padding the tuned
-            // batch — cuts padded-lane waste on block tails
-            let variant = self.variant_for(block.class, want_batch, remaining)?;
-            let n = remaining.min(variant.batch);
-            let chunk = &block.quads[offset..offset + n];
-
-            let sw = Stopwatch::start();
-            self.gather(chunk, variant.batch, variant.kpair_bra, variant.kpair_ket, scratch);
-            out.metrics.gather_seconds += sw.elapsed_s();
-
-            let exec = self
-                .backend
-                .execute_eri(&variant, &scratch.bp, &scratch.bg, &scratch.kp, &scratch.kg)?;
-            // steady-state cost only: one-time kernel compilation must not
-            // poison Algorithm 2's combine/revert decisions or Fig. 12
-            out.metrics.record(block.class, n, variant.batch, exec.steady_seconds);
-            out.observations.push(TunerObservation {
-                class: block.class,
-                batch: want_batch,
-                quads: n,
-                seconds: exec.steady_seconds,
-            });
-
-            let sw = Stopwatch::start();
-            digest_chunk_into(self.basis, self.pairs, &mut out.g, d, chunk, &exec.values, exec.ncomp);
-            out.metrics.digest_seconds += sw.elapsed_s();
-
-            if cache_values {
-                stored_ncomp = exec.ncomp;
-                stored_values.extend_from_slice(&exec.values[..n * exec.ncomp]);
-            }
-            offset += n;
-        }
-        if cache_values {
-            out.cache.push(CachedBlock { block_idx, values: stored_values, ncomp: stored_ncomp });
-        }
-        Ok(())
-    }
+    out
 }
 
 pub struct MatryoshkaEngine {
@@ -350,8 +195,14 @@ pub struct MatryoshkaEngine {
     plan: BlockPlan,
     tuner: AutoTuner,
     pub metrics: EngineMetrics,
-    cache: Vec<CachedBlock>,
-    cache_complete: bool,
+    /// stored-mode cache, indexed by schedule entry (None = not cached,
+    /// either past the budget or not yet built)
+    cache: Vec<Option<CachedChunk>>,
+    /// the caching build ran (the cache may still be partial — budget)
+    cache_built: bool,
+    /// stored mode freezes one schedule for the whole SCF so cache keys
+    /// stay stable across iterations even if the tuner moves
+    stored_schedule: Option<ChunkSchedule>,
     eri_seconds: f64,
     pool: rayon::ThreadPool,
     threads: usize,
@@ -360,8 +211,14 @@ pub struct MatryoshkaEngine {
 impl MatryoshkaEngine {
     pub fn new(basis: BasisSet, artifact_dir: &Path, config: MatryoshkaConfig) -> anyhow::Result<Self> {
         // size the native catalog's pair-row width for this basis (9 for
-        // STO-3G, 36 for 6-31G*'s six-primitive cores)
-        let backend = create_backend(config.backend, artifact_dir, basis.max_kpair().max(1))?;
+        // STO-3G, 36 for 6-31G*) and the PJRT client pool for the worker
+        // count the engine will drive it from
+        let backend = create_backend(
+            config.backend,
+            artifact_dir,
+            basis.max_kpair().max(1),
+            resolve_threads(&config),
+        )?;
         Self::with_backend(basis, backend, config)
     }
 
@@ -416,11 +273,7 @@ impl MatryoshkaEngine {
             }
         }
         let tuner = AutoTuner::new(backend.manifest(), config.autotune, config.fixed_batch);
-        let threads = if config.threads == 0 {
-            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
-        } else {
-            config.threads
-        };
+        let threads = resolve_threads(&config);
         let pool = rayon::ThreadPoolBuilder::new()
             .num_threads(threads)
             .build()
@@ -434,7 +287,8 @@ impl MatryoshkaEngine {
             tuner,
             metrics: EngineMetrics::default(),
             cache: Vec::new(),
-            cache_complete: false,
+            cache_built: false,
+            stored_schedule: None,
             eri_seconds: 0.0,
             pool,
             threads,
@@ -471,40 +325,68 @@ impl MatryoshkaEngine {
         self.backend.warm_up()
     }
 
-    fn context<'a>(&'a self, batches: &'a BTreeMap<ClassKey, usize>) -> BlockContext<'a> {
-        BlockContext {
+    /// Stored-mode cache occupancy: (cached entries, schedule entries).
+    /// (0, 0) before the first stored build; cached < total means the
+    /// budget truncated the cache and the tail recomputes each iteration.
+    pub fn cache_occupancy(&self) -> (usize, usize) {
+        let cached = self.cache.iter().filter(|slot| slot.is_some()).count();
+        (cached, self.cache.len())
+    }
+
+    fn schedule_policy(&self) -> SchedulePolicy {
+        SchedulePolicy {
+            greedy_path: self.config.greedy_path,
+            fixed_batch: self.config.fixed_batch,
+            stored: self.config.stored,
+            stored_budget_bytes: self.config.stored_budget_bytes,
+        }
+    }
+
+    /// Materialize this iteration's work from the frozen tuner snapshot —
+    /// the first-class, inspectable value the executors run.
+    pub fn build_schedule(&self) -> anyhow::Result<ChunkSchedule> {
+        ChunkSchedule::build(
+            &self.plan,
+            self.backend.manifest(),
+            &self.tuner.batch_snapshot(),
+            &self.schedule_policy(),
+            self.basis.nbf,
+        )
+    }
+
+    /// Shard the schedule's merge units over the worker pool, run them
+    /// through `pipeline::run_entries`, fold the results deterministically.
+    /// Returns the (unsymmetrized) G plus any cache chunks collected.
+    fn run_schedule(
+        &mut self,
+        schedule: &ChunkSchedule,
+        density: &Matrix,
+        cache: Option<&[Option<CachedChunk>]>,
+        collect_cache: bool,
+    ) -> anyhow::Result<(Matrix, Vec<(usize, CachedChunk)>)> {
+        let n = self.basis.nbf;
+        let nunits = schedule.units.len();
+        if nunits == 0 {
+            return Ok((Matrix::zeros(n, n), Vec::new()));
+        }
+        let ctx = ExecContext {
             basis: &self.basis,
             pairs: &self.pairs,
             plan: &self.plan,
             backend: self.backend.as_ref(),
-            greedy_path: self.config.greedy_path,
-            fixed_batch: self.config.fixed_batch,
-            batches,
-        }
-    }
-
-    /// Parallel direct build: shard merge units over the worker pool,
-    /// collect per-unit partials, merge in unit order (bitwise
-    /// reproducible for any thread count).
-    fn build_direct(&mut self, density: &Matrix, want_cache: bool) -> anyhow::Result<Matrix> {
-        let n = self.basis.nbf;
-        let units = unit_ranges(self.plan.blocks.len(), merge_unit_count(n));
-        let nunits = units.len();
-        if nunits == 0 {
-            return Ok(Matrix::zeros(n, n));
-        }
-        let batches = self.tuner.batch_snapshot();
-        let ctx = self.context(&batches);
+            schedule,
+            mode: self.config.pipeline,
+            cache,
+            collect_cache,
+        };
         let workers = self.threads.min(nunits);
         let slots = run_units_ordered(
             &self.pool,
             workers,
             nunits,
-            |u, scratch: &mut GatherScratch| -> anyhow::Result<UnitResult> {
-                let mut out = UnitResult::new(n);
-                for bi in units[u].clone() {
-                    ctx.run_block(&mut out, density, bi, want_cache, scratch)?;
-                }
+            |u, bufs: &mut PipelineBuffers| -> anyhow::Result<UnitOutput> {
+                let mut out = UnitOutput::new(n);
+                run_entries(&ctx, density, schedule.units[u].entries(), &mut out, bufs)?;
                 Ok(out)
             },
         );
@@ -518,62 +400,90 @@ impl MatryoshkaEngine {
         }
 
         let g = merge_partials(n, outs.iter().map(|o| &o.g));
+        let mut observations = Vec::new();
+        let mut collected = Vec::new();
         for out in outs {
             self.metrics.merge(&out.metrics);
-            self.tuner.apply_observations(&out.observations);
-            if want_cache {
-                self.cache.extend(out.cache);
-            }
+            observations.extend(out.observations);
+            collected.extend(out.cache);
         }
-        if want_cache {
-            self.cache_complete = true;
-        }
-        Ok(g)
+        // schedule-entry order = the order a 1-thread build observes in
+        observations.sort_by_key(|ob| ob.entry);
+        self.tuner.apply_observations(&observations);
+        Ok((g, collected))
     }
 
-    /// Parallel digest-only fast path over the stored-mode cache.
-    fn digest_cached(&self, density: &Matrix) -> Matrix {
-        let n = self.basis.nbf;
-        let units = unit_ranges(self.cache.len(), merge_unit_count(n));
-        let nunits = units.len();
-        if nunits == 0 {
-            return Matrix::zeros(n, n);
+    /// Stored-mode build: freeze one schedule for the whole SCF, run the
+    /// caching build once (budget-truncated), then serve cached entries
+    /// digest-only while the budget overflow recomputes.
+    fn build_stored(&mut self, density: &Matrix) -> anyhow::Result<Matrix> {
+        if self.stored_schedule.is_none() {
+            self.stored_schedule = Some(self.build_schedule()?);
         }
-        let workers = self.threads.min(nunits);
-        let (basis, pairs, plan, cache) = (&self.basis, &self.pairs, &self.plan, &self.cache);
-        let slots = run_units_ordered(&self.pool, workers, nunits, |u, _scratch: &mut ()| {
-            let mut part = Matrix::zeros(n, n);
-            for ci in units[u].clone() {
-                let cb = &cache[ci];
-                let quads = &plan.blocks[cb.block_idx].quads;
-                digest_chunk_into(basis, pairs, &mut part, density, quads, &cb.values, cb.ncomp);
+        // take/put-back keeps the borrow checker out of the worker fan-out
+        let schedule = self.stored_schedule.take().expect("stored schedule just built");
+        let cache = std::mem::take(&mut self.cache);
+        let first_build = !self.cache_built;
+        let result = if first_build {
+            self.run_schedule(&schedule, density, None, true)
+        } else {
+            self.run_schedule(&schedule, density, Some(cache.as_slice()), false)
+        };
+        match result {
+            Ok((g, collected)) => {
+                if first_build {
+                    let mut slots: Vec<Option<CachedChunk>> =
+                        (0..schedule.entries.len()).map(|_| None).collect();
+                    for (entry, chunk) in collected {
+                        slots[entry] = Some(chunk);
+                    }
+                    self.cache = slots;
+                    self.cache_built = true;
+                } else {
+                    self.cache = cache;
+                }
+                self.stored_schedule = Some(schedule);
+                Ok(g)
             }
-            part
-        });
-        merge_partials(n, slots.iter().map(|m| m.as_ref().expect("cached unit result")))
+            Err(e) => {
+                self.cache = cache;
+                self.stored_schedule = Some(schedule);
+                Err(e)
+            }
+        }
     }
 
     /// Build G over a subset of blocks (weak-scaling shards, Fig. 13) —
     /// sequential, shard workers are the unit of parallelism here.
     pub fn build_g_for_blocks(&mut self, d: &Matrix, block_indices: &[usize]) -> anyhow::Result<Matrix> {
         let n = self.basis.nbf;
-        let batches = self.tuner.batch_snapshot();
-        let ctx = self.context(&batches);
-        let mut out = UnitResult::new(n);
-        let mut scratch = GatherScratch::default();
-        let mut failure = None;
-        for &bi in block_indices {
-            if let Err(e) = ctx.run_block(&mut out, d, bi, false, &mut scratch) {
-                failure = Some(e);
-                break;
-            }
-        }
+        let schedule = ChunkSchedule::build_for_blocks(
+            &self.plan,
+            self.backend.manifest(),
+            &self.tuner.batch_snapshot(),
+            &self.schedule_policy(),
+            block_indices,
+            n,
+        )?;
+        let ctx = ExecContext {
+            basis: &self.basis,
+            pairs: &self.pairs,
+            plan: &self.plan,
+            backend: self.backend.as_ref(),
+            schedule: &schedule,
+            mode: self.config.pipeline,
+            cache: None,
+            collect_cache: false,
+        };
+        let mut out = UnitOutput::new(n);
+        let mut bufs = PipelineBuffers::default();
+        let result = run_entries(&ctx, d, 0..schedule.entries.len(), &mut out, &mut bufs);
         drop(ctx);
-        if let Some(e) = failure {
-            return Err(e);
-        }
+        result?;
         self.metrics.merge(&out.metrics);
-        self.tuner.apply_observations(&out.observations);
+        let mut observations = out.observations;
+        observations.sort_by_key(|ob| ob.entry);
+        self.tuner.apply_observations(&observations);
         let mut g = out.g;
         g.symmetrize();
         Ok(g)
@@ -587,11 +497,11 @@ impl FockEngine for MatryoshkaEngine {
 
     fn two_electron(&mut self, density: &Matrix) -> anyhow::Result<Matrix> {
         let sw = Stopwatch::start();
-        let mut g = if self.config.stored && self.cache_complete {
-            // digest-only fast path: ERIs are density-independent
-            self.digest_cached(density)
+        let mut g = if self.config.stored {
+            self.build_stored(density)?
         } else {
-            self.build_direct(density, self.config.stored)?
+            let schedule = self.build_schedule()?;
+            self.run_schedule(&schedule, density, None, false)?.0
         };
         g.symmetrize();
         self.eri_seconds += sw.elapsed_s();

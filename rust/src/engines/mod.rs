@@ -4,5 +4,5 @@
 mod matryoshka;
 mod reference;
 
-pub use matryoshka::{MatryoshkaConfig, MatryoshkaEngine};
+pub use matryoshka::{MatryoshkaConfig, MatryoshkaEngine, DEFAULT_STORED_BUDGET_BYTES};
 pub use reference::ReferenceEngine;

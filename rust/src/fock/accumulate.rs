@@ -62,6 +62,76 @@ pub fn merge_partials<'a>(n: usize, partials: impl IntoIterator<Item = &'a Matri
     g
 }
 
+/// One merge unit of a [`crate::pipeline::ChunkSchedule`]: a contiguous
+/// run of schedule entries digested into one partial accumulator, plus
+/// the cost summary a scheduler (or a future multi-process dispatcher)
+/// needs to place it.  This is the wire unit for cross-process sharding:
+/// "ship schedule slices" means sending these lines plus the entry range
+/// they name — see [`MergeUnit::wire_line`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct MergeUnit {
+    /// unit id = merge position in the fixed summation tree
+    pub unit: usize,
+    /// schedule entries `[entry_start, entry_end)` digested by this unit
+    pub entry_start: usize,
+    pub entry_end: usize,
+    /// block-plan indices `[block_start, block_end)` those entries cover
+    /// (adjacent units may share a boundary block when its chunks split)
+    pub block_start: usize,
+    pub block_end: usize,
+    /// real (non-padding) quadruples across the unit's entries
+    pub quads: u64,
+    /// cost-model estimates summed over entries (variant flops/bytes ×
+    /// real quads) — the load-balancing signal for placing units
+    pub flops: f64,
+    pub bytes: f64,
+}
+
+impl MergeUnit {
+    /// Schedule-entry range this unit digests.
+    pub fn entries(&self) -> Range<usize> {
+        self.entry_start..self.entry_end
+    }
+
+    /// Serialize to one whitespace-separated text line (the repo's wire
+    /// idiom — see `runtime::Manifest`; the vendored registry has no
+    /// serde).  Floats use `{:e}`, which round-trips exactly.
+    pub fn wire_line(&self) -> String {
+        format!(
+            "unit {} entries {} {} blocks {} {} quads {} flops {:e} bytes {:e}",
+            self.unit,
+            self.entry_start,
+            self.entry_end,
+            self.block_start,
+            self.block_end,
+            self.quads,
+            self.flops,
+            self.bytes
+        )
+    }
+
+    /// Parse a [`MergeUnit::wire_line`] back (the receive side of a
+    /// schedule-slice shipment).
+    pub fn parse_wire_line(line: &str) -> anyhow::Result<MergeUnit> {
+        let f: Vec<&str> = line.split_whitespace().collect();
+        if f.len() != 14
+            || [f[0], f[2], f[5], f[8], f[10], f[12]] != ["unit", "entries", "blocks", "quads", "flops", "bytes"]
+        {
+            anyhow::bail!("malformed merge-unit line: {line:?}");
+        }
+        Ok(MergeUnit {
+            unit: f[1].parse()?,
+            entry_start: f[3].parse()?,
+            entry_end: f[4].parse()?,
+            block_start: f[6].parse()?,
+            block_end: f[7].parse()?,
+            quads: f[9].parse()?,
+            flops: f[11].parse()?,
+            bytes: f[13].parse()?,
+        })
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -106,6 +176,36 @@ mod tests {
         assert!(huge < MERGE_UNITS);
         // deterministic in nbf alone
         assert_eq!(merge_unit_count(3000), merge_unit_count(3000));
+    }
+
+    #[test]
+    fn merge_unit_wire_line_round_trips_exactly() {
+        let unit = MergeUnit {
+            unit: 17,
+            entry_start: 340,
+            entry_end: 361,
+            block_start: 101,
+            block_end: 113,
+            quads: 123_457,
+            flops: 1.234_567_890_123e9,
+            bytes: 9.876_543_21e7,
+        };
+        let line = unit.wire_line();
+        let back = MergeUnit::parse_wire_line(&line).unwrap();
+        assert_eq!(back, unit, "wire line {line:?}");
+        assert_eq!(back.entries(), 340..361);
+    }
+
+    #[test]
+    fn malformed_merge_unit_lines_are_rejected() {
+        for bad in [
+            "",
+            "unit x entries 0 1 blocks 0 1 quads 2 flops 1e0 bytes 1e0",
+            "unit 0 entries 0 1 blocks 0 1 quads 2 flops 1e0",
+            "item 0 entries 0 1 blocks 0 1 quads 2 flops 1e0 bytes 1e0",
+        ] {
+            assert!(MergeUnit::parse_wire_line(bad).is_err(), "{bad:?}");
+        }
     }
 
     #[test]

@@ -1,10 +1,12 @@
 //! Fock-matrix assembly: core Hamiltonian, two-electron digestion, and
-//! the deterministic accumulator-merge path of the parallel Fock build.
+//! the deterministic accumulator-merge path of the parallel Fock build
+//! (including [`MergeUnit`], the serializable per-unit work summary the
+//! staged pipeline schedules over).
 
 mod accumulate;
 mod digest;
 mod hcore;
 
-pub use accumulate::{merge_partials, merge_unit_count, unit_ranges, MERGE_UNITS};
+pub use accumulate::{merge_partials, merge_unit_count, unit_ranges, MergeUnit, MERGE_UNITS};
 pub use digest::{digest_block, digest_eri, symmetry_factor};
 pub use hcore::core_hamiltonian;

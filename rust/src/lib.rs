@@ -21,11 +21,17 @@
 //!   in Pallas kernels and AOT-lowered to HLO text artifacts.  Python is
 //!   never on the request path in either configuration.
 //!
-//! The Fock hot path shards the dependency-free quadruple blocks of the
-//! Block Constructor across a worker pool (`--threads N`); per-worker
-//! partial G accumulators are merged through a fixed summation tree, so
-//! the thread count changes wall time but never a single bit of the
-//! result.  See `rust/README.md` for the backend/feature matrix.
+//! The Fock hot path is a **staged pipeline** ([`pipeline`]): each
+//! iteration's work is materialized up front as an explicit
+//! [`pipeline::ChunkSchedule`] (chunk descriptors + merge units, a pure
+//! function of plan/catalog/tuner snapshot), the schedule's merge units
+//! are sharded across a worker pool (`--threads N`), and inside every
+//! worker a memory stage (gather + digest) overlaps a compute stage
+//! (ERI execution) through double-buffered scratch.  Per-worker partial
+//! G accumulators are merged through a fixed summation tree, so neither
+//! the thread count nor the pipeline mode (`--pipeline staged|lockstep`)
+//! changes a single bit of the result.  See `rust/README.md` for the
+//! backend/feature matrix and the pipeline diagram.
 
 // Numeric-kernel lint policy: index arithmetic over flat buffers and wide
 // argument lists are idiomatic in the integral/digestion hot paths; these
@@ -44,6 +50,7 @@ pub mod integrals;
 pub mod linalg;
 pub mod metrics;
 pub mod molecule;
+pub mod pipeline;
 pub mod report;
 pub mod runtime;
 pub mod scf;

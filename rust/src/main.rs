@@ -15,10 +15,13 @@ use std::path::PathBuf;
 use matryoshka::basis::build_basis;
 use matryoshka::cli::Args;
 use matryoshka::constructor::SchwarzMode;
-use matryoshka::engines::{MatryoshkaConfig, MatryoshkaEngine, ReferenceEngine};
+use matryoshka::engines::{
+    MatryoshkaConfig, MatryoshkaEngine, ReferenceEngine, DEFAULT_STORED_BUDGET_BYTES,
+};
 use matryoshka::integrals::overlap_matrix;
 use matryoshka::linalg::Matrix;
 use matryoshka::molecule::{library, parse_xyz, Molecule};
+use matryoshka::pipeline::PipelineMode;
 use matryoshka::report;
 use matryoshka::runtime::BackendKind;
 use matryoshka::scf::{dipole_moment, mulliken_charges, run_rhf, ScfOptions};
@@ -31,12 +34,14 @@ fn usage() -> ! {
     eprintln!(
         "usage: matryoshka <scf|report|info> [options]\n\
          \n  scf     --molecule NAME [--basis sto-3g|6-31g*] [--engine matryoshka|reference]\n\
-         \u{20}         [--stored] [--backend native|pjrt] [--threads N (0 = all cores)]\n\
+         \u{20}         [--stored] [--stored-budget-mb N] [--backend native|pjrt]\n\
+         \u{20}         [--threads N (0 = auto)] [--pipeline staged|lockstep]\n\
          \u{20}         [--threshold T] [--max-iter N] [--tile N] [--fixed-batch N]\n\
          \u{20}         [--no-autotune] [--no-cluster] [--random-path]\n\
          \u{20}         [--schwarz exact|estimate] [--artifacts DIR] [--verbose]\n\
          \u{20}         [--xyz FILE] [--damping A] [--properties]\n\
-         \n  report  systems|tab4|fig6|compiler|all [--artifacts DIR]\n\
+         \n  report  systems|tab4|fig6|compiler|schedule|all [--artifacts DIR]\n\
+         \u{20}         (schedule: [--molecule NAME] [--basis B] — merge-unit work summary)\n\
          \n  info    [--backend native|pjrt] [--artifacts DIR]"
     );
     std::process::exit(2);
@@ -51,12 +56,20 @@ fn engine_config(args: &Args) -> anyhow::Result<MatryoshkaConfig> {
         autotune: !args.flag("no-autotune"),
         fixed_batch: args.usize_or("fixed-batch", 512)?,
         stored: args.flag("stored"),
+        stored_budget_bytes: args
+            .usize_or("stored-budget-mb", DEFAULT_STORED_BUDGET_BYTES >> 20)?
+            .saturating_mul(1 << 20),
         schwarz: match args.choice("schwarz", "estimate", &["exact", "estimate"])?.as_str() {
             "exact" => SchwarzMode::Exact,
             _ => SchwarzMode::Estimate,
         },
         backend: BackendKind::parse(&args.choice("backend", "native", &["native", "pjrt"])?)?,
         threads: args.usize_or("threads", 0)?,
+        pipeline: PipelineMode::parse(&args.choice(
+            "pipeline",
+            "staged",
+            &["staged", "lockstep"],
+        )?)?,
     })
 }
 
@@ -108,9 +121,10 @@ fn cmd_scf(args: &Args) -> anyhow::Result<()> {
             let m = &engine.metrics;
             let rs = engine.runtime_stats();
             println!(
-                "engine: backend {} with {} Fock worker(s)",
+                "engine: backend {} with {} Fock worker(s), {} pipeline",
                 engine.backend_name(),
-                engine.threads()
+                engine.threads(),
+                engine.config.pipeline.name()
             );
             // phase timers are CPU-seconds summed across Fock workers;
             // with --threads N they can exceed wall time by up to N×
@@ -126,6 +140,11 @@ fn cmd_scf(args: &Args) -> anyhow::Result<()> {
                 rs.marshal_seconds,
                 m.gather_seconds,
                 m.digest_seconds
+            );
+            println!(
+                "engine: pipeline wall {:.2}s, gather+digest hidden under execution {:.2}s",
+                m.pipeline_wall_seconds,
+                m.overlap_hidden_seconds()
             );
             res
         }
@@ -183,7 +202,7 @@ fn cmd_report(args: &Args) -> anyhow::Result<()> {
     let what = args.positional.get(1).map(|s| s.as_str()).unwrap_or("all");
     let dir = artifact_dir(args);
     let sections: Vec<&str> = match what {
-        "all" => vec!["systems", "tab4", "fig6", "compiler"],
+        "all" => vec!["systems", "tab4", "fig6", "compiler", "schedule"],
         one => vec![one],
     };
     for s in sections {
@@ -192,6 +211,11 @@ fn cmd_report(args: &Args) -> anyhow::Result<()> {
             "tab4" => report::tab4_counts(args.f64_or("threshold", 1e-10)?)?,
             "fig6" => report::fig6_opb(&dir)?,
             "compiler" => report::compiler_stats(&dir)?,
+            "schedule" => report::schedule_summary(
+                &args.str_or("molecule", "water"),
+                &args.str_or("basis", "sto-3g"),
+                args.f64_or("threshold", 1e-10)?,
+            )?,
             other => anyhow::bail!("unknown report {other}"),
         };
         println!("{text}");

@@ -54,6 +54,11 @@ pub struct EngineMetrics {
     pub digest_seconds: f64,
     /// gather/marshal CPU-seconds, summed across workers (L3 pack phase)
     pub gather_seconds: f64,
+    /// wall seconds workers spent inside `pipeline::run_entries`, summed
+    /// across workers.  Under the staged pipeline this is LESS than
+    /// gather + execute + digest: the difference is the memory-stage time
+    /// hidden under execution — see [`EngineMetrics::overlap_hidden_seconds`].
+    pub pipeline_wall_seconds: f64,
 }
 
 impl EngineMetrics {
@@ -77,6 +82,19 @@ impl EngineMetrics {
         }
         self.digest_seconds += other.digest_seconds;
         self.gather_seconds += other.gather_seconds;
+        self.pipeline_wall_seconds += other.pipeline_wall_seconds;
+    }
+
+    /// Fig. 9 per-stage overlap: gather + digest CPU-seconds hidden under
+    /// ERI execution by the staged pipeline.  Computed as
+    /// `(gather + execute + digest) − pipeline wall`, clamped at zero —
+    /// a lockstep build (phases strictly sequential inside each worker)
+    /// reports ≈ 0, a staged build reports how much memory-stage time the
+    /// compute stage absorbed.  All terms are summed across workers, so
+    /// the ratio is meaningful even though each term is CPU-seconds.
+    pub fn overlap_hidden_seconds(&self) -> f64 {
+        let phases = self.gather_seconds + self.digest_seconds + self.total_seconds();
+        (phases - self.pipeline_wall_seconds).max(0.0)
     }
 
     pub fn total_real_quads(&self) -> u64 {
@@ -148,5 +166,27 @@ mod tests {
         let s = ClassStats::default();
         assert_eq!(s.lane_utilization(), 0.0);
         assert_eq!(s.throughput(), 0.0);
+        assert_eq!(EngineMetrics::default().overlap_hidden_seconds(), 0.0);
+    }
+
+    #[test]
+    fn overlap_hidden_is_phases_minus_wall_clamped() {
+        let mut m = EngineMetrics::default();
+        m.record((0, 0, 0, 0), 100, 128, 2.0); // execute
+        m.gather_seconds = 0.5;
+        m.digest_seconds = 0.7;
+        // staged: wall < sum of phases -> positive hidden time
+        m.pipeline_wall_seconds = 2.4;
+        assert!((m.overlap_hidden_seconds() - 0.8).abs() < 1e-12);
+        // lockstep: wall >= sum of phases (loop overhead) -> clamped to 0
+        m.pipeline_wall_seconds = 3.3;
+        assert_eq!(m.overlap_hidden_seconds(), 0.0);
+        // merge folds the wall accumulator like the phase timers
+        let mut a = EngineMetrics::default();
+        a.pipeline_wall_seconds = 1.0;
+        let mut b = EngineMetrics::default();
+        b.pipeline_wall_seconds = 0.5;
+        a.merge(&b);
+        assert!((a.pipeline_wall_seconds - 1.5).abs() < 1e-12);
     }
 }

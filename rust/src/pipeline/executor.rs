@@ -1,0 +1,341 @@
+//! The staged executor: runs a range of schedule entries as a two-stage
+//! software pipeline.
+//!
+//! Each Fock worker splits into a **memory stage** (the worker thread
+//! itself: gather + digest + metrics) and a **compute stage** (one scoped
+//! companion thread driving the ERI backend).  With two buffer sets in
+//! rotation the steady state is
+//!
+//! ```text
+//!   memory:   gather k+1          digest k        gather k+2   ...
+//!   compute:  ───── execute k ─────────── execute k+1 ──────── ...
+//! ```
+//!
+//! so the memory-bound gather/digest phases hide under the compute-bound
+//! execution instead of serializing behind it.  Determinism is untouched:
+//! digestion happens only on the memory stage, strictly in schedule-entry
+//! order, and the merge tree above this module never changes — a staged
+//! build is bitwise-identical to a lockstep build at any thread count
+//! (asserted in `tests/pipeline_staged.rs`).
+//!
+//! The lockstep executor (`--pipeline lockstep`) runs the same per-entry
+//! code sequentially on one thread: the A/B baseline, and the path used
+//! when an entry is served from the stored-mode cache.
+
+use std::collections::VecDeque;
+use std::ops::Range;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::mpsc;
+
+use crate::allocator::TunerObservation;
+use crate::basis::BasisSet;
+use crate::constructor::{BlockPlan, PairList};
+use crate::fock::digest_block;
+use crate::linalg::Matrix;
+use crate::metrics::EngineMetrics;
+use crate::runtime::EriBackend;
+use crate::util::Stopwatch;
+
+use super::schedule::{ChunkEntry, ChunkSchedule};
+use super::scratch::{BufferSet, CachedChunk, PipelineBuffers};
+use super::PipelineMode;
+
+/// Everything the executor needs, borrowed immutably so one context is
+/// shared by all workers.  Mutation happens only on worker-local
+/// [`UnitOutput`]s, merged deterministically afterwards.
+pub struct ExecContext<'a> {
+    pub basis: &'a BasisSet,
+    pub pairs: &'a PairList,
+    pub plan: &'a BlockPlan,
+    pub backend: &'a dyn EriBackend,
+    pub schedule: &'a ChunkSchedule,
+    pub mode: PipelineMode,
+    /// stored-mode cache indexed by schedule entry (None = recompute)
+    pub cache: Option<&'a [Option<CachedChunk>]>,
+    /// collect values of budget-marked entries into [`UnitOutput::cache`]
+    pub collect_cache: bool,
+}
+
+/// Worker-local accumulator for one merge unit (or one shard run).
+pub struct UnitOutput {
+    pub g: Matrix,
+    pub metrics: EngineMetrics,
+    pub observations: Vec<TunerObservation>,
+    /// (schedule entry, values) pairs collected for the stored cache
+    pub cache: Vec<(usize, CachedChunk)>,
+}
+
+impl UnitOutput {
+    pub fn new(n: usize) -> UnitOutput {
+        UnitOutput {
+            g: Matrix::zeros(n, n),
+            metrics: EngineMetrics::default(),
+            observations: Vec::new(),
+            cache: Vec::new(),
+        }
+    }
+}
+
+/// Digest one entry's contracted values into `g` (shared by the direct,
+/// staged and cached paths — identical digestion order everywhere).
+pub fn digest_quads(
+    basis: &BasisSet,
+    pairs: &PairList,
+    g: &mut Matrix,
+    d: &Matrix,
+    quads: &[(u32, u32)],
+    values: &[f64],
+    ncomp: usize,
+) {
+    for (r, &(pidx, qidx)) in quads.iter().enumerate() {
+        let bra = &pairs.pairs[pidx as usize];
+        let ket = &pairs.pairs[qidx as usize];
+        let (sa, sb) = (&basis.shells[bra.si], &basis.shells[bra.sj]);
+        let (sc, sd) = (&basis.shells[ket.si], &basis.shells[ket.sj]);
+        digest_block(
+            g,
+            d,
+            sa,
+            sb,
+            sc,
+            sd,
+            bra.si == bra.sj,
+            ket.si == ket.sj,
+            pidx == qidx,
+            &values[r * ncomp..(r + 1) * ncomp],
+        );
+    }
+}
+
+impl<'a> ExecContext<'a> {
+    fn entry_quads(&self, entry: &ChunkEntry) -> &'a [(u32, u32)] {
+        &self.plan.blocks[entry.block].quads[entry.start..entry.end]
+    }
+
+    fn cached(&self, entry: usize) -> Option<&'a CachedChunk> {
+        self.cache.and_then(|c| c.get(entry)).and_then(|slot| slot.as_ref())
+    }
+
+    /// Digest a cache hit (memory stage only; no execution involved).
+    fn digest_cached(&self, density: &Matrix, entry: &ChunkEntry, hit: &CachedChunk, out: &mut UnitOutput) {
+        let sw = Stopwatch::start();
+        digest_quads(
+            self.basis,
+            self.pairs,
+            &mut out.g,
+            density,
+            self.entry_quads(entry),
+            &hit.values,
+            hit.ncomp,
+        );
+        out.metrics.digest_seconds += sw.elapsed_s();
+    }
+
+    /// Post-execution bookkeeping for one entry: metrics, tuner evidence,
+    /// digestion, optional cache collection.  Called on the memory stage
+    /// in strict entry order by both executors.
+    fn finish_entry(&self, density: &Matrix, entry: &ChunkEntry, set: &BufferSet, out: &mut UnitOutput) {
+        let n = entry.len();
+        // steady-state cost only: one-time kernel compilation must not
+        // poison Algorithm 2's combine/revert decisions or Fig. 12
+        out.metrics.record(entry.class, n, entry.variant.batch, set.out.steady_seconds);
+        out.observations.push(TunerObservation {
+            class: entry.class,
+            entry: entry.entry,
+            batch: entry.rung,
+            quads: n,
+            seconds: set.out.steady_seconds,
+        });
+        let sw = Stopwatch::start();
+        digest_quads(
+            self.basis,
+            self.pairs,
+            &mut out.g,
+            density,
+            self.entry_quads(entry),
+            &set.out.values,
+            set.out.ncomp,
+        );
+        out.metrics.digest_seconds += sw.elapsed_s();
+        if self.collect_cache && entry.cacheable {
+            out.cache.push((
+                entry.entry,
+                CachedChunk { values: set.out.values[..n * set.out.ncomp].to_vec(), ncomp: set.out.ncomp },
+            ));
+        }
+    }
+
+    /// Gather one entry's chunk into `set` (timed as the gather phase).
+    fn gather_entry(&self, entry: &ChunkEntry, set: &mut BufferSet, out: &mut UnitOutput) {
+        let v = &entry.variant;
+        let sw = Stopwatch::start();
+        set.scratch.gather(self.pairs, self.entry_quads(entry), v.batch, v.kpair_bra, v.kpair_ket);
+        out.metrics.gather_seconds += sw.elapsed_s();
+    }
+}
+
+/// Run the schedule entries `range` into `out`, using the context's
+/// pipeline mode.  Also accounts the run's wall time
+/// (`EngineMetrics::pipeline_wall_seconds`), which is what makes the
+/// hidden gather/digest overlap measurable.
+pub fn run_entries(
+    ctx: &ExecContext<'_>,
+    density: &Matrix,
+    range: Range<usize>,
+    out: &mut UnitOutput,
+    bufs: &mut PipelineBuffers,
+) -> anyhow::Result<()> {
+    let sw = Stopwatch::start();
+    let result = match ctx.mode {
+        PipelineMode::Lockstep => run_lockstep(ctx, density, range, out, bufs),
+        PipelineMode::Staged => run_staged(ctx, density, range, out, bufs),
+    };
+    out.metrics.pipeline_wall_seconds += sw.elapsed_s();
+    result
+}
+
+/// Sequential baseline: gather → execute → digest per entry, one thread.
+fn run_lockstep(
+    ctx: &ExecContext<'_>,
+    density: &Matrix,
+    range: Range<usize>,
+    out: &mut UnitOutput,
+    bufs: &mut PipelineBuffers,
+) -> anyhow::Result<()> {
+    let mut set = bufs.take_set();
+    for e in range {
+        let entry = &ctx.schedule.entries[e];
+        if let Some(hit) = ctx.cached(e) {
+            ctx.digest_cached(density, entry, hit, out);
+            continue;
+        }
+        ctx.gather_entry(entry, &mut set, out);
+        ctx.backend.execute_eri_into(
+            &entry.variant,
+            &set.scratch.bp,
+            &set.scratch.bg,
+            &set.scratch.kp,
+            &set.scratch.kg,
+            &mut set.out,
+        )?;
+        ctx.finish_entry(density, entry, &set, out);
+    }
+    bufs.put_set(set);
+    Ok(())
+}
+
+/// A chunk travelling memory stage → compute stage.
+struct Job {
+    entry: usize,
+    set: BufferSet,
+}
+
+/// A chunk travelling back.  `status` carries backend errors verbatim and
+/// compute-stage panics as caught payloads, so a backend bug resurfaces
+/// on the worker thread as itself.
+struct Done {
+    entry: usize,
+    set: BufferSet,
+    status: std::thread::Result<anyhow::Result<()>>,
+}
+
+/// Receive the oldest in-flight chunk, then digest it (in entry order).
+fn drain_one(
+    ctx: &ExecContext<'_>,
+    density: &Matrix,
+    done_rx: &mpsc::Receiver<Done>,
+    inflight: &mut VecDeque<usize>,
+    pool: &mut Vec<BufferSet>,
+    out: &mut UnitOutput,
+) -> anyhow::Result<()> {
+    let done = done_rx
+        .recv()
+        .map_err(|_| anyhow::anyhow!("pipeline compute stage terminated early"))?;
+    let oldest = inflight.pop_front().expect("drain_one with nothing in flight");
+    debug_assert_eq!(oldest, done.entry, "single compute stage returns chunks in order");
+    match done.status {
+        Err(panic) => resume_unwind(panic),
+        Ok(status) => status?,
+    }
+    let entry = &ctx.schedule.entries[done.entry];
+    ctx.finish_entry(density, entry, &done.set, out);
+    pool.push(done.set);
+    Ok(())
+}
+
+/// Two-stage software pipeline over one entry range (see module docs).
+fn run_staged(
+    ctx: &ExecContext<'_>,
+    density: &Matrix,
+    range: Range<usize>,
+    out: &mut UnitOutput,
+    bufs: &mut PipelineBuffers,
+) -> anyhow::Result<()> {
+    let mut pool = vec![bufs.take_set(), bufs.take_set()];
+    let result = std::thread::scope(|s| -> anyhow::Result<()> {
+        // rendezvous-depth-1 channels: the memory stage can run at most
+        // one gather ahead, the compute stage at most one result behind —
+        // exactly the double buffer, with backpressure both ways
+        let (job_tx, job_rx) = mpsc::sync_channel::<Job>(1);
+        let (done_tx, done_rx) = mpsc::sync_channel::<Done>(1);
+        let (backend, schedule) = (ctx.backend, ctx.schedule);
+        s.spawn(move || {
+            while let Ok(Job { entry, mut set }) = job_rx.recv() {
+                let status = catch_unwind(AssertUnwindSafe(|| {
+                    let v = &schedule.entries[entry].variant;
+                    backend.execute_eri_into(
+                        v,
+                        &set.scratch.bp,
+                        &set.scratch.bg,
+                        &set.scratch.kp,
+                        &set.scratch.kg,
+                        &mut set.out,
+                    )
+                }));
+                if done_tx.send(Done { entry, set, status }).is_err() {
+                    break; // memory stage bailed; nobody is listening
+                }
+            }
+        });
+
+        let mut inflight: VecDeque<usize> = VecDeque::with_capacity(2);
+        for e in range {
+            let entry = &ctx.schedule.entries[e];
+            if let Some(hit) = ctx.cached(e) {
+                // cache hits digest in place; earlier in-flight chunks
+                // must land first to keep digestion in entry order
+                while !inflight.is_empty() {
+                    drain_one(ctx, density, &done_rx, &mut inflight, &mut pool, out)?;
+                }
+                ctx.digest_cached(density, entry, hit, out);
+                continue;
+            }
+            let mut set = match pool.pop() {
+                Some(set) => set,
+                None => {
+                    drain_one(ctx, density, &done_rx, &mut inflight, &mut pool, out)?;
+                    pool.pop().expect("drain_one returned a buffer set")
+                }
+            };
+            ctx.gather_entry(entry, &mut set, out);
+            job_tx
+                .send(Job { entry: e, set })
+                .map_err(|_| anyhow::anyhow!("pipeline compute stage terminated early"))?;
+            inflight.push_back(e);
+            // steady state: digest chunk k while the compute stage
+            // executes chunk k+1 (which we just gathered and sent)
+            if inflight.len() >= 2 {
+                drain_one(ctx, density, &done_rx, &mut inflight, &mut pool, out)?;
+            }
+        }
+        while !inflight.is_empty() {
+            drain_one(ctx, density, &done_rx, &mut inflight, &mut pool, out)?;
+        }
+        Ok(())
+        // job_tx drops here → compute stage drains and exits → scope joins
+    });
+    for set in pool {
+        bufs.put_set(set);
+    }
+    result
+}

@@ -1,0 +1,77 @@
+//! Staged execution pipeline: explicit chunk schedules, overlapped
+//! gather/execute/digest, shard-ready merge units.
+//!
+//! The engine no longer interleaves planning and execution inside one
+//! opaque block loop.  Instead, each Fock build is:
+//!
+//! ```text
+//!   tuner snapshot ─┐
+//!   block plan ─────┼─► ChunkSchedule (schedule.rs)   precomputed, pure
+//!   variant catalog ┘        │
+//!                            ▼  merge units (entry ranges)
+//!                   staged executor (executor.rs)     per Fock worker:
+//!                     memory stage  ── gather/digest ─┐ overlapped via
+//!                     compute stage ── execute ───────┘ double buffers
+//!                            │                          (scratch.rs)
+//!                            ▼  per-unit partial G
+//!                   fock::merge_partials               fixed summation
+//!                                                      tree, bitwise
+//!                                                      thread-invariant
+//! ```
+//!
+//! The schedule is the contract: the executor never decides *what* to
+//! run, only *when* — which is what makes the work inspectable
+//! (`report schedule`), cacheable per entry (stored mode), and — via
+//! [`crate::fock::MergeUnit`]'s wire format — shippable across processes
+//! in a later stage of the scale-out plan.
+
+mod executor;
+mod schedule;
+mod scratch;
+
+pub use executor::{digest_quads, run_entries, ExecContext, UnitOutput};
+pub use schedule::{ChunkEntry, ChunkSchedule, SchedulePolicy};
+pub use scratch::{BufferSet, CachedChunk, GatherScratch, PipelineBuffers};
+
+/// How a worker walks its merge units.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum PipelineMode {
+    /// two-stage software pipeline: gather chunk k+1 and digest chunk
+    /// k−1 on the memory stage while the compute stage executes chunk k
+    #[default]
+    Staged,
+    /// sequential gather → execute → digest per chunk (A/B baseline)
+    Lockstep,
+}
+
+impl PipelineMode {
+    pub fn parse(name: &str) -> anyhow::Result<PipelineMode> {
+        match name {
+            "staged" => Ok(PipelineMode::Staged),
+            "lockstep" => Ok(PipelineMode::Lockstep),
+            other => anyhow::bail!("unknown pipeline mode {other} (available: staged, lockstep)"),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            PipelineMode::Staged => "staged",
+            PipelineMode::Lockstep => "lockstep",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pipeline_mode_parses_and_rejects() {
+        assert_eq!(PipelineMode::parse("staged").unwrap(), PipelineMode::Staged);
+        assert_eq!(PipelineMode::parse("lockstep").unwrap(), PipelineMode::Lockstep);
+        let err = PipelineMode::parse("async").unwrap_err().to_string();
+        assert!(err.contains("staged, lockstep"), "{err}");
+        assert_eq!(PipelineMode::default(), PipelineMode::Staged);
+        assert_eq!(PipelineMode::default().name(), "staged");
+    }
+}

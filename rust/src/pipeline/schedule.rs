@@ -1,0 +1,396 @@
+//! The explicit per-iteration chunk schedule.
+//!
+//! A [`ChunkSchedule`] materializes one Fock build's work as data *before*
+//! any of it runs: for every quadruple block, the ordered chunk
+//! descriptors (block index, quad range, class, resolved kernel variant,
+//! frozen batch rung), partitioned into the merge units of the
+//! deterministic accumulator tree.  It is a pure function of the block
+//! plan, the variant catalog and the tuner snapshot — same inputs, same
+//! schedule, bit for bit — which buys three things:
+//!
+//! * the hot loop stops re-deriving variants chunk-by-chunk (tail
+//!   downshift is decided once, at build time);
+//! * the iteration's work is inspectable (`report schedule`) and
+//!   shippable: a merge unit's [`MergeUnit`] summary plus its entry range
+//!   is the future cross-process wire unit;
+//! * stored mode keys its cache on schedule entries instead of implicit
+//!   block-loop order, and the cache budget is allocated here,
+//!   deterministically, rather than raced over by workers.
+
+use std::collections::BTreeMap;
+
+use crate::constructor::BlockPlan;
+use crate::fock::{merge_unit_count, unit_ranges, MergeUnit};
+use crate::runtime::{ClassKey, Manifest, Variant};
+
+/// Knobs the schedule build reads off the engine configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct SchedulePolicy {
+    /// Graph Compiler greedy path (false = random-path ablation variants)
+    pub greedy_path: bool,
+    /// rung used for classes the tuner snapshot does not cover
+    pub fixed_batch: usize,
+    /// stored mode: mark entries cacheable up to the budget below
+    pub stored: bool,
+    /// stored-mode cache budget in bytes; entries past it stay direct
+    pub stored_budget_bytes: usize,
+}
+
+/// One chunk of work: a quad range of one block, bound to the kernel
+/// variant that will execute it.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ChunkEntry {
+    /// own index into [`ChunkSchedule::entries`] (the stable cache key)
+    pub entry: usize,
+    /// block index into the plan
+    pub block: usize,
+    /// quad range `[start, end)` within the block's quads
+    pub start: usize,
+    pub end: usize,
+    pub class: ClassKey,
+    /// the tuner rung frozen for this iteration (what observations are
+    /// recorded against — distinct from `variant.batch` on tail chunks)
+    pub rung: usize,
+    /// resolved kernel variant (tail chunks downshift to a snug one)
+    pub variant: Variant,
+    /// stored mode: whether this entry's values fit the cache budget
+    pub cacheable: bool,
+}
+
+impl ChunkEntry {
+    /// Real (non-padding) quadruples in this chunk.
+    pub fn len(&self) -> usize {
+        self.end - self.start
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.start == self.end
+    }
+
+    /// Bytes this entry's contracted values occupy when cached.
+    pub fn value_bytes(&self) -> usize {
+        self.len() * self.variant.ncomp * std::mem::size_of::<f64>()
+    }
+}
+
+/// The precomputed execution schedule of one Fock build.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ChunkSchedule {
+    pub entries: Vec<ChunkEntry>,
+    /// merge units partitioning `entries` (the fixed summation tree)
+    pub units: Vec<MergeUnit>,
+}
+
+/// Select the kernel variant for a class at the frozen tuner state;
+/// `remaining` lets tail chunks downshift to the smallest variant that
+/// still holds them in one execution (§Perf L3 tail fitting) instead of
+/// padding the tuned batch.
+fn resolve_variant(
+    manifest: &Manifest,
+    class: ClassKey,
+    want_batch: usize,
+    remaining: usize,
+    greedy_path: bool,
+) -> anyhow::Result<Variant> {
+    if !greedy_path {
+        // Graph-Compiler ablation: random-path artifact (fixed batch)
+        return manifest
+            .random_variant(class)
+            .cloned()
+            .ok_or_else(|| anyhow::anyhow!("no random-path artifact for class {class:?}"));
+    }
+    let ladder = manifest.ladder(class);
+    let batch = if remaining < want_batch {
+        ladder
+            .iter()
+            .map(|v| v.batch)
+            .find(|&b| b >= remaining)
+            .unwrap_or(want_batch)
+            .min(want_batch)
+    } else {
+        want_batch
+    };
+    ladder
+        .iter()
+        .find(|v| v.batch == batch)
+        .or_else(|| ladder.last())
+        .map(|v| (*v).clone())
+        .ok_or_else(|| anyhow::anyhow!("no kernel variant for class {class:?}"))
+}
+
+impl ChunkSchedule {
+    /// Build the schedule for every block of the plan.  `batches` is the
+    /// tuner's frozen per-class rung snapshot; `nbf` sizes the merge-unit
+    /// count (a pure function of the system — see `fock::accumulate`).
+    pub fn build(
+        plan: &BlockPlan,
+        manifest: &Manifest,
+        batches: &BTreeMap<ClassKey, usize>,
+        policy: &SchedulePolicy,
+        nbf: usize,
+    ) -> anyhow::Result<ChunkSchedule> {
+        let all: Vec<usize> = (0..plan.blocks.len()).collect();
+        Self::build_for_blocks(plan, manifest, batches, policy, &all, nbf)
+    }
+
+    /// Build over a subset of blocks, in the given order (weak-scaling
+    /// shards and the full build share this one code path).
+    pub fn build_for_blocks(
+        plan: &BlockPlan,
+        manifest: &Manifest,
+        batches: &BTreeMap<ClassKey, usize>,
+        policy: &SchedulePolicy,
+        blocks: &[usize],
+        nbf: usize,
+    ) -> anyhow::Result<ChunkSchedule> {
+        let mut entries = Vec::new();
+        let mut cache_bytes = 0usize;
+        // the budget closes at the FIRST entry that does not fit: a
+        // contiguous cached prefix, not a best-fit packing, so the
+        // cached/direct split is trivially explainable and stable
+        let mut budget_open = policy.stored;
+        for &bi in blocks {
+            let block = &plan.blocks[bi];
+            let want = batches.get(&block.class).copied().unwrap_or(policy.fixed_batch);
+            let mut offset = 0;
+            while offset < block.quads.len() {
+                let remaining = block.quads.len() - offset;
+                let variant =
+                    resolve_variant(manifest, block.class, want, remaining, policy.greedy_path)?;
+                let n = remaining.min(variant.batch);
+                let mut entry = ChunkEntry {
+                    entry: entries.len(),
+                    block: bi,
+                    start: offset,
+                    end: offset + n,
+                    class: block.class,
+                    rung: want,
+                    variant,
+                    cacheable: false,
+                };
+                if budget_open {
+                    if cache_bytes + entry.value_bytes() <= policy.stored_budget_bytes {
+                        cache_bytes += entry.value_bytes();
+                        entry.cacheable = true;
+                    } else {
+                        budget_open = false;
+                    }
+                }
+                entries.push(entry);
+                offset += n;
+            }
+        }
+
+        let units = unit_ranges(entries.len(), merge_unit_count(nbf))
+            .into_iter()
+            .enumerate()
+            .map(|(u, r)| {
+                let slice = &entries[r.clone()];
+                MergeUnit {
+                    unit: u,
+                    entry_start: r.start,
+                    entry_end: r.end,
+                    block_start: slice.first().map(|e| e.block).unwrap_or(0),
+                    block_end: slice.last().map(|e| e.block + 1).unwrap_or(0),
+                    quads: slice.iter().map(|e| e.len() as u64).sum(),
+                    flops: slice.iter().map(|e| e.len() as f64 * e.variant.flops_per_quad).sum(),
+                    bytes: slice.iter().map(|e| e.len() as f64 * e.variant.bytes_per_quad).sum(),
+                }
+            })
+            .collect();
+        Ok(ChunkSchedule { entries, units })
+    }
+
+    /// Total real quadruples across all entries.
+    pub fn total_quads(&self) -> u64 {
+        self.units.iter().map(|u| u.quads).sum()
+    }
+
+    /// Number of entries marked cacheable under the stored budget.
+    pub fn cacheable_entries(&self) -> usize {
+        self.entries.iter().filter(|e| e.cacheable).count()
+    }
+
+    /// Human-readable summary: totals plus one wire line per merge unit
+    /// (`report schedule` prints this; the lines are exactly what a
+    /// cross-process dispatcher would ship).
+    pub fn summary(&self, title: &str) -> String {
+        let mut out = format!(
+            "Chunk schedule — {title}\n\
+             {} entries in {} merge units, {} quadruples, {:.3e} flops, {:.3e} bytes\n",
+            self.entries.len(),
+            self.units.len(),
+            self.total_quads(),
+            self.units.iter().map(|u| u.flops).sum::<f64>(),
+            self.units.iter().map(|u| u.bytes).sum::<f64>(),
+        );
+        for unit in &self.units {
+            out.push_str("  ");
+            out.push_str(&unit.wire_line());
+            out.push('\n');
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::basis::build_basis;
+    use crate::constructor::PairList;
+    use crate::molecule::library;
+    use crate::runtime::{EriBackend, NativeBackend};
+
+    fn water_inputs() -> (BlockPlan, Manifest, usize) {
+        let mol = library::by_name("water").unwrap();
+        let basis = build_basis(&mol, "sto-3g").unwrap();
+        let pairs = PairList::build(&basis, 1e-10);
+        let plan = BlockPlan::build(&pairs, 1e-10, 32, true);
+        let manifest = NativeBackend::with_kpair(basis.max_kpair()).manifest().clone();
+        (plan, manifest, basis.nbf)
+    }
+
+    fn policy() -> SchedulePolicy {
+        SchedulePolicy {
+            greedy_path: true,
+            fixed_batch: 512,
+            stored: false,
+            stored_budget_bytes: 0,
+        }
+    }
+
+    #[test]
+    fn entries_partition_every_block_exactly() {
+        let (plan, manifest, nbf) = water_inputs();
+        let batches = BTreeMap::new();
+        let s = ChunkSchedule::build(&plan, &manifest, &batches, &policy(), nbf).unwrap();
+        // per block: entries are contiguous, ordered, and cover the quads
+        let mut covered = vec![0usize; plan.blocks.len()];
+        let mut cursor = (usize::MAX, 0usize);
+        for e in &s.entries {
+            assert!(!e.is_empty());
+            if e.block != cursor.0 {
+                assert_eq!(e.start, 0, "new block starts at quad 0");
+            } else {
+                assert_eq!(e.start, cursor.1, "chunks are contiguous");
+            }
+            cursor = (e.block, e.end);
+            covered[e.block] += e.len();
+            assert!(e.variant.batch >= e.len(), "variant holds the chunk");
+        }
+        for (bi, block) in plan.blocks.iter().enumerate() {
+            assert_eq!(covered[bi], block.quads.len(), "block {bi}");
+        }
+        let total: u64 = plan.blocks.iter().map(|b| b.quads.len() as u64).sum();
+        assert_eq!(s.total_quads(), total);
+        // units partition the entries exactly
+        let mut next = 0;
+        for u in &s.units {
+            assert_eq!(u.entry_start, next);
+            assert!(u.entry_end > u.entry_start);
+            next = u.entry_end;
+        }
+        assert_eq!(next, s.entries.len());
+    }
+
+    #[test]
+    fn schedule_build_is_pure() {
+        let (plan, manifest, nbf) = water_inputs();
+        let mut batches = BTreeMap::new();
+        batches.insert((0, 0, 0, 0), 128);
+        let a = ChunkSchedule::build(&plan, &manifest, &batches, &policy(), nbf).unwrap();
+        let b = ChunkSchedule::build(&plan, &manifest, &batches, &policy(), nbf).unwrap();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn tail_chunks_downshift_to_the_snug_variant_at_build_time() {
+        let (plan, manifest, nbf) = water_inputs();
+        // empty snapshot -> every class wants the 512 rung
+        let s = ChunkSchedule::build(&plan, &manifest, &BTreeMap::new(), &policy(), nbf).unwrap();
+        let ladder = [32usize, 128, 512]; // NATIVE_LADDER
+        let mut downshifted = 0;
+        for e in &s.entries {
+            let block_len = plan.blocks[e.block].quads.len();
+            if e.end < block_len {
+                // non-tail chunks run the tuned rung untouched
+                assert_eq!(e.variant.batch, e.rung, "entry {}", e.entry);
+            } else {
+                // tail: smallest rung that holds the remainder, never
+                // above the tuned rung
+                let want = ladder
+                    .iter()
+                    .copied()
+                    .find(|&b| b >= e.len())
+                    .unwrap_or(e.rung)
+                    .min(e.rung);
+                assert_eq!(e.variant.batch, want, "entry {}", e.entry);
+                if e.variant.batch < e.rung {
+                    downshifted += 1;
+                }
+            }
+        }
+        assert!(downshifted > 0, "water's small blocks must exercise the downshift");
+    }
+
+    #[test]
+    fn stored_budget_marks_a_prefix_and_stops_at_the_first_overflow() {
+        let (plan, manifest, nbf) = water_inputs();
+        let unlimited = SchedulePolicy { stored: true, stored_budget_bytes: usize::MAX, ..policy() };
+        let s = ChunkSchedule::build(&plan, &manifest, &BTreeMap::new(), &unlimited, nbf).unwrap();
+        assert_eq!(s.cacheable_entries(), s.entries.len());
+
+        let total_bytes: usize = s.entries.iter().map(|e| e.value_bytes()).sum();
+        let tiny = SchedulePolicy { stored: true, stored_budget_bytes: total_bytes / 3, ..policy() };
+        let t = ChunkSchedule::build(&plan, &manifest, &BTreeMap::new(), &tiny, nbf).unwrap();
+        let cached = t.cacheable_entries();
+        assert!(cached > 0 && cached < t.entries.len(), "partial cache: {cached}");
+        // contiguous prefix: nothing after the first uncacheable entry
+        let first_direct = t.entries.iter().position(|e| !e.cacheable).unwrap();
+        assert!(t.entries[first_direct..].iter().all(|e| !e.cacheable));
+        let spent: usize =
+            t.entries.iter().filter(|e| e.cacheable).map(|e| e.value_bytes()).sum();
+        assert!(spent <= tiny.stored_budget_bytes);
+
+        let zero = SchedulePolicy { stored: true, stored_budget_bytes: 0, ..policy() };
+        let z = ChunkSchedule::build(&plan, &manifest, &BTreeMap::new(), &zero, nbf).unwrap();
+        assert_eq!(z.cacheable_entries(), 0);
+
+        // direct mode never marks anything regardless of budget
+        let direct = SchedulePolicy { stored: false, stored_budget_bytes: usize::MAX, ..policy() };
+        let d = ChunkSchedule::build(&plan, &manifest, &BTreeMap::new(), &direct, nbf).unwrap();
+        assert_eq!(d.cacheable_entries(), 0);
+    }
+
+    #[test]
+    fn build_for_blocks_covers_exactly_the_requested_subset() {
+        let (plan, manifest, nbf) = water_inputs();
+        let subset: Vec<usize> = (0..plan.blocks.len()).filter(|b| b % 2 == 1).collect();
+        let s = ChunkSchedule::build_for_blocks(
+            &plan,
+            &manifest,
+            &BTreeMap::new(),
+            &policy(),
+            &subset,
+            nbf,
+        )
+        .unwrap();
+        let seen: std::collections::BTreeSet<usize> = s.entries.iter().map(|e| e.block).collect();
+        assert_eq!(seen, subset.iter().copied().collect());
+        let want: u64 = subset.iter().map(|&b| plan.blocks[b].quads.len() as u64).sum();
+        assert_eq!(s.total_quads(), want);
+    }
+
+    #[test]
+    fn summary_lists_every_unit_as_a_wire_line() {
+        let (plan, manifest, nbf) = water_inputs();
+        let s = ChunkSchedule::build(&plan, &manifest, &BTreeMap::new(), &policy(), nbf).unwrap();
+        let text = s.summary("water / sto-3g");
+        assert!(text.contains("water / sto-3g"));
+        for unit in &s.units {
+            assert!(text.contains(&unit.wire_line()), "unit {} missing", unit.unit);
+            // round-trip through the wire format reproduces the unit
+            assert_eq!(MergeUnit::parse_wire_line(&unit.wire_line()).unwrap(), *unit);
+        }
+    }
+}

@@ -1,0 +1,109 @@
+//! Reusable per-worker buffers of the execution pipeline.
+//!
+//! A Fock worker owns one [`PipelineBuffers`]: a small pool of
+//! [`BufferSet`]s (gather scratch + ERI output buffer).  The lockstep
+//! executor cycles one set; the staged executor rotates two, so chunk
+//! *k+1* can be gathered while chunk *k*'s set is out executing on the
+//! compute stage — the double buffer that makes the overlap possible
+//! without any per-chunk allocation.
+
+use crate::constructor::PairList;
+use crate::runtime::EriOutput;
+
+/// Padded pair-data gather buffers for one chunk (the DESIGN.md layout:
+/// bra_prim [b,kb,5] | bra_geom [b,6] | ket_prim [b,kk,5] | ket_geom
+/// [b,6]).  Reused across chunks so a Fock build performs O(workers)
+/// allocations instead of O(chunks).
+#[derive(Default)]
+pub struct GatherScratch {
+    pub bp: Vec<f64>,
+    pub bg: Vec<f64>,
+    pub kp: Vec<f64>,
+    pub kg: Vec<f64>,
+}
+
+impl GatherScratch {
+    /// Gather the padded input buffers for a chunk.  `kb`/`kk` are the
+    /// variant's pair-row widths; they may exceed the pair data's
+    /// (`PairList::kpair`) — the excess rows stay padding.
+    pub fn gather(
+        &mut self,
+        pairs: &PairList,
+        quads: &[(u32, u32)],
+        batch: usize,
+        kb: usize,
+        kk: usize,
+    ) {
+        let pk = pairs.kpair;
+        self.bp.clear();
+        self.bp.resize(batch * kb * 5, 0.0);
+        self.bg.clear();
+        self.bg.resize(batch * 6, 0.0);
+        self.kp.clear();
+        self.kp.resize(batch * kk * 5, 0.0);
+        self.kg.clear();
+        self.kg.resize(batch * 6, 0.0);
+        // every row slot starts as padding (p = 1 keeps it finite, Kab = 0
+        // makes it an exact zero); real quads overwrite their pk-row prefix
+        for r in 0..batch {
+            for k in 0..kb {
+                self.bp[(r * kb + k) * 5] = 1.0;
+            }
+            for k in 0..kk {
+                self.kp[(r * kk + k) * 5] = 1.0;
+            }
+        }
+        for (r, &(pidx, qidx)) in quads.iter().enumerate() {
+            let bra = &pairs.pairs[pidx as usize];
+            let ket = &pairs.pairs[qidx as usize];
+            self.bp[r * kb * 5..r * kb * 5 + pk * 5].copy_from_slice(&bra.prim);
+            self.kp[r * kk * 5..r * kk * 5 + pk * 5].copy_from_slice(&ket.prim);
+            self.bg[r * 6..(r + 1) * 6].copy_from_slice(&bra.geom);
+            self.kg[r * 6..(r + 1) * 6].copy_from_slice(&ket.geom);
+        }
+    }
+}
+
+/// One stored-mode cache slot: the contracted ERIs of one schedule entry
+/// (ERIs are density-independent, so later SCF iterations digest these
+/// instead of re-executing the entry).
+pub struct CachedChunk {
+    /// contracted values, row-major [entry quads, ncomp]
+    pub values: Vec<f64>,
+    pub ncomp: usize,
+}
+
+impl CachedChunk {
+    /// Heap bytes this cache slot holds (the stored-budget accounting).
+    pub fn bytes(&self) -> usize {
+        self.values.len() * std::mem::size_of::<f64>()
+    }
+}
+
+/// A gather scratch paired with the output buffer its execution fills —
+/// the unit of ownership that travels memory stage → compute stage →
+/// memory stage in the staged pipeline.
+#[derive(Default)]
+pub struct BufferSet {
+    pub scratch: GatherScratch,
+    pub out: EriOutput,
+}
+
+/// Per-worker buffer pool, kept across merge units (one `Default` per
+/// worker via `run_units_ordered`'s scratch state).
+#[derive(Default)]
+pub struct PipelineBuffers {
+    sets: Vec<BufferSet>,
+}
+
+impl PipelineBuffers {
+    /// Hand out a buffer set (allocating lazily on first use).
+    pub fn take_set(&mut self) -> BufferSet {
+        self.sets.pop().unwrap_or_default()
+    }
+
+    /// Return a set after the executor is done with it.
+    pub fn put_set(&mut self, set: BufferSet) {
+        self.sets.push(set);
+    }
+}

@@ -1,11 +1,13 @@
 //! Textual reports for the paper's non-timing tables and figures
-//! (Table 2 roster, Table 4 counts, Fig. 6 OP/B, compiler statistics).
-//! Wall-clock figures (9/12/13/14) live in `rust/benches/`.
+//! (Table 2 roster, Table 4 counts, Fig. 6 OP/B, compiler statistics,
+//! chunk-schedule summaries).  Wall-clock figures (9/12/13/14) live in
+//! `rust/benches/`.
 
 use std::path::Path;
 
 use crate::basis::build_basis;
 use crate::constructor::{BlockPlan, PairList, SchwarzMode};
+use crate::engines::{MatryoshkaConfig, MatryoshkaEngine};
 use crate::molecule::library;
 use crate::runtime::{EriBackend, Manifest, NativeBackend};
 
@@ -122,6 +124,22 @@ pub fn compiler_stats(artifact_dir: &Path) -> anyhow::Result<String> {
     Ok(out)
 }
 
+/// Chunk-schedule summary for one system: the iteration's work as a
+/// first-class value — merge units with entry/block ranges and cost
+/// estimates, printed as the exact wire lines a cross-process dispatcher
+/// would ship.  Built by a default-config engine's own
+/// [`MatryoshkaEngine::build_schedule`], so this is literally the
+/// schedule the first SCF iteration of `scf --molecule NAME` executes
+/// (native backend, Estimate Schwarz, initial tuner snapshot).
+pub fn schedule_summary(molecule: &str, basis_name: &str, threshold: f64) -> anyhow::Result<String> {
+    let mol = library::by_name(molecule)?;
+    let basis = build_basis(&mol, basis_name)?;
+    let config = MatryoshkaConfig { threshold, schwarz: SchwarzMode::Estimate, ..Default::default() };
+    let engine = MatryoshkaEngine::new(basis, Path::new("unused"), config)?;
+    let schedule = engine.build_schedule()?;
+    Ok(schedule.summary(&format!("{molecule} / {basis_name} (first-iteration tuner snapshot)")))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -140,5 +158,14 @@ mod tests {
         assert!(t.contains("chignolin"));
         // quadruple counts must dwarf pair counts
         assert!(t.lines().count() >= 8);
+    }
+
+    #[test]
+    fn schedule_summary_prints_units_for_water() {
+        let t = schedule_summary("water", "sto-3g", 1e-10).unwrap();
+        assert!(t.contains("water / sto-3g"), "{t}");
+        assert!(t.contains("merge units"), "{t}");
+        assert!(t.contains("unit 0 entries"), "{t}");
+        assert!(schedule_summary("unobtainium", "sto-3g", 1e-10).is_err());
     }
 }

@@ -31,8 +31,12 @@ pub use pjrt::PjrtBackend;
 
 use super::manifest::{Manifest, Variant};
 
-/// Result of one ERI chunk execution.
-pub struct EriExecution {
+/// Result of one ERI chunk execution.  Also usable as a caller-owned
+/// reuse buffer ([`EriBackend::execute_eri_into`]): the staged pipeline
+/// keeps two per worker in rotation, so the hot path performs O(workers)
+/// value-buffer allocations instead of O(chunks).
+#[derive(Clone, Debug, Default)]
+pub struct EriOutput {
     /// contracted ERIs, row-major [batch, ncomp]
     pub values: Vec<f64>,
     pub ncomp: usize,
@@ -44,6 +48,10 @@ pub struct EriExecution {
     /// execute + marshal, but NEVER one-time kernel compilation
     pub steady_seconds: f64,
 }
+
+/// The by-value name [`EriBackend::execute_eri`] returns — one struct,
+/// two roles, zero field-copy shims between them.
+pub type EriExecution = EriOutput;
 
 /// Backend execution statistics (metrics / §Perf reporting).
 #[derive(Clone, Copy, Debug, Default)]
@@ -89,6 +97,24 @@ pub trait EriBackend: Send + Sync {
         ket_geom: &[f64],
     ) -> anyhow::Result<EriExecution>;
 
+    /// Execute one padded chunk into a caller-owned output buffer, so a
+    /// pipeline can reuse value storage across chunks.  The default
+    /// implementation forwards to [`EriBackend::execute_eri`] and moves
+    /// the result into `out` (correct for every backend); backends that
+    /// can evaluate in place override it to skip the allocation.
+    fn execute_eri_into(
+        &self,
+        variant: &Variant,
+        bra_prim: &[f64],
+        bra_geom: &[f64],
+        ket_prim: &[f64],
+        ket_geom: &[f64],
+        out: &mut EriOutput,
+    ) -> anyhow::Result<()> {
+        *out = self.execute_eri(variant, bra_prim, bra_geom, ket_prim, ket_geom)?;
+        Ok(())
+    }
+
     /// Snapshot of the accumulated execution statistics.
     fn stats(&self) -> RuntimeStats;
 
@@ -130,19 +156,27 @@ impl BackendKind {
 /// for `kpair` primitive products per pair row (the target basis's
 /// `BasisSet::max_kpair()` — 9 for STO-3G, 36 for 6-31G*).  The AOT
 /// artifacts are compiled at a fixed width, so `kpair` does not apply to
-/// the PJRT path.
+/// the PJRT path.  `workers` is the Fock worker count the backend will be
+/// driven from: the PJRT backend sizes its client pool to it so the
+/// artifact path does not serialize concurrent executions behind one
+/// mutex (the native backend is lock-free on the execute path and
+/// ignores it).
 pub fn create_backend(
     kind: BackendKind,
     artifact_dir: &Path,
     kpair: usize,
+    workers: usize,
 ) -> anyhow::Result<Box<dyn EriBackend>> {
     match kind {
-        BackendKind::Native => Ok(Box::new(NativeBackend::with_kpair(kpair))),
+        BackendKind::Native => {
+            let _ = workers;
+            Ok(Box::new(NativeBackend::with_kpair(kpair)))
+        }
         #[cfg(feature = "pjrt")]
-        BackendKind::Pjrt => Ok(Box::new(PjrtBackend::new(artifact_dir)?)),
+        BackendKind::Pjrt => Ok(Box::new(PjrtBackend::with_pool(artifact_dir, workers)?)),
         #[cfg(not(feature = "pjrt"))]
         BackendKind::Pjrt => {
-            let _ = artifact_dir;
+            let _ = (artifact_dir, workers);
             anyhow::bail!(
                 "backend `pjrt` requires building with `--features pjrt` \
                  (and a real xla-rs crate in place of rust/vendor/xla)"
@@ -165,7 +199,7 @@ mod tests {
 
     #[test]
     fn native_backend_is_always_constructible() {
-        let b = create_backend(BackendKind::Native, Path::new("/nonexistent"), 9).unwrap();
+        let b = create_backend(BackendKind::Native, Path::new("/nonexistent"), 9, 1).unwrap();
         assert_eq!(b.name(), "native");
         assert!(!b.manifest().variants.is_empty());
     }
@@ -173,8 +207,34 @@ mod tests {
     #[cfg(not(feature = "pjrt"))]
     #[test]
     fn pjrt_backend_errors_cleanly_without_the_feature() {
-        let err = create_backend(BackendKind::Pjrt, Path::new("/nonexistent"), 9).unwrap_err();
+        let err = create_backend(BackendKind::Pjrt, Path::new("/nonexistent"), 9, 4).unwrap_err();
         assert!(err.to_string().contains("pjrt"), "{err}");
+    }
+
+    #[test]
+    fn execute_eri_into_matches_execute_eri() {
+        let b = create_backend(BackendKind::Native, Path::new("/nonexistent"), 9, 1).unwrap();
+        let variant = b.manifest().ladder((0, 0, 0, 0))[0].clone();
+        let batch = variant.batch;
+        let (kb, kk) = (variant.kpair_bra, variant.kpair_ket);
+        // all-padding chunk: p = 1 keeps the rows finite, Kab = 0 zeroes them
+        let mut bp = vec![0.0; batch * kb * 5];
+        let mut kp = vec![0.0; batch * kk * 5];
+        for r in 0..batch {
+            for k in 0..kb {
+                bp[(r * kb + k) * 5] = 1.0;
+            }
+            for k in 0..kk {
+                kp[(r * kk + k) * 5] = 1.0;
+            }
+        }
+        let bg = vec![0.0; batch * 6];
+        let kg = vec![0.0; batch * 6];
+        let exec = b.execute_eri(&variant, &bp, &bg, &kp, &kg).unwrap();
+        let mut out = EriOutput { values: vec![9.0; 3], ..Default::default() };
+        b.execute_eri_into(&variant, &bp, &bg, &kp, &kg, &mut out).unwrap();
+        assert_eq!(out.values, exec.values);
+        assert_eq!(out.ncomp, exec.ncomp);
     }
 
     #[test]

@@ -33,7 +33,7 @@ use crate::integrals::{
 use crate::runtime::{class_letters, ClassKey, Manifest, Variant};
 use crate::util::Stopwatch;
 
-use super::{EriBackend, EriExecution, RuntimeStats};
+use super::{EriBackend, EriExecution, EriOutput, RuntimeStats};
 
 /// Highest angular momentum per shell the synthetic variant catalog
 /// covers: s, p and (with the 6-31G* basis) Cartesian d shells.  The
@@ -125,6 +125,23 @@ impl EriBackend for NativeBackend {
         ket_prim: &[f64],
         ket_geom: &[f64],
     ) -> anyhow::Result<EriExecution> {
+        let mut out = EriOutput::default();
+        self.execute_eri_into(variant, bra_prim, bra_geom, ket_prim, ket_geom, &mut out)?;
+        Ok(out)
+    }
+
+    /// In-place evaluation into the caller's reusable buffer: the staged
+    /// pipeline rotates two [`EriOutput`]s per worker, so the native hot
+    /// path performs no per-chunk value allocation at steady state.
+    fn execute_eri_into(
+        &self,
+        variant: &Variant,
+        bra_prim: &[f64],
+        bra_geom: &[f64],
+        ket_prim: &[f64],
+        ket_geom: &[f64],
+        out: &mut EriOutput,
+    ) -> anyhow::Result<()> {
         let (b, kb, kk) = (variant.batch, variant.kpair_bra, variant.kpair_ket);
         if bra_prim.len() != b * kb * 5
             || ket_prim.len() != b * kk * 5
@@ -137,10 +154,18 @@ impl EriBackend for NativeBackend {
             );
         }
         let sw = Stopwatch::start();
-        let values = match self.strategy {
-            EriEvalStrategy::Tables => {
-                eval_chunk_tables(variant.class, b, kb, kk, bra_prim, bra_geom, ket_prim, ket_geom)
-            }
+        match self.strategy {
+            EriEvalStrategy::Tables => eval_chunk_tables(
+                variant.class,
+                b,
+                kb,
+                kk,
+                bra_prim,
+                bra_geom,
+                ket_prim,
+                ket_geom,
+                &mut out.values,
+            ),
             EriEvalStrategy::Recursion => eval_chunk_recursive(
                 variant.class,
                 b,
@@ -150,6 +175,7 @@ impl EriBackend for NativeBackend {
                 bra_geom,
                 ket_prim,
                 ket_geom,
+                &mut out.values,
             ),
         };
         let execute_seconds = sw.elapsed_s();
@@ -160,13 +186,11 @@ impl EriBackend for NativeBackend {
         stats.execute_seconds += execute_seconds;
         drop(stats);
 
-        Ok(EriExecution {
-            values,
-            ncomp: variant.ncomp,
-            execute_seconds,
-            marshal_seconds: 0.0,
-            steady_seconds: execute_seconds,
-        })
+        out.ncomp = variant.ncomp;
+        out.execute_seconds = execute_seconds;
+        out.marshal_seconds = 0.0;
+        out.steady_seconds = execute_seconds;
+        Ok(())
     }
 
     fn stats(&self) -> RuntimeStats {
@@ -196,8 +220,8 @@ fn comp_scale(class: ClassKey) -> Vec<f64> {
     out
 }
 
-/// Contracted ERIs for one padded chunk, row-major `[batch, ncomp]` —
-/// memoized-table strategy.
+/// Contracted ERIs for one padded chunk, row-major `[batch, ncomp]` into
+/// the caller's reusable `out` buffer — memoized-table strategy.
 ///
 /// Per quadruple row: recover the Gaussian-product separations from the
 /// pair data, fill the per-axis Hermite E tables (ket side once per row,
@@ -215,7 +239,8 @@ fn eval_chunk_tables(
     bg: &[f64],
     kp: &[f64],
     kg: &[f64],
-) -> Vec<f64> {
+    out: &mut Vec<f64>,
+) {
     let comps_a = cart_components(class.0);
     let comps_b = cart_components(class.1);
     let comps_c = cart_components(class.2);
@@ -226,7 +251,8 @@ fn eval_chunk_tables(
     let (la_m, lb_m) = (class.0 as usize, class.1 as usize);
     let (lc_m, ld_m) = (class.2 as usize, class.3 as usize);
     let mut fvals = vec![0.0; ltot + 1];
-    let mut out = vec![0.0; batch * ncomp];
+    out.clear();
+    out.resize(batch * ncomp, 0.0);
 
     // memoized Hermite tables, allocated once and refilled per primitive
     // product: 3 bra axes, kk × 3 ket axes (ket tables are independent of
@@ -348,7 +374,6 @@ fn eval_chunk_tables(
             }
         }
     }
-    out
 }
 
 /// Contracted ERIs for one padded chunk — plain-recursion baseline (the
@@ -364,7 +389,8 @@ fn eval_chunk_recursive(
     bg: &[f64],
     kp: &[f64],
     kg: &[f64],
-) -> Vec<f64> {
+    out: &mut Vec<f64>,
+) {
     let comps_a = cart_components(class.0);
     let comps_b = cart_components(class.1);
     let comps_c = cart_components(class.2);
@@ -373,7 +399,8 @@ fn eval_chunk_recursive(
     let scale = comp_scale(class);
     let ltot = (class.0 + class.1 + class.2 + class.3) as usize;
     let mut fvals = vec![0.0; ltot + 1];
-    let mut out = vec![0.0; batch * ncomp];
+    out.clear();
+    out.resize(batch * ncomp, 0.0);
 
     for r in 0..batch {
         let bgr = &bg[r * 6..(r + 1) * 6];
@@ -456,7 +483,6 @@ fn eval_chunk_recursive(
             }
         }
     }
-    out
 }
 
 /// Inner ket-side Hermite contraction Σ_{τνφ} (−1)^{τ+ν+φ} E·E·E·R

@@ -2,13 +2,18 @@
 //! [`Runtime`] PJRT client to the [`EriBackend`] trait.
 //!
 //! The PJRT client caches lazily-compiled executables and therefore needs
-//! interior mutability; a single mutex serializes executions.  That is
-//! deliberate for now — one PJRT CPU client is itself internally threaded,
-//! and the parallel Fock pipeline still overlaps every worker's gather and
-//! digest phases with the serialized execute phase.  A per-worker client
-//! pool is the follow-up recorded in ROADMAP.md.
+//! interior mutability.  Early versions hid one client behind one mutex,
+//! which serialized every execution; the backend now holds a small
+//! **client pool** sized to the engine's Fock worker count
+//! ([`PjrtBackend::with_pool`]), so concurrent workers execute on
+//! distinct clients.  Executions prefer an uncontended client
+//! (`try_lock` scan from a round-robin cursor) and only block when every
+//! client is busy.  Each client compiles its own executables, so
+//! `warm_up` pre-compiles on every pool member to keep compilation out
+//! of the steady-state measurements.
 
 use std::path::Path;
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 
 use crate::runtime::client::Runtime;
@@ -17,16 +22,46 @@ use crate::runtime::{Manifest, Variant};
 use super::{EriBackend, EriExecution, RuntimeStats};
 
 pub struct PjrtBackend {
-    runtime: Mutex<Runtime>,
+    clients: Vec<Mutex<Runtime>>,
+    /// round-robin cursor for the uncontended-client scan
+    cursor: AtomicUsize,
     /// manifest copy so `manifest()` needs no lock
     manifest: Manifest,
 }
 
 impl PjrtBackend {
+    /// Single-client backend (sequential drivers, tests).
     pub fn new(artifact_dir: &Path) -> anyhow::Result<PjrtBackend> {
-        let runtime = Runtime::new(artifact_dir)?;
-        let manifest = runtime.manifest.clone();
-        Ok(PjrtBackend { runtime: Mutex::new(runtime), manifest })
+        Self::with_pool(artifact_dir, 1)
+    }
+
+    /// Backend with `clients` PJRT clients (the engine passes its Fock
+    /// worker count, so the artifact path parallelizes like the native
+    /// one instead of serializing behind a single client mutex).
+    /// Clients are constructed concurrently — like `warm_up`, the
+    /// one-time cost must not scale linearly with the worker count.
+    pub fn with_pool(artifact_dir: &Path, clients: usize) -> anyhow::Result<PjrtBackend> {
+        let clients = clients.max(1);
+        let runtimes: Vec<anyhow::Result<Runtime>> = std::thread::scope(|s| {
+            let handles: Vec<_> = (0..clients)
+                .map(|_| s.spawn(|| Runtime::new(artifact_dir)))
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("PJRT client construction thread panicked"))
+                .collect()
+        });
+        let mut pool = Vec::with_capacity(clients);
+        for runtime in runtimes {
+            pool.push(Mutex::new(runtime?));
+        }
+        let manifest = pool[0].lock().unwrap().manifest.clone();
+        Ok(PjrtBackend { clients: pool, cursor: AtomicUsize::new(0), manifest })
+    }
+
+    /// Number of pooled PJRT clients.
+    pub fn pool_size(&self) -> usize {
+        self.clients.len()
     }
 }
 
@@ -47,15 +82,46 @@ impl EriBackend for PjrtBackend {
         ket_prim: &[f64],
         ket_geom: &[f64],
     ) -> anyhow::Result<EriExecution> {
-        let mut rt = self.runtime.lock().unwrap();
+        let start = self.cursor.fetch_add(1, Ordering::Relaxed);
+        // prefer an idle client; a busy pool degrades to blocking on the
+        // round-robin slot (fair enough under worker-count-sized pools)
+        for i in 0..self.clients.len() {
+            let slot = (start + i) % self.clients.len();
+            if let Ok(mut rt) = self.clients[slot].try_lock() {
+                return rt.execute_eri(variant, bra_prim, bra_geom, ket_prim, ket_geom);
+            }
+        }
+        let mut rt = self.clients[start % self.clients.len()].lock().unwrap();
         rt.execute_eri(variant, bra_prim, bra_geom, ket_prim, ket_geom)
     }
 
     fn stats(&self) -> RuntimeStats {
-        self.runtime.lock().unwrap().stats()
+        let mut total = RuntimeStats::default();
+        for client in &self.clients {
+            total.merge(&client.lock().unwrap().stats());
+        }
+        total
     }
 
     fn warm_up(&self) -> anyhow::Result<()> {
-        self.runtime.lock().unwrap().warm_up()
+        // every client compiles its own executables, so warm them
+        // concurrently — otherwise the one-time compilation cost scales
+        // linearly with the pool (= Fock worker) count
+        let errors: Vec<String> = std::thread::scope(|s| {
+            let handles: Vec<_> = self
+                .clients
+                .iter()
+                .map(|client| s.spawn(move || client.lock().unwrap().warm_up()))
+                .collect();
+            handles
+                .into_iter()
+                .filter_map(|h| h.join().expect("warm-up thread panicked").err())
+                .map(|e| e.to_string())
+                .collect()
+        });
+        if let Some(first) = errors.into_iter().next() {
+            anyhow::bail!("PJRT warm-up failed: {first}");
+        }
+        Ok(())
     }
 }

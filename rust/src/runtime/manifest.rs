@@ -23,7 +23,7 @@ pub fn class_letters(class: ClassKey) -> String {
 }
 
 /// One AOT-compiled kernel variant.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct Variant {
     pub name: String,
     pub class: ClassKey,

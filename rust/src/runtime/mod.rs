@@ -12,8 +12,8 @@ pub(crate) mod client;
 mod manifest;
 
 pub use backend::{
-    create_backend, BackendKind, EriBackend, EriEvalStrategy, EriExecution, NativeBackend,
-    RuntimeStats,
+    create_backend, BackendKind, EriBackend, EriEvalStrategy, EriExecution, EriOutput,
+    NativeBackend, RuntimeStats,
 };
 #[cfg(feature = "pjrt")]
 pub use backend::PjrtBackend;

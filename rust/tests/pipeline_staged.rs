@@ -1,0 +1,275 @@
+//! Staged-pipeline acceptance tests.
+//!
+//! * A staged build must be **bitwise** identical to a lockstep build
+//!   (the pipeline changes when phases run, never what is digested, in
+//!   which order, into which accumulator).
+//! * A staged N-thread build must be bitwise identical to a staged
+//!   1-thread build (the schedule and merge tree are thread-invariant).
+//! * Schedule construction is pure: same inputs → identical schedule.
+//! * Tail-chunk downshift is a schedule-build-time decision.
+//! * A truncated stored-mode cache budget changes memory use, never the
+//!   SCF result.
+//! * A worker panic resurfaces with its original payload, not as a
+//!   generic "dropped a merge unit" error.
+
+use std::path::Path;
+
+use matryoshka::basis::build_basis;
+use matryoshka::engines::{MatryoshkaConfig, MatryoshkaEngine};
+use matryoshka::linalg::Matrix;
+use matryoshka::molecule::library;
+use matryoshka::pipeline::PipelineMode;
+use matryoshka::runtime::{EriBackend, EriExecution, Manifest, NativeBackend, RuntimeStats, Variant};
+use matryoshka::scf::{run_rhf, FockEngine, ScfOptions};
+
+fn test_density(n: usize) -> Matrix {
+    let mut d = Matrix::zeros(n, n);
+    for i in 0..n {
+        for j in 0..n {
+            let v = 0.3 / (1.0 + (i as f64 - j as f64).abs());
+            *d.at_mut(i, j) = v;
+            *d.at_mut(j, i) = v;
+        }
+    }
+    d
+}
+
+fn engine(molecule: &str, basis_name: &str, config: MatryoshkaConfig) -> MatryoshkaEngine {
+    let mol = library::by_name(molecule).unwrap();
+    let basis = build_basis(&mol, basis_name).unwrap();
+    MatryoshkaEngine::new(basis, Path::new("unused"), config).unwrap()
+}
+
+#[test]
+fn staged_and_lockstep_builds_agree_bitwise_on_631gstar_water() {
+    // 6-31G* lights up the d classes — the memory-heavy digestion path
+    let mol = library::by_name("water").unwrap();
+    let basis = build_basis(&mol, "6-31g*").unwrap();
+    let d = test_density(basis.nbf);
+    let mut g_by_mode = Vec::new();
+    for mode in [PipelineMode::Staged, PipelineMode::Lockstep] {
+        let config = MatryoshkaConfig { pipeline: mode, threads: 4, ..Default::default() };
+        let mut e = engine("water", "6-31g*", config);
+        g_by_mode.push(e.two_electron(&d).unwrap());
+    }
+    assert_eq!(
+        g_by_mode[0].data(),
+        g_by_mode[1].data(),
+        "staged G diverged from lockstep G"
+    );
+}
+
+#[test]
+fn staged_build_is_bitwise_thread_invariant() {
+    let mol = library::by_name("water").unwrap();
+    let basis = build_basis(&mol, "6-31g*").unwrap();
+    let d = test_density(basis.nbf);
+    let build = |threads: usize| {
+        let config = MatryoshkaConfig {
+            pipeline: PipelineMode::Staged,
+            threads,
+            ..Default::default()
+        };
+        engine("water", "6-31g*", config).two_electron(&d).unwrap()
+    };
+    let g1 = build(1);
+    for threads in [2, 5, 8] {
+        let gn = build(threads);
+        assert_eq!(
+            g1.data(),
+            gn.data(),
+            "staged {threads}-thread build diverged from the staged 1-thread build"
+        );
+    }
+}
+
+#[test]
+fn schedule_is_pure_and_tail_downshift_is_decided_at_build_time() {
+    let e = engine("benzene", "sto-3g", MatryoshkaConfig::default());
+    let a = e.build_schedule().unwrap();
+    let b = e.build_schedule().unwrap();
+    assert_eq!(a, b, "same engine state must produce the identical schedule");
+
+    // downshift check: pin the rung at 512 (autotune starts at the
+    // ladder bottom, where no tail can downshift); water's blocks all
+    // hold ≤ ~55 quads, so every entry is a tail that must snap to a
+    // snug variant below the 512 rung — decided at build time
+    let pinned = MatryoshkaConfig { autotune: false, fixed_batch: 512, ..Default::default() };
+    let w = engine("water", "sto-3g", pinned);
+    let s = w.build_schedule().unwrap();
+    let mut tails_downshifted = 0;
+    for entry in &s.entries {
+        assert!(entry.variant.batch >= entry.len(), "variant holds the chunk");
+        assert_eq!(entry.rung, 512, "pinned tuner rung");
+        let block_len = w.plan().blocks[entry.block].quads.len();
+        if entry.end < block_len {
+            assert_eq!(entry.variant.batch, entry.rung, "non-tail chunks run the tuned rung");
+        } else if entry.variant.batch < entry.rung {
+            tails_downshifted += 1;
+        }
+    }
+    assert!(tails_downshifted > 0, "no tail chunk exercised the downshift");
+}
+
+/// Cache footprint (bytes) of a full stored-mode schedule for water —
+/// the baseline the partial-budget tests slice.
+fn water_cache_bytes() -> usize {
+    let config = MatryoshkaConfig {
+        stored: true,
+        stored_budget_bytes: usize::MAX / 2,
+        ..Default::default()
+    };
+    let probe = engine("water", "sto-3g", config);
+    let schedule = probe.build_schedule().unwrap();
+    schedule.entries.iter().map(|e| e.value_bytes()).sum()
+}
+
+#[test]
+fn tiny_stored_budget_still_converges_to_the_same_scf_energy() {
+    let mol = library::by_name("water").unwrap();
+    let basis = build_basis(&mol, "sto-3g").unwrap();
+    let opts = ScfOptions::default();
+
+    let run = |stored: bool, budget: usize| {
+        let config = MatryoshkaConfig {
+            stored,
+            stored_budget_bytes: budget,
+            ..Default::default()
+        };
+        let mut e = engine("water", "sto-3g", config);
+        let res = run_rhf(&mol, &basis, &mut e, &opts).unwrap();
+        assert!(res.converged);
+        (res.energy, e.cache_occupancy())
+    };
+
+    let full_bytes = water_cache_bytes();
+    assert!(full_bytes > 0);
+
+    let (e_direct, _) = run(false, 0);
+    let (e_full, (full_cached, full_total)) = run(true, full_bytes);
+    assert_eq!(full_cached, full_total, "exact-footprint budget caches every entry");
+    assert!(full_total > 0);
+
+    // a budget too small for even one entry: everything recomputes
+    let (e_zero, (zero_cached, _)) = run(true, 1);
+    assert_eq!(zero_cached, 0, "1-byte budget must cache nothing");
+
+    // a mid-size budget: partial cache, tail recomputes each iteration
+    let (e_tiny, (tiny_cached, tiny_total)) = run(true, full_bytes / 2);
+    assert!(
+        tiny_cached < tiny_total,
+        "half-footprint budget should truncate the cache ({tiny_cached}/{tiny_total})"
+    );
+
+    // the three stored runs execute the identical frozen schedule, so
+    // their trajectories are bitwise-identical: exact equality
+    assert_eq!(e_full, e_zero, "budget changes memory use, never the result");
+    assert_eq!(e_full, e_tiny, "budget changes memory use, never the result");
+    // vs direct mode (schedule rebuilt per iteration) the trajectories
+    // differ in rounding only — golden-test tolerance
+    assert!(
+        (e_full - e_direct).abs() < 1e-8,
+        "stored energy {e_full} vs direct {e_direct}"
+    );
+}
+
+#[test]
+fn stored_partial_cache_g_is_bitwise_identical_to_direct_g() {
+    let mol = library::by_name("water").unwrap();
+    let basis = build_basis(&mol, "sto-3g").unwrap();
+    let d = test_density(basis.nbf);
+
+    let mut direct = engine("water", "sto-3g", MatryoshkaConfig::default());
+    let g_direct = direct.two_electron(&d).unwrap();
+
+    let config = MatryoshkaConfig {
+        stored: true,
+        stored_budget_bytes: water_cache_bytes() / 2,
+        ..Default::default()
+    };
+    let mut stored = engine("water", "sto-3g", config);
+    let g_build = stored.two_electron(&d).unwrap(); // caching build
+    let g_mixed = stored.two_electron(&d).unwrap(); // cached + recomputed mix
+    let (cached, total) = stored.cache_occupancy();
+    assert!(cached > 0 && cached < total, "want a genuine partial cache ({cached}/{total})");
+    assert_eq!(g_direct.data(), g_build.data());
+    assert_eq!(g_direct.data(), g_mixed.data());
+}
+
+/// Backend that works like native until `boom_after` executions, then
+/// panics — the stand-in for a backend bug inside the compute stage.
+struct PanickingBackend {
+    inner: NativeBackend,
+    boom_after: std::sync::atomic::AtomicUsize,
+}
+
+impl EriBackend for PanickingBackend {
+    fn name(&self) -> &'static str {
+        "panicking"
+    }
+
+    fn manifest(&self) -> &Manifest {
+        self.inner.manifest()
+    }
+
+    fn execute_eri(
+        &self,
+        variant: &Variant,
+        bra_prim: &[f64],
+        bra_geom: &[f64],
+        ket_prim: &[f64],
+        ket_geom: &[f64],
+    ) -> anyhow::Result<EriExecution> {
+        if self
+            .boom_after
+            .fetch_update(
+                std::sync::atomic::Ordering::SeqCst,
+                std::sync::atomic::Ordering::SeqCst,
+                |n| n.checked_sub(1),
+            )
+            .is_err()
+        {
+            panic!("injected backend bug: kaboom");
+        }
+        self.inner.execute_eri(variant, bra_prim, bra_geom, ket_prim, ket_geom)
+    }
+
+    fn stats(&self) -> RuntimeStats {
+        self.inner.stats()
+    }
+}
+
+#[test]
+fn worker_panic_propagates_its_payload_not_a_generic_error() {
+    let mol = library::by_name("water").unwrap();
+    let basis = build_basis(&mol, "sto-3g").unwrap();
+    let d = test_density(basis.nbf);
+    for (mode, boom_after) in [
+        (PipelineMode::Staged, 0),
+        (PipelineMode::Lockstep, 0),
+        // mid-build panic: some executions succeed first
+        (PipelineMode::Staged, 3),
+    ] {
+        let backend = PanickingBackend {
+            inner: NativeBackend::with_kpair(basis.max_kpair()),
+            boom_after: std::sync::atomic::AtomicUsize::new(boom_after),
+        };
+        let config = MatryoshkaConfig { pipeline: mode, threads: 3, ..Default::default() };
+        let mut engine =
+            MatryoshkaEngine::with_backend(basis.clone(), Box::new(backend), config).unwrap();
+        let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            engine.two_electron(&d)
+        }));
+        let payload = outcome.expect_err("backend panic must propagate, not vanish");
+        let msg = payload
+            .downcast_ref::<&str>()
+            .map(|s| s.to_string())
+            .or_else(|| payload.downcast_ref::<String>().cloned())
+            .unwrap_or_default();
+        assert!(
+            msg.contains("injected backend bug"),
+            "{} mode surfaced the wrong payload: {msg:?}",
+            mode.name()
+        );
+    }
+}
