@@ -9,6 +9,7 @@ mod common;
 
 use matryoshka::bench_harness as bh;
 use matryoshka::engines::MatryoshkaConfig;
+use matryoshka::runtime::LadderMode;
 use matryoshka::scf::FockEngine;
 
 fn main() {
@@ -17,15 +18,29 @@ fn main() {
         let (_, basis) = common::system(name);
         let d = common::test_density(basis.nbf);
 
-        let mut baseline = common::engine(
+        let mut baseline = common::engine_pinned_config(
             basis.clone(),
-            MatryoshkaConfig { clustered: false, autotune: false, fixed_batch: 128, ..Default::default() },
+            MatryoshkaConfig {
+                clustered: false,
+                autotune: false,
+                fixed_batch: 128,
+                // fixed ladder: this figure measures divergence padding at
+                // one rung; elastic per-class minimum rungs would shrink
+                // the unclustered baseline's padding and dilute the A/B
+                ladder: LadderMode::Fixed,
+                ..Default::default()
+            },
         );
         baseline.two_electron(&d).expect("unclustered build");
 
-        let mut clustered = common::engine(
+        let mut clustered = common::engine_pinned_config(
             basis.clone(),
-            MatryoshkaConfig { autotune: false, fixed_batch: 128, ..Default::default() },
+            MatryoshkaConfig {
+                autotune: false,
+                fixed_batch: 128,
+                ladder: LadderMode::Fixed,
+                ..Default::default()
+            },
         );
         clustered.two_electron(&d).expect("clustered build");
 

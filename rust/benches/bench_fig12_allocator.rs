@@ -1,5 +1,7 @@
 //! Fig. 12 — Workload Allocator: arithmetic intensity and throughput per
-//! ERI class before vs after Algorithm-2 tuning.
+//! ERI class before vs after Algorithm-2 tuning, plus the Workload
+//! Allocator v2 A/B: intensity-derived elastic batch ladders vs the
+//! one-size fixed ladder.
 //!
 //! "Before" = every class pinned at the basic workload (smallest batch);
 //! "after" = the allocator's converged choice.  Effective arithmetic
@@ -10,12 +12,83 @@ mod common;
 
 use matryoshka::bench_harness as bh;
 use matryoshka::engines::MatryoshkaConfig;
-use matryoshka::runtime::Manifest;
+use matryoshka::runtime::{LadderMode, Manifest};
 use matryoshka::scf::FockEngine;
+use matryoshka::util::Stopwatch;
 
 /// dispatch-equivalent bytes per PJRT execution (measured overhead folded
 /// into the intensity model; see DESIGN.md §Hardware-Adaptation)
 const DISPATCH_BYTES: f64 = 2.0e5;
+
+/// Fig. 12b — elastic vs fixed batch ladders, per ERI class.  Same
+/// system, same pipeline, both tuned to convergence; the elastic ladder's
+/// rungs are derived from each class's operational intensity, so
+/// memory-bound s classes batch wide and compute-bound d classes narrow.
+/// Asserts the elastic ladder is no slower than fixed per class (modulo
+/// measurement noise) and overall.
+fn ladder_section(name: &str, basis_name: &str) {
+    println!("Fig. 12b — elastic vs fixed batch ladders on {name} / {basis_name}");
+    let mol = matryoshka::molecule::library::by_name(name).expect("molecule");
+    let basis = matryoshka::basis::build_basis(&mol, basis_name).expect("basis");
+    let d = common::test_density(basis.nbf);
+
+    let mut per_mode = Vec::new();
+    let mut walls = Vec::new();
+    for mode in [LadderMode::Fixed, LadderMode::Elastic] {
+        let config = MatryoshkaConfig { ladder: mode, ..Default::default() };
+        // pinned: this section measures the ladder modes themselves
+        let mut engine = common::engine_pinned_pipeline(basis.clone(), config);
+        common::warm_until_converged(&mut engine, &d, 5);
+        engine.metrics = Default::default();
+        let sw = Stopwatch::start();
+        engine.two_electron(&d).expect("measured build");
+        walls.push(sw.elapsed_s());
+        let chosen: Vec<(String, usize, usize, f64)> = engine
+            .metrics
+            .per_class
+            .iter()
+            .map(|(class, s)| {
+                let t = engine.tuner().tuner(*class);
+                (
+                    format!("{class:?}"),
+                    t.map(|t| t.prior_batch).unwrap_or(0),
+                    t.map(|t| t.current_batch()).unwrap_or(0),
+                    s.seconds,
+                )
+            })
+            .collect();
+        per_mode.push(chosen);
+    }
+
+    println!(
+        "{:<16} {:>11} {:>11} {:>11} {:>11} {:>9}",
+        "class", "fixed_rung", "elast_prior", "elast_rung", "fixed_s", "elast_s"
+    );
+    for (fixed, elastic) in per_mode[0].iter().zip(&per_mode[1]) {
+        assert_eq!(fixed.0, elastic.0, "class rosters must match");
+        println!(
+            "{:<16} {:>11} {:>11} {:>11} {:>11.4} {:>9.4}",
+            fixed.0, fixed.2, elastic.1, elastic.2, fixed.3, elastic.3
+        );
+        // elastic no slower than fixed per class (generous tolerance:
+        // per-class splits of one build carry scheduling noise)
+        assert!(
+            elastic.3 <= fixed.3 * 1.35 + 1e-3,
+            "class {}: elastic {:.4}s vs fixed {:.4}s",
+            fixed.0,
+            elastic.3,
+            fixed.3
+        );
+    }
+    println!("{}", bh::speedup_row("Fock build wall (fixed vs elastic ladder)", walls[0], walls[1]));
+    assert!(
+        walls[1] <= walls[0] * 1.10,
+        "elastic ladder must not be slower overall: {:.4}s vs {:.4}s",
+        walls[1],
+        walls[0]
+    );
+    println!();
+}
 
 fn main() {
     let manifest: Manifest = common::catalog();
@@ -23,10 +96,11 @@ fn main() {
     let (_, basis) = common::system(name);
     let d = common::test_density(basis.nbf);
 
-    // before: pinned to the basic workload (smallest variant)
+    // before: pinned to the basic workload (each ladder's bottom rung —
+    // fixed_batch 1 snaps to the smallest variant of every class)
     let mut before = common::engine(
         basis.clone(),
-        MatryoshkaConfig { autotune: false, fixed_batch: 32, ..Default::default() },
+        MatryoshkaConfig { autotune: false, fixed_batch: 1, ..Default::default() },
     );
     before.two_electron(&d).expect("warm");
     before.metrics = Default::default();
@@ -40,23 +114,28 @@ fn main() {
 
     bh::header(&format!("Fig. 12 — allocator tuning on {name} (per ERI class)"));
     println!(
-        "{:<16} {:>7} {:>12} {:>12} {:>11} {:>11} {:>8}",
-        "class", "batch", "AI_before", "AI_after", "thr_before", "thr_after", "gain"
+        "{:<16} {:>7} {:>7} {:>12} {:>12} {:>11} {:>11} {:>8}",
+        "class", "prior", "batch", "AI_before", "AI_after", "thr_before", "thr_after", "gain"
     );
     let mut total_b = 0.0;
     let mut total_a = 0.0;
     for (class, s_after) in &after.metrics.per_class {
         let s_before = before.metrics.per_class.get(class).copied().unwrap_or_default();
         let v = manifest.ladder(*class)[0];
-        let chosen = after.tuner().tuner(*class).map(|t| t.current_batch()).unwrap_or(0);
-        let ai = |batch: f64| {
-            v.flops_per_quad * batch / (v.bytes_per_quad * batch + DISPATCH_BYTES)
-        };
+        let tuner = after.tuner().tuner(*class);
+        // the intensity prior the tuner was seeded on (v2) vs its
+        // converged choice — also carried on every TunerObservation
+        let prior = tuner.map(|t| t.prior_batch).unwrap_or(0);
+        let chosen = tuner.map(|t| t.current_batch()).unwrap_or(0);
+        let basic = v.batch as f64;
+        let ai =
+            |batch: f64| v.flops_per_quad * batch / (v.bytes_per_quad * batch + DISPATCH_BYTES);
         println!(
-            "{:<16} {:>7} {:>12.2} {:>12.2} {:>11.0} {:>11.0} {:>7.2}x",
+            "{:<16} {:>7} {:>7} {:>12.2} {:>12.2} {:>11.0} {:>11.0} {:>7.2}x",
             format!("{class:?}"),
+            prior,
             chosen,
-            ai(32.0),
+            ai(basic),
             ai(chosen as f64),
             s_before.throughput(),
             s_after.throughput(),
@@ -69,4 +148,10 @@ fn main() {
     // the native backend pays far less per-execution dispatch than PJRT,
     // so tuning gains are smaller there — tolerate measurement noise
     assert!(total_a < total_b * 1.10, "tuning must not be notably slower overall");
+    println!();
+
+    // Fig. 12b — the Workload Allocator v2 ladder A/B, on the synthetic
+    // catalog's two regimes: an s/p protein chunk and a d-heavy system
+    ladder_section(name, "sto-3g");
+    ladder_section("water", "6-31g*");
 }

@@ -154,7 +154,7 @@ fn main() {
         let class = (bra_c.0, bra_c.1, ket_c.0, ket_c.1);
         let time_with = |strategy: EriEvalStrategy| {
             let backend = NativeBackend::with_options(pairs.kpair, strategy);
-            let variant = backend.manifest().ladder(class)[1].clone(); // 128 rung
+            let variant = backend.manifest().ladder(class)[1].clone(); // mid rung
             let (b, kb, kk) = (variant.batch, variant.kpair_bra, variant.kpair_ket);
             // replicate one real quad across every batch row
             let mut bp = vec![0.0; b * kb * 5];

@@ -7,7 +7,9 @@
 //! (with `--features pjrt` and a compiled artifacts/ directory) to measure
 //! the PJRT path instead; `MATRYOSHKA_THREADS=N` pins the Fock worker
 //! count (default: all cores); `MATRYOSHKA_PIPELINE=staged|lockstep`
-//! overrides the worker pipeline mode (default: staged).
+//! overrides the worker pipeline mode (default: staged);
+//! `MATRYOSHKA_LADDER=elastic|fixed` overrides the batch-ladder mode
+//! (default: elastic).
 
 use std::path::{Path, PathBuf};
 
@@ -17,7 +19,7 @@ use matryoshka::engines::{MatryoshkaConfig, MatryoshkaEngine};
 use matryoshka::linalg::Matrix;
 use matryoshka::molecule::{library, Molecule};
 use matryoshka::pipeline::PipelineMode;
-use matryoshka::runtime::{BackendKind, EriBackend, Manifest, NativeBackend};
+use matryoshka::runtime::{BackendKind, EriBackend, LadderMode, Manifest, NativeBackend};
 
 pub fn artifact_dir() -> Option<PathBuf> {
     let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
@@ -25,13 +27,24 @@ pub fn artifact_dir() -> Option<PathBuf> {
 }
 
 /// Variant catalog for per-class cost-model reporting: the real artifact
-/// manifest when one is compiled, else the native synthetic catalog.
+/// manifest when one is compiled, else the native synthetic catalog
+/// (honoring `MATRYOSHKA_LADDER`, so reported rungs match the engines').
 /// A manifest that exists but fails to parse is a real error — never
 /// silently report synthetic numbers as artifact statistics.
 pub fn catalog() -> Manifest {
     match artifact_dir() {
         Some(dir) => Manifest::load(&dir).expect("artifacts/manifest.txt exists but failed to parse"),
-        None => NativeBackend::new().manifest().clone(),
+        None => NativeBackend::with_ladder(matryoshka::constructor::KPAIR, env_ladder())
+            .manifest()
+            .clone(),
+    }
+}
+
+/// The `MATRYOSHKA_LADDER` override, defaulting to the config default.
+fn env_ladder() -> LadderMode {
+    match std::env::var("MATRYOSHKA_LADDER") {
+        Ok(l) => LadderMode::parse(&l).expect("MATRYOSHKA_LADDER"),
+        Err(_) => LadderMode::default(),
     }
 }
 
@@ -64,6 +77,16 @@ pub fn engine(basis: BasisSet, mut config: MatryoshkaConfig) -> MatryoshkaEngine
     if let Ok(p) = std::env::var("MATRYOSHKA_PIPELINE") {
         config.pipeline = PipelineMode::parse(&p).expect("MATRYOSHKA_PIPELINE");
     }
+    config.ladder = env_ladder();
+    engine_pinned_config(basis, config)
+}
+
+/// Like [`engine`], but the caller's `pipeline` AND `ladder` choices are
+/// final — the env overrides are ignored.  For benches that *measure*
+/// those modes (fig9e pipeline A/B, fig12b ladder A/B) or depend on one
+/// (fig10's fixed-rung padding baseline), where an env override would
+/// silently mislabel the rows.
+pub fn engine_pinned_config(basis: BasisSet, config: MatryoshkaConfig) -> MatryoshkaEngine {
     engine_pinned_pipeline(basis, config)
 }
 

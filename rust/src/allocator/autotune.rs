@@ -25,6 +25,11 @@ pub struct ClassTuner {
     pub ladder: Vec<usize>,
     /// current rung
     pub idx: usize,
+    /// the rung (batch) the tuner was seeded on — rung 0 for a plain
+    /// [`ClassTuner::new`], the intensity prior for
+    /// [`ClassTuner::with_prior`].  Telemetry for Fig. 12 (prior vs
+    /// converged choice).
+    pub prior_batch: usize,
     /// best observed seconds-per-quadruple per rung
     best: Vec<f64>,
     /// observations on the current rung
@@ -39,6 +44,23 @@ const SAMPLES_PER_RUNG: usize = 4;
 /// Relative improvement required to keep climbing.
 const IMPROVE_EPS: f64 = 0.02;
 
+/// Default working-set budget for the intensity prior: roughly one
+/// per-core L2 plus change — big enough that memory-bound s classes still
+/// seed on a wide rung, small enough that a rung's gather+value footprint
+/// stays cache-resident while the chunk streams through the evaluator.
+pub const DEFAULT_WORKING_SET_BYTES: usize = 4 << 20;
+
+/// The intensity prior: index of the **largest** ladder rung whose
+/// estimated working set (`batch × bytes_per_quad`) fits the budget, or
+/// rung 0 when none fits.  A pure function of its arguments — the
+/// schedule build and the tuner seed compute the identical prior.
+pub fn intensity_prior(ladder: &[usize], bytes_per_quad: f64, working_set_bytes: usize) -> usize {
+    ladder
+        .iter()
+        .rposition(|&b| b as f64 * bytes_per_quad <= working_set_bytes as f64)
+        .unwrap_or(0)
+}
+
 impl ClassTuner {
     /// Public for tests/benches; engines go through `AutoTuner`.
     ///
@@ -47,6 +69,15 @@ impl ClassTuner {
     /// surface as the engine's "no kernel variant" error *before* any
     /// tuner exists — never as an index-out-of-bounds panic mid-build.
     pub fn new(class: ClassKey, ladder: Vec<usize>) -> anyhow::Result<Self> {
+        Self::with_prior(class, ladder, 0)
+    }
+
+    /// Like [`ClassTuner::new`] but seeded on rung `prior_idx` (clamped to
+    /// the ladder) instead of rung 0.  Algorithm 2 then explores upward
+    /// from the prior; it never revisits rungs below it (best-seconds of
+    /// unvisited rungs stay infinite, so the first judgement always
+    /// climbs or converges rather than reverting past the seed).
+    pub fn with_prior(class: ClassKey, ladder: Vec<usize>, prior_idx: usize) -> anyhow::Result<Self> {
         if ladder.is_empty() {
             anyhow::bail!(
                 "class {class:?}: cannot tune over an empty batch ladder \
@@ -54,10 +85,12 @@ impl ClassTuner {
             );
         }
         let n = ladder.len();
+        let idx = prior_idx.min(n - 1);
         Ok(ClassTuner {
             class,
+            prior_batch: ladder[idx],
             ladder,
-            idx: 0,
+            idx,
             best: vec![f64::INFINITY; n],
             samples: 0,
             converged: n <= 1,
@@ -134,6 +167,10 @@ pub struct TunerObservation {
     pub entry: usize,
     /// the rung (batch) the tuner had chosen when the iteration started
     pub batch: usize,
+    /// the class's intensity-prior rung (batch) the tuner was seeded on —
+    /// carried so the Fig. 12 bench can attribute how far Algorithm 2
+    /// moved from the model's guess without reaching into tuner internals
+    pub prior: usize,
     /// real (non-padding) quadruples in the execution
     pub quads: usize,
     /// steady-state wall seconds of the execution
@@ -150,15 +187,33 @@ pub struct AutoTuner {
 
 impl AutoTuner {
     /// `enabled = false` freezes every class at the variant whose batch is
-    /// `fixed_batch` (the static-parallelism baseline).
+    /// `fixed_batch` (the static-parallelism baseline).  Seeds priors with
+    /// [`DEFAULT_WORKING_SET_BYTES`]; see [`AutoTuner::with_working_set`].
     pub fn new(manifest: &Manifest, enabled: bool, fixed_batch: usize) -> Self {
+        Self::with_working_set(manifest, enabled, fixed_batch, DEFAULT_WORKING_SET_BYTES)
+    }
+
+    /// Full constructor: every class tuner starts on its intensity prior
+    /// (the largest rung whose estimated working set fits
+    /// `working_set_bytes`) instead of the ladder bottom, so classes the
+    /// cost model already understands skip most of the online climb.
+    pub fn with_working_set(
+        manifest: &Manifest,
+        enabled: bool,
+        fixed_batch: usize,
+        working_set_bytes: usize,
+    ) -> Self {
         let mut tuners = HashMap::new();
         for class in manifest.classes() {
-            let ladder: Vec<usize> = manifest.ladder(class).iter().map(|v| v.batch).collect();
+            let variants = manifest.ladder(class);
+            let ladder: Vec<usize> = variants.iter().map(|v| v.batch).collect();
             if ladder.is_empty() {
                 continue;
             }
-            let mut t = ClassTuner::new(class, ladder).expect("ladder checked non-empty");
+            let prior =
+                intensity_prior(&ladder, variants[0].bytes_per_quad, working_set_bytes);
+            let mut t =
+                ClassTuner::with_prior(class, ladder, prior).expect("ladder checked non-empty");
             if !enabled {
                 // pin to the requested batch (or nearest available)
                 let idx = t
@@ -337,8 +392,18 @@ mod tests {
         let mut sharded = AutoTuner::new(&manifest, true, 32);
         let mut sequential = AutoTuner::new(&manifest, true, 32);
 
+        // observations are tagged with the rung the tuner actually sits on
+        // (the intensity prior may have seeded it above rung 0)
+        let rung = sequential.batch_for(class);
         let obs: Vec<TunerObservation> = (0..SAMPLES_PER_RUNG)
-            .map(|entry| TunerObservation { class, entry, batch: 32, quads: 32, seconds: 32.0 * 5e-6 })
+            .map(|entry| TunerObservation {
+                class,
+                entry,
+                batch: rung,
+                prior: rung,
+                quads: rung,
+                seconds: rung as f64 * 5e-6,
+            })
             .collect();
         for ob in &obs {
             sequential.observe(ob.class, ob.quads, ob.seconds);
@@ -376,5 +441,56 @@ mod tests {
         let mut t = tuner(&[32, 128]);
         assert_eq!(t.observe(0, 1.0), TunerDecision::Converged);
         assert_eq!(t.current_batch(), 32);
+    }
+
+    #[test]
+    fn intensity_prior_picks_the_largest_fitting_rung() {
+        let ladder = [8usize, 32, 128];
+        // 1000 B/quad: 128×1000 over a 100 kB budget, 32×1000 fits
+        assert_eq!(intensity_prior(&ladder, 1000.0, 100_000), 1);
+        // everything fits a huge budget -> top rung
+        assert_eq!(intensity_prior(&ladder, 1000.0, usize::MAX), 2);
+        // nothing fits -> rung 0 (the pre-prior behavior)
+        assert_eq!(intensity_prior(&ladder, 1e12, 1), 0);
+        // pure function: same inputs, same prior
+        assert_eq!(intensity_prior(&ladder, 824.0, 1 << 20), intensity_prior(&ladder, 824.0, 1 << 20));
+    }
+
+    #[test]
+    fn prior_seeded_tuner_starts_above_rung_zero_and_never_reverts_below_it() {
+        let mut t = ClassTuner::with_prior((0, 0, 0, 0), vec![32, 128, 512], 1).unwrap();
+        assert_eq!(t.current_batch(), 128);
+        assert_eq!(t.prior_batch, 128);
+        // the first judgement compares to an unvisited rung (infinite
+        // best): even slow samples climb rather than revert past the seed
+        let mut last = TunerDecision::Measuring;
+        for _ in 0..SAMPLES_PER_RUNG {
+            last = t.observe(128, 128.0 * 9e-3);
+        }
+        assert_eq!(last, TunerDecision::Combined);
+        assert_eq!(t.current_batch(), 512);
+        // seeding clamps to the ladder top
+        let top = ClassTuner::with_prior((0, 0, 0, 0), vec![32, 128], 99).unwrap();
+        assert_eq!(top.current_batch(), 128);
+        // plain new() still seeds rung 0
+        assert_eq!(tuner(&[32, 128]).prior_batch, 32);
+    }
+
+    #[test]
+    fn autotuner_seeds_classes_on_their_intensity_prior() {
+        // bytes/quad 8.0 and ladder 32/128: both rungs fit 4 MiB -> the
+        // enabled tuner starts at 128, not 32
+        let manifest = crate::runtime::Manifest::parse(
+            "eri_ssss_b32 0 0 0 0 32 9 9 1 0 1 0 5 9.0 8.0 greedy a\n\
+             eri_ssss_b128 0 0 0 0 128 9 9 1 0 1 0 5 9.0 8.0 greedy b\n",
+            std::path::Path::new("/tmp"),
+        )
+        .unwrap();
+        let at = AutoTuner::new(&manifest, true, 32);
+        assert_eq!(at.batch_for((0, 0, 0, 0)), 128);
+        assert_eq!(at.tuner((0, 0, 0, 0)).unwrap().prior_batch, 128);
+        // a budget below one quad's bytes forces the classic rung-0 start
+        let tight = AutoTuner::with_working_set(&manifest, true, 32, 1);
+        assert_eq!(tight.batch_for((0, 0, 0, 0)), 32);
     }
 }

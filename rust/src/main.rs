@@ -21,9 +21,10 @@ use matryoshka::engines::{
 use matryoshka::integrals::overlap_matrix;
 use matryoshka::linalg::Matrix;
 use matryoshka::molecule::{library, parse_xyz, Molecule};
+use matryoshka::allocator::DEFAULT_WORKING_SET_BYTES;
 use matryoshka::pipeline::PipelineMode;
 use matryoshka::report;
-use matryoshka::runtime::BackendKind;
+use matryoshka::runtime::{BackendKind, LadderMode};
 use matryoshka::scf::{dipole_moment, mulliken_charges, run_rhf, ScfOptions};
 
 fn artifact_dir(args: &Args) -> PathBuf {
@@ -36,13 +37,14 @@ fn usage() -> ! {
          \n  scf     --molecule NAME [--basis sto-3g|6-31g*] [--engine matryoshka|reference]\n\
          \u{20}         [--stored] [--stored-budget-mb N] [--backend native|pjrt]\n\
          \u{20}         [--threads N (0 = auto)] [--pipeline staged|lockstep]\n\
+         \u{20}         [--ladder elastic|fixed] [--working-set-kb N] [--wide-opb-max X]\n\
          \u{20}         [--threshold T] [--max-iter N] [--tile N] [--fixed-batch N]\n\
          \u{20}         [--no-autotune] [--no-cluster] [--random-path]\n\
          \u{20}         [--schwarz exact|estimate] [--artifacts DIR] [--verbose]\n\
          \u{20}         [--xyz FILE] [--damping A] [--properties]\n\
          \n  report  systems|tab4|fig6|compiler|schedule|all [--artifacts DIR]\n\
          \u{20}         (schedule: [--molecule NAME] [--basis B] — merge-unit work summary)\n\
-         \n  info    [--backend native|pjrt] [--artifacts DIR]"
+         \n  info    [--backend native|pjrt] [--ladder elastic|fixed] [--artifacts DIR]"
     );
     std::process::exit(2);
 }
@@ -64,6 +66,11 @@ fn engine_config(args: &Args) -> anyhow::Result<MatryoshkaConfig> {
             _ => SchwarzMode::Estimate,
         },
         backend: BackendKind::parse(&args.choice("backend", "native", &["native", "pjrt"])?)?,
+        ladder: LadderMode::parse(&args.choice("ladder", "elastic", &["elastic", "fixed"])?)?,
+        working_set_bytes: args
+            .usize_or("working-set-kb", DEFAULT_WORKING_SET_BYTES >> 10)?
+            .saturating_mul(1 << 10),
+        wide_opb_max: args.f64_or("wide-opb-max", matryoshka::pipeline::DEFAULT_WIDE_OPB_MAX)?,
         threads: args.usize_or("threads", 0)?,
         pipeline: PipelineMode::parse(&args.choice(
             "pipeline",
@@ -121,10 +128,11 @@ fn cmd_scf(args: &Args) -> anyhow::Result<()> {
             let m = &engine.metrics;
             let rs = engine.runtime_stats();
             println!(
-                "engine: backend {} with {} Fock worker(s), {} pipeline",
+                "engine: backend {} with {} Fock worker(s), {} pipeline, {} ladder",
                 engine.backend_name(),
                 engine.threads(),
-                engine.config.pipeline.name()
+                engine.config.pipeline.name(),
+                engine.config.ladder.name()
             );
             // phase timers are CPU-seconds summed across Fock workers;
             // with --threads N they can exceed wall time by up to N×
@@ -142,9 +150,13 @@ fn cmd_scf(args: &Args) -> anyhow::Result<()> {
                 m.digest_seconds
             );
             println!(
-                "engine: pipeline wall {:.2}s, gather+digest hidden under execution {:.2}s",
+                "engine: pipeline wall {:.2}s, gather+digest hidden under execution {:.2}s \
+                 (cross-unit prefetch {:.3}s), {} wide / {} split chunks",
                 m.pipeline_wall_seconds,
-                m.overlap_hidden_seconds()
+                m.overlap_hidden_seconds(),
+                m.prefetch_gather_seconds,
+                m.wide_chunks,
+                m.split_chunks
             );
             res
         }
@@ -224,11 +236,13 @@ fn cmd_report(args: &Args) -> anyhow::Result<()> {
 }
 
 fn cmd_info(args: &Args) -> anyhow::Result<()> {
+    use matryoshka::constructor::KPAIR;
     use matryoshka::runtime::{EriBackend, NativeBackend};
     let kind = BackendKind::parse(&args.choice("backend", "native", &["native", "pjrt"])?)?;
+    let ladder = LadderMode::parse(&args.choice("ladder", "elastic", &["elastic", "fixed"])?)?;
     let manifest = match kind {
         // the native catalog is synthetic — no artifacts directory needed
-        BackendKind::Native => NativeBackend::new().manifest().clone(),
+        BackendKind::Native => NativeBackend::with_ladder(KPAIR, ladder).manifest().clone(),
         BackendKind::Pjrt => matryoshka::runtime::Manifest::load(&artifact_dir(args))?,
     };
     println!(

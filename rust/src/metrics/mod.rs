@@ -50,10 +50,21 @@ impl ClassStats {
 #[derive(Clone, Debug, Default)]
 pub struct EngineMetrics {
     pub per_class: BTreeMap<ClassKey, ClassStats>,
+    /// per-(class, batch rung) execution accounting — attributes wall
+    /// time to the Workload Allocator's ladder decisions (Fig. 12)
+    pub per_rung: BTreeMap<(ClassKey, usize), ClassStats>,
+    /// chunks staged wide (memory stage executed them inline) vs split
+    /// (shipped to the compute companion) — the elastic stage split
+    pub wide_chunks: u64,
+    pub split_chunks: u64,
     /// digestion CPU-seconds, summed across workers (L3 scatter phase)
     pub digest_seconds: f64,
     /// gather/marshal CPU-seconds, summed across workers (L3 pack phase)
     pub gather_seconds: f64,
+    /// the subset of `gather_seconds` spent prefetching the NEXT merge
+    /// unit's first chunk while the compute companion drained the current
+    /// unit's tail — cross-unit overlap, hidden by construction
+    pub prefetch_gather_seconds: f64,
     /// wall seconds workers spent inside `pipeline::run_entries`, summed
     /// across workers.  Under the staged pipeline this is LESS than
     /// gather + execute + digest: the difference is the memory-stage time
@@ -70,6 +81,31 @@ impl EngineMetrics {
         s.seconds += seconds;
     }
 
+    /// Record one schedule entry's execution with its ladder attribution:
+    /// the frozen tuner rung it ran under and whether the elastic stage
+    /// split ran it wide (inline on the memory stage) or split.
+    pub fn record_entry(
+        &mut self,
+        class: ClassKey,
+        rung: usize,
+        wide: bool,
+        real: usize,
+        padded: usize,
+        seconds: f64,
+    ) {
+        self.record(class, real, padded, seconds);
+        let s = self.per_rung.entry((class, rung)).or_default();
+        s.executions += 1;
+        s.real_quads += real as u64;
+        s.padded_slots += padded as u64;
+        s.seconds += seconds;
+        if wide {
+            self.wide_chunks += 1;
+        } else {
+            self.split_chunks += 1;
+        }
+    }
+
     /// Fold a worker shard's metrics into this accumulator (the parallel
     /// Fock pipeline records per-worker and merges deterministically).
     pub fn merge(&mut self, other: &EngineMetrics) {
@@ -80,8 +116,18 @@ impl EngineMetrics {
             t.padded_slots += s.padded_slots;
             t.seconds += s.seconds;
         }
+        for (key, s) in &other.per_rung {
+            let t = self.per_rung.entry(*key).or_default();
+            t.executions += s.executions;
+            t.real_quads += s.real_quads;
+            t.padded_slots += s.padded_slots;
+            t.seconds += s.seconds;
+        }
+        self.wide_chunks += other.wide_chunks;
+        self.split_chunks += other.split_chunks;
         self.digest_seconds += other.digest_seconds;
         self.gather_seconds += other.gather_seconds;
+        self.prefetch_gather_seconds += other.prefetch_gather_seconds;
         self.pipeline_wall_seconds += other.pipeline_wall_seconds;
     }
 
@@ -131,6 +177,29 @@ mod tests {
         assert!((s.lane_utilization() - 0.5).abs() < 1e-12);
         assert!((s.throughput() - 128.0).abs() < 1e-12);
         assert!((m.mean_lane_utilization() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn record_entry_attributes_rung_and_stage_shape() {
+        let mut m = EngineMetrics::default();
+        m.record_entry((0, 0, 0, 0), 512, true, 100, 512, 0.5);
+        m.record_entry((0, 0, 0, 0), 512, true, 50, 512, 0.25);
+        m.record_entry((2, 0, 0, 0), 32, false, 30, 32, 0.1);
+        assert_eq!(m.wide_chunks, 2);
+        assert_eq!(m.split_chunks, 1);
+        assert_eq!(m.per_rung[&((0, 0, 0, 0), 512)].executions, 2);
+        assert_eq!(m.per_rung[&((0, 0, 0, 0), 512)].real_quads, 150);
+        assert_eq!(m.per_rung[&((2, 0, 0, 0), 32)].real_quads, 30);
+        // per-class totals stay in sync with the rung attribution
+        assert_eq!(m.per_class[&(0, 0, 0, 0)].real_quads, 150);
+
+        let mut folded = EngineMetrics::default();
+        folded.prefetch_gather_seconds = 0.125;
+        folded.merge(&m);
+        folded.merge(&m);
+        assert_eq!(folded.wide_chunks, 4);
+        assert_eq!(folded.per_rung[&((2, 0, 0, 0), 32)].executions, 2);
+        assert!((folded.prefetch_gather_seconds - 0.125).abs() < 1e-12);
     }
 
     #[test]

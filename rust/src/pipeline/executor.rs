@@ -12,10 +12,26 @@
 //! ```
 //!
 //! so the memory-bound gather/digest phases hide under the compute-bound
-//! execution instead of serializing behind it.  Determinism is untouched:
-//! digestion happens only on the memory stage, strictly in schedule-entry
-//! order, and the merge tree above this module never changes — a staged
-//! build is bitwise-identical to a lockstep build at any thread count
+//! execution instead of serializing behind it.  Two elastic refinements
+//! ride on top (Workload Allocator v2):
+//!
+//! * **Elastic stage split.**  Chunks whose class sits at or below the
+//!   schedule's OP/B threshold are staged [`StageShape::Wide`]: the
+//!   memory stage executes them inline instead of paying a channel
+//!   round-trip whose execution would not cover the hand-off — the
+//!   compute companion keeps draining neighboring compute-bound chunks
+//!   meanwhile.  The shape is frozen into the [`ChunkEntry`], so what is
+//!   digested, in which order, into which accumulator never varies.
+//! * **Cross-unit prefetch.**  When a worker reaches the tail of its
+//!   merge unit, the memory stage claims the worker's next unit early and
+//!   gathers its first chunk while the compute companion drains the
+//!   current unit's last execution ([`run_unit_stream`]); the gathered
+//!   chunk carries over and skips its gather in the next unit.
+//!
+//! Determinism is untouched by all of this: digestion happens only on the
+//! memory stage, strictly in schedule-entry order, and the merge tree
+//! above this module never changes — a staged build is bitwise-identical
+//! to a lockstep build at any thread count, under either batch ladder
 //! (asserted in `tests/pipeline_staged.rs`).
 //!
 //! The lockstep executor (`--pipeline lockstep`) runs the same per-entry
@@ -25,6 +41,7 @@
 use std::collections::VecDeque;
 use std::ops::Range;
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc;
 
 use crate::allocator::TunerObservation;
@@ -36,7 +53,7 @@ use crate::metrics::EngineMetrics;
 use crate::runtime::EriBackend;
 use crate::util::Stopwatch;
 
-use super::schedule::{ChunkEntry, ChunkSchedule};
+use super::schedule::{ChunkEntry, ChunkSchedule, StageShape};
 use super::scratch::{BufferSet, CachedChunk, PipelineBuffers};
 use super::PipelineMode;
 
@@ -73,6 +90,33 @@ impl UnitOutput {
             observations: Vec::new(),
             cache: Vec::new(),
         }
+    }
+}
+
+/// A chunk gathered ahead of its unit: the cross-unit prefetch payload a
+/// worker carries from one staged `run_entries` call into the next.
+pub struct Prefetched {
+    /// schedule entry the buffer set holds gathered inputs for
+    pub entry: usize,
+    pub set: BufferSet,
+}
+
+/// Per-worker cross-unit linkage threaded through consecutive staged unit
+/// runs: the carried prefetch, the hook that claims the worker's next
+/// unit, and where the claimed id is reported back to the worker loop.
+struct UnitLink<'l> {
+    carry: Option<Prefetched>,
+    /// claims the next merge unit; `None` disables cross-unit prefetch
+    /// (single-range runs like `build_g_for_blocks` and plain
+    /// [`run_entries`])
+    claim: Option<&'l mut dyn FnMut() -> Option<usize>>,
+    /// `Some(claimed)` once the staged run exercised the claim hook
+    claimed: Option<Option<usize>>,
+}
+
+impl UnitLink<'_> {
+    fn detached() -> UnitLink<'static> {
+        UnitLink { carry: None, claim: None, claimed: None }
     }
 }
 
@@ -131,18 +175,27 @@ impl<'a> ExecContext<'a> {
         out.metrics.digest_seconds += sw.elapsed_s();
     }
 
-    /// Post-execution bookkeeping for one entry: metrics, tuner evidence,
-    /// digestion, optional cache collection.  Called on the memory stage
-    /// in strict entry order by both executors.
+    /// Post-execution bookkeeping for one entry: metrics (with the
+    /// entry's rung/stage-shape attribution), tuner evidence, digestion,
+    /// optional cache collection.  Called on the memory stage in strict
+    /// entry order by both executors.
     fn finish_entry(&self, density: &Matrix, entry: &ChunkEntry, set: &BufferSet, out: &mut UnitOutput) {
         let n = entry.len();
         // steady-state cost only: one-time kernel compilation must not
         // poison Algorithm 2's combine/revert decisions or Fig. 12
-        out.metrics.record(entry.class, n, entry.variant.batch, set.out.steady_seconds);
+        out.metrics.record_entry(
+            entry.class,
+            entry.rung,
+            entry.shape == StageShape::Wide,
+            n,
+            entry.variant.batch,
+            set.out.steady_seconds,
+        );
         out.observations.push(TunerObservation {
             class: entry.class,
             entry: entry.entry,
             batch: entry.rung,
+            prior: entry.prior,
             quads: n,
             seconds: set.out.steady_seconds,
         });
@@ -172,12 +225,26 @@ impl<'a> ExecContext<'a> {
         set.scratch.gather(self.pairs, self.entry_quads(entry), v.batch, v.kpair_bra, v.kpair_ket);
         out.metrics.gather_seconds += sw.elapsed_s();
     }
+
+    /// Gather for the cross-unit prefetch: same work as
+    /// [`ExecContext::gather_entry`], additionally attributed to
+    /// `prefetch_gather_seconds` (time hidden under the tail drain).
+    fn prefetch_entry(&self, entry: &ChunkEntry, set: &mut BufferSet, out: &mut UnitOutput) {
+        let v = &entry.variant;
+        let sw = Stopwatch::start();
+        set.scratch.gather(self.pairs, self.entry_quads(entry), v.batch, v.kpair_bra, v.kpair_ket);
+        let dt = sw.elapsed_s();
+        out.metrics.gather_seconds += dt;
+        out.metrics.prefetch_gather_seconds += dt;
+    }
 }
 
 /// Run the schedule entries `range` into `out`, using the context's
 /// pipeline mode.  Also accounts the run's wall time
 /// (`EngineMetrics::pipeline_wall_seconds`), which is what makes the
-/// hidden gather/digest overlap measurable.
+/// hidden gather/digest overlap measurable.  Single-range entrypoint —
+/// the engine's unit fan-out goes through [`run_unit_stream`], which adds
+/// cross-unit prefetch on top of this same per-entry machinery.
 pub fn run_entries(
     ctx: &ExecContext<'_>,
     density: &Matrix,
@@ -185,13 +252,74 @@ pub fn run_entries(
     out: &mut UnitOutput,
     bufs: &mut PipelineBuffers,
 ) -> anyhow::Result<()> {
+    let mut link = UnitLink::detached();
+    run_entries_linked(ctx, density, range, out, bufs, &mut link)
+}
+
+fn run_entries_linked(
+    ctx: &ExecContext<'_>,
+    density: &Matrix,
+    range: Range<usize>,
+    out: &mut UnitOutput,
+    bufs: &mut PipelineBuffers,
+    link: &mut UnitLink<'_>,
+) -> anyhow::Result<()> {
     let sw = Stopwatch::start();
     let result = match ctx.mode {
         PipelineMode::Lockstep => run_lockstep(ctx, density, range, out, bufs),
-        PipelineMode::Staged => run_staged(ctx, density, range, out, bufs),
+        PipelineMode::Staged => run_staged(ctx, density, range, out, bufs, link),
     };
     out.metrics.pipeline_wall_seconds += sw.elapsed_s();
     result
+}
+
+/// The engine's per-worker loop: claim merge units off the shared `next`
+/// counter and run each through the pipeline, carrying the cross-unit
+/// prefetch across unit boundaries.  `sink` receives every unit's payload
+/// (unit id, caught-panic-or-result) and returns whether the worker
+/// should keep claiming; a worker stops on its own after a panic (its
+/// buffers may be poisoned), so surviving workers steal the remainder —
+/// identical semantics to the pre-prefetch fan-out.
+pub fn run_unit_stream(
+    ctx: &ExecContext<'_>,
+    density: &Matrix,
+    next: &AtomicUsize,
+    sink: &mut dyn FnMut(usize, std::thread::Result<anyhow::Result<UnitOutput>>) -> bool,
+) {
+    let nunits = ctx.schedule.units.len();
+    let n = ctx.basis.nbf;
+    let mut bufs = PipelineBuffers::default();
+    let mut carry: Option<Prefetched> = None;
+    let claim = |next: &AtomicUsize| {
+        let u = next.fetch_add(1, Ordering::Relaxed);
+        (u < nunits).then_some(u)
+    };
+    let mut pending = claim(next);
+    while let Some(u) = pending {
+        let range = ctx.schedule.units[u].entries();
+        let mut out = UnitOutput::new(n);
+        let mut claim_next = || claim(next);
+        let mut link =
+            UnitLink { carry: carry.take(), claim: Some(&mut claim_next), claimed: None };
+        let status = catch_unwind(AssertUnwindSafe(|| {
+            run_entries_linked(ctx, density, range, &mut out, &mut bufs, &mut link)
+        }));
+        let poisoned = status.is_err();
+        carry = link.carry.take();
+        let claimed = link.claimed;
+        drop(link);
+        let payload = status.map(|result| result.map(|()| out));
+        if !sink(u, payload) || poisoned {
+            break;
+        }
+        // the staged run claims the next unit itself (to prefetch its
+        // first chunk); lockstep — or a staged run that errored before
+        // its tail — claims here
+        pending = match claimed {
+            Some(next_unit) => next_unit,
+            None => claim(next),
+        };
+    }
 }
 
 /// Sequential baseline: gather → execute → digest per entry, one thread.
@@ -263,15 +391,20 @@ fn drain_one(
     Ok(())
 }
 
-/// Two-stage software pipeline over one entry range (see module docs).
+/// Two-stage software pipeline over one entry range (see module docs),
+/// with the elastic stage split per chunk and — when `link` carries a
+/// claim hook — the cross-unit prefetch at the tail.
 fn run_staged(
     ctx: &ExecContext<'_>,
     density: &Matrix,
     range: Range<usize>,
     out: &mut UnitOutput,
     bufs: &mut PipelineBuffers,
+    link: &mut UnitLink<'_>,
 ) -> anyhow::Result<()> {
     let mut pool = vec![bufs.take_set(), bufs.take_set()];
+    let mut carry = link.carry.take();
+    let mut carry_out: Option<Prefetched> = None;
     let result = std::thread::scope(|s| -> anyhow::Result<()> {
         // rendezvous-depth-1 channels: the memory stage can run at most
         // one gather ahead, the compute stage at most one result behind —
@@ -310,22 +443,70 @@ fn run_staged(
                 ctx.digest_cached(density, entry, hit, out);
                 continue;
             }
-            let mut set = match pool.pop() {
-                Some(set) => set,
-                None => {
-                    drain_one(ctx, density, &done_rx, &mut inflight, &mut pool, out)?;
-                    pool.pop().expect("drain_one returned a buffer set")
+            // a chunk the previous unit prefetched arrives pre-gathered
+            let (mut set, gathered) = match carry.take() {
+                Some(p) if p.entry == e => (p.set, true),
+                other => {
+                    carry = other;
+                    let set = match pool.pop() {
+                        Some(set) => set,
+                        None => {
+                            drain_one(ctx, density, &done_rx, &mut inflight, &mut pool, out)?;
+                            pool.pop().expect("drain_one returned a buffer set")
+                        }
+                    };
+                    (set, false)
                 }
             };
-            ctx.gather_entry(entry, &mut set, out);
-            job_tx
-                .send(Job { entry: e, set })
-                .map_err(|_| anyhow::anyhow!("pipeline compute stage terminated early"))?;
-            inflight.push_back(e);
-            // steady state: digest chunk k while the compute stage
-            // executes chunk k+1 (which we just gathered and sent)
-            if inflight.len() >= 2 {
-                drain_one(ctx, density, &done_rx, &mut inflight, &mut pool, out)?;
+            if !gathered {
+                ctx.gather_entry(entry, &mut set, out);
+            }
+            match entry.shape {
+                StageShape::Wide => {
+                    // elastic split: memory-bound chunk executes inline on
+                    // the memory stage (overlapping whatever the compute
+                    // companion still has in flight), then digests after
+                    // the older chunks land — entry order intact
+                    ctx.backend.execute_eri_into(
+                        &entry.variant,
+                        &set.scratch.bp,
+                        &set.scratch.bg,
+                        &set.scratch.kp,
+                        &set.scratch.kg,
+                        &mut set.out,
+                    )?;
+                    while !inflight.is_empty() {
+                        drain_one(ctx, density, &done_rx, &mut inflight, &mut pool, out)?;
+                    }
+                    ctx.finish_entry(density, entry, &set, out);
+                    pool.push(set);
+                }
+                StageShape::Split => {
+                    job_tx
+                        .send(Job { entry: e, set })
+                        .map_err(|_| anyhow::anyhow!("pipeline compute stage terminated early"))?;
+                    inflight.push_back(e);
+                    // steady state: digest chunk k while the compute stage
+                    // executes chunk k+1 (which we just gathered and sent)
+                    if inflight.len() >= 2 {
+                        drain_one(ctx, density, &done_rx, &mut inflight, &mut pool, out)?;
+                    }
+                }
+            }
+        }
+        // cross-unit prefetch: claim the worker's next unit now and
+        // gather its first chunk while the compute companion drains this
+        // unit's tail — the gather hides entirely under that execution
+        if let Some(claim) = link.claim.as_mut() {
+            let next_unit = claim();
+            link.claimed = Some(next_unit);
+            if let Some(nu) = next_unit {
+                let pe = ctx.schedule.units[nu].entry_start;
+                if ctx.cached(pe).is_none() {
+                    let mut set = pool.pop().unwrap_or_else(|| bufs.take_set());
+                    ctx.prefetch_entry(&ctx.schedule.entries[pe], &mut set, out);
+                    carry_out = Some(Prefetched { entry: pe, set });
+                }
             }
         }
         while !inflight.is_empty() {
@@ -334,8 +515,14 @@ fn run_staged(
         Ok(())
         // job_tx drops here → compute stage drains and exits → scope joins
     });
+    // an unconsumed carry-in (prefetch raced a cache hit or an error)
+    // returns to the pool rather than leaking
+    if let Some(p) = carry {
+        pool.push(p.set);
+    }
     for set in pool {
         bufs.put_set(set);
     }
+    link.carry = carry_out;
     result
 }

@@ -24,13 +24,26 @@
 //! (`report schedule`), cacheable per entry (stored mode), and — via
 //! [`crate::fock::MergeUnit`]'s wire format — shippable across processes
 //! in a later stage of the scale-out plan.
+//!
+//! Workload Allocator v2 extends the contract per entry: the frozen tuner
+//! rung, the class's intensity prior, and the elastic [`StageShape`]
+//! (memory-bound chunks run inline on the memory stage, compute-bound
+//! ones keep the 1+1 split) are all schedule-build-time decisions, and
+//! the staged executor prefetches the *next unit's* first chunk across
+//! merge-unit boundaries ([`run_unit_stream`]).  Merge units are carved
+//! along block boundaries, so the quad→unit map — and every bit of G —
+//! is invariant under `--ladder fixed|elastic` as well as `--threads`.
 
 mod executor;
 mod schedule;
 mod scratch;
 
-pub use executor::{digest_quads, run_entries, ExecContext, UnitOutput};
-pub use schedule::{ChunkEntry, ChunkSchedule, SchedulePolicy};
+pub use executor::{
+    digest_quads, run_entries, run_unit_stream, ExecContext, Prefetched, UnitOutput,
+};
+pub use schedule::{
+    ChunkEntry, ChunkSchedule, SchedulePolicy, StageShape, DEFAULT_WIDE_OPB_MAX,
+};
 pub use scratch::{BufferSet, CachedChunk, GatherScratch, PipelineBuffers};
 
 /// How a worker walks its merge units.

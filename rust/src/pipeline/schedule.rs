@@ -19,9 +19,40 @@
 
 use std::collections::BTreeMap;
 
+use crate::allocator::{intensity_prior, DEFAULT_WORKING_SET_BYTES};
 use crate::constructor::BlockPlan;
 use crate::fock::{merge_unit_count, unit_ranges, MergeUnit};
 use crate::runtime::{ClassKey, Manifest, Variant};
+
+/// Default OP/B threshold of the elastic stage split: chunks of classes
+/// at or below it are memory-bound enough that shipping them to the
+/// compute companion buys nothing — the memory stage runs them inline
+/// ([`StageShape::Wide`]).  On the synthetic cost model this catches the
+/// all-s classes (OP/B ≈ 0.8 at KPAIR = 9, ≈ 3.5 at 36) and leaves every
+/// class with p/d angular momentum on the split pipeline.
+pub const DEFAULT_WIDE_OPB_MAX: f64 = 4.0;
+
+/// How the staged executor stages one chunk — frozen into the schedule so
+/// staged/lockstep/1-vs-N builds digest identically regardless of shape.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, PartialOrd, Ord)]
+pub enum StageShape {
+    /// memory stage gathers/digests, compute companion executes (1+1)
+    #[default]
+    Split,
+    /// memory-bound chunk: the memory stage also executes it inline,
+    /// leaving the companion free to drain neighboring compute-bound
+    /// chunks (the "wide memory stage" of the elastic split)
+    Wide,
+}
+
+impl StageShape {
+    pub fn name(&self) -> &'static str {
+        match self {
+            StageShape::Split => "split",
+            StageShape::Wide => "wide",
+        }
+    }
+}
 
 /// Knobs the schedule build reads off the engine configuration.
 #[derive(Clone, Copy, Debug)]
@@ -32,8 +63,26 @@ pub struct SchedulePolicy {
     pub fixed_batch: usize,
     /// stored mode: mark entries cacheable up to the budget below
     pub stored: bool,
-    /// stored-mode cache budget in bytes; entries past it stay direct
+    /// stored-mode cache budget in bytes; the least-cost-recompute
+    /// selection spends it on the most expensive entries first
     pub stored_budget_bytes: usize,
+    /// working-set budget of the intensity prior stamped on entries
+    pub working_set_bytes: usize,
+    /// OP/B at or below which a chunk runs [`StageShape::Wide`]
+    pub wide_opb_max: f64,
+}
+
+impl Default for SchedulePolicy {
+    fn default() -> Self {
+        SchedulePolicy {
+            greedy_path: true,
+            fixed_batch: 512,
+            stored: false,
+            stored_budget_bytes: 0,
+            working_set_bytes: DEFAULT_WORKING_SET_BYTES,
+            wide_opb_max: DEFAULT_WIDE_OPB_MAX,
+        }
+    }
 }
 
 /// One chunk of work: a quad range of one block, bound to the kernel
@@ -51,6 +100,13 @@ pub struct ChunkEntry {
     /// the tuner rung frozen for this iteration (what observations are
     /// recorded against — distinct from `variant.batch` on tail chunks)
     pub rung: usize,
+    /// the class's intensity-prior rung under the policy's working-set
+    /// budget (`allocator::intensity_prior`) — carried into
+    /// `TunerObservation` for Fig. 12 reporting
+    pub prior: usize,
+    /// how the staged executor stages this chunk (ladder/intensity
+    /// decision, frozen here so every mode digests identically)
+    pub shape: StageShape,
     /// resolved kernel variant (tail chunks downshift to a snug one)
     pub variant: Variant,
     /// stored mode: whether this entry's values fit the cache budget
@@ -70,6 +126,13 @@ impl ChunkEntry {
     /// Bytes this entry's contracted values occupy when cached.
     pub fn value_bytes(&self) -> usize {
         self.len() * self.variant.ncomp * std::mem::size_of::<f64>()
+    }
+
+    /// Cost-model flops re-evaluating this entry costs per SCF iteration
+    /// when it is NOT cached — the ranking signal of the stored-mode
+    /// least-cost-recompute selection.
+    pub fn recompute_flops(&self) -> f64 {
+        self.len() as f64 * self.variant.flops_per_quad
     }
 }
 
@@ -100,15 +163,21 @@ fn resolve_variant(
             .ok_or_else(|| anyhow::anyhow!("no random-path artifact for class {class:?}"));
     }
     let ladder = manifest.ladder(class);
-    let batch = if remaining < want_batch {
-        ladder
-            .iter()
-            .map(|v| v.batch)
-            .find(|&b| b >= remaining)
-            .unwrap_or(want_batch)
-            .min(want_batch)
+    // snap the requested rung onto the ladder: the tuner always hands an
+    // on-ladder rung, but `--fixed-batch` values need not exist on a
+    // per-class elastic ladder — take the largest rung not above the
+    // request (never silently batch wider than asked), else the bottom
+    let want = ladder
+        .iter()
+        .rev()
+        .map(|v| v.batch)
+        .find(|&b| b <= want_batch)
+        .or_else(|| ladder.first().map(|v| v.batch))
+        .unwrap_or(want_batch);
+    let batch = if remaining < want {
+        ladder.iter().map(|v| v.batch).find(|&b| b >= remaining).unwrap_or(want).min(want)
     } else {
-        want_batch
+        want
     };
     ladder
         .iter()
@@ -144,47 +213,85 @@ impl ChunkSchedule {
         nbf: usize,
     ) -> anyhow::Result<ChunkSchedule> {
         let mut entries = Vec::new();
-        let mut cache_bytes = 0usize;
-        // the budget closes at the FIRST entry that does not fit: a
-        // contiguous cached prefix, not a best-fit packing, so the
-        // cached/direct split is trivially explainable and stable
-        let mut budget_open = policy.stored;
+        // per-class intensity prior, memoized over the build
+        let mut priors: BTreeMap<ClassKey, usize> = BTreeMap::new();
+        // entry index where each listed block's chunks start (+ end cap):
+        // merge units are carved along these boundaries below
+        let mut block_entry_start = Vec::with_capacity(blocks.len() + 1);
         for &bi in blocks {
+            block_entry_start.push(entries.len());
             let block = &plan.blocks[bi];
             let want = batches.get(&block.class).copied().unwrap_or(policy.fixed_batch);
+            let prior = *priors.entry(block.class).or_insert_with(|| {
+                let ladder = manifest.ladder(block.class);
+                if ladder.is_empty() {
+                    return want;
+                }
+                let rungs: Vec<usize> = ladder.iter().map(|v| v.batch).collect();
+                let i = intensity_prior(&rungs, ladder[0].bytes_per_quad, policy.working_set_bytes);
+                rungs[i]
+            });
             let mut offset = 0;
             while offset < block.quads.len() {
                 let remaining = block.quads.len() - offset;
                 let variant =
                     resolve_variant(manifest, block.class, want, remaining, policy.greedy_path)?;
                 let n = remaining.min(variant.batch);
-                let mut entry = ChunkEntry {
+                let opb = variant.flops_per_quad / variant.bytes_per_quad.max(1.0);
+                entries.push(ChunkEntry {
                     entry: entries.len(),
                     block: bi,
                     start: offset,
                     end: offset + n,
                     class: block.class,
                     rung: want,
+                    prior,
+                    shape: if opb <= policy.wide_opb_max {
+                        StageShape::Wide
+                    } else {
+                        StageShape::Split
+                    },
                     variant,
                     cacheable: false,
-                };
-                if budget_open {
-                    if cache_bytes + entry.value_bytes() <= policy.stored_budget_bytes {
-                        cache_bytes += entry.value_bytes();
-                        entry.cacheable = true;
-                    } else {
-                        budget_open = false;
-                    }
-                }
-                entries.push(entry);
+                });
                 offset += n;
             }
         }
+        block_entry_start.push(entries.len());
 
-        let units = unit_ranges(entries.len(), merge_unit_count(nbf))
+        // stored mode: least-cost-recompute selection — spend the byte
+        // budget on the entries whose re-evaluation costs the most flops
+        // per iteration (d classes first), leaving cheap s-class entries
+        // direct.  Ties and the walk order are fixed by entry index, so
+        // the cached/direct split is deterministic for a given schedule.
+        if policy.stored {
+            let mut order: Vec<usize> = (0..entries.len()).collect();
+            order.sort_by(|&a, &b| {
+                entries[b]
+                    .recompute_flops()
+                    .total_cmp(&entries[a].recompute_flops())
+                    .then(a.cmp(&b))
+            });
+            let mut remaining = policy.stored_budget_bytes;
+            for i in order {
+                let bytes = entries[i].value_bytes();
+                if bytes <= remaining {
+                    remaining -= bytes;
+                    entries[i].cacheable = true;
+                }
+            }
+        }
+
+        // merge units partition the BLOCK list, not the entry list: block
+        // boundaries are identical for every batch ladder (the plan knows
+        // nothing of variants), so the quad→unit mapping — and therefore
+        // every bit of G — is invariant under `--ladder fixed|elastic`
+        // and any tuner rung movement, not just under the thread count.
+        let units = unit_ranges(blocks.len(), merge_unit_count(nbf))
             .into_iter()
             .enumerate()
-            .map(|(u, r)| {
+            .map(|(u, br)| {
+                let r = block_entry_start[br.start]..block_entry_start[br.end];
                 let slice = &entries[r.clone()];
                 MergeUnit {
                     unit: u,
@@ -211,8 +318,23 @@ impl ChunkSchedule {
         self.entries.iter().filter(|e| e.cacheable).count()
     }
 
-    /// Human-readable summary: totals plus one wire line per merge unit
-    /// (`report schedule` prints this; the lines are exactly what a
+    /// Per-(class, rung, stage-shape) ladder decisions: entry count, quad
+    /// count and estimated flops — how `report schedule` and the fig12
+    /// bench attribute the iteration's work to allocator choices.
+    pub fn ladder_decisions(&self) -> BTreeMap<(ClassKey, usize, StageShape), (usize, u64, f64)> {
+        let mut out = BTreeMap::new();
+        for e in &self.entries {
+            let slot = out.entry((e.class, e.rung, e.shape)).or_insert((0usize, 0u64, 0.0f64));
+            slot.0 += 1;
+            slot.1 += e.len() as u64;
+            slot.2 += e.recompute_flops();
+        }
+        out
+    }
+
+    /// Human-readable summary: totals, the per-class ladder decisions
+    /// (rung, stage shape, cached entries), plus one wire line per merge
+    /// unit (`report schedule` prints this; the lines are exactly what a
     /// cross-process dispatcher would ship).
     pub fn summary(&self, title: &str) -> String {
         let mut out = format!(
@@ -224,6 +346,28 @@ impl ChunkSchedule {
             self.units.iter().map(|u| u.flops).sum::<f64>(),
             self.units.iter().map(|u| u.bytes).sum::<f64>(),
         );
+        out.push_str(&format!(
+            "  {:<14} {:>6} {:>6} {:>9} {:>10} {:>12}\n",
+            "class", "rung", "stage", "entries", "quads", "est_flops"
+        ));
+        for ((class, rung, shape), (n, quads, flops)) in self.ladder_decisions() {
+            out.push_str(&format!(
+                "  {:<14} {:>6} {:>6} {:>9} {:>10} {:>12.3e}\n",
+                format!("{class:?}"),
+                rung,
+                shape.name(),
+                n,
+                quads,
+                flops
+            ));
+        }
+        if self.cacheable_entries() > 0 {
+            out.push_str(&format!(
+                "  stored cache: {} of {} entries marked (most expensive first)\n",
+                self.cacheable_entries(),
+                self.entries.len()
+            ));
+        }
         for unit in &self.units {
             out.push_str("  ");
             out.push_str(&unit.wire_line());
@@ -239,24 +383,24 @@ mod tests {
     use crate::basis::build_basis;
     use crate::constructor::PairList;
     use crate::molecule::library;
-    use crate::runtime::{EriBackend, NativeBackend};
+    use crate::runtime::{ladder_rungs, EriBackend, LadderMode, NativeBackend};
 
-    fn water_inputs() -> (BlockPlan, Manifest, usize) {
-        let mol = library::by_name("water").unwrap();
-        let basis = build_basis(&mol, "sto-3g").unwrap();
+    fn inputs(molecule: &str, basis_name: &str) -> (BlockPlan, Manifest, usize, usize) {
+        let mol = library::by_name(molecule).unwrap();
+        let basis = build_basis(&mol, basis_name).unwrap();
         let pairs = PairList::build(&basis, 1e-10);
         let plan = BlockPlan::build(&pairs, 1e-10, 32, true);
         let manifest = NativeBackend::with_kpair(basis.max_kpair()).manifest().clone();
-        (plan, manifest, basis.nbf)
+        (plan, manifest, basis.nbf, basis.max_kpair())
+    }
+
+    fn water_inputs() -> (BlockPlan, Manifest, usize) {
+        let (plan, manifest, nbf, _) = inputs("water", "sto-3g");
+        (plan, manifest, nbf)
     }
 
     fn policy() -> SchedulePolicy {
-        SchedulePolicy {
-            greedy_path: true,
-            fixed_batch: 512,
-            stored: false,
-            stored_budget_bytes: 0,
-        }
+        SchedulePolicy { fixed_batch: 512, ..Default::default() }
     }
 
     #[test]
@@ -308,13 +452,21 @@ mod tests {
         let (plan, manifest, nbf) = water_inputs();
         // empty snapshot -> every class wants the 512 rung
         let s = ChunkSchedule::build(&plan, &manifest, &BTreeMap::new(), &policy(), nbf).unwrap();
-        let ladder = [32usize, 128, 512]; // NATIVE_LADDER
         let mut downshifted = 0;
         for e in &s.entries {
+            // the ladder the build consulted comes from the same exported
+            // helper the backend synthesizes with — never hardcoded here,
+            // so elastic per-class ladders cannot drift out of sync
+            let ladder = ladder_rungs(LadderMode::default(), e.class, e.variant.kpair_bra);
+            assert_eq!(manifest.ladder_batches(e.class), ladder, "entry {}", e.entry);
+            // the requested rung snaps to the largest ladder rung not
+            // above it (elastic ladders need not contain 512)
+            let snapped =
+                ladder.iter().rev().copied().find(|&b| b <= e.rung).unwrap_or(ladder[0]);
             let block_len = plan.blocks[e.block].quads.len();
             if e.end < block_len {
-                // non-tail chunks run the tuned rung untouched
-                assert_eq!(e.variant.batch, e.rung, "entry {}", e.entry);
+                // non-tail chunks run the snapped tuned rung untouched
+                assert_eq!(e.variant.batch, snapped, "entry {}", e.entry);
             } else {
                 // tail: smallest rung that holds the remainder, never
                 // above the tuned rung
@@ -322,8 +474,8 @@ mod tests {
                     .iter()
                     .copied()
                     .find(|&b| b >= e.len())
-                    .unwrap_or(e.rung)
-                    .min(e.rung);
+                    .unwrap_or(snapped)
+                    .min(snapped);
                 assert_eq!(e.variant.batch, want, "entry {}", e.entry);
                 if e.variant.batch < e.rung {
                     downshifted += 1;
@@ -334,23 +486,55 @@ mod tests {
     }
 
     #[test]
-    fn stored_budget_marks_a_prefix_and_stops_at_the_first_overflow() {
-        let (plan, manifest, nbf) = water_inputs();
+    fn stored_budget_caches_the_most_expensive_entries_first() {
+        // 6-31G* mixes cheap s chunks with expensive d chunks — the
+        // least-cost-recompute selection must spend the budget on the
+        // latter and leave the former direct
+        let (plan, manifest, nbf, _) = inputs("water", "6-31g*");
         let unlimited = SchedulePolicy { stored: true, stored_budget_bytes: usize::MAX, ..policy() };
         let s = ChunkSchedule::build(&plan, &manifest, &BTreeMap::new(), &unlimited, nbf).unwrap();
         assert_eq!(s.cacheable_entries(), s.entries.len());
 
         let total_bytes: usize = s.entries.iter().map(|e| e.value_bytes()).sum();
-        let tiny = SchedulePolicy { stored: true, stored_budget_bytes: total_bytes / 3, ..policy() };
+        let tiny = SchedulePolicy { stored: true, stored_budget_bytes: total_bytes / 4, ..policy() };
         let t = ChunkSchedule::build(&plan, &manifest, &BTreeMap::new(), &tiny, nbf).unwrap();
         let cached = t.cacheable_entries();
         assert!(cached > 0 && cached < t.entries.len(), "partial cache: {cached}");
-        // contiguous prefix: nothing after the first uncacheable entry
-        let first_direct = t.entries.iter().position(|e| !e.cacheable).unwrap();
-        assert!(t.entries[first_direct..].iter().all(|e| !e.cacheable));
-        let spent: usize =
-            t.entries.iter().filter(|e| e.cacheable).map(|e| e.value_bytes()).sum();
+        let spent: usize = t.entries.iter().filter(|e| e.cacheable).map(|e| e.value_bytes()).sum();
         assert!(spent <= tiny.stored_budget_bytes);
+
+        // the selection is exactly the greedy cost-descending reference
+        let mut order: Vec<usize> = (0..t.entries.len()).collect();
+        order.sort_by(|&a, &b| {
+            t.entries[b]
+                .recompute_flops()
+                .total_cmp(&t.entries[a].recompute_flops())
+                .then(a.cmp(&b))
+        });
+        let mut remaining = tiny.stored_budget_bytes;
+        for i in order {
+            let want = t.entries[i].value_bytes() <= remaining;
+            assert_eq!(t.entries[i].cacheable, want, "entry {i}");
+            if want {
+                remaining -= t.entries[i].value_bytes();
+            }
+        }
+        // a budget sized to exactly the three most expensive entries
+        // caches exactly those three — the most expensive entries first,
+        // nothing else (no slack remains for cheap s chunks to backfill)
+        let top3: Vec<usize> = order[..3].to_vec();
+        let exact = SchedulePolicy {
+            stored: true,
+            stored_budget_bytes: top3.iter().map(|&i| t.entries[i].value_bytes()).sum(),
+            ..policy()
+        };
+        let e3 = ChunkSchedule::build(&plan, &manifest, &BTreeMap::new(), &exact, nbf).unwrap();
+        for (i, e) in e3.entries.iter().enumerate() {
+            assert_eq!(e.cacheable, top3.contains(&i), "entry {i}");
+        }
+        // the most expensive entry of all is a d chunk — exactly what
+        // least-cost-recompute exists to keep cached
+        assert_eq!(e3.entries[order[0]].class.0, 2, "top entry should be a d chunk");
 
         let zero = SchedulePolicy { stored: true, stored_budget_bytes: 0, ..policy() };
         let z = ChunkSchedule::build(&plan, &manifest, &BTreeMap::new(), &zero, nbf).unwrap();
@@ -360,6 +544,95 @@ mod tests {
         let direct = SchedulePolicy { stored: false, stored_budget_bytes: usize::MAX, ..policy() };
         let d = ChunkSchedule::build(&plan, &manifest, &BTreeMap::new(), &direct, nbf).unwrap();
         assert_eq!(d.cacheable_entries(), 0);
+    }
+
+    #[test]
+    fn stage_shape_follows_the_opb_threshold_and_is_frozen_per_entry() {
+        let (plan, manifest, nbf, _) = inputs("water", "6-31g*");
+        let s = ChunkSchedule::build(&plan, &manifest, &BTreeMap::new(), &policy(), nbf).unwrap();
+        let mut wide = 0;
+        let mut split = 0;
+        for e in &s.entries {
+            let opb = e.variant.flops_per_quad / e.variant.bytes_per_quad;
+            let want =
+                if opb <= DEFAULT_WIDE_OPB_MAX { StageShape::Wide } else { StageShape::Split };
+            assert_eq!(e.shape, want, "entry {} class {:?}", e.entry, e.class);
+            match e.shape {
+                StageShape::Wide => wide += 1,
+                StageShape::Split => split += 1,
+            }
+        }
+        // 6-31G* water exercises both shapes: all-s chunks run wide,
+        // d-class chunks stay split
+        assert!(wide > 0 && split > 0, "wide {wide} split {split}");
+        assert!(s
+            .entries
+            .iter()
+            .all(|e| e.class != (0, 0, 0, 0) || e.shape == StageShape::Wide));
+        assert!(s
+            .entries
+            .iter()
+            .all(|e| e.class != (2, 2, 2, 2) || e.shape == StageShape::Split));
+        // threshold 0 forces everything onto the split pipeline
+        let all_split = SchedulePolicy { wide_opb_max: 0.0, ..policy() };
+        let t = ChunkSchedule::build(&plan, &manifest, &BTreeMap::new(), &all_split, nbf).unwrap();
+        assert!(t.entries.iter().all(|e| e.shape == StageShape::Split));
+    }
+
+    #[test]
+    fn merge_units_align_with_block_boundaries_for_every_ladder() {
+        // units partition blocks, so fixed- and elastic-ladder schedules
+        // map every quad to the same unit — the invariant behind the
+        // bitwise `--ladder` A/B guarantee
+        let mol = library::by_name("water").unwrap();
+        let basis = build_basis(&mol, "6-31g*").unwrap();
+        let pairs = PairList::build(&basis, 1e-10);
+        let plan = BlockPlan::build(&pairs, 1e-10, 32, true);
+        let mut unit_block_ranges = Vec::new();
+        for mode in [LadderMode::Elastic, LadderMode::Fixed] {
+            let manifest = NativeBackend::with_ladder(basis.max_kpair(), mode).manifest().clone();
+            let s =
+                ChunkSchedule::build(&plan, &manifest, &BTreeMap::new(), &policy(), basis.nbf)
+                    .unwrap();
+            for u in &s.units {
+                // a unit's entry range starts and ends on block boundaries
+                let first = &s.entries[u.entry_start];
+                assert_eq!(first.start, 0, "unit {} starts mid-block", u.unit);
+                let last = &s.entries[u.entry_end - 1];
+                assert_eq!(last.end, plan.blocks[last.block].quads.len());
+            }
+            unit_block_ranges.push(
+                s.units.iter().map(|u| (u.block_start, u.block_end, u.quads)).collect::<Vec<_>>(),
+            );
+        }
+        assert_eq!(unit_block_ranges[0], unit_block_ranges[1], "ladder changed the unit map");
+    }
+
+    #[test]
+    fn elastic_resolution_is_a_pure_function_of_class_count_and_policy() {
+        // the chunking of (class, quad count) under a policy is fully
+        // reproducible: two independently constructed catalogs and plans
+        // must produce identical entry partitions, priors and shapes
+        let (plan_a, manifest_a, nbf, kpair) = inputs("water", "6-31g*");
+        let (plan_b, manifest_b, _, _) = inputs("water", "6-31g*");
+        let a = ChunkSchedule::build(&plan_a, &manifest_a, &BTreeMap::new(), &policy(), nbf).unwrap();
+        let b = ChunkSchedule::build(&plan_b, &manifest_b, &BTreeMap::new(), &policy(), nbf).unwrap();
+        assert_eq!(a, b);
+        // and per-class chunk widths depend only on (class, remaining):
+        // replaying the resolve loop over the exported ladder reproduces
+        // every entry's batch without consulting the schedule
+        for e in &a.entries {
+            let ladder = ladder_rungs(LadderMode::default(), e.class, kpair);
+            let remaining = plan_a.blocks[e.block].quads.len() - e.start;
+            let snapped =
+                ladder.iter().rev().copied().find(|&x| x <= e.rung).unwrap_or(ladder[0]);
+            let want = if remaining < snapped {
+                ladder.iter().copied().find(|&x| x >= remaining).unwrap_or(snapped).min(snapped)
+            } else {
+                snapped
+            };
+            assert_eq!(e.variant.batch, want, "entry {}", e.entry);
+        }
     }
 
     #[test]

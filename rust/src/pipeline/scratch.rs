@@ -89,8 +89,10 @@ pub struct BufferSet {
     pub out: EriOutput,
 }
 
-/// Per-worker buffer pool, kept across merge units (one `Default` per
-/// worker via `run_units_ordered`'s scratch state).
+/// Per-worker buffer pool, kept across merge units (one per
+/// `run_unit_stream` worker).  Steady state holds up to three sets under
+/// the staged pipeline: two in rotation plus one carrying a cross-unit
+/// prefetch.
 #[derive(Default)]
 pub struct PipelineBuffers {
     sets: Vec<BufferSet>,

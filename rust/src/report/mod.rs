@@ -161,11 +161,15 @@ mod tests {
     }
 
     #[test]
-    fn schedule_summary_prints_units_for_water() {
+    fn schedule_summary_prints_units_and_ladder_decisions_for_water() {
         let t = schedule_summary("water", "sto-3g", 1e-10).unwrap();
         assert!(t.contains("water / sto-3g"), "{t}");
         assert!(t.contains("merge units"), "{t}");
         assert!(t.contains("unit 0 entries"), "{t}");
+        // the ladder-decision table attributes entries to rung + stage
+        assert!(t.contains("rung"), "{t}");
+        assert!(t.contains("stage"), "{t}");
+        assert!(t.contains("wide") || t.contains("split"), "{t}");
         assert!(schedule_summary("unobtainium", "sto-3g", 1e-10).is_err());
     }
 }

@@ -25,7 +25,9 @@ mod pjrt;
 
 use std::path::Path;
 
-pub use native::{EriEvalStrategy, NativeBackend};
+pub use native::{
+    class_cost_model, ladder_rungs, EriEvalStrategy, LadderMode, NativeBackend, FIXED_LADDER,
+};
 #[cfg(feature = "pjrt")]
 pub use pjrt::PjrtBackend;
 
@@ -154,29 +156,34 @@ impl BackendKind {
 /// Construct a backend.  `artifact_dir` is only consulted by the PJRT
 /// backend; the native backend carries its own synthetic manifest, sized
 /// for `kpair` primitive products per pair row (the target basis's
-/// `BasisSet::max_kpair()` — 9 for STO-3G, 36 for 6-31G*).  The AOT
-/// artifacts are compiled at a fixed width, so `kpair` does not apply to
-/// the PJRT path.  `workers` is the Fock worker count the backend will be
-/// driven from: the PJRT backend sizes its client pool to it so the
-/// artifact path does not serialize concurrent executions behind one
-/// mutex (the native backend is lock-free on the execute path and
-/// ignores it).
+/// `BasisSet::max_kpair()` — 9 for STO-3G, 36 for 6-31G*) with its batch
+/// ladders generated per `ladder` ([`LadderMode`]).  The AOT artifacts
+/// are compiled at fixed widths and rungs, so neither `kpair` nor
+/// `ladder` applies to the PJRT path.  `workers` is the Fock worker count
+/// the backend will be driven from: the PJRT backend sizes its client
+/// pool to it so the artifact path does not serialize concurrent
+/// executions behind one mutex (the native backend is lock-free on the
+/// execute path and ignores it).
 pub fn create_backend(
     kind: BackendKind,
     artifact_dir: &Path,
     kpair: usize,
     workers: usize,
+    ladder: LadderMode,
 ) -> anyhow::Result<Box<dyn EriBackend>> {
     match kind {
         BackendKind::Native => {
             let _ = workers;
-            Ok(Box::new(NativeBackend::with_kpair(kpair)))
+            Ok(Box::new(NativeBackend::with_ladder(kpair, ladder)))
         }
         #[cfg(feature = "pjrt")]
-        BackendKind::Pjrt => Ok(Box::new(PjrtBackend::with_pool(artifact_dir, workers)?)),
+        BackendKind::Pjrt => {
+            let _ = ladder;
+            Ok(Box::new(PjrtBackend::with_pool(artifact_dir, workers)?))
+        }
         #[cfg(not(feature = "pjrt"))]
         BackendKind::Pjrt => {
-            let _ = (artifact_dir, workers);
+            let _ = (artifact_dir, workers, ladder);
             anyhow::bail!(
                 "backend `pjrt` requires building with `--features pjrt` \
                  (and a real xla-rs crate in place of rust/vendor/xla)"
@@ -199,7 +206,7 @@ mod tests {
 
     #[test]
     fn native_backend_is_always_constructible() {
-        let b = create_backend(BackendKind::Native, Path::new("/nonexistent"), 9, 1).unwrap();
+        let b = create_backend(BackendKind::Native, Path::new("/nonexistent"), 9, 1, LadderMode::default()).unwrap();
         assert_eq!(b.name(), "native");
         assert!(!b.manifest().variants.is_empty());
     }
@@ -207,13 +214,13 @@ mod tests {
     #[cfg(not(feature = "pjrt"))]
     #[test]
     fn pjrt_backend_errors_cleanly_without_the_feature() {
-        let err = create_backend(BackendKind::Pjrt, Path::new("/nonexistent"), 9, 4).unwrap_err();
+        let err = create_backend(BackendKind::Pjrt, Path::new("/nonexistent"), 9, 4, LadderMode::default()).unwrap_err();
         assert!(err.to_string().contains("pjrt"), "{err}");
     }
 
     #[test]
     fn execute_eri_into_matches_execute_eri() {
-        let b = create_backend(BackendKind::Native, Path::new("/nonexistent"), 9, 1).unwrap();
+        let b = create_backend(BackendKind::Native, Path::new("/nonexistent"), 9, 1, LadderMode::default()).unwrap();
         let variant = b.manifest().ladder((0, 0, 0, 0))[0].clone();
         let batch = variant.batch;
         let (kb, kk) = (variant.kpair_bra, variant.kpair_ket);

@@ -42,11 +42,93 @@ use super::{EriBackend, EriExecution, EriOutput, RuntimeStats};
 /// variant" error at engine construction.
 const NATIVE_LMAX: u8 = 2;
 
-/// Batch ladder the Workload Allocator climbs.  The native evaluator
-/// skips padding rows almost for free, so large combinations mostly
-/// amortize per-chunk dispatch/bookkeeping — same shape, smaller stakes
-/// than the PJRT path.
-const NATIVE_LADDER: [usize; 3] = [32, 128, 512];
+/// The historical one-size batch ladder, sized for s/p classes back when
+/// `NATIVE_LMAX` was 1.  Kept as the `--ladder fixed` A/B baseline and as
+/// the rung set external (PJRT) manifests were compiled against.
+pub const FIXED_LADDER: [usize; 3] = [32, 128, 512];
+
+/// Cost-model flops one elastic-ladder chunk should hold at its top rung:
+/// the constant-work-per-chunk target that makes cheap (memory-bound)
+/// classes batch wide and expensive (compute-bound) classes batch narrow.
+const ELASTIC_CHUNK_FLOPS: f64 = 1.0e8;
+/// Elastic rung bounds: no chunk smaller than 8 quads (dispatch overhead
+/// would dominate) and none wider than 2048 (gather buffers stay modest).
+const ELASTIC_MIN_BATCH: usize = 8;
+const ELASTIC_MAX_BATCH: usize = 2048;
+
+/// How the synthetic catalog sizes each class's batch ladder.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum LadderMode {
+    /// per-class rungs derived from the class's operational intensity
+    /// (see [`ladder_rungs`]) — the Workload Allocator v2 default
+    #[default]
+    Elastic,
+    /// one 32/128/512 ladder for every class (the A/B baseline)
+    Fixed,
+}
+
+impl LadderMode {
+    pub fn parse(name: &str) -> anyhow::Result<LadderMode> {
+        match name {
+            "elastic" => Ok(LadderMode::Elastic),
+            "fixed" => Ok(LadderMode::Fixed),
+            other => anyhow::bail!("unknown ladder mode {other} (available: elastic, fixed)"),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            LadderMode::Elastic => "elastic",
+            LadderMode::Fixed => "fixed",
+        }
+    }
+}
+
+/// The synthetic catalog's cost model for one ERI class at pair-row width
+/// `kpair`: (flops per quadruple, bytes per quadruple).  Work grows with
+/// the component count times the quartet Hermite volume; bytes stay near
+/// the fixed pair-row size — so OP/B rises with total angular momentum
+/// (the Fig. 6 trend the Graph Compiler's model shows).  Single source of
+/// truth for manifest synthesis, ladder generation and tests.
+pub fn class_cost_model(class: ClassKey, kpair: usize) -> (f64, f64) {
+    let ncomp = ncart(class.0) * ncart(class.1) * ncart(class.2) * ncart(class.3);
+    let ltot = (class.0 + class.1 + class.2 + class.3) as usize;
+    // Hermite expansion volumes (3-D tetrahedral counts)
+    let nherm = |l: usize| (l + 1) * (l + 2) * (l + 3) / 6;
+    let flops_per_quad = (kpair * kpair * ncomp * nherm(ltot) * 8) as f64;
+    let bytes_per_quad = (8 * (2 * (kpair * 5 + 6) + ncomp)) as f64;
+    (flops_per_quad, bytes_per_quad)
+}
+
+/// Round to the nearest power of two (≥ 1).
+fn pow2_round(x: f64) -> usize {
+    1usize << x.max(1.0).log2().round() as u32
+}
+
+/// The batch ladder of one class — a pure function of (mode, class,
+/// kpair), exported so tests and benches derive rung expectations from
+/// the same source the manifest does instead of hardcoding `[32,128,512]`.
+///
+/// Elastic mode targets roughly constant cost-model work per chunk: the
+/// top rung is `ELASTIC_CHUNK_FLOPS / flops_per_quad` rounded to a power
+/// of two and clamped to `[32, 2048]`, the bottom rung sits 4–16× below
+/// (never under 8), and the middle rung is their geometric mean — always
+/// exactly 3 ascending rungs, so `ClassTuner` exploration is unchanged.
+/// Memory-bound s classes land on wide ladders (…2048), compute-bound dd
+/// classes on narrow ones (8…).
+pub fn ladder_rungs(mode: LadderMode, class: ClassKey, kpair: usize) -> Vec<usize> {
+    match mode {
+        LadderMode::Fixed => FIXED_LADDER.to_vec(),
+        LadderMode::Elastic => {
+            let (flops, _) = class_cost_model(class, kpair);
+            let top = pow2_round(ELASTIC_CHUNK_FLOPS / flops)
+                .clamp(4 * ELASTIC_MIN_BATCH, ELASTIC_MAX_BATCH);
+            let bottom = (top / 16).clamp(ELASTIC_MIN_BATCH, top / 4);
+            let mid = pow2_round(((bottom * top) as f64).sqrt());
+            vec![bottom, mid, top]
+        }
+    }
+}
 
 /// How the native backend evaluates a chunk (see module docs).
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
@@ -72,6 +154,7 @@ impl EriEvalStrategy {
 pub struct NativeBackend {
     manifest: Manifest,
     strategy: EriEvalStrategy,
+    ladder: LadderMode,
     stats: Mutex<RuntimeStats>,
 }
 
@@ -95,16 +178,34 @@ impl NativeBackend {
         Self::with_options(kpair, EriEvalStrategy::default())
     }
 
+    /// Catalog with a pinned ladder mode (`--ladder fixed|elastic`).
+    pub fn with_ladder(kpair: usize, ladder: LadderMode) -> NativeBackend {
+        Self::with_all_options(kpair, EriEvalStrategy::default(), ladder)
+    }
+
     pub fn with_options(kpair: usize, strategy: EriEvalStrategy) -> NativeBackend {
+        Self::with_all_options(kpair, strategy, LadderMode::default())
+    }
+
+    pub fn with_all_options(
+        kpair: usize,
+        strategy: EriEvalStrategy,
+        ladder: LadderMode,
+    ) -> NativeBackend {
         NativeBackend {
-            manifest: synthetic_manifest(NATIVE_LMAX, kpair.max(1)),
+            manifest: synthetic_manifest(NATIVE_LMAX, kpair.max(1), ladder),
             strategy,
+            ladder,
             stats: Mutex::new(RuntimeStats::default()),
         }
     }
 
     pub fn strategy(&self) -> EriEvalStrategy {
         self.strategy
+    }
+
+    pub fn ladder_mode(&self) -> LadderMode {
+        self.ladder
     }
 }
 
@@ -526,17 +627,15 @@ fn ket_hermite_sum(
 }
 
 /// Build the synthetic variant catalog: every canonical ERI class up to
-/// `lmax` per shell, a greedy batch ladder per class, plus one
-/// "random"-mode variant so the Graph-Compiler ablation keeps a target
-/// (natively it executes the same math — the ablation is a no-op here,
-/// which the ablation benches document).  `kpair` is the pair-row width
-/// the variants accept (`BasisSet::max_kpair()` of the target basis).
-///
-/// flops/bytes per quadruple follow the same cost-model shape as the
-/// Graph Compiler's (python/compile cost model): work grows with the
-/// Hermite expansion volume, bytes stay near the fixed pair-row size, so
-/// OP/B rises with total angular momentum (the Fig. 6 trend).
-fn synthetic_manifest(lmax: u8, kpair: usize) -> Manifest {
+/// `lmax` per shell, a greedy batch ladder per class ([`ladder_rungs`] —
+/// one-size under `LadderMode::Fixed`, intensity-derived under
+/// `Elastic`), plus one "random"-mode variant so the Graph-Compiler
+/// ablation keeps a target (natively it executes the same math — the
+/// ablation is a no-op here, which the ablation benches document).
+/// `kpair` is the pair-row width the variants accept
+/// (`BasisSet::max_kpair()` of the target basis).  flops/bytes per
+/// quadruple come from [`class_cost_model`].
+fn synthetic_manifest(lmax: u8, kpair: usize, ladder: LadderMode) -> Manifest {
     let mut pair_classes: Vec<(u8, u8)> = Vec::new();
     for la in 0..=lmax {
         for lb in 0..=la {
@@ -555,12 +654,7 @@ fn synthetic_manifest(lmax: u8, kpair: usize) -> Manifest {
             let nherm = |l: usize| (l + 1) * (l + 2) * (l + 3) / 6;
             let herm_bra = nherm((bra.0 + bra.1) as usize);
             let herm_ket = nherm((ket.0 + ket.1) as usize);
-            // cost model: work per quadruple grows with the component count
-            // times the quartet Hermite volume, bytes stay near the fixed
-            // pair-row size — OP/B rises with total angular momentum (the
-            // Fig. 6 trend the Graph Compiler's model shows)
-            let flops_per_quad = (kpair * kpair * ncomp * nherm(ltot) * 8) as f64;
-            let bytes_per_quad = (8 * (2 * (kpair * 5 + 6) + ncomp)) as f64;
+            let (flops_per_quad, bytes_per_quad) = class_cost_model(class, kpair);
             let letters = class_letters(class);
             let mut push = |batch: usize, mode: &str, tag: &str| {
                 let name = format!("native_{letters}{tag}_b{batch}");
@@ -581,10 +675,11 @@ fn synthetic_manifest(lmax: u8, kpair: usize) -> Manifest {
                     file: PathBuf::from(format!("builtin:{name}")),
                 });
             };
-            for batch in NATIVE_LADDER {
+            let rungs = ladder_rungs(ladder, class, kpair);
+            for &batch in &rungs {
                 push(batch, "greedy", "");
             }
-            push(NATIVE_LADDER[NATIVE_LADDER.len() - 1], "random", "_random");
+            push(rungs[rungs.len() - 1], "random", "_random");
         }
     }
     Manifest::from_variants(variants, std::path::Path::new("builtin:native"))
@@ -600,41 +695,87 @@ mod tests {
 
     #[test]
     fn synthetic_manifest_covers_sto3g_and_d_classes_with_ladders() {
-        let backend = NativeBackend::new();
-        let m = backend.manifest();
-        for class in [
-            (0, 0, 0, 0),
-            (1, 0, 0, 0),
-            (1, 0, 1, 0),
-            (1, 1, 0, 0),
-            (1, 1, 1, 1),
-            (2, 0, 0, 0),
-            (2, 1, 1, 0),
-            (2, 2, 2, 1),
-            (2, 2, 2, 2),
-        ] {
-            let ladder = m.ladder(class);
-            assert_eq!(ladder.len(), NATIVE_LADDER.len(), "class {class:?}");
-            assert!(m.random_variant(class).is_some(), "class {class:?}");
+        for mode in [LadderMode::Elastic, LadderMode::Fixed] {
+            let backend = NativeBackend::with_ladder(KPAIR, mode);
+            let m = backend.manifest();
+            for class in [
+                (0, 0, 0, 0),
+                (1, 0, 0, 0),
+                (1, 0, 1, 0),
+                (1, 1, 0, 0),
+                (1, 1, 1, 1),
+                (2, 0, 0, 0),
+                (2, 1, 1, 0),
+                (2, 2, 2, 1),
+                (2, 2, 2, 2),
+            ] {
+                let ladder = m.ladder(class);
+                assert_eq!(
+                    ladder.iter().map(|v| v.batch).collect::<Vec<_>>(),
+                    ladder_rungs(mode, class, KPAIR),
+                    "{} ladder for class {class:?}",
+                    mode.name()
+                );
+                assert!(m.random_variant(class).is_some(), "class {class:?}");
+            }
+            // non-canonical and beyond-catalog classes are absent
+            assert!(m.ladder((0, 1, 0, 0)).is_empty());
+            assert!(m.ladder((3, 0, 0, 0)).is_empty());
+            // OP/B trend (Fig. 6): the best OP/B strictly rises with total
+            // angular momentum (within one L tier, smaller classes may sit
+            // below bigger same-L classes — the trend is across tiers)
+            let mut best_per_l = std::collections::BTreeMap::<u8, f64>::new();
+            for class in m.classes() {
+                let v = m.ladder(class)[0];
+                let l = class.0 + class.1 + class.2 + class.3;
+                let opb = v.flops_per_quad / v.bytes_per_quad;
+                let e = best_per_l.entry(l).or_insert(0.0);
+                *e = e.max(opb);
+            }
+            let best: Vec<f64> = best_per_l.values().copied().collect();
+            for w in best.windows(2) {
+                assert!(w[1] > w[0], "per-L best OP/B not rising: {best:?}");
+            }
         }
-        // non-canonical and beyond-catalog classes are absent
-        assert!(m.ladder((0, 1, 0, 0)).is_empty());
-        assert!(m.ladder((3, 0, 0, 0)).is_empty());
-        // OP/B trend (Fig. 6): the best OP/B strictly rises with total
-        // angular momentum (within one L tier, smaller classes may sit
-        // below bigger same-L classes — the trend is across tiers)
-        let mut best_per_l = std::collections::BTreeMap::<u8, f64>::new();
-        for class in m.classes() {
-            let v = m.ladder(class)[0];
-            let l = class.0 + class.1 + class.2 + class.3;
-            let opb = v.flops_per_quad / v.bytes_per_quad;
-            let e = best_per_l.entry(l).or_insert(0.0);
-            *e = e.max(opb);
+    }
+
+    #[test]
+    fn elastic_ladders_follow_operational_intensity() {
+        for kpair in [KPAIR, 36] {
+            for mode in [LadderMode::Elastic, LadderMode::Fixed] {
+                // pure function of (mode, class, kpair): stable across calls
+                for class in [(0, 0, 0, 0), (2, 2, 2, 2)] {
+                    assert_eq!(
+                        ladder_rungs(mode, class, kpair),
+                        ladder_rungs(mode, class, kpair)
+                    );
+                }
+            }
+            let s = ladder_rungs(LadderMode::Elastic, (0, 0, 0, 0), kpair);
+            let dd = ladder_rungs(LadderMode::Elastic, (2, 2, 2, 2), kpair);
+            for rungs in [&s, &dd] {
+                assert!(rungs.len() >= 3, "tuner exploration needs ≥3 rungs: {rungs:?}");
+                assert!(rungs.windows(2).all(|w| w[0] < w[1]), "ascending: {rungs:?}");
+                assert!(rungs[0] >= ELASTIC_MIN_BATCH && rungs[2] <= ELASTIC_MAX_BATCH);
+            }
+            // memory-bound s classes batch wide, compute-bound dd narrow
+            assert_eq!(*s.last().unwrap(), ELASTIC_MAX_BATCH, "ssss tops out wide: {s:?}");
+            assert_eq!(dd[0], ELASTIC_MIN_BATCH, "dddd bottoms out narrow: {dd:?}");
+            assert!(dd.last().unwrap() < s.last().unwrap());
         }
-        let best: Vec<f64> = best_per_l.values().copied().collect();
-        for w in best.windows(2) {
-            assert!(w[1] > w[0], "per-L best OP/B not rising: {best:?}");
-        }
+    }
+
+    #[test]
+    fn ladder_mode_parses_and_rejects() {
+        assert_eq!(LadderMode::parse("elastic").unwrap(), LadderMode::Elastic);
+        assert_eq!(LadderMode::parse("fixed").unwrap(), LadderMode::Fixed);
+        assert!(LadderMode::parse("rigid").is_err());
+        assert_eq!(LadderMode::default(), LadderMode::Elastic);
+        assert_eq!(LadderMode::Fixed.name(), "fixed");
+        assert_eq!(
+            NativeBackend::with_ladder(KPAIR, LadderMode::Fixed).ladder_mode(),
+            LadderMode::Fixed
+        );
     }
 
     #[test]

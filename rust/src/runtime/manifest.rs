@@ -118,6 +118,13 @@ impl Manifest {
         out
     }
 
+    /// Just the batch sizes of a class's ladder, ascending — what the
+    /// Workload Allocator's `ClassTuner` climbs and the schedule's tail
+    /// downshift searches.
+    pub fn ladder_batches(&self, class: ClassKey) -> Vec<usize> {
+        self.ladder(class).iter().map(|v| v.batch).collect()
+    }
+
     /// The random-path ablation variant of a class, if exported.
     pub fn random_variant(&self, class: ClassKey) -> Option<&Variant> {
         self.by_class
@@ -154,6 +161,8 @@ eri_psss_b32 1 0 0 0 32 9 9 3 1 4 0 9 1500.0 820.0 greedy eri_psss_b32.hlo.txt
         let ladder = m.ladder((0, 0, 0, 0));
         assert_eq!(ladder.len(), 2);
         assert!(ladder[0].batch < ladder[1].batch);
+        assert_eq!(m.ladder_batches((0, 0, 0, 0)), vec![32, 512]);
+        assert!(m.ladder_batches((7, 7, 7, 7)).is_empty());
         assert!(m.random_variant((0, 0, 0, 0)).is_some());
         assert!(m.random_variant((1, 0, 0, 0)).is_none());
         assert_eq!(m.classes().len(), 2);

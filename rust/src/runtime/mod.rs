@@ -12,8 +12,8 @@ pub(crate) mod client;
 mod manifest;
 
 pub use backend::{
-    create_backend, BackendKind, EriBackend, EriEvalStrategy, EriExecution, EriOutput,
-    NativeBackend, RuntimeStats,
+    class_cost_model, create_backend, ladder_rungs, BackendKind, EriBackend, EriEvalStrategy,
+    EriExecution, EriOutput, LadderMode, NativeBackend, RuntimeStats, FIXED_LADDER,
 };
 #[cfg(feature = "pjrt")]
 pub use backend::PjrtBackend;

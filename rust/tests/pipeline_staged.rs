@@ -19,7 +19,9 @@ use matryoshka::engines::{MatryoshkaConfig, MatryoshkaEngine};
 use matryoshka::linalg::Matrix;
 use matryoshka::molecule::library;
 use matryoshka::pipeline::PipelineMode;
-use matryoshka::runtime::{EriBackend, EriExecution, Manifest, NativeBackend, RuntimeStats, Variant};
+use matryoshka::runtime::{
+    EriBackend, EriExecution, LadderMode, Manifest, NativeBackend, RuntimeStats, Variant,
+};
 use matryoshka::scf::{run_rhf, FockEngine, ScfOptions};
 
 fn test_density(n: usize) -> Matrix {
@@ -90,11 +92,17 @@ fn schedule_is_pure_and_tail_downshift_is_decided_at_build_time() {
     let b = e.build_schedule().unwrap();
     assert_eq!(a, b, "same engine state must produce the identical schedule");
 
-    // downshift check: pin the rung at 512 (autotune starts at the
-    // ladder bottom, where no tail can downshift); water's blocks all
-    // hold ≤ ~55 quads, so every entry is a tail that must snap to a
-    // snug variant below the 512 rung — decided at build time
-    let pinned = MatryoshkaConfig { autotune: false, fixed_batch: 512, ..Default::default() };
+    // downshift check: pin the rung at 512 on the FIXED ladder (elastic
+    // ladders differ per class; the fixed 32/128/512 one keeps this
+    // scenario exact).  Water's blocks all hold ≤ ~55 quads, so every
+    // entry is a tail that must snap to a snug variant below the 512
+    // rung — decided at build time
+    let pinned = MatryoshkaConfig {
+        autotune: false,
+        fixed_batch: 512,
+        ladder: LadderMode::Fixed,
+        ..Default::default()
+    };
     let w = engine("water", "sto-3g", pinned);
     let s = w.build_schedule().unwrap();
     let mut tails_downshifted = 0;
@@ -109,6 +117,95 @@ fn schedule_is_pure_and_tail_downshift_is_decided_at_build_time() {
         }
     }
     assert!(tails_downshifted > 0, "no tail chunk exercised the downshift");
+}
+
+#[test]
+fn g_is_bitwise_identical_across_ladder_modes_pipelines_and_threads() {
+    // the ladder A/B guarantee: merge units are carved along block
+    // boundaries and per-quad evaluation is independent of its chunk, so
+    // fixed and elastic ladders — despite chunking the work completely
+    // differently — produce the same G, bit for bit, under either
+    // pipeline and any thread count
+    let mol = library::by_name("water").unwrap();
+    let basis = build_basis(&mol, "6-31g*").unwrap();
+    let d = test_density(basis.nbf);
+    let build = |ladder: LadderMode, pipeline: PipelineMode, threads: usize| {
+        let config = MatryoshkaConfig { ladder, pipeline, threads, ..Default::default() };
+        engine("water", "6-31g*", config).two_electron(&d).unwrap()
+    };
+    let reference = build(LadderMode::Elastic, PipelineMode::Staged, 1);
+    for (ladder, pipeline, threads) in [
+        (LadderMode::Elastic, PipelineMode::Staged, 4),
+        (LadderMode::Elastic, PipelineMode::Lockstep, 1),
+        (LadderMode::Fixed, PipelineMode::Staged, 4),
+        (LadderMode::Fixed, PipelineMode::Lockstep, 2),
+        (LadderMode::Fixed, PipelineMode::Staged, 1),
+    ] {
+        let g = build(ladder, pipeline, threads);
+        assert_eq!(
+            reference.data(),
+            g.data(),
+            "{} ladder / {} pipeline / {threads} threads diverged",
+            ladder.name(),
+            pipeline.name()
+        );
+    }
+}
+
+#[test]
+fn scf_energy_is_identical_across_ladder_modes() {
+    let mol = library::by_name("water").unwrap();
+    let basis = build_basis(&mol, "6-31g*").unwrap();
+    let opts = ScfOptions::default();
+    let run = |ladder: LadderMode| {
+        let config = MatryoshkaConfig { ladder, ..Default::default() };
+        let mut e = engine("water", "6-31g*", config);
+        let res = run_rhf(&mol, &basis, &mut e, &opts).unwrap();
+        assert!(res.converged);
+        res.energy
+    };
+    let e_elastic = run(LadderMode::Elastic);
+    let e_fixed = run(LadderMode::Fixed);
+    // every Fock build is bitwise ladder-invariant, so the whole SCF
+    // trajectory is too — exact equality, far inside the 1e-8 window
+    assert_eq!(e_elastic, e_fixed, "{e_elastic} vs {e_fixed}");
+}
+
+#[test]
+fn staged_metrics_attribute_stage_shapes_rungs_and_prefetch() {
+    // 6-31G* mixes memory-bound s chunks (wide) with compute-bound d
+    // chunks (split); a staged multi-unit build must attribute both,
+    // record per-rung stats, and account cross-unit prefetch gathers
+    let mol = library::by_name("water").unwrap();
+    let basis = build_basis(&mol, "6-31g*").unwrap();
+    let d = test_density(basis.nbf);
+    let config = MatryoshkaConfig { threads: 2, ..Default::default() };
+    let mut e = engine("water", "6-31g*", config);
+    let schedule = e.build_schedule().unwrap();
+    assert!(schedule.units.len() > 1, "need unit boundaries to prefetch across");
+    e.two_electron(&d).unwrap();
+    let m = &e.metrics;
+    assert!(m.wide_chunks > 0, "s chunks should stage wide");
+    assert!(m.split_chunks > 0, "d chunks should stage split");
+    assert_eq!(m.wide_chunks + m.split_chunks, schedule.entries.len() as u64);
+    assert!(!m.per_rung.is_empty());
+    let rung_quads: u64 = m.per_rung.values().map(|s| s.real_quads).sum();
+    assert_eq!(rung_quads, m.total_real_quads(), "rung attribution must cover every quad");
+    assert!(
+        m.prefetch_gather_seconds >= 0.0 && m.prefetch_gather_seconds <= m.gather_seconds,
+        "prefetch time is a subset of gather time"
+    );
+
+    // lockstep never prefetches across units (the shape counters still
+    // tally — they are schedule properties, not executor decisions)
+    let lockstep = MatryoshkaConfig {
+        pipeline: PipelineMode::Lockstep,
+        threads: 2,
+        ..Default::default()
+    };
+    let mut l = engine("water", "6-31g*", lockstep);
+    l.two_electron(&d).unwrap();
+    assert_eq!(l.metrics.prefetch_gather_seconds, 0.0);
 }
 
 /// Cache footprint (bytes) of a full stored-mode schedule for water —
