@@ -1,0 +1,179 @@
+//! Per-core cache-hierarchy probe for the intensity prior's working-set
+//! budget (`--working-set-kb auto`).
+//!
+//! The Workload Allocator seeds each class tuner on the largest batch
+//! rung whose gather+value footprint fits a working-set budget.  The
+//! default is an L2-ish 4 MiB constant; on Linux the real per-core
+//! hierarchy is readable from
+//! `/sys/devices/system/cpu/cpu0/cache/index*/{level,type,size}`, so
+//! `auto` probes it: the budget becomes the largest *per-core* data or
+//! unified cache of level ≤ 2 (L2 when present, else L1d).  L3 is
+//! deliberately excluded — it is shared across cores, and N Fock workers
+//! each sizing their batches to the whole L3 would thrash it.
+//!
+//! When sysfs is absent (non-Linux, containers masking /sys) the caller
+//! falls back to [`crate::allocator::DEFAULT_WORKING_SET_BYTES`].
+
+use std::path::Path;
+
+/// One probed cache level.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CacheProbe {
+    /// cache level (1, 2, ...)
+    pub level: u32,
+    pub bytes: usize,
+}
+
+/// Clamp window for a probed budget: below 64 KiB the ladders would
+/// degenerate to their bottom rungs, far above 64 MiB the "budget" stops
+/// budgeting anything.
+const PROBE_MIN_BYTES: usize = 64 << 10;
+const PROBE_MAX_BYTES: usize = 64 << 20;
+
+/// Parse a sysfs cache size string: `"32K"`, `"1024K"`, `"8M"`, plain
+/// bytes, optionally newline-terminated.
+fn parse_cache_size(raw: &str) -> Option<usize> {
+    let s = raw.trim();
+    if s.is_empty() {
+        return None;
+    }
+    let (digits, mult) = match s.as_bytes()[s.len() - 1] {
+        b'K' | b'k' => (&s[..s.len() - 1], 1usize << 10),
+        b'M' | b'm' => (&s[..s.len() - 1], 1usize << 20),
+        b'G' | b'g' => (&s[..s.len() - 1], 1usize << 30),
+        _ => (s, 1usize),
+    };
+    let n: usize = digits.parse().ok()?;
+    n.checked_mul(mult)
+}
+
+fn read_trimmed(path: &Path) -> Option<String> {
+    std::fs::read_to_string(path).ok().map(|s| s.trim().to_string())
+}
+
+/// Probe one cpu's `cache/` sysfs directory (`index*` subdirs).  Returns
+/// the chosen per-core budget: the largest data/unified cache of level
+/// ≤ 2, clamped to a sane window; `None` when nothing usable is found.
+pub fn working_set_from_cache_dir(dir: &Path) -> Option<CacheProbe> {
+    let entries = std::fs::read_dir(dir).ok()?;
+    let mut best: Option<CacheProbe> = None;
+    for entry in entries.flatten() {
+        let name = entry.file_name();
+        if !name.to_string_lossy().starts_with("index") {
+            continue;
+        }
+        let idx = entry.path();
+        let Some(level) = read_trimmed(&idx.join("level")).and_then(|s| s.parse::<u32>().ok())
+        else {
+            continue;
+        };
+        let Some(ty) = read_trimmed(&idx.join("type")) else { continue };
+        // instruction caches hold no pair data; L3+ is shared across
+        // cores (see module docs)
+        if level > 2 || !(ty == "Data" || ty == "Unified") {
+            continue;
+        }
+        let Some(bytes) = read_trimmed(&idx.join("size")).and_then(|s| parse_cache_size(&s))
+        else {
+            continue;
+        };
+        let candidate = CacheProbe { level, bytes };
+        best = match best {
+            None => Some(candidate),
+            // prefer the higher level; same level keeps the larger size
+            Some(b) if (candidate.level, candidate.bytes) > (b.level, b.bytes) => Some(candidate),
+            keep => keep,
+        };
+    }
+    best.map(|p| CacheProbe {
+        level: p.level,
+        bytes: p.bytes.clamp(PROBE_MIN_BYTES, PROBE_MAX_BYTES),
+    })
+}
+
+/// Probe the real machine (`cpu0` stands in for every core — the fleet
+/// this targets is homogeneous per host).  `None` when sysfs is absent.
+pub fn probe_working_set() -> Option<CacheProbe> {
+    working_set_from_cache_dir(Path::new("/sys/devices/system/cpu/cpu0/cache"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::fs;
+
+    fn mkcache(root: &Path, index: &str, level: &str, ty: &str, size: &str) {
+        let d = root.join(index);
+        fs::create_dir_all(&d).unwrap();
+        fs::write(d.join("level"), format!("{level}\n")).unwrap();
+        fs::write(d.join("type"), format!("{ty}\n")).unwrap();
+        fs::write(d.join("size"), format!("{size}\n")).unwrap();
+    }
+
+    fn temp_root(tag: &str) -> std::path::PathBuf {
+        let root = std::env::temp_dir()
+            .join(format!("matryoshka_cache_probe_{}_{tag}", std::process::id()));
+        let _ = fs::remove_dir_all(&root);
+        fs::create_dir_all(&root).unwrap();
+        root
+    }
+
+    #[test]
+    fn parses_sysfs_size_strings() {
+        assert_eq!(parse_cache_size("32K"), Some(32 << 10));
+        assert_eq!(parse_cache_size("1024K\n"), Some(1 << 20));
+        assert_eq!(parse_cache_size("8M"), Some(8 << 20));
+        assert_eq!(parse_cache_size("512"), Some(512));
+        assert_eq!(parse_cache_size(""), None);
+        assert_eq!(parse_cache_size("notasize"), None);
+        assert_eq!(parse_cache_size("K"), None);
+    }
+
+    #[test]
+    fn picks_the_l2_data_or_unified_cache() {
+        let root = temp_root("l2");
+        mkcache(&root, "index0", "1", "Data", "48K");
+        mkcache(&root, "index1", "1", "Instruction", "32K");
+        mkcache(&root, "index2", "2", "Unified", "1024K");
+        mkcache(&root, "index3", "3", "Unified", "32M"); // shared L3: ignored
+        let p = working_set_from_cache_dir(&root).unwrap();
+        assert_eq!(p, CacheProbe { level: 2, bytes: 1 << 20 });
+        let _ = fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn falls_back_to_l1d_when_no_l2_and_clamps_tiny_caches() {
+        let root = temp_root("l1");
+        mkcache(&root, "index0", "1", "Data", "16K"); // below the clamp floor
+        mkcache(&root, "index1", "1", "Instruction", "64K");
+        let p = working_set_from_cache_dir(&root).unwrap();
+        assert_eq!(p.level, 1);
+        assert_eq!(p.bytes, PROBE_MIN_BYTES, "tiny caches clamp up");
+        let _ = fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn absent_or_garbage_sysfs_yields_none() {
+        assert_eq!(
+            working_set_from_cache_dir(Path::new("/definitely/not/a/real/sysfs")),
+            None
+        );
+        let root = temp_root("garbage");
+        mkcache(&root, "index0", "two", "Data", "48K"); // bad level
+        mkcache(&root, "index1", "1", "Sideways", "48K"); // bad type
+        mkcache(&root, "index2", "1", "Data", "many"); // bad size
+        fs::create_dir_all(root.join("not_an_index")).unwrap();
+        assert_eq!(working_set_from_cache_dir(&root), None);
+        let _ = fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn real_probe_is_consistent_when_sysfs_exists() {
+        // on Linux CI this exercises the live path; elsewhere it's None
+        if let Some(p) = probe_working_set() {
+            assert!((1..=2).contains(&p.level));
+            assert!((PROBE_MIN_BYTES..=PROBE_MAX_BYTES).contains(&p.bytes));
+            assert_eq!(probe_working_set(), Some(p), "probe is deterministic");
+        }
+    }
+}

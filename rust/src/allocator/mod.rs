@@ -18,8 +18,10 @@
 //! Algorithm 2 never runs concurrently with itself.
 
 mod autotune;
+mod cache;
 
 pub use autotune::{
     intensity_prior, AutoTuner, ClassTuner, TunerDecision, TunerObservation,
     DEFAULT_WORKING_SET_BYTES,
 };
+pub use cache::{probe_working_set, working_set_from_cache_dir, CacheProbe};

@@ -12,4 +12,7 @@ mod schwarz;
 
 pub use blocks::{BlockPlan, QuadBlock, BlockStats};
 pub use pairs::{PairClass, PairList, ShellPair, KPAIR};
-pub use schwarz::{schwarz_bound, schwarz_estimate, SchwarzMode};
+pub use schwarz::{
+    schwarz_bound, schwarz_calibration_fingerprint, schwarz_calibration_from_path,
+    schwarz_estimate, SchwarzCalOutcome, SchwarzMode,
+};

@@ -23,15 +23,34 @@
 //! correctness-critical comparisons run with Exact or with screening
 //! disabled.
 
+use std::path::Path;
 use std::sync::OnceLock;
 
 use crate::basis::Shell;
 use crate::integrals::schwarz_diagonal;
+use crate::util::Fnv64;
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum SchwarzMode {
     Exact,
     Estimate,
+}
+
+impl SchwarzMode {
+    pub fn parse(name: &str) -> anyhow::Result<SchwarzMode> {
+        match name {
+            "exact" => Ok(SchwarzMode::Exact),
+            "estimate" => Ok(SchwarzMode::Estimate),
+            other => anyhow::bail!("unknown schwarz mode {other} (available: exact, estimate)"),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            SchwarzMode::Exact => "exact",
+            SchwarzMode::Estimate => "estimate",
+        }
+    }
 }
 
 const TWO_PI_2_5: f64 = 34.986_836_655_249_725; // 2 * pi^{5/2}
@@ -86,6 +105,13 @@ fn calibration_rows(sa: &Shell, sb: &Shell) -> Vec<f64> {
     rows
 }
 
+/// Calibration-ensemble exponents (the bundled catalogs' envelope, core
+/// s through diffuse valence) and separations.  Module-level so the
+/// persistence fingerprint can cover them: a change here must invalidate
+/// every saved table.
+const CAL_EXPS: [f64; 5] = [0.1, 1.0, 10.0, 300.0, 6000.0];
+const CAL_SEPS: [f64; 5] = [0.0, 0.75, 1.5, 3.0, CORRECTION_MAX_SEP];
+
 /// Worst exact/estimate ratio of one (la, lb) pair class over the
 /// calibration ensemble: normalized single-primitive shells with
 /// exponents spanning 0.1–6000 (the bundled catalogs' envelope, core s
@@ -93,14 +119,12 @@ fn calibration_rows(sa: &Shell, sb: &Shell) -> Vec<f64> {
 /// the cube diagonal (the Cartesian max-component diagonal is direction
 /// dependent for l ≥ 2).
 fn calibrate_correction(la: u8, lb: u8) -> f64 {
-    const EXPS: [f64; 5] = [0.1, 1.0, 10.0, 300.0, 6000.0];
-    const SEPS: [f64; 5] = [0.0, 0.75, 1.5, 3.0, CORRECTION_MAX_SEP];
     let inv3 = 1.0 / 3.0f64.sqrt();
     let dirs = [[0.0, 0.0, 1.0], [inv3, inv3, inv3]];
     let mut worst = 1.0f64;
-    for &a in &EXPS {
-        for &b in &EXPS {
-            for &r in &SEPS {
+    for &a in &CAL_EXPS {
+        for &b in &CAL_EXPS {
+            for &r in &CAL_SEPS {
                 for dir in &dirs {
                     let mut sa = Shell::new(la, vec![a], vec![1.0], [0.0; 3], 0, 0);
                     sa.normalize();
@@ -119,35 +143,202 @@ fn calibrate_correction(la: u8, lb: u8) -> f64 {
     worst * CORRECTION_MARGIN
 }
 
+/// Correction-table dimensions (pair l values 0..=[`CORRECTION_LMAX`]).
+const CORR_N: usize = CORRECTION_LMAX as usize + 1;
+type CorrTable = [[f64; CORR_N]; CORR_N];
+
+/// The process-wide table: either computed by [`calibrate_correction`] on
+/// first use, or installed from a persisted file beforehand
+/// ([`schwarz_calibration_from_path`]).
+static TABLE: OnceLock<CorrTable> = OnceLock::new();
+
+fn computed_table() -> CorrTable {
+    let mut t = [[1.0f64; CORR_N]; CORR_N];
+    for i in 0..=CORRECTION_LMAX {
+        for j in i..=CORRECTION_LMAX {
+            if j < 2 {
+                continue;
+            }
+            let c = calibrate_correction(i, j);
+            t[i as usize][j as usize] = c;
+            t[j as usize][i as usize] = c;
+        }
+    }
+    t
+}
+
+fn correction_table() -> &'static CorrTable {
+    TABLE.get_or_init(computed_table)
+}
+
 /// Per-pair-class angular correction for the s-type estimate, calibrated
 /// once per process against exact diagonals (see module docs).  `None`
 /// for classes beyond [`CORRECTION_LMAX`] (no calibration yet — callers
 /// fall back to exact diagonals); 1.0 for pure s/p pairs, whose estimate
 /// is validated uncorrected.
 pub fn angular_correction(la: u8, lb: u8) -> Option<f64> {
-    const N: usize = CORRECTION_LMAX as usize + 1;
     if la.max(lb) < 2 {
         return Some(1.0);
     }
     if la.max(lb) > CORRECTION_LMAX {
         return None;
     }
-    static TABLE: OnceLock<[[f64; N]; N]> = OnceLock::new();
-    let table = TABLE.get_or_init(|| {
-        let mut t = [[1.0f64; N]; N];
-        for i in 0..=CORRECTION_LMAX {
-            for j in i..=CORRECTION_LMAX {
-                if j < 2 {
-                    continue;
-                }
-                let c = calibrate_correction(i, j);
-                t[i as usize][j as usize] = c;
-                t[j as usize][i as usize] = c;
+    Some(correction_table()[la as usize][lb as usize])
+}
+
+/// Fingerprint of everything that determines the calibrated table: file
+/// format version, the l coverage, safety margin, and the full ensemble
+/// (exponents, separations, directions).  A persisted table whose
+/// fingerprint differs was calibrated by a different recipe and must be
+/// recomputed, not trusted — the stale-file guard of
+/// [`schwarz_calibration_from_path`].
+pub fn schwarz_calibration_fingerprint() -> u64 {
+    let mut h = Fnv64::new();
+    h.str("schwarz-cal").u64(1); // format version
+    h.u8(CORRECTION_LMAX).f64(CORRECTION_MAX_SEP).f64(CORRECTION_MARGIN);
+    for &e in &CAL_EXPS {
+        h.f64(e);
+    }
+    for &s in &CAL_SEPS {
+        h.f64(s);
+    }
+    h.u64(2); // calibration directions: axis + cube diagonal
+    h.finish()
+}
+
+/// What [`schwarz_calibration_from_path`] did.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SchwarzCalOutcome {
+    /// fresh table installed from the file — calibration skipped entirely
+    Loaded,
+    /// no usable file: calibrated here and wrote it for the next process
+    Saved,
+    /// the file was stale or malformed: recalibrated and overwrote it
+    SavedStale,
+    /// a table was already active in this process and agrees with the file
+    AlreadyActive,
+}
+
+impl SchwarzCalOutcome {
+    pub fn describe(&self) -> &'static str {
+        match self {
+            SchwarzCalOutcome::Loaded => "loaded from file",
+            SchwarzCalOutcome::Saved => "calibrated and saved",
+            SchwarzCalOutcome::SavedStale => "stale file: recalibrated and overwrote",
+            SchwarzCalOutcome::AlreadyActive => "already calibrated (file agrees)",
+        }
+    }
+}
+
+enum LoadedTable {
+    Absent,
+    Stale,
+    Ok(CorrTable),
+}
+
+/// Parse a persisted table.  Absent files and every malformation
+/// (truncation, fingerprint drift, bad numbers) degrade to
+/// recalibration — a correction table read wrong could silently screen
+/// away real quadruples, so nothing here is trusted loosely.
+fn load_table(path: &Path) -> LoadedTable {
+    let text = match std::fs::read_to_string(path) {
+        Ok(t) => t,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return LoadedTable::Absent,
+        Err(_) => return LoadedTable::Stale,
+    };
+    let mut lines = text.lines();
+    let head: Vec<&str> = lines.next().unwrap_or("").split_whitespace().collect();
+    let want_fp = format!("{:016x}", schwarz_calibration_fingerprint());
+    if head.len() != 4
+        || head[0] != "schwarz-cal"
+        || head[1] != "v1"
+        || head[2] != "fingerprint"
+        || head[3] != want_fp
+    {
+        return LoadedTable::Stale;
+    }
+    let mut table = [[1.0f64; CORR_N]; CORR_N];
+    let mut seen = [[false; CORR_N]; CORR_N];
+    for line in lines {
+        let f: Vec<&str> = line.split_whitespace().collect();
+        if f.is_empty() {
+            continue;
+        }
+        if f.len() != 5 || f[0] != "corr" {
+            return LoadedTable::Stale;
+        }
+        let (Ok(la), Ok(lb), Ok(bits)) = (
+            f[1].parse::<usize>(),
+            f[2].parse::<usize>(),
+            u64::from_str_radix(f[3], 16),
+        ) else {
+            return LoadedTable::Stale;
+        };
+        if la >= CORR_N || lb >= CORR_N || seen[la][lb] {
+            return LoadedTable::Stale;
+        }
+        let v = f64::from_bits(bits);
+        if !v.is_finite() || v < 1.0 {
+            return LoadedTable::Stale;
+        }
+        table[la][lb] = v;
+        seen[la][lb] = true;
+    }
+    for la in 0..CORR_N {
+        for lb in 0..CORR_N {
+            if !seen[la][lb] {
+                return LoadedTable::Stale;
             }
         }
-        t
-    });
-    Some(table[la as usize][lb as usize])
+    }
+    LoadedTable::Ok(table)
+}
+
+fn save_table(path: &Path, table: &CorrTable) -> anyhow::Result<()> {
+    let mut out = format!(
+        "schwarz-cal v1 fingerprint {:016x}\n",
+        schwarz_calibration_fingerprint()
+    );
+    for (la, row) in table.iter().enumerate() {
+        for (lb, &v) in row.iter().enumerate() {
+            // bit-exact hex first, human-readable decimal as a comment
+            out.push_str(&format!("corr {la} {lb} {:016x} {v:.6}\n", v.to_bits()));
+        }
+    }
+    std::fs::write(path, out)
+        .map_err(|e| anyhow::anyhow!("cannot write schwarz calibration {path:?}: {e}"))
+}
+
+/// Persisted Schwarz calibration: install the d-pair angular-correction
+/// table from `path` when it is present and fresh (skipping the
+/// once-per-process calibration sweep); otherwise calibrate now and
+/// write the table so repeat runs — and every dispatch worker pointed at
+/// the same path — skip it.  Call before the first Estimate-mode
+/// [`schwarz_bound`] (engines do this at construction).
+pub fn schwarz_calibration_from_path(path: &Path) -> anyhow::Result<SchwarzCalOutcome> {
+    match load_table(path) {
+        LoadedTable::Ok(table) => match TABLE.set(table) {
+            Ok(()) => Ok(SchwarzCalOutcome::Loaded),
+            Err(loaded) => {
+                if correction_table() == &loaded {
+                    Ok(SchwarzCalOutcome::AlreadyActive)
+                } else {
+                    anyhow::bail!(
+                        "schwarz calibration {path:?} disagrees with the table already active \
+                         in this process (same fingerprint, different values — corrupt file?)"
+                    )
+                }
+            }
+        },
+        LoadedTable::Absent => {
+            save_table(path, correction_table())?;
+            Ok(SchwarzCalOutcome::Saved)
+        }
+        LoadedTable::Stale => {
+            save_table(path, correction_table())?;
+            Ok(SchwarzCalOutcome::SavedStale)
+        }
+    }
 }
 
 /// Dispatch on mode; `prim` is the pair-row data, shells the originals.
@@ -292,6 +483,97 @@ mod tests {
         assert_eq!(angular_correction(3, 0), None);
         // a (sane) correction never blows the estimate up absurdly
         assert!(angular_correction(2, 2).unwrap() < 1e3);
+    }
+
+    #[test]
+    fn calibration_table_persists_and_stale_files_are_rejected() {
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!("schwarz_cal_test_{}.txt", std::process::id()));
+        let _ = std::fs::remove_file(&path);
+
+        // no file: calibrate + save (Saved), file appears with the
+        // current fingerprint and a full, bit-exact table
+        let first = schwarz_calibration_from_path(&path).unwrap();
+        assert_eq!(first, SchwarzCalOutcome::Saved);
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(
+            text.starts_with(&format!(
+                "schwarz-cal v1 fingerprint {:016x}",
+                schwarz_calibration_fingerprint()
+            )),
+            "{text}"
+        );
+        for (la, lb) in [(2usize, 0usize), (2, 1), (2, 2), (0, 0)] {
+            let want = angular_correction(la as u8, lb as u8).unwrap();
+            let line = text
+                .lines()
+                .find(|l| l.starts_with(&format!("corr {la} {lb} ")))
+                .unwrap_or_else(|| panic!("no corr {la} {lb} line in {text}"));
+            let bits = u64::from_str_radix(line.split_whitespace().nth(3).unwrap(), 16).unwrap();
+            assert_eq!(f64::from_bits(bits), want, "corr {la} {lb} must round-trip bit-exactly");
+        }
+
+        // the same process already holds the table: the fresh file is
+        // recognized and verified (a NEW process would take the Loaded
+        // path — exercised below via load_table directly)
+        assert_eq!(
+            schwarz_calibration_from_path(&path).unwrap(),
+            SchwarzCalOutcome::AlreadyActive
+        );
+        match load_table(&path) {
+            LoadedTable::Ok(table) => {
+                assert_eq!(&table, correction_table(), "load must reproduce the table bit-exactly")
+            }
+            _ => panic!("fresh file must load"),
+        }
+
+        // stale-fingerprint guard: flip the fingerprint -> recalibrate +
+        // overwrite
+        let stale = text.replace(
+            &format!("{:016x}", schwarz_calibration_fingerprint()),
+            "00000000deadbeef",
+        );
+        std::fs::write(&path, stale).unwrap();
+        assert_eq!(
+            schwarz_calibration_from_path(&path).unwrap(),
+            SchwarzCalOutcome::SavedStale
+        );
+        assert!(matches!(load_table(&path), LoadedTable::Ok(_)), "overwrite must heal the file");
+
+        // malformed bodies degrade to recalibration, never a bad table
+        for body in [
+            "garbage".to_string(),
+            format!(
+                "schwarz-cal v1 fingerprint {:016x}\ncorr 2 2 nothex 1.0\n",
+                schwarz_calibration_fingerprint()
+            ),
+            // truncated: missing entries
+            format!(
+                "schwarz-cal v1 fingerprint {:016x}\ncorr 0 0 {:016x} 1.0\n",
+                schwarz_calibration_fingerprint(),
+                1.0f64.to_bits()
+            ),
+            // absurd value (< 1 would under-screen)
+            format!(
+                "schwarz-cal v1 fingerprint {:016x}\ncorr 2 2 {:016x} 0.1\n",
+                schwarz_calibration_fingerprint(),
+                0.1f64.to_bits()
+            ),
+        ] {
+            std::fs::write(&path, &body).unwrap();
+            assert!(
+                matches!(load_table(&path), LoadedTable::Stale),
+                "must reject: {body:?}"
+            );
+            assert_eq!(
+                schwarz_calibration_from_path(&path).unwrap(),
+                SchwarzCalOutcome::SavedStale
+            );
+        }
+
+        // absent file detected as such (distinct from stale)
+        let _ = std::fs::remove_file(&path);
+        assert!(matches!(load_table(&path), LoadedTable::Absent));
     }
 
     #[test]

@@ -1,0 +1,547 @@
+//! The dispatch coordinator: spawns/connects workers, hands out merge
+//! units with work stealing, rebalances stragglers, folds shards back
+//! through the deterministic merge.
+//!
+//! Determinism story: the coordinator never decides *what* a unit
+//! computes — only *where*.  Workers prove they rebuilt the identical
+//! schedule (fingerprint check per build), every shard is a pure function
+//! of (schedule, unit, density), and [`crate::fock::merge_unit_shards`]
+//! folds shards in unit order regardless of arrival order or which worker
+//! produced them.  Work stealing and straggler rebalance can therefore
+//! duplicate execution freely: the first shard per unit wins, and a
+//! duplicate is bitwise the same anyway.
+
+use std::collections::{BTreeMap, HashSet, VecDeque};
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::net::TcpStream;
+use std::process::{Child, Command, Stdio};
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+use crate::linalg::Matrix;
+use crate::pipeline::ChunkSchedule;
+use crate::runtime::ClassKey;
+
+use super::proto::{read_msg, write_frame, write_msg, JobSpec, Msg, UnitShard, PROTO_VERSION};
+use super::{DispatchConfig, DispatchMode};
+
+/// What the dispatcher attributes to one worker — the `report dispatch`
+/// table and the CLI's per-worker summary read these.
+#[derive(Clone, Debug, Default)]
+pub struct WorkerDispatchStats {
+    /// "local:0" or the remote "host:port"
+    pub label: String,
+    /// units whose shard this worker delivered first
+    pub units: u64,
+    /// shards that arrived after another worker already delivered the
+    /// unit (straggler duplicates — ignored by the merge)
+    pub duplicate_shards: u64,
+    /// real quadruples of the units credited to this worker
+    pub quads: u64,
+    /// cost-model flops of the units credited to this worker
+    pub flops: f64,
+    /// ERI execution seconds reported by this worker's shards
+    pub execute_seconds: f64,
+    /// pipeline wall seconds reported by this worker's shards
+    pub wall_seconds: f64,
+    /// times this worker's outstanding units were rebalanced away
+    pub rebalanced_away: u64,
+}
+
+enum Event {
+    Msg(Msg),
+    /// reader thread saw EOF or a broken stream
+    Gone(String),
+}
+
+struct WorkerLink {
+    label: String,
+    writer: Box<dyn Write + Send>,
+    /// local child process (killed at teardown); None for remote workers
+    child: Option<Child>,
+    /// TCP handle kept for a hard shutdown of the read half
+    tcp: Option<TcpStream>,
+    /// units assigned in the current build with no shard yet
+    outstanding: HashSet<usize>,
+    idle: bool,
+}
+
+/// Multi-process executor of [`ChunkSchedule`]s.  One dispatcher serves
+/// one engine for its whole SCF run; workers are set up once and reused
+/// across Fock builds.
+pub struct Dispatcher {
+    links: Vec<WorkerLink>,
+    events: mpsc::Receiver<(usize, Event)>,
+    timeout: Duration,
+    iter: u64,
+    stats: Vec<WorkerDispatchStats>,
+    shutdown_sent: bool,
+}
+
+/// Batch width of one work-stealing assignment: small enough that
+/// stragglers leave little stranded work, large enough to amortize the
+/// per-batch round trip.
+fn batch_size(queue_len: usize, workers: usize) -> usize {
+    (queue_len / (2 * workers.max(1))).clamp(1, 8)
+}
+
+impl Dispatcher {
+    /// Spawn (`local:N`) or dial (`remote:...`) every worker, complete
+    /// the Hello/Setup handshake, and verify each worker rebuilt the same
+    /// system (nbf / pair count / block count echo).
+    pub fn launch(
+        config: &DispatchConfig,
+        spec: &JobSpec,
+        expect_npairs: usize,
+        expect_nblocks: usize,
+    ) -> anyhow::Result<Dispatcher> {
+        let (tx, rx) = mpsc::channel::<(usize, Event)>();
+        let mut links = Vec::new();
+        match &config.mode {
+            DispatchMode::Off => anyhow::bail!("Dispatcher::launch with dispatch off"),
+            DispatchMode::Local(n) => {
+                let bin = match &config.worker_bin {
+                    Some(p) => p.clone(),
+                    None => std::env::current_exe()
+                        .map_err(|e| anyhow::anyhow!("cannot locate the worker binary: {e}"))?,
+                };
+                for i in 0..*n {
+                    let mut child = Command::new(&bin)
+                        .arg("worker")
+                        .arg("--stdio")
+                        .arg("--worker-index")
+                        .arg(i.to_string())
+                        .args(&config.worker_args)
+                        .stdin(Stdio::piped())
+                        .stdout(Stdio::piped())
+                        .stderr(Stdio::inherit())
+                        .spawn()
+                        .map_err(|e| anyhow::anyhow!("failed to spawn worker {i} ({bin:?}): {e}"))?;
+                    let stdout = child.stdout.take().expect("stdout piped");
+                    let stdin = child.stdin.take().expect("stdin piped");
+                    spawn_reader(i, Box::new(stdout), tx.clone());
+                    links.push(WorkerLink {
+                        label: format!("local:{i}"),
+                        writer: Box::new(BufWriter::new(stdin)),
+                        child: Some(child),
+                        tcp: None,
+                        outstanding: HashSet::new(),
+                        idle: true,
+                    });
+                }
+            }
+            DispatchMode::Remote(addrs) => {
+                for (i, addr) in addrs.iter().enumerate() {
+                    let stream = TcpStream::connect(addr)
+                        .map_err(|e| anyhow::anyhow!("cannot reach worker {addr}: {e}"))?;
+                    stream.set_nodelay(true).ok();
+                    let reader = stream
+                        .try_clone()
+                        .map_err(|e| anyhow::anyhow!("worker {addr}: {e}"))?;
+                    spawn_reader(i, Box::new(reader), tx.clone());
+                    links.push(WorkerLink {
+                        label: addr.clone(),
+                        writer: Box::new(BufWriter::new(
+                            stream.try_clone().map_err(|e| anyhow::anyhow!("worker {addr}: {e}"))?,
+                        )),
+                        tcp: Some(stream),
+                        child: None,
+                        outstanding: HashSet::new(),
+                        idle: true,
+                    });
+                }
+            }
+        }
+        let stats = links
+            .iter()
+            .map(|l| WorkerDispatchStats { label: l.label.clone(), ..Default::default() })
+            .collect();
+        let mut d = Dispatcher {
+            links,
+            events: rx,
+            timeout: Duration::from_millis(config.straggler_timeout_ms.max(1)),
+            iter: 0,
+            stats,
+            shutdown_sent: false,
+        };
+        d.handshake(spec, expect_npairs, expect_nblocks)?;
+        Ok(d)
+    }
+
+    /// Generous ceiling for setup work (workers build pair data, which
+    /// may include exact Schwarz diagonals) and for declaring the whole
+    /// dispatch dead when nothing makes progress.
+    fn hard_deadline(&self) -> Duration {
+        (self.timeout * 20).max(Duration::from_secs(120))
+    }
+
+    fn handshake(
+        &mut self,
+        spec: &JobSpec,
+        expect_npairs: usize,
+        expect_nblocks: usize,
+    ) -> anyhow::Result<()> {
+        self.collect_from_each("Hello", |msg| match msg {
+            Msg::Hello { version: PROTO_VERSION } => Ok(Some(())),
+            Msg::Hello { version } => anyhow::bail!(
+                "protocol version skew: worker speaks v{version}, coordinator v{PROTO_VERSION}"
+            ),
+            other => anyhow::bail!("expected Hello, got {}", other.kind()),
+        })?;
+        let setup = Msg::Setup { spec: Box::new(spec.clone()) };
+        self.broadcast(&setup)?;
+        let acks = self.collect_from_each("SetupAck", |msg| match msg {
+            Msg::SetupAck { nbf, npairs, nblocks } => Ok(Some((nbf, npairs, nblocks))),
+            other => anyhow::bail!("expected SetupAck, got {}", other.kind()),
+        })?;
+        for (i, (nbf, npairs, nblocks)) in acks.into_iter().enumerate() {
+            if nbf != spec.basis.nbf || npairs != expect_npairs || nblocks != expect_nblocks {
+                anyhow::bail!(
+                    "worker {} rebuilt a different system: nbf {nbf} pairs {npairs} blocks \
+                     {nblocks}, coordinator has nbf {} pairs {expect_npairs} blocks \
+                     {expect_nblocks}",
+                    self.links[i].label,
+                    spec.basis.nbf
+                );
+            }
+        }
+        Ok(())
+    }
+
+    fn send(&mut self, worker: usize, msg: &Msg) -> anyhow::Result<()> {
+        let link = &mut self.links[worker];
+        write_msg(link.writer.as_mut(), msg)
+            .map_err(|e| anyhow::anyhow!("worker {}: send {} failed: {e}", link.label, msg.kind()))
+    }
+
+    /// Send one message to every worker, encoding it exactly once —
+    /// Build frames carry the full nbf² density, so a per-worker encode
+    /// would redo the heaviest serialization N times per SCF iteration.
+    fn broadcast(&mut self, msg: &Msg) -> anyhow::Result<()> {
+        let payload = msg.encode();
+        for link in &mut self.links {
+            write_frame(link.writer.as_mut(), &payload).map_err(|e| {
+                anyhow::anyhow!("worker {}: send {} failed: {e}", link.label, msg.kind())
+            })?;
+        }
+        Ok(())
+    }
+
+    /// Wait until every worker answered once; `accept` returns
+    /// `Ok(Some(v))` to record worker `v`, `Ok(None)` to ignore a stale
+    /// message.  `Error` frames and disconnects abort.
+    fn collect_from_each<T>(
+        &mut self,
+        what: &str,
+        mut accept: impl FnMut(Msg) -> anyhow::Result<Option<T>>,
+    ) -> anyhow::Result<Vec<T>> {
+        let mut slots: Vec<Option<T>> = self.links.iter().map(|_| None).collect();
+        let deadline = Instant::now() + self.hard_deadline();
+        while slots.iter().any(|s| s.is_none()) {
+            let remaining = deadline
+                .checked_duration_since(Instant::now())
+                .ok_or_else(|| anyhow::anyhow!("timed out waiting for {what} from workers"))?;
+            let (widx, event) = self
+                .events
+                .recv_timeout(remaining)
+                .map_err(|_| anyhow::anyhow!("timed out waiting for {what} from workers"))?;
+            let label = &self.links[widx].label;
+            match event {
+                Event::Gone(why) => {
+                    anyhow::bail!("worker {label} disconnected while awaiting {what}: {why}")
+                }
+                Event::Msg(Msg::Error { message }) => {
+                    anyhow::bail!("worker {label} failed: {message}")
+                }
+                Event::Msg(msg) => {
+                    if let Some(v) =
+                        accept(msg).map_err(|e| anyhow::anyhow!("worker {label}: {e}"))?
+                    {
+                        if slots[widx].is_some() {
+                            anyhow::bail!("worker {label} answered {what} twice");
+                        }
+                        slots[widx] = Some(v);
+                    }
+                }
+            }
+        }
+        Ok(slots.into_iter().map(|s| s.expect("all slots filled")).collect())
+    }
+
+    /// Execute one Fock build across the workers and return every unit's
+    /// shard, sorted by unit id (the caller folds them through
+    /// [`crate::fock::merge_unit_shards`]).
+    pub fn run_build(
+        &mut self,
+        schedule: &ChunkSchedule,
+        snapshot: &BTreeMap<ClassKey, usize>,
+        density: &Matrix,
+    ) -> anyhow::Result<Vec<UnitShard>> {
+        self.iter += 1;
+        let iter = self.iter;
+        let fingerprint = schedule.fingerprint();
+        let build = Msg::Build {
+            iter,
+            fingerprint,
+            snapshot: snapshot.clone(),
+            density: density.clone(),
+        };
+        self.broadcast(&build)?;
+        let acks = self.collect_from_each("BuildAck", |msg| match msg {
+            Msg::BuildAck { iter: i, fingerprint: fp } if i == iter => Ok(Some(fp)),
+            // stale traffic from the previous build drains here
+            Msg::BuildAck { .. } | Msg::Shard { .. } | Msg::RunDone { .. } => Ok(None),
+            other => anyhow::bail!("expected BuildAck, got {}", other.kind()),
+        })?;
+        for (i, fp) in acks.into_iter().enumerate() {
+            if fp != fingerprint {
+                anyhow::bail!(
+                    "worker {} acked schedule {fp:#018x}, coordinator built {fingerprint:#018x}",
+                    self.links[i].label
+                );
+            }
+        }
+
+        let nunits = schedule.units.len();
+        let mut queue: VecDeque<usize> = (0..nunits).collect();
+        let mut stolen: HashSet<usize> = HashSet::new();
+        let mut done: BTreeMap<usize, UnitShard> = BTreeMap::new();
+        for link in &mut self.links {
+            link.outstanding.clear();
+            link.idle = true;
+        }
+        let nworkers = self.links.len();
+        let mut last_progress = Instant::now();
+        while done.len() < nunits {
+            // hand batches to idle workers
+            for i in 0..nworkers {
+                if !self.links[i].idle || queue.is_empty() {
+                    continue;
+                }
+                let width = batch_size(queue.len(), nworkers);
+                let units: Vec<usize> =
+                    queue.drain(..width.min(queue.len())).filter(|u| !done.contains_key(u)).collect();
+                if units.is_empty() {
+                    continue;
+                }
+                self.links[i].outstanding.extend(units.iter().copied());
+                self.links[i].idle = false;
+                self.send(i, &Msg::Run { iter, units })?;
+            }
+            match self.events.recv_timeout(self.timeout) {
+                Ok((widx, Event::Gone(why))) => {
+                    anyhow::bail!(
+                        "worker {} disconnected mid-build ({} of {nunits} units merged): {why}",
+                        self.links[widx].label,
+                        done.len()
+                    );
+                }
+                Ok((widx, Event::Msg(Msg::Error { message }))) => {
+                    anyhow::bail!("worker {} failed: {message}", self.links[widx].label);
+                }
+                Ok((widx, Event::Msg(Msg::Shard { iter: si, shard }))) => {
+                    if si != iter {
+                        continue; // straggler shard of a previous build
+                    }
+                    let unit = shard.unit;
+                    if unit >= nunits {
+                        anyhow::bail!(
+                            "worker {} sent shard for unit {unit} of {nunits}",
+                            self.links[widx].label
+                        );
+                    }
+                    self.links[widx].outstanding.remove(&unit);
+                    last_progress = Instant::now();
+                    let stats = &mut self.stats[widx];
+                    if done.contains_key(&unit) {
+                        stats.duplicate_shards += 1;
+                    } else {
+                        stats.units += 1;
+                        stats.quads += schedule.units[unit].quads;
+                        stats.flops += schedule.units[unit].flops;
+                        stats.execute_seconds += shard.metrics.total_seconds();
+                        stats.wall_seconds += shard.metrics.pipeline_wall_seconds;
+                        done.insert(unit, *shard);
+                    }
+                }
+                Ok((widx, Event::Msg(Msg::RunDone { iter: si }))) => {
+                    if si == iter {
+                        self.links[widx].idle = true;
+                    }
+                }
+                Ok((widx, Event::Msg(other))) => {
+                    anyhow::bail!(
+                        "worker {} sent unexpected {} mid-build",
+                        self.links[widx].label,
+                        other.kind()
+                    );
+                }
+                Err(mpsc::RecvTimeoutError::Disconnected) => {
+                    anyhow::bail!("every dispatch reader thread exited");
+                }
+                Err(mpsc::RecvTimeoutError::Timeout) => {
+                    // straggler rebalance: if idle capacity exists, requeue
+                    // outstanding units (once each) so another worker can
+                    // race the straggler; first shard per unit wins and
+                    // both are bitwise identical anyway
+                    if queue.is_empty() && self.links.iter().any(|l| l.idle) {
+                        let mut resteal: Vec<usize> = Vec::new();
+                        for (i, link) in self.links.iter().enumerate() {
+                            let mut took = false;
+                            for &u in &link.outstanding {
+                                if !done.contains_key(&u) && stolen.insert(u) {
+                                    resteal.push(u);
+                                    took = true;
+                                }
+                            }
+                            if took {
+                                self.stats[i].rebalanced_away += 1;
+                            }
+                        }
+                        if !resteal.is_empty() {
+                            resteal.sort_unstable();
+                            eprintln!(
+                                "dispatch: rebalancing {} straggler unit(s) after {:?}",
+                                resteal.len(),
+                                self.timeout
+                            );
+                            queue.extend(resteal);
+                        }
+                    }
+                    if last_progress.elapsed() > self.hard_deadline() {
+                        anyhow::bail!(
+                            "dispatch stalled: no shard in {:?} ({} of {nunits} units merged)",
+                            last_progress.elapsed(),
+                            done.len()
+                        );
+                    }
+                }
+            }
+        }
+        Ok(done.into_values().collect())
+    }
+
+    /// Per-worker attribution of everything dispatched so far.
+    pub fn stats(&self) -> &[WorkerDispatchStats] {
+        &self.stats
+    }
+
+    pub fn builds(&self) -> u64 {
+        self.iter
+    }
+
+    /// Human-readable per-worker table (CLI + `report dispatch`).
+    pub fn summary(&self) -> String {
+        let mut out = format!(
+            "Dispatch — {} worker(s), {} Fock build(s)\n  {:<14} {:>6} {:>4} {:>10} {:>12} {:>10} {:>9} {:>6}\n",
+            self.links.len(),
+            self.iter,
+            "worker",
+            "units",
+            "dup",
+            "quads",
+            "est_flops",
+            "exec_s",
+            "wall_s",
+            "rebal"
+        );
+        for s in &self.stats {
+            out.push_str(&format!(
+                "  {:<14} {:>6} {:>4} {:>10} {:>12.3e} {:>10.3} {:>9.3} {:>6}\n",
+                s.label,
+                s.units,
+                s.duplicate_shards,
+                s.quads,
+                s.flops,
+                s.execute_seconds,
+                s.wall_seconds,
+                s.rebalanced_away
+            ));
+        }
+        let total_flops: f64 = self.stats.iter().map(|s| s.flops).sum();
+        if total_flops > 0.0 {
+            let max_share = self
+                .stats
+                .iter()
+                .map(|s| s.flops / total_flops)
+                .fold(0.0f64, f64::max);
+            out.push_str(&format!(
+                "  flop balance: worst worker holds {:.1}% of {:.3e} est flops\n",
+                100.0 * max_share,
+                total_flops
+            ));
+        }
+        out
+    }
+
+    fn shutdown(&mut self) {
+        if self.shutdown_sent {
+            return;
+        }
+        self.shutdown_sent = true;
+        for link in &mut self.links {
+            let _ = write_msg(link.writer.as_mut(), &Msg::Shutdown);
+        }
+        for link in &mut self.links {
+            if let Some(stream) = &link.tcp {
+                let _ = stream.shutdown(std::net::Shutdown::Both);
+            }
+            if let Some(child) = &mut link.child {
+                // give the worker a moment to exit cleanly, then reap it
+                let deadline = Instant::now() + Duration::from_secs(2);
+                loop {
+                    match child.try_wait() {
+                        Ok(Some(_)) => break,
+                        Ok(None) if Instant::now() < deadline => {
+                            std::thread::sleep(Duration::from_millis(20));
+                        }
+                        _ => {
+                            let _ = child.kill();
+                            let _ = child.wait();
+                            break;
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+impl Drop for Dispatcher {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn spawn_reader(worker: usize, mut stream: Box<dyn Read + Send>, tx: mpsc::Sender<(usize, Event)>) {
+    std::thread::spawn(move || {
+        let mut r = BufReader::new(stream.as_mut());
+        loop {
+            match read_msg(&mut r) {
+                Ok(msg) => {
+                    if tx.send((worker, Event::Msg(msg))).is_err() {
+                        return; // dispatcher dropped
+                    }
+                }
+                Err(e) => {
+                    let _ = tx.send((worker, Event::Gone(e.to_string())));
+                    return;
+                }
+            }
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn batch_size_balances_and_never_starves() {
+        assert_eq!(batch_size(64, 4), 8); // capped
+        assert_eq!(batch_size(8, 4), 1);
+        assert_eq!(batch_size(1, 4), 1);
+        assert_eq!(batch_size(20, 2), 5);
+        assert_eq!(batch_size(100, 0), 8);
+    }
+}

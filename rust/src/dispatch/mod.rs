@@ -1,0 +1,172 @@
+//! Distributed dispatch: execute a [`crate::pipeline::ChunkSchedule`]
+//! across multiple OS processes.
+//!
+//! PRs 3–4 made the Fock build's work explicit and shippable on purpose:
+//! the schedule is a pure value, its merge units are block-aligned (the
+//! quad→unit map cannot move under tuner/ladder changes), and
+//! [`crate::fock::MergeUnit`] has a wire form.  This module closes the
+//! loop:
+//!
+//! ```text
+//!   coordinator (scf --dispatch local:N | remote:host:port,...)
+//!     MatryoshkaEngine::two_electron
+//!       │  ChunkSchedule + fingerprint + density + tuner snapshot
+//!       ▼
+//!   Dispatcher (coordinator.rs) ── spawns N `worker` subprocesses over
+//!       │                          stdio, or connects TCP ──────────┐
+//!       │ Run{unit ids}  (work stealing; straggler timeout          │
+//!       │                 rebalances outstanding units)             ▼
+//!       │                                        worker process (worker.rs)
+//!       │                                          rebuilds the schedule from
+//!       │                                          the same spec, verifies the
+//!       │                                          fingerprint, runs its slice
+//!       │                                          through the SAME staged
+//!       │  Shard{unit, partial G, observations,    `run_units_streamed` loop
+//!       ▼         metrics}  ◄───────────────────── every other build uses
+//!   fock::merge_unit_shards — shards fold in unit order through the
+//!   fixed summation tree, so a multi-process G is bitwise identical to
+//!   the single-process build BY CONSTRUCTION (asserted in
+//!   tests/dispatch.rs)
+//! ```
+//!
+//! The protocol ([`proto`]) is length-prefixed binary frames over
+//! stdio/TCP; all floats travel as exact bit patterns.  Workers never
+//! receive the schedule itself — only the spec to rebuild it plus the
+//! coordinator's fingerprint — so a version/config drift between the two
+//! binaries is caught before a single quad executes, not after a silently
+//! different G.
+
+mod coordinator;
+pub mod proto;
+pub mod worker;
+
+pub use coordinator::{Dispatcher, WorkerDispatchStats};
+pub use proto::{JobSpec, Msg, UnitShard, PROTO_VERSION};
+
+use std::path::PathBuf;
+
+/// Where a dispatched build's workers come from.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub enum DispatchMode {
+    /// run everything in-process (no dispatch)
+    #[default]
+    Off,
+    /// spawn N local worker processes (same binary, stdio wire)
+    Local(usize),
+    /// connect to already-running workers (`matryoshka worker --listen`)
+    Remote(Vec<String>),
+}
+
+impl DispatchMode {
+    /// Parse the CLI form: `off`, `local:N`, or
+    /// `remote:host:port[,host:port...]`.
+    pub fn parse(spec: &str) -> anyhow::Result<DispatchMode> {
+        if spec == "off" {
+            return Ok(DispatchMode::Off);
+        }
+        if let Some(n) = spec.strip_prefix("local:") {
+            let n: usize = n
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--dispatch local:N needs a worker count, got {n:?}"))?;
+            if n == 0 {
+                anyhow::bail!("--dispatch local:N needs at least one worker");
+            }
+            return Ok(DispatchMode::Local(n));
+        }
+        if let Some(list) = spec.strip_prefix("remote:") {
+            let addrs: Vec<String> =
+                list.split(',').filter(|s| !s.is_empty()).map(str::to_string).collect();
+            if addrs.is_empty() {
+                anyhow::bail!("--dispatch remote: needs at least one host:port");
+            }
+            for a in &addrs {
+                if !a.contains(':') {
+                    anyhow::bail!("--dispatch remote worker {a:?} is not host:port");
+                }
+            }
+            return Ok(DispatchMode::Remote(addrs));
+        }
+        anyhow::bail!("unknown dispatch mode {spec:?} (available: off, local:N, remote:host:port,...)")
+    }
+
+    pub fn is_on(&self) -> bool {
+        !matches!(self, DispatchMode::Off)
+    }
+
+    /// Worker count this mode drives (0 when off).
+    pub fn workers(&self) -> usize {
+        match self {
+            DispatchMode::Off => 0,
+            DispatchMode::Local(n) => *n,
+            DispatchMode::Remote(addrs) => addrs.len(),
+        }
+    }
+
+    pub fn describe(&self) -> String {
+        match self {
+            DispatchMode::Off => "off".to_string(),
+            DispatchMode::Local(n) => format!("local:{n}"),
+            DispatchMode::Remote(addrs) => format!("remote:{}", addrs.join(",")),
+        }
+    }
+}
+
+/// Full dispatch configuration carried on
+/// [`crate::engines::MatryoshkaConfig`].
+#[derive(Clone, Debug)]
+pub struct DispatchConfig {
+    pub mode: DispatchMode,
+    /// how long a worker may go without delivering a shard before its
+    /// outstanding units are rebalanced onto idle workers
+    pub straggler_timeout_ms: u64,
+    /// worker binary for `local:N` spawning; `None` = the current
+    /// executable.  Tests and benches must set this (their own binary has
+    /// no `worker` subcommand): `env!("CARGO_BIN_EXE_matryoshka")`.
+    pub worker_bin: Option<PathBuf>,
+    /// extra argv appended to spawned local workers — the
+    /// failure-injection hooks (`--test-stall`, `--test-exit-after-shards`)
+    /// ride here in tests
+    pub worker_args: Vec<String>,
+}
+
+impl Default for DispatchConfig {
+    fn default() -> Self {
+        DispatchConfig {
+            mode: DispatchMode::Off,
+            straggler_timeout_ms: 30_000,
+            worker_bin: None,
+            worker_args: Vec::new(),
+        }
+    }
+}
+
+impl DispatchConfig {
+    pub fn local(n: usize) -> Self {
+        DispatchConfig { mode: DispatchMode::Local(n), ..Default::default() }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dispatch_mode_parses_and_rejects() {
+        assert_eq!(DispatchMode::parse("off").unwrap(), DispatchMode::Off);
+        assert_eq!(DispatchMode::parse("local:4").unwrap(), DispatchMode::Local(4));
+        assert_eq!(
+            DispatchMode::parse("remote:a:1,b:2").unwrap(),
+            DispatchMode::Remote(vec!["a:1".into(), "b:2".into()])
+        );
+        for bad in ["local:0", "local:x", "remote:", "remote:nohost", "sideways"] {
+            assert!(DispatchMode::parse(bad).is_err(), "{bad}");
+        }
+        assert!(!DispatchMode::Off.is_on());
+        assert!(DispatchMode::Local(2).is_on());
+        assert_eq!(DispatchMode::Local(2).workers(), 2);
+        assert_eq!(DispatchMode::parse("remote:h:9").unwrap().workers(), 1);
+        assert_eq!(DispatchMode::Local(3).describe(), "local:3");
+        assert_eq!(DispatchConfig::default().mode, DispatchMode::Off);
+        assert_eq!(DispatchConfig::local(2).mode, DispatchMode::Local(2));
+    }
+}

@@ -1,0 +1,762 @@
+//! The dispatch wire protocol: length-prefixed binary frames over
+//! stdio or TCP.
+//!
+//! Every frame is `[u32 LE payload length][payload]`; the payload's first
+//! byte tags the [`Msg`] variant.  All floats travel as exact `to_bits`
+//! patterns — the whole point of the dispatcher is a bitwise-identical G,
+//! so nothing on this wire may round-trip through decimal text.  The
+//! decoder is a trust boundary: lengths are bounds-checked against the
+//! remaining frame before any allocation, and every malformation surfaces
+//! as an error, never a panic or an absurd allocation.
+//!
+//! Message flow (w = worker, d = dispatcher):
+//!
+//! ```text
+//! w→d  Hello{version}              on connect
+//! d→w  Setup{JobSpec}              basis + engine config, verbatim floats
+//! w→d  SetupAck{nbf,npairs,nblocks}  sanity echo of the rebuilt system
+//! per Fock build:
+//! d→w  Build{iter, fingerprint, tuner snapshot, density}
+//! w→d  BuildAck{iter, fingerprint}   worker's own schedule digest
+//! d→w  Run{iter, unit ids}           work-stealing batches
+//! w→d  Shard{iter, unit, partial G, observations, metrics}   per unit
+//! w→d  RunDone{iter}                 batch drained, worker idle
+//! either direction: Error{message}; d→w Shutdown at teardown
+//! ```
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+
+use crate::allocator::TunerObservation;
+use crate::basis::{BasisSet, Shell};
+use crate::constructor::SchwarzMode;
+use crate::linalg::Matrix;
+use crate::metrics::{ClassStats, EngineMetrics};
+use crate::pipeline::PipelineMode;
+use crate::runtime::{BackendKind, ClassKey, LadderMode};
+
+/// Bumped whenever the frame layout changes; `Hello` carries it so a
+/// version-skewed worker fails loudly at connect time.
+pub const PROTO_VERSION: u32 = 1;
+
+/// Upper bound on a single frame (density and partial-G frames are
+/// nbf²×8 bytes — 256 MiB covers nbf up to ~5700 with header room to
+/// spare).  Anything larger is treated as a corrupt stream, not an
+/// allocation request.
+pub const MAX_FRAME_BYTES: usize = 256 << 20;
+
+/// Everything a worker needs to rebuild the coordinator's engine state:
+/// the basis verbatim (bit-exact floats) plus the config fields that
+/// shape pair data, block plan, backend catalog and schedule policy.
+#[derive(Clone, Debug)]
+pub struct JobSpec {
+    /// human-readable job label for worker logs
+    pub title: String,
+    pub basis: BasisSet,
+    pub threshold: f64,
+    pub tile: usize,
+    pub clustered: bool,
+    pub greedy_path: bool,
+    pub fixed_batch: usize,
+    pub schwarz: SchwarzMode,
+    pub backend: BackendKind,
+    pub ladder: LadderMode,
+    pub working_set_bytes: usize,
+    pub wide_opb_max: f64,
+    /// worker-local Fock thread count (0 = auto on the worker host);
+    /// never changes results
+    pub threads: usize,
+    pub pipeline: PipelineMode,
+    pub artifact_dir: String,
+    /// optional Schwarz calibration-table path on the worker host
+    pub schwarz_cal_path: Option<String>,
+}
+
+/// One merge unit's result crossing the wire: the partial-G shard plus
+/// the tuner evidence and metrics recorded while producing it.
+#[derive(Clone, Debug)]
+pub struct UnitShard {
+    pub unit: usize,
+    pub g: Matrix,
+    pub observations: Vec<TunerObservation>,
+    pub metrics: EngineMetrics,
+}
+
+/// A dispatch protocol message.
+#[derive(Debug)]
+pub enum Msg {
+    Hello { version: u32 },
+    Setup { spec: Box<JobSpec> },
+    SetupAck { nbf: usize, npairs: usize, nblocks: usize },
+    Build { iter: u64, fingerprint: u64, snapshot: BTreeMap<ClassKey, usize>, density: Matrix },
+    BuildAck { iter: u64, fingerprint: u64 },
+    Run { iter: u64, units: Vec<usize> },
+    Shard { iter: u64, shard: Box<UnitShard> },
+    RunDone { iter: u64 },
+    Error { message: String },
+    Shutdown,
+}
+
+const TAG_HELLO: u8 = 1;
+const TAG_SETUP: u8 = 2;
+const TAG_SETUP_ACK: u8 = 3;
+const TAG_BUILD: u8 = 4;
+const TAG_BUILD_ACK: u8 = 5;
+const TAG_RUN: u8 = 6;
+const TAG_SHARD: u8 = 7;
+const TAG_RUN_DONE: u8 = 8;
+const TAG_ERROR: u8 = 9;
+const TAG_SHUTDOWN: u8 = 10;
+
+// ---------------------------------------------------------------------
+// encoding
+
+#[derive(Default)]
+struct Enc(Vec<u8>);
+
+impl Enc {
+    fn u8(&mut self, v: u8) {
+        self.0.push(v);
+    }
+    fn bool(&mut self, v: bool) {
+        self.u8(v as u8);
+    }
+    fn u32(&mut self, v: u32) {
+        self.0.extend_from_slice(&v.to_le_bytes());
+    }
+    fn u64(&mut self, v: u64) {
+        self.0.extend_from_slice(&v.to_le_bytes());
+    }
+    fn usize(&mut self, v: usize) {
+        self.u64(v as u64);
+    }
+    fn f64(&mut self, v: f64) {
+        self.u64(v.to_bits());
+    }
+    fn str(&mut self, s: &str) {
+        self.usize(s.len());
+        self.0.extend_from_slice(s.as_bytes());
+    }
+    fn f64s(&mut self, vs: &[f64]) {
+        self.usize(vs.len());
+        for &v in vs {
+            self.f64(v);
+        }
+    }
+    fn class(&mut self, c: ClassKey) {
+        self.u8(c.0);
+        self.u8(c.1);
+        self.u8(c.2);
+        self.u8(c.3);
+    }
+    fn matrix(&mut self, m: &Matrix) {
+        self.usize(m.nrows());
+        self.usize(m.ncols());
+        for &v in m.data() {
+            self.f64(v);
+        }
+    }
+    fn class_stats(&mut self, s: &ClassStats) {
+        self.u64(s.executions);
+        self.u64(s.real_quads);
+        self.u64(s.padded_slots);
+        self.f64(s.seconds);
+    }
+    fn metrics(&mut self, m: &EngineMetrics) {
+        self.usize(m.per_class.len());
+        for (class, s) in &m.per_class {
+            self.class(*class);
+            self.class_stats(s);
+        }
+        self.usize(m.per_rung.len());
+        for ((class, rung), s) in &m.per_rung {
+            self.class(*class);
+            self.usize(*rung);
+            self.class_stats(s);
+        }
+        self.u64(m.wide_chunks);
+        self.u64(m.split_chunks);
+        self.f64(m.digest_seconds);
+        self.f64(m.gather_seconds);
+        self.f64(m.prefetch_gather_seconds);
+        self.f64(m.pipeline_wall_seconds);
+    }
+    fn observation(&mut self, ob: &TunerObservation) {
+        self.class(ob.class);
+        self.usize(ob.entry);
+        self.usize(ob.batch);
+        self.usize(ob.prior);
+        self.usize(ob.quads);
+        self.f64(ob.seconds);
+    }
+    fn spec(&mut self, spec: &JobSpec) {
+        self.str(&spec.title);
+        self.usize(spec.basis.nbf);
+        self.usize(spec.basis.shells.len());
+        for sh in &spec.basis.shells {
+            self.u8(sh.l);
+            self.f64s(&sh.exps);
+            self.f64s(&sh.coefs);
+            for d in 0..3 {
+                self.f64(sh.center[d]);
+            }
+            self.usize(sh.atom);
+            self.usize(sh.first_bf);
+        }
+        self.f64(spec.threshold);
+        self.usize(spec.tile);
+        self.bool(spec.clustered);
+        self.bool(spec.greedy_path);
+        self.usize(spec.fixed_batch);
+        self.str(spec.schwarz.name());
+        self.str(spec.backend.name());
+        self.str(spec.ladder.name());
+        self.usize(spec.working_set_bytes);
+        self.f64(spec.wide_opb_max);
+        self.usize(spec.threads);
+        self.str(spec.pipeline.name());
+        self.str(&spec.artifact_dir);
+        match &spec.schwarz_cal_path {
+            None => self.bool(false),
+            Some(p) => {
+                self.bool(true);
+                self.str(p);
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// decoding (bounds-checked; lengths validated before allocation)
+
+struct Dec<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Dec<'a> {
+    fn new(buf: &'a [u8]) -> Dec<'a> {
+        Dec { buf, pos: 0 }
+    }
+
+    fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    fn take(&mut self, n: usize) -> anyhow::Result<&'a [u8]> {
+        if self.remaining() < n {
+            anyhow::bail!(
+                "truncated dispatch frame: wanted {n} more bytes, have {}",
+                self.remaining()
+            );
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> anyhow::Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+    fn bool(&mut self) -> anyhow::Result<bool> {
+        Ok(self.u8()? != 0)
+    }
+    fn u32(&mut self) -> anyhow::Result<u32> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+    fn u64(&mut self) -> anyhow::Result<u64> {
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]]))
+    }
+    fn usize(&mut self) -> anyhow::Result<usize> {
+        let v = self.u64()?;
+        usize::try_from(v).map_err(|_| anyhow::anyhow!("wire usize {v} overflows this platform"))
+    }
+    fn f64(&mut self) -> anyhow::Result<f64> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+    /// A count of elements each at least `elem_bytes` wide — checked
+    /// against the remaining frame so corrupt lengths cannot allocate.
+    fn count(&mut self, elem_bytes: usize) -> anyhow::Result<usize> {
+        let n = self.usize()?;
+        if n.saturating_mul(elem_bytes) > self.remaining() {
+            anyhow::bail!(
+                "corrupt dispatch frame: {n} elements of {elem_bytes}B exceed the {}B left",
+                self.remaining()
+            );
+        }
+        Ok(n)
+    }
+    fn str(&mut self) -> anyhow::Result<String> {
+        let n = self.count(1)?;
+        String::from_utf8(self.take(n)?.to_vec())
+            .map_err(|_| anyhow::anyhow!("non-UTF-8 string on the dispatch wire"))
+    }
+    fn f64s(&mut self) -> anyhow::Result<Vec<f64>> {
+        let n = self.count(8)?;
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(self.f64()?);
+        }
+        Ok(out)
+    }
+    fn class(&mut self) -> anyhow::Result<ClassKey> {
+        Ok((self.u8()?, self.u8()?, self.u8()?, self.u8()?))
+    }
+    fn matrix(&mut self) -> anyhow::Result<Matrix> {
+        let rows = self.usize()?;
+        let cols = self.usize()?;
+        let total = rows
+            .checked_mul(cols)
+            .ok_or_else(|| anyhow::anyhow!("matrix dims {rows}x{cols} overflow"))?;
+        if total.saturating_mul(8) > self.remaining() {
+            anyhow::bail!("corrupt dispatch frame: {rows}x{cols} matrix exceeds the frame");
+        }
+        let mut data = Vec::with_capacity(total);
+        for _ in 0..total {
+            data.push(self.f64()?);
+        }
+        Ok(Matrix::from_rows(rows, cols, data))
+    }
+    fn class_stats(&mut self) -> anyhow::Result<ClassStats> {
+        Ok(ClassStats {
+            executions: self.u64()?,
+            real_quads: self.u64()?,
+            padded_slots: self.u64()?,
+            seconds: self.f64()?,
+        })
+    }
+    fn metrics(&mut self) -> anyhow::Result<EngineMetrics> {
+        let mut m = EngineMetrics::default();
+        // element sizes: ClassKey = 4B, ClassStats = 32B, rung = 8B
+        let nclass = self.count(4 + 32)?;
+        for _ in 0..nclass {
+            let class = self.class()?;
+            m.per_class.insert(class, self.class_stats()?);
+        }
+        let nrung = self.count(4 + 8 + 32)?;
+        for _ in 0..nrung {
+            let class = self.class()?;
+            let rung = self.usize()?;
+            m.per_rung.insert((class, rung), self.class_stats()?);
+        }
+        m.wide_chunks = self.u64()?;
+        m.split_chunks = self.u64()?;
+        m.digest_seconds = self.f64()?;
+        m.gather_seconds = self.f64()?;
+        m.prefetch_gather_seconds = self.f64()?;
+        m.pipeline_wall_seconds = self.f64()?;
+        Ok(m)
+    }
+    fn observation(&mut self) -> anyhow::Result<TunerObservation> {
+        Ok(TunerObservation {
+            class: self.class()?,
+            entry: self.usize()?,
+            batch: self.usize()?,
+            prior: self.usize()?,
+            quads: self.usize()?,
+            seconds: self.f64()?,
+        })
+    }
+    fn spec(&mut self) -> anyhow::Result<JobSpec> {
+        let title = self.str()?;
+        let nbf = self.usize()?;
+        let nshells = self.count(1)?;
+        let mut shells = Vec::with_capacity(nshells);
+        for _ in 0..nshells {
+            let l = self.u8()?;
+            let exps = self.f64s()?;
+            let coefs = self.f64s()?;
+            if exps.len() != coefs.len() {
+                anyhow::bail!("wire shell has {} exps but {} coefs", exps.len(), coefs.len());
+            }
+            let center = [self.f64()?, self.f64()?, self.f64()?];
+            let atom = self.usize()?;
+            let first_bf = self.usize()?;
+            // the coefficients arrive already normalized (bit-exact from
+            // the coordinator) — Shell::new stores them verbatim
+            shells.push(Shell::new(l, exps, coefs, center, atom, first_bf));
+        }
+        Ok(JobSpec {
+            title,
+            basis: BasisSet { shells, nbf },
+            threshold: self.f64()?,
+            tile: self.usize()?,
+            clustered: self.bool()?,
+            greedy_path: self.bool()?,
+            fixed_batch: self.usize()?,
+            schwarz: SchwarzMode::parse(&self.str()?)?,
+            backend: BackendKind::parse(&self.str()?)?,
+            ladder: LadderMode::parse(&self.str()?)?,
+            working_set_bytes: self.usize()?,
+            wide_opb_max: self.f64()?,
+            threads: self.usize()?,
+            pipeline: PipelineMode::parse(&self.str()?)?,
+            artifact_dir: self.str()?,
+            schwarz_cal_path: if self.bool()? { Some(self.str()?) } else { None },
+        })
+    }
+
+    fn done(&self) -> anyhow::Result<()> {
+        if self.remaining() != 0 {
+            anyhow::bail!("dispatch frame has {} trailing bytes", self.remaining());
+        }
+        Ok(())
+    }
+}
+
+impl Msg {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut e = Enc::default();
+        match self {
+            Msg::Hello { version } => {
+                e.u8(TAG_HELLO);
+                e.u32(*version);
+            }
+            Msg::Setup { spec } => {
+                e.u8(TAG_SETUP);
+                e.spec(spec);
+            }
+            Msg::SetupAck { nbf, npairs, nblocks } => {
+                e.u8(TAG_SETUP_ACK);
+                e.usize(*nbf);
+                e.usize(*npairs);
+                e.usize(*nblocks);
+            }
+            Msg::Build { iter, fingerprint, snapshot, density } => {
+                e.u8(TAG_BUILD);
+                e.u64(*iter);
+                e.u64(*fingerprint);
+                e.usize(snapshot.len());
+                for (class, batch) in snapshot {
+                    e.class(*class);
+                    e.usize(*batch);
+                }
+                e.matrix(density);
+            }
+            Msg::BuildAck { iter, fingerprint } => {
+                e.u8(TAG_BUILD_ACK);
+                e.u64(*iter);
+                e.u64(*fingerprint);
+            }
+            Msg::Run { iter, units } => {
+                e.u8(TAG_RUN);
+                e.u64(*iter);
+                e.usize(units.len());
+                for &u in units {
+                    e.usize(u);
+                }
+            }
+            Msg::Shard { iter, shard } => {
+                e.u8(TAG_SHARD);
+                e.u64(*iter);
+                e.usize(shard.unit);
+                e.matrix(&shard.g);
+                e.usize(shard.observations.len());
+                for ob in &shard.observations {
+                    e.observation(ob);
+                }
+                e.metrics(&shard.metrics);
+            }
+            Msg::RunDone { iter } => {
+                e.u8(TAG_RUN_DONE);
+                e.u64(*iter);
+            }
+            Msg::Error { message } => {
+                e.u8(TAG_ERROR);
+                e.str(message);
+            }
+            Msg::Shutdown => {
+                e.u8(TAG_SHUTDOWN);
+            }
+        }
+        e.0
+    }
+
+    pub fn decode(buf: &[u8]) -> anyhow::Result<Msg> {
+        let mut d = Dec::new(buf);
+        let msg = match d.u8()? {
+            TAG_HELLO => Msg::Hello { version: d.u32()? },
+            TAG_SETUP => Msg::Setup { spec: Box::new(d.spec()?) },
+            TAG_SETUP_ACK => {
+                Msg::SetupAck { nbf: d.usize()?, npairs: d.usize()?, nblocks: d.usize()? }
+            }
+            TAG_BUILD => {
+                let iter = d.u64()?;
+                let fingerprint = d.u64()?;
+                let n = d.count(4 + 8)?;
+                let mut snapshot = BTreeMap::new();
+                for _ in 0..n {
+                    let class = d.class()?;
+                    let batch = d.usize()?;
+                    snapshot.insert(class, batch);
+                }
+                Msg::Build { iter, fingerprint, snapshot, density: d.matrix()? }
+            }
+            TAG_BUILD_ACK => Msg::BuildAck { iter: d.u64()?, fingerprint: d.u64()? },
+            TAG_RUN => {
+                let iter = d.u64()?;
+                let n = d.count(8)?;
+                let mut units = Vec::with_capacity(n);
+                for _ in 0..n {
+                    units.push(d.usize()?);
+                }
+                Msg::Run { iter, units }
+            }
+            TAG_SHARD => {
+                let iter = d.u64()?;
+                let unit = d.usize()?;
+                let g = d.matrix()?;
+                // TunerObservation = 4B class + 4×8B counters + 8B seconds
+                // (the bound must never exceed the true element size, or
+                // legitimate frames would be rejected)
+                let n = d.count(4 + 32 + 8)?;
+                let mut observations = Vec::with_capacity(n);
+                for _ in 0..n {
+                    observations.push(d.observation()?);
+                }
+                let metrics = d.metrics()?;
+                Msg::Shard {
+                    iter,
+                    shard: Box::new(UnitShard { unit, g, observations, metrics }),
+                }
+            }
+            TAG_RUN_DONE => Msg::RunDone { iter: d.u64()? },
+            TAG_ERROR => Msg::Error { message: d.str()? },
+            TAG_SHUTDOWN => Msg::Shutdown,
+            other => anyhow::bail!("unknown dispatch message tag {other}"),
+        };
+        d.done()?;
+        Ok(msg)
+    }
+
+    /// Short name for logs and error messages.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Msg::Hello { .. } => "Hello",
+            Msg::Setup { .. } => "Setup",
+            Msg::SetupAck { .. } => "SetupAck",
+            Msg::Build { .. } => "Build",
+            Msg::BuildAck { .. } => "BuildAck",
+            Msg::Run { .. } => "Run",
+            Msg::Shard { .. } => "Shard",
+            Msg::RunDone { .. } => "RunDone",
+            Msg::Error { .. } => "Error",
+            Msg::Shutdown => "Shutdown",
+        }
+    }
+}
+
+/// Write one already-encoded payload as a length-prefixed frame and
+/// flush (the peer blocks on it).  Split out from [`write_msg`] so a
+/// broadcast (same Build to N workers) encodes once, not N times.
+pub fn write_frame(w: &mut dyn Write, payload: &[u8]) -> anyhow::Result<()> {
+    if payload.len() > MAX_FRAME_BYTES {
+        anyhow::bail!("dispatch frame of {} bytes exceeds the {MAX_FRAME_BYTES}B cap", payload.len());
+    }
+    w.write_all(&(payload.len() as u32).to_le_bytes())?;
+    w.write_all(payload)?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Encode and write one message as a length-prefixed frame.
+pub fn write_msg(w: &mut dyn Write, msg: &Msg) -> anyhow::Result<()> {
+    write_frame(w, &msg.encode())
+}
+
+/// Read one length-prefixed frame.  A clean EOF before the length prefix
+/// (or mid-frame) surfaces as an error — callers decide whether "peer
+/// hung up" is fatal (it always is, mid-build).
+pub fn read_msg(r: &mut dyn Read) -> anyhow::Result<Msg> {
+    let mut len = [0u8; 4];
+    r.read_exact(&mut len).map_err(|e| anyhow::anyhow!("dispatch peer hung up: {e}"))?;
+    let len = u32::from_le_bytes(len) as usize;
+    if len == 0 || len > MAX_FRAME_BYTES {
+        anyhow::bail!("corrupt dispatch frame length {len}");
+    }
+    let mut payload = vec![0u8; len];
+    r.read_exact(&mut payload)
+        .map_err(|e| anyhow::anyhow!("dispatch peer hung up mid-frame: {e}"))?;
+    Msg::decode(&payload)
+}
+
+impl JobSpec {
+    /// Process-stable digest of the spec (logged on both ends; the real
+    /// schedule fingerprint is checked per build on top of this).
+    pub fn fingerprint(&self) -> u64 {
+        crate::util::fnv1a64(&Msg::Setup { spec: Box::new(self.clone()) }.encode())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::basis::build_basis;
+    use crate::molecule::library;
+
+    fn sample_spec() -> JobSpec {
+        let mol = library::by_name("water").unwrap();
+        let basis = build_basis(&mol, "sto-3g").unwrap();
+        JobSpec {
+            title: "water / sto-3g".into(),
+            basis,
+            threshold: 1e-10,
+            tile: 64,
+            clustered: true,
+            greedy_path: true,
+            fixed_batch: 512,
+            schwarz: SchwarzMode::Exact,
+            backend: BackendKind::Native,
+            ladder: LadderMode::Elastic,
+            working_set_bytes: 4 << 20,
+            wide_opb_max: 4.0,
+            threads: 2,
+            pipeline: PipelineMode::Staged,
+            artifact_dir: "artifacts".into(),
+            schwarz_cal_path: Some("/tmp/cal.txt".into()),
+        }
+    }
+
+    fn round_trip(msg: &Msg) -> Msg {
+        // through the framed stream API, not just encode/decode
+        let mut wire = Vec::new();
+        write_msg(&mut wire, msg).unwrap();
+        let mut cursor = wire.as_slice();
+        let back = read_msg(&mut cursor).unwrap();
+        assert!(cursor.is_empty(), "frame must consume exactly its bytes");
+        // identical re-encoding is the strongest equality we need
+        assert_eq!(back.encode(), msg.encode(), "{} changed across the wire", msg.kind());
+        back
+    }
+
+    #[test]
+    fn every_message_round_trips_bit_exactly() {
+        let mut density = Matrix::zeros(3, 3);
+        *density.at_mut(0, 1) = -0.125;
+        *density.at_mut(2, 2) = 1.0 / 3.0; // not decimal-representable
+        let mut snapshot = BTreeMap::new();
+        snapshot.insert((0, 0, 0, 0), 512usize);
+        snapshot.insert((2, 1, 0, 0), 16usize);
+
+        let mut metrics = EngineMetrics::default();
+        metrics.record_entry((2, 0, 0, 0), 32, false, 30, 32, 0.1 + 0.2); // inexact sum
+        metrics.gather_seconds = 0.3;
+        metrics.pipeline_wall_seconds = f64::from_bits(0x3FB9_9999_9999_999A);
+
+        let mut g = Matrix::zeros(2, 2);
+        *g.at_mut(0, 0) = -0.0; // signed zero must survive
+        *g.at_mut(1, 0) = 1e-300;
+        let shard = UnitShard {
+            unit: 7,
+            g,
+            observations: vec![TunerObservation {
+                class: (1, 0, 1, 0),
+                entry: 42,
+                batch: 128,
+                prior: 512,
+                quads: 100,
+                seconds: 0.037,
+            }],
+            metrics,
+        };
+
+        for msg in [
+            Msg::Hello { version: PROTO_VERSION },
+            Msg::Setup { spec: Box::new(sample_spec()) },
+            Msg::SetupAck { nbf: 7, npairs: 28, nblocks: 12 },
+            Msg::Build { iter: 3, fingerprint: 0xdead_beef_cafe_f00d, snapshot, density },
+            Msg::BuildAck { iter: 3, fingerprint: 1 },
+            Msg::Run { iter: 3, units: vec![0, 5, 63] },
+            Msg::Shard { iter: 3, shard: Box::new(shard) },
+            Msg::RunDone { iter: 3 },
+            Msg::Error { message: "kaboom: worker 1 lost its marbles".into() },
+            Msg::Shutdown,
+        ] {
+            round_trip(&msg);
+        }
+    }
+
+    #[test]
+    fn shard_decoding_reconstructs_values_not_just_bytes() {
+        let mut g = Matrix::zeros(2, 2);
+        *g.at_mut(0, 1) = 0.1 + 0.2;
+        let msg = Msg::Shard {
+            iter: 9,
+            shard: Box::new(UnitShard {
+                unit: 3,
+                g: g.clone(),
+                observations: Vec::new(),
+                metrics: EngineMetrics::default(),
+            }),
+        };
+        match round_trip(&msg) {
+            Msg::Shard { iter, shard } => {
+                assert_eq!(iter, 9);
+                assert_eq!(shard.unit, 3);
+                assert_eq!(shard.g.data(), g.data(), "bit patterns must survive");
+            }
+            other => panic!("decoded as {}", other.kind()),
+        }
+    }
+
+    #[test]
+    fn setup_spec_reconstructs_the_basis_bit_exactly() {
+        let spec = sample_spec();
+        match round_trip(&Msg::Setup { spec: Box::new(spec.clone()) }) {
+            Msg::Setup { spec: back } => {
+                assert_eq!(back.basis.nbf, spec.basis.nbf);
+                assert_eq!(back.basis.shells.len(), spec.basis.shells.len());
+                for (a, b) in back.basis.shells.iter().zip(&spec.basis.shells) {
+                    assert_eq!(a.l, b.l);
+                    assert_eq!(a.exps, b.exps);
+                    assert_eq!(a.coefs, b.coefs, "normalized coefficients must be bit-exact");
+                    assert_eq!(a.center, b.center);
+                    assert_eq!(a.first_bf, b.first_bf);
+                }
+                assert_eq!(back.schwarz_cal_path, spec.schwarz_cal_path);
+                assert_eq!(back.fingerprint(), spec.fingerprint());
+            }
+            other => panic!("decoded as {}", other.kind()),
+        }
+    }
+
+    #[test]
+    fn corrupt_frames_error_instead_of_panicking_or_allocating() {
+        // unknown tag
+        assert!(Msg::decode(&[99]).is_err());
+        // empty payload
+        assert!(Msg::decode(&[]).is_err());
+        // truncated Build
+        let mut wire = Vec::new();
+        write_msg(
+            &mut wire,
+            &Msg::Build {
+                iter: 1,
+                fingerprint: 2,
+                snapshot: BTreeMap::new(),
+                density: Matrix::zeros(4, 4),
+            },
+        )
+        .unwrap();
+        let cut = wire.len() / 2;
+        let mut short = &wire[..cut];
+        assert!(read_msg(&mut short).is_err());
+        // absurd length prefix is rejected before allocation
+        let mut absurd: &[u8] = &[0xff, 0xff, 0xff, 0xff, TAG_RUN];
+        let err = read_msg(&mut absurd).unwrap_err().to_string();
+        assert!(err.contains("frame length"), "{err}");
+        // a Run whose element count exceeds the frame is rejected
+        let mut e = Enc::default();
+        e.u8(TAG_RUN);
+        e.u64(1);
+        e.u64(u64::MAX); // claims 2^64-1 unit ids
+        let err = Msg::decode(&e.0).unwrap_err().to_string();
+        assert!(err.contains("exceed") || err.contains("overflow"), "{err}");
+        // trailing bytes are rejected
+        let mut ok = Msg::RunDone { iter: 1 }.encode();
+        ok.push(0);
+        assert!(Msg::decode(&ok).is_err());
+    }
+}

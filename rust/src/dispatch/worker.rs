@@ -1,0 +1,347 @@
+//! The dispatch worker: rebuilds the coordinator's engine state from a
+//! [`JobSpec`], proves it (schedule fingerprint), and executes assigned
+//! merge units through the same [`crate::pipeline::run_units_streamed`]
+//! loop every in-process build uses — so a shard computed here is
+//! bitwise-identical to the partial G the coordinator would have computed
+//! itself.
+//!
+//! Runs under the `matryoshka worker` CLI subcommand, either over stdio
+//! (spawned by a `--dispatch local:N` coordinator) or over TCP
+//! (`--listen host:port`, dialed by `--dispatch remote:...`).  The serve
+//! loop is a plain function over `Read`/`Write`, so tests drive it
+//! in-process over a loopback socket too.
+
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::path::Path;
+
+use crate::basis::BasisSet;
+use crate::constructor::{schwarz_calibration_from_path, BlockPlan, PairList};
+use crate::linalg::Matrix;
+use crate::pipeline::{
+    run_units_streamed, ChunkSchedule, ExecContext, PipelineMode, SchedulePolicy,
+};
+use crate::runtime::{create_backend, EriBackend};
+
+use super::proto::{read_msg, write_msg, JobSpec, Msg, UnitShard, PROTO_VERSION};
+
+/// Failure-injection hook: before sending the shard of `unit`, worker
+/// number `worker` sleeps `millis` — the deterministic straggler the
+/// rebalance tests need.  CLI form `--test-stall W:U:MS`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct StallSpec {
+    pub worker: usize,
+    pub unit: usize,
+    pub millis: u64,
+}
+
+impl StallSpec {
+    pub fn parse(spec: &str) -> anyhow::Result<StallSpec> {
+        let parts: Vec<&str> = spec.split(':').collect();
+        let bad = || anyhow::anyhow!("--test-stall wants WORKER:UNIT:MILLIS, got {spec:?}");
+        if parts.len() != 3 {
+            return Err(bad());
+        }
+        Ok(StallSpec {
+            worker: parts[0].parse().map_err(|_| bad())?,
+            unit: parts[1].parse().map_err(|_| bad())?,
+            millis: parts[2].parse().map_err(|_| bad())?,
+        })
+    }
+}
+
+/// Worker-process options (CLI flags / test hooks).
+#[derive(Clone, Debug, Default)]
+pub struct WorkerOptions {
+    /// this worker's index as the coordinator numbered it (`--worker-index`)
+    pub index: usize,
+    /// failure injection: deterministic straggler (see [`StallSpec`])
+    pub stall: Option<StallSpec>,
+    /// failure injection: simulate a crash by dropping the connection
+    /// (no Error frame, nonzero exit) after this many shards were sent
+    pub exit_after_shards: Option<usize>,
+}
+
+/// Everything a worker rebuilds once per `Setup` and reuses across every
+/// Fock build of the session.
+struct WorkerState {
+    basis: BasisSet,
+    pairs: PairList,
+    plan: BlockPlan,
+    backend: Box<dyn EriBackend>,
+    pool: rayon::ThreadPool,
+    threads: usize,
+    policy: SchedulePolicy,
+    pipeline: PipelineMode,
+}
+
+impl WorkerState {
+    fn build(spec: &JobSpec) -> anyhow::Result<WorkerState> {
+        if let Some(path) = &spec.schwarz_cal_path {
+            // load (or calibrate + persist) the Schwarz d-pair correction
+            // table before pair construction triggers the lazy calibration
+            let outcome = schwarz_calibration_from_path(Path::new(path))?;
+            eprintln!("worker: schwarz calibration {} ({path})", outcome.describe());
+        }
+        let hw = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        let threads = if spec.threads != 0 {
+            spec.threads
+        } else {
+            // same auto policy as the engine: staged workers run two
+            // CPU-bound threads each
+            match spec.pipeline {
+                PipelineMode::Staged => (hw + 1) / 2,
+                PipelineMode::Lockstep => hw,
+            }
+        };
+        let backend = create_backend(
+            spec.backend,
+            Path::new(&spec.artifact_dir),
+            spec.basis.max_kpair().max(1),
+            threads,
+            spec.ladder,
+        )?;
+        let pairs = PairList::build_with_mode(&spec.basis, spec.threshold, spec.schwarz);
+        let plan = BlockPlan::build(&pairs, spec.threshold, spec.tile, spec.clustered);
+        let pool = rayon::ThreadPoolBuilder::new()
+            .num_threads(threads)
+            .build()
+            .map_err(anyhow::Error::msg)?;
+        Ok(WorkerState {
+            basis: spec.basis.clone(),
+            pairs,
+            plan,
+            backend,
+            pool,
+            threads,
+            policy: SchedulePolicy {
+                greedy_path: spec.greedy_path,
+                fixed_batch: spec.fixed_batch,
+                // dispatched builds are always direct-mode (the cache
+                // would have to be coherent across processes)
+                stored: false,
+                stored_budget_bytes: 0,
+                working_set_bytes: spec.working_set_bytes,
+                wide_opb_max: spec.wide_opb_max,
+            },
+            pipeline: spec.pipeline,
+        })
+    }
+}
+
+fn panic_text(payload: Box<dyn std::any::Any + Send>) -> String {
+    payload
+        .downcast_ref::<&str>()
+        .map(|s| s.to_string())
+        .or_else(|| payload.downcast_ref::<String>().cloned())
+        .unwrap_or_else(|| "non-string panic payload".to_string())
+}
+
+/// Report a fatal condition to the coordinator (best effort) and fail.
+fn fail<R>(w: &mut dyn Write, message: String) -> anyhow::Result<R> {
+    let _ = write_msg(w, &Msg::Error { message: message.clone() });
+    Err(anyhow::anyhow!(message))
+}
+
+/// Serve one dispatch session over a byte stream.  Returns `Ok(())` on a
+/// clean `Shutdown`; any protocol violation, engine error or fingerprint
+/// mismatch sends an `Error` frame (when possible) and returns `Err`.
+pub fn serve<R: Read, W: Write>(r: &mut R, w: &mut W, opts: &WorkerOptions) -> anyhow::Result<()> {
+    write_msg(w, &Msg::Hello { version: PROTO_VERSION })?;
+    let spec = match read_msg(r)? {
+        Msg::Setup { spec } => spec,
+        Msg::Shutdown => return Ok(()),
+        other => return fail(w, format!("worker expected Setup, got {}", other.kind())),
+    };
+    let state = match WorkerState::build(&spec) {
+        Ok(s) => s,
+        Err(e) => return fail(w, format!("worker failed to build {:?}: {e}", spec.title)),
+    };
+    eprintln!(
+        "worker {}: {} — {} shells, {} pairs, {} blocks, {} thread(s)",
+        opts.index,
+        spec.title,
+        state.basis.shells.len(),
+        state.pairs.pairs.len(),
+        state.plan.blocks.len(),
+        state.threads
+    );
+    write_msg(
+        w,
+        &Msg::SetupAck {
+            nbf: state.basis.nbf,
+            npairs: state.pairs.pairs.len(),
+            nblocks: state.plan.blocks.len(),
+        },
+    )?;
+
+    let mut current: Option<(u64, ChunkSchedule, Matrix)> = None;
+    let mut shards_sent = 0usize;
+    loop {
+        match read_msg(r)? {
+            Msg::Build { iter, fingerprint, snapshot, density } => {
+                let schedule = match ChunkSchedule::build(
+                    &state.plan,
+                    state.backend.manifest(),
+                    &snapshot,
+                    &state.policy,
+                    state.basis.nbf,
+                ) {
+                    Ok(s) => s,
+                    Err(e) => return fail(w, format!("worker schedule build failed: {e}")),
+                };
+                let mine = schedule.fingerprint();
+                if mine != fingerprint {
+                    return fail(
+                        w,
+                        format!(
+                            "schedule fingerprint mismatch: worker {} built {mine:#018x} but the \
+                             coordinator sent {fingerprint:#018x} — coordinator and worker \
+                             disagree on the work (config or binary drift); refusing to execute",
+                            opts.index
+                        ),
+                    );
+                }
+                if density.nrows() != state.basis.nbf || density.ncols() != state.basis.nbf {
+                    return fail(
+                        w,
+                        format!(
+                            "density is {}x{} but the basis has {} functions",
+                            density.nrows(),
+                            density.ncols(),
+                            state.basis.nbf
+                        ),
+                    );
+                }
+                current = Some((iter, schedule, density));
+                write_msg(w, &Msg::BuildAck { iter, fingerprint: mine })?;
+            }
+            Msg::Run { iter, units } => {
+                let Some((cur, schedule, density)) = current.as_ref() else {
+                    return fail(w, "worker got Run before any Build".to_string());
+                };
+                if *cur != iter {
+                    return fail(w, format!("worker got Run for build {iter}, current is {cur}"));
+                }
+                if let Some(&bad) = units.iter().find(|&&u| u >= schedule.units.len()) {
+                    return fail(
+                        w,
+                        format!("assigned unit {bad} beyond the schedule's {}", schedule.units.len()),
+                    );
+                }
+                let ctx = ExecContext {
+                    basis: &state.basis,
+                    pairs: &state.pairs,
+                    plan: &state.plan,
+                    backend: state.backend.as_ref(),
+                    schedule,
+                    mode: state.pipeline,
+                    cache: None,
+                    collect_cache: false,
+                };
+                let workers = state.threads.min(units.len()).max(1);
+                let ran = catch_unwind(AssertUnwindSafe(|| {
+                    run_units_streamed(&state.pool, workers, &ctx, density, &units)
+                }));
+                let outs = match ran {
+                    Err(panic) => {
+                        return fail(w, format!("worker panicked: {}", panic_text(panic)))
+                    }
+                    Ok(Err(e)) => return fail(w, format!("worker unit execution failed: {e}")),
+                    Ok(Ok(outs)) => outs,
+                };
+                for (unit, out) in outs {
+                    if let Some(stall) = opts.stall {
+                        if stall.worker == opts.index && stall.unit == unit {
+                            eprintln!(
+                                "worker {}: injected stall {}ms before shard {unit}",
+                                opts.index, stall.millis
+                            );
+                            std::thread::sleep(std::time::Duration::from_millis(stall.millis));
+                        }
+                    }
+                    write_msg(
+                        w,
+                        &Msg::Shard {
+                            iter,
+                            shard: Box::new(UnitShard {
+                                unit,
+                                g: out.g,
+                                observations: out.observations,
+                                metrics: out.metrics,
+                            }),
+                        },
+                    )?;
+                    shards_sent += 1;
+                    if let Some(n) = opts.exit_after_shards {
+                        if shards_sent >= n {
+                            // simulate a crash: no Error frame, the stream
+                            // just dies (the CLI exits nonzero on this)
+                            anyhow::bail!("injected worker crash after {n} shard(s)");
+                        }
+                    }
+                }
+                write_msg(w, &Msg::RunDone { iter })?;
+            }
+            Msg::Shutdown => return Ok(()),
+            Msg::Error { message } => {
+                anyhow::bail!("coordinator reported: {message}");
+            }
+            other => return fail(w, format!("worker got unexpected {}", other.kind())),
+        }
+    }
+}
+
+/// Serve over stdio — the transport of `--dispatch local:N` spawns.  The
+/// wire owns stdout; nothing else in the worker may print there.
+pub fn serve_stdio(opts: &WorkerOptions) -> anyhow::Result<()> {
+    let stdin = std::io::stdin();
+    let stdout = std::io::stdout();
+    let mut r = BufReader::new(stdin.lock());
+    let mut w = BufWriter::new(stdout.lock());
+    serve(&mut r, &mut w, opts)
+}
+
+/// Bind `addr` and serve dispatch sessions over TCP, one connection at a
+/// time (`--dispatch remote:...` coordinators dial in).  With `once`, the
+/// worker exits after its first session.
+pub fn serve_tcp(addr: &str, once: bool, opts: &WorkerOptions) -> anyhow::Result<()> {
+    let listener = std::net::TcpListener::bind(addr)
+        .map_err(|e| anyhow::anyhow!("worker cannot bind {addr}: {e}"))?;
+    eprintln!("matryoshka worker listening on {}", listener.local_addr()?);
+    loop {
+        let (stream, peer) = listener.accept()?;
+        eprintln!("worker: coordinator connected from {peer}");
+        stream.set_nodelay(true).ok();
+        let mut r = BufReader::new(stream.try_clone()?);
+        let mut w = BufWriter::new(stream);
+        match serve(&mut r, &mut w, opts) {
+            Ok(()) => eprintln!("worker: session closed cleanly"),
+            Err(e) => {
+                if once {
+                    return Err(e);
+                }
+                eprintln!("worker: session ended: {e}");
+            }
+        }
+        if once {
+            return Ok(());
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stall_spec_parses_and_rejects() {
+        assert_eq!(
+            StallSpec::parse("1:3:2500").unwrap(),
+            StallSpec { worker: 1, unit: 3, millis: 2500 }
+        );
+        for bad in ["", "1:2", "1:2:3:4", "a:2:3", "1:b:3", "1:2:c"] {
+            assert!(StallSpec::parse(bad).is_err(), "{bad:?}");
+        }
+    }
+}

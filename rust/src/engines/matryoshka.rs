@@ -26,18 +26,17 @@
 //! | −Block Constructor   | clustered = false (divergent stream)          |
 //! | QUICK-analog         | clustered + greedy_path, autotune = false     |
 
-use std::path::Path;
-use std::sync::atomic::AtomicUsize;
-use std::sync::mpsc;
+use std::path::{Path, PathBuf};
 
 use crate::allocator::{AutoTuner, DEFAULT_WORKING_SET_BYTES};
 use crate::basis::BasisSet;
-use crate::constructor::{BlockPlan, PairList, SchwarzMode};
-use crate::fock::merge_partials;
+use crate::constructor::{schwarz_calibration_from_path, BlockPlan, PairList, SchwarzMode};
+use crate::dispatch::{DispatchConfig, DispatchMode, Dispatcher, JobSpec};
+use crate::fock::{merge_partials, merge_unit_shards};
 use crate::linalg::Matrix;
 use crate::metrics::EngineMetrics;
 use crate::pipeline::{
-    run_entries, run_unit_stream, CachedChunk, ChunkSchedule, ExecContext, PipelineBuffers,
+    run_entries, run_units_streamed, CachedChunk, ChunkSchedule, ExecContext, PipelineBuffers,
     PipelineMode, SchedulePolicy, UnitOutput, DEFAULT_WIDE_OPB_MAX,
 };
 use crate::runtime::{create_backend, BackendKind, ClassKey, EriBackend, LadderMode};
@@ -92,6 +91,15 @@ pub struct MatryoshkaConfig {
     /// how each worker walks its merge units: staged (overlapped
     /// gather/execute/digest) or lockstep (sequential A/B baseline)
     pub pipeline: PipelineMode,
+    /// multi-process dispatch: ship schedule slices to worker processes
+    /// (`--dispatch local:N|remote:...`) and fold their partial-G shards
+    /// through the same deterministic merge — bitwise identical to the
+    /// in-process build by construction
+    pub dispatch: DispatchConfig,
+    /// persist the Schwarz d-pair angular-correction table here: load it
+    /// when fresh (skipping the once-per-process calibration), write it
+    /// after calibrating otherwise
+    pub schwarz_cal_path: Option<String>,
 }
 
 impl Default for MatryoshkaConfig {
@@ -112,6 +120,8 @@ impl Default for MatryoshkaConfig {
             wide_opb_max: DEFAULT_WIDE_OPB_MAX,
             threads: 0,
             pipeline: PipelineMode::Staged,
+            dispatch: DispatchConfig::default(),
+            schwarz_cal_path: None,
         }
     }
 }
@@ -138,62 +148,6 @@ fn resolve_threads(config: &MatryoshkaConfig) -> usize {
     }
 }
 
-/// Fan the schedule's merge units out over the pool with work stealing
-/// and return each unit's payload in unit order.  Each worker runs
-/// [`run_unit_stream`]: it claims units off a shared counter, carries the
-/// staged executor's cross-unit prefetch over its own unit boundaries,
-/// and reports per-unit results through the channel.
-///
-/// Worker panics are caught per unit (inside `run_unit_stream`) and
-/// re-raised here with their original payload after every worker has
-/// drained — the lowest panicked unit wins, so even the panic surfaced is
-/// deterministic.  A worker that panics stops claiming units (its buffer
-/// state may be poisoned); surviving workers steal the remainder.
-fn run_units_streamed(
-    pool: &rayon::ThreadPool,
-    workers: usize,
-    ctx: &ExecContext<'_>,
-    density: &Matrix,
-) -> Vec<Option<std::thread::Result<anyhow::Result<UnitOutput>>>> {
-    use std::panic::resume_unwind;
-    let nunits = ctx.schedule.units.len();
-    let next = AtomicUsize::new(0);
-    let (tx, rx) = mpsc::channel::<(usize, std::thread::Result<anyhow::Result<UnitOutput>>)>();
-    {
-        let next = &next;
-        // `move` hands the Sender to the op closure (Sender is Send but
-        // not Sync); each worker task gets its own clone, and the
-        // original drops when the op body ends, so `rx` disconnects once
-        // the last worker finishes.
-        pool.scope(move |s| {
-            for _ in 0..workers {
-                let tx = tx.clone();
-                s.spawn(move |_| {
-                    run_unit_stream(ctx, density, next, &mut |u, payload| {
-                        let poisoned = payload.is_err();
-                        tx.send((u, payload)).is_ok() && !poisoned
-                    });
-                });
-            }
-        });
-    }
-    let mut slots: Vec<Option<std::thread::Result<anyhow::Result<UnitOutput>>>> =
-        (0..nunits).map(|_| None).collect();
-    for (u, payload) in rx {
-        slots[u] = Some(payload);
-    }
-    // surface the lowest panicked unit first, deterministically
-    if slots.iter().any(|slot| matches!(slot, Some(Err(_)))) {
-        for slot in slots {
-            if let Some(Err(panic)) = slot {
-                resume_unwind(panic);
-            }
-        }
-        unreachable!("just observed a panicked slot");
-    }
-    slots
-}
-
 pub struct MatryoshkaEngine {
     pub basis: BasisSet,
     pub config: MatryoshkaConfig,
@@ -213,6 +167,11 @@ pub struct MatryoshkaEngine {
     eri_seconds: f64,
     pool: rayon::ThreadPool,
     threads: usize,
+    /// artifact directory (forwarded to dispatch workers for the PJRT path)
+    artifact_dir: PathBuf,
+    /// lazily-launched multi-process dispatcher (`config.dispatch`);
+    /// workers persist across SCF iterations and shut down on engine drop
+    dispatcher: Option<Dispatcher>,
 }
 
 impl MatryoshkaEngine {
@@ -227,7 +186,9 @@ impl MatryoshkaEngine {
             resolve_threads(&config),
             config.ladder,
         )?;
-        Self::with_backend(basis, backend, config)
+        let mut engine = Self::with_backend(basis, backend, config)?;
+        engine.artifact_dir = artifact_dir.to_path_buf();
+        Ok(engine)
     }
 
     /// Build over an already-constructed backend (tests, custom backends).
@@ -236,6 +197,18 @@ impl MatryoshkaEngine {
         backend: Box<dyn EriBackend>,
         config: MatryoshkaConfig,
     ) -> anyhow::Result<Self> {
+        if config.dispatch.mode.is_on() && config.stored {
+            anyhow::bail!(
+                "--stored with --dispatch is not supported yet: the contracted-value cache \
+                 would have to stay coherent across worker processes (run stored builds \
+                 in-process, or dispatch direct-mode builds)"
+            );
+        }
+        if let Some(path) = &config.schwarz_cal_path {
+            // install (or calibrate + persist) the d-pair correction table
+            // BEFORE pair construction triggers the lazy calibration
+            schwarz_calibration_from_path(Path::new(path))?;
+        }
         let pairs = PairList::build_with_mode(&basis, config.threshold, config.schwarz);
         let plan = BlockPlan::build(&pairs, config.threshold, config.tile, config.clustered);
         // every class the plan will execute must have catalog coverage and
@@ -305,6 +278,8 @@ impl MatryoshkaEngine {
             eri_seconds: 0.0,
             pool,
             threads,
+            artifact_dir: PathBuf::from("artifacts"),
+            dispatcher: None,
         })
     }
 
@@ -396,21 +371,15 @@ impl MatryoshkaEngine {
             collect_cache,
         };
         let workers = self.threads.min(nunits).max(1);
-        let slots = run_units_streamed(&self.pool, workers, &ctx, density);
+        let unit_ids: Vec<usize> = (0..nunits).collect();
+        // errors and panics already surface in unit order, deterministically
+        let outs = run_units_streamed(&self.pool, workers, &ctx, density, &unit_ids)?;
         drop(ctx);
 
-        // surface failures in unit order so errors are deterministic too
-        let mut outs = Vec::with_capacity(nunits);
-        for slot in slots {
-            let payload = slot.ok_or_else(|| anyhow::anyhow!("Fock worker dropped a merge unit"))?;
-            let payload = payload.unwrap_or_else(|_| unreachable!("panics re-raised above"));
-            outs.push(payload?);
-        }
-
-        let g = merge_partials(n, outs.iter().map(|o| &o.g));
+        let g = merge_partials(n, outs.iter().map(|(_, o)| &o.g));
         let mut observations = Vec::new();
         let mut collected = Vec::new();
-        for out in outs {
+        for (_, out) in outs {
             self.metrics.merge(&out.metrics);
             observations.extend(out.observations);
             collected.extend(out.cache);
@@ -419,6 +388,82 @@ impl MatryoshkaEngine {
         observations.sort_by_key(|ob| ob.entry);
         self.tuner.apply_observations(&observations);
         Ok((g, collected))
+    }
+
+    /// The spec a dispatch worker rebuilds this engine's state from.
+    fn job_spec(&self) -> JobSpec {
+        // one local host shares its cores across local workers; remote
+        // hosts auto-size (`threads: 0`).  Thread counts never change G.
+        let worker_threads = match &self.config.dispatch.mode {
+            DispatchMode::Local(n) => (self.threads / (*n).max(1)).max(1),
+            DispatchMode::Remote(_) => 0,
+            DispatchMode::Off => self.threads,
+        };
+        JobSpec {
+            title: format!(
+                "fock build: {} shells, nbf {}, {} basis-function pairs",
+                self.basis.shells.len(),
+                self.basis.nbf,
+                self.pairs.pairs.len()
+            ),
+            basis: self.basis.clone(),
+            threshold: self.config.threshold,
+            tile: self.config.tile,
+            clustered: self.config.clustered,
+            greedy_path: self.config.greedy_path,
+            fixed_batch: self.config.fixed_batch,
+            schwarz: self.config.schwarz,
+            backend: self.config.backend,
+            ladder: self.config.ladder,
+            working_set_bytes: self.config.working_set_bytes,
+            wide_opb_max: self.config.wide_opb_max,
+            threads: worker_threads,
+            pipeline: self.config.pipeline,
+            artifact_dir: self.artifact_dir.to_string_lossy().into_owned(),
+            schwarz_cal_path: self.config.schwarz_cal_path.clone(),
+        }
+    }
+
+    /// Dispatched Fock build: ship the schedule slice-by-slice to worker
+    /// processes and fold their partial-G shards through the same fixed
+    /// merge tree the in-process path uses — bitwise identical G by
+    /// construction (workers verify the schedule fingerprint first).
+    fn build_dispatched(&mut self, density: &Matrix) -> anyhow::Result<Matrix> {
+        let schedule = self.build_schedule()?;
+        let n = self.basis.nbf;
+        if schedule.units.is_empty() {
+            return Ok(Matrix::zeros(n, n));
+        }
+        if self.dispatcher.is_none() {
+            let spec = self.job_spec();
+            let npairs = self.pairs.pairs.len();
+            let nblocks = self.plan.blocks.len();
+            self.dispatcher =
+                Some(Dispatcher::launch(&self.config.dispatch, &spec, npairs, nblocks)?);
+        }
+        let snapshot = self.tuner.batch_snapshot();
+        let dispatcher = self.dispatcher.as_mut().expect("dispatcher launched above");
+        let shards = dispatcher.run_build(&schedule, &snapshot, density)?;
+        let g = merge_unit_shards(n, schedule.units.len(), shards.iter().map(|s| (s.unit, &s.g)))?;
+        let mut observations = Vec::new();
+        for shard in &shards {
+            self.metrics.merge(&shard.metrics);
+            observations.extend(shard.observations.iter().copied());
+        }
+        observations.sort_by_key(|ob| ob.entry);
+        self.tuner.apply_observations(&observations);
+        Ok(g)
+    }
+
+    /// Per-worker dispatch attribution table (None until the first
+    /// dispatched build launched the workers).
+    pub fn dispatch_summary(&self) -> Option<String> {
+        self.dispatcher.as_ref().map(|d| d.summary())
+    }
+
+    /// Raw per-worker dispatch stats (tests and benches read these).
+    pub fn dispatch_stats(&self) -> Option<&[crate::dispatch::WorkerDispatchStats]> {
+        self.dispatcher.as_ref().map(|d| d.stats())
     }
 
     /// Stored-mode build: freeze one schedule for the whole SCF, run the
@@ -505,7 +550,9 @@ impl FockEngine for MatryoshkaEngine {
 
     fn two_electron(&mut self, density: &Matrix) -> anyhow::Result<Matrix> {
         let sw = Stopwatch::start();
-        let mut g = if self.config.stored {
+        let mut g = if self.config.dispatch.mode.is_on() {
+            self.build_dispatched(density)?
+        } else if self.config.stored {
             self.build_stored(density)?
         } else {
             let schedule = self.build_schedule()?;

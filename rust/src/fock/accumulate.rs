@@ -8,6 +8,7 @@
 //! produce bitwise-identical G matrices; threads only change which worker
 //! happens to *compute* each unit.
 
+use std::fmt;
 use std::ops::Range;
 
 use crate::linalg::Matrix;
@@ -62,6 +63,39 @@ pub fn merge_partials<'a>(n: usize, partials: impl IntoIterator<Item = &'a Matri
     g
 }
 
+/// Fold per-unit partial-G shards — arriving in *any* order, e.g. off the
+/// dispatch wire as workers finish — through the fixed summation tree.
+/// Every unit of `0..nunits` must appear exactly once; the fold itself
+/// always runs in ascending unit order, so a multi-process G is
+/// bitwise-identical to the single-process merge by construction.
+pub fn merge_unit_shards<'a>(
+    n: usize,
+    nunits: usize,
+    shards: impl IntoIterator<Item = (usize, &'a Matrix)>,
+) -> anyhow::Result<Matrix> {
+    let mut slots: Vec<Option<&Matrix>> = vec![None; nunits];
+    for (unit, g) in shards {
+        if unit >= nunits {
+            anyhow::bail!("shard names merge unit {unit} but the schedule has {nunits} units");
+        }
+        if slots[unit].is_some() {
+            anyhow::bail!("duplicate shard for merge unit {unit}");
+        }
+        if g.nrows() != n || g.ncols() != n {
+            anyhow::bail!(
+                "shard for merge unit {unit} is {}x{}, expected {n}x{n}",
+                g.nrows(),
+                g.ncols()
+            );
+        }
+        slots[unit] = Some(g);
+    }
+    if let Some(missing) = slots.iter().position(|s| s.is_none()) {
+        anyhow::bail!("no shard delivered for merge unit {missing} ({nunits} units total)");
+    }
+    Ok(merge_partials(n, slots.into_iter().map(|s| s.expect("all slots checked"))))
+}
+
 /// One merge unit of a [`crate::pipeline::ChunkSchedule`]: a contiguous
 /// run of schedule entries digested into one partial accumulator, plus
 /// the cost summary a scheduler (or a future multi-process dispatcher)
@@ -111,26 +145,117 @@ impl MergeUnit {
     }
 
     /// Parse a [`MergeUnit::wire_line`] back (the receive side of a
-    /// schedule-slice shipment).
-    pub fn parse_wire_line(line: &str) -> anyhow::Result<MergeUnit> {
+    /// schedule-slice shipment).  This is a trust boundary — the line may
+    /// arrive from another process over a socket — so every malformation
+    /// surfaces as a typed [`MergeUnitParseError`], never a panic.
+    pub fn parse_wire_line(line: &str) -> Result<MergeUnit, MergeUnitParseError> {
         let f: Vec<&str> = line.split_whitespace().collect();
-        if f.len() != 14
-            || [f[0], f[2], f[5], f[8], f[10], f[12]] != ["unit", "entries", "blocks", "quads", "flops", "bytes"]
-        {
-            anyhow::bail!("malformed merge-unit line: {line:?}");
+        if f.is_empty() {
+            return Err(MergeUnitParseError::Empty);
         }
-        Ok(MergeUnit {
-            unit: f[1].parse()?,
-            entry_start: f[3].parse()?,
-            entry_end: f[4].parse()?,
-            block_start: f[6].parse()?,
-            block_end: f[7].parse()?,
-            quads: f[9].parse()?,
-            flops: f[11].parse()?,
-            bytes: f[13].parse()?,
-        })
+        if f.len() != 14 {
+            return Err(MergeUnitParseError::FieldCount { got: f.len() });
+        }
+        for (pos, expected) in [
+            (0usize, "unit"),
+            (2, "entries"),
+            (5, "blocks"),
+            (8, "quads"),
+            (10, "flops"),
+            (12, "bytes"),
+        ] {
+            if f[pos] != expected {
+                return Err(MergeUnitParseError::Keyword { expected, got: f[pos].to_string() });
+            }
+        }
+        fn num<T: std::str::FromStr>(
+            field: &'static str,
+            raw: &str,
+        ) -> Result<T, MergeUnitParseError> {
+            raw.parse()
+                .map_err(|_| MergeUnitParseError::Number { field, got: raw.to_string() })
+        }
+        let unit = MergeUnit {
+            unit: num("unit", f[1])?,
+            entry_start: num("entry_start", f[3])?,
+            entry_end: num("entry_end", f[4])?,
+            block_start: num("block_start", f[6])?,
+            block_end: num("block_end", f[7])?,
+            quads: num("quads", f[9])?,
+            flops: num("flops", f[11])?,
+            bytes: num("bytes", f[13])?,
+        };
+        if unit.entry_end < unit.entry_start || unit.block_end < unit.block_start {
+            return Err(MergeUnitParseError::InvertedRange { unit: unit.unit });
+        }
+        Ok(unit)
+    }
+
+    /// Parse a whole shipment of wire lines (blank lines skipped), e.g. a
+    /// `report schedule` dump or a dispatch setup payload.  Rejects
+    /// duplicated unit ids — a duplicated shard would double-count its
+    /// quads in the merged G.
+    pub fn parse_wire_lines(text: &str) -> Result<Vec<MergeUnit>, MergeUnitParseError> {
+        let mut out: Vec<MergeUnit> = Vec::new();
+        for line in text.lines() {
+            if line.split_whitespace().next().is_none() {
+                continue;
+            }
+            let unit = Self::parse_wire_line(line)?;
+            if out.iter().any(|u| u.unit == unit.unit) {
+                return Err(MergeUnitParseError::DuplicateUnit { unit: unit.unit });
+            }
+            out.push(unit);
+        }
+        Ok(out)
     }
 }
+
+/// Typed rejection reasons of the merge-unit wire parser.  The wire is a
+/// trust boundary (lines cross process borders in the dispatch protocol),
+/// so malformed input must map to a diagnosable error value — callers on
+/// `anyhow` paths convert via `?` (the error implements
+/// [`std::error::Error`]).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum MergeUnitParseError {
+    /// the line held no fields at all
+    Empty,
+    /// wrong number of whitespace-separated fields (want 14)
+    FieldCount { got: usize },
+    /// a structural keyword was missing or misspelled
+    Keyword { expected: &'static str, got: String },
+    /// a numeric field failed to parse
+    Number { field: &'static str, got: String },
+    /// entry or block range runs backwards
+    InvertedRange { unit: usize },
+    /// the same unit id appeared twice in one shipment
+    DuplicateUnit { unit: usize },
+}
+
+impl fmt::Display for MergeUnitParseError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            MergeUnitParseError::Empty => write!(f, "empty merge-unit line"),
+            MergeUnitParseError::FieldCount { got } => {
+                write!(f, "malformed merge-unit line: {got} fields, expected 14")
+            }
+            MergeUnitParseError::Keyword { expected, got } => {
+                write!(f, "malformed merge-unit line: expected keyword {expected:?}, got {got:?}")
+            }
+            MergeUnitParseError::Number { field, got } => {
+                write!(f, "malformed merge-unit line: field {field} is not a number: {got:?}")
+            }
+            MergeUnitParseError::InvertedRange { unit } => {
+                write!(f, "malformed merge-unit line: unit {unit} has an inverted range")
+            }
+            MergeUnitParseError::DuplicateUnit { unit } => {
+                write!(f, "duplicated merge-unit id {unit} in shipment")
+            }
+        }
+    }
+}
+
+impl std::error::Error for MergeUnitParseError {}
 
 #[cfg(test)]
 mod tests {
@@ -197,15 +322,104 @@ mod tests {
     }
 
     #[test]
-    fn malformed_merge_unit_lines_are_rejected() {
-        for bad in [
-            "",
-            "unit x entries 0 1 blocks 0 1 quads 2 flops 1e0 bytes 1e0",
-            "unit 0 entries 0 1 blocks 0 1 quads 2 flops 1e0",
-            "item 0 entries 0 1 blocks 0 1 quads 2 flops 1e0 bytes 1e0",
-        ] {
-            assert!(MergeUnit::parse_wire_line(bad).is_err(), "{bad:?}");
+    fn malformed_merge_unit_lines_are_rejected_with_typed_reasons() {
+        use MergeUnitParseError as E;
+        // garbage, truncation, keyword drift, numeric rot — each maps to
+        // a distinct typed reason, never a panic (this parser now guards
+        // a process boundary)
+        let cases: [(&str, E); 8] = [
+            ("", E::Empty),
+            ("   \t ", E::Empty),
+            ("total garbage ! @ #", E::FieldCount { got: 5 }),
+            (
+                "unit 0 entries 0 1 blocks 0 1 quads 2 flops 1e0",
+                E::FieldCount { got: 12 },
+            ),
+            (
+                "item 0 entries 0 1 blocks 0 1 quads 2 flops 1e0 bytes 1e0",
+                E::Keyword { expected: "unit", got: "item".into() },
+            ),
+            (
+                "unit x entries 0 1 blocks 0 1 quads 2 flops 1e0 bytes 1e0",
+                E::Number { field: "unit", got: "x".into() },
+            ),
+            (
+                "unit 0 entries 0 1 blocks 0 1 quads 2 flops 1e0 bytes NaNaN",
+                E::Number { field: "bytes", got: "NaNaN".into() },
+            ),
+            (
+                "unit 3 entries 9 1 blocks 0 1 quads 2 flops 1e0 bytes 1e0",
+                E::InvertedRange { unit: 3 },
+            ),
+        ];
+        for (bad, want) in cases {
+            assert_eq!(MergeUnit::parse_wire_line(bad), Err(want.clone()), "{bad:?}");
+            // every reason renders a human-readable message
+            assert!(!want.to_string().is_empty());
         }
+        // errors convert into anyhow via ? (the dispatch path does this)
+        fn through_anyhow(line: &str) -> anyhow::Result<MergeUnit> {
+            Ok(MergeUnit::parse_wire_line(line)?)
+        }
+        let err = through_anyhow("nope").unwrap_err().to_string();
+        assert!(err.contains("malformed merge-unit line"), "{err}");
+    }
+
+    #[test]
+    fn wire_line_shipments_reject_duplicated_unit_ids() {
+        let a = MergeUnit {
+            unit: 0,
+            entry_start: 0,
+            entry_end: 2,
+            block_start: 0,
+            block_end: 2,
+            quads: 10,
+            flops: 1e3,
+            bytes: 2e3,
+        };
+        let mut b = a.clone();
+        b.unit = 1;
+        b.entry_start = 2;
+        b.entry_end = 4;
+        let good = format!("{}\n\n{}\n", a.wire_line(), b.wire_line());
+        assert_eq!(MergeUnit::parse_wire_lines(&good).unwrap(), vec![a.clone(), b.clone()]);
+        let dup = format!("{}\n{}\n{}\n", a.wire_line(), b.wire_line(), a.wire_line());
+        assert_eq!(
+            MergeUnit::parse_wire_lines(&dup),
+            Err(MergeUnitParseError::DuplicateUnit { unit: 0 })
+        );
+        // a bad line anywhere in the shipment surfaces its own reason
+        let broken = format!("{}\nshort line\n", a.wire_line());
+        assert_eq!(
+            MergeUnit::parse_wire_lines(&broken),
+            Err(MergeUnitParseError::FieldCount { got: 2 })
+        );
+        assert_eq!(MergeUnit::parse_wire_lines("\n  \n").unwrap(), Vec::new());
+    }
+
+    #[test]
+    fn merge_unit_shards_folds_in_unit_order_regardless_of_arrival() {
+        let mut a = Matrix::zeros(2, 2);
+        *a.at_mut(0, 0) = 1.0;
+        let mut b = Matrix::zeros(2, 2);
+        *b.at_mut(0, 0) = 2.0;
+        let mut c = Matrix::zeros(2, 2);
+        *c.at_mut(1, 1) = -3.0;
+        let in_order = merge_unit_shards(2, 3, [(0, &a), (1, &b), (2, &c)]).unwrap();
+        let scrambled = merge_unit_shards(2, 3, [(2, &c), (0, &a), (1, &b)]).unwrap();
+        assert_eq!(in_order.data(), scrambled.data(), "arrival order must not matter");
+        assert_eq!(in_order.at(0, 0), 3.0);
+        assert_eq!(in_order.at(1, 1), -3.0);
+
+        let missing = merge_unit_shards(2, 3, [(0, &a), (2, &c)]).unwrap_err().to_string();
+        assert!(missing.contains("no shard delivered for merge unit 1"), "{missing}");
+        let dup = merge_unit_shards(2, 2, [(0, &a), (0, &b)]).unwrap_err().to_string();
+        assert!(dup.contains("duplicate shard"), "{dup}");
+        let oob = merge_unit_shards(2, 2, [(5, &a)]).unwrap_err().to_string();
+        assert!(oob.contains("unit 5"), "{oob}");
+        let wrong = Matrix::zeros(3, 3);
+        let shape = merge_unit_shards(2, 1, [(0, &wrong)]).unwrap_err().to_string();
+        assert!(shape.contains("3x3"), "{shape}");
     }
 
     #[test]

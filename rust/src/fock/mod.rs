@@ -7,6 +7,9 @@ mod accumulate;
 mod digest;
 mod hcore;
 
-pub use accumulate::{merge_partials, merge_unit_count, unit_ranges, MergeUnit, MERGE_UNITS};
+pub use accumulate::{
+    merge_partials, merge_unit_count, merge_unit_shards, unit_ranges, MergeUnit,
+    MergeUnitParseError, MERGE_UNITS,
+};
 pub use digest::{digest_block, digest_eri, symmetry_factor};
 pub use hcore::core_hamiltonian;

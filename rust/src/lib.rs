@@ -44,6 +44,7 @@ pub mod bench_harness;
 pub mod basis;
 pub mod cli;
 pub mod constructor;
+pub mod dispatch;
 pub mod engines;
 pub mod fock;
 pub mod integrals;

@@ -4,24 +4,28 @@
 //!   scf     run one RHF calculation           (engine, molecule, options)
 //!   report  regenerate non-timing tables/figures (systems|tab4|fig6|compiler|all)
 //!   info    dump the artifact manifest
+//!   worker  serve Fock-build schedule slices for a dispatching coordinator
 //!
 //! Examples:
 //!   matryoshka scf --molecule water --engine matryoshka --stored --verbose
 //!   matryoshka scf --molecule benzene --engine reference
+//!   matryoshka scf --molecule water --basis "6-31g*" --dispatch local:2
+//!   matryoshka worker --listen 0.0.0.0:7070
 //!   matryoshka report all
 
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 
 use matryoshka::basis::build_basis;
 use matryoshka::cli::Args;
-use matryoshka::constructor::SchwarzMode;
+use matryoshka::constructor::{schwarz_calibration_from_path, SchwarzMode};
+use matryoshka::dispatch::{DispatchConfig, DispatchMode};
 use matryoshka::engines::{
     MatryoshkaConfig, MatryoshkaEngine, ReferenceEngine, DEFAULT_STORED_BUDGET_BYTES,
 };
 use matryoshka::integrals::overlap_matrix;
 use matryoshka::linalg::Matrix;
 use matryoshka::molecule::{library, parse_xyz, Molecule};
-use matryoshka::allocator::DEFAULT_WORKING_SET_BYTES;
+use matryoshka::allocator::{probe_working_set, DEFAULT_WORKING_SET_BYTES};
 use matryoshka::pipeline::PipelineMode;
 use matryoshka::report;
 use matryoshka::runtime::{BackendKind, LadderMode};
@@ -33,20 +37,52 @@ fn artifact_dir(args: &Args) -> PathBuf {
 
 fn usage() -> ! {
     eprintln!(
-        "usage: matryoshka <scf|report|info> [options]\n\
+        "usage: matryoshka <scf|report|info|worker> [options]\n\
          \n  scf     --molecule NAME [--basis sto-3g|6-31g*] [--engine matryoshka|reference]\n\
          \u{20}         [--stored] [--stored-budget-mb N] [--backend native|pjrt]\n\
          \u{20}         [--threads N (0 = auto)] [--pipeline staged|lockstep]\n\
-         \u{20}         [--ladder elastic|fixed] [--working-set-kb N] [--wide-opb-max X]\n\
+         \u{20}         [--ladder elastic|fixed] [--working-set-kb N|auto] [--wide-opb-max X]\n\
+         \u{20}         [--dispatch off|local:N|remote:host:port,...] [--dispatch-timeout-ms N]\n\
+         \u{20}         [--schwarz-cal-path FILE]\n\
          \u{20}         [--threshold T] [--max-iter N] [--tile N] [--fixed-batch N]\n\
          \u{20}         [--no-autotune] [--no-cluster] [--random-path]\n\
          \u{20}         [--schwarz exact|estimate] [--artifacts DIR] [--verbose]\n\
          \u{20}         [--xyz FILE] [--damping A] [--properties]\n\
-         \n  report  systems|tab4|fig6|compiler|schedule|all [--artifacts DIR]\n\
+         \n  report  systems|tab4|fig6|compiler|schedule|dispatch|all [--artifacts DIR]\n\
          \u{20}         (schedule: [--molecule NAME] [--basis B] — merge-unit work summary)\n\
-         \n  info    [--backend native|pjrt] [--ladder elastic|fixed] [--artifacts DIR]"
+         \u{20}         (dispatch: [--molecule NAME] [--basis B] [--dispatch-workers N])\n\
+         \n  info    [--backend native|pjrt] [--ladder elastic|fixed] [--artifacts DIR]\n\
+         \n  worker  (--stdio | --listen HOST:PORT [--once]) [--worker-index N]\n\
+         \u{20}         [--schwarz-cal-path FILE]"
     );
     std::process::exit(2);
+}
+
+/// `--working-set-kb N` or `auto` (probe the per-core cache hierarchy,
+/// fall back to the 4 MiB default when sysfs says nothing).
+fn resolve_working_set(args: &Args) -> anyhow::Result<usize> {
+    match args.get("working-set-kb") {
+        Some("auto") => Ok(match probe_working_set() {
+            Some(probe) => {
+                println!(
+                    "allocator: working set auto-probed to {} KiB (per-core L{} cache)",
+                    probe.bytes >> 10,
+                    probe.level
+                );
+                probe.bytes
+            }
+            None => {
+                println!(
+                    "allocator: no cache hierarchy under /sys, working set falls back to {} KiB",
+                    DEFAULT_WORKING_SET_BYTES >> 10
+                );
+                DEFAULT_WORKING_SET_BYTES
+            }
+        }),
+        _ => Ok(args
+            .usize_or("working-set-kb", DEFAULT_WORKING_SET_BYTES >> 10)?
+            .saturating_mul(1 << 10)),
+    }
 }
 
 fn engine_config(args: &Args) -> anyhow::Result<MatryoshkaConfig> {
@@ -67,9 +103,7 @@ fn engine_config(args: &Args) -> anyhow::Result<MatryoshkaConfig> {
         },
         backend: BackendKind::parse(&args.choice("backend", "native", &["native", "pjrt"])?)?,
         ladder: LadderMode::parse(&args.choice("ladder", "elastic", &["elastic", "fixed"])?)?,
-        working_set_bytes: args
-            .usize_or("working-set-kb", DEFAULT_WORKING_SET_BYTES >> 10)?
-            .saturating_mul(1 << 10),
+        working_set_bytes: resolve_working_set(args)?,
         wide_opb_max: args.f64_or("wide-opb-max", matryoshka::pipeline::DEFAULT_WIDE_OPB_MAX)?,
         threads: args.usize_or("threads", 0)?,
         pipeline: PipelineMode::parse(&args.choice(
@@ -77,6 +111,12 @@ fn engine_config(args: &Args) -> anyhow::Result<MatryoshkaConfig> {
             "staged",
             &["staged", "lockstep"],
         )?)?,
+        dispatch: DispatchConfig {
+            mode: DispatchMode::parse(&args.str_or("dispatch", "off"))?,
+            straggler_timeout_ms: args.usize_or("dispatch-timeout-ms", 30_000)? as u64,
+            ..Default::default()
+        },
+        schwarz_cal_path: args.get("schwarz-cal-path").map(str::to_string),
     })
 }
 
@@ -158,6 +198,10 @@ fn cmd_scf(args: &Args) -> anyhow::Result<()> {
                 m.wide_chunks,
                 m.split_chunks
             );
+            if let Some(summary) = engine.dispatch_summary() {
+                println!("engine: dispatch {}", engine.config.dispatch.mode.describe());
+                print!("{summary}");
+            }
             res
         }
         other => anyhow::bail!("unknown engine {other}"),
@@ -228,6 +272,13 @@ fn cmd_report(args: &Args) -> anyhow::Result<()> {
                 &args.str_or("basis", "sto-3g"),
                 args.f64_or("threshold", 1e-10)?,
             )?,
+            // not part of `report all`: it spawns worker subprocesses
+            "dispatch" => report::dispatch_table(
+                &args.str_or("molecule", "water"),
+                &args.str_or("basis", "sto-3g"),
+                args.usize_or("dispatch-workers", 2)?,
+                None,
+            )?,
             other => anyhow::bail!("unknown report {other}"),
         };
         println!("{text}");
@@ -260,12 +311,46 @@ fn cmd_info(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Dispatch worker mode: serve schedule slices over stdio (spawned by a
+/// `--dispatch local:N` coordinator) or TCP (`--dispatch remote:...`).
+/// `--test-stall W:U:MS` and `--test-exit-after-shards N` are
+/// failure-injection hooks for the dispatch tests.
+fn cmd_worker(args: &Args) -> anyhow::Result<()> {
+    use matryoshka::dispatch::worker::{serve_stdio, serve_tcp, StallSpec, WorkerOptions};
+    if let Some(path) = args.get("schwarz-cal-path") {
+        let outcome = schwarz_calibration_from_path(Path::new(path))?;
+        eprintln!("worker: schwarz calibration {} ({path})", outcome.describe());
+    }
+    let opts = WorkerOptions {
+        index: args.usize_or("worker-index", 0)?,
+        stall: match args.get("test-stall") {
+            Some(spec) => Some(StallSpec::parse(spec)?),
+            None => None,
+        },
+        exit_after_shards: match args.get("test-exit-after-shards") {
+            Some(n) => Some(
+                n.parse()
+                    .map_err(|e| anyhow::anyhow!("--test-exit-after-shards: {e}"))?,
+            ),
+            None => None,
+        },
+    };
+    if args.flag("stdio") {
+        serve_stdio(&opts)
+    } else if let Some(addr) = args.get("listen") {
+        serve_tcp(addr, args.flag("once"), &opts)
+    } else {
+        anyhow::bail!("worker needs --stdio (spawned mode) or --listen HOST:PORT")
+    }
+}
+
 fn main() -> anyhow::Result<()> {
     let args = Args::from_env()?;
     match args.positional.first().map(|s| s.as_str()) {
         Some("scf") => cmd_scf(&args),
         Some("report") => cmd_report(&args),
         Some("info") => cmd_info(&args),
+        Some("worker") => cmd_worker(&args),
         _ => usage(),
     }
 }

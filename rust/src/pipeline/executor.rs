@@ -93,6 +93,10 @@ impl UnitOutput {
     }
 }
 
+/// Per-unit result payload of the streaming fan-out: the caught panic
+/// (outer) wrapping the execution result (inner).
+pub type UnitPayload = std::thread::Result<anyhow::Result<UnitOutput>>;
+
 /// A chunk gathered ahead of its unit: the cross-unit prefetch payload a
 /// worker carries from one staged `run_entries` call into the next.
 pub struct Prefetched {
@@ -275,24 +279,27 @@ fn run_entries_linked(
 
 /// The engine's per-worker loop: claim merge units off the shared `next`
 /// counter and run each through the pipeline, carrying the cross-unit
-/// prefetch across unit boundaries.  `sink` receives every unit's payload
-/// (unit id, caught-panic-or-result) and returns whether the worker
-/// should keep claiming; a worker stops on its own after a panic (its
-/// buffers may be poisoned), so surviving workers steal the remainder —
-/// identical semantics to the pre-prefetch fan-out.
+/// prefetch across unit boundaries.  `units` is the (duplicate-free) list
+/// of schedule unit ids this fan-out covers — the engine passes the full
+/// `0..nunits` identity list, a dispatch worker passes its assigned
+/// slice — and `next` indexes into it.  `sink` receives every unit's
+/// payload (unit id, caught-panic-or-result) and returns whether the
+/// worker should keep claiming; a worker stops on its own after a panic
+/// (its buffers may be poisoned), so surviving workers steal the
+/// remainder — identical semantics to the pre-prefetch fan-out.
 pub fn run_unit_stream(
     ctx: &ExecContext<'_>,
     density: &Matrix,
+    units: &[usize],
     next: &AtomicUsize,
-    sink: &mut dyn FnMut(usize, std::thread::Result<anyhow::Result<UnitOutput>>) -> bool,
+    sink: &mut dyn FnMut(usize, UnitPayload) -> bool,
 ) {
-    let nunits = ctx.schedule.units.len();
     let n = ctx.basis.nbf;
     let mut bufs = PipelineBuffers::default();
     let mut carry: Option<Prefetched> = None;
     let claim = |next: &AtomicUsize| {
-        let u = next.fetch_add(1, Ordering::Relaxed);
-        (u < nunits).then_some(u)
+        let i = next.fetch_add(1, Ordering::Relaxed);
+        units.get(i).copied()
     };
     let mut pending = claim(next);
     while let Some(u) = pending {
@@ -320,6 +327,84 @@ pub fn run_unit_stream(
             None => claim(next),
         };
     }
+}
+
+/// Fan the given merge units out over a worker pool with work stealing
+/// and return each unit's output, **sorted by unit id**.  Each worker
+/// runs [`run_unit_stream`]: it claims units off a shared counter,
+/// carries the staged executor's cross-unit prefetch over its own unit
+/// boundaries, and reports per-unit results through a channel.  This is
+/// the one fan-out loop of the system — the in-process engine passes the
+/// full unit list, a dispatch worker process passes the slice the
+/// coordinator assigned it.
+///
+/// Worker panics are caught per unit (inside `run_unit_stream`) and
+/// re-raised here with their original payload after every worker has
+/// drained — the lowest panicked unit wins, so even the panic surfaced is
+/// deterministic.  A worker that panics stops claiming units (its buffer
+/// state may be poisoned); surviving workers steal the remainder.
+/// Backend errors surface the same way: the lowest failed unit's error,
+/// in unit order, deterministically.
+pub fn run_units_streamed(
+    pool: &rayon::ThreadPool,
+    workers: usize,
+    ctx: &ExecContext<'_>,
+    density: &Matrix,
+    units: &[usize],
+) -> anyhow::Result<Vec<(usize, UnitOutput)>> {
+    debug_assert!(
+        {
+            let mut seen = units.to_vec();
+            seen.sort_unstable();
+            seen.windows(2).all(|w| w[0] != w[1])
+        },
+        "unit list must be duplicate-free"
+    );
+    let next = AtomicUsize::new(0);
+    let (tx, rx) = mpsc::channel::<(usize, UnitPayload)>();
+    {
+        let next = &next;
+        // `move` hands the Sender to the op closure (Sender is Send but
+        // not Sync); each worker task gets its own clone, and the
+        // original drops when the op body ends, so `rx` disconnects once
+        // the last worker finishes.
+        pool.scope(move |s| {
+            for _ in 0..workers.max(1) {
+                let tx = tx.clone();
+                s.spawn(move |_| {
+                    run_unit_stream(ctx, density, units, next, &mut |u, payload| {
+                        let poisoned = payload.is_err();
+                        tx.send((u, payload)).is_ok() && !poisoned
+                    });
+                });
+            }
+        });
+    }
+    let mut slots: std::collections::BTreeMap<usize, UnitPayload> =
+        std::collections::BTreeMap::new();
+    for (u, payload) in rx {
+        slots.insert(u, payload);
+    }
+    // surface the lowest panicked unit first, deterministically
+    if slots.values().any(|payload| payload.is_err()) {
+        for (_, payload) in slots {
+            if let Err(panic) = payload {
+                resume_unwind(panic);
+            }
+        }
+        unreachable!("just observed a panicked slot");
+    }
+    let mut ordered: Vec<usize> = units.to_vec();
+    ordered.sort_unstable();
+    let mut outs = Vec::with_capacity(ordered.len());
+    for u in ordered {
+        let payload = slots
+            .remove(&u)
+            .ok_or_else(|| anyhow::anyhow!("Fock worker dropped merge unit {u}"))?;
+        let out = payload.unwrap_or_else(|_| unreachable!("panics re-raised above"))?;
+        outs.push((u, out));
+    }
+    Ok(outs)
 }
 
 /// Sequential baseline: gather → execute → digest per entry, one thread.

@@ -308,6 +308,41 @@ impl ChunkSchedule {
         Ok(ChunkSchedule { entries, units })
     }
 
+    /// Process-stable digest of everything that defines the executed
+    /// work: entry partition, classes, frozen rungs, stage shapes,
+    /// resolved variants, and the merge-unit map.  Two processes that
+    /// build the same schedule from the same inputs agree on this value;
+    /// any drift (different basis, threshold, ladder mode, tuner
+    /// snapshot, working-set budget, …) changes it.  The dispatch
+    /// protocol ships it with every Fock build so a worker can prove it
+    /// reconstructed the coordinator's schedule before executing a slice
+    /// of it.
+    pub fn fingerprint(&self) -> u64 {
+        let mut h = crate::util::Fnv64::new();
+        h.usize(self.entries.len());
+        for e in &self.entries {
+            h.usize(e.entry).usize(e.block).usize(e.start).usize(e.end);
+            h.u8(e.class.0).u8(e.class.1).u8(e.class.2).u8(e.class.3);
+            h.usize(e.rung).usize(e.prior);
+            h.u8(match e.shape {
+                StageShape::Split => 0,
+                StageShape::Wide => 1,
+            });
+            h.u8(e.cacheable as u8);
+            h.str(&e.variant.name);
+            h.usize(e.variant.batch).usize(e.variant.ncomp);
+            h.usize(e.variant.kpair_bra).usize(e.variant.kpair_ket);
+            h.f64(e.variant.flops_per_quad).f64(e.variant.bytes_per_quad);
+        }
+        h.usize(self.units.len());
+        for u in &self.units {
+            h.usize(u.unit).usize(u.entry_start).usize(u.entry_end);
+            h.usize(u.block_start).usize(u.block_end);
+            h.u64(u.quads).f64(u.flops).f64(u.bytes);
+        }
+        h.finish()
+    }
+
     /// Total real quadruples across all entries.
     pub fn total_quads(&self) -> u64 {
         self.units.iter().map(|u| u.quads).sum()
@@ -633,6 +668,33 @@ mod tests {
             };
             assert_eq!(e.variant.batch, want, "entry {}", e.entry);
         }
+    }
+
+    #[test]
+    fn fingerprint_is_stable_and_sensitive() {
+        let (plan, manifest, nbf) = water_inputs();
+        let s = ChunkSchedule::build(&plan, &manifest, &BTreeMap::new(), &policy(), nbf).unwrap();
+        // two independent builds of the same inputs agree (this is what a
+        // dispatch worker recomputes and compares)
+        let t = ChunkSchedule::build(&plan, &manifest, &BTreeMap::new(), &policy(), nbf).unwrap();
+        assert_eq!(s.fingerprint(), t.fingerprint());
+        // a different tuner snapshot re-chunks the work -> different digest
+        let mut batches = BTreeMap::new();
+        for class in manifest.classes() {
+            batches.insert(class, 32);
+        }
+        let narrow =
+            ChunkSchedule::build(&plan, &manifest, &batches, &policy(), nbf).unwrap();
+        assert_ne!(s.fingerprint(), narrow.fingerprint(), "rung movement must change the digest");
+        // so does flipping the stored policy on (cacheable bits flip)
+        let stored = SchedulePolicy {
+            stored: true,
+            stored_budget_bytes: usize::MAX,
+            ..policy()
+        };
+        let cached =
+            ChunkSchedule::build(&plan, &manifest, &BTreeMap::new(), &stored, nbf).unwrap();
+        assert_ne!(s.fingerprint(), cached.fingerprint());
     }
 
     #[test]

@@ -7,9 +7,12 @@ use std::path::Path;
 
 use crate::basis::build_basis;
 use crate::constructor::{BlockPlan, PairList, SchwarzMode};
+use crate::dispatch::{DispatchConfig, DispatchMode};
 use crate::engines::{MatryoshkaConfig, MatryoshkaEngine};
+use crate::linalg::Matrix;
 use crate::molecule::library;
 use crate::runtime::{EriBackend, Manifest, NativeBackend};
+use crate::scf::FockEngine;
 
 /// Load the artifact manifest, falling back to the native backend's
 /// synthetic catalog when no artifacts are compiled (default builds).
@@ -138,6 +141,45 @@ pub fn schedule_summary(molecule: &str, basis_name: &str, threshold: f64) -> any
     let engine = MatryoshkaEngine::new(basis, Path::new("unused"), config)?;
     let schedule = engine.build_schedule()?;
     Ok(schedule.summary(&format!("{molecule} / {basis_name} (first-iteration tuner snapshot)")))
+}
+
+/// `report dispatch`: run two dispatched Fock builds over `workers`
+/// local worker processes and print the per-worker attribution table
+/// (units, quads, est. flops, execute/wall seconds, rebalances).
+/// `worker_bin` overrides the spawned binary — tests must pass their
+/// `CARGO_BIN_EXE_matryoshka` (the test harness binary has no `worker`
+/// subcommand); the CLI passes `None` (current executable).
+pub fn dispatch_table(
+    molecule: &str,
+    basis_name: &str,
+    workers: usize,
+    worker_bin: Option<std::path::PathBuf>,
+) -> anyhow::Result<String> {
+    let mol = library::by_name(molecule)?;
+    let basis = build_basis(&mol, basis_name)?;
+    let config = MatryoshkaConfig {
+        schwarz: SchwarzMode::Estimate,
+        dispatch: DispatchConfig {
+            mode: DispatchMode::Local(workers.max(1)),
+            worker_bin,
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    let n = basis.nbf;
+    let mut engine = MatryoshkaEngine::new(basis, Path::new("unused"), config)?;
+    // two builds on a deterministic density: the second exercises worker
+    // reuse (no respawn) and accumulates into the same attribution table
+    let mut density = Matrix::zeros(n, n);
+    for i in 0..n {
+        for j in 0..n {
+            *density.at_mut(i, j) = 0.3 / (1.0 + (i as f64 - j as f64).abs());
+        }
+    }
+    engine.two_electron(&density)?;
+    engine.two_electron(&density)?;
+    let summary = engine.dispatch_summary().expect("dispatched builds ran");
+    Ok(format!("Dispatch attribution — {molecule} / {basis_name}\n{summary}"))
 }
 
 #[cfg(test)]

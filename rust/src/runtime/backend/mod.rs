@@ -164,6 +164,13 @@ impl BackendKind {
 /// pool to it so the artifact path does not serialize concurrent
 /// executions behind one mutex (the native backend is lock-free on the
 /// execute path and ignores it).
+///
+/// This is also the per-worker construction path of distributed dispatch:
+/// every `matryoshka worker` process builds its own backend from the
+/// [`crate::dispatch::JobSpec`] (kind, kpair, ladder, artifact dir travel
+/// on the wire by name), so the catalog a worker schedules against is the
+/// same pure function of the spec on every host — a drift shows up as a
+/// schedule-fingerprint mismatch, not silently different kernels.
 pub fn create_backend(
     kind: BackendKind,
     artifact_dir: &Path,

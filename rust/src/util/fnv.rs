@@ -1,0 +1,112 @@
+//! FNV-1a 64-bit hashing — the repo's fingerprint primitive.
+//!
+//! Fingerprints cross trust boundaries (schedule digests shipped to
+//! dispatch workers, the Schwarz calibration-file stale guard), so they
+//! must be stable across processes, hosts and compilations: FNV-1a over
+//! explicitly-encoded little-endian bytes, never `std::hash` (whose
+//! output is unspecified across releases and randomized for HashMap).
+//! Floats hash via `to_bits`, so bitwise-different schedules fingerprint
+//! differently and bitwise-equal ones always agree.
+
+/// Incremental FNV-1a 64-bit hasher.
+#[derive(Clone, Copy, Debug)]
+pub struct Fnv64(u64);
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+impl Default for Fnv64 {
+    fn default() -> Self {
+        Fnv64::new()
+    }
+}
+
+impl Fnv64 {
+    pub fn new() -> Fnv64 {
+        Fnv64(FNV_OFFSET)
+    }
+
+    pub fn bytes(&mut self, bytes: &[u8]) -> &mut Self {
+        for &b in bytes {
+            self.0 ^= b as u64;
+            self.0 = self.0.wrapping_mul(FNV_PRIME);
+        }
+        self
+    }
+
+    pub fn u8(&mut self, v: u8) -> &mut Self {
+        self.bytes(&[v])
+    }
+
+    pub fn u64(&mut self, v: u64) -> &mut Self {
+        self.bytes(&v.to_le_bytes())
+    }
+
+    pub fn usize(&mut self, v: usize) -> &mut Self {
+        self.u64(v as u64)
+    }
+
+    /// Hash the exact bit pattern of an f64 (−0.0 ≠ 0.0, NaNs distinct).
+    pub fn f64(&mut self, v: f64) -> &mut Self {
+        self.u64(v.to_bits())
+    }
+
+    /// Length-prefixed string hash (prefixing keeps "ab","c" ≠ "a","bc").
+    pub fn str(&mut self, s: &str) -> &mut Self {
+        self.usize(s.len());
+        self.bytes(s.as_bytes())
+    }
+
+    pub fn finish(&self) -> u64 {
+        self.0
+    }
+}
+
+/// One-shot FNV-1a 64 over a byte slice.
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h = Fnv64::new();
+    h.bytes(bytes);
+    h.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matches_known_fnv1a_vectors() {
+        // published FNV-1a 64 test vectors
+        assert_eq!(fnv1a64(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a64(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(fnv1a64(b"foobar"), 0x85944171f73967e8);
+    }
+
+    #[test]
+    fn builder_is_order_and_length_sensitive() {
+        let mut a = Fnv64::new();
+        a.str("ab").str("c");
+        let mut b = Fnv64::new();
+        b.str("a").str("bc");
+        assert_ne!(a.finish(), b.finish(), "length prefix must separate fields");
+
+        let mut x = Fnv64::new();
+        x.u64(1).u64(2);
+        let mut y = Fnv64::new();
+        y.u64(2).u64(1);
+        assert_ne!(x.finish(), y.finish());
+    }
+
+    #[test]
+    fn f64_hashes_bit_patterns() {
+        let mut a = Fnv64::new();
+        a.f64(0.0);
+        let mut b = Fnv64::new();
+        b.f64(-0.0);
+        assert_ne!(a.finish(), b.finish());
+        let mut c = Fnv64::new();
+        c.f64(1.5);
+        let mut d = Fnv64::new();
+        d.f64(1.5);
+        assert_eq!(c.finish(), d.finish());
+    }
+}

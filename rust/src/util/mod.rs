@@ -1,7 +1,10 @@
-//! Small shared utilities: deterministic RNG, timing helpers.
+//! Small shared utilities: deterministic RNG, timing helpers, and the
+//! process-stable FNV-1a fingerprint hasher.
 
+mod fnv;
 mod rng;
 mod timer;
 
+pub use fnv::{fnv1a64, Fnv64};
 pub use rng::XorShift;
 pub use timer::Stopwatch;

@@ -1,0 +1,332 @@
+//! Distributed-dispatch acceptance tests.
+//!
+//! The acceptance bar (ISSUE 5): G and the final SCF energy must be
+//! **bitwise identical** across in-process, `--dispatch local:1` and
+//! `--dispatch local:2` builds; the unit-order merge must survive
+//! work-stealing rebalance; a worker crash must surface as a dispatcher
+//! error (never a hang); and a schedule-fingerprint mismatch must be
+//! rejected before any unit executes.
+//!
+//! Local workers are real subprocesses of the `matryoshka` binary
+//! (`CARGO_BIN_EXE_matryoshka` — the test harness binary itself has no
+//! `worker` subcommand).  Remote mode is exercised over loopback TCP
+//! with in-thread workers running the same `dispatch::worker::serve`.
+
+use std::collections::BTreeMap;
+use std::io::{BufReader, BufWriter};
+use std::net::{TcpListener, TcpStream};
+use std::path::{Path, PathBuf};
+
+use matryoshka::basis::build_basis;
+use matryoshka::constructor::SchwarzMode;
+use matryoshka::dispatch::proto::{read_msg, write_msg};
+use matryoshka::dispatch::worker::{serve, WorkerOptions};
+use matryoshka::dispatch::{DispatchConfig, DispatchMode, JobSpec, Msg, PROTO_VERSION};
+use matryoshka::engines::{MatryoshkaConfig, MatryoshkaEngine};
+use matryoshka::linalg::Matrix;
+use matryoshka::molecule::library;
+use matryoshka::pipeline::PipelineMode;
+use matryoshka::runtime::{BackendKind, LadderMode};
+use matryoshka::scf::{run_rhf, FockEngine, ScfOptions};
+
+fn worker_bin() -> PathBuf {
+    PathBuf::from(env!("CARGO_BIN_EXE_matryoshka"))
+}
+
+fn test_density(n: usize) -> Matrix {
+    let mut d = Matrix::zeros(n, n);
+    for i in 0..n {
+        for j in 0..n {
+            let v = 0.3 / (1.0 + (i as f64 - j as f64).abs());
+            *d.at_mut(i, j) = v;
+            *d.at_mut(j, i) = v;
+        }
+    }
+    d
+}
+
+fn engine(molecule: &str, basis_name: &str, config: MatryoshkaConfig) -> MatryoshkaEngine {
+    let mol = library::by_name(molecule).unwrap();
+    let basis = build_basis(&mol, basis_name).unwrap();
+    MatryoshkaEngine::new(basis, Path::new("unused"), config).unwrap()
+}
+
+fn local_dispatch(n: usize) -> DispatchConfig {
+    DispatchConfig {
+        mode: DispatchMode::Local(n),
+        worker_bin: Some(worker_bin()),
+        ..Default::default()
+    }
+}
+
+#[test]
+fn dispatched_g_is_bitwise_identical_to_in_process_on_631gstar_water() {
+    // 6-31G* water lights up the d classes, multiple merge units, and
+    // both stage shapes — the full execution surface crosses the wire
+    let mol = library::by_name("water").unwrap();
+    let basis = build_basis(&mol, "6-31g*").unwrap();
+    let d = test_density(basis.nbf);
+
+    let mut in_process = engine("water", "6-31g*", MatryoshkaConfig::default());
+    let g_ref = in_process.two_electron(&d).unwrap();
+
+    for workers in [1usize, 2] {
+        let config = MatryoshkaConfig { dispatch: local_dispatch(workers), ..Default::default() };
+        let mut e = engine("water", "6-31g*", config);
+        let g = e.two_electron(&d).unwrap();
+        assert_eq!(
+            g_ref.data(),
+            g.data(),
+            "local:{workers} G diverged from the in-process build"
+        );
+        // a second build reuses the same workers (no respawn) and must
+        // stay bitwise identical too
+        let g2 = e.two_electron(&d).unwrap();
+        assert_eq!(g_ref.data(), g2.data(), "local:{workers} second build diverged");
+        let stats = e.dispatch_stats().expect("dispatched builds ran");
+        assert_eq!(stats.len(), workers);
+        let units: u64 = stats.iter().map(|s| s.units).sum();
+        let schedule = e.build_schedule().unwrap();
+        assert_eq!(units, 2 * schedule.units.len() as u64, "every unit attributed, twice");
+        if workers == 2 {
+            assert!(
+                stats.iter().all(|s| s.units > 0),
+                "both workers should have contributed: {stats:?}"
+            );
+        }
+    }
+}
+
+#[test]
+fn dispatched_scf_energy_is_exactly_the_in_process_energy() {
+    let mol = library::by_name("water").unwrap();
+    let basis = build_basis(&mol, "6-31g*").unwrap();
+    let opts = ScfOptions::default();
+
+    let mut reference = engine("water", "6-31g*", MatryoshkaConfig::default());
+    let res_ref = run_rhf(&mol, &basis, &mut reference, &opts).unwrap();
+    assert!(res_ref.converged);
+
+    let config = MatryoshkaConfig { dispatch: local_dispatch(2), ..Default::default() };
+    let mut dispatched = engine("water", "6-31g*", config);
+    let res = run_rhf(&mol, &basis, &mut dispatched, &opts).unwrap();
+    assert!(res.converged);
+
+    // every Fock build is bitwise identical, so the whole SCF trajectory
+    // is too: exact equality, not a tolerance
+    assert_eq!(res.energy, res_ref.energy, "dispatched SCF drifted");
+    assert_eq!(res.iterations, res_ref.iterations);
+    assert_eq!(res.energy_trace, res_ref.energy_trace);
+}
+
+#[test]
+fn remote_tcp_dispatch_matches_in_process_bitwise() {
+    // in-thread TCP workers: same serve loop the `worker --listen` CLI
+    // runs, dialed through DispatchMode::Remote
+    let mut addrs = Vec::new();
+    let mut handles = Vec::new();
+    for index in 0..2usize {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        addrs.push(listener.local_addr().unwrap().to_string());
+        handles.push(std::thread::spawn(move || -> anyhow::Result<()> {
+            let (stream, _) = listener.accept()?;
+            stream.set_nodelay(true).ok();
+            let mut r = BufReader::new(stream.try_clone()?);
+            let mut w = BufWriter::new(stream);
+            serve(&mut r, &mut w, &WorkerOptions { index, ..Default::default() })
+        }));
+    }
+
+    let mol = library::by_name("water").unwrap();
+    let basis = build_basis(&mol, "sto-3g").unwrap();
+    let d = test_density(basis.nbf);
+    let mut in_process = engine("water", "sto-3g", MatryoshkaConfig::default());
+    let g_ref = in_process.two_electron(&d).unwrap();
+
+    let config = MatryoshkaConfig {
+        dispatch: DispatchConfig {
+            mode: DispatchMode::Remote(addrs),
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    let mut e = engine("water", "sto-3g", config);
+    let g = e.two_electron(&d).unwrap();
+    assert_eq!(g_ref.data(), g.data(), "remote TCP G diverged");
+    drop(e); // sends Shutdown; workers exit their serve loops cleanly
+    for h in handles {
+        h.join().unwrap().unwrap();
+    }
+}
+
+#[test]
+fn work_stealing_rebalance_preserves_the_unit_order_merge_bitwise() {
+    // worker 0 stalls 2.5s before delivering its first shard; with a
+    // 200ms straggler timeout the dispatcher must rebalance worker 0's
+    // outstanding units onto worker 1 and still produce the identical G
+    // (first shard per unit wins; both are bitwise the same anyway)
+    let mol = library::by_name("water").unwrap();
+    let basis = build_basis(&mol, "sto-3g").unwrap();
+    let d = test_density(basis.nbf);
+    let mut in_process = engine("water", "sto-3g", MatryoshkaConfig::default());
+    let g_ref = in_process.two_electron(&d).unwrap();
+
+    let config = MatryoshkaConfig {
+        dispatch: DispatchConfig {
+            mode: DispatchMode::Local(2),
+            worker_bin: Some(worker_bin()),
+            straggler_timeout_ms: 200,
+            worker_args: vec!["--test-stall".into(), "0:0:2500".into()],
+        },
+        ..Default::default()
+    };
+    let mut e = engine("water", "sto-3g", config);
+    let g = e.two_electron(&d).unwrap();
+    assert_eq!(g_ref.data(), g.data(), "rebalanced G diverged from the in-process build");
+    let stats = e.dispatch_stats().expect("dispatched build ran");
+    assert!(
+        stats.iter().any(|s| s.rebalanced_away > 0),
+        "the stalled worker's units were never rebalanced: {stats:?}"
+    );
+    // the healthy worker must have carried (at least) the stolen units
+    assert!(stats.iter().any(|s| s.units > 0 && s.rebalanced_away == 0), "{stats:?}");
+}
+
+#[test]
+fn worker_crash_surfaces_as_a_dispatcher_error_not_a_hang() {
+    // both workers drop their connection after one shard — the reader
+    // threads see EOF and the build must fail fast with a real error
+    let config = MatryoshkaConfig {
+        dispatch: DispatchConfig {
+            mode: DispatchMode::Local(2),
+            worker_bin: Some(worker_bin()),
+            straggler_timeout_ms: 500,
+            worker_args: vec!["--test-exit-after-shards".into(), "1".into()],
+        },
+        ..Default::default()
+    };
+    let mol = library::by_name("water").unwrap();
+    let basis = build_basis(&mol, "sto-3g").unwrap();
+    let d = test_density(basis.nbf);
+    let mut e = engine("water", "sto-3g", config);
+    let started = std::time::Instant::now();
+    let err = e.two_electron(&d).unwrap_err().to_string();
+    assert!(
+        err.contains("disconnected"),
+        "crash must surface as a disconnect error, got: {err}"
+    );
+    assert!(
+        started.elapsed() < std::time::Duration::from_secs(60),
+        "crash detection took {:?} — that is a hang, not an error path",
+        started.elapsed()
+    );
+}
+
+#[test]
+fn schedule_fingerprint_mismatch_is_rejected_before_any_execution() {
+    // drive a real worker through the protocol by hand and hand it a
+    // Build whose fingerprint cannot match: the worker must refuse with
+    // an Error frame (and die with the same message), never execute
+    let mol = library::by_name("water").unwrap();
+    let basis = build_basis(&mol, "sto-3g").unwrap();
+    let nbf = basis.nbf;
+    let spec = JobSpec {
+        title: "fingerprint mismatch test".into(),
+        basis,
+        threshold: 1e-10,
+        tile: 64,
+        clustered: true,
+        greedy_path: true,
+        fixed_batch: 512,
+        schwarz: SchwarzMode::Exact,
+        backend: BackendKind::Native,
+        ladder: LadderMode::Elastic,
+        working_set_bytes: 4 << 20,
+        wide_opb_max: 4.0,
+        threads: 1,
+        pipeline: PipelineMode::Staged,
+        artifact_dir: "unused".into(),
+        schwarz_cal_path: None,
+    };
+
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let worker = std::thread::spawn(move || -> anyhow::Result<()> {
+        let (stream, _) = listener.accept()?;
+        let mut r = BufReader::new(stream.try_clone()?);
+        let mut w = BufWriter::new(stream);
+        serve(&mut r, &mut w, &WorkerOptions::default())
+    });
+
+    let stream = TcpStream::connect(addr).unwrap();
+    let mut r = BufReader::new(stream.try_clone().unwrap());
+    let mut w = BufWriter::new(stream);
+    match read_msg(&mut r).unwrap() {
+        Msg::Hello { version } => assert_eq!(version, PROTO_VERSION),
+        other => panic!("expected Hello, got {}", other.kind()),
+    }
+    write_msg(&mut w, &Msg::Setup { spec: Box::new(spec) }).unwrap();
+    match read_msg(&mut r).unwrap() {
+        Msg::SetupAck { nbf: got, .. } => assert_eq!(got, nbf),
+        other => panic!("expected SetupAck, got {}", other.kind()),
+    }
+    write_msg(
+        &mut w,
+        &Msg::Build {
+            iter: 1,
+            fingerprint: 0xdead_beef,
+            snapshot: BTreeMap::new(),
+            density: Matrix::zeros(nbf, nbf),
+        },
+    )
+    .unwrap();
+    match read_msg(&mut r).unwrap() {
+        Msg::Error { message } => {
+            assert!(message.contains("fingerprint mismatch"), "{message}");
+            assert!(message.contains("refusing to execute"), "{message}");
+        }
+        other => panic!("expected Error, got {}", other.kind()),
+    }
+    let err = worker.join().unwrap().unwrap_err().to_string();
+    assert!(err.contains("fingerprint mismatch"), "{err}");
+}
+
+#[test]
+fn report_dispatch_table_attributes_every_worker() {
+    let table =
+        matryoshka::report::dispatch_table("water", "sto-3g", 2, Some(worker_bin())).unwrap();
+    assert!(table.contains("Dispatch attribution"), "{table}");
+    assert!(table.contains("local:0"), "{table}");
+    assert!(table.contains("local:1"), "{table}");
+    assert!(table.contains("2 Fock build(s)"), "{table}");
+    assert!(table.contains("flop balance"), "{table}");
+}
+
+#[test]
+fn dispatched_build_with_persisted_schwarz_calibration_stays_bitwise() {
+    // the coordinator calibrates + writes the table; the spec carries the
+    // path, so every worker loads it instead of recalibrating — and the
+    // corrected Estimate screening stays bitwise identical end to end
+    let cal = std::env::temp_dir()
+        .join(format!("matryoshka_dispatch_cal_{}.txt", std::process::id()));
+    let _ = std::fs::remove_file(&cal);
+    let mol = library::by_name("water").unwrap();
+    let basis = build_basis(&mol, "6-31g*").unwrap();
+    let d = test_density(basis.nbf);
+
+    let base = MatryoshkaConfig { schwarz: SchwarzMode::Estimate, ..Default::default() };
+    let mut in_process = engine("water", "6-31g*", base.clone());
+    let g_ref = in_process.two_electron(&d).unwrap();
+
+    let config = MatryoshkaConfig {
+        schwarz: SchwarzMode::Estimate,
+        schwarz_cal_path: Some(cal.to_string_lossy().into_owned()),
+        dispatch: local_dispatch(2),
+        ..base
+    };
+    let mut e = engine("water", "6-31g*", config);
+    let g = e.two_electron(&d).unwrap();
+    assert_eq!(g_ref.data(), g.data(), "persisted-calibration dispatch diverged");
+    assert!(cal.exists(), "coordinator must have written the calibration table");
+    let _ = std::fs::remove_file(&cal);
+}
