@@ -244,4 +244,81 @@ fn main() {
         }
     }
     println!("(G asserted bitwise-identical across process boundaries — the dispatch guarantee)");
+
+    bh::header("Fig. 13f — graph-compiled kernels vs memoized tables (per class)");
+    println!(
+        "{:<14} {:>6} {:>7} {:>11} {:>11} {:>9}",
+        "class", "ncomp", "quads", "tables_s", "kernels_s", "speedup"
+    );
+    // SoA straight-line kernels against the table interpreter on the same
+    // chunks: the d-heavy classes are where the unrolled recurrences and
+    // the batch-major inner loop pay off.  Rows also land in
+    // BENCH_fig13.json for machine consumption.
+    let mut json_rows: Vec<String> = Vec::new();
+    for (bra_c, ket_c) in [
+        ((0, 0), (0, 0)),
+        ((1, 1), (0, 0)),
+        ((1, 1), (1, 1)),
+        ((2, 2), (0, 0)),
+        ((2, 2), (1, 1)),
+        ((2, 2), (2, 2)),
+    ] {
+        let (bra, ket) = (pair_of(bra_c), pair_of(ket_c));
+        let class = (bra_c.0, bra_c.1, ket_c.0, ket_c.1);
+        let time_with = |strategy: EriEvalStrategy| {
+            let backend = NativeBackend::with_options(pairs.kpair, strategy);
+            let variant = backend.manifest().ladder(class)[1].clone(); // mid rung
+            let (b, kb, kk) = (variant.batch, variant.kpair_bra, variant.kpair_ket);
+            let mut bp = vec![0.0; b * kb * 5];
+            let mut bg = vec![0.0; b * 6];
+            let mut kp = vec![0.0; b * kk * 5];
+            let mut kg = vec![0.0; b * 6];
+            for r in 0..b {
+                bp[r * kb * 5..(r + 1) * kb * 5].copy_from_slice(&bra.prim);
+                kp[r * kk * 5..(r + 1) * kk * 5].copy_from_slice(&ket.prim);
+                bg[r * 6..(r + 1) * 6].copy_from_slice(&bra.geom);
+                kg[r * 6..(r + 1) * 6].copy_from_slice(&ket.geom);
+            }
+            backend.execute_eri(&variant, &bp, &bg, &kp, &kg).expect("warm");
+            let mut best = f64::INFINITY;
+            for _ in 0..reps {
+                let sw = Stopwatch::start();
+                backend.execute_eri(&variant, &bp, &bg, &kp, &kg).expect("measured");
+                best = best.min(sw.elapsed_s());
+            }
+            (best, variant.ncomp, b)
+        };
+        let (t_tab, ncomp, b) = time_with(EriEvalStrategy::Tables);
+        let (t_ker, _, _) = time_with(EriEvalStrategy::Kernels);
+        let speedup = t_tab / t_ker.max(1e-12);
+        println!(
+            "{:<14} {:>6} {:>7} {:>11.5} {:>11.5} {:>8.2}x",
+            format!("{class:?}"),
+            ncomp,
+            b,
+            t_tab,
+            t_ker,
+            speedup
+        );
+        json_rows.push(format!(
+            "    {{\"class\": [{}, {}, {}, {}], \"ncomp\": {}, \"batch\": {}, \
+             \"tables_s\": {:.6e}, \"kernels_s\": {:.6e}, \"speedup\": {:.3}}}",
+            class.0, class.1, class.2, class.3, ncomp, b, t_tab, t_ker, speedup
+        ));
+        // the generated straight-line code must not lose to the
+        // interpreter on the heaviest class (10% noise allowance)
+        if class == (2, 2, 2, 2) {
+            assert!(
+                t_ker < t_tab * 1.10,
+                "{class:?}: graph-compiled kernel not faster than the table interpreter"
+            );
+        }
+    }
+    let json = format!(
+        "{{\n  \"figure\": \"fig13\",\n  \"section\": \"kernels_vs_tables\",\n  \
+         \"rows\": [\n{}\n  ]\n}}\n",
+        json_rows.join(",\n")
+    );
+    std::fs::write("BENCH_fig13.json", &json).expect("write BENCH_fig13.json");
+    println!("(rows written to BENCH_fig13.json; straight-line SoA kernels vs table interpreter)");
 }

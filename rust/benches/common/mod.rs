@@ -9,7 +9,9 @@
 //! count (default: all cores); `MATRYOSHKA_PIPELINE=staged|lockstep`
 //! overrides the worker pipeline mode (default: staged);
 //! `MATRYOSHKA_LADDER=elastic|fixed` overrides the batch-ladder mode
-//! (default: elastic).
+//! (default: elastic); `MATRYOSHKA_ERI_STRATEGY=kernels|tables|recursion`
+//! overrides the native chunk evaluator (default: kernels — the
+//! graph-compiled per-class kernels).
 
 use std::path::{Path, PathBuf};
 
@@ -19,7 +21,9 @@ use matryoshka::engines::{MatryoshkaConfig, MatryoshkaEngine};
 use matryoshka::linalg::Matrix;
 use matryoshka::molecule::{library, Molecule};
 use matryoshka::pipeline::PipelineMode;
-use matryoshka::runtime::{BackendKind, EriBackend, LadderMode, Manifest, NativeBackend};
+use matryoshka::runtime::{
+    BackendKind, EriBackend, EriEvalStrategy, LadderMode, Manifest, NativeBackend,
+};
 
 pub fn artifact_dir() -> Option<PathBuf> {
     let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
@@ -45,6 +49,15 @@ fn env_ladder() -> LadderMode {
     match std::env::var("MATRYOSHKA_LADDER") {
         Ok(l) => LadderMode::parse(&l).expect("MATRYOSHKA_LADDER"),
         Err(_) => LadderMode::default(),
+    }
+}
+
+/// The `MATRYOSHKA_ERI_STRATEGY` override, defaulting to the config
+/// default (the graph-compiled kernels).
+pub fn env_strategy() -> EriEvalStrategy {
+    match std::env::var("MATRYOSHKA_ERI_STRATEGY") {
+        Ok(s) => EriEvalStrategy::parse(&s).expect("MATRYOSHKA_ERI_STRATEGY"),
+        Err(_) => EriEvalStrategy::default(),
     }
 }
 
@@ -78,6 +91,7 @@ pub fn engine(basis: BasisSet, mut config: MatryoshkaConfig) -> MatryoshkaEngine
         config.pipeline = PipelineMode::parse(&p).expect("MATRYOSHKA_PIPELINE");
     }
     config.ladder = env_ladder();
+    config.eri_strategy = env_strategy();
     engine_pinned_config(basis, config)
 }
 

@@ -1,0 +1,22 @@
+//! Runs the graph-compiler kernel generator at build time and writes the
+//! straight-line per-class ERI kernels to `$OUT_DIR`; the crate pulls
+//! them in via `include!` from `runtime::backend::kernels`.  The same
+//! generator module is also compiled into the crate so the `matryoshka
+//! codegen` subcommand can re-render the source for the committed
+//! snapshot and the CI drift check.
+
+#[path = "src/runtime/backend/kernels/codegen.rs"]
+mod codegen;
+
+use std::path::Path;
+
+fn main() {
+    println!("cargo:rerun-if-changed=src/runtime/backend/kernels/codegen.rs");
+    let out_dir = std::env::var("OUT_DIR").expect("OUT_DIR not set");
+    let path = Path::new(&out_dir).join("eri_kernels_generated.rs");
+    let source = codegen::generated_source();
+    // Only rewrite on change so incremental builds stay incremental.
+    if std::fs::read_to_string(&path).map(|old| old == source) != Ok(true) {
+        std::fs::write(&path, source).expect("write generated kernels");
+    }
+}

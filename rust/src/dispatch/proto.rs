@@ -33,11 +33,11 @@ use crate::constructor::SchwarzMode;
 use crate::linalg::Matrix;
 use crate::metrics::{ClassStats, EngineMetrics};
 use crate::pipeline::PipelineMode;
-use crate::runtime::{BackendKind, ClassKey, LadderMode};
+use crate::runtime::{BackendKind, ClassKey, EriEvalStrategy, LadderMode};
 
 /// Bumped whenever the frame layout changes; `Hello` carries it so a
 /// version-skewed worker fails loudly at connect time.
-pub const PROTO_VERSION: u32 = 1;
+pub const PROTO_VERSION: u32 = 2;
 
 /// Upper bound on a single frame (density and partial-G frames are
 /// nbf²×8 bytes — 256 MiB covers nbf up to ~5700 with header room to
@@ -61,6 +61,7 @@ pub struct JobSpec {
     pub schwarz: SchwarzMode,
     pub backend: BackendKind,
     pub ladder: LadderMode,
+    pub eri_strategy: EriEvalStrategy,
     pub working_set_bytes: usize,
     pub wide_opb_max: f64,
     /// worker-local Fock thread count (0 = auto on the worker host);
@@ -174,6 +175,11 @@ impl Enc {
             self.usize(*rung);
             self.class_stats(s);
         }
+        self.usize(m.per_strategy.len());
+        for (name, secs) in &m.per_strategy {
+            self.str(name);
+            self.f64(*secs);
+        }
         self.u64(m.wide_chunks);
         self.u64(m.split_chunks);
         self.f64(m.digest_seconds);
@@ -211,6 +217,7 @@ impl Enc {
         self.str(spec.schwarz.name());
         self.str(spec.backend.name());
         self.str(spec.ladder.name());
+        self.str(spec.eri_strategy.name());
         self.usize(spec.working_set_bytes);
         self.f64(spec.wide_opb_max);
         self.usize(spec.threads);
@@ -341,6 +348,13 @@ impl<'a> Dec<'a> {
             let rung = self.usize()?;
             m.per_rung.insert((class, rung), self.class_stats()?);
         }
+        // strategy entries: 8B name-length prefix + 8B seconds minimum
+        let nstrat = self.count(8 + 8)?;
+        for _ in 0..nstrat {
+            let name = self.str()?;
+            let secs = self.f64()?;
+            m.per_strategy.insert(name, secs);
+        }
         m.wide_chunks = self.u64()?;
         m.split_chunks = self.u64()?;
         m.digest_seconds = self.f64()?;
@@ -389,6 +403,7 @@ impl<'a> Dec<'a> {
             schwarz: SchwarzMode::parse(&self.str()?)?,
             backend: BackendKind::parse(&self.str()?)?,
             ladder: LadderMode::parse(&self.str()?)?,
+            eri_strategy: EriEvalStrategy::parse(&self.str()?)?,
             working_set_bytes: self.usize()?,
             wide_opb_max: self.f64()?,
             threads: self.usize()?,
@@ -610,6 +625,7 @@ mod tests {
             schwarz: SchwarzMode::Exact,
             backend: BackendKind::Native,
             ladder: LadderMode::Elastic,
+            eri_strategy: EriEvalStrategy::Kernels,
             working_set_bytes: 4 << 20,
             wide_opb_max: 4.0,
             threads: 2,
@@ -642,6 +658,8 @@ mod tests {
 
         let mut metrics = EngineMetrics::default();
         metrics.record_entry((2, 0, 0, 0), 32, false, 30, 32, 0.1 + 0.2); // inexact sum
+        metrics.record_strategy("kernels", 0.1 + 0.2);
+        metrics.record_strategy("tables", 1.0 / 3.0);
         metrics.gather_seconds = 0.3;
         metrics.pipeline_wall_seconds = f64::from_bits(0x3FB9_9999_9999_999A);
 

@@ -100,6 +100,7 @@ impl WorkerState {
             spec.basis.max_kpair().max(1),
             threads,
             spec.ladder,
+            spec.eri_strategy,
         )?;
         let pairs = PairList::build_with_mode(&spec.basis, spec.threshold, spec.schwarz);
         let plan = BlockPlan::build(&pairs, spec.threshold, spec.tile, spec.clustered);

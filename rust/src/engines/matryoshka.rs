@@ -39,7 +39,9 @@ use crate::pipeline::{
     run_entries, run_units_streamed, CachedChunk, ChunkSchedule, ExecContext, PipelineBuffers,
     PipelineMode, SchedulePolicy, UnitOutput, DEFAULT_WIDE_OPB_MAX,
 };
-use crate::runtime::{create_backend, BackendKind, ClassKey, EriBackend, LadderMode};
+use crate::runtime::{
+    create_backend, BackendKind, ClassKey, EriBackend, EriEvalStrategy, LadderMode,
+};
 use crate::scf::FockEngine;
 use crate::util::Stopwatch;
 
@@ -75,6 +77,9 @@ pub struct MatryoshkaConfig {
     /// derives rungs from each class's operational intensity (Workload
     /// Allocator v2), `Fixed` is the one-size 32/128/512 A/B baseline
     pub ladder: LadderMode,
+    /// how the native backend evaluates chunks: graph-compiled `Kernels`
+    /// (default), the `Tables` oracle, or the `Recursion` baseline
+    pub eri_strategy: EriEvalStrategy,
     /// working-set budget of the tuner's intensity prior: each class is
     /// seeded on the largest rung whose gather+value bytes fit this
     /// (L2-ish) budget instead of always starting the climb at rung 0
@@ -116,6 +121,7 @@ impl Default for MatryoshkaConfig {
             schwarz: SchwarzMode::Exact,
             backend: BackendKind::Native,
             ladder: LadderMode::Elastic,
+            eri_strategy: EriEvalStrategy::default(),
             working_set_bytes: DEFAULT_WORKING_SET_BYTES,
             wide_opb_max: DEFAULT_WIDE_OPB_MAX,
             threads: 0,
@@ -185,6 +191,7 @@ impl MatryoshkaEngine {
             basis.max_kpair().max(1),
             resolve_threads(&config),
             config.ladder,
+            config.eri_strategy,
         )?;
         let mut engine = Self::with_backend(basis, backend, config)?;
         engine.artifact_dir = artifact_dir.to_path_buf();
@@ -415,6 +422,7 @@ impl MatryoshkaEngine {
             schwarz: self.config.schwarz,
             backend: self.config.backend,
             ladder: self.config.ladder,
+            eri_strategy: self.config.eri_strategy,
             working_set_bytes: self.config.working_set_bytes,
             wide_opb_max: self.config.wide_opb_max,
             threads: worker_threads,

@@ -5,6 +5,7 @@
 //!   report  regenerate non-timing tables/figures (systems|tab4|fig6|compiler|all)
 //!   info    dump the artifact manifest
 //!   worker  serve Fock-build schedule slices for a dispatching coordinator
+//!   codegen re-emit the graph-compiled ERI kernel source (drift check)
 //!
 //! Examples:
 //!   matryoshka scf --molecule water --engine matryoshka --stored --verbose
@@ -28,7 +29,7 @@ use matryoshka::molecule::{library, parse_xyz, Molecule};
 use matryoshka::allocator::{probe_working_set, DEFAULT_WORKING_SET_BYTES};
 use matryoshka::pipeline::PipelineMode;
 use matryoshka::report;
-use matryoshka::runtime::{BackendKind, LadderMode};
+use matryoshka::runtime::{BackendKind, EriEvalStrategy, LadderMode};
 use matryoshka::scf::{dipole_moment, mulliken_charges, run_rhf, ScfOptions};
 
 fn artifact_dir(args: &Args) -> PathBuf {
@@ -37,9 +38,10 @@ fn artifact_dir(args: &Args) -> PathBuf {
 
 fn usage() -> ! {
     eprintln!(
-        "usage: matryoshka <scf|report|info|worker> [options]\n\
+        "usage: matryoshka <scf|report|info|worker|codegen> [options]\n\
          \n  scf     --molecule NAME [--basis sto-3g|6-31g*] [--engine matryoshka|reference]\n\
          \u{20}         [--stored] [--stored-budget-mb N] [--backend native|pjrt]\n\
+         \u{20}         [--eri-strategy kernels|tables|recursion]\n\
          \u{20}         [--threads N (0 = auto)] [--pipeline staged|lockstep]\n\
          \u{20}         [--ladder elastic|fixed] [--working-set-kb N|auto] [--wide-opb-max X]\n\
          \u{20}         [--dispatch off|local:N|remote:host:port,...] [--dispatch-timeout-ms N]\n\
@@ -52,8 +54,11 @@ fn usage() -> ! {
          \u{20}         (schedule: [--molecule NAME] [--basis B] — merge-unit work summary)\n\
          \u{20}         (dispatch: [--molecule NAME] [--basis B] [--dispatch-workers N])\n\
          \n  info    [--backend native|pjrt] [--ladder elastic|fixed] [--artifacts DIR]\n\
+         \u{20}         [--eri-strategy kernels|tables|recursion]\n\
          \n  worker  (--stdio | --listen HOST:PORT [--once]) [--worker-index N]\n\
-         \u{20}         [--schwarz-cal-path FILE]"
+         \u{20}         [--schwarz-cal-path FILE]\n\
+         \n  codegen (--write FILE | --check FILE) — emit/verify the generated\n\
+         \u{20}         ERI kernel source (CI drift job re-runs the generator)"
     );
     std::process::exit(2);
 }
@@ -103,6 +108,11 @@ fn engine_config(args: &Args) -> anyhow::Result<MatryoshkaConfig> {
         },
         backend: BackendKind::parse(&args.choice("backend", "native", &["native", "pjrt"])?)?,
         ladder: LadderMode::parse(&args.choice("ladder", "elastic", &["elastic", "fixed"])?)?,
+        eri_strategy: EriEvalStrategy::parse(&args.choice(
+            "eri-strategy",
+            "kernels",
+            &["kernels", "tables", "recursion"],
+        )?)?,
         working_set_bytes: resolve_working_set(args)?,
         wide_opb_max: args.f64_or("wide-opb-max", matryoshka::pipeline::DEFAULT_WIDE_OPB_MAX)?,
         threads: args.usize_or("threads", 0)?,
@@ -168,11 +178,12 @@ fn cmd_scf(args: &Args) -> anyhow::Result<()> {
             let m = &engine.metrics;
             let rs = engine.runtime_stats();
             println!(
-                "engine: backend {} with {} Fock worker(s), {} pipeline, {} ladder",
+                "engine: backend {} with {} Fock worker(s), {} pipeline, {} ladder, {} eri strategy",
                 engine.backend_name(),
                 engine.threads(),
                 engine.config.pipeline.name(),
-                engine.config.ladder.name()
+                engine.config.ladder.name(),
+                engine.config.eri_strategy.name()
             );
             // phase timers are CPU-seconds summed across Fock workers;
             // with --threads N they can exceed wall time by up to N×
@@ -198,6 +209,14 @@ fn cmd_scf(args: &Args) -> anyhow::Result<()> {
                 m.wide_chunks,
                 m.split_chunks
             );
+            if !m.per_strategy.is_empty() {
+                let by_strategy: Vec<String> = m
+                    .per_strategy
+                    .iter()
+                    .map(|(name, secs)| format!("{name} {secs:.2}s"))
+                    .collect();
+                println!("engine: execute seconds by evaluator: {}", by_strategy.join(", "));
+            }
             if let Some(summary) = engine.dispatch_summary() {
                 println!("engine: dispatch {}", engine.config.dispatch.mode.describe());
                 print!("{summary}");
@@ -291,16 +310,22 @@ fn cmd_info(args: &Args) -> anyhow::Result<()> {
     use matryoshka::runtime::{EriBackend, NativeBackend};
     let kind = BackendKind::parse(&args.choice("backend", "native", &["native", "pjrt"])?)?;
     let ladder = LadderMode::parse(&args.choice("ladder", "elastic", &["elastic", "fixed"])?)?;
+    let strategy = EriEvalStrategy::parse(&args.choice(
+        "eri-strategy",
+        "kernels",
+        &["kernels", "tables", "recursion"],
+    )?)?;
     let manifest = match kind {
         // the native catalog is synthetic — no artifacts directory needed
         BackendKind::Native => NativeBackend::with_ladder(KPAIR, ladder).manifest().clone(),
         BackendKind::Pjrt => matryoshka::runtime::Manifest::load(&artifact_dir(args))?,
     };
     println!(
-        "{} catalog: {} variants, {} classes",
+        "{} catalog: {} variants, {} classes, eri strategy {}",
         kind.name(),
         manifest.variants.len(),
-        manifest.classes().len()
+        manifest.classes().len(),
+        strategy.name()
     );
     for v in &manifest.variants {
         println!(
@@ -344,6 +369,43 @@ fn cmd_worker(args: &Args) -> anyhow::Result<()> {
     }
 }
 
+/// `codegen --write FILE` re-emits the graph-compiled kernel source (the
+/// committed `kernels/generated.rs` snapshot); `--check FILE` verifies it
+/// matches the generator byte-for-byte — the CI drift job.  The crate
+/// itself always compiles the fresh `OUT_DIR` copy, so a stale snapshot
+/// fails this check, never the build.
+fn cmd_codegen(args: &Args) -> anyhow::Result<()> {
+    use matryoshka::runtime::backend::kernels::codegen;
+    let source = codegen::generated_source();
+    if let Some(path) = args.get("write") {
+        std::fs::write(path, &source)?;
+        println!(
+            "codegen: wrote {} ({} bytes, {} classes, lmax {})",
+            path,
+            source.len(),
+            codegen::catalog().len(),
+            codegen::LMAX
+        );
+        return Ok(());
+    }
+    if let Some(path) = args.get("check") {
+        let committed = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("codegen --check cannot read {path}: {e}"))?;
+        if committed != source {
+            anyhow::bail!(
+                "codegen drift: {path} does not match the generator output \
+                 ({} committed bytes vs {} generated) — re-run \
+                 `matryoshka codegen --write {path}` and commit the result",
+                committed.len(),
+                source.len()
+            );
+        }
+        println!("codegen: {path} matches the generator ({} bytes)", source.len());
+        return Ok(());
+    }
+    anyhow::bail!("codegen needs --write FILE or --check FILE")
+}
+
 fn main() -> anyhow::Result<()> {
     let args = Args::from_env()?;
     match args.positional.first().map(|s| s.as_str()) {
@@ -351,6 +413,7 @@ fn main() -> anyhow::Result<()> {
         Some("report") => cmd_report(&args),
         Some("info") => cmd_info(&args),
         Some("worker") => cmd_worker(&args),
+        Some("codegen") => cmd_codegen(&args),
         _ => usage(),
     }
 }

@@ -53,6 +53,12 @@ pub struct EngineMetrics {
     /// per-(class, batch rung) execution accounting — attributes wall
     /// time to the Workload Allocator's ladder decisions (Fig. 12)
     pub per_rung: BTreeMap<(ClassKey, usize), ClassStats>,
+    /// execute CPU-seconds by the evaluator that *actually ran* each
+    /// chunk ("kernels", "tables", "recursion", "pjrt") — under per-class
+    /// fallback (a class past the generated catalog drops from `Kernels`
+    /// to `Tables`) this attributes time to what happened, not what was
+    /// configured
+    pub per_strategy: BTreeMap<String, f64>,
     /// chunks staged wide (memory stage executed them inline) vs split
     /// (shipped to the compute companion) — the elastic stage split
     pub wide_chunks: u64,
@@ -106,6 +112,21 @@ impl EngineMetrics {
         }
     }
 
+    /// Attribute one chunk's execute seconds to the evaluator that ran it
+    /// (the backend reports it per execution via `EriOutput::strategy`).
+    /// Empty names (a backend that predates attribution) are dropped.
+    pub fn record_strategy(&mut self, strategy: &str, seconds: f64) {
+        if strategy.is_empty() {
+            return;
+        }
+        match self.per_strategy.get_mut(strategy) {
+            Some(s) => *s += seconds,
+            None => {
+                self.per_strategy.insert(strategy.to_string(), seconds);
+            }
+        }
+    }
+
     /// Fold a worker shard's metrics into this accumulator (the parallel
     /// Fock pipeline records per-worker and merges deterministically).
     pub fn merge(&mut self, other: &EngineMetrics) {
@@ -122,6 +143,9 @@ impl EngineMetrics {
             t.real_quads += s.real_quads;
             t.padded_slots += s.padded_slots;
             t.seconds += s.seconds;
+        }
+        for (name, secs) in &other.per_strategy {
+            self.record_strategy(name, *secs);
         }
         self.wide_chunks += other.wide_chunks;
         self.split_chunks += other.split_chunks;
@@ -228,6 +252,23 @@ mod tests {
         );
         assert!((merged.mean_lane_utilization() - seq.mean_lane_utilization()).abs() < 1e-12);
         assert!((merged.digest_seconds - seq.digest_seconds).abs() < 1e-12);
+    }
+
+    #[test]
+    fn strategy_attribution_accumulates_and_merges() {
+        let mut m = EngineMetrics::default();
+        m.record_strategy("kernels", 0.5);
+        m.record_strategy("kernels", 0.25);
+        m.record_strategy("tables", 0.125);
+        m.record_strategy("", 99.0); // pre-attribution backends are dropped
+        assert_eq!(m.per_strategy.len(), 2);
+        assert!((m.per_strategy["kernels"] - 0.75).abs() < 1e-12);
+
+        let mut folded = EngineMetrics::default();
+        folded.record_strategy("tables", 1.0);
+        folded.merge(&m);
+        assert!((folded.per_strategy["tables"] - 1.125).abs() < 1e-12);
+        assert!((folded.per_strategy["kernels"] - 0.75).abs() < 1e-12);
     }
 
     #[test]

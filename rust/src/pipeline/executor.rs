@@ -195,6 +195,9 @@ impl<'a> ExecContext<'a> {
             entry.variant.batch,
             set.out.steady_seconds,
         );
+        // attribute execute time to the evaluator that actually ran —
+        // per-class fallback can differ from the configured strategy
+        out.metrics.record_strategy(set.out.strategy, set.out.execute_seconds);
         out.observations.push(TunerObservation {
             class: entry.class,
             entry: entry.entry,

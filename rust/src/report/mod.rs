@@ -137,10 +137,32 @@ pub fn compiler_stats(artifact_dir: &Path) -> anyhow::Result<String> {
 pub fn schedule_summary(molecule: &str, basis_name: &str, threshold: f64) -> anyhow::Result<String> {
     let mol = library::by_name(molecule)?;
     let basis = build_basis(&mol, basis_name)?;
+    let n = basis.nbf;
     let config = MatryoshkaConfig { threshold, schwarz: SchwarzMode::Estimate, ..Default::default() };
-    let engine = MatryoshkaEngine::new(basis, Path::new("unused"), config)?;
+    let mut engine = MatryoshkaEngine::new(basis, Path::new("unused"), config)?;
     let schedule = engine.build_schedule()?;
-    Ok(schedule.summary(&format!("{molecule} / {basis_name} (first-iteration tuner snapshot)")))
+    let mut text =
+        schedule.summary(&format!("{molecule} / {basis_name} (first-iteration tuner snapshot)"));
+    // One real Fock build on a deterministic density, so the summary can
+    // attribute execute time to the evaluator that actually ran each
+    // chunk (per-class fallback means this is measured, not configured).
+    let mut density = Matrix::zeros(n, n);
+    for i in 0..n {
+        for j in 0..n {
+            *density.at_mut(i, j) = 0.3 / (1.0 + (i as f64 - j as f64).abs());
+        }
+    }
+    engine.two_electron(&density)?;
+    let m = &engine.metrics;
+    if !m.per_strategy.is_empty() {
+        let total: f64 = m.per_strategy.values().sum();
+        text.push_str("\nexecute attribution (one Fock build, CPU-s by evaluator):\n");
+        for (name, secs) in &m.per_strategy {
+            let share = if total > 0.0 { 100.0 * secs / total } else { 0.0 };
+            text.push_str(&format!("  {name:<10} {secs:>8.3}s  {share:>5.1}%\n"));
+        }
+    }
+    Ok(text)
 }
 
 /// `report dispatch`: run two dispatched Fock builds over `workers`
@@ -212,6 +234,10 @@ mod tests {
         assert!(t.contains("rung"), "{t}");
         assert!(t.contains("stage"), "{t}");
         assert!(t.contains("wide") || t.contains("split"), "{t}");
+        // the appended Fock build attributes execute time per evaluator;
+        // the default strategy is the generated kernels
+        assert!(t.contains("execute attribution"), "{t}");
+        assert!(t.contains("kernels"), "{t}");
         assert!(schedule_summary("unobtainium", "sto-3g", 1e-10).is_err());
     }
 }

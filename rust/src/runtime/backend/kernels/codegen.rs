@@ -1,0 +1,601 @@
+//! Build-time generator for the straight-line per-class ERI kernels.
+//!
+//! This module is compiled twice: once as part of the crate (so the
+//! `matryoshka codegen` subcommand and the drift tests can call it) and
+//! once standalone from `rust/build.rs` via a `#[path]` module include
+//! (so the generated source lands in `OUT_DIR` before the crate builds).
+//! It must therefore stay pure `std` — no `crate::` references.
+//!
+//! The generator walks the same McMurchie-Davidson recurrences the
+//! `Tables` interpreter uses (`integrals/hermite.rs`), but resolves all
+//! loop bounds, Hermite E-coefficient indices and R-tensor contraction
+//! index arithmetic at generation time for the fixed (la, lb, lc, ld) of
+//! each catalog class.  The contraction is demand-driven: intermediates
+//! are memoized per (index tuple) key and sums that reduce to a single
+//! positive factor alias that factor instead of emitting a statement,
+//! which is what collapses s/p-heavy classes to near-nothing.
+//!
+//! `rust/tools/kernel_mirror.py` re-implements this generator in Python,
+//! numerically verifies every class schedule against a plain-recursion
+//! reference, and renders the same bytes; keep the two in lockstep.
+
+#![allow(dead_code)]
+
+use std::collections::HashMap;
+
+/// Highest angular momentum with native kernels (s, p, d shells).
+pub const LMAX: u8 = 2;
+
+const LETTERS: [char; 8] = ['s', 'p', 'd', 'f', 'g', 'h', 'i', 'k'];
+
+fn ncart(l: usize) -> usize {
+    (l + 1) * (l + 2) / 2
+}
+
+/// Cartesian component triples, x-major descending (basis::cart_components).
+fn cart(l: usize) -> Vec<[usize; 3]> {
+    let mut out = Vec::new();
+    for lx in (0..=l).rev() {
+        for ly in (0..=(l - lx)).rev() {
+            out.push([lx, ly, l - lx - ly]);
+        }
+    }
+    out
+}
+
+/// The 21 canonical classes, in synthetic_manifest order.
+pub fn catalog() -> Vec<(u8, u8, u8, u8)> {
+    let mut pair_classes: Vec<(u8, u8)> = Vec::new();
+    for la in 0..=LMAX {
+        for lb in 0..=la {
+            pair_classes.push((la, lb));
+        }
+    }
+    pair_classes.sort_unstable();
+    let mut out = Vec::new();
+    for (bi, bra) in pair_classes.iter().enumerate() {
+        for ket in &pair_classes[..bi + 1] {
+            out.push((bra.0, bra.1, ket.0, ket.1));
+        }
+    }
+    out
+}
+
+fn class_letters(cls: (u8, u8, u8, u8)) -> String {
+    [cls.0, cls.1, cls.2, cls.3]
+        .iter()
+        .map(|&l| LETTERS[l as usize])
+        .collect()
+}
+
+/// A term of a sum: (sign, factor list).  Factors are variable names,
+/// `fv[i]` reads, or `K.0` integer-float literals.
+type Term = (i32, Vec<String>);
+
+/// Builds the straight-line statement list for one ERI class.
+struct Gen {
+    la: usize,
+    lb: usize,
+    lc: usize,
+    ld: usize,
+    ltot: usize,
+    /// emitted statements, in order: (name, terms)
+    stmts: Vec<(String, Vec<Term>)>,
+    /// intermediate key -> emitted name (or alias)
+    memo: HashMap<String, String>,
+    /// E coefficient names: key -> factor, None = const 1
+    ename: HashMap<String, Option<String>>,
+    /// layer-0 R names: (t, u, v) -> factor
+    rname: HashMap<(usize, usize, usize), String>,
+    /// output component accumulations: (component index, terms)
+    outs: Vec<(usize, Vec<Term>)>,
+}
+
+impl Gen {
+    fn new(cls: (u8, u8, u8, u8)) -> Gen {
+        let (la, lb, lc, ld) = (
+            cls.0 as usize,
+            cls.1 as usize,
+            cls.2 as usize,
+            cls.3 as usize,
+        );
+        let mut g = Gen {
+            la,
+            lb,
+            lc,
+            ld,
+            ltot: la + lb + lc + ld,
+            stmts: Vec::new(),
+            memo: HashMap::new(),
+            ename: HashMap::new(),
+            rname: HashMap::new(),
+            outs: Vec::new(),
+        };
+        g.build();
+        g
+    }
+
+    // -- statement plumbing ------------------------------------------------
+
+    /// Record a sum.  Single positive single-factor sums are not emitted:
+    /// the key aliases the factor instead.
+    fn emit(&mut self, key: String, name: String, terms: Vec<Term>) -> String {
+        if terms.len() == 1 && terms[0].0 > 0 && terms[0].1.len() == 1 {
+            let alias = terms[0].1[0].clone();
+            self.memo.insert(key, alias.clone());
+            return alias;
+        }
+        self.memo.insert(key, name.clone());
+        self.stmts.push((name.clone(), terms));
+        name
+    }
+
+    /// Factor list of coef * E, dropping const-1 E and `1.0` literals.
+    fn factors(coef: &[String], e: Option<&String>) -> Vec<String> {
+        let mut out: Vec<String> = coef
+            .iter()
+            .filter(|c| c.as_str() != "1.0")
+            .cloned()
+            .collect();
+        if let Some(e) = e {
+            out.push(e.clone());
+        }
+        out
+    }
+
+    // -- Hermite E coefficient fill (HermiteETable::fill, unrolled) --------
+
+    fn ekey(side: char, ax: usize, i: usize, j: usize, t: usize) -> String {
+        format!("e:{side}:{ax}:{i}:{j}:{t}")
+    }
+
+    /// Emit E(i,j,t) for one pair side, all three axes, i<=imax, j<=jmax.
+    ///
+    /// Source entries with t outside 0..=i+j are structural zeros: their
+    /// terms are dropped at generation time.  E(0,0,0) = 1 is tracked as
+    /// const-1 (None) and dropped from factor products.
+    fn fill_e(&mut self, side: char, imax: usize, jmax: usize) {
+        let inv2 = if side == 'b' { "inv2p" } else { "inv2q" };
+        for ax in 0..3usize {
+            let axc = ['x', 'y', 'z'][ax];
+            let (xpa, xpb) = if side == 'b' {
+                (format!("xpa_{axc}"), format!("xpb_{axc}"))
+            } else {
+                (format!("xqc_{axc}"), format!("xqd_{axc}"))
+            };
+            self.ename.insert(Self::ekey(side, ax, 0, 0, 0), None);
+            for i in 1..=imax {
+                for t in 0..=i {
+                    let mut terms: Vec<Term> = Vec::new();
+                    if t <= i - 1 {
+                        let e = self.ename[&Self::ekey(side, ax, i - 1, 0, t)].clone();
+                        terms.push((1, Self::factors(std::slice::from_ref(&xpa), e.as_ref())));
+                    }
+                    if t + 1 <= i - 1 {
+                        let e = self.ename[&Self::ekey(side, ax, i - 1, 0, t + 1)].clone();
+                        terms.push((1, Self::factors(&[format!("{}.0", t + 1)], e.as_ref())));
+                    }
+                    if t > 0 {
+                        let e = self.ename[&Self::ekey(side, ax, i - 1, 0, t - 1)].clone();
+                        terms.push((1, Self::factors(&[inv2.to_string()], e.as_ref())));
+                    }
+                    self.put_e(side, ax, axc, i, 0, t, terms);
+                }
+            }
+            for j in 1..=jmax {
+                for i in 0..=imax {
+                    for t in 0..=(i + j) {
+                        let mut terms: Vec<Term> = Vec::new();
+                        if t <= i + j - 1 {
+                            let e = self.ename[&Self::ekey(side, ax, i, j - 1, t)].clone();
+                            terms.push((
+                                1,
+                                Self::factors(std::slice::from_ref(&xpb), e.as_ref()),
+                            ));
+                        }
+                        if t + 1 <= i + j - 1 {
+                            let e = self.ename[&Self::ekey(side, ax, i, j - 1, t + 1)].clone();
+                            terms.push((1, Self::factors(&[format!("{}.0", t + 1)], e.as_ref())));
+                        }
+                        if t > 0 {
+                            let e = self.ename[&Self::ekey(side, ax, i, j - 1, t - 1)].clone();
+                            terms.push((1, Self::factors(&[inv2.to_string()], e.as_ref())));
+                        }
+                        self.put_e(side, ax, axc, i, j, t, terms);
+                    }
+                }
+            }
+        }
+    }
+
+    fn put_e(
+        &mut self,
+        side: char,
+        ax: usize,
+        axc: char,
+        i: usize,
+        j: usize,
+        t: usize,
+        terms: Vec<Term>,
+    ) {
+        let key = Self::ekey(side, ax, i, j, t);
+        let name = format!("e{side}{axc}_{i}{j}_{t}");
+        let v = self.emit(key.clone(), name, terms);
+        self.ename.insert(key, Some(v));
+    }
+
+    // -- Hermite R tensor layer descent (HermiteRTable::fill, unrolled) ----
+
+    fn fill_r(&mut self) {
+        let lmax = self.ltot;
+        let mut mp: HashMap<usize, Option<String>> = HashMap::new();
+        mp.insert(0, None);
+        if lmax >= 1 {
+            mp.insert(1, Some("m2a".to_string()));
+        }
+        for k in 2..=lmax {
+            let prev = mp[&(k - 1)].clone().unwrap();
+            let name = self.emit(
+                format!("mp:{k}"),
+                format!("mp{k}"),
+                vec![(1, vec![prev, "m2a".to_string()])],
+            );
+            mp.insert(k, Some(name));
+        }
+        let mut layer: HashMap<(usize, usize, usize), String> = HashMap::new();
+        for n in (0..=lmax).rev() {
+            let prev = layer;
+            layer = HashMap::new();
+            let mut base: Vec<String> = Vec::new();
+            if let Some(m) = &mp[&n] {
+                base.push(m.clone());
+            }
+            base.push(format!("fv[{n}]"));
+            let name = self.emit(format!("r:{n}:0:0:0"), format!("rr{n}_000"), vec![(1, base)]);
+            layer.insert((0, 0, 0), name);
+            for total in 1..=(lmax - n) {
+                for t in 0..=total {
+                    for u in 0..=(total - t) {
+                        let v = total - t - u;
+                        let mut terms: Vec<Term> = Vec::new();
+                        if t > 0 {
+                            if t >= 2 && t - 1 > 0 {
+                                terms.push((
+                                    1,
+                                    Self::factors(
+                                        &[format!("{}.0", t - 1)],
+                                        Some(&prev[&(t - 2, u, v)]),
+                                    ),
+                                ));
+                            }
+                            terms.push((1, vec!["pqx".to_string(), prev[&(t - 1, u, v)].clone()]));
+                        } else if u > 0 {
+                            if u >= 2 && u - 1 > 0 {
+                                terms.push((
+                                    1,
+                                    Self::factors(
+                                        &[format!("{}.0", u - 1)],
+                                        Some(&prev[&(t, u - 2, v)]),
+                                    ),
+                                ));
+                            }
+                            terms.push((1, vec!["pqy".to_string(), prev[&(t, u - 1, v)].clone()]));
+                        } else {
+                            if v >= 2 && v - 1 > 0 {
+                                terms.push((
+                                    1,
+                                    Self::factors(
+                                        &[format!("{}.0", v - 1)],
+                                        Some(&prev[&(t, u, v - 2)]),
+                                    ),
+                                ));
+                            }
+                            terms.push((1, vec!["pqz".to_string(), prev[&(t, u, v - 1)].clone()]));
+                        }
+                        let name =
+                            self.emit(format!("r:{n}:{t}:{u}:{v}"), format!("rr{n}_{t}{u}{v}"), terms);
+                        layer.insert((t, u, v), name);
+                    }
+                }
+            }
+        }
+        self.rname = layer;
+    }
+
+    // -- demand-driven contraction (the graph-compiler part) ---------------
+
+    fn e(&self, side: char, ax: usize, i: usize, j: usize, t: usize) -> Option<String> {
+        self.ename[&Self::ekey(side, ax, i, j, t)].clone()
+    }
+
+    fn r0(&self, t: usize, u: usize, v: usize) -> String {
+        self.rname[&(t, u, v)].clone()
+    }
+
+    /// ket z contraction: sum_phi (-1)^phi E(kz,lz,phi) R0(t, u, v+phi)
+    fn tz(&mut self, kz: usize, lz: usize, t: usize, u: usize, v: usize) -> String {
+        if (kz, lz) == (0, 0) {
+            return self.r0(t, u, v);
+        }
+        let key = format!("tz:{kz}:{lz}:{t}:{u}:{v}");
+        if let Some(hit) = self.memo.get(&key) {
+            return hit.clone();
+        }
+        let mut terms: Vec<Term> = Vec::new();
+        for phi in 0..=(kz + lz) {
+            let sign = if phi % 2 == 1 { -1 } else { 1 };
+            let e = self.e('k', 2, kz, lz, phi);
+            let mut fs = Self::factors(&[], e.as_ref());
+            fs.push(self.r0(t, u, v + phi));
+            terms.push((sign, fs));
+        }
+        self.emit(key, format!("tz_{kz}{lz}_{t}{u}{v}"), terms)
+    }
+
+    /// ket y contraction: sum_nu (-1)^nu E(ky,ly,nu) tz(t, u+nu, v)
+    fn ty(&mut self, ky: usize, ly: usize, kz: usize, lz: usize, t: usize, u: usize, v: usize) -> String {
+        if (ky, ly) == (0, 0) {
+            return self.tz(kz, lz, t, u, v);
+        }
+        let key = format!("ty:{ky}:{ly}:{kz}:{lz}:{t}:{u}:{v}");
+        if let Some(hit) = self.memo.get(&key) {
+            return hit.clone();
+        }
+        let mut terms: Vec<Term> = Vec::new();
+        for nu in 0..=(ky + ly) {
+            let sign = if nu % 2 == 1 { -1 } else { 1 };
+            let e = self.e('k', 1, ky, ly, nu);
+            let mut fs = Self::factors(&[], e.as_ref());
+            fs.push(self.tz(kz, lz, t, u + nu, v));
+            terms.push((sign, fs));
+        }
+        self.emit(key, format!("ty_{ky}{ly}{kz}{lz}_{t}{u}{v}"), terms)
+    }
+
+    /// ket x contraction: sum_tau (-1)^tau E(kx,lx,tau) ty(t+tau, u, v)
+    #[allow(clippy::too_many_arguments)]
+    fn th(&mut self, ket: [usize; 6], t: usize, u: usize, v: usize) -> String {
+        let [kx, lx, ky, ly, kz, lz] = ket;
+        if (kx, lx) == (0, 0) {
+            return self.ty(ky, ly, kz, lz, t, u, v);
+        }
+        let key = format!("th:{kx}:{lx}:{ky}:{ly}:{kz}:{lz}:{t}:{u}:{v}");
+        if let Some(hit) = self.memo.get(&key) {
+            return hit.clone();
+        }
+        let mut terms: Vec<Term> = Vec::new();
+        for tau in 0..=(kx + lx) {
+            let sign = if tau % 2 == 1 { -1 } else { 1 };
+            let e = self.e('k', 0, kx, lx, tau);
+            let mut fs = Self::factors(&[], e.as_ref());
+            fs.push(self.ty(ky, ly, kz, lz, t + tau, u, v));
+            terms.push((sign, fs));
+        }
+        self.emit(key, format!("th_{kx}{lx}{ky}{ly}{kz}{lz}_{t}{u}{v}"), terms)
+    }
+
+    /// bra z contraction: sum_v E(iz,jz,v) th(t, u, v)
+    fn bz(&mut self, iz: usize, jz: usize, ket: [usize; 6], t: usize, u: usize) -> String {
+        if (iz, jz) == (0, 0) {
+            return self.th(ket, t, u, 0);
+        }
+        let kname: String = ket.iter().map(|x| x.to_string()).collect();
+        let key = format!("bz:{iz}:{jz}:{kname}:{t}:{u}");
+        if let Some(hit) = self.memo.get(&key) {
+            return hit.clone();
+        }
+        let mut terms: Vec<Term> = Vec::new();
+        for v in 0..=(iz + jz) {
+            let e = self.e('b', 2, iz, jz, v);
+            let mut fs = Self::factors(&[], e.as_ref());
+            fs.push(self.th(ket, t, u, v));
+            terms.push((1, fs));
+        }
+        self.emit(key, format!("bz_{iz}{jz}_{kname}_{t}{u}"), terms)
+    }
+
+    /// bra y contraction: sum_u E(iy,jy,u) bz(t, u)
+    #[allow(clippy::too_many_arguments)]
+    fn by(&mut self, iy: usize, jy: usize, iz: usize, jz: usize, ket: [usize; 6], t: usize) -> String {
+        if (iy, jy) == (0, 0) {
+            return self.bz(iz, jz, ket, t, 0);
+        }
+        let kname: String = ket.iter().map(|x| x.to_string()).collect();
+        let key = format!("by:{iy}:{jy}:{iz}:{jz}:{kname}:{t}");
+        if let Some(hit) = self.memo.get(&key) {
+            return hit.clone();
+        }
+        let mut terms: Vec<Term> = Vec::new();
+        for u in 0..=(iy + jy) {
+            let e = self.e('b', 1, iy, jy, u);
+            let mut fs = Self::factors(&[], e.as_ref());
+            fs.push(self.bz(iz, jz, ket, t, u));
+            terms.push((1, fs));
+        }
+        self.emit(key, format!("by_{iy}{jy}{iz}{jz}_{kname}_{t}"), terms)
+    }
+
+    fn build(&mut self) {
+        self.fill_e('b', self.la, self.lb);
+        self.fill_e('k', self.lc, self.ld);
+        self.fill_r();
+        let mut idx = 0usize;
+        for ca in cart(self.la) {
+            for cb in cart(self.lb) {
+                for cc in cart(self.lc) {
+                    for cd in cart(self.ld) {
+                        let ket = [cc[0], cd[0], cc[1], cd[1], cc[2], cd[2]];
+                        let mut terms: Vec<Term> = Vec::new();
+                        for t in 0..=(ca[0] + cb[0]) {
+                            let e = self.e('b', 0, ca[0], cb[0], t);
+                            let mut fs = Self::factors(&[], e.as_ref());
+                            fs.push(self.by(ca[1], cb[1], ca[2], cb[2], ket, t));
+                            terms.push((1, fs));
+                        }
+                        self.outs.push((idx, terms));
+                        idx += 1;
+                    }
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// rendering (must match rust/tools/kernel_mirror.py byte for byte)
+// ---------------------------------------------------------------------------
+
+fn render_expr(terms: &[Term]) -> String {
+    let mut out = String::new();
+    for (i, (sign, factors)) in terms.iter().enumerate() {
+        let prod = if factors.is_empty() {
+            "1.0".to_string()
+        } else {
+            factors.join(" * ")
+        };
+        if i == 0 {
+            if *sign < 0 {
+                out.push('-');
+            }
+            out.push_str(&prod);
+        } else {
+            out.push_str(if *sign < 0 { " - " } else { " + " });
+            out.push_str(&prod);
+        }
+    }
+    out
+}
+
+fn render_kernel(cls: (u8, u8, u8, u8)) -> String {
+    let g = Gen::new(cls);
+    let letters = class_letters(cls);
+    let nc = ncart(cls.0 as usize) * ncart(cls.1 as usize) * ncart(cls.2 as usize)
+        * ncart(cls.3 as usize);
+    let lt = g.ltot;
+    let mut w: Vec<String> = Vec::new();
+    w.push(format!(
+        "/// Straight-line ERI kernel for class ({}, {}, {}, {}) — `{letters}`.",
+        cls.0, cls.1, cls.2, cls.3
+    ));
+    w.push("#[allow(unused_variables, clippy::all)]".to_string());
+    w.push(format!(
+        "pub(crate) fn eri_{letters}(soa: &SoaChunk, out: &mut [f64]) {{"
+    ));
+    w.push("    let n = soa.n;".to_string());
+    w.push(format!("    debug_assert_eq!(out.len(), n * {nc});"));
+    w.push("    for kbi in 0..soa.kb {".to_string());
+    w.push("        if !soa.bra_active[kbi] {".to_string());
+    w.push("            continue;".to_string());
+    w.push("        }".to_string());
+    w.push("        let bs = kbi * n;".to_string());
+    w.push("        let bp_p = &soa.bra_p[bs..bs + n];".to_string());
+    w.push("        let bp_x = &soa.bra_px[bs..bs + n];".to_string());
+    w.push("        let bp_y = &soa.bra_py[bs..bs + n];".to_string());
+    w.push("        let bp_z = &soa.bra_pz[bs..bs + n];".to_string());
+    w.push("        let bp_k = &soa.bra_kab[bs..bs + n];".to_string());
+    w.push("        for kki in 0..soa.kk {".to_string());
+    w.push("            if !soa.ket_active[kki] {".to_string());
+    w.push("                continue;".to_string());
+    w.push("            }".to_string());
+    w.push("            let ks = kki * n;".to_string());
+    w.push("            let kp_q = &soa.ket_p[ks..ks + n];".to_string());
+    w.push("            let kp_x = &soa.ket_px[ks..ks + n];".to_string());
+    w.push("            let kp_y = &soa.ket_py[ks..ks + n];".to_string());
+    w.push("            let kp_z = &soa.ket_pz[ks..ks + n];".to_string());
+    w.push("            let kp_k = &soa.ket_kcd[ks..ks + n];".to_string());
+    w.push("            for r in 0..n {".to_string());
+    let p = "                ";
+    w.push(format!("{p}let kab = bp_k[r];"));
+    w.push(format!("{p}let kcd = kp_k[r];"));
+    w.push(format!("{p}let p = bp_p[r];"));
+    w.push(format!("{p}let q = kp_q[r];"));
+    w.push(format!("{p}let px = bp_x[r];"));
+    w.push(format!("{p}let py = bp_y[r];"));
+    w.push(format!("{p}let pz = bp_z[r];"));
+    w.push(format!("{p}let qx = kp_x[r];"));
+    w.push(format!("{p}let qy = kp_y[r];"));
+    w.push(format!("{p}let qz = kp_z[r];"));
+    w.push(format!("{p}let xpa_x = px - soa.bra_ax[r];"));
+    w.push(format!("{p}let xpa_y = py - soa.bra_ay[r];"));
+    w.push(format!("{p}let xpa_z = pz - soa.bra_az[r];"));
+    w.push(format!("{p}let xpb_x = px - soa.bra_bx[r];"));
+    w.push(format!("{p}let xpb_y = py - soa.bra_by[r];"));
+    w.push(format!("{p}let xpb_z = pz - soa.bra_bz[r];"));
+    w.push(format!("{p}let xqc_x = qx - soa.ket_ax[r];"));
+    w.push(format!("{p}let xqc_y = qy - soa.ket_ay[r];"));
+    w.push(format!("{p}let xqc_z = qz - soa.ket_az[r];"));
+    w.push(format!("{p}let xqd_x = qx - soa.ket_bx[r];"));
+    w.push(format!("{p}let xqd_y = qy - soa.ket_by[r];"));
+    w.push(format!("{p}let xqd_z = qz - soa.ket_bz[r];"));
+    w.push(format!("{p}let alpha = p * q / (p + q);"));
+    w.push(format!("{p}let pqx = px - qx;"));
+    w.push(format!("{p}let pqy = py - qy;"));
+    w.push(format!("{p}let pqz = pz - qz;"));
+    w.push(format!(
+        "{p}let t_arg = alpha * (pqx * pqx + pqy * pqy + pqz * pqz);"
+    ));
+    w.push(format!("{p}let mut fv = [0.0f64; {}];", lt + 1));
+    w.push(format!("{p}crate::integrals::boys({lt}, t_arg, &mut fv);"));
+    w.push(format!(
+        "{p}let pref = kab * kcd * 2.0 * crate::integrals::PI_POW_2_5 / (p * q * (p + q).sqrt());"
+    ));
+    w.push(format!("{p}let inv2p = 0.5 / p;"));
+    w.push(format!("{p}let inv2q = 0.5 / q;"));
+    w.push(format!("{p}let m2a = -2.0 * alpha;"));
+    for (name, terms) in &g.stmts {
+        w.push(format!("{p}let {name} = {};", render_expr(terms)));
+    }
+    w.push(format!("{p}let o = r * {nc};"));
+    for (c, terms) in &g.outs {
+        let lhs = if *c == 0 {
+            "out[o]".to_string()
+        } else {
+            format!("out[o + {c}]")
+        };
+        w.push(format!("{p}{lhs} += pref * ({});", render_expr(terms)));
+    }
+    w.push("            }".to_string());
+    w.push("        }".to_string());
+    w.push("    }".to_string());
+    w.push("}".to_string());
+    w.join("\n")
+}
+
+const HEADER: &str = "\
+// @generated by the Matryoshka graph compiler
+// (rust/src/runtime/backend/kernels/codegen.rs).  DO NOT EDIT.
+//
+// This file is a committed snapshot for review and drift detection only:
+// the crate compiles the build-time copy that rust/build.rs writes under
+// OUT_DIR from the same generator.  Regenerate this snapshot with
+// `matryoshka codegen --write rust/src/runtime/backend/kernels/generated.rs`
+// and check it with `matryoshka codegen --check ...` (the CI drift job).
+//
+// One straight-line McMurchie-Davidson kernel per ERI class: all loop
+// bounds, Hermite E-coefficient indices and R-tensor contractions are
+// resolved at generation time for the fixed (la, lb, lc, ld); the batch
+// loop over the SoA chunk is the only data-dependent control flow left.
+";
+
+/// Render the complete generated-kernels source file.
+pub fn generated_source() -> String {
+    let mut parts: Vec<String> = vec![HEADER.to_string()];
+    for cls in catalog() {
+        parts.push(render_kernel(cls));
+    }
+    let mut lines: Vec<String> =
+        vec!["/// Generated kernels indexed by class key (catalog order).".to_string()];
+    lines.push("pub(crate) const GENERATED_KERNELS: &[(ClassKey, KernelFn)] = &[".to_string());
+    for cls in catalog() {
+        let letters = class_letters(cls);
+        lines.push(format!(
+            "    (({}, {}, {}, {}), eri_{letters} as KernelFn),",
+            cls.0, cls.1, cls.2, cls.3
+        ));
+    }
+    lines.push("];".to_string());
+    parts.push(lines.join("\n"));
+    let mut out = parts.join("\n\n");
+    out.push('\n');
+    out
+}

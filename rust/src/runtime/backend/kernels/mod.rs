@@ -1,0 +1,255 @@
+//! Graph-compiled ERI kernels: one straight-line function per catalog
+//! class, generated at build time by [`codegen`] (run from
+//! `rust/build.rs`), consuming a batch-major SoA gather layout.
+//!
+//! The kernels replace the `Tables` interpreter's data-dependent nested
+//! loops with fully unrolled bodies whose only control flow is the batch
+//! loop, so the autovectorizer sees clean stride-1 arithmetic.  They
+//! compute the same contracted, component-scaled-later ERI values as
+//! `eval_chunk_tables`; `comp_norm` scaling stays on the caller side so
+//! the generated code contains no non-trivial float literals.
+//!
+//! `generated.rs` in this directory is a committed snapshot of the
+//! build-time output, kept for review and CI drift detection only — the
+//! crate compiles the `OUT_DIR` copy, so a stale snapshot can never
+//! break the build (the drift job catches it instead).
+
+pub mod codegen;
+
+use crate::runtime::ClassKey;
+
+/// Compile-time lane width: SoA rows are padded to a multiple of this so
+/// the batch loop vectorizes without a scalar tail.  Padding rows carry
+/// `p = q = 1`, `Kab = Kcd = 0` and zero geometry, making them exact
+/// zeros without branches (same trick as `GatherScratch` slot padding).
+pub const KERNEL_LANES: usize = 8;
+
+/// Batch-major SoA view of one gathered chunk.
+///
+/// Primitive-pair fields are k-major: `bra_p[k * n + r]` is the pair
+/// exponent of bra slot `k` for quad `r`, so each (kbi, kki) iteration
+/// of a kernel walks contiguous stride-1 rows.  Geometry is per quad
+/// (`n` entries).  `bra_active[k]` / `ket_active[k]` mark slots with at
+/// least one nonzero `Kab` / `Kcd`; all-padding slots are skipped — a
+/// bitwise no-op since their rows contribute exact zeros.
+#[derive(Default)]
+pub struct SoaChunk {
+    /// padded row count: multiple of [`KERNEL_LANES`], >= batch
+    pub n: usize,
+    /// bra primitive-pair slots per quad
+    pub kb: usize,
+    /// ket primitive-pair slots per quad
+    pub kk: usize,
+    pub bra_p: Vec<f64>,
+    pub bra_px: Vec<f64>,
+    pub bra_py: Vec<f64>,
+    pub bra_pz: Vec<f64>,
+    pub bra_kab: Vec<f64>,
+    pub bra_ax: Vec<f64>,
+    pub bra_ay: Vec<f64>,
+    pub bra_az: Vec<f64>,
+    pub bra_bx: Vec<f64>,
+    pub bra_by: Vec<f64>,
+    pub bra_bz: Vec<f64>,
+    pub bra_active: Vec<bool>,
+    pub ket_p: Vec<f64>,
+    pub ket_px: Vec<f64>,
+    pub ket_py: Vec<f64>,
+    pub ket_pz: Vec<f64>,
+    pub ket_kcd: Vec<f64>,
+    pub ket_ax: Vec<f64>,
+    pub ket_ay: Vec<f64>,
+    pub ket_az: Vec<f64>,
+    pub ket_bx: Vec<f64>,
+    pub ket_by: Vec<f64>,
+    pub ket_bz: Vec<f64>,
+    pub ket_active: Vec<bool>,
+}
+
+impl SoaChunk {
+    /// Transpose one gathered chunk from the executor's AoS layout
+    /// (`prim[(r * k + slot) * 5 + field]`, `geom[r * 6 + field]`, see
+    /// `GatherScratch`) into the SoA layout the kernels consume.
+    #[allow(clippy::too_many_arguments)]
+    pub fn pack(
+        &mut self,
+        batch: usize,
+        kb: usize,
+        kk: usize,
+        bra_prim: &[f64],
+        bra_geom: &[f64],
+        ket_prim: &[f64],
+        ket_geom: &[f64],
+    ) {
+        let n = (batch + KERNEL_LANES - 1) / KERNEL_LANES * KERNEL_LANES;
+        self.n = n;
+        self.kb = kb;
+        self.kk = kk;
+        pack_side(
+            n, batch, kb, bra_prim, bra_geom,
+            &mut self.bra_p, &mut self.bra_px, &mut self.bra_py, &mut self.bra_pz,
+            &mut self.bra_kab, &mut self.bra_ax, &mut self.bra_ay, &mut self.bra_az,
+            &mut self.bra_bx, &mut self.bra_by, &mut self.bra_bz, &mut self.bra_active,
+        );
+        pack_side(
+            n, batch, kk, ket_prim, ket_geom,
+            &mut self.ket_p, &mut self.ket_px, &mut self.ket_py, &mut self.ket_pz,
+            &mut self.ket_kcd, &mut self.ket_ax, &mut self.ket_ay, &mut self.ket_az,
+            &mut self.ket_bx, &mut self.ket_by, &mut self.ket_bz, &mut self.ket_active,
+        );
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn pack_side(
+    n: usize,
+    batch: usize,
+    k: usize,
+    prim: &[f64],
+    geom: &[f64],
+    p: &mut Vec<f64>,
+    px: &mut Vec<f64>,
+    py: &mut Vec<f64>,
+    pz: &mut Vec<f64>,
+    kw: &mut Vec<f64>,
+    ax: &mut Vec<f64>,
+    ay: &mut Vec<f64>,
+    az: &mut Vec<f64>,
+    bx: &mut Vec<f64>,
+    by: &mut Vec<f64>,
+    bz: &mut Vec<f64>,
+    active: &mut Vec<bool>,
+) {
+    p.resize(k * n, 0.0);
+    px.resize(k * n, 0.0);
+    py.resize(k * n, 0.0);
+    pz.resize(k * n, 0.0);
+    kw.resize(k * n, 0.0);
+    active.resize(k, false);
+    for slot in 0..k {
+        let base = slot * n;
+        let mut any = false;
+        for r in 0..batch {
+            let o = (r * k + slot) * 5;
+            p[base + r] = prim[o];
+            px[base + r] = prim[o + 1];
+            py[base + r] = prim[o + 2];
+            pz[base + r] = prim[o + 3];
+            let w = prim[o + 4];
+            kw[base + r] = w;
+            any |= w != 0.0;
+        }
+        // Lane-padding rows: unit exponent, zero weight -> exact zeros.
+        for r in batch..n {
+            p[base + r] = 1.0;
+            px[base + r] = 0.0;
+            py[base + r] = 0.0;
+            pz[base + r] = 0.0;
+            kw[base + r] = 0.0;
+        }
+        active[slot] = any;
+    }
+    ax.resize(n, 0.0);
+    ay.resize(n, 0.0);
+    az.resize(n, 0.0);
+    bx.resize(n, 0.0);
+    by.resize(n, 0.0);
+    bz.resize(n, 0.0);
+    for r in 0..batch {
+        let o = r * 6;
+        ax[r] = geom[o];
+        ay[r] = geom[o + 1];
+        az[r] = geom[o + 2];
+        // geom stores (A, A-B); kernels want B = A - (A-B).
+        bx[r] = geom[o] - geom[o + 3];
+        by[r] = geom[o + 1] - geom[o + 4];
+        bz[r] = geom[o + 2] - geom[o + 5];
+    }
+    for r in batch..n {
+        ax[r] = 0.0;
+        ay[r] = 0.0;
+        az[r] = 0.0;
+        bx[r] = 0.0;
+        by[r] = 0.0;
+        bz[r] = 0.0;
+    }
+}
+
+/// Signature of a generated per-class kernel: accumulates the unscaled
+/// contracted components of every row into `out[r * ncomp ..]`.
+pub type KernelFn = fn(&SoaChunk, &mut [f64]);
+
+// The build-time output of `codegen::generated_source()`: the 21 kernel
+// functions plus the `GENERATED_KERNELS` dispatch table.
+include!(concat!(env!("OUT_DIR"), "/eri_kernels_generated.rs"));
+
+/// The generated kernel for a class, if the catalog covers it.
+pub fn kernel_for(class: ClassKey) -> Option<KernelFn> {
+    GENERATED_KERNELS
+        .iter()
+        .find(|(c, _)| *c == class)
+        .map(|(_, f)| *f)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dispatch_table_covers_catalog() {
+        let classes = codegen::catalog();
+        assert_eq!(classes.len(), 21);
+        assert_eq!(GENERATED_KERNELS.len(), classes.len());
+        for cls in classes {
+            assert!(kernel_for(cls).is_some(), "missing kernel for {cls:?}");
+        }
+        assert!(kernel_for((3, 0, 0, 0)).is_none());
+    }
+
+    #[test]
+    fn generator_is_deterministic() {
+        let a = codegen::generated_source();
+        let b = codegen::generated_source();
+        assert_eq!(a, b);
+        // The compiled-in table and the rendered source agree on names.
+        for (cls, _) in GENERATED_KERNELS {
+            let letters = crate::runtime::class_letters(*cls);
+            assert!(a.contains(&format!("pub(crate) fn eri_{letters}(")));
+        }
+    }
+
+    #[test]
+    fn pack_pads_to_lane_multiple_with_inert_rows() {
+        let batch = 3;
+        let (kb, kk) = (2, 1);
+        let mut bp = vec![0.0; batch * kb * 5];
+        let mut bg = vec![0.0; batch * 6];
+        let kp = vec![0.0; batch * kk * 5];
+        let kg = vec![0.0; batch * 6];
+        for r in 0..batch {
+            for s in 0..kb {
+                let o = (r * kb + s) * 5;
+                bp[o] = 2.0 + r as f64;
+                bp[o + 4] = if s == 1 { 0.0 } else { 1.0 };
+            }
+            bg[r * 6] = 1.0; // Ax
+            bg[r * 6 + 3] = 0.25; // (A-B)x
+        }
+        let mut soa = SoaChunk::default();
+        soa.pack(batch, kb, kk, &bp, &bg, &kp, &kg);
+        assert_eq!(soa.n, KERNEL_LANES);
+        assert_eq!(soa.bra_p.len(), kb * soa.n);
+        // slot 1 has all-zero Kab -> inactive; slot 0 active
+        assert!(soa.bra_active[0]);
+        assert!(!soa.bra_active[1]);
+        // ket side saw only zero weights -> inactive
+        assert!(!soa.ket_active[0]);
+        // padding rows are inert: unit exponent, zero weight
+        for r in batch..soa.n {
+            assert_eq!(soa.bra_p[r], 1.0);
+            assert_eq!(soa.bra_kab[r], 0.0);
+        }
+        // B reconstructed from (A, A-B)
+        assert_eq!(soa.bra_bx[0], 0.75);
+    }
+}

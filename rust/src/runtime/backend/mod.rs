@@ -19,6 +19,7 @@
 //! holds its executable cache behind a mutex, the native backend only
 //! locks to bump counters).
 
+pub mod kernels;
 mod native;
 #[cfg(feature = "pjrt")]
 mod pjrt;
@@ -42,6 +43,11 @@ pub struct EriOutput {
     /// contracted ERIs, row-major [batch, ncomp]
     pub values: Vec<f64>,
     pub ncomp: usize,
+    /// evaluator that actually ran ("kernels", "tables", "recursion",
+    /// "pjrt"; "" until first execution) — per-class fallback means this
+    /// can differ from the configured strategy, so metrics attribute
+    /// execute seconds by what really happened
+    pub strategy: &'static str,
     /// wall seconds inside the backend's evaluate/execute step
     pub execute_seconds: f64,
     /// wall seconds marshalling data in/out (zero for the native backend)
@@ -157,9 +163,11 @@ impl BackendKind {
 /// backend; the native backend carries its own synthetic manifest, sized
 /// for `kpair` primitive products per pair row (the target basis's
 /// `BasisSet::max_kpair()` — 9 for STO-3G, 36 for 6-31G*) with its batch
-/// ladders generated per `ladder` ([`LadderMode`]).  The AOT artifacts
-/// are compiled at fixed widths and rungs, so neither `kpair` nor
-/// `ladder` applies to the PJRT path.  `workers` is the Fock worker count
+/// ladders generated per `ladder` ([`LadderMode`]) and its chunk
+/// evaluator picked by `strategy` ([`EriEvalStrategy`]).  The AOT
+/// artifacts are compiled at fixed widths and rungs, so `kpair`,
+/// `ladder` and `strategy` do not apply to the PJRT path.  `workers` is
+/// the Fock worker count
 /// the backend will be driven from: the PJRT backend sizes its client
 /// pool to it so the artifact path does not serialize concurrent
 /// executions behind one mutex (the native backend is lock-free on the
@@ -167,30 +175,32 @@ impl BackendKind {
 ///
 /// This is also the per-worker construction path of distributed dispatch:
 /// every `matryoshka worker` process builds its own backend from the
-/// [`crate::dispatch::JobSpec`] (kind, kpair, ladder, artifact dir travel
-/// on the wire by name), so the catalog a worker schedules against is the
-/// same pure function of the spec on every host — a drift shows up as a
-/// schedule-fingerprint mismatch, not silently different kernels.
+/// [`crate::dispatch::JobSpec`] (kind, kpair, ladder, strategy, artifact
+/// dir travel on the wire by name), so the catalog a worker schedules
+/// against is the same pure function of the spec on every host — a drift
+/// shows up as a schedule-fingerprint mismatch, not silently different
+/// kernels.
 pub fn create_backend(
     kind: BackendKind,
     artifact_dir: &Path,
     kpair: usize,
     workers: usize,
     ladder: LadderMode,
+    strategy: EriEvalStrategy,
 ) -> anyhow::Result<Box<dyn EriBackend>> {
     match kind {
         BackendKind::Native => {
             let _ = workers;
-            Ok(Box::new(NativeBackend::with_ladder(kpair, ladder)))
+            Ok(Box::new(NativeBackend::with_all_options(kpair, strategy, ladder)))
         }
         #[cfg(feature = "pjrt")]
         BackendKind::Pjrt => {
-            let _ = ladder;
+            let _ = (ladder, strategy);
             Ok(Box::new(PjrtBackend::with_pool(artifact_dir, workers)?))
         }
         #[cfg(not(feature = "pjrt"))]
         BackendKind::Pjrt => {
-            let _ = (artifact_dir, workers, ladder);
+            let _ = (artifact_dir, workers, ladder, strategy);
             anyhow::bail!(
                 "backend `pjrt` requires building with `--features pjrt` \
                  (and a real xla-rs crate in place of rust/vendor/xla)"
@@ -213,7 +223,7 @@ mod tests {
 
     #[test]
     fn native_backend_is_always_constructible() {
-        let b = create_backend(BackendKind::Native, Path::new("/nonexistent"), 9, 1, LadderMode::default()).unwrap();
+        let b = create_backend(BackendKind::Native, Path::new("/nonexistent"), 9, 1, LadderMode::default(), EriEvalStrategy::default()).unwrap();
         assert_eq!(b.name(), "native");
         assert!(!b.manifest().variants.is_empty());
     }
@@ -221,13 +231,13 @@ mod tests {
     #[cfg(not(feature = "pjrt"))]
     #[test]
     fn pjrt_backend_errors_cleanly_without_the_feature() {
-        let err = create_backend(BackendKind::Pjrt, Path::new("/nonexistent"), 9, 4, LadderMode::default()).unwrap_err();
+        let err = create_backend(BackendKind::Pjrt, Path::new("/nonexistent"), 9, 4, LadderMode::default(), EriEvalStrategy::default()).unwrap_err();
         assert!(err.to_string().contains("pjrt"), "{err}");
     }
 
     #[test]
     fn execute_eri_into_matches_execute_eri() {
-        let b = create_backend(BackendKind::Native, Path::new("/nonexistent"), 9, 1, LadderMode::default()).unwrap();
+        let b = create_backend(BackendKind::Native, Path::new("/nonexistent"), 9, 1, LadderMode::default(), EriEvalStrategy::default()).unwrap();
         let variant = b.manifest().ladder((0, 0, 0, 0))[0].clone();
         let batch = variant.batch;
         let (kb, kk) = (variant.kpair_bra, variant.kpair_ket);

@@ -11,14 +11,20 @@
 //! trait (tail fitting, the Workload Allocator ladder, Fock digestion) is
 //! backend-agnostic.
 //!
-//! Two evaluator strategies ship ([`EriEvalStrategy`]):
+//! Three evaluator strategies ship ([`EriEvalStrategy`]):
 //!
-//! * **Tables** (default) — per primitive product, the Hermite E
-//!   coefficients of all three axes are filled once into memoized
-//!   [`HermiteETable`]s and the Coulomb R tensor into a [`HermiteRTable`];
-//!   the `ncomp` component quadruples then reduce over pure table
-//!   lookups.  Ket tables fold the (−1)^t sign in at fill time and are
-//!   built once per row (they do not depend on the bra primitive).
+//! * **Kernels** (default) — graph-compiled straight-line code: one
+//!   generated function per catalog class (`runtime::backend::kernels`,
+//!   emitted by `build.rs`) consuming a batch-major SoA transpose of the
+//!   chunk.  All loop bounds and table indices are resolved at build
+//!   time; classes without a generated kernel fall back to `Tables`.
+//! * **Tables** — per primitive product, the Hermite E coefficients of
+//!   all three axes are filled once into memoized [`HermiteETable`]s and
+//!   the Coulomb R tensor into a [`HermiteRTable`]; the `ncomp`
+//!   component quadruples then reduce over pure table lookups.  Ket
+//!   tables fold the (−1)^t sign in at fill time and are reused across
+//!   the bra loop (and across consecutive rows sharing a ket pair).
+//!   This is the permanent parity oracle for the generated kernels.
 //! * **Recursion** — the original per-component plain recursion, retained
 //!   as the measurable baseline for the Fig. 13 E-table comparison.
 
@@ -33,7 +39,7 @@ use crate::integrals::{
 use crate::runtime::{class_letters, ClassKey, Manifest, Variant};
 use crate::util::Stopwatch;
 
-use super::{EriBackend, EriExecution, EriOutput, RuntimeStats};
+use super::{kernels, EriBackend, EriExecution, EriOutput, RuntimeStats};
 
 /// Highest angular momentum per shell the synthetic variant catalog
 /// covers: s, p and (with the 6-31G* basis) Cartesian d shells.  The
@@ -133,8 +139,13 @@ pub fn ladder_rungs(mode: LadderMode, class: ClassKey, kpair: usize) -> Vec<usiz
 /// How the native backend evaluates a chunk (see module docs).
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub enum EriEvalStrategy {
-    /// memoized Hermite E/R tables per primitive product (the hot path)
+    /// graph-compiled straight-line per-class kernels over the SoA gather
+    /// layout (build-time codegen); falls back to `Tables` for classes
+    /// without a generated kernel
     #[default]
+    Kernels,
+    /// memoized Hermite E/R tables per primitive product — the permanent
+    /// parity oracle for the generated kernels
     Tables,
     /// plain per-component recursion (pre-memoization baseline, kept for
     /// the Fig. 13 comparison and as an independent cross-check)
@@ -142,8 +153,20 @@ pub enum EriEvalStrategy {
 }
 
 impl EriEvalStrategy {
+    pub fn parse(name: &str) -> anyhow::Result<EriEvalStrategy> {
+        match name {
+            "kernels" => Ok(EriEvalStrategy::Kernels),
+            "tables" => Ok(EriEvalStrategy::Tables),
+            "recursion" => Ok(EriEvalStrategy::Recursion),
+            other => anyhow::bail!(
+                "unknown ERI strategy {other} (available: kernels, tables, recursion)"
+            ),
+        }
+    }
+
     pub fn name(&self) -> &'static str {
         match self {
+            EriEvalStrategy::Kernels => "kernels",
             EriEvalStrategy::Tables => "tables",
             EriEvalStrategy::Recursion => "recursion",
         }
@@ -255,29 +278,65 @@ impl EriBackend for NativeBackend {
             );
         }
         let sw = Stopwatch::start();
-        match self.strategy {
-            EriEvalStrategy::Tables => eval_chunk_tables(
-                variant.class,
-                b,
-                kb,
-                kk,
-                bra_prim,
-                bra_geom,
-                ket_prim,
-                ket_geom,
-                &mut out.values,
-            ),
-            EriEvalStrategy::Recursion => eval_chunk_recursive(
-                variant.class,
-                b,
-                kb,
-                kk,
-                bra_prim,
-                bra_geom,
-                ket_prim,
-                ket_geom,
-                &mut out.values,
-            ),
+        let strategy = match self.strategy {
+            EriEvalStrategy::Kernels => {
+                if eval_chunk_kernels(
+                    variant.class,
+                    b,
+                    kb,
+                    kk,
+                    bra_prim,
+                    bra_geom,
+                    ket_prim,
+                    ket_geom,
+                    &mut out.values,
+                ) {
+                    "kernels"
+                } else {
+                    // class outside the generated catalog (e.g. beyond
+                    // NATIVE_LMAX once a bigger basis lands): oracle path
+                    eval_chunk_tables(
+                        variant.class,
+                        b,
+                        kb,
+                        kk,
+                        bra_prim,
+                        bra_geom,
+                        ket_prim,
+                        ket_geom,
+                        &mut out.values,
+                    );
+                    "tables"
+                }
+            }
+            EriEvalStrategy::Tables => {
+                eval_chunk_tables(
+                    variant.class,
+                    b,
+                    kb,
+                    kk,
+                    bra_prim,
+                    bra_geom,
+                    ket_prim,
+                    ket_geom,
+                    &mut out.values,
+                );
+                "tables"
+            }
+            EriEvalStrategy::Recursion => {
+                eval_chunk_recursive(
+                    variant.class,
+                    b,
+                    kb,
+                    kk,
+                    bra_prim,
+                    bra_geom,
+                    ket_prim,
+                    ket_geom,
+                    &mut out.values,
+                );
+                "recursion"
+            }
         };
         let execute_seconds = sw.elapsed_s();
 
@@ -288,6 +347,7 @@ impl EriBackend for NativeBackend {
         drop(stats);
 
         out.ncomp = variant.ncomp;
+        out.strategy = strategy;
         out.execute_seconds = execute_seconds;
         out.marshal_seconds = 0.0;
         out.steady_seconds = execute_seconds;
@@ -321,17 +381,125 @@ fn comp_scale(class: ClassKey) -> Vec<f64> {
     out
 }
 
+/// Per-thread scratch of the kernels strategy: the SoA transpose of the
+/// current chunk plus the component-scale vector of the last class seen.
+/// Thread-local because `execute_eri_into` runs concurrently on Fock
+/// workers and the backend is shared behind `&self`.
+#[derive(Default)]
+struct KernelScratch {
+    soa: kernels::SoaChunk,
+    scale_class: Option<ClassKey>,
+    scale: Vec<f64>,
+    scale_is_unit: bool,
+}
+
+thread_local! {
+    static KERNEL_SCRATCH: std::cell::RefCell<KernelScratch> =
+        std::cell::RefCell::new(KernelScratch::default());
+}
+
+/// Contracted ERIs for one padded chunk via the graph-compiled
+/// straight-line kernels.  Returns `false` (leaving `out` untouched) when
+/// the class has no generated kernel, so the caller can fall back to the
+/// `Tables` oracle.
+///
+/// The AoS gather buffers are transposed into a thread-local
+/// [`kernels::SoaChunk`] (O(batch·kpair) moves against the kernel's
+/// O(batch·kb·kk·ncomp) flops), the kernel accumulates unscaled
+/// components over rows padded to [`kernels::KERNEL_LANES`], and the
+/// per-component `comp_norm` scale is applied here in a final pass — the
+/// generated code carries no non-trivial float literals.
+#[allow(clippy::too_many_arguments)]
+fn eval_chunk_kernels(
+    class: ClassKey,
+    batch: usize,
+    kb: usize,
+    kk: usize,
+    bp: &[f64],
+    bg: &[f64],
+    kp: &[f64],
+    kg: &[f64],
+    out: &mut Vec<f64>,
+) -> bool {
+    let Some(kernel) = kernels::kernel_for(class) else {
+        return false;
+    };
+    KERNEL_SCRATCH.with(|cell| {
+        let scratch = &mut *cell.borrow_mut();
+        scratch.soa.pack(batch, kb, kk, bp, bg, kp, kg);
+        if scratch.scale_class != Some(class) {
+            scratch.scale = comp_scale(class);
+            scratch.scale_is_unit = scratch.scale.iter().all(|&s| s == 1.0);
+            scratch.scale_class = Some(class);
+        }
+        let ncomp = scratch.scale.len();
+        out.clear();
+        out.resize(scratch.soa.n * ncomp, 0.0);
+        kernel(&scratch.soa, out);
+        if !scratch.scale_is_unit {
+            for row in out.chunks_exact_mut(ncomp) {
+                for (v, s) in row.iter_mut().zip(&scratch.scale) {
+                    *v *= s;
+                }
+            }
+        }
+        // drop the lane-padding rows: callers see exactly [batch, ncomp]
+        out.truncate(batch * ncomp);
+    });
+    true
+}
+
+/// Per-thread scratch of the tables strategy: bra/ket Hermite E tables
+/// for every primitive-product slot of a chunk row, so both sides are
+/// filled at most once per row and can be *skipped* entirely when the
+/// row repeats the previous row's pair data (quads are bra-major, so
+/// consecutive rows share their bra pair for long runs; stored-mode
+/// replays and same-pair diagonals repeat kets too).  Skipping a refill
+/// on bit-identical inputs is bitwise-neutral: the fill is deterministic,
+/// so the retained table holds exactly what the refill would produce.
+#[derive(Default)]
+struct TablesScratch {
+    eb: Vec<[HermiteETable; 3]>,
+    ek: Vec<[HermiteETable; 3]>,
+    rtab: HermiteRTable,
+    fvals: Vec<f64>,
+}
+
+thread_local! {
+    static TABLES_SCRATCH: std::cell::RefCell<TablesScratch> =
+        std::cell::RefCell::new(TablesScratch::default());
+}
+
 /// Contracted ERIs for one padded chunk, row-major `[batch, ncomp]` into
 /// the caller's reusable `out` buffer — memoized-table strategy.
 ///
 /// Per quadruple row: recover the Gaussian-product separations from the
-/// pair data, fill the per-axis Hermite E tables (ket side once per row,
-/// bra side once per bra primitive product), fill the Coulomb R table per
-/// primitive-product pair, and contract over table lookups for all
-/// `ncomp` component quadruples.  `Kab`/`Kcd` already fold contraction
-/// coefficients and the exp(−μ·AB²) prefactors.
+/// pair data, fill the per-axis Hermite E tables (each side once per row,
+/// skipped when the row repeats the previous row's pair data), fill the
+/// Coulomb R table per primitive-product pair, and contract over table
+/// lookups for all `ncomp` component quadruples.  `Kab`/`Kcd` already
+/// fold contraction coefficients and the exp(−μ·AB²) prefactors.
 #[allow(clippy::too_many_arguments)]
 fn eval_chunk_tables(
+    class: ClassKey,
+    batch: usize,
+    kb: usize,
+    kk: usize,
+    bp: &[f64],
+    bg: &[f64],
+    kp: &[f64],
+    kg: &[f64],
+    out: &mut Vec<f64>,
+) {
+    TABLES_SCRATCH.with(|cell| {
+        let scratch = &mut *cell.borrow_mut();
+        eval_chunk_tables_with(scratch, class, batch, kb, kk, bp, bg, kp, kg, out);
+    });
+}
+
+#[allow(clippy::too_many_arguments)]
+fn eval_chunk_tables_with(
+    scratch: &mut TablesScratch,
     class: ClassKey,
     batch: usize,
     kb: usize,
@@ -351,16 +519,20 @@ fn eval_chunk_tables(
     let ltot = (class.0 + class.1 + class.2 + class.3) as usize;
     let (la_m, lb_m) = (class.0 as usize, class.1 as usize);
     let (lc_m, ld_m) = (class.2 as usize, class.3 as usize);
-    let mut fvals = vec![0.0; ltot + 1];
+    scratch.fvals.clear();
+    scratch.fvals.resize(ltot + 1, 0.0);
+    let fvals = &mut scratch.fvals;
     out.clear();
     out.resize(batch * ncomp, 0.0);
 
-    // memoized Hermite tables, allocated once and refilled per primitive
-    // product: 3 bra axes, kk × 3 ket axes (ket tables are independent of
-    // the bra primitive, so they are built once per row), one R table
-    let mut eb: [HermiteETable; 3] = Default::default();
-    let mut ek: Vec<[HermiteETable; 3]> = (0..kk).map(|_| Default::default()).collect();
-    let mut rtab = HermiteRTable::new();
+    // per-chunk Hermite table scratch: kb × 3 bra axes, kk × 3 ket axes,
+    // one R table — sized once, refilled per row only when the row's pair
+    // data actually changes
+    scratch.eb.resize_with(kb, Default::default);
+    scratch.ek.resize_with(kk, Default::default);
+    let eb = &mut scratch.eb;
+    let ek = &mut scratch.ek;
+    let rtab = &mut scratch.rtab;
 
     for r in 0..batch {
         let bgr = &bg[r * 6..(r + 1) * 6];
@@ -370,17 +542,41 @@ fn eval_chunk_tables(
         let ctr_c = [kgr[0], kgr[1], kgr[2]];
         let ctr_d = [kgr[0] - kgr[3], kgr[1] - kgr[4], kgr[2] - kgr[5]];
 
-        // ket-side E tables for this row, (−1)^t folded in at fill time
-        for (kk_i, tabs) in ek.iter_mut().enumerate() {
-            let o2 = (r * kk + kk_i) * 5;
-            let (q, kcd) = (kp[o2], kp[o2 + 4]);
-            if kcd == 0.0 {
-                continue; // padding row; bra loop skips it anyway
+        // bra-side E tables, one [HermiteETable; 3] per primitive product;
+        // quads are bra-major, so runs of rows share this fill
+        let same_bra = r > 0
+            && bp[(r - 1) * kb * 5..r * kb * 5] == bp[r * kb * 5..(r + 1) * kb * 5]
+            && bg[(r - 1) * 6..r * 6] == *bgr;
+        if !same_bra {
+            for (kb_i, tabs) in eb.iter_mut().enumerate() {
+                let o = (r * kb + kb_i) * 5;
+                let (p, kab) = (bp[o], bp[o + 4]);
+                if kab == 0.0 {
+                    continue; // padding row; the contraction loop skips it
+                }
+                let pp = [bp[o + 1], bp[o + 2], bp[o + 3]];
+                for ax in 0..3 {
+                    tabs[ax].fill(la_m, lb_m, p, pp[ax] - ctr_a[ax], pp[ax] - ctr_b[ax]);
+                }
             }
-            let qq = [kp[o2 + 1], kp[o2 + 2], kp[o2 + 3]];
-            for ax in 0..3 {
-                tabs[ax].fill(lc_m, ld_m, q, qq[ax] - ctr_c[ax], qq[ax] - ctr_d[ax]);
-                tabs[ax].negate_odd_t();
+        }
+
+        // ket-side E tables for this row, (−1)^t folded in at fill time
+        let same_ket = r > 0
+            && kp[(r - 1) * kk * 5..r * kk * 5] == kp[r * kk * 5..(r + 1) * kk * 5]
+            && kg[(r - 1) * 6..r * 6] == *kgr;
+        if !same_ket {
+            for (kk_i, tabs) in ek.iter_mut().enumerate() {
+                let o2 = (r * kk + kk_i) * 5;
+                let (q, kcd) = (kp[o2], kp[o2 + 4]);
+                if kcd == 0.0 {
+                    continue; // padding row; bra loop skips it anyway
+                }
+                let qq = [kp[o2 + 1], kp[o2 + 2], kp[o2 + 3]];
+                for ax in 0..3 {
+                    tabs[ax].fill(lc_m, ld_m, q, qq[ax] - ctr_c[ax], qq[ax] - ctr_d[ax]);
+                    tabs[ax].negate_odd_t();
+                }
             }
         }
 
@@ -391,9 +587,7 @@ fn eval_chunk_tables(
                 continue; // padding row (within-pair or whole-row padding)
             }
             let pp = [bp[o + 1], bp[o + 2], bp[o + 3]];
-            for ax in 0..3 {
-                eb[ax].fill(la_m, lb_m, p, pp[ax] - ctr_a[ax], pp[ax] - ctr_b[ax]);
-            }
+            let ebt = &eb[kb_i];
 
             for kk_i in 0..kk {
                 let o2 = (r * kk + kk_i) * 5;
@@ -406,8 +600,8 @@ fn eval_chunk_tables(
                 let alpha = p * q / (p + q);
                 let pq = [pp[0] - qq[0], pp[1] - qq[1], pp[2] - qq[2]];
                 let t_arg = alpha * (pq[0] * pq[0] + pq[1] * pq[1] + pq[2] * pq[2]);
-                boys(ltot, t_arg, &mut fvals);
-                rtab.fill(ltot, alpha, pq, &fvals);
+                boys(ltot, t_arg, fvals);
+                rtab.fill(ltot, alpha, pq, fvals);
                 let pref = kab * kcd * 2.0 * PI_POW_2_5 / (p * q * (p + q).sqrt());
                 let ex = &ek[kk_i];
 
@@ -423,17 +617,17 @@ fn eval_chunk_tables(
                                 let (lx, ly, lz) = (ld[0] as usize, ld[1] as usize, ld[2] as usize);
                                 let mut val = 0.0;
                                 for t in 0..=(ix + jx) {
-                                    let e1 = eb[0].get(ix, jx, t);
+                                    let e1 = ebt[0].get(ix, jx, t);
                                     if e1 == 0.0 {
                                         continue;
                                     }
                                     for u in 0..=(iy + jy) {
-                                        let e2 = eb[1].get(iy, jy, u);
+                                        let e2 = ebt[1].get(iy, jy, u);
                                         if e2 == 0.0 {
                                             continue;
                                         }
                                         for v in 0..=(iz + jz) {
-                                            let e3 = eb[2].get(iz, jz, v);
+                                            let e3 = ebt[2].get(iz, jz, v);
                                             if e3 == 0.0 {
                                                 continue;
                                             }
@@ -796,7 +990,11 @@ mod tests {
         let basis = build_basis(&mol, "sto-3g").unwrap();
         let pairs = PairList::build(&basis, 1e-14);
 
-        for strategy in [EriEvalStrategy::Tables, EriEvalStrategy::Recursion] {
+        for strategy in [
+            EriEvalStrategy::Kernels,
+            EriEvalStrategy::Tables,
+            EriEvalStrategy::Recursion,
+        ] {
             let backend = NativeBackend::with_options(KPAIR, strategy);
 
             // take a handful of (bra, ket) pair combinations incl. p shells
@@ -847,6 +1045,113 @@ mod tests {
                 assert!(exec.values[exec.ncomp..].iter().all(|&v| v == 0.0));
             }
         }
+    }
+
+    /// Every generated kernel must reproduce the shell-quartet oracle on
+    /// randomized primitives — all 21 catalog classes, deterministic seed,
+    /// contractions of 1–2 primitives and off-center geometries so no
+    /// structural zero hides a wrong term.
+    #[test]
+    fn generated_kernels_match_oracle_on_randomized_primitives_for_all_classes() {
+        use crate::basis::{BasisSet, Shell};
+        use crate::util::XorShift;
+        let mut rng = XorShift::new(20260807);
+        for class in kernels::codegen::catalog() {
+            for trial in 0..2 {
+                let (la, lb, lc, ld) = class;
+                let mut shells = Vec::new();
+                let mut nbf = 0usize;
+                for l in [la, lb, lc, ld] {
+                    let k = 1 + rng.below(2);
+                    let exps: Vec<f64> = (0..k).map(|_| rng.uniform(0.3, 2.2)).collect();
+                    let coefs: Vec<f64> = (0..k).map(|_| rng.uniform(0.4, 1.0)).collect();
+                    let center = [
+                        rng.uniform(-0.8, 0.8),
+                        rng.uniform(-0.8, 0.8),
+                        rng.uniform(-0.8, 0.8),
+                    ];
+                    let mut sh = Shell::new(l, exps, coefs, center, 0, nbf);
+                    sh.normalize();
+                    nbf += ncart(l as usize);
+                    shells.push(sh);
+                }
+                let basis = BasisSet { shells, nbf };
+                let kpair = basis.max_kpair().max(1);
+                let pairs = PairList::build(&basis, 1e-16);
+                let find = |a: usize, b: usize| {
+                    pairs
+                        .pairs
+                        .iter()
+                        .find(|p| (p.si == a && p.sj == b) || (p.si == b && p.sj == a))
+                        .unwrap_or_else(|| panic!("pair ({a},{b}) missing for {class:?}"))
+                };
+                let bra = find(0, 1);
+                let ket = find(2, 3);
+                assert_eq!((bra.class.0, bra.class.1, ket.class.0, ket.class.1), class);
+
+                let backend = NativeBackend::with_options(kpair, EriEvalStrategy::Kernels);
+                let variant = backend.manifest().ladder(class)[0].clone();
+                let b = variant.batch;
+                let mut bp = vec![0.0; b * kpair * 5];
+                let mut bg = vec![0.0; b * 6];
+                let mut kp = vec![0.0; b * kpair * 5];
+                let mut kg = vec![0.0; b * 6];
+                for r in 1..b {
+                    for k in 0..kpair {
+                        bp[(r * kpair + k) * 5] = 1.0;
+                        kp[(r * kpair + k) * 5] = 1.0;
+                    }
+                }
+                bp[..kpair * 5].copy_from_slice(&bra.prim);
+                kp[..kpair * 5].copy_from_slice(&ket.prim);
+                bg[..6].copy_from_slice(&bra.geom);
+                kg[..6].copy_from_slice(&ket.geom);
+
+                let exec = backend.execute_eri(&variant, &bp, &bg, &kp, &kg).unwrap();
+                assert_eq!(exec.strategy, "kernels", "{class:?} fell back off the kernels path");
+                let mut stats = EriRefStats::default();
+                let oracle = eri_shell_quartet(
+                    &basis.shells[bra.si],
+                    &basis.shells[bra.sj],
+                    &basis.shells[ket.si],
+                    &basis.shells[ket.sj],
+                    &mut stats,
+                );
+                assert_eq!(exec.ncomp, oracle.len());
+                for (c, (got, want)) in exec.values[..exec.ncomp].iter().zip(&oracle).enumerate() {
+                    let tol = 1e-10 * want.abs().max(1.0);
+                    assert!(
+                        (got - want).abs() < tol,
+                        "class {class:?} trial {trial} comp {c}: {got} vs {want}"
+                    );
+                }
+                // padding rows stay exact zeros through the SoA path too
+                assert!(exec.values[exec.ncomp..].iter().all(|&v| v == 0.0));
+            }
+        }
+    }
+
+    /// The kernels strategy attributes executions to the evaluator that
+    /// ran: a catalogued class claims "kernels", and a class beyond the
+    /// generated catalog has no kernel (the defensive per-class fallback
+    /// to tables — today NATIVE_LMAX == codegen LMAX, so it cannot be
+    /// reached through a real variant, but the dispatch hole is checked).
+    #[test]
+    fn kernels_strategy_attributes_executions_and_has_no_kernel_past_lmax() {
+        assert!(kernels::kernel_for((3, 0, 0, 0)).is_none());
+        let backend = NativeBackend::with_options(KPAIR, EriEvalStrategy::Kernels);
+        let variant = backend.manifest().ladder((0, 0, 0, 0))[0].clone();
+        let b = variant.batch;
+        let mut bp = vec![0.0; b * KPAIR * 5];
+        let bg = vec![0.0; b * 6];
+        for r in 0..b {
+            for k in 0..KPAIR {
+                bp[(r * KPAIR + k) * 5] = 1.0;
+            }
+        }
+        let exec = backend.execute_eri(&variant, &bp, &bg, &bp.clone(), &bg.clone()).unwrap();
+        // ssss IS catalogued: the kernels path must claim it
+        assert_eq!(exec.strategy, "kernels");
     }
 
     #[test]

@@ -104,6 +104,7 @@ impl Runtime {
         Ok(EriExecution {
             values,
             ncomp: variant.ncomp,
+            strategy: "pjrt",
             execute_seconds,
             marshal_seconds: marshal,
             steady_seconds: execute_seconds + marshal,

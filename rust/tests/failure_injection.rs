@@ -11,7 +11,9 @@ use std::path::{Path, PathBuf};
 use matryoshka::basis::build_basis;
 use matryoshka::engines::{MatryoshkaConfig, MatryoshkaEngine};
 use matryoshka::molecule::{library, Atom, Molecule};
-use matryoshka::runtime::{create_backend, BackendKind, EriBackend, LadderMode, Manifest};
+use matryoshka::runtime::{
+    create_backend, BackendKind, EriBackend, EriEvalStrategy, LadderMode, Manifest,
+};
 use matryoshka::scf::{run_rhf, ScfOptions};
 
 fn tmpdir(name: &str) -> PathBuf {
@@ -40,14 +42,14 @@ fn empty_manifest_is_rejected() {
 #[cfg(not(feature = "pjrt"))]
 #[test]
 fn requesting_pjrt_without_the_feature_is_a_clean_error() {
-    let err = create_backend(BackendKind::Pjrt, Path::new("anywhere"), 9, 4, LadderMode::default()).unwrap_err();
+    let err = create_backend(BackendKind::Pjrt, Path::new("anywhere"), 9, 4, LadderMode::default(), EriEvalStrategy::default()).unwrap_err();
     assert!(err.to_string().contains("pjrt"), "{err}");
 }
 
 #[test]
 fn native_backend_never_needs_an_artifact_dir() {
     let backend =
-        create_backend(BackendKind::Native, Path::new("/nonexistent/artifacts"), 9, 4, LadderMode::default()).unwrap();
+        create_backend(BackendKind::Native, Path::new("/nonexistent/artifacts"), 9, 4, LadderMode::default(), EriEvalStrategy::default()).unwrap();
     assert_eq!(backend.name(), "native");
 }
 

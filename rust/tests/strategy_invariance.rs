@@ -1,0 +1,141 @@
+//! ERI-strategy acceptance tests (graph-compiled kernels).
+//!
+//! * Cross-strategy parity: the generated kernels and the memoized-tables
+//!   interpreter are different factorizations of the same McMurchie–
+//!   Davidson sum, so their G matrices agree to tight tolerance (never
+//!   bitwise — the operation orders differ by construction).
+//! * Within-strategy bitwise invariance: for a fixed strategy, G must not
+//!   change a single bit across thread count, batch ladder, pipeline mode
+//!   or `--dispatch local:2` — chunk boundaries and execution interleaving
+//!   are not allowed to touch the floating-point result.
+//! * Golden SCF: the kernels strategy reproduces the tables-strategy SCF
+//!   energy on 6-31G* water (d classes exercised end to end).
+
+use std::path::{Path, PathBuf};
+
+use matryoshka::basis::build_basis;
+use matryoshka::dispatch::{DispatchConfig, DispatchMode};
+use matryoshka::engines::{MatryoshkaConfig, MatryoshkaEngine};
+use matryoshka::linalg::Matrix;
+use matryoshka::molecule::library;
+use matryoshka::pipeline::PipelineMode;
+use matryoshka::runtime::{EriEvalStrategy, LadderMode};
+use matryoshka::scf::{run_rhf, FockEngine, ScfOptions};
+
+fn worker_bin() -> PathBuf {
+    PathBuf::from(env!("CARGO_BIN_EXE_matryoshka"))
+}
+
+fn test_density(n: usize) -> Matrix {
+    let mut d = Matrix::zeros(n, n);
+    for i in 0..n {
+        for j in 0..n {
+            let v = 0.3 / (1.0 + (i as f64 - j as f64).abs());
+            *d.at_mut(i, j) = v;
+            *d.at_mut(j, i) = v;
+        }
+    }
+    d
+}
+
+fn build_g(config: MatryoshkaConfig) -> Matrix {
+    let mol = library::by_name("water").unwrap();
+    let basis = build_basis(&mol, "6-31g*").unwrap();
+    let d = test_density(basis.nbf);
+    let mut engine = MatryoshkaEngine::new(basis, Path::new("unused"), config).unwrap();
+    engine.two_electron(&d).unwrap()
+}
+
+#[test]
+fn kernels_g_matches_tables_oracle_on_631gstar_water() {
+    let kernels = build_g(MatryoshkaConfig {
+        eri_strategy: EriEvalStrategy::Kernels,
+        ..Default::default()
+    });
+    let tables = build_g(MatryoshkaConfig {
+        eri_strategy: EriEvalStrategy::Tables,
+        ..Default::default()
+    });
+    let diff = kernels.diff_norm(&tables);
+    assert!(diff < 1e-8, "||G_kernels − G_tables|| = {diff:.3e}");
+}
+
+#[test]
+fn g_is_bitwise_invariant_within_each_strategy() {
+    for strategy in [EriEvalStrategy::Kernels, EriEvalStrategy::Tables] {
+        let base = MatryoshkaConfig { eri_strategy: strategy, threads: 1, ..Default::default() };
+        let g_ref = build_g(base.clone());
+
+        // thread count, batch ladder and pipeline mode only move chunk
+        // boundaries and interleaving — per-quad values and the digestion
+        // order are invariants, so G must be bit-identical
+        let variations: Vec<(&str, MatryoshkaConfig)> = vec![
+            ("3 threads", MatryoshkaConfig { threads: 3, ..base.clone() }),
+            ("fixed ladder", MatryoshkaConfig { ladder: LadderMode::Fixed, ..base.clone() }),
+            (
+                "fixed ladder, 3 threads",
+                MatryoshkaConfig { ladder: LadderMode::Fixed, threads: 3, ..base.clone() },
+            ),
+            (
+                "lockstep pipeline",
+                MatryoshkaConfig { pipeline: PipelineMode::Lockstep, ..base.clone() },
+            ),
+        ];
+        for (what, config) in variations {
+            let g = build_g(config);
+            assert_eq!(
+                g_ref.data(),
+                g.data(),
+                "{} / {what}: G diverged bitwise",
+                strategy.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn dispatched_g_is_bitwise_identical_per_strategy() {
+    for strategy in [EriEvalStrategy::Kernels, EriEvalStrategy::Tables] {
+        let g_ref = build_g(MatryoshkaConfig { eri_strategy: strategy, ..Default::default() });
+        let dispatched = build_g(MatryoshkaConfig {
+            eri_strategy: strategy,
+            dispatch: DispatchConfig {
+                mode: DispatchMode::Local(2),
+                worker_bin: Some(worker_bin()),
+                ..Default::default()
+            },
+            ..Default::default()
+        });
+        assert_eq!(
+            g_ref.data(),
+            dispatched.data(),
+            "{}: local:2 G diverged from the in-process build",
+            strategy.name()
+        );
+    }
+}
+
+#[test]
+fn kernels_scf_energy_matches_tables_on_631gstar_water() {
+    let mol = library::by_name("water").unwrap();
+    let basis = build_basis(&mol, "6-31g*").unwrap();
+    let opts = ScfOptions::default();
+
+    let run = |strategy: EriEvalStrategy| {
+        let config = MatryoshkaConfig { eri_strategy: strategy, ..Default::default() };
+        let mut engine =
+            MatryoshkaEngine::new(basis.clone(), Path::new("unused"), config).unwrap();
+        run_rhf(&mol, &basis, &mut engine, &opts).unwrap()
+    };
+    let kernels = run(EriEvalStrategy::Kernels);
+    let tables = run(EriEvalStrategy::Tables);
+    assert!(kernels.converged && tables.converged);
+    assert!(
+        (kernels.energy - tables.energy).abs() < 1e-9,
+        "kernels {} vs tables {}",
+        kernels.energy,
+        tables.energy
+    );
+    // literature RHF/6-31G* water ≈ −76.01 Ha
+    assert!((kernels.energy + 76.01).abs() < 0.01, "water/6-31g* E = {:.7}", kernels.energy);
+}

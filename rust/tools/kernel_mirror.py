@@ -1,0 +1,631 @@
+#!/usr/bin/env python3
+"""Mirror of the Rust ERI kernel generator (rust/src/runtime/backend/kernels/codegen.rs).
+
+The Rust generator runs from build.rs with no test harness of its own, so
+this script re-implements the exact same schedule construction in Python
+and does two things the Rust side cannot do for itself:
+
+1. numerically verify the unrolled operation schedule of every catalog
+   class against a plain-recursion McMurchie-Davidson reference on random
+   primitive data (structure, pruning and ket-sign folding are all
+   exercised; agreement is to ~1e-13 relative), and
+2. render the exact generated source text, so the committed
+   `generated.rs` snapshot and the drift check have an independent
+   producer to compare against.
+
+Run: python3 rust/tools/kernel_mirror.py [--emit PATH]
+
+Keep this file in lockstep with codegen.rs: both walk components, Hermite
+E fills, the R-tensor layer descent and the demand-driven contraction in
+the same deterministic order, so the rendered bytes match exactly.
+"""
+
+import math
+import random
+import sys
+
+LMAX = 2  # NATIVE_LMAX: the synthetic catalog covers s, p, d shells
+LETTERS = "spdfghik"
+
+
+def ncart(l):
+    return (l + 1) * (l + 2) // 2
+
+
+def cart(l):
+    """Cartesian component triples, x-major descending (basis::cart_components)."""
+    return [
+        (lx, ly, l - lx - ly)
+        for lx in range(l, -1, -1)
+        for ly in range(l - lx, -1, -1)
+    ]
+
+
+def catalog():
+    """The 21 canonical classes, in synthetic_manifest order."""
+    pair_classes = sorted(
+        (la, lb) for la in range(0, LMAX + 1) for lb in range(0, la + 1)
+    )
+    out = []
+    for bi, bra in enumerate(pair_classes):
+        for ket in pair_classes[: bi + 1]:
+            out.append((bra[0], bra[1], ket[0], ket[1]))
+    return out
+
+
+def class_letters(cls):
+    return "".join(LETTERS[l] for l in cls)
+
+
+class Gen:
+    """Builds the straight-line statement list for one ERI class.
+
+    A statement is (name, terms); a term is (sign, [factor, ...]) with
+    factors being variable names, `fv[i]` reads, or `K.0` integer-float
+    literals.  Sums with a single positive single-factor term are not
+    emitted: the key aliases the factor instead (this is what collapses
+    s/p-heavy classes to near-nothing).
+    """
+
+    def __init__(self, cls):
+        self.cls = cls
+        self.la, self.lb, self.lc, self.ld = cls
+        self.lbra = self.la + self.lb
+        self.lket = self.lc + self.ld
+        self.ltot = self.lbra + self.lket
+        self.stmts = []
+        self.memo = {}
+        # E coefficient names: (side, axis, i, j, t) -> factor or None (const 1)
+        self.ename = {}
+        # layer-0 R names: (t, u, v) -> factor
+        self.rname = {}
+        self.build()
+
+    # -- statement plumbing ------------------------------------------------
+
+    def emit(self, key, name, terms):
+        if len(terms) == 1 and terms[0][0] > 0 and len(terms[0][1]) == 1:
+            self.memo[key] = terms[0][1][0]
+            return self.memo[key]
+        self.stmts.append((name, terms))
+        self.memo[key] = name
+        return name
+
+    # -- Hermite E coefficient fill (HermiteETable::fill, unrolled) --------
+
+    def fill_e(self, side, imax, jmax):
+        """Emit E(i,j,t) for one pair side, all three axes, i<=imax, j<=jmax.
+
+        Source entries with t outside 0..=i+j are structural zeros: their
+        terms are dropped at generation time.  E(0,0,0) = 1 is tracked as
+        const-1 (None) and dropped from factor products.
+        """
+        inv2 = "inv2p" if side == "b" else "inv2q"
+        for ax in range(3):
+            axc = "xyz"[ax]
+            xpa = f"xpa_{axc}" if side == "b" else f"xqc_{axc}"
+            xpb = f"xpb_{axc}" if side == "b" else f"xqd_{axc}"
+
+            def ref(i, j, t):
+                return self.ename[(side, ax, i, j, t)]
+
+            def put(i, j, t, terms):
+                key = ("e", side, ax, i, j, t)
+                name = f"e{side}{axc}_{i}{j}_{t}"
+                self.ename[(side, ax, i, j, t)] = self.emit(key, name, terms)
+
+            self.ename[(side, ax, 0, 0, 0)] = None  # E(0,0,0) = 1
+            for i in range(1, imax + 1):
+                for t in range(0, i + 1):
+                    terms = []
+                    if t <= i - 1:
+                        terms.append((1, self.factors([xpa], ref(i - 1, 0, t))))
+                    if t + 1 <= i - 1:
+                        terms.append(
+                            (1, self.factors([f"{t + 1}.0"], ref(i - 1, 0, t + 1)))
+                        )
+                    if t > 0:
+                        terms.append((1, self.factors([inv2], ref(i - 1, 0, t - 1))))
+                    put(i, 0, t, terms)
+            for j in range(1, jmax + 1):
+                for i in range(0, imax + 1):
+                    for t in range(0, i + j + 1):
+                        terms = []
+                        if t <= i + j - 1:
+                            terms.append((1, self.factors([xpb], ref(i, j - 1, t))))
+                        if t + 1 <= i + j - 1:
+                            terms.append(
+                                (1, self.factors([f"{t + 1}.0"], ref(i, j - 1, t + 1)))
+                            )
+                        if t > 0:
+                            terms.append(
+                                (1, self.factors([inv2], ref(i, j - 1, t - 1)))
+                            )
+                        put(i, j, t, terms)
+
+    @staticmethod
+    def factors(coef, e):
+        """Factor list of coef * E, dropping const-1 E and `1.0` literals."""
+        out = [c for c in coef if c != "1.0"]
+        if e is not None:
+            out.append(e)
+        return out
+
+    # -- Hermite R tensor layer descent (HermiteRTable::fill, unrolled) ----
+
+    def fill_r(self):
+        lmax = self.ltot
+        mp = {0: None, 1: "m2a"} if lmax >= 1 else {0: None}
+        for k in range(2, lmax + 1):
+            key = ("mp", k)
+            mp[k] = self.emit(key, f"mp{k}", [(1, [mp[k - 1], "m2a"])])
+        layer = {}
+        for n in range(lmax, -1, -1):
+            prev = layer
+            layer = {}
+            base = [x for x in (mp[n], f"fv[{n}]") if x is not None]
+            layer[(0, 0, 0)] = self.emit(("r", n, 0, 0, 0), f"rr{n}_000", [(1, base)])
+            for total in range(1, lmax - n + 1):
+                for t in range(0, total + 1):
+                    for u in range(0, total - t + 1):
+                        v = total - t - u
+                        terms = []
+                        if t > 0:
+                            if t >= 2 and t - 1 > 0:
+                                terms.append(
+                                    (1, self.factors([f"{t - 1}.0"], prev[(t - 2, u, v)]))
+                                )
+                            terms.append((1, ["pqx", prev[(t - 1, u, v)]]))
+                        elif u > 0:
+                            if u >= 2 and u - 1 > 0:
+                                terms.append(
+                                    (1, self.factors([f"{u - 1}.0"], prev[(t, u - 2, v)]))
+                                )
+                            terms.append((1, ["pqy", prev[(t, u - 1, v)]]))
+                        else:
+                            if v >= 2 and v - 1 > 0:
+                                terms.append(
+                                    (1, self.factors([f"{v - 1}.0"], prev[(t, u, v - 2)]))
+                                )
+                            terms.append((1, ["pqz", prev[(t, u, v - 1)]]))
+                        layer[(t, u, v)] = self.emit(
+                            ("r", n, t, u, v), f"rr{n}_{t}{u}{v}", terms
+                        )
+        self.rname = layer
+
+    # -- demand-driven contraction (the graph-compiler part) ---------------
+
+    def e(self, side, ax, i, j, t):
+        return self.ename[(side, ax, i, j, t)]
+
+    def r0(self, t, u, v):
+        return self.rname[(t, u, v)]
+
+    def tz(self, kz, lz, t, u, v):
+        if (kz, lz) == (0, 0):
+            return self.r0(t, u, v)
+        key = ("tz", kz, lz, t, u, v)
+        if key in self.memo:
+            return self.memo[key]
+        terms = []
+        for phi in range(0, kz + lz + 1):
+            sign = -1 if phi % 2 == 1 else 1
+            terms.append((sign, self.factors([], self.e("k", 2, kz, lz, phi)) + [self.r0(t, u, v + phi)]))
+        return self.emit(key, f"tz_{kz}{lz}_{t}{u}{v}", terms)
+
+    def ty(self, ky, ly, kz, lz, t, u, v):
+        if (ky, ly) == (0, 0):
+            return self.tz(kz, lz, t, u, v)
+        key = ("ty", ky, ly, kz, lz, t, u, v)
+        if key in self.memo:
+            return self.memo[key]
+        terms = []
+        for nu in range(0, ky + ly + 1):
+            sign = -1 if nu % 2 == 1 else 1
+            terms.append((sign, self.factors([], self.e("k", 1, ky, ly, nu)) + [self.tz(kz, lz, t, u + nu, v)]))
+        return self.emit(key, f"ty_{ky}{ly}{kz}{lz}_{t}{u}{v}", terms)
+
+    def th(self, kx, lx, ky, ly, kz, lz, t, u, v):
+        if (kx, lx) == (0, 0):
+            return self.ty(ky, ly, kz, lz, t, u, v)
+        key = ("th", kx, lx, ky, ly, kz, lz, t, u, v)
+        if key in self.memo:
+            return self.memo[key]
+        terms = []
+        for tau in range(0, kx + lx + 1):
+            sign = -1 if tau % 2 == 1 else 1
+            terms.append((sign, self.factors([], self.e("k", 0, kx, lx, tau)) + [self.ty(ky, ly, kz, lz, t + tau, u, v)]))
+        return self.emit(key, f"th_{kx}{lx}{ky}{ly}{kz}{lz}_{t}{u}{v}", terms)
+
+    def bz(self, iz, jz, ket, t, u):
+        if (iz, jz) == (0, 0):
+            return self.th(*ket, t, u, 0)
+        key = ("bz", iz, jz, ket, t, u)
+        if key in self.memo:
+            return self.memo[key]
+        terms = []
+        for v in range(0, iz + jz + 1):
+            terms.append((1, self.factors([], self.e("b", 2, iz, jz, v)) + [self.th(*ket, t, u, v)]))
+        kname = "".join(str(x) for x in ket)
+        return self.emit(key, f"bz_{iz}{jz}_{kname}_{t}{u}", terms)
+
+    def by(self, iy, jy, iz, jz, ket, t):
+        if (iy, jy) == (0, 0):
+            return self.bz(iz, jz, ket, t, 0)
+        key = ("by", iy, jy, iz, jz, ket, t)
+        if key in self.memo:
+            return self.memo[key]
+        terms = []
+        for u in range(0, iy + jy + 1):
+            terms.append((1, self.factors([], self.e("b", 1, iy, jy, u)) + [self.bz(iz, jz, ket, t, u)]))
+        kname = "".join(str(x) for x in ket)
+        return self.emit(key, f"by_{iy}{jy}{iz}{jz}_{kname}_{t}", terms)
+
+    def build(self):
+        self.fill_e("b", self.la, self.lb)
+        self.fill_e("k", self.lc, self.ld)
+        self.fill_r()
+        self.outs = []  # (component index, terms)
+        idx = 0
+        for ca in cart(self.la):
+            for cb in cart(self.lb):
+                for cc in cart(self.lc):
+                    for cd in cart(self.ld):
+                        ket = (cc[0], cd[0], cc[1], cd[1], cc[2], cd[2])
+                        terms = []
+                        for t in range(0, ca[0] + cb[0] + 1):
+                            terms.append(
+                                (
+                                    1,
+                                    self.factors(
+                                        [], self.e("b", 0, ca[0], cb[0], t)
+                                    )
+                                    + [
+                                        self.by(
+                                            ca[1], cb[1], ca[2], cb[2], ket, t
+                                        )
+                                    ],
+                                )
+                            )
+                        self.outs.append((idx, terms))
+                        idx += 1
+
+
+# ---------------------------------------------------------------------------
+# rendering (must match codegen.rs byte for byte)
+# ---------------------------------------------------------------------------
+
+
+def render_expr(terms):
+    parts = []
+    for i, (sign, factors) in enumerate(terms):
+        prod = " * ".join(factors) if factors else "1.0"
+        if i == 0:
+            parts.append(f"-{prod}" if sign < 0 else prod)
+        else:
+            parts.append(f" - {prod}" if sign < 0 else f" + {prod}")
+    return "".join(parts)
+
+
+def render_kernel(cls):
+    g = Gen(cls)
+    letters = class_letters(cls)
+    nc = ncart(cls[0]) * ncart(cls[1]) * ncart(cls[2]) * ncart(cls[3])
+    lt = g.ltot
+    w = []
+    w.append(
+        f"/// Straight-line ERI kernel for class ({cls[0]}, {cls[1]}, {cls[2]}, {cls[3]}) — `{letters}`."
+    )
+    w.append("#[allow(unused_variables, clippy::all)]")
+    w.append(f"pub(crate) fn eri_{letters}(soa: &SoaChunk, out: &mut [f64]) {{")
+    w.append("    let n = soa.n;")
+    w.append(f"    debug_assert_eq!(out.len(), n * {nc});")
+    w.append("    for kbi in 0..soa.kb {")
+    w.append("        if !soa.bra_active[kbi] {")
+    w.append("            continue;")
+    w.append("        }")
+    w.append("        let bs = kbi * n;")
+    w.append("        let bp_p = &soa.bra_p[bs..bs + n];")
+    w.append("        let bp_x = &soa.bra_px[bs..bs + n];")
+    w.append("        let bp_y = &soa.bra_py[bs..bs + n];")
+    w.append("        let bp_z = &soa.bra_pz[bs..bs + n];")
+    w.append("        let bp_k = &soa.bra_kab[bs..bs + n];")
+    w.append("        for kki in 0..soa.kk {")
+    w.append("            if !soa.ket_active[kki] {")
+    w.append("                continue;")
+    w.append("            }")
+    w.append("            let ks = kki * n;")
+    w.append("            let kp_q = &soa.ket_p[ks..ks + n];")
+    w.append("            let kp_x = &soa.ket_px[ks..ks + n];")
+    w.append("            let kp_y = &soa.ket_py[ks..ks + n];")
+    w.append("            let kp_z = &soa.ket_pz[ks..ks + n];")
+    w.append("            let kp_k = &soa.ket_kcd[ks..ks + n];")
+    w.append("            for r in 0..n {")
+    p = "                "
+    w.append(p + "let kab = bp_k[r];")
+    w.append(p + "let kcd = kp_k[r];")
+    w.append(p + "let p = bp_p[r];")
+    w.append(p + "let q = kp_q[r];")
+    w.append(p + "let px = bp_x[r];")
+    w.append(p + "let py = bp_y[r];")
+    w.append(p + "let pz = bp_z[r];")
+    w.append(p + "let qx = kp_x[r];")
+    w.append(p + "let qy = kp_y[r];")
+    w.append(p + "let qz = kp_z[r];")
+    w.append(p + "let xpa_x = px - soa.bra_ax[r];")
+    w.append(p + "let xpa_y = py - soa.bra_ay[r];")
+    w.append(p + "let xpa_z = pz - soa.bra_az[r];")
+    w.append(p + "let xpb_x = px - soa.bra_bx[r];")
+    w.append(p + "let xpb_y = py - soa.bra_by[r];")
+    w.append(p + "let xpb_z = pz - soa.bra_bz[r];")
+    w.append(p + "let xqc_x = qx - soa.ket_ax[r];")
+    w.append(p + "let xqc_y = qy - soa.ket_ay[r];")
+    w.append(p + "let xqc_z = qz - soa.ket_az[r];")
+    w.append(p + "let xqd_x = qx - soa.ket_bx[r];")
+    w.append(p + "let xqd_y = qy - soa.ket_by[r];")
+    w.append(p + "let xqd_z = qz - soa.ket_bz[r];")
+    w.append(p + "let alpha = p * q / (p + q);")
+    w.append(p + "let pqx = px - qx;")
+    w.append(p + "let pqy = py - qy;")
+    w.append(p + "let pqz = pz - qz;")
+    w.append(p + "let t_arg = alpha * (pqx * pqx + pqy * pqy + pqz * pqz);")
+    w.append(p + f"let mut fv = [0.0f64; {lt + 1}];")
+    w.append(p + f"crate::integrals::boys({lt}, t_arg, &mut fv);")
+    w.append(
+        p
+        + "let pref = kab * kcd * 2.0 * crate::integrals::PI_POW_2_5 / (p * q * (p + q).sqrt());"
+    )
+    w.append(p + "let inv2p = 0.5 / p;")
+    w.append(p + "let inv2q = 0.5 / q;")
+    w.append(p + "let m2a = -2.0 * alpha;")
+    for name, terms in g.stmts:
+        w.append(p + f"let {name} = {render_expr(terms)};")
+    w.append(p + f"let o = r * {nc};")
+    for c, terms in g.outs:
+        lhs = "out[o]" if c == 0 else f"out[o + {c}]"
+        w.append(p + f"{lhs} += pref * ({render_expr(terms)});")
+    w.append("            }")
+    w.append("        }")
+    w.append("    }")
+    w.append("}")
+    return "\n".join(w), g
+
+
+HEADER = """\
+// @generated by the Matryoshka graph compiler
+// (rust/src/runtime/backend/kernels/codegen.rs).  DO NOT EDIT.
+//
+// This file is a committed snapshot for review and drift detection only:
+// the crate compiles the build-time copy that rust/build.rs writes under
+// OUT_DIR from the same generator.  Regenerate this snapshot with
+// `matryoshka codegen --write rust/src/runtime/backend/kernels/generated.rs`
+// and check it with `matryoshka codegen --check ...` (the CI drift job).
+//
+// One straight-line McMurchie-Davidson kernel per ERI class: all loop
+// bounds, Hermite E-coefficient indices and R-tensor contractions are
+// resolved at generation time for the fixed (la, lb, lc, ld); the batch
+// loop over the SoA chunk is the only data-dependent control flow left.
+"""
+
+
+def render_file():
+    parts = [HEADER]
+    for cls in catalog():
+        text, _ = render_kernel(cls)
+        parts.append(text)
+    lines = ["/// Generated kernels indexed by class key (catalog order)."]
+    lines.append("pub(crate) const GENERATED_KERNELS: &[(ClassKey, KernelFn)] = &[")
+    for cls in catalog():
+        letters = class_letters(cls)
+        lines.append(
+            f"    (({cls[0]}, {cls[1]}, {cls[2]}, {cls[3]}), eri_{letters} as KernelFn),"
+        )
+    lines.append("];")
+    parts.append("\n".join(lines))
+    return "\n\n".join(parts) + "\n"
+
+
+# ---------------------------------------------------------------------------
+# numeric verification against plain-recursion McMurchie-Davidson
+# ---------------------------------------------------------------------------
+
+
+def boys(nmax, t):
+    """F_n(t) for n = 0..nmax via downward recursion from a series start.
+
+    F_m(t) = exp(-t) * sum_k (2t)^k / ((2m+1)(2m+3)...(2m+2k+1)), then
+    F_n = (2t F_{n+1} + exp(-t)) / (2n+1) downward (stable for all n).
+    """
+    f = [0.0] * (nmax + 1)
+    m = nmax + 24
+    s, term, k = 0.0, 1.0 / (2 * m + 1), 0
+    while True:
+        s += term
+        k += 1
+        term *= 2 * t / (2 * m + 2 * k + 1)
+        if term < 1e-18 * max(s, 1e-300) or k > 1000:
+            break
+    fm = math.exp(-t) * s
+    et = math.exp(-t)
+    for n in range(m - 1, -1, -1):
+        fm = (2 * t * fm + et) / (2 * n + 1)
+        if n <= nmax:
+            f[n] = fm
+    return f
+
+
+def hermite_e_pair(i, j, t, p, xpa, xpb):
+    if t < 0 or t > i + j:
+        return 0.0
+    if i == 0 and j == 0 and t == 0:
+        return 1.0
+    if j == 0:
+        return (
+            hermite_e_pair(i - 1, j, t - 1, p, xpa, xpb) / (2.0 * p)
+            + xpa * hermite_e_pair(i - 1, j, t, p, xpa, xpb)
+            + (t + 1) * hermite_e_pair(i - 1, j, t + 1, p, xpa, xpb)
+        )
+    return (
+        hermite_e_pair(i, j - 1, t - 1, p, xpa, xpb) / (2.0 * p)
+        + xpb * hermite_e_pair(i, j - 1, t, p, xpa, xpb)
+        + (t + 1) * hermite_e_pair(i, j - 1, t + 1, p, xpa, xpb)
+    )
+
+
+def hermite_r(t, u, v, n, alpha, pq, fvals):
+    if t < 0 or u < 0 or v < 0:
+        return 0.0
+    if t == 0 and u == 0 and v == 0:
+        return (-2.0 * alpha) ** n * fvals[n]
+    if t > 0:
+        return (t - 1) * hermite_r(t - 2, u, v, n + 1, alpha, pq, fvals) + pq[
+            0
+        ] * hermite_r(t - 1, u, v, n + 1, alpha, pq, fvals)
+    if u > 0:
+        return (u - 1) * hermite_r(t, u - 2, v, n + 1, alpha, pq, fvals) + pq[
+            1
+        ] * hermite_r(t, u - 1, v, n + 1, alpha, pq, fvals)
+    return (v - 1) * hermite_r(t, u, v - 2, n + 1, alpha, pq, fvals) + pq[
+        2
+    ] * hermite_r(t, u, v - 1, n + 1, alpha, pq, fvals)
+
+
+def reference_quad(cls, prim, geom):
+    """Contracted unscaled ERI components via plain recursion (no comp_norm)."""
+    la, lb, lc, ld = cls
+    (p, pp, kab), (q, qq, kcd) = prim
+    (A, B), (C, D) = geom
+    xpa = [pp[ax] - A[ax] for ax in range(3)]
+    xpb = [pp[ax] - B[ax] for ax in range(3)]
+    xqc = [qq[ax] - C[ax] for ax in range(3)]
+    xqd = [qq[ax] - D[ax] for ax in range(3)]
+    alpha = p * q / (p + q)
+    pq = [pp[ax] - qq[ax] for ax in range(3)]
+    t_arg = alpha * sum(x * x for x in pq)
+    lt = la + lb + lc + ld
+    fvals = boys(lt, t_arg)
+    pref = kab * kcd * 2.0 * math.pi ** 2.5 / (p * q * math.sqrt(p + q))
+    out = []
+    for ca in cart(la):
+        for cb in cart(lb):
+            for cc in cart(lc):
+                for cd in cart(ld):
+                    val = 0.0
+                    for t in range(0, ca[0] + cb[0] + 1):
+                        e1 = hermite_e_pair(ca[0], cb[0], t, p, xpa[0], xpb[0])
+                        for u in range(0, ca[1] + cb[1] + 1):
+                            e2 = hermite_e_pair(ca[1], cb[1], u, p, xpa[1], xpb[1])
+                            for v in range(0, ca[2] + cb[2] + 1):
+                                e3 = hermite_e_pair(ca[2], cb[2], v, p, xpa[2], xpb[2])
+                                kacc = 0.0
+                                for tau in range(0, cc[0] + cd[0] + 1):
+                                    e4 = hermite_e_pair(cc[0], cd[0], tau, q, xqc[0], xqd[0])
+                                    for nu in range(0, cc[1] + cd[1] + 1):
+                                        e5 = hermite_e_pair(cc[1], cd[1], nu, q, xqc[1], xqd[1])
+                                        for phi in range(0, cc[2] + cd[2] + 1):
+                                            e6 = hermite_e_pair(cc[2], cd[2], phi, q, xqc[2], xqd[2])
+                                            sign = -1.0 if (tau + nu + phi) % 2 == 1 else 1.0
+                                            kacc += (
+                                                e4 * e5 * e6 * sign
+                                                * hermite_r(t + tau, u + nu, v + phi, 0, alpha, pq, fvals)
+                                            )
+                                val += e1 * e2 * e3 * kacc
+                    out.append(pref * val)
+    return out
+
+
+def eval_schedule(g, prim, geom):
+    """Execute the generated statement list on plain floats."""
+    (p, pp, kab), (q, qq, kcd) = prim
+    (A, B), (C, D) = geom
+    env = {
+        "p": p,
+        "q": q,
+        "kab": kab,
+        "kcd": kcd,
+        "px": pp[0], "py": pp[1], "pz": pp[2],
+        "qx": qq[0], "qy": qq[1], "qz": qq[2],
+    }
+    for ax, c in enumerate("xyz"):
+        env[f"xpa_{c}"] = pp[ax] - A[ax]
+        env[f"xpb_{c}"] = pp[ax] - B[ax]
+        env[f"xqc_{c}"] = qq[ax] - C[ax]
+        env[f"xqd_{c}"] = qq[ax] - D[ax]
+    alpha = p * q / (p + q)
+    pq = [pp[ax] - qq[ax] for ax in range(3)]
+    env["pqx"], env["pqy"], env["pqz"] = pq
+    env["alpha"] = alpha
+    env["inv2p"] = 0.5 / p
+    env["inv2q"] = 0.5 / q
+    env["m2a"] = -2.0 * alpha
+    t_arg = alpha * sum(x * x for x in pq)
+    fv = boys(g.ltot, t_arg)
+    pref = kab * kcd * 2.0 * math.pi ** 2.5 / (p * q * math.sqrt(p + q))
+
+    def factor(f):
+        if f.startswith("fv["):
+            return fv[int(f[3:-1])]
+        if f[0].isdigit():
+            return float(f)
+        return env[f]
+
+    def terms_value(terms):
+        acc = 0.0
+        for sign, factors in terms:
+            prod = 1.0
+            for f in factors:
+                prod *= factor(f)
+            acc += sign * prod
+        return acc
+
+    for name, terms in g.stmts:
+        env[name] = terms_value(terms)
+    return [pref * terms_value(terms) for _, terms in g.outs]
+
+
+def verify():
+    rng = random.Random(20260807)
+    worst = 0.0
+    total_stmts = 0
+    for cls in catalog():
+        g = Gen(cls)
+        nterms = sum(len(t) for _, t in g.stmts) + sum(len(t) for _, t in g.outs)
+        total_stmts += len(g.stmts)
+        for trial in range(4):
+            a, b = rng.uniform(0.2, 3.0), rng.uniform(0.2, 3.0)
+            c, d = rng.uniform(0.2, 3.0), rng.uniform(0.2, 3.0)
+            A = [rng.uniform(-1, 1) for _ in range(3)]
+            B = [rng.uniform(-1, 1) for _ in range(3)]
+            C = [rng.uniform(-1, 1) for _ in range(3)]
+            D = [rng.uniform(-1, 1) for _ in range(3)]
+            p, q = a + b, c + d
+            pp = [(a * A[ax] + b * B[ax]) / p for ax in range(3)]
+            qq = [(c * C[ax] + d * D[ax]) / q for ax in range(3)]
+            kab, kcd = rng.uniform(0.5, 1.5), rng.uniform(0.5, 1.5)
+            prim = ((p, pp, kab), (q, qq, kcd))
+            geom = ((A, B), (C, D))
+            want = reference_quad(cls, prim, geom)
+            got = eval_schedule(g, prim, geom)
+            assert len(want) == len(got)
+            for wv, gv in zip(want, got):
+                denom = max(abs(wv), 1e-10)
+                rel = abs(wv - gv) / denom
+                worst = max(worst, rel)
+                if rel > 1e-11:
+                    print(f"FAIL {cls} trial {trial}: {gv} vs {wv} rel {rel}")
+                    return False
+        print(
+            f"ok {class_letters(cls):6s} stmts {len(g.stmts):6d} terms {nterms:7d}"
+        )
+    print(f"all classes verified; worst rel err {worst:.3e}; total stmts {total_stmts}")
+    return True
+
+
+if __name__ == "__main__":
+    if len(sys.argv) >= 3 and sys.argv[1] == "--emit":
+        with open(sys.argv[2], "w") as fh:
+            fh.write(render_file())
+        print(f"wrote {sys.argv[2]}")
+    else:
+        ok = verify()
+        sys.exit(0 if ok else 1)
