@@ -7,6 +7,7 @@ mod common;
 
 use matryoshka::bench_harness as bh;
 use matryoshka::engines::MatryoshkaConfig;
+use matryoshka::fock::DigestStrategy;
 use matryoshka::runtime::Manifest;
 use matryoshka::scf::FockEngine;
 
@@ -53,4 +54,55 @@ fn main() {
         "OP/B should trend upward with angular momentum: {best:?}"
     );
     println!("\n(OP/B rises with angular momentum — Fig. 6's upward trend)");
+
+    // Digest-stage OP/B per strategy.  Model per processed ERI component:
+    // the block GEMM touches each value in four stride-1 passes (~12
+    // flops — two Coulomb contractions plus four exchange tile
+    // accumulations, each a mul-add) against ~24 B of traffic (one 8-B
+    // panel read plus amortized, register-tiled D/G reuse); the per-quad
+    // scatter expands every canonical value into 8 symmetry images (~40
+    // flops of J/K updates) against ~56 B (the same panel read plus
+    // scattered per-image D reads and G writes).  digest_s is measured.
+    println!("\ndigest-stage OP/B per strategy (one Fock build, chignolin)");
+    println!(
+        "{:<10} {:>10} {:>14} {:>8} {:>8} {:>11}",
+        "digest", "digest_s", "components", "GFLOP", "OP/B", "MFLOP/s"
+    );
+    for digest in [DigestStrategy::Scatter, DigestStrategy::Gemm] {
+        // pinned: this section measures the strategies themselves, so the
+        // MATRYOSHKA_DIGEST env override must not relabel the rows
+        let mut e = common::engine_pinned_config(
+            basis.clone(),
+            MatryoshkaConfig { digest, ..Default::default() },
+        );
+        e.two_electron(&d).expect("warm");
+        e.metrics = Default::default();
+        e.two_electron(&d).expect("measured");
+        let components: f64 = e
+            .metrics
+            .per_class
+            .iter()
+            .map(|(class, s)| {
+                let ncomp = manifest.ladder(*class).first().map(|v| v.ncomp).unwrap_or(0);
+                s.real_quads as f64 * ncomp as f64
+            })
+            .sum();
+        let (flops_per_comp, bytes_per_comp) = match digest {
+            DigestStrategy::Gemm => (12.0, 24.0),
+            DigestStrategy::Scatter => (40.0, 56.0),
+        };
+        let flops = components * flops_per_comp;
+        let bytes = components * bytes_per_comp;
+        let secs = e.metrics.digest_seconds;
+        println!(
+            "{:<10} {:>10.3} {:>14.0} {:>8.2} {:>8.2} {:>11.1}",
+            digest.name(),
+            secs,
+            components,
+            flops / 1e9,
+            flops / bytes,
+            flops / secs.max(1e-12) / 1e6
+        );
+    }
+    println!("(model flops/bytes per component; the GEMM's higher OP/B is the point of the tiling)");
 }

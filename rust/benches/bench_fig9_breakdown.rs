@@ -11,6 +11,7 @@ mod common;
 
 use matryoshka::bench_harness as bh;
 use matryoshka::engines::MatryoshkaConfig;
+use matryoshka::fock::DigestStrategy;
 use matryoshka::pipeline::PipelineMode;
 use matryoshka::scf::FockEngine;
 use matryoshka::util::Stopwatch;
@@ -82,6 +83,64 @@ fn pipeline_overlap_section(systems: &[&str]) {
     println!();
 }
 
+/// 9f — gemm-vs-scatter digestion A/B: the identical schedule and ERI
+/// panels, only the digestion stage swapped between the tiled block-GEMM
+/// contraction and the per-quad 8-image scatter oracle.  Rows also land
+/// in BENCH_fig9.json for machine consumption.
+fn digest_strategy_section(systems: &[&str]) {
+    println!("Fig. 9f — digestion wall A/B (tiled block GEMM vs per-quad scatter)");
+    println!(
+        "{:<12} {:<9} {:>9} {:>10} {:>9}",
+        "system", "digest", "wall_s", "digest_s", "speedup"
+    );
+    let mut json_rows: Vec<String> = Vec::new();
+    for name in systems {
+        let (_, basis) = common::system(name);
+        let d = common::test_density(basis.nbf);
+        let mut scatter_digest = None;
+        for digest in [DigestStrategy::Scatter, DigestStrategy::Gemm] {
+            let config = MatryoshkaConfig { digest, ..Default::default() };
+            // pinned: this section measures the strategies themselves, so
+            // the MATRYOSHKA_DIGEST env override must not relabel the rows
+            let mut engine = common::engine_pinned_config(basis.clone(), config);
+            common::warm_until_converged(&mut engine, &d, 4);
+            let baseline = engine.metrics.clone();
+            let sw = Stopwatch::start();
+            engine.two_electron(&d).expect("measured build");
+            let wall = sw.elapsed_s();
+            let digest_s = engine.metrics.digest_seconds - baseline.digest_seconds;
+            let speedup = *scatter_digest.get_or_insert(digest_s) / digest_s.max(1e-12);
+            println!(
+                "{:<12} {:<9} {:>9.3} {:>10.3} {:>8.2}x",
+                name,
+                digest.name(),
+                wall,
+                digest_s,
+                speedup
+            );
+            json_rows.push(format!(
+                "    {{\"system\": \"{name}\", \"digest\": \"{}\", \"wall_s\": {:.6e}, \
+                 \"digest_s\": {:.6e}, \"digest_speedup\": {:.3}}}",
+                digest.name(),
+                wall,
+                digest_s,
+                speedup
+            ));
+        }
+    }
+    let json = format!(
+        "{{\n  \"figure\": \"fig9\",\n  \"section\": \"digest_gemm_vs_scatter\",\n  \
+         \"rows\": [\n{}\n  ]\n}}\n",
+        json_rows.join(",\n")
+    );
+    std::fs::write("BENCH_fig9.json", &json).expect("write BENCH_fig9.json");
+    println!(
+        "(rows written to BENCH_fig9.json; digest_s is CPU-s across workers — both \
+         strategies digest the identical entry stream, G stays bitwise per strategy)"
+    );
+    println!();
+}
+
 fn main() {
     // the unclustered Base config costs O(100x) the clustered ones: the
     // default roster is chignolin (~2 min); FULL=1 runs all six (hours)
@@ -92,6 +151,7 @@ fn main() {
     };
     bh::header("Fig. 9 — component breakdown (one direct Fock build, warm kernels)");
     pipeline_overlap_section(&systems);
+    digest_strategy_section(&systems);
     println!("config legend: base = no clustering + random-path kernels + static batch");
 
     for name in &systems {

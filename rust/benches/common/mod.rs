@@ -11,13 +11,16 @@
 //! `MATRYOSHKA_LADDER=elastic|fixed` overrides the batch-ladder mode
 //! (default: elastic); `MATRYOSHKA_ERI_STRATEGY=kernels|tables|recursion`
 //! overrides the native chunk evaluator (default: kernels — the
-//! graph-compiled per-class kernels).
+//! graph-compiled per-class kernels); `MATRYOSHKA_DIGEST=gemm|scatter`
+//! overrides the digestion strategy (default: gemm — the tiled
+//! block-GEMM contraction).
 
 use std::path::{Path, PathBuf};
 
 use matryoshka::basis::{build_basis, BasisSet};
 use matryoshka::constructor::SchwarzMode;
 use matryoshka::engines::{MatryoshkaConfig, MatryoshkaEngine};
+use matryoshka::fock::DigestStrategy;
 use matryoshka::linalg::Matrix;
 use matryoshka::molecule::{library, Molecule};
 use matryoshka::pipeline::PipelineMode;
@@ -61,6 +64,15 @@ pub fn env_strategy() -> EriEvalStrategy {
     }
 }
 
+/// The `MATRYOSHKA_DIGEST` override, defaulting to the config default
+/// (the tiled block-GEMM contraction).
+pub fn env_digest() -> DigestStrategy {
+    match std::env::var("MATRYOSHKA_DIGEST") {
+        Ok(s) => DigestStrategy::parse(&s).expect("MATRYOSHKA_DIGEST"),
+        Err(_) => DigestStrategy::default(),
+    }
+}
+
 pub fn system(name: &str) -> (Molecule, BasisSet) {
     let mol = library::by_name(name).expect("known molecule");
     let basis = build_basis(&mol, "sto-3g").expect("basis");
@@ -92,6 +104,7 @@ pub fn engine(basis: BasisSet, mut config: MatryoshkaConfig) -> MatryoshkaEngine
     }
     config.ladder = env_ladder();
     config.eri_strategy = env_strategy();
+    config.digest = env_digest();
     engine_pinned_config(basis, config)
 }
 

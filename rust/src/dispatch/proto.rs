@@ -30,6 +30,7 @@ use std::io::{Read, Write};
 use crate::allocator::TunerObservation;
 use crate::basis::{BasisSet, Shell};
 use crate::constructor::SchwarzMode;
+use crate::fock::DigestStrategy;
 use crate::linalg::Matrix;
 use crate::metrics::{ClassStats, EngineMetrics};
 use crate::pipeline::PipelineMode;
@@ -37,7 +38,7 @@ use crate::runtime::{BackendKind, ClassKey, EriEvalStrategy, LadderMode};
 
 /// Bumped whenever the frame layout changes; `Hello` carries it so a
 /// version-skewed worker fails loudly at connect time.
-pub const PROTO_VERSION: u32 = 2;
+pub const PROTO_VERSION: u32 = 3;
 
 /// Upper bound on a single frame (density and partial-G frames are
 /// nbf²×8 bytes — 256 MiB covers nbf up to ~5700 with header room to
@@ -62,6 +63,7 @@ pub struct JobSpec {
     pub backend: BackendKind,
     pub ladder: LadderMode,
     pub eri_strategy: EriEvalStrategy,
+    pub digest: DigestStrategy,
     pub working_set_bytes: usize,
     pub wide_opb_max: f64,
     /// worker-local Fock thread count (0 = auto on the worker host);
@@ -180,6 +182,11 @@ impl Enc {
             self.str(name);
             self.f64(*secs);
         }
+        self.usize(m.per_digest.len());
+        for (name, secs) in &m.per_digest {
+            self.str(name);
+            self.f64(*secs);
+        }
         self.u64(m.wide_chunks);
         self.u64(m.split_chunks);
         self.f64(m.digest_seconds);
@@ -218,6 +225,7 @@ impl Enc {
         self.str(spec.backend.name());
         self.str(spec.ladder.name());
         self.str(spec.eri_strategy.name());
+        self.str(spec.digest.name());
         self.usize(spec.working_set_bytes);
         self.f64(spec.wide_opb_max);
         self.usize(spec.threads);
@@ -355,6 +363,13 @@ impl<'a> Dec<'a> {
             let secs = self.f64()?;
             m.per_strategy.insert(name, secs);
         }
+        // digest entries share the strategy layout: name + seconds
+        let ndig = self.count(8 + 8)?;
+        for _ in 0..ndig {
+            let name = self.str()?;
+            let secs = self.f64()?;
+            m.per_digest.insert(name, secs);
+        }
         m.wide_chunks = self.u64()?;
         m.split_chunks = self.u64()?;
         m.digest_seconds = self.f64()?;
@@ -404,6 +419,7 @@ impl<'a> Dec<'a> {
             backend: BackendKind::parse(&self.str()?)?,
             ladder: LadderMode::parse(&self.str()?)?,
             eri_strategy: EriEvalStrategy::parse(&self.str()?)?,
+            digest: DigestStrategy::parse(&self.str()?)?,
             working_set_bytes: self.usize()?,
             wide_opb_max: self.f64()?,
             threads: self.usize()?,
@@ -626,6 +642,7 @@ mod tests {
             backend: BackendKind::Native,
             ladder: LadderMode::Elastic,
             eri_strategy: EriEvalStrategy::Kernels,
+            digest: DigestStrategy::Gemm,
             working_set_bytes: 4 << 20,
             wide_opb_max: 4.0,
             threads: 2,
@@ -660,6 +677,8 @@ mod tests {
         metrics.record_entry((2, 0, 0, 0), 32, false, 30, 32, 0.1 + 0.2); // inexact sum
         metrics.record_strategy("kernels", 0.1 + 0.2);
         metrics.record_strategy("tables", 1.0 / 3.0);
+        metrics.record_digest("gemm", 0.1 + 0.2);
+        metrics.record_digest("scatter", 2.0 / 3.0);
         metrics.gather_seconds = 0.3;
         metrics.pipeline_wall_seconds = f64::from_bits(0x3FB9_9999_9999_999A);
 

@@ -17,6 +17,7 @@ use std::path::Path;
 
 use crate::basis::BasisSet;
 use crate::constructor::{schwarz_calibration_from_path, BlockPlan, PairList};
+use crate::fock::DigestStrategy;
 use crate::linalg::Matrix;
 use crate::pipeline::{
     run_units_streamed, ChunkSchedule, ExecContext, PipelineMode, SchedulePolicy,
@@ -73,6 +74,7 @@ struct WorkerState {
     threads: usize,
     policy: SchedulePolicy,
     pipeline: PipelineMode,
+    digest: DigestStrategy,
 }
 
 impl WorkerState {
@@ -126,6 +128,7 @@ impl WorkerState {
                 wide_opb_max: spec.wide_opb_max,
             },
             pipeline: spec.pipeline,
+            digest: spec.digest,
         })
     }
 }
@@ -186,6 +189,7 @@ pub fn serve<R: Read, W: Write>(r: &mut R, w: &mut W, opts: &WorkerOptions) -> a
                     state.backend.manifest(),
                     &snapshot,
                     &state.policy,
+                    &state.pairs,
                     state.basis.nbf,
                 ) {
                     Ok(s) => s,
@@ -237,6 +241,7 @@ pub fn serve<R: Read, W: Write>(r: &mut R, w: &mut W, opts: &WorkerOptions) -> a
                     backend: state.backend.as_ref(),
                     schedule,
                     mode: state.pipeline,
+                    digest: state.digest,
                     cache: None,
                     collect_cache: false,
                 };

@@ -32,7 +32,7 @@ use crate::allocator::{AutoTuner, DEFAULT_WORKING_SET_BYTES};
 use crate::basis::BasisSet;
 use crate::constructor::{schwarz_calibration_from_path, BlockPlan, PairList, SchwarzMode};
 use crate::dispatch::{DispatchConfig, DispatchMode, Dispatcher, JobSpec};
-use crate::fock::{merge_partials, merge_unit_shards};
+use crate::fock::{merge_partials, merge_unit_shards, DigestStrategy};
 use crate::linalg::Matrix;
 use crate::metrics::EngineMetrics;
 use crate::pipeline::{
@@ -80,6 +80,9 @@ pub struct MatryoshkaConfig {
     /// how the native backend evaluates chunks: graph-compiled `Kernels`
     /// (default), the `Tables` oracle, or the `Recursion` baseline
     pub eri_strategy: EriEvalStrategy,
+    /// how contracted ERI values digest into G: tiled block-`Gemm`
+    /// contraction (default) or the per-quad `Scatter` parity oracle
+    pub digest: DigestStrategy,
     /// working-set budget of the tuner's intensity prior: each class is
     /// seeded on the largest rung whose gather+value bytes fit this
     /// (L2-ish) budget instead of always starting the climb at rung 0
@@ -122,6 +125,7 @@ impl Default for MatryoshkaConfig {
             backend: BackendKind::Native,
             ladder: LadderMode::Elastic,
             eri_strategy: EriEvalStrategy::default(),
+            digest: DigestStrategy::default(),
             working_set_bytes: DEFAULT_WORKING_SET_BYTES,
             wide_opb_max: DEFAULT_WIDE_OPB_MAX,
             threads: 0,
@@ -347,6 +351,7 @@ impl MatryoshkaEngine {
             self.backend.manifest(),
             &self.tuner.batch_snapshot(),
             &self.schedule_policy(),
+            &self.pairs,
             self.basis.nbf,
         )
     }
@@ -374,6 +379,7 @@ impl MatryoshkaEngine {
             backend: self.backend.as_ref(),
             schedule,
             mode: self.config.pipeline,
+            digest: self.config.digest,
             cache,
             collect_cache,
         };
@@ -423,6 +429,7 @@ impl MatryoshkaEngine {
             backend: self.config.backend,
             ladder: self.config.ladder,
             eri_strategy: self.config.eri_strategy,
+            digest: self.config.digest,
             working_set_bytes: self.config.working_set_bytes,
             wide_opb_max: self.config.wide_opb_max,
             threads: worker_threads,
@@ -524,6 +531,7 @@ impl MatryoshkaEngine {
             &self.tuner.batch_snapshot(),
             &self.schedule_policy(),
             block_indices,
+            &self.pairs,
             n,
         )?;
         let ctx = ExecContext {
@@ -533,6 +541,7 @@ impl MatryoshkaEngine {
             backend: self.backend.as_ref(),
             schedule: &schedule,
             mode: self.config.pipeline,
+            digest: self.config.digest,
             cache: None,
             collect_cache: false,
         };

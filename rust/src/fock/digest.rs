@@ -199,4 +199,131 @@ mod tests {
             g.diff_norm(&g_ref)
         );
     }
+
+    /// Property: `digest_block` over every canonical shell quartet of a
+    /// randomized shell list reproduces the dense contraction of a
+    /// random 8-fold-symmetric ERI tensor — exercising every realizable
+    /// `same_ab` / `same_cd` / `same_pairs` combination (same-shell
+    /// pairs, distinct pairs, and the diagonal pair-pair quartets all
+    /// occur in every case).
+    #[test]
+    fn digest_block_covers_all_shell_coincidences() {
+        use crate::prop_assert;
+        use crate::testing::{check, Gen};
+        check("digest_block_coincidences", 12, |g: &mut Gen| {
+            // random small shell list with sequential bf ranges
+            let nshell = g.usize_in(2, 4);
+            let mut shells: Vec<Shell> = Vec::new();
+            let mut first_bf = 0;
+            for _ in 0..nshell {
+                let l = g.usize_in(0, 2) as u8;
+                shells.push(Shell::new(l, vec![1.0], vec![1.0], [0.0; 3], 0, first_bf));
+                first_bf += ncart(l);
+            }
+            let nbf = first_bf;
+            let at = |i: usize, j: usize, k: usize, l: usize| ((i * nbf + j) * nbf + k) * nbf + l;
+
+            // random ERI tensor with *exact* 8-fold symmetry: draw each
+            // canonical representative once, write all eight images
+            let mut eri = vec![0.0; nbf * nbf * nbf * nbf];
+            for i in 0..nbf {
+                for j in 0..=i {
+                    for k in 0..nbf {
+                        for l in 0..=k {
+                            if (k, l) > (i, j) {
+                                continue;
+                            }
+                            let v = g.f64_in(-1.0, 1.0);
+                            for (a, b, c, d) in [
+                                (i, j, k, l),
+                                (j, i, k, l),
+                                (i, j, l, k),
+                                (j, i, l, k),
+                                (k, l, i, j),
+                                (l, k, i, j),
+                                (k, l, j, i),
+                                (l, k, j, i),
+                            ] {
+                                eri[at(a, b, c, d)] = v;
+                            }
+                        }
+                    }
+                }
+            }
+            // random symmetric density
+            let mut d = Matrix::zeros(nbf, nbf);
+            for i in 0..nbf {
+                for j in 0..=i {
+                    let v = g.f64_in(-1.0, 1.0);
+                    *d.at_mut(i, j) = v;
+                    *d.at_mut(j, i) = v;
+                }
+            }
+            // dense reference
+            let mut g_ref = Matrix::zeros(nbf, nbf);
+            for i in 0..nbf {
+                for j in 0..nbf {
+                    let mut acc = 0.0;
+                    for k in 0..nbf {
+                        for l in 0..nbf {
+                            acc += d.at(k, l) * (eri[at(i, j, k, l)] - 0.5 * eri[at(i, k, j, l)]);
+                        }
+                    }
+                    *g_ref.at_mut(i, j) = acc;
+                }
+            }
+
+            // canonical shell pairs (si ≥ sj), canonical quartets (p ≥ q)
+            let mut pairs = Vec::new();
+            for si in 0..nshell {
+                for sj in 0..=si {
+                    pairs.push((si, sj));
+                }
+            }
+            let mut g_out = Matrix::zeros(nbf, nbf);
+            for p in 0..pairs.len() {
+                for q in 0..=p {
+                    let (si, sj) = pairs[p];
+                    let (sk, sl) = pairs[q];
+                    let (sa, sb, sc, sd) = (&shells[si], &shells[sj], &shells[sk], &shells[sl]);
+                    let (na, nb, nc, nd) = (ncart(sa.l), ncart(sb.l), ncart(sc.l), ncart(sd.l));
+                    let mut block = Vec::with_capacity(na * nb * nc * nd);
+                    for ia in 0..na {
+                        for ib in 0..nb {
+                            for ic in 0..nc {
+                                for id in 0..nd {
+                                    block.push(
+                                        eri[at(
+                                            sa.first_bf + ia,
+                                            sb.first_bf + ib,
+                                            sc.first_bf + ic,
+                                            sd.first_bf + id,
+                                        )],
+                                    );
+                                }
+                            }
+                        }
+                    }
+                    digest_block(
+                        &mut g_out,
+                        &d,
+                        sa,
+                        sb,
+                        sc,
+                        sd,
+                        si == sj,
+                        sk == sl,
+                        p == q,
+                        &block,
+                    );
+                }
+            }
+            let diff = g_out.diff_norm(&g_ref);
+            prop_assert!(
+                diff < 1e-10,
+                "{nshell} shells / {nbf} bf: |G_digest − G_dense| = {diff:e}"
+            );
+            Ok(())
+        });
+    }
 }

@@ -1,0 +1,447 @@
+//! Block-GEMM digestion: contract a shell-quartet ERI block into G as a
+//! handful of dense tile products instead of the per-quad 8-image scatter
+//! of [`crate::fock::digest_eri`].
+//!
+//! The scatter path walks every canonical component and touches G through
+//! eight `at_mut` images — sparse, data-dependent update positions, the
+//! exact shape PAPERS.md #2 reformulates as block-structured matrix
+//! multiplication.  Here the same contraction is expressed densely: with
+//! the block viewed as a `(na·nb) × (nc·nd)` pair-block panel `V`, and
+//! the symmetry weights pre-folded (`WV = W ∘ V`),
+//!
+//!   Coulomb:  J_bra = WV  · vec(D_ket + D_ketᵀ)   → G bra tile (both
+//!             J_ket = WVᵀ · vec(D_bra + D_braᵀ)      orientations)
+//!   Exchange: four register tiles t_ac, t_bc, t_ad, t_bd accumulated in
+//!             one pass over WV against pre-gathered D sub-blocks, each
+//!             written `×(−½)` to both orientations of its G tile.
+//!
+//! The exchange collapse of the eight scatter images into four
+//! symmetric-write tiles uses D = Dᵀ (always true here: the RHF density
+//! is symmetric and the engine symmetrizes G afterwards); the Coulomb
+//! collapse is exact for any D.  The weight vector `W`
+//! ([`weight_table`]) folds both the canonical-component skip rule and
+//! [`crate::fock::symmetry_factor`] so the dense pass needs no branches.
+//!
+//! Scratch tiles live on the stack, sized for the native l ≤ 2 catalog
+//! ([`MAX_COMP`] = 6⁴), and every inner loop runs stride-1 over the
+//! weighted panel so the autovectorizer sees plain FMA streams — the
+//! same `KERNEL_LANES`-friendly layout the generated ERI kernels emit.
+
+use crate::basis::{ncart, Shell};
+use crate::linalg::Matrix;
+
+/// How a chunk's ERI output is contracted into G.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum DigestStrategy {
+    /// tiled shell-pair-block contraction: dense `D_block × ERI_block`
+    /// products with symmetry weights pre-folded at schedule-build time
+    #[default]
+    Gemm,
+    /// per-quad 8-image scatter ([`crate::fock::digest_block`]) — the
+    /// permanent parity oracle for the GEMM path
+    Scatter,
+}
+
+impl DigestStrategy {
+    pub fn parse(name: &str) -> anyhow::Result<DigestStrategy> {
+        match name {
+            "gemm" => Ok(DigestStrategy::Gemm),
+            "scatter" => Ok(DigestStrategy::Scatter),
+            other => anyhow::bail!("unknown digest strategy {other} (available: gemm, scatter)"),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            DigestStrategy::Gemm => "gemm",
+            DigestStrategy::Scatter => "scatter",
+        }
+    }
+}
+
+/// bra shells coincide (`si == sj`)
+pub const MASK_SAME_AB: u8 = 1 << 0;
+/// ket shells coincide (`si == sj` on the ket side)
+pub const MASK_SAME_CD: u8 = 1 << 1;
+/// bra pair and ket pair are the same pair-list entry
+pub const MASK_SAME_PAIRS: u8 = 1 << 2;
+
+/// Pack the three shell-coincidence flags of a quartet into the compact
+/// mask [`ChunkEntry`](crate::pipeline::ChunkEntry) metadata carries.
+#[inline]
+pub fn quad_mask(same_ab: bool, same_cd: bool, same_pairs: bool) -> u8 {
+    (same_ab as u8) * MASK_SAME_AB
+        | (same_cd as u8) * MASK_SAME_CD
+        | (same_pairs as u8) * MASK_SAME_PAIRS
+}
+
+/// Largest component count a digest tile must hold: 6⁴ (a dddd quartet
+/// at the native catalog's l ≤ 2).
+pub const MAX_COMP: usize = 1296;
+/// Largest pair-block edge: 6×6 (a dd shell pair).
+pub const MAX_PAIR: usize = 36;
+
+/// The per-component symmetry weight vector for a `[na, nb, nc, nd]`
+/// block with shell coincidences `mask`: 0 for components the canonical
+/// digestion skips (they are images of a canonical component elsewhere
+/// in the same block), otherwise the [`symmetry_factor`] of the
+/// basis-function quartet.  Computed once per `(class, mask)` at
+/// schedule-build time and shared by every quad of that shape.
+///
+/// [`symmetry_factor`]: crate::fock::symmetry_factor
+pub fn weight_table(na: usize, nb: usize, nc: usize, nd: usize, mask: u8) -> Vec<f64> {
+    let same_ab = mask & MASK_SAME_AB != 0;
+    let same_cd = mask & MASK_SAME_CD != 0;
+    let same_pairs = mask & MASK_SAME_PAIRS != 0;
+    let mut w = vec![0.0; na * nb * nc * nd];
+    let mut idx = 0;
+    for ia in 0..na {
+        for ib in 0..nb {
+            for ic in 0..nc {
+                for id in 0..nd {
+                    let skip = (same_ab && ib > ia)
+                        || (same_cd && id > ic)
+                        || (same_pairs && (ic, id) > (ia, ib));
+                    if !skip {
+                        // bf-level coincidences reduce to component
+                        // equality because distinct shells occupy
+                        // disjoint basis-function ranges
+                        let mut fac = 1.0;
+                        if same_ab && ia == ib {
+                            fac *= 0.5;
+                        }
+                        if same_cd && ic == id {
+                            fac *= 0.5;
+                        }
+                        if same_pairs && ia == ic && ib == id {
+                            fac *= 0.5;
+                        }
+                        w[idx] = fac;
+                    }
+                    idx += 1;
+                }
+            }
+        }
+    }
+    w
+}
+
+/// Contract one shell-quartet ERI block into G through the tiled GEMM
+/// path.  `weights` is the block's [`weight_table`]; `block` is the
+/// row-major `[na, nb, nc, nd]` component panel.  Produces the same G
+/// contribution as [`crate::fock::digest_block`] (up to fp association)
+/// whenever D is symmetric.
+#[allow(clippy::too_many_arguments)]
+pub fn digest_block_gemm(
+    g: &mut Matrix,
+    d: &Matrix,
+    sa: &Shell,
+    sb: &Shell,
+    sc: &Shell,
+    sd: &Shell,
+    weights: &[f64],
+    block: &[f64],
+) {
+    let (na, nb, nc, nd) = (ncart(sa.l), ncart(sb.l), ncart(sc.l), ncart(sd.l));
+    let (np, nq) = (na * nb, nc * nd);
+    let ncomp = np * nq;
+    assert!(
+        ncomp <= MAX_COMP,
+        "digest_block_gemm scratch is sized for l ≤ 2 quartets (≤ {MAX_COMP} components), \
+         got a {na}×{nb}×{nc}×{nd} block"
+    );
+    debug_assert_eq!(block.len(), ncomp);
+    debug_assert_eq!(weights.len(), ncomp);
+    let (i0, j0, k0, l0) = (sa.first_bf, sb.first_bf, sc.first_bf, sd.first_bf);
+
+    // fold the symmetry weights once; every pass below is dense over wv
+    let mut wv = [0.0f64; MAX_COMP];
+    for (w, (&wt, &v)) in wv.iter_mut().zip(weights.iter().zip(block.iter())) {
+        *w = wt * v;
+    }
+    let wv = &wv[..ncomp];
+
+    // ---- Coulomb: both bra orientations get WV·(D_ket + D_ketᵀ), both
+    //      ket orientations get WVᵀ·(D_bra + D_braᵀ) — the 8 scatter
+    //      images collapse 4+4 with no assumption on D ----
+    let mut dq = [0.0f64; MAX_PAIR];
+    for ic in 0..nc {
+        for id in 0..nd {
+            dq[ic * nd + id] = d.at(k0 + ic, l0 + id) + d.at(l0 + id, k0 + ic);
+        }
+    }
+    let mut dp = [0.0f64; MAX_PAIR];
+    for ia in 0..na {
+        for ib in 0..nb {
+            dp[ia * nb + ib] = d.at(i0 + ia, j0 + ib) + d.at(j0 + ib, i0 + ia);
+        }
+    }
+    let mut jp = [0.0f64; MAX_PAIR];
+    let mut jq = [0.0f64; MAX_PAIR];
+    for p in 0..np {
+        let row = &wv[p * nq..(p + 1) * nq];
+        let dpp = dp[p];
+        let mut acc = 0.0;
+        for q in 0..nq {
+            acc += row[q] * dq[q];
+            jq[q] += row[q] * dpp;
+        }
+        jp[p] = acc;
+    }
+    for ia in 0..na {
+        for ib in 0..nb {
+            let v = jp[ia * nb + ib];
+            *g.at_mut(i0 + ia, j0 + ib) += v;
+            *g.at_mut(j0 + ib, i0 + ia) += v;
+        }
+    }
+    for ic in 0..nc {
+        for id in 0..nd {
+            let v = jq[ic * nd + id];
+            *g.at_mut(k0 + ic, l0 + id) += v;
+            *g.at_mut(l0 + id, k0 + ic) += v;
+        }
+    }
+
+    // ---- Exchange: gather the four D sub-blocks, accumulate the four
+    //      tiles in one dense pass, write each ×(−½) to both G
+    //      orientations.  The transpose images (5–8 of the scatter)
+    //      equal the primal images 1–4 because D = Dᵀ. ----
+    let mut d_al = [0.0f64; MAX_PAIR];
+    let mut d_ak = [0.0f64; MAX_PAIR];
+    for ia in 0..na {
+        for id in 0..nd {
+            d_al[ia * nd + id] = d.at(i0 + ia, l0 + id);
+        }
+        for ic in 0..nc {
+            d_ak[ia * nc + ic] = d.at(i0 + ia, k0 + ic);
+        }
+    }
+    let mut d_bl = [0.0f64; MAX_PAIR];
+    let mut d_bk = [0.0f64; MAX_PAIR];
+    for ib in 0..nb {
+        for id in 0..nd {
+            d_bl[ib * nd + id] = d.at(j0 + ib, l0 + id);
+        }
+        for ic in 0..nc {
+            d_bk[ib * nc + ic] = d.at(j0 + ib, k0 + ic);
+        }
+    }
+    let mut t_ac = [0.0f64; MAX_PAIR];
+    let mut t_bc = [0.0f64; MAX_PAIR];
+    let mut t_ad = [0.0f64; MAX_PAIR];
+    let mut t_bd = [0.0f64; MAX_PAIR];
+    let mut idx = 0;
+    for ia in 0..na {
+        for ib in 0..nb {
+            for ic in 0..nc {
+                for id in 0..nd {
+                    let v = wv[idx];
+                    idx += 1;
+                    t_ac[ia * nc + ic] += v * d_bl[ib * nd + id];
+                    t_bc[ib * nc + ic] += v * d_al[ia * nd + id];
+                    t_ad[ia * nd + id] += v * d_bk[ib * nc + ic];
+                    t_bd[ib * nd + id] += v * d_ak[ia * nc + ic];
+                }
+            }
+        }
+    }
+    for ia in 0..na {
+        for ic in 0..nc {
+            let v = -0.5 * t_ac[ia * nc + ic];
+            *g.at_mut(i0 + ia, k0 + ic) += v;
+            *g.at_mut(k0 + ic, i0 + ia) += v;
+        }
+        for id in 0..nd {
+            let v = -0.5 * t_ad[ia * nd + id];
+            *g.at_mut(i0 + ia, l0 + id) += v;
+            *g.at_mut(l0 + id, i0 + ia) += v;
+        }
+    }
+    for ib in 0..nb {
+        for ic in 0..nc {
+            let v = -0.5 * t_bc[ib * nc + ic];
+            *g.at_mut(j0 + ib, k0 + ic) += v;
+            *g.at_mut(k0 + ic, j0 + ib) += v;
+        }
+        for id in 0..nd {
+            let v = -0.5 * t_bd[ib * nd + id];
+            *g.at_mut(j0 + ib, l0 + id) += v;
+            *g.at_mut(l0 + id, j0 + ib) += v;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fock::{digest_block, symmetry_factor};
+    use crate::prop_assert;
+    use crate::testing::{check, Gen};
+
+    #[test]
+    fn digest_strategy_parses_and_rejects() {
+        assert_eq!(DigestStrategy::parse("gemm").unwrap(), DigestStrategy::Gemm);
+        assert_eq!(DigestStrategy::parse("scatter").unwrap(), DigestStrategy::Scatter);
+        assert_eq!(DigestStrategy::default(), DigestStrategy::Gemm);
+        assert_eq!(DigestStrategy::Gemm.name(), "gemm");
+        assert_eq!(DigestStrategy::Scatter.name(), "scatter");
+        assert!(DigestStrategy::parse("dense").is_err());
+        assert!(DigestStrategy::parse("").is_err());
+    }
+
+    #[test]
+    fn quad_mask_packs_all_flags() {
+        assert_eq!(quad_mask(false, false, false), 0);
+        assert_eq!(quad_mask(true, false, false), MASK_SAME_AB);
+        assert_eq!(quad_mask(false, true, false), MASK_SAME_CD);
+        assert_eq!(quad_mask(false, false, true), MASK_SAME_PAIRS);
+        assert_eq!(quad_mask(true, true, true), MASK_SAME_AB | MASK_SAME_CD | MASK_SAME_PAIRS);
+    }
+
+    fn shell(l: u8, first_bf: usize) -> Shell {
+        Shell::new(l, vec![1.0], vec![1.0], [0.0; 3], 0, first_bf)
+    }
+
+    /// Realizable coincidence masks: `same_pairs` forces the bra and ket
+    /// pair to be the same pair-list entry, so it implies
+    /// `same_ab == same_cd`; the two mixed masks cannot occur.
+    const REALIZABLE_MASKS: [u8; 6] = [
+        0,
+        MASK_SAME_AB,
+        MASK_SAME_CD,
+        MASK_SAME_AB | MASK_SAME_CD,
+        MASK_SAME_PAIRS,
+        MASK_SAME_AB | MASK_SAME_CD | MASK_SAME_PAIRS,
+    ];
+
+    /// Build a shell quartet realizing `mask` with the given l values
+    /// (coincident shells share the identical `first_bf` range).
+    fn quartet(mask: u8, la: u8, lb: u8, lc: u8, ld: u8) -> (Shell, Shell, Shell, Shell) {
+        let same_ab = mask & MASK_SAME_AB != 0;
+        let same_cd = mask & MASK_SAME_CD != 0;
+        let same_pairs = mask & MASK_SAME_PAIRS != 0;
+        let lb = if same_ab { la } else { lb };
+        let (lc, ld) = if same_pairs {
+            (la, lb)
+        } else if same_cd {
+            (lc, lc)
+        } else {
+            (lc, ld)
+        };
+        let sa = shell(la, 0);
+        let sb = if same_ab { sa.clone() } else { shell(lb, ncart(la)) };
+        let next = sb.first_bf + ncart(lb);
+        let sc = if same_pairs { sa.clone() } else { shell(lc, next) };
+        let sd = if same_pairs {
+            sb.clone()
+        } else if same_cd {
+            sc.clone()
+        } else {
+            shell(ld, next + ncart(lc))
+        };
+        (sa, sb, sc, sd)
+    }
+
+    fn nbf_of(quartet: &(Shell, Shell, Shell, Shell)) -> usize {
+        let (sa, sb, sc, sd) = quartet;
+        [sa, sb, sc, sd].iter().map(|s| s.first_bf + ncart(s.l)).max().unwrap()
+    }
+
+    /// The weight vector must reproduce exactly the canonical-skip rule
+    /// and `symmetry_factor` the scatter digestion applies per quad.
+    #[test]
+    fn weight_table_matches_scatter_weights() {
+        for &mask in &REALIZABLE_MASKS {
+            for (la, lb, lc, ld) in [(0, 1, 2, 1), (1, 1, 1, 1), (2, 0, 2, 2), (2, 2, 2, 2)] {
+                let (sa, sb, sc, sd) = quartet(mask, la, lb, lc, ld);
+                let (na, nb, nc, nd) =
+                    (ncart(sa.l), ncart(sb.l), ncart(sc.l), ncart(sd.l));
+                let w = weight_table(na, nb, nc, nd, mask);
+                let same_ab = mask & MASK_SAME_AB != 0;
+                let same_cd = mask & MASK_SAME_CD != 0;
+                let same_pairs = mask & MASK_SAME_PAIRS != 0;
+                let mut idx = 0;
+                for ia in 0..na {
+                    for ib in 0..nb {
+                        for ic in 0..nc {
+                            for id in 0..nd {
+                                let skipped = (same_ab && ib > ia)
+                                    || (same_cd && id > ic)
+                                    || (same_pairs && (ic, id) > (ia, ib));
+                                let expect = if skipped {
+                                    0.0
+                                } else {
+                                    symmetry_factor(
+                                        sa.first_bf + ia,
+                                        sb.first_bf + ib,
+                                        sc.first_bf + ic,
+                                        sd.first_bf + id,
+                                    )
+                                };
+                                assert_eq!(
+                                    w[idx], expect,
+                                    "mask {mask:03b} class {la}{lb}{lc}{ld} comp \
+                                     ({ia},{ib},{ic},{id})"
+                                );
+                                idx += 1;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// Property: on randomized blocks and symmetric densities the GEMM
+    /// path reproduces the scatter oracle for every realizable
+    /// coincidence mask and random l classes.
+    #[test]
+    fn gemm_matches_scatter_oracle_on_randomized_blocks() {
+        check("gemm_matches_scatter", 64, |g: &mut Gen| {
+            let mask = *g.pick(&REALIZABLE_MASKS);
+            let la = g.usize_in(0, 2) as u8;
+            let lb = g.usize_in(0, 2) as u8;
+            let lc = g.usize_in(0, 2) as u8;
+            let ld = g.usize_in(0, 2) as u8;
+            let q = quartet(mask, la, lb, lc, ld);
+            let nbf = nbf_of(&q);
+            let (sa, sb, sc, sd) = q;
+            let (na, nb, nc, nd) = (ncart(sa.l), ncart(sb.l), ncart(sc.l), ncart(sd.l));
+            let block = g.vec_f64(na * nb * nc * nd, -1.0, 1.0);
+            let mut d = Matrix::zeros(nbf, nbf);
+            for i in 0..nbf {
+                for j in 0..=i {
+                    let v = g.f64_in(-1.0, 1.0);
+                    *d.at_mut(i, j) = v;
+                    *d.at_mut(j, i) = v;
+                }
+            }
+
+            let mut g_scatter = Matrix::zeros(nbf, nbf);
+            digest_block(
+                &mut g_scatter,
+                &d,
+                &sa,
+                &sb,
+                &sc,
+                &sd,
+                mask & MASK_SAME_AB != 0,
+                mask & MASK_SAME_CD != 0,
+                mask & MASK_SAME_PAIRS != 0,
+                &block,
+            );
+
+            let weights = weight_table(na, nb, nc, nd, mask);
+            let mut g_gemm = Matrix::zeros(nbf, nbf);
+            digest_block_gemm(&mut g_gemm, &d, &sa, &sb, &sc, &sd, &weights, &block);
+
+            let diff = g_gemm.diff_norm(&g_scatter);
+            prop_assert!(
+                diff < 1e-12,
+                "mask {mask:03b} class {la}{lb}{lc}{ld}: |G_gemm − G_scatter| = {diff:e}"
+            );
+            Ok(())
+        });
+    }
+}

@@ -5,6 +5,7 @@
 
 mod accumulate;
 mod digest;
+mod gemm;
 mod hcore;
 
 pub use accumulate::{
@@ -12,4 +13,8 @@ pub use accumulate::{
     MergeUnitParseError, MERGE_UNITS,
 };
 pub use digest::{digest_block, digest_eri, symmetry_factor};
+pub use gemm::{
+    digest_block_gemm, quad_mask, weight_table, DigestStrategy, MASK_SAME_AB, MASK_SAME_CD,
+    MASK_SAME_PAIRS,
+};
 pub use hcore::core_hamiltonian;

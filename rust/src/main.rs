@@ -23,6 +23,7 @@ use matryoshka::dispatch::{DispatchConfig, DispatchMode};
 use matryoshka::engines::{
     MatryoshkaConfig, MatryoshkaEngine, ReferenceEngine, DEFAULT_STORED_BUDGET_BYTES,
 };
+use matryoshka::fock::DigestStrategy;
 use matryoshka::integrals::overlap_matrix;
 use matryoshka::linalg::Matrix;
 use matryoshka::molecule::{library, parse_xyz, Molecule};
@@ -41,7 +42,7 @@ fn usage() -> ! {
         "usage: matryoshka <scf|report|info|worker|codegen> [options]\n\
          \n  scf     --molecule NAME [--basis sto-3g|6-31g*] [--engine matryoshka|reference]\n\
          \u{20}         [--stored] [--stored-budget-mb N] [--backend native|pjrt]\n\
-         \u{20}         [--eri-strategy kernels|tables|recursion]\n\
+         \u{20}         [--eri-strategy kernels|tables|recursion] [--digest gemm|scatter]\n\
          \u{20}         [--threads N (0 = auto)] [--pipeline staged|lockstep]\n\
          \u{20}         [--ladder elastic|fixed] [--working-set-kb N|auto] [--wide-opb-max X]\n\
          \u{20}         [--dispatch off|local:N|remote:host:port,...] [--dispatch-timeout-ms N]\n\
@@ -113,6 +114,7 @@ fn engine_config(args: &Args) -> anyhow::Result<MatryoshkaConfig> {
             "kernels",
             &["kernels", "tables", "recursion"],
         )?)?,
+        digest: DigestStrategy::parse(&args.choice("digest", "gemm", &["gemm", "scatter"])?)?,
         working_set_bytes: resolve_working_set(args)?,
         wide_opb_max: args.f64_or("wide-opb-max", matryoshka::pipeline::DEFAULT_WIDE_OPB_MAX)?,
         threads: args.usize_or("threads", 0)?,
@@ -178,12 +180,14 @@ fn cmd_scf(args: &Args) -> anyhow::Result<()> {
             let m = &engine.metrics;
             let rs = engine.runtime_stats();
             println!(
-                "engine: backend {} with {} Fock worker(s), {} pipeline, {} ladder, {} eri strategy",
+                "engine: backend {} with {} Fock worker(s), {} pipeline, {} ladder, \
+                 {} eri strategy, {} digest",
                 engine.backend_name(),
                 engine.threads(),
                 engine.config.pipeline.name(),
                 engine.config.ladder.name(),
-                engine.config.eri_strategy.name()
+                engine.config.eri_strategy.name(),
+                engine.config.digest.name()
             );
             // phase timers are CPU-seconds summed across Fock workers;
             // with --threads N they can exceed wall time by up to N×
@@ -216,6 +220,14 @@ fn cmd_scf(args: &Args) -> anyhow::Result<()> {
                     .map(|(name, secs)| format!("{name} {secs:.2}s"))
                     .collect();
                 println!("engine: execute seconds by evaluator: {}", by_strategy.join(", "));
+            }
+            if !m.per_digest.is_empty() {
+                let by_digest: Vec<String> = m
+                    .per_digest
+                    .iter()
+                    .map(|(name, secs)| format!("{name} {secs:.2}s"))
+                    .collect();
+                println!("engine: digest seconds by strategy: {}", by_digest.join(", "));
             }
             if let Some(summary) = engine.dispatch_summary() {
                 println!("engine: dispatch {}", engine.config.dispatch.mode.describe());

@@ -59,6 +59,11 @@ pub struct EngineMetrics {
     /// to `Tables`) this attributes time to what happened, not what was
     /// configured
     pub per_strategy: BTreeMap<String, f64>,
+    /// digestion CPU-seconds by digest strategy ("gemm", "scatter") —
+    /// the per-strategy attribution of `digest_seconds`, so gemm-vs-
+    /// scatter digest walls compare directly in `report schedule` and
+    /// the fig9 bench
+    pub per_digest: BTreeMap<String, f64>,
     /// chunks staged wide (memory stage executed them inline) vs split
     /// (shipped to the compute companion) — the elastic stage split
     pub wide_chunks: u64,
@@ -127,6 +132,20 @@ impl EngineMetrics {
         }
     }
 
+    /// Attribute one entry's digest seconds to the digest strategy that
+    /// contracted it ("gemm" or "scatter").  Empty names are dropped.
+    pub fn record_digest(&mut self, strategy: &str, seconds: f64) {
+        if strategy.is_empty() {
+            return;
+        }
+        match self.per_digest.get_mut(strategy) {
+            Some(s) => *s += seconds,
+            None => {
+                self.per_digest.insert(strategy.to_string(), seconds);
+            }
+        }
+    }
+
     /// Fold a worker shard's metrics into this accumulator (the parallel
     /// Fock pipeline records per-worker and merges deterministically).
     pub fn merge(&mut self, other: &EngineMetrics) {
@@ -146,6 +165,9 @@ impl EngineMetrics {
         }
         for (name, secs) in &other.per_strategy {
             self.record_strategy(name, *secs);
+        }
+        for (name, secs) in &other.per_digest {
+            self.record_digest(name, *secs);
         }
         self.wide_chunks += other.wide_chunks;
         self.split_chunks += other.split_chunks;
@@ -269,6 +291,25 @@ mod tests {
         folded.merge(&m);
         assert!((folded.per_strategy["tables"] - 1.125).abs() < 1e-12);
         assert!((folded.per_strategy["kernels"] - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn digest_attribution_accumulates_and_merges() {
+        let mut m = EngineMetrics::default();
+        m.record_digest("gemm", 0.5);
+        m.record_digest("gemm", 0.25);
+        m.record_digest("scatter", 0.125);
+        m.record_digest("", 99.0); // dropped like empty execute strategies
+        assert_eq!(m.per_digest.len(), 2);
+        assert!((m.per_digest["gemm"] - 0.75).abs() < 1e-12);
+        // independent of the execute-strategy attribution
+        assert!(m.per_strategy.is_empty());
+
+        let mut folded = EngineMetrics::default();
+        folded.record_digest("scatter", 1.0);
+        folded.merge(&m);
+        assert!((folded.per_digest["scatter"] - 1.125).abs() < 1e-12);
+        assert!((folded.per_digest["gemm"] - 0.75).abs() < 1e-12);
     }
 
     #[test]

@@ -44,13 +44,15 @@ use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc;
 
+use std::collections::BTreeMap;
+
 use crate::allocator::TunerObservation;
 use crate::basis::BasisSet;
 use crate::constructor::{BlockPlan, PairList};
-use crate::fock::digest_block;
+use crate::fock::{digest_block, digest_block_gemm, DigestStrategy};
 use crate::linalg::Matrix;
 use crate::metrics::EngineMetrics;
-use crate::runtime::EriBackend;
+use crate::runtime::{ClassKey, EriBackend};
 use crate::util::Stopwatch;
 
 use super::schedule::{ChunkEntry, ChunkSchedule, StageShape};
@@ -67,6 +69,10 @@ pub struct ExecContext<'a> {
     pub backend: &'a dyn EriBackend,
     pub schedule: &'a ChunkSchedule,
     pub mode: PipelineMode,
+    /// how contracted ERI values digest into G ([`DigestStrategy`]) —
+    /// both strategies consume the same schedule metadata and digest in
+    /// the same entry order, so each is bitwise-deterministic on its own
+    pub digest: DigestStrategy,
     /// stored-mode cache indexed by schedule entry (None = recompute)
     pub cache: Option<&'a [Option<CachedChunk>]>,
     /// collect values of budget-marked entries into [`UnitOutput::cache`]
@@ -155,9 +161,97 @@ pub fn digest_quads(
     }
 }
 
+/// Digest one entry's contracted values into `g` through the block-GEMM
+/// microkernel: per quad, look up the `(class, coincidence-mask)` weight
+/// table the schedule precomputed and contract the whole component panel
+/// densely ([`digest_block_gemm`]).  Same entry order, same G tiles —
+/// only the arithmetic shape differs from [`digest_quads`].
+#[allow(clippy::too_many_arguments)]
+pub fn digest_quads_gemm(
+    basis: &BasisSet,
+    pairs: &PairList,
+    g: &mut Matrix,
+    d: &Matrix,
+    quads: &[(u32, u32)],
+    masks: &[u8],
+    class: ClassKey,
+    weights: &BTreeMap<(ClassKey, u8), Vec<f64>>,
+    values: &[f64],
+    ncomp: usize,
+) {
+    debug_assert_eq!(quads.len(), masks.len());
+    // consecutive quads usually share a mask — memoize the last lookup
+    let mut last: Option<(u8, &Vec<f64>)> = None;
+    for (r, &(pidx, qidx)) in quads.iter().enumerate() {
+        let mask = masks[r];
+        let w = match last {
+            Some((m, w)) if m == mask => w,
+            _ => {
+                let w = weights.get(&(class, mask)).unwrap_or_else(|| {
+                    panic!("schedule carries no weight table for class {class:?} mask {mask:#05b}")
+                });
+                last = Some((mask, w));
+                w
+            }
+        };
+        let bra = &pairs.pairs[pidx as usize];
+        let ket = &pairs.pairs[qidx as usize];
+        digest_block_gemm(
+            g,
+            d,
+            &basis.shells[bra.si],
+            &basis.shells[bra.sj],
+            &basis.shells[ket.si],
+            &basis.shells[ket.sj],
+            w,
+            &values[r * ncomp..(r + 1) * ncomp],
+        );
+    }
+}
+
 impl<'a> ExecContext<'a> {
     fn entry_quads(&self, entry: &ChunkEntry) -> &'a [(u32, u32)] {
         &self.plan.blocks[entry.block].quads[entry.start..entry.end]
+    }
+
+    /// Digest one entry's values through the configured strategy — the
+    /// single digestion site the staged, lockstep and cached paths all
+    /// share, with per-strategy wall attribution.
+    fn digest_entry(
+        &self,
+        density: &Matrix,
+        entry: &ChunkEntry,
+        values: &[f64],
+        ncomp: usize,
+        out: &mut UnitOutput,
+    ) {
+        let sw = Stopwatch::start();
+        match self.digest {
+            DigestStrategy::Scatter => digest_quads(
+                self.basis,
+                self.pairs,
+                &mut out.g,
+                density,
+                self.entry_quads(entry),
+                values,
+                ncomp,
+            ),
+            DigestStrategy::Gemm => digest_quads_gemm(
+                self.basis,
+                self.pairs,
+                &mut out.g,
+                density,
+                self.entry_quads(entry),
+                &entry.masks,
+                entry.class,
+                &self.schedule.weights,
+                values,
+                ncomp,
+            ),
+        }
+        let dt = sw.elapsed_s();
+        out.metrics.digest_seconds += dt;
+        out.metrics.record_digest(self.digest.name(), dt);
     }
 
     fn cached(&self, entry: usize) -> Option<&'a CachedChunk> {
@@ -166,17 +260,7 @@ impl<'a> ExecContext<'a> {
 
     /// Digest a cache hit (memory stage only; no execution involved).
     fn digest_cached(&self, density: &Matrix, entry: &ChunkEntry, hit: &CachedChunk, out: &mut UnitOutput) {
-        let sw = Stopwatch::start();
-        digest_quads(
-            self.basis,
-            self.pairs,
-            &mut out.g,
-            density,
-            self.entry_quads(entry),
-            &hit.values,
-            hit.ncomp,
-        );
-        out.metrics.digest_seconds += sw.elapsed_s();
+        self.digest_entry(density, entry, &hit.values, hit.ncomp, out);
     }
 
     /// Post-execution bookkeeping for one entry: metrics (with the
@@ -206,17 +290,7 @@ impl<'a> ExecContext<'a> {
             quads: n,
             seconds: set.out.steady_seconds,
         });
-        let sw = Stopwatch::start();
-        digest_quads(
-            self.basis,
-            self.pairs,
-            &mut out.g,
-            density,
-            self.entry_quads(entry),
-            &set.out.values,
-            set.out.ncomp,
-        );
-        out.metrics.digest_seconds += sw.elapsed_s();
+        self.digest_entry(density, entry, &set.out.values, set.out.ncomp, out);
         if self.collect_cache && entry.cacheable {
             out.cache.push((
                 entry.entry,

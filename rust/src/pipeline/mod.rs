@@ -39,8 +39,8 @@ mod schedule;
 mod scratch;
 
 pub use executor::{
-    digest_quads, run_entries, run_unit_stream, run_units_streamed, ExecContext, Prefetched,
-    UnitOutput, UnitPayload,
+    digest_quads, digest_quads_gemm, run_entries, run_unit_stream, run_units_streamed,
+    ExecContext, Prefetched, UnitOutput, UnitPayload,
 };
 pub use schedule::{
     ChunkEntry, ChunkSchedule, SchedulePolicy, StageShape, DEFAULT_WIDE_OPB_MAX,

@@ -20,8 +20,9 @@
 use std::collections::BTreeMap;
 
 use crate::allocator::{intensity_prior, DEFAULT_WORKING_SET_BYTES};
-use crate::constructor::BlockPlan;
-use crate::fock::{merge_unit_count, unit_ranges, MergeUnit};
+use crate::basis::ncart;
+use crate::constructor::{BlockPlan, PairList};
+use crate::fock::{merge_unit_count, quad_mask, unit_ranges, weight_table, MergeUnit};
 use crate::runtime::{ClassKey, Manifest, Variant};
 
 /// Default OP/B threshold of the elastic stage split: chunks of classes
@@ -111,6 +112,11 @@ pub struct ChunkEntry {
     pub variant: Variant,
     /// stored mode: whether this entry's values fit the cache budget
     pub cacheable: bool,
+    /// per-quad shell-coincidence masks ([`crate::fock::quad_mask`]), one
+    /// per real quad in `[start, end)` — the GEMM digestion's key into
+    /// [`ChunkSchedule::weights`], precomputed here so both digest
+    /// strategies consume identical schedule-time metadata
+    pub masks: Vec<u8>,
 }
 
 impl ChunkEntry {
@@ -142,6 +148,11 @@ pub struct ChunkSchedule {
     pub entries: Vec<ChunkEntry>,
     /// merge units partitioning `entries` (the fixed summation tree)
     pub units: Vec<MergeUnit>,
+    /// symmetry weight vectors for the GEMM digestion, one per
+    /// `(class, coincidence mask)` shape that occurs in `entries`
+    /// ([`crate::fock::weight_table`]) — built once here instead of per
+    /// chunk on the hot path
+    pub weights: BTreeMap<(ClassKey, u8), Vec<f64>>,
 }
 
 /// Select the kernel variant for a class at the frozen tuner state;
@@ -189,17 +200,20 @@ fn resolve_variant(
 
 impl ChunkSchedule {
     /// Build the schedule for every block of the plan.  `batches` is the
-    /// tuner's frozen per-class rung snapshot; `nbf` sizes the merge-unit
-    /// count (a pure function of the system — see `fock::accumulate`).
+    /// tuner's frozen per-class rung snapshot; `pairs` supplies the
+    /// shell-coincidence masks stamped on every entry; `nbf` sizes the
+    /// merge-unit count (a pure function of the system — see
+    /// `fock::accumulate`).
     pub fn build(
         plan: &BlockPlan,
         manifest: &Manifest,
         batches: &BTreeMap<ClassKey, usize>,
         policy: &SchedulePolicy,
+        pairs: &PairList,
         nbf: usize,
     ) -> anyhow::Result<ChunkSchedule> {
         let all: Vec<usize> = (0..plan.blocks.len()).collect();
-        Self::build_for_blocks(plan, manifest, batches, policy, &all, nbf)
+        Self::build_for_blocks(plan, manifest, batches, policy, &all, pairs, nbf)
     }
 
     /// Build over a subset of blocks, in the given order (weak-scaling
@@ -210,9 +224,11 @@ impl ChunkSchedule {
         batches: &BTreeMap<ClassKey, usize>,
         policy: &SchedulePolicy,
         blocks: &[usize],
+        pairs: &PairList,
         nbf: usize,
     ) -> anyhow::Result<ChunkSchedule> {
         let mut entries = Vec::new();
+        let mut weights: BTreeMap<(ClassKey, u8), Vec<f64>> = BTreeMap::new();
         // per-class intensity prior, memoized over the build
         let mut priors: BTreeMap<ClassKey, usize> = BTreeMap::new();
         // entry index where each listed block's chunks start (+ end cap):
@@ -238,6 +254,23 @@ impl ChunkSchedule {
                     resolve_variant(manifest, block.class, want, remaining, policy.greedy_path)?;
                 let n = remaining.min(variant.batch);
                 let opb = variant.flops_per_quad / variant.bytes_per_quad.max(1.0);
+                // per-quad coincidence masks + the weight tables the GEMM
+                // digestion contracts with — precomputed once per
+                // (class, mask) shape, shared by every quad of that shape
+                let masks: Vec<u8> = block.quads[offset..offset + n]
+                    .iter()
+                    .map(|&(p, q)| {
+                        let bra = &pairs.pairs[p as usize];
+                        let ket = &pairs.pairs[q as usize];
+                        quad_mask(bra.si == bra.sj, ket.si == ket.sj, p == q)
+                    })
+                    .collect();
+                for &mask in &masks {
+                    weights.entry((block.class, mask)).or_insert_with(|| {
+                        let (la, lb, lc, ld) = block.class;
+                        weight_table(ncart(la), ncart(lb), ncart(lc), ncart(ld), mask)
+                    });
+                }
                 entries.push(ChunkEntry {
                     entry: entries.len(),
                     block: bi,
@@ -253,6 +286,7 @@ impl ChunkSchedule {
                     },
                     variant,
                     cacheable: false,
+                    masks,
                 });
                 offset += n;
             }
@@ -305,7 +339,7 @@ impl ChunkSchedule {
                 }
             })
             .collect();
-        Ok(ChunkSchedule { entries, units })
+        Ok(ChunkSchedule { entries, units, weights })
     }
 
     /// Process-stable digest of everything that defines the executed
@@ -329,6 +363,10 @@ impl ChunkSchedule {
                 StageShape::Wide => 1,
             });
             h.u8(e.cacheable as u8);
+            h.usize(e.masks.len());
+            for &m in &e.masks {
+                h.u8(m);
+            }
             h.str(&e.variant.name);
             h.usize(e.variant.batch).usize(e.variant.ncomp);
             h.usize(e.variant.kpair_bra).usize(e.variant.kpair_ket);
@@ -420,18 +458,18 @@ mod tests {
     use crate::molecule::library;
     use crate::runtime::{ladder_rungs, EriBackend, LadderMode, NativeBackend};
 
-    fn inputs(molecule: &str, basis_name: &str) -> (BlockPlan, Manifest, usize, usize) {
+    fn inputs(molecule: &str, basis_name: &str) -> (BlockPlan, Manifest, PairList, usize, usize) {
         let mol = library::by_name(molecule).unwrap();
         let basis = build_basis(&mol, basis_name).unwrap();
         let pairs = PairList::build(&basis, 1e-10);
         let plan = BlockPlan::build(&pairs, 1e-10, 32, true);
         let manifest = NativeBackend::with_kpair(basis.max_kpair()).manifest().clone();
-        (plan, manifest, basis.nbf, basis.max_kpair())
+        (plan, manifest, pairs, basis.nbf, basis.max_kpair())
     }
 
-    fn water_inputs() -> (BlockPlan, Manifest, usize) {
-        let (plan, manifest, nbf, _) = inputs("water", "sto-3g");
-        (plan, manifest, nbf)
+    fn water_inputs() -> (BlockPlan, Manifest, PairList, usize) {
+        let (plan, manifest, pairs, nbf, _) = inputs("water", "sto-3g");
+        (plan, manifest, pairs, nbf)
     }
 
     fn policy() -> SchedulePolicy {
@@ -440,9 +478,9 @@ mod tests {
 
     #[test]
     fn entries_partition_every_block_exactly() {
-        let (plan, manifest, nbf) = water_inputs();
+        let (plan, manifest, pairs, nbf) = water_inputs();
         let batches = BTreeMap::new();
-        let s = ChunkSchedule::build(&plan, &manifest, &batches, &policy(), nbf).unwrap();
+        let s = ChunkSchedule::build(&plan, &manifest, &batches, &policy(), &pairs, nbf).unwrap();
         // per block: entries are contiguous, ordered, and cover the quads
         let mut covered = vec![0usize; plan.blocks.len()];
         let mut cursor = (usize::MAX, 0usize);
@@ -474,19 +512,19 @@ mod tests {
 
     #[test]
     fn schedule_build_is_pure() {
-        let (plan, manifest, nbf) = water_inputs();
+        let (plan, manifest, pairs, nbf) = water_inputs();
         let mut batches = BTreeMap::new();
         batches.insert((0, 0, 0, 0), 128);
-        let a = ChunkSchedule::build(&plan, &manifest, &batches, &policy(), nbf).unwrap();
-        let b = ChunkSchedule::build(&plan, &manifest, &batches, &policy(), nbf).unwrap();
+        let a = ChunkSchedule::build(&plan, &manifest, &batches, &policy(), &pairs, nbf).unwrap();
+        let b = ChunkSchedule::build(&plan, &manifest, &batches, &policy(), &pairs, nbf).unwrap();
         assert_eq!(a, b);
     }
 
     #[test]
     fn tail_chunks_downshift_to_the_snug_variant_at_build_time() {
-        let (plan, manifest, nbf) = water_inputs();
+        let (plan, manifest, pairs, nbf) = water_inputs();
         // empty snapshot -> every class wants the 512 rung
-        let s = ChunkSchedule::build(&plan, &manifest, &BTreeMap::new(), &policy(), nbf).unwrap();
+        let s = ChunkSchedule::build(&plan, &manifest, &BTreeMap::new(), &policy(), &pairs, nbf).unwrap();
         let mut downshifted = 0;
         for e in &s.entries {
             // the ladder the build consulted comes from the same exported
@@ -525,14 +563,14 @@ mod tests {
         // 6-31G* mixes cheap s chunks with expensive d chunks — the
         // least-cost-recompute selection must spend the budget on the
         // latter and leave the former direct
-        let (plan, manifest, nbf, _) = inputs("water", "6-31g*");
+        let (plan, manifest, pairs, nbf, _) = inputs("water", "6-31g*");
         let unlimited = SchedulePolicy { stored: true, stored_budget_bytes: usize::MAX, ..policy() };
-        let s = ChunkSchedule::build(&plan, &manifest, &BTreeMap::new(), &unlimited, nbf).unwrap();
+        let s = ChunkSchedule::build(&plan, &manifest, &BTreeMap::new(), &unlimited, &pairs, nbf).unwrap();
         assert_eq!(s.cacheable_entries(), s.entries.len());
 
         let total_bytes: usize = s.entries.iter().map(|e| e.value_bytes()).sum();
         let tiny = SchedulePolicy { stored: true, stored_budget_bytes: total_bytes / 4, ..policy() };
-        let t = ChunkSchedule::build(&plan, &manifest, &BTreeMap::new(), &tiny, nbf).unwrap();
+        let t = ChunkSchedule::build(&plan, &manifest, &BTreeMap::new(), &tiny, &pairs, nbf).unwrap();
         let cached = t.cacheable_entries();
         assert!(cached > 0 && cached < t.entries.len(), "partial cache: {cached}");
         let spent: usize = t.entries.iter().filter(|e| e.cacheable).map(|e| e.value_bytes()).sum();
@@ -563,7 +601,7 @@ mod tests {
             stored_budget_bytes: top3.iter().map(|&i| t.entries[i].value_bytes()).sum(),
             ..policy()
         };
-        let e3 = ChunkSchedule::build(&plan, &manifest, &BTreeMap::new(), &exact, nbf).unwrap();
+        let e3 = ChunkSchedule::build(&plan, &manifest, &BTreeMap::new(), &exact, &pairs, nbf).unwrap();
         for (i, e) in e3.entries.iter().enumerate() {
             assert_eq!(e.cacheable, top3.contains(&i), "entry {i}");
         }
@@ -572,19 +610,19 @@ mod tests {
         assert_eq!(e3.entries[order[0]].class.0, 2, "top entry should be a d chunk");
 
         let zero = SchedulePolicy { stored: true, stored_budget_bytes: 0, ..policy() };
-        let z = ChunkSchedule::build(&plan, &manifest, &BTreeMap::new(), &zero, nbf).unwrap();
+        let z = ChunkSchedule::build(&plan, &manifest, &BTreeMap::new(), &zero, &pairs, nbf).unwrap();
         assert_eq!(z.cacheable_entries(), 0);
 
         // direct mode never marks anything regardless of budget
         let direct = SchedulePolicy { stored: false, stored_budget_bytes: usize::MAX, ..policy() };
-        let d = ChunkSchedule::build(&plan, &manifest, &BTreeMap::new(), &direct, nbf).unwrap();
+        let d = ChunkSchedule::build(&plan, &manifest, &BTreeMap::new(), &direct, &pairs, nbf).unwrap();
         assert_eq!(d.cacheable_entries(), 0);
     }
 
     #[test]
     fn stage_shape_follows_the_opb_threshold_and_is_frozen_per_entry() {
-        let (plan, manifest, nbf, _) = inputs("water", "6-31g*");
-        let s = ChunkSchedule::build(&plan, &manifest, &BTreeMap::new(), &policy(), nbf).unwrap();
+        let (plan, manifest, pairs, nbf, _) = inputs("water", "6-31g*");
+        let s = ChunkSchedule::build(&plan, &manifest, &BTreeMap::new(), &policy(), &pairs, nbf).unwrap();
         let mut wide = 0;
         let mut split = 0;
         for e in &s.entries {
@@ -610,7 +648,7 @@ mod tests {
             .all(|e| e.class != (2, 2, 2, 2) || e.shape == StageShape::Split));
         // threshold 0 forces everything onto the split pipeline
         let all_split = SchedulePolicy { wide_opb_max: 0.0, ..policy() };
-        let t = ChunkSchedule::build(&plan, &manifest, &BTreeMap::new(), &all_split, nbf).unwrap();
+        let t = ChunkSchedule::build(&plan, &manifest, &BTreeMap::new(), &all_split, &pairs, nbf).unwrap();
         assert!(t.entries.iter().all(|e| e.shape == StageShape::Split));
     }
 
@@ -626,9 +664,15 @@ mod tests {
         let mut unit_block_ranges = Vec::new();
         for mode in [LadderMode::Elastic, LadderMode::Fixed] {
             let manifest = NativeBackend::with_ladder(basis.max_kpair(), mode).manifest().clone();
-            let s =
-                ChunkSchedule::build(&plan, &manifest, &BTreeMap::new(), &policy(), basis.nbf)
-                    .unwrap();
+            let s = ChunkSchedule::build(
+                &plan,
+                &manifest,
+                &BTreeMap::new(),
+                &policy(),
+                &pairs,
+                basis.nbf,
+            )
+            .unwrap();
             for u in &s.units {
                 // a unit's entry range starts and ends on block boundaries
                 let first = &s.entries[u.entry_start];
@@ -648,10 +692,12 @@ mod tests {
         // the chunking of (class, quad count) under a policy is fully
         // reproducible: two independently constructed catalogs and plans
         // must produce identical entry partitions, priors and shapes
-        let (plan_a, manifest_a, nbf, kpair) = inputs("water", "6-31g*");
-        let (plan_b, manifest_b, _, _) = inputs("water", "6-31g*");
-        let a = ChunkSchedule::build(&plan_a, &manifest_a, &BTreeMap::new(), &policy(), nbf).unwrap();
-        let b = ChunkSchedule::build(&plan_b, &manifest_b, &BTreeMap::new(), &policy(), nbf).unwrap();
+        let (plan_a, manifest_a, pairs_a, nbf, kpair) = inputs("water", "6-31g*");
+        let (plan_b, manifest_b, pairs_b, _, _) = inputs("water", "6-31g*");
+        let a = ChunkSchedule::build(&plan_a, &manifest_a, &BTreeMap::new(), &policy(), &pairs_a, nbf)
+            .unwrap();
+        let b = ChunkSchedule::build(&plan_b, &manifest_b, &BTreeMap::new(), &policy(), &pairs_b, nbf)
+            .unwrap();
         assert_eq!(a, b);
         // and per-class chunk widths depend only on (class, remaining):
         // replaying the resolve loop over the exported ladder reproduces
@@ -672,11 +718,11 @@ mod tests {
 
     #[test]
     fn fingerprint_is_stable_and_sensitive() {
-        let (plan, manifest, nbf) = water_inputs();
-        let s = ChunkSchedule::build(&plan, &manifest, &BTreeMap::new(), &policy(), nbf).unwrap();
+        let (plan, manifest, pairs, nbf) = water_inputs();
+        let s = ChunkSchedule::build(&plan, &manifest, &BTreeMap::new(), &policy(), &pairs, nbf).unwrap();
         // two independent builds of the same inputs agree (this is what a
         // dispatch worker recomputes and compares)
-        let t = ChunkSchedule::build(&plan, &manifest, &BTreeMap::new(), &policy(), nbf).unwrap();
+        let t = ChunkSchedule::build(&plan, &manifest, &BTreeMap::new(), &policy(), &pairs, nbf).unwrap();
         assert_eq!(s.fingerprint(), t.fingerprint());
         // a different tuner snapshot re-chunks the work -> different digest
         let mut batches = BTreeMap::new();
@@ -684,7 +730,7 @@ mod tests {
             batches.insert(class, 32);
         }
         let narrow =
-            ChunkSchedule::build(&plan, &manifest, &batches, &policy(), nbf).unwrap();
+            ChunkSchedule::build(&plan, &manifest, &batches, &policy(), &pairs, nbf).unwrap();
         assert_ne!(s.fingerprint(), narrow.fingerprint(), "rung movement must change the digest");
         // so does flipping the stored policy on (cacheable bits flip)
         let stored = SchedulePolicy {
@@ -693,13 +739,13 @@ mod tests {
             ..policy()
         };
         let cached =
-            ChunkSchedule::build(&plan, &manifest, &BTreeMap::new(), &stored, nbf).unwrap();
+            ChunkSchedule::build(&plan, &manifest, &BTreeMap::new(), &stored, &pairs, nbf).unwrap();
         assert_ne!(s.fingerprint(), cached.fingerprint());
     }
 
     #[test]
     fn build_for_blocks_covers_exactly_the_requested_subset() {
-        let (plan, manifest, nbf) = water_inputs();
+        let (plan, manifest, pairs, nbf) = water_inputs();
         let subset: Vec<usize> = (0..plan.blocks.len()).filter(|b| b % 2 == 1).collect();
         let s = ChunkSchedule::build_for_blocks(
             &plan,
@@ -707,6 +753,7 @@ mod tests {
             &BTreeMap::new(),
             &policy(),
             &subset,
+            &pairs,
             nbf,
         )
         .unwrap();
@@ -717,9 +764,47 @@ mod tests {
     }
 
     #[test]
+    fn entries_carry_masks_and_weight_tables_for_every_quad() {
+        let (plan, manifest, pairs, nbf, _) = inputs("water", "6-31g*");
+        let s = ChunkSchedule::build(&plan, &manifest, &BTreeMap::new(), &policy(), &pairs, nbf)
+            .unwrap();
+        let mut masks_seen = std::collections::BTreeSet::new();
+        for e in &s.entries {
+            assert_eq!(e.masks.len(), e.len(), "entry {}", e.entry);
+            for (r, &(p, q)) in plan.blocks[e.block].quads[e.start..e.end].iter().enumerate() {
+                let bra = &pairs.pairs[p as usize];
+                let ket = &pairs.pairs[q as usize];
+                assert_eq!(
+                    e.masks[r],
+                    quad_mask(bra.si == bra.sj, ket.si == ket.sj, p == q),
+                    "entry {} quad {r}",
+                    e.entry
+                );
+                masks_seen.insert(e.masks[r]);
+                // every (class, mask) shape has its weight table, sized
+                // to the class's component count
+                let w = s.weights.get(&(e.class, e.masks[r])).expect("weight table present");
+                let (la, lb, lc, ld) = e.class;
+                assert_eq!(w.len(), ncart(la) * ncart(lb) * ncart(lc) * ncart(ld));
+                assert_eq!(w.len(), e.variant.ncomp, "entry {}", e.entry);
+            }
+        }
+        // water 6-31G* exercises plain, same-shell and diagonal-pair
+        // quartets — the GEMM path sees more than one coincidence shape
+        assert!(masks_seen.len() > 1, "masks seen: {masks_seen:?}");
+        // no weight table is orphaned: each key is some entry's shape
+        for &(class, mask) in s.weights.keys() {
+            assert!(
+                s.entries.iter().any(|e| e.class == class && e.masks.contains(&mask)),
+                "orphan weight table ({class:?}, {mask:#05b})"
+            );
+        }
+    }
+
+    #[test]
     fn summary_lists_every_unit_as_a_wire_line() {
-        let (plan, manifest, nbf) = water_inputs();
-        let s = ChunkSchedule::build(&plan, &manifest, &BTreeMap::new(), &policy(), nbf).unwrap();
+        let (plan, manifest, pairs, nbf) = water_inputs();
+        let s = ChunkSchedule::build(&plan, &manifest, &BTreeMap::new(), &policy(), &pairs, nbf).unwrap();
         let text = s.summary("water / sto-3g");
         assert!(text.contains("water / sto-3g"));
         for unit in &s.units {

@@ -162,6 +162,14 @@ pub fn schedule_summary(molecule: &str, basis_name: &str, threshold: f64) -> any
             text.push_str(&format!("  {name:<10} {secs:>8.3}s  {share:>5.1}%\n"));
         }
     }
+    if !m.per_digest.is_empty() {
+        let total: f64 = m.per_digest.values().sum();
+        text.push_str("\ndigest attribution (one Fock build, CPU-s by strategy):\n");
+        for (name, secs) in &m.per_digest {
+            let share = if total > 0.0 { 100.0 * secs / total } else { 0.0 };
+            text.push_str(&format!("  {name:<10} {secs:>8.3}s  {share:>5.1}%\n"));
+        }
+    }
     Ok(text)
 }
 
@@ -238,6 +246,9 @@ mod tests {
         // the default strategy is the generated kernels
         assert!(t.contains("execute attribution"), "{t}");
         assert!(t.contains("kernels"), "{t}");
+        // ...and digest time per strategy; the default is the block GEMM
+        assert!(t.contains("digest attribution"), "{t}");
+        assert!(t.contains("gemm"), "{t}");
         assert!(schedule_summary("unobtainium", "sto-3g", 1e-10).is_err());
     }
 }

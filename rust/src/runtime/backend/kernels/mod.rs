@@ -13,6 +13,12 @@
 //! build-time output, kept for review and CI drift detection only — the
 //! crate compiles the `OUT_DIR` copy, so a stale snapshot can never
 //! break the build (the drift job catches it instead).
+//!
+//! A kernel's output is a whole batch-major `[n, ncomp]` panel whose row
+//! count is padded to a [`KERNEL_LANES`] multiple; the lane-padding rows
+//! hold exact zeros (padded rows carry `Kab = 0`), so the tiled GEMM
+//! digest (`fock::digest_block_gemm`) can contract full panels without
+//! masking.  `EriOutput::rows` carries the padded count downstream.
 
 pub mod codegen;
 

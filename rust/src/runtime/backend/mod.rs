@@ -43,6 +43,11 @@ pub struct EriOutput {
     /// contracted ERIs, row-major [batch, ncomp]
     pub values: Vec<f64>,
     pub ncomp: usize,
+    /// row count `values` actually holds (`values.len() == rows * ncomp`).
+    /// Real quads occupy the first `batch` rows in schedule order; any
+    /// rows beyond that are lane-padding and hold exact zeros, so a tiled
+    /// digest consumer may contract whole panels without masking
+    pub rows: usize,
     /// evaluator that actually ran ("kernels", "tables", "recursion",
     /// "pjrt"; "" until first execution) — per-class fallback means this
     /// can differ from the configured strategy, so metrics attribute
@@ -259,6 +264,9 @@ mod tests {
         b.execute_eri_into(&variant, &bp, &bg, &kp, &kg, &mut out).unwrap();
         assert_eq!(out.values, exec.values);
         assert_eq!(out.ncomp, exec.ncomp);
+        assert_eq!(out.rows, exec.rows);
+        assert!(exec.rows >= batch, "padded row count can never undercut the batch");
+        assert_eq!(exec.values.len(), exec.rows * exec.ncomp);
     }
 
     #[test]

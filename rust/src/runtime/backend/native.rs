@@ -278,9 +278,9 @@ impl EriBackend for NativeBackend {
             );
         }
         let sw = Stopwatch::start();
-        let strategy = match self.strategy {
+        let (strategy, rows) = match self.strategy {
             EriEvalStrategy::Kernels => {
-                if eval_chunk_kernels(
+                if let Some(rows) = eval_chunk_kernels(
                     variant.class,
                     b,
                     kb,
@@ -291,7 +291,7 @@ impl EriBackend for NativeBackend {
                     ket_geom,
                     &mut out.values,
                 ) {
-                    "kernels"
+                    ("kernels", rows)
                 } else {
                     // class outside the generated catalog (e.g. beyond
                     // NATIVE_LMAX once a bigger basis lands): oracle path
@@ -306,7 +306,7 @@ impl EriBackend for NativeBackend {
                         ket_geom,
                         &mut out.values,
                     );
-                    "tables"
+                    ("tables", b)
                 }
             }
             EriEvalStrategy::Tables => {
@@ -321,7 +321,7 @@ impl EriBackend for NativeBackend {
                     ket_geom,
                     &mut out.values,
                 );
-                "tables"
+                ("tables", b)
             }
             EriEvalStrategy::Recursion => {
                 eval_chunk_recursive(
@@ -335,7 +335,7 @@ impl EriBackend for NativeBackend {
                     ket_geom,
                     &mut out.values,
                 );
-                "recursion"
+                ("recursion", b)
             }
         };
         let execute_seconds = sw.elapsed_s();
@@ -347,6 +347,7 @@ impl EriBackend for NativeBackend {
         drop(stats);
 
         out.ncomp = variant.ncomp;
+        out.rows = rows;
         out.strategy = strategy;
         out.execute_seconds = execute_seconds;
         out.marshal_seconds = 0.0;
@@ -399,16 +400,21 @@ thread_local! {
 }
 
 /// Contracted ERIs for one padded chunk via the graph-compiled
-/// straight-line kernels.  Returns `false` (leaving `out` untouched) when
-/// the class has no generated kernel, so the caller can fall back to the
-/// `Tables` oracle.
+/// straight-line kernels.  Returns the padded row count actually emitted
+/// (`soa.n`, a multiple of [`kernels::KERNEL_LANES`]), or `None` (leaving
+/// `out` untouched) when the class has no generated kernel, so the caller
+/// can fall back to the `Tables` oracle.
 ///
 /// The AoS gather buffers are transposed into a thread-local
 /// [`kernels::SoaChunk`] (O(batch·kpair) moves against the kernel's
 /// O(batch·kb·kk·ncomp) flops), the kernel accumulates unscaled
 /// components over rows padded to [`kernels::KERNEL_LANES`], and the
 /// per-component `comp_norm` scale is applied here in a final pass — the
-/// generated code carries no non-trivial float literals.
+/// generated code carries no non-trivial float literals.  The
+/// lane-padding rows are kept (they hold exact zeros: padded rows carry
+/// Kab = 0), so the output is a whole [rows, ncomp] panel the tiled GEMM
+/// digest can contract without masking; real quads occupy the first
+/// `batch` rows.
 #[allow(clippy::too_many_arguments)]
 fn eval_chunk_kernels(
     class: ClassKey,
@@ -420,11 +426,9 @@ fn eval_chunk_kernels(
     kp: &[f64],
     kg: &[f64],
     out: &mut Vec<f64>,
-) -> bool {
-    let Some(kernel) = kernels::kernel_for(class) else {
-        return false;
-    };
-    KERNEL_SCRATCH.with(|cell| {
+) -> Option<usize> {
+    let kernel = kernels::kernel_for(class)?;
+    let rows = KERNEL_SCRATCH.with(|cell| {
         let scratch = &mut *cell.borrow_mut();
         scratch.soa.pack(batch, kb, kk, bp, bg, kp, kg);
         if scratch.scale_class != Some(class) {
@@ -443,10 +447,9 @@ fn eval_chunk_kernels(
                 }
             }
         }
-        // drop the lane-padding rows: callers see exactly [batch, ncomp]
-        out.truncate(batch * ncomp);
+        scratch.soa.n
     });
-    true
+    Some(rows)
 }
 
 /// Per-thread scratch of the tables strategy: bra/ket Hermite E tables
@@ -1072,7 +1075,7 @@ mod tests {
                     ];
                     let mut sh = Shell::new(l, exps, coefs, center, 0, nbf);
                     sh.normalize();
-                    nbf += ncart(l as usize);
+                    nbf += ncart(l);
                     shells.push(sh);
                 }
                 let basis = BasisSet { shells, nbf };

@@ -104,6 +104,7 @@ impl Runtime {
         Ok(EriExecution {
             values,
             ncomp: variant.ncomp,
+            rows: variant.batch,
             strategy: "pjrt",
             execute_seconds,
             marshal_seconds: marshal,

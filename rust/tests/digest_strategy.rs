@@ -1,0 +1,182 @@
+//! Digestion-strategy acceptance tests (tiled block-GEMM contraction).
+//!
+//! * Cross-strategy parity: the block GEMM and the per-quad 8-image
+//!   scatter are different associations of the same contraction, so
+//!   their G matrices agree to tight tolerance (never bitwise — the
+//!   floating-point summation orders differ by construction).  The
+//!   scatter path is the permanent parity oracle.
+//! * Within-strategy bitwise invariance: for a fixed digestion strategy,
+//!   G must not change a single bit across thread count, batch ladder,
+//!   pipeline mode or `--dispatch local:2` — digestion runs on the
+//!   memory stage in strict schedule-entry order either way.
+//! * Golden SCF: the GEMM digestion reproduces the scatter SCF energy on
+//!   6-31G* water and methane (d classes and every shell-coincidence
+//!   mask exercised end to end).
+
+use std::path::{Path, PathBuf};
+
+use matryoshka::basis::build_basis;
+use matryoshka::dispatch::{DispatchConfig, DispatchMode};
+use matryoshka::engines::{MatryoshkaConfig, MatryoshkaEngine};
+use matryoshka::fock::DigestStrategy;
+use matryoshka::linalg::Matrix;
+use matryoshka::molecule::library;
+use matryoshka::pipeline::PipelineMode;
+use matryoshka::runtime::LadderMode;
+use matryoshka::scf::{run_rhf, FockEngine, ScfOptions};
+
+fn worker_bin() -> PathBuf {
+    PathBuf::from(env!("CARGO_BIN_EXE_matryoshka"))
+}
+
+fn test_density(n: usize) -> Matrix {
+    let mut d = Matrix::zeros(n, n);
+    for i in 0..n {
+        for j in 0..n {
+            let v = 0.3 / (1.0 + (i as f64 - j as f64).abs());
+            *d.at_mut(i, j) = v;
+            *d.at_mut(j, i) = v;
+        }
+    }
+    d
+}
+
+fn build_g(molecule: &str, config: MatryoshkaConfig) -> Matrix {
+    let mol = library::by_name(molecule).unwrap();
+    let basis = build_basis(&mol, "6-31g*").unwrap();
+    let d = test_density(basis.nbf);
+    let mut engine = MatryoshkaEngine::new(basis, Path::new("unused"), config).unwrap();
+    engine.two_electron(&d).unwrap()
+}
+
+#[test]
+fn gemm_g_matches_scatter_oracle_on_631gstar_systems() {
+    for molecule in ["water", "methane"] {
+        let gemm = build_g(
+            molecule,
+            MatryoshkaConfig { digest: DigestStrategy::Gemm, ..Default::default() },
+        );
+        let scatter = build_g(
+            molecule,
+            MatryoshkaConfig { digest: DigestStrategy::Scatter, ..Default::default() },
+        );
+        let diff = gemm.diff_norm(&scatter);
+        assert!(diff < 1e-10, "{molecule}: ||G_gemm − G_scatter|| = {diff:.3e}");
+    }
+}
+
+#[test]
+fn g_is_bitwise_invariant_within_each_digest_strategy() {
+    for digest in [DigestStrategy::Gemm, DigestStrategy::Scatter] {
+        let base = MatryoshkaConfig { digest, threads: 1, ..Default::default() };
+        let g_ref = build_g("water", base.clone());
+
+        // thread count, batch ladder and pipeline mode only move chunk
+        // boundaries and interleaving — per-quad values and the
+        // schedule-entry digestion order are invariants, so G must be
+        // bit-identical within one digestion strategy
+        let variations: Vec<(&str, MatryoshkaConfig)> = vec![
+            ("3 threads", MatryoshkaConfig { threads: 3, ..base.clone() }),
+            ("fixed ladder", MatryoshkaConfig { ladder: LadderMode::Fixed, ..base.clone() }),
+            (
+                "fixed ladder, 3 threads",
+                MatryoshkaConfig { ladder: LadderMode::Fixed, threads: 3, ..base.clone() },
+            ),
+            (
+                "lockstep pipeline",
+                MatryoshkaConfig { pipeline: PipelineMode::Lockstep, ..base.clone() },
+            ),
+        ];
+        for (what, config) in variations {
+            let g = build_g("water", config);
+            assert_eq!(
+                g_ref.data(),
+                g.data(),
+                "{} / {what}: G diverged bitwise",
+                digest.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn dispatched_g_is_bitwise_identical_per_digest_strategy() {
+    for digest in [DigestStrategy::Gemm, DigestStrategy::Scatter] {
+        let g_ref = build_g("water", MatryoshkaConfig { digest, ..Default::default() });
+        let dispatched = build_g(
+            "water",
+            MatryoshkaConfig {
+                digest,
+                dispatch: DispatchConfig {
+                    mode: DispatchMode::Local(2),
+                    worker_bin: Some(worker_bin()),
+                    ..Default::default()
+                },
+                ..Default::default()
+            },
+        );
+        assert_eq!(
+            g_ref.data(),
+            dispatched.data(),
+            "{}: local:2 G diverged from the in-process build",
+            digest.name()
+        );
+    }
+}
+
+#[test]
+fn gemm_scf_energy_matches_scatter_on_631gstar_systems() {
+    for (molecule, literature) in [("water", -76.01), ("methane", -40.19)] {
+        let mol = library::by_name(molecule).unwrap();
+        let basis = build_basis(&mol, "6-31g*").unwrap();
+        let opts = ScfOptions::default();
+
+        let run = |digest: DigestStrategy| {
+            let config = MatryoshkaConfig { digest, ..Default::default() };
+            let mut engine =
+                MatryoshkaEngine::new(basis.clone(), Path::new("unused"), config).unwrap();
+            run_rhf(&mol, &basis, &mut engine, &opts).unwrap()
+        };
+        let gemm = run(DigestStrategy::Gemm);
+        let scatter = run(DigestStrategy::Scatter);
+        assert!(gemm.converged && scatter.converged);
+        assert!(
+            (gemm.energy - scatter.energy).abs() < 1e-9,
+            "{molecule}: gemm {} vs scatter {}",
+            gemm.energy,
+            scatter.energy
+        );
+        assert!(
+            (gemm.energy - literature).abs() < 0.01,
+            "{molecule}/6-31g* E = {:.7}",
+            gemm.energy
+        );
+    }
+}
+
+#[test]
+fn gemm_digest_seconds_are_attributed_per_strategy() {
+    let mol = library::by_name("water").unwrap();
+    let basis = build_basis(&mol, "6-31g*").unwrap();
+    let d = test_density(basis.nbf);
+    for digest in [DigestStrategy::Gemm, DigestStrategy::Scatter] {
+        let config = MatryoshkaConfig { digest, ..Default::default() };
+        let mut engine =
+            MatryoshkaEngine::new(basis.clone(), Path::new("unused"), config).unwrap();
+        engine.two_electron(&d).unwrap();
+        let m = &engine.metrics;
+        assert_eq!(
+            m.per_digest.keys().collect::<Vec<_>>(),
+            vec![digest.name()],
+            "digest seconds must be attributed to the strategy that ran"
+        );
+        let attributed: f64 = m.per_digest.values().sum();
+        assert!(attributed > 0.0, "{}: no digest time recorded", digest.name());
+        assert!(
+            (attributed - m.digest_seconds).abs() <= 1e-9 * m.digest_seconds.max(1.0),
+            "{}: per-strategy digest time {attributed} disagrees with the total {}",
+            digest.name(),
+            m.digest_seconds
+        );
+    }
+}

@@ -241,6 +241,8 @@ fn schedule_fingerprint_mismatch_is_rejected_before_any_execution() {
         schwarz: SchwarzMode::Exact,
         backend: BackendKind::Native,
         ladder: LadderMode::Elastic,
+        eri_strategy: Default::default(),
+        digest: Default::default(),
         working_set_bytes: 4 << 20,
         wide_opb_max: 4.0,
         threads: 1,
