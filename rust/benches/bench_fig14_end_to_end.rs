@@ -10,9 +10,11 @@
 
 mod common;
 
+use matryoshka::basis::build_basis;
 use matryoshka::bench_harness as bh;
-use matryoshka::engines::{MatryoshkaConfig, ReferenceEngine};
-use matryoshka::scf::FockEngine;
+use matryoshka::engines::{IncrementalMode, MatryoshkaConfig, ReferenceEngine};
+use matryoshka::molecule::library;
+use matryoshka::scf::{run_rhf, FockEngine, ScfOptions};
 use matryoshka::util::Stopwatch;
 
 fn main() {
@@ -73,4 +75,75 @@ fn main() {
         }
     }
     println!("\n(speedup > 1x against both baselines on every system reproduces Fig. 14's shape)");
+
+    bh::header("Fig. 14b — incremental (ΔD-screened) vs full-rebuild SCF");
+    println!(
+        "{:<18} {:>6} {:>6} {:>18} {:>10} {:>12} {:>12}",
+        "mode", "iters", "conv", "energy_ha", "fock_s", "chunks_tot", "chunks_last"
+    );
+    // Full SCF to convergence, same molecule/basis/tolerances — the only
+    // difference is the incremental flag.  The ΔD-weighted screen shrinks
+    // the executed chunk set as the density settles; the final energies
+    // must agree to the pinning tolerance (1e-9 Ha, the acceptance bar).
+    let mol = library::by_name("water").expect("water");
+    let basis = build_basis(&mol, "6-31g*").expect("6-31g* basis");
+    let mut json_rows: Vec<String> = Vec::new();
+    let mut energies: Vec<f64> = Vec::new();
+    let mut fock_walls: Vec<f64> = Vec::new();
+    for (label, mode) in [
+        ("full-rebuild", IncrementalMode::Off),
+        ("incremental", IncrementalMode::On),
+        ("incremental:8", IncrementalMode::Every(8)),
+    ] {
+        let config = MatryoshkaConfig { incremental: mode, ..Default::default() };
+        let mut eng = common::engine(basis.clone(), config);
+        let sw = Stopwatch::start();
+        let res = run_rhf(&mol, &basis, &mut eng, &ScfOptions::default()).expect("scf");
+        let wall = sw.elapsed_s();
+        let fock_s = eng.metrics.incremental_seconds + eng.metrics.full_seconds;
+        let trace = eng.fock_trace();
+        let chunks_total: u64 = trace.iter().map(|s| s.chunks_executed).sum();
+        let chunks_last = trace.last().map(|s| s.chunks_executed).unwrap_or(0);
+        println!(
+            "{:<18} {:>6} {:>6} {:>18.9} {:>10.3} {:>12} {:>12}",
+            label, res.iterations, res.converged, res.energy, fock_s, chunks_total, chunks_last
+        );
+        json_rows.push(format!(
+            "    {{\"mode\": \"{}\", \"iterations\": {}, \"converged\": {}, \
+             \"energy_ha\": {:.12}, \"scf_wall_s\": {:.6e}, \"fock_wall_s\": {:.6e}, \
+             \"incremental_builds\": {}, \"full_builds\": {}, \
+             \"chunks_total\": {}, \"chunks_last\": {}}}",
+            label,
+            res.iterations,
+            res.converged,
+            res.energy,
+            wall,
+            fock_s,
+            eng.metrics.incremental_builds,
+            eng.metrics.full_builds,
+            chunks_total,
+            chunks_last
+        ));
+        assert!(res.converged, "{label}: SCF did not converge");
+        energies.push(res.energy);
+        fock_walls.push(fock_s);
+    }
+    for e in energies.iter().skip(1) {
+        assert!(
+            (e - energies[0]).abs() <= 1e-9,
+            "incremental energy drifted {:.3e} Ha from the full-rebuild path",
+            (e - energies[0]).abs()
+        );
+    }
+    let json = format!(
+        "{{\n  \"figure\": \"fig14\",\n  \"section\": \"incremental_vs_full_scf\",\n  \
+         \"molecule\": \"water\",\n  \"basis\": \"6-31g*\",\n  \"rows\": [\n{}\n  ]\n}}\n",
+        json_rows.join(",\n")
+    );
+    std::fs::write("BENCH_fig14.json", &json).expect("write BENCH_fig14.json");
+    println!(
+        "\n(energies pinned within 1e-9 Ha of the full-rebuild path; \
+         fock wall {:.3}s full vs {:.3}s incremental — rows in BENCH_fig14.json)",
+        fock_walls[0], fock_walls[1]
+    );
 }

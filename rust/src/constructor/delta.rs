@@ -1,0 +1,225 @@
+//! Density-weighted dynamic re-screening — the Block Constructor re-run
+//! online (incremental Fock builds).
+//!
+//! After the first SCF iteration the engine contracts ERIs against
+//! ΔD = D_k − D_{k−1} instead of D.  A quadruple's contribution to ΔG is
+//! bounded (Häser–Ahlrichs) by
+//!
+//! ```text
+//! |ΔG quad| ≤ √(pq|pq) · √(rs|rs) · max{|ΔD|_rs, |ΔD|_pq,
+//!                                       |ΔD|_pr, |ΔD|_ps, |ΔD|_qr, |ΔD|_qs}
+//! ```
+//!
+//! so as SCF converges (|ΔD| → 0) the bound kills the overwhelming
+//! majority of quadruples.  [`filter_plan_by_delta`] re-runs the Block
+//! Constructor's screening stage against this bound, producing a plan
+//! with the SAME block count, order and classes as the static plan —
+//! merge units partition blocks, so the quad→unit map (and every bit of
+//! the deterministic merge) is preserved — but only surviving quadruples.
+//! Blocks whose every quad dies keep an empty quad list and schedule as
+//! zero work.
+//!
+//! Determinism: the filter is a pure function of (plan, pairs, ΔD,
+//! threshold).  Dispatch workers recompute it from the bit-exact ΔD
+//! shipped in the Build frame and verify the resulting per-iteration
+//! schedule fingerprint before running a single chunk.
+
+use crate::basis::{ncart, BasisSet};
+use crate::linalg::Matrix;
+
+use super::blocks::{BlockPlan, QuadBlock};
+use super::pairs::PairList;
+
+/// The delta bound screens against a threshold this much *tighter* than
+/// the static Schwarz threshold: every incremental build drops bounded
+/// contributions, and the drops accumulate over iterations, so the
+/// per-build cut must sit well below the SCF energy tolerance for the
+/// incremental trajectory's final energy to pin to the full-rebuild path.
+pub const DELTA_SCREEN_TIGHTEN: f64 = 1e-2;
+
+/// The screening threshold incremental builds use, derived from the
+/// engine's static Schwarz threshold.  One definition shared by the
+/// coordinator and every dispatch worker — both sides must filter with
+/// bit-identical bounds for the per-iteration fingerprint to verify.
+pub fn delta_threshold(base: f64) -> f64 {
+    base * DELTA_SCREEN_TIGHTEN
+}
+
+/// Per-shell-pair max |ΔD|: an nshell×nshell max-reduction of the
+/// basis-function ΔD over each shell rectangle (O(nbf²) once per
+/// iteration, vs the O(N⁴)-ish quad stream it screens).
+#[derive(Clone, Debug)]
+pub struct ShellDeltaMax {
+    nshell: usize,
+    vals: Vec<f64>,
+    /// max |ΔD| over the whole matrix (the trace/metrics ΔD norm)
+    pub dd_max: f64,
+}
+
+impl ShellDeltaMax {
+    pub fn build(basis: &BasisSet, delta: &Matrix) -> ShellDeltaMax {
+        let nshell = basis.shells.len();
+        let mut vals = vec![0.0; nshell * nshell];
+        let mut dd_max = 0.0f64;
+        for (si, a) in basis.shells.iter().enumerate() {
+            for (sj, b) in basis.shells.iter().enumerate() {
+                let mut m = 0.0f64;
+                for i in a.first_bf..a.first_bf + ncart(a.l) {
+                    for j in b.first_bf..b.first_bf + ncart(b.l) {
+                        m = m.max(delta.at(i, j).abs());
+                    }
+                }
+                vals[si * nshell + sj] = m;
+                dd_max = dd_max.max(m);
+            }
+        }
+        ShellDeltaMax { nshell, vals, dd_max }
+    }
+
+    #[inline]
+    pub fn at(&self, si: usize, sj: usize) -> f64 {
+        self.vals[si * self.nshell + sj]
+    }
+}
+
+/// One filter pass's screening outcome (per-iteration observability).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct DeltaScreenStats {
+    /// quadruples whose bound survived (the incremental build's work)
+    pub surviving: u64,
+    /// quadruples the density-weighted bound killed this iteration
+    pub screened: u64,
+    /// max |ΔD| this filter ran against
+    pub dd_max: f64,
+}
+
+/// The six-center Häser–Ahlrichs density factor for quad (p, q).
+#[inline]
+fn quad_delta_bound(pairs: &PairList, dmax: &ShellDeltaMax, p: usize, q: usize) -> f64 {
+    let bra = &pairs.pairs[p];
+    let ket = &pairs.pairs[q];
+    let (i, j) = (bra.si, bra.sj);
+    let (k, l) = (ket.si, ket.sj);
+    let d = dmax
+        .at(k, l)
+        .max(dmax.at(i, j))
+        .max(dmax.at(i, k))
+        .max(dmax.at(i, l))
+        .max(dmax.at(j, k))
+        .max(dmax.at(j, l));
+    bra.schwarz * ket.schwarz * d
+}
+
+/// Re-run the Block Constructor's screening stage against ΔD: keep every
+/// block (same count, order, classes — the merge-unit partition over
+/// blocks is untouched) but only the quadruples whose density-weighted
+/// bound reaches `threshold` (see [`delta_threshold`]).
+pub fn filter_plan_by_delta(
+    plan: &BlockPlan,
+    pairs: &PairList,
+    dmax: &ShellDeltaMax,
+    threshold: f64,
+) -> (BlockPlan, DeltaScreenStats) {
+    let mut stats = DeltaScreenStats { dd_max: dmax.dd_max, ..Default::default() };
+    let mut filtered =
+        BlockPlan { blocks: Vec::with_capacity(plan.blocks.len()), stats: plan.stats };
+    for block in &plan.blocks {
+        let quads: Vec<(u32, u32)> = block
+            .quads
+            .iter()
+            .copied()
+            .filter(|&(p, q)| quad_delta_bound(pairs, dmax, p as usize, q as usize) >= threshold)
+            .collect();
+        stats.surviving += quads.len() as u64;
+        stats.screened += (block.quads.len() - quads.len()) as u64;
+        filtered.blocks.push(QuadBlock { class: block.class, quads });
+    }
+    filtered.stats.quadruples_surviving = stats.surviving;
+    filtered.stats.quadruples_screened = plan.stats.quadruples_screened + stats.screened;
+    (filtered, stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::basis::build_basis;
+    use crate::molecule::library;
+
+    fn fixture() -> (BasisSet, PairList, BlockPlan) {
+        let mol = library::by_name("water").unwrap();
+        let basis = build_basis(&mol, "sto-3g").unwrap();
+        let pairs = PairList::build(&basis, 1e-10);
+        let plan = BlockPlan::build(&pairs, 1e-10, 32, true);
+        (basis, pairs, plan)
+    }
+
+    fn dense_delta(n: usize, scale: f64) -> Matrix {
+        let mut d = Matrix::zeros(n, n);
+        for i in 0..n {
+            for j in 0..n {
+                *d.at_mut(i, j) = scale / (1.0 + (i as f64 - j as f64).abs());
+            }
+        }
+        d
+    }
+
+    #[test]
+    fn large_delta_keeps_every_quad_and_block_shape() {
+        let (basis, pairs, plan) = fixture();
+        let dmax = ShellDeltaMax::build(&basis, &dense_delta(basis.nbf, 1.0));
+        let (filtered, stats) = filter_plan_by_delta(&plan, &pairs, &dmax, delta_threshold(1e-10));
+        assert_eq!(filtered.blocks.len(), plan.blocks.len());
+        for (f, p) in filtered.blocks.iter().zip(&plan.blocks) {
+            assert_eq!(f.class, p.class);
+            assert_eq!(f.quads, p.quads, "O(1) delta must keep every surviving quad");
+        }
+        assert_eq!(stats.screened, 0);
+        assert_eq!(stats.surviving, plan.stats.quadruples_surviving);
+    }
+
+    #[test]
+    fn zero_delta_screens_everything_but_keeps_blocks() {
+        let (basis, pairs, plan) = fixture();
+        let dmax = ShellDeltaMax::build(&basis, &Matrix::zeros(basis.nbf, basis.nbf));
+        assert_eq!(dmax.dd_max, 0.0);
+        let (filtered, stats) = filter_plan_by_delta(&plan, &pairs, &dmax, delta_threshold(1e-10));
+        // same block skeleton (merge-unit partition preserved), zero work
+        assert_eq!(filtered.blocks.len(), plan.blocks.len());
+        assert!(filtered.blocks.iter().all(|b| b.quads.is_empty()));
+        assert_eq!(stats.surviving, 0);
+        assert_eq!(stats.screened, plan.stats.quadruples_surviving);
+    }
+
+    #[test]
+    fn tiny_delta_screens_a_strict_subset_monotonically() {
+        let (basis, pairs, plan) = fixture();
+        let big = ShellDeltaMax::build(&basis, &dense_delta(basis.nbf, 1e-4));
+        let small = ShellDeltaMax::build(&basis, &dense_delta(basis.nbf, 1e-9));
+        let thr = delta_threshold(1e-10);
+        let (_, s_big) = filter_plan_by_delta(&plan, &pairs, &big, thr);
+        let (_, s_small) = filter_plan_by_delta(&plan, &pairs, &small, thr);
+        assert!(s_small.surviving < s_big.surviving, "{s_small:?} vs {s_big:?}");
+        // every surviving quad under the smaller delta also survives the big one
+        let (f_big, _) = filter_plan_by_delta(&plan, &pairs, &big, thr);
+        let (f_small, _) = filter_plan_by_delta(&plan, &pairs, &small, thr);
+        for (b, s) in f_big.blocks.iter().zip(&f_small.blocks) {
+            for q in &s.quads {
+                assert!(b.quads.contains(q), "quad {q:?} survived small ΔD but not large");
+            }
+        }
+    }
+
+    #[test]
+    fn shell_delta_max_reduces_rectangles() {
+        let (basis, _, _) = fixture();
+        let n = basis.nbf;
+        let mut delta = Matrix::zeros(n, n);
+        *delta.at_mut(0, n - 1) = -3.5;
+        let dmax = ShellDeltaMax::build(&basis, &delta);
+        assert_eq!(dmax.dd_max, 3.5);
+        let s_first = 0;
+        let s_last = basis.shells.len() - 1;
+        assert_eq!(dmax.at(s_first, s_last), 3.5);
+        assert_eq!(dmax.at(s_last, s_first), 0.0, "reduction is per-oriented rectangle");
+    }
+}

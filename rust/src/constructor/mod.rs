@@ -7,10 +7,14 @@
 //! executes and the Workload Allocator schedules.
 
 mod blocks;
+mod delta;
 mod pairs;
 mod schwarz;
 
 pub use blocks::{BlockPlan, QuadBlock, BlockStats};
+pub use delta::{
+    delta_threshold, filter_plan_by_delta, DeltaScreenStats, ShellDeltaMax, DELTA_SCREEN_TIGHTEN,
+};
 pub use pairs::{PairClass, PairList, ShellPair, KPAIR};
 pub use schwarz::{
     schwarz_bound, schwarz_calibration_fingerprint, schwarz_calibration_from_path,

@@ -271,11 +271,16 @@ impl Dispatcher {
     /// Execute one Fock build across the workers and return every unit's
     /// shard, sorted by unit id (the caller folds them through
     /// [`crate::fock::merge_unit_shards`]).
+    ///
+    /// With `delta_screen` the density frame carries ΔD and every worker
+    /// re-runs the density-weighted screen to materialize the same
+    /// per-iteration schedule the coordinator fingerprinted.
     pub fn run_build(
         &mut self,
         schedule: &ChunkSchedule,
         snapshot: &BTreeMap<ClassKey, usize>,
         density: &Matrix,
+        delta_screen: bool,
     ) -> anyhow::Result<Vec<UnitShard>> {
         self.iter += 1;
         let iter = self.iter;
@@ -283,6 +288,7 @@ impl Dispatcher {
         let build = Msg::Build {
             iter,
             fingerprint,
+            delta_screen,
             snapshot: snapshot.clone(),
             density: density.clone(),
         };

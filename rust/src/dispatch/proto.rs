@@ -16,7 +16,10 @@
 //! d→w  Setup{JobSpec}              basis + engine config, verbatim floats
 //! w→d  SetupAck{nbf,npairs,nblocks}  sanity echo of the rebuilt system
 //! per Fock build:
-//! d→w  Build{iter, fingerprint, tuner snapshot, density}
+//! d→w  Build{iter, fingerprint, delta_screen, tuner snapshot, density}
+//!      (delta_screen: density is ΔD — re-run the density-weighted
+//!       screen and materialize the per-iteration schedule from the
+//!       surviving chunk subset before fingerprint comparison)
 //! w→d  BuildAck{iter, fingerprint}   worker's own schedule digest
 //! d→w  Run{iter, unit ids}           work-stealing batches
 //! w→d  Shard{iter, unit, partial G, observations, metrics}   per unit
@@ -38,7 +41,7 @@ use crate::runtime::{BackendKind, ClassKey, EriEvalStrategy, LadderMode};
 
 /// Bumped whenever the frame layout changes; `Hello` carries it so a
 /// version-skewed worker fails loudly at connect time.
-pub const PROTO_VERSION: u32 = 3;
+pub const PROTO_VERSION: u32 = 4;
 
 /// Upper bound on a single frame (density and partial-G frames are
 /// nbf²×8 bytes — 256 MiB covers nbf up to ~5700 with header room to
@@ -91,7 +94,15 @@ pub enum Msg {
     Hello { version: u32 },
     Setup { spec: Box<JobSpec> },
     SetupAck { nbf: usize, npairs: usize, nblocks: usize },
-    Build { iter: u64, fingerprint: u64, snapshot: BTreeMap<ClassKey, usize>, density: Matrix },
+    Build {
+        iter: u64,
+        fingerprint: u64,
+        /// when set, `density` carries ΔD and the worker must re-run the
+        /// density-weighted screen before materializing its schedule
+        delta_screen: bool,
+        snapshot: BTreeMap<ClassKey, usize>,
+        density: Matrix,
+    },
     BuildAck { iter: u64, fingerprint: u64 },
     Run { iter: u64, units: Vec<usize> },
     Shard { iter: u64, shard: Box<UnitShard> },
@@ -193,6 +204,10 @@ impl Enc {
         self.f64(m.gather_seconds);
         self.f64(m.prefetch_gather_seconds);
         self.f64(m.pipeline_wall_seconds);
+        self.u64(m.incremental_builds);
+        self.u64(m.full_builds);
+        self.f64(m.incremental_seconds);
+        self.f64(m.full_seconds);
     }
     fn observation(&mut self, ob: &TunerObservation) {
         self.class(ob.class);
@@ -376,6 +391,10 @@ impl<'a> Dec<'a> {
         m.gather_seconds = self.f64()?;
         m.prefetch_gather_seconds = self.f64()?;
         m.pipeline_wall_seconds = self.f64()?;
+        m.incremental_builds = self.u64()?;
+        m.full_builds = self.u64()?;
+        m.incremental_seconds = self.f64()?;
+        m.full_seconds = self.f64()?;
         Ok(m)
     }
     fn observation(&mut self) -> anyhow::Result<TunerObservation> {
@@ -455,10 +474,11 @@ impl Msg {
                 e.usize(*npairs);
                 e.usize(*nblocks);
             }
-            Msg::Build { iter, fingerprint, snapshot, density } => {
+            Msg::Build { iter, fingerprint, delta_screen, snapshot, density } => {
                 e.u8(TAG_BUILD);
                 e.u64(*iter);
                 e.u64(*fingerprint);
+                e.bool(*delta_screen);
                 e.usize(snapshot.len());
                 for (class, batch) in snapshot {
                     e.class(*class);
@@ -516,6 +536,7 @@ impl Msg {
             TAG_BUILD => {
                 let iter = d.u64()?;
                 let fingerprint = d.u64()?;
+                let delta_screen = d.bool()?;
                 let n = d.count(4 + 8)?;
                 let mut snapshot = BTreeMap::new();
                 for _ in 0..n {
@@ -523,7 +544,7 @@ impl Msg {
                     let batch = d.usize()?;
                     snapshot.insert(class, batch);
                 }
-                Msg::Build { iter, fingerprint, snapshot, density: d.matrix()? }
+                Msg::Build { iter, fingerprint, delta_screen, snapshot, density: d.matrix()? }
             }
             TAG_BUILD_ACK => Msg::BuildAck { iter: d.u64()?, fingerprint: d.u64()? },
             TAG_RUN => {
@@ -681,6 +702,10 @@ mod tests {
         metrics.record_digest("scatter", 2.0 / 3.0);
         metrics.gather_seconds = 0.3;
         metrics.pipeline_wall_seconds = f64::from_bits(0x3FB9_9999_9999_999A);
+        metrics.incremental_builds = 5;
+        metrics.full_builds = 2;
+        metrics.incremental_seconds = 0.1 + 0.2; // inexact sum
+        metrics.full_seconds = 2.0 / 3.0;
 
         let mut g = Matrix::zeros(2, 2);
         *g.at_mut(0, 0) = -0.0; // signed zero must survive
@@ -703,7 +728,13 @@ mod tests {
             Msg::Hello { version: PROTO_VERSION },
             Msg::Setup { spec: Box::new(sample_spec()) },
             Msg::SetupAck { nbf: 7, npairs: 28, nblocks: 12 },
-            Msg::Build { iter: 3, fingerprint: 0xdead_beef_cafe_f00d, snapshot, density },
+            Msg::Build {
+                iter: 3,
+                fingerprint: 0xdead_beef_cafe_f00d,
+                delta_screen: true,
+                snapshot,
+                density,
+            },
             Msg::BuildAck { iter: 3, fingerprint: 1 },
             Msg::Run { iter: 3, units: vec![0, 5, 63] },
             Msg::Shard { iter: 3, shard: Box::new(shard) },
@@ -772,6 +803,7 @@ mod tests {
             &Msg::Build {
                 iter: 1,
                 fingerprint: 2,
+                delta_screen: false,
                 snapshot: BTreeMap::new(),
                 density: Matrix::zeros(4, 4),
             },

@@ -16,7 +16,10 @@ use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::path::Path;
 
 use crate::basis::BasisSet;
-use crate::constructor::{schwarz_calibration_from_path, BlockPlan, PairList};
+use crate::constructor::{
+    delta_threshold, filter_plan_by_delta, schwarz_calibration_from_path, BlockPlan, PairList,
+    ShellDeltaMax,
+};
 use crate::fock::DigestStrategy;
 use crate::linalg::Matrix;
 use crate::pipeline::{
@@ -75,6 +78,9 @@ struct WorkerState {
     policy: SchedulePolicy,
     pipeline: PipelineMode,
     digest: DigestStrategy,
+    /// base screening threshold — ΔD-screened builds tighten it via
+    /// [`delta_threshold`], identically to the coordinator
+    threshold: f64,
 }
 
 impl WorkerState {
@@ -129,6 +135,7 @@ impl WorkerState {
             },
             pipeline: spec.pipeline,
             digest: spec.digest,
+            threshold: spec.threshold,
         })
     }
 }
@@ -179,13 +186,42 @@ pub fn serve<R: Read, W: Write>(r: &mut R, w: &mut W, opts: &WorkerOptions) -> a
         },
     )?;
 
-    let mut current: Option<(u64, ChunkSchedule, Matrix)> = None;
+    // per-build state: (iter, schedule, density, ΔD-filtered plan) — the
+    // filtered plan is None for full builds (units index state.plan)
+    let mut current: Option<(u64, ChunkSchedule, Matrix, Option<BlockPlan>)> = None;
     let mut shards_sent = 0usize;
     loop {
         match read_msg(r)? {
-            Msg::Build { iter, fingerprint, snapshot, density } => {
+            Msg::Build { iter, fingerprint, delta_screen, snapshot, density } => {
+                if density.nrows() != state.basis.nbf || density.ncols() != state.basis.nbf {
+                    return fail(
+                        w,
+                        format!(
+                            "density is {}x{} but the basis has {} functions",
+                            density.nrows(),
+                            density.ncols(),
+                            state.basis.nbf
+                        ),
+                    );
+                }
+                // ΔD-screened builds re-run the density-weighted screen
+                // over the bit-exact ΔD the coordinator shipped — a pure
+                // function of (plan, pairs, ΔD, threshold), so the
+                // schedule fingerprint below proves agreement
+                let filtered = if delta_screen {
+                    let dmax = ShellDeltaMax::build(&state.basis, &density);
+                    let (plan, _) = filter_plan_by_delta(
+                        &state.plan,
+                        &state.pairs,
+                        &dmax,
+                        delta_threshold(state.threshold),
+                    );
+                    Some(plan)
+                } else {
+                    None
+                };
                 let schedule = match ChunkSchedule::build(
-                    &state.plan,
+                    filtered.as_ref().unwrap_or(&state.plan),
                     state.backend.manifest(),
                     &snapshot,
                     &state.policy,
@@ -207,22 +243,11 @@ pub fn serve<R: Read, W: Write>(r: &mut R, w: &mut W, opts: &WorkerOptions) -> a
                         ),
                     );
                 }
-                if density.nrows() != state.basis.nbf || density.ncols() != state.basis.nbf {
-                    return fail(
-                        w,
-                        format!(
-                            "density is {}x{} but the basis has {} functions",
-                            density.nrows(),
-                            density.ncols(),
-                            state.basis.nbf
-                        ),
-                    );
-                }
-                current = Some((iter, schedule, density));
+                current = Some((iter, schedule, density, filtered));
                 write_msg(w, &Msg::BuildAck { iter, fingerprint: mine })?;
             }
             Msg::Run { iter, units } => {
-                let Some((cur, schedule, density)) = current.as_ref() else {
+                let Some((cur, schedule, density, filtered)) = current.as_ref() else {
                     return fail(w, "worker got Run before any Build".to_string());
                 };
                 if *cur != iter {
@@ -237,7 +262,7 @@ pub fn serve<R: Read, W: Write>(r: &mut R, w: &mut W, opts: &WorkerOptions) -> a
                 let ctx = ExecContext {
                     basis: &state.basis,
                     pairs: &state.pairs,
-                    plan: &state.plan,
+                    plan: filtered.as_ref().unwrap_or(&state.plan),
                     backend: state.backend.as_ref(),
                     schedule,
                     mode: state.pipeline,

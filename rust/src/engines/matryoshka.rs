@@ -30,7 +30,10 @@ use std::path::{Path, PathBuf};
 
 use crate::allocator::{AutoTuner, DEFAULT_WORKING_SET_BYTES};
 use crate::basis::BasisSet;
-use crate::constructor::{schwarz_calibration_from_path, BlockPlan, PairList, SchwarzMode};
+use crate::constructor::{
+    delta_threshold, filter_plan_by_delta, schwarz_calibration_from_path, BlockPlan,
+    DeltaScreenStats, PairList, SchwarzMode, ShellDeltaMax,
+};
 use crate::dispatch::{DispatchConfig, DispatchMode, Dispatcher, JobSpec};
 use crate::fock::{merge_partials, merge_unit_shards, DigestStrategy};
 use crate::linalg::Matrix;
@@ -42,11 +45,67 @@ use crate::pipeline::{
 use crate::runtime::{
     create_backend, BackendKind, ClassKey, EriBackend, EriEvalStrategy, LadderMode,
 };
-use crate::scf::FockEngine;
+use crate::scf::{FockBuildStats, FockEngine};
 use crate::util::Stopwatch;
 
 /// Default stored-mode cache budget (~1 GiB of contracted values).
 pub const DEFAULT_STORED_BUDGET_BYTES: usize = 1 << 30;
+
+/// Incremental-Fock mode (`--incremental off|on|every:N`).
+///
+/// After iteration 1 an incremental build contracts ERIs against
+/// ΔD = D_k − D_{k−1} over the ΔD-surviving chunk subset (the Block
+/// Constructor's screen re-run online) and accumulates G_k = G_{k−1} + ΔG.
+/// `Every(N)` additionally runs a full rebuild every N-th Fock build to
+/// bound float drift; the SCF driver's drift guard
+/// (`FockEngine::request_full_rebuild`) forces one in either mode.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum IncrementalMode {
+    /// every build runs the full schedule (the historical behavior)
+    Off,
+    /// pure delta builds after the first (drift-guard rebuilds only)
+    On,
+    /// delta builds with a full rebuild every N-th Fock build
+    Every(usize),
+}
+
+impl IncrementalMode {
+    pub fn parse(s: &str) -> anyhow::Result<IncrementalMode> {
+        match s {
+            "off" => Ok(IncrementalMode::Off),
+            "on" => Ok(IncrementalMode::On),
+            other => match other.strip_prefix("every:") {
+                Some(n) => {
+                    let n: usize = n
+                        .parse()
+                        .map_err(|e| anyhow::anyhow!("--incremental every:N: {e}"))?;
+                    if n < 2 {
+                        anyhow::bail!(
+                            "--incremental every:N needs N >= 2 \
+                             (every build full-rebuilding is just `off`)"
+                        );
+                    }
+                    Ok(IncrementalMode::Every(n))
+                }
+                None => anyhow::bail!(
+                    "--incremental: unknown mode `{other}` (available: off, on, every:N)"
+                ),
+            },
+        }
+    }
+
+    pub fn is_on(&self) -> bool {
+        !matches!(self, IncrementalMode::Off)
+    }
+
+    pub fn describe(&self) -> String {
+        match self {
+            IncrementalMode::Off => "off".into(),
+            IncrementalMode::On => "on".into(),
+            IncrementalMode::Every(n) => format!("every:{n}"),
+        }
+    }
+}
 
 #[derive(Clone, Debug)]
 pub struct MatryoshkaConfig {
@@ -108,6 +167,10 @@ pub struct MatryoshkaConfig {
     /// when fresh (skipping the once-per-process calibration), write it
     /// after calibrating otherwise
     pub schwarz_cal_path: Option<String>,
+    /// incremental Fock builds: after iteration 1 contract ΔD over the
+    /// density-weighted surviving chunk subset and accumulate onto the
+    /// previous G (`--incremental off|on|every:N`)
+    pub incremental: IncrementalMode,
 }
 
 impl Default for MatryoshkaConfig {
@@ -132,6 +195,7 @@ impl Default for MatryoshkaConfig {
             pipeline: PipelineMode::Staged,
             dispatch: DispatchConfig::default(),
             schwarz_cal_path: None,
+            incremental: IncrementalMode::Off,
         }
     }
 }
@@ -182,6 +246,19 @@ pub struct MatryoshkaEngine {
     /// lazily-launched multi-process dispatcher (`config.dispatch`);
     /// workers persist across SCF iterations and shut down on engine drop
     dispatcher: Option<Dispatcher>,
+    /// incremental-Fock carry-over: the previous iteration's density and
+    /// (symmetrized) G — ΔD/ΔG accumulate against these
+    prev_density: Option<Matrix>,
+    prev_g: Option<Matrix>,
+    /// Fock builds since the last full rebuild (the `every:N` cadence)
+    builds_since_full: usize,
+    /// drift guard latch: the SCF driver requested a full rebuild
+    force_full_rebuild: bool,
+    /// per-build stats in build order (the convergence-trace raw data)
+    fock_trace: Vec<FockBuildStats>,
+    /// the last incremental build's re-materialized schedule + screen
+    /// outcome (`report schedule --iteration` reads this)
+    last_delta: Option<(ChunkSchedule, DeltaScreenStats)>,
 }
 
 impl MatryoshkaEngine {
@@ -213,6 +290,14 @@ impl MatryoshkaEngine {
                 "--stored with --dispatch is not supported yet: the contracted-value cache \
                  would have to stay coherent across worker processes (run stored builds \
                  in-process, or dispatch direct-mode builds)"
+            );
+        }
+        if config.incremental.is_on() && config.stored {
+            anyhow::bail!(
+                "--stored with --incremental is not supported: stored mode freezes one \
+                 schedule (its cache keys) for the whole SCF, while incremental builds \
+                 re-materialize the schedule from the ΔD-surviving chunk subset every \
+                 iteration (run incremental builds direct-mode)"
             );
         }
         if let Some(path) = &config.schwarz_cal_path {
@@ -291,6 +376,12 @@ impl MatryoshkaEngine {
             threads,
             artifact_dir: PathBuf::from("artifacts"),
             dispatcher: None,
+            prev_density: None,
+            prev_g: None,
+            builds_since_full: 0,
+            force_full_rebuild: false,
+            fock_trace: Vec::new(),
+            last_delta: None,
         })
     }
 
@@ -346,8 +437,16 @@ impl MatryoshkaEngine {
     /// Materialize this iteration's work from the frozen tuner snapshot —
     /// the first-class, inspectable value the executors run.
     pub fn build_schedule(&self) -> anyhow::Result<ChunkSchedule> {
+        self.build_schedule_for(&self.plan)
+    }
+
+    /// Schedule build over an explicit plan — incremental builds pass the
+    /// ΔD-filtered plan (same blocks, surviving quads only), so the
+    /// schedule — and its fingerprint — covers exactly the iteration's
+    /// chunk subset.
+    fn build_schedule_for(&self, plan: &BlockPlan) -> anyhow::Result<ChunkSchedule> {
         ChunkSchedule::build(
-            &self.plan,
+            plan,
             self.backend.manifest(),
             &self.tuner.batch_snapshot(),
             &self.schedule_policy(),
@@ -359,9 +458,12 @@ impl MatryoshkaEngine {
     /// Shard the schedule's merge units over the worker pool, run them
     /// through `pipeline::run_unit_stream` (staged workers prefetch across
     /// their own unit boundaries), fold the results deterministically.
+    /// `plan` = None runs the static plan; incremental builds pass the
+    /// ΔD-filtered plan their schedule was materialized from.
     /// Returns the (unsymmetrized) G plus any cache chunks collected.
     fn run_schedule(
         &mut self,
+        plan: Option<&BlockPlan>,
         schedule: &ChunkSchedule,
         density: &Matrix,
         cache: Option<&[Option<CachedChunk>]>,
@@ -375,7 +477,7 @@ impl MatryoshkaEngine {
         let ctx = ExecContext {
             basis: &self.basis,
             pairs: &self.pairs,
-            plan: &self.plan,
+            plan: plan.unwrap_or(&self.plan),
             backend: self.backend.as_ref(),
             schedule,
             mode: self.config.pipeline,
@@ -439,12 +541,19 @@ impl MatryoshkaEngine {
         }
     }
 
-    /// Dispatched Fock build: ship the schedule slice-by-slice to worker
-    /// processes and fold their partial-G shards through the same fixed
-    /// merge tree the in-process path uses — bitwise identical G by
-    /// construction (workers verify the schedule fingerprint first).
-    fn build_dispatched(&mut self, density: &Matrix) -> anyhow::Result<Matrix> {
-        let schedule = self.build_schedule()?;
+    /// Dispatched Fock build over an already-materialized schedule: ship
+    /// it slice-by-slice to worker processes and fold their partial-G
+    /// shards through the same fixed merge tree the in-process path uses —
+    /// bitwise identical G by construction (workers verify the schedule
+    /// fingerprint first).  With `delta_screen`, `density` is ΔD and
+    /// workers re-run the density-weighted filter themselves to rebuild —
+    /// and verify — the per-iteration schedule.
+    fn run_dispatched(
+        &mut self,
+        schedule: &ChunkSchedule,
+        density: &Matrix,
+        delta_screen: bool,
+    ) -> anyhow::Result<Matrix> {
         let n = self.basis.nbf;
         if schedule.units.is_empty() {
             return Ok(Matrix::zeros(n, n));
@@ -458,7 +567,7 @@ impl MatryoshkaEngine {
         }
         let snapshot = self.tuner.batch_snapshot();
         let dispatcher = self.dispatcher.as_mut().expect("dispatcher launched above");
-        let shards = dispatcher.run_build(&schedule, &snapshot, density)?;
+        let shards = dispatcher.run_build(schedule, &snapshot, density, delta_screen)?;
         let g = merge_unit_shards(n, schedule.units.len(), shards.iter().map(|s| (s.unit, &s.g)))?;
         let mut observations = Vec::new();
         for shard in &shards {
@@ -493,9 +602,9 @@ impl MatryoshkaEngine {
         let cache = std::mem::take(&mut self.cache);
         let first_build = !self.cache_built;
         let result = if first_build {
-            self.run_schedule(&schedule, density, None, true)
+            self.run_schedule(None, &schedule, density, None, true)
         } else {
-            self.run_schedule(&schedule, density, Some(cache.as_slice()), false)
+            self.run_schedule(None, &schedule, density, Some(cache.as_slice()), false)
         };
         match result {
             Ok((g, collected)) => {
@@ -519,6 +628,106 @@ impl MatryoshkaEngine {
                 Err(e)
             }
         }
+    }
+
+    /// Does the next Fock build run incrementally?  Needs incremental mode
+    /// on, carry-over state from a previous build, no drift-guard latch,
+    /// and the `every:N` cadence not due for a full rebuild.
+    fn next_build_is_incremental(&self) -> bool {
+        self.config.incremental.is_on()
+            && self.prev_density.is_some()
+            && self.prev_g.is_some()
+            && !self.force_full_rebuild
+            && match self.config.incremental {
+                IncrementalMode::Every(n) => self.builds_since_full + 1 < n,
+                _ => true,
+            }
+    }
+
+    /// Full-schedule Fock build (dispatch → stored → direct), symmetrized.
+    fn build_full(&mut self, density: &Matrix) -> anyhow::Result<(Matrix, FockBuildStats)> {
+        let mut g = if self.config.dispatch.mode.is_on() {
+            let schedule = self.build_schedule()?;
+            self.run_dispatched(&schedule, density, false)?
+        } else if self.config.stored {
+            self.build_stored(density)?
+        } else {
+            let schedule = self.build_schedule()?;
+            self.run_schedule(None, &schedule, density, None, false)?.0
+        };
+        g.symmetrize();
+        self.builds_since_full = 0;
+        self.force_full_rebuild = false;
+        let stats = FockBuildStats {
+            incremental: false,
+            chunks_executed: self.plan.stats.quadruples_surviving,
+            chunks_screened: 0,
+            dd_max: 0.0,
+            wall_seconds: 0.0,
+        };
+        Ok((g, stats))
+    }
+
+    /// Incremental Fock build: ΔD = D − D_prev, the Block Constructor's
+    /// screen re-run online against the density-weighted bound, the
+    /// schedule re-materialized over the surviving chunk subset, and
+    /// G = G_prev + symmetrize(ΔG).  symmetrize is linear and G_prev is
+    /// stored symmetrized, so the accumulation is exact — the only
+    /// approximation is the (threshold-bounded) screen itself.
+    fn build_incremental(&mut self, density: &Matrix) -> anyhow::Result<(Matrix, FockBuildStats)> {
+        let n = self.basis.nbf;
+        let prev_d = self.prev_density.as_ref().expect("incremental carry-over checked");
+        let mut delta = density.clone();
+        delta.add_scaled(prev_d, -1.0);
+        let dmax = ShellDeltaMax::build(&self.basis, &delta);
+        let threshold = delta_threshold(self.config.threshold);
+        let (filtered, stats) = filter_plan_by_delta(&self.plan, &self.pairs, &dmax, threshold);
+        let schedule = self.build_schedule_for(&filtered)?;
+        let mut dg = if stats.surviving == 0 {
+            // every contribution bounded out — ΔG is exactly zero
+            Matrix::zeros(n, n)
+        } else if self.config.dispatch.mode.is_on() {
+            self.run_dispatched(&schedule, &delta, true)?
+        } else {
+            self.run_schedule(Some(&filtered), &schedule, &delta, None, false)?.0
+        };
+        dg.symmetrize();
+        self.last_delta = Some((schedule, stats));
+        let mut g = self.prev_g.clone().expect("incremental carry-over checked");
+        g.add_scaled(&dg, 1.0);
+        self.builds_since_full += 1;
+        let stats = FockBuildStats {
+            incremental: true,
+            chunks_executed: stats.surviving,
+            chunks_screened: stats.screened,
+            dd_max: stats.dd_max,
+            wall_seconds: 0.0,
+        };
+        Ok((g, stats))
+    }
+
+    /// Per-build stats in build order (incremental observability — the
+    /// trace CSV and the convergence tests read this).
+    pub fn fock_trace(&self) -> &[FockBuildStats] {
+        &self.fock_trace
+    }
+
+    /// Summary of the last incremental build's re-materialized schedule
+    /// (None until one ran): the surviving-chunk merge units plus the
+    /// density-weighted screen outcome.
+    pub fn incremental_schedule_summary(&self, title: &str) -> Option<String> {
+        self.last_delta.as_ref().map(|(schedule, stats)| {
+            let mut text = schedule.summary(title);
+            let total = (stats.surviving + stats.screened).max(1);
+            text.push_str(&format!(
+                "\ndelta screen: max |dD| {:.3e}, {} quads surviving, {} screened ({:.1}%)\n",
+                stats.dd_max,
+                stats.surviving,
+                stats.screened,
+                100.0 * stats.screened as f64 / total as f64
+            ));
+            text
+        })
     }
 
     /// Build G over a subset of blocks (weak-scaling shards, Fig. 13) —
@@ -567,16 +776,26 @@ impl FockEngine for MatryoshkaEngine {
 
     fn two_electron(&mut self, density: &Matrix) -> anyhow::Result<Matrix> {
         let sw = Stopwatch::start();
-        let mut g = if self.config.dispatch.mode.is_on() {
-            self.build_dispatched(density)?
-        } else if self.config.stored {
-            self.build_stored(density)?
+        let (g, stats) = if self.next_build_is_incremental() {
+            self.build_incremental(density)?
         } else {
-            let schedule = self.build_schedule()?;
-            self.run_schedule(&schedule, density, None, false)?.0
+            self.build_full(density)?
         };
-        g.symmetrize();
-        self.eri_seconds += sw.elapsed_s();
+        if self.config.incremental.is_on() {
+            // carry-over for the next build's ΔD/ΔG accumulation
+            self.prev_density = Some(density.clone());
+            self.prev_g = Some(g.clone());
+        }
+        let wall = sw.elapsed_s();
+        self.eri_seconds += wall;
+        if stats.incremental {
+            self.metrics.incremental_builds += 1;
+            self.metrics.incremental_seconds += wall;
+        } else {
+            self.metrics.full_builds += 1;
+            self.metrics.full_seconds += wall;
+        }
+        self.fock_trace.push(FockBuildStats { wall_seconds: wall, ..stats });
         Ok(g)
     }
 
@@ -586,5 +805,13 @@ impl FockEngine for MatryoshkaEngine {
 
     fn parallelism(&self) -> usize {
         self.threads
+    }
+
+    fn last_build_stats(&self) -> Option<FockBuildStats> {
+        self.fock_trace.last().copied()
+    }
+
+    fn request_full_rebuild(&mut self) {
+        self.force_full_rebuild = true;
     }
 }

@@ -4,5 +4,7 @@
 mod matryoshka;
 mod reference;
 
-pub use matryoshka::{MatryoshkaConfig, MatryoshkaEngine, DEFAULT_STORED_BUDGET_BYTES};
+pub use matryoshka::{
+    IncrementalMode, MatryoshkaConfig, MatryoshkaEngine, DEFAULT_STORED_BUDGET_BYTES,
+};
 pub use reference::ReferenceEngine;

@@ -21,7 +21,8 @@ use matryoshka::cli::Args;
 use matryoshka::constructor::{schwarz_calibration_from_path, SchwarzMode};
 use matryoshka::dispatch::{DispatchConfig, DispatchMode};
 use matryoshka::engines::{
-    MatryoshkaConfig, MatryoshkaEngine, ReferenceEngine, DEFAULT_STORED_BUDGET_BYTES,
+    IncrementalMode, MatryoshkaConfig, MatryoshkaEngine, ReferenceEngine,
+    DEFAULT_STORED_BUDGET_BYTES,
 };
 use matryoshka::fock::DigestStrategy;
 use matryoshka::integrals::overlap_matrix;
@@ -47,12 +48,16 @@ fn usage() -> ! {
          \u{20}         [--ladder elastic|fixed] [--working-set-kb N|auto] [--wide-opb-max X]\n\
          \u{20}         [--dispatch off|local:N|remote:host:port,...] [--dispatch-timeout-ms N]\n\
          \u{20}         [--schwarz-cal-path FILE]\n\
+         \u{20}         [--incremental off|on|every:N (delta-Fock builds after iteration 1)]\n\
+         \u{20}         [--diis-size N] [--scf-trace-path FILE (per-iteration CSV)]\n\
          \u{20}         [--threshold T] [--max-iter N] [--tile N] [--fixed-batch N]\n\
          \u{20}         [--no-autotune] [--no-cluster] [--random-path]\n\
          \u{20}         [--schwarz exact|estimate] [--artifacts DIR] [--verbose]\n\
          \u{20}         [--xyz FILE] [--damping A] [--properties]\n\
          \n  report  systems|tab4|fig6|compiler|schedule|dispatch|all [--artifacts DIR]\n\
-         \u{20}         (schedule: [--molecule NAME] [--basis B] — merge-unit work summary)\n\
+         \u{20}         (schedule: [--molecule NAME] [--basis B] [--iteration N] — merge-unit\n\
+         \u{20}          work summary; --iteration N shows the delta-screened schedule the\n\
+         \u{20}          incremental engine re-materialized at SCF iteration N)\n\
          \u{20}         (dispatch: [--molecule NAME] [--basis B] [--dispatch-workers N])\n\
          \n  info    [--backend native|pjrt] [--ladder elastic|fixed] [--artifacts DIR]\n\
          \u{20}         [--eri-strategy kernels|tables|recursion]\n\
@@ -129,6 +134,7 @@ fn engine_config(args: &Args) -> anyhow::Result<MatryoshkaConfig> {
             ..Default::default()
         },
         schwarz_cal_path: args.get("schwarz-cal-path").map(str::to_string),
+        incremental: IncrementalMode::parse(&args.str_or("incremental", "off"))?,
     })
 }
 
@@ -153,8 +159,10 @@ fn cmd_scf(args: &Args) -> anyhow::Result<()> {
     let basis = build_basis(&mol, &basis_name)?;
     let opts = ScfOptions {
         max_iterations: args.usize_or("max-iter", 60)?,
+        diis_size: args.usize_or("diis-size", 8)?,
         damping: args.f64_or("damping", 0.0)?,
         verbose: args.flag("verbose"),
+        trace_path: args.get("scf-trace-path").map(PathBuf::from),
         ..Default::default()
     };
     println!(
@@ -181,14 +189,28 @@ fn cmd_scf(args: &Args) -> anyhow::Result<()> {
             let rs = engine.runtime_stats();
             println!(
                 "engine: backend {} with {} Fock worker(s), {} pipeline, {} ladder, \
-                 {} eri strategy, {} digest",
+                 {} eri strategy, {} digest, diis {}, incremental {}",
                 engine.backend_name(),
                 engine.threads(),
                 engine.config.pipeline.name(),
                 engine.config.ladder.name(),
                 engine.config.eri_strategy.name(),
-                engine.config.digest.name()
+                engine.config.digest.name(),
+                opts.diis_size,
+                engine.config.incremental.describe()
             );
+            if m.incremental_builds > 0 {
+                println!(
+                    "engine: {} incremental build(s) {:.2}s, {} full build(s) {:.2}s \
+                     (mean {:.3}s vs {:.3}s per build)",
+                    m.incremental_builds,
+                    m.incremental_seconds,
+                    m.full_builds,
+                    m.full_seconds,
+                    m.incremental_seconds / m.incremental_builds.max(1) as f64,
+                    m.full_seconds / m.full_builds.max(1) as f64
+                );
+            }
             // phase timers are CPU-seconds summed across Fock workers;
             // with --threads N they can exceed wall time by up to N×
             println!(
@@ -298,11 +320,19 @@ fn cmd_report(args: &Args) -> anyhow::Result<()> {
             "tab4" => report::tab4_counts(args.f64_or("threshold", 1e-10)?)?,
             "fig6" => report::fig6_opb(&dir)?,
             "compiler" => report::compiler_stats(&dir)?,
-            "schedule" => report::schedule_summary(
-                &args.str_or("molecule", "water"),
-                &args.str_or("basis", "sto-3g"),
-                args.f64_or("threshold", 1e-10)?,
-            )?,
+            "schedule" => match args.get("iteration") {
+                Some(_) => report::schedule_summary_at_iteration(
+                    &args.str_or("molecule", "water"),
+                    &args.str_or("basis", "sto-3g"),
+                    args.f64_or("threshold", 1e-10)?,
+                    args.usize_or("iteration", 2)?,
+                )?,
+                None => report::schedule_summary(
+                    &args.str_or("molecule", "water"),
+                    &args.str_or("basis", "sto-3g"),
+                    args.f64_or("threshold", 1e-10)?,
+                )?,
+            },
             // not part of `report all`: it spawns worker subprocesses
             "dispatch" => report::dispatch_table(
                 &args.str_or("molecule", "water"),

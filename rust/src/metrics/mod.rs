@@ -81,6 +81,13 @@ pub struct EngineMetrics {
     /// gather + execute + digest: the difference is the memory-stage time
     /// hidden under execution — see [`EngineMetrics::overlap_hidden_seconds`].
     pub pipeline_wall_seconds: f64,
+    /// Fock builds that ran incrementally (ΔD over the surviving chunk
+    /// subset) vs against the full schedule, with their wall seconds —
+    /// the incremental-vs-full bottom line (`--incremental`)
+    pub incremental_builds: u64,
+    pub full_builds: u64,
+    pub incremental_seconds: f64,
+    pub full_seconds: f64,
 }
 
 impl EngineMetrics {
@@ -175,6 +182,10 @@ impl EngineMetrics {
         self.gather_seconds += other.gather_seconds;
         self.prefetch_gather_seconds += other.prefetch_gather_seconds;
         self.pipeline_wall_seconds += other.pipeline_wall_seconds;
+        self.incremental_builds += other.incremental_builds;
+        self.full_builds += other.full_builds;
+        self.incremental_seconds += other.incremental_seconds;
+        self.full_seconds += other.full_seconds;
     }
 
     /// Fig. 9 per-stage overlap: gather + digest CPU-seconds hidden under

@@ -802,6 +802,60 @@ mod tests {
     }
 
     #[test]
+    fn delta_filtered_schedules_rematerialize_to_the_same_fingerprint() {
+        // the incremental engine's per-iteration contract: two processes
+        // that re-run the density-weighted screen over the same ΔD build
+        // the same filtered plan, the same schedule, the same fingerprint
+        use crate::constructor::{delta_threshold, filter_plan_by_delta, ShellDeltaMax};
+        use crate::linalg::Matrix;
+        let mol = library::by_name("water").unwrap();
+        let basis = build_basis(&mol, "6-31g*").unwrap();
+        let pairs = PairList::build(&basis, 1e-10);
+        let plan = BlockPlan::build(&pairs, 1e-10, 32, true);
+        let manifest = NativeBackend::with_kpair(basis.max_kpair()).manifest().clone();
+        let n = basis.nbf;
+        let mut delta = Matrix::zeros(n, n);
+        for i in 0..n {
+            for j in 0..n {
+                // small, structured ΔD: screens a real subset, not all/none
+                *delta.at_mut(i, j) = 1e-7 / (1.0 + (i as f64 - j as f64).abs()).powi(3);
+            }
+        }
+        let dmax = ShellDeltaMax::build(&basis, &delta);
+        let threshold = delta_threshold(1e-10);
+        let (fa, sa) = filter_plan_by_delta(&plan, &pairs, &dmax, threshold);
+        let (fb, _) = filter_plan_by_delta(&plan, &pairs, &dmax, threshold);
+        assert!(sa.surviving > 0 && sa.screened > 0, "screen must split the quad stream: {sa:?}");
+        let a = ChunkSchedule::build(&fa, &manifest, &BTreeMap::new(), &policy(), &pairs, n).unwrap();
+        let b = ChunkSchedule::build(&fb, &manifest, &BTreeMap::new(), &policy(), &pairs, n).unwrap();
+        assert_eq!(a, b);
+        assert_eq!(a.fingerprint(), b.fingerprint());
+        // the filtered plan keeps the block partition, so the merge-unit
+        // map matches the full schedule's unit-to-block ranges exactly
+        let full =
+            ChunkSchedule::build(&plan, &manifest, &BTreeMap::new(), &policy(), &pairs, n).unwrap();
+        assert_eq!(a.units.len(), full.units.len());
+        assert!(a.total_quads() < full.total_quads());
+        assert_ne!(a.fingerprint(), full.fingerprint(), "the subset must change the digest");
+        // a hand-shrunk chunk subset (drop one more block's quads) moves
+        // the fingerprint deterministically — any chunk-set drift between
+        // coordinator and worker is caught, not silently executed
+        let mut shrunk = fa.clone();
+        let victim = shrunk
+            .blocks
+            .iter()
+            .position(|b| !b.quads.is_empty())
+            .expect("some block survived");
+        shrunk.blocks[victim].quads.clear();
+        let c =
+            ChunkSchedule::build(&shrunk, &manifest, &BTreeMap::new(), &policy(), &pairs, n).unwrap();
+        assert_ne!(a.fingerprint(), c.fingerprint());
+        let c2 =
+            ChunkSchedule::build(&shrunk, &manifest, &BTreeMap::new(), &policy(), &pairs, n).unwrap();
+        assert_eq!(c.fingerprint(), c2.fingerprint());
+    }
+
+    #[test]
     fn summary_lists_every_unit_as_a_wire_line() {
         let (plan, manifest, pairs, nbf) = water_inputs();
         let s = ChunkSchedule::build(&plan, &manifest, &BTreeMap::new(), &policy(), &pairs, nbf).unwrap();

@@ -173,6 +173,48 @@ pub fn schedule_summary(molecule: &str, basis_name: &str, threshold: f64) -> any
     Ok(text)
 }
 
+/// `report schedule --iteration N`: the ΔD-screened schedule the
+/// incremental engine re-materializes at SCF iteration N (1-based; the
+/// guess build is iteration 1 and always runs the full schedule, so N
+/// must be ≥ 2).  Runs an incremental-mode SCF capped at N iterations
+/// and prints the last build's surviving-chunk merge units plus the
+/// density-weighted screen outcome.
+pub fn schedule_summary_at_iteration(
+    molecule: &str,
+    basis_name: &str,
+    threshold: f64,
+    iteration: usize,
+) -> anyhow::Result<String> {
+    if iteration < 2 {
+        anyhow::bail!(
+            "--iteration must be >= 2: iteration 1 is the full-schedule guess build \
+             (use plain `report schedule` for it)"
+        );
+    }
+    let mol = library::by_name(molecule)?;
+    let basis = build_basis(&mol, basis_name)?;
+    let config = MatryoshkaConfig {
+        threshold,
+        schwarz: SchwarzMode::Estimate,
+        incremental: crate::engines::IncrementalMode::On,
+        ..Default::default()
+    };
+    let mut engine = MatryoshkaEngine::new(basis.clone(), Path::new("unused"), config)?;
+    let opts = crate::scf::ScfOptions { max_iterations: iteration, ..Default::default() };
+    crate::scf::run_rhf(&mol, &basis, &mut engine, &opts)?;
+    let ran = engine.fock_trace().len();
+    engine
+        .incremental_schedule_summary(&format!(
+            "{molecule} / {basis_name} (delta-screened schedule, iteration {ran})"
+        ))
+        .ok_or_else(|| {
+            anyhow::anyhow!(
+                "no incremental build ran in {ran} iteration(s) — the SCF may have \
+                 converged on the guess build; try a larger --iteration"
+            )
+        })
+}
+
 /// `report dispatch`: run two dispatched Fock builds over `workers`
 /// local worker processes and print the per-worker attribution table
 /// (units, quads, est. flops, execute/wall seconds, rebalances).
@@ -250,5 +292,16 @@ mod tests {
         assert!(t.contains("digest attribution"), "{t}");
         assert!(t.contains("gemm"), "{t}");
         assert!(schedule_summary("unobtainium", "sto-3g", 1e-10).is_err());
+    }
+
+    #[test]
+    fn schedule_summary_at_iteration_shows_the_delta_screen() {
+        let t = schedule_summary_at_iteration("water", "sto-3g", 1e-10, 3).unwrap();
+        assert!(t.contains("delta-screened schedule"), "{t}");
+        assert!(t.contains("merge units"), "{t}");
+        assert!(t.contains("delta screen: max |dD|"), "{t}");
+        assert!(t.contains("surviving"), "{t}");
+        // iteration 1 is the full guess build — no delta view exists for it
+        assert!(schedule_summary_at_iteration("water", "sto-3g", 1e-10, 1).is_err());
     }
 }

@@ -14,6 +14,23 @@ use crate::util::Stopwatch;
 
 use super::Diis;
 
+/// What one Fock build did — incremental engines report whether the build
+/// ran the full schedule or only the ΔD-surviving chunk subset, and how
+/// much of the quad stream the density-weighted bound killed.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct FockBuildStats {
+    /// this build contracted ΔD and accumulated onto the previous G
+    pub incremental: bool,
+    /// quadruples the build executed
+    pub chunks_executed: u64,
+    /// quadruples the density-weighted re-screen dropped (0 on full builds)
+    pub chunks_screened: u64,
+    /// max |ΔD| the build screened against (0 on full builds)
+    pub dd_max: f64,
+    /// wall-clock seconds of this build
+    pub wall_seconds: f64,
+}
+
 /// The two-electron (G-matrix) builder interface every engine implements.
 pub trait FockEngine {
     fn name(&self) -> &str;
@@ -27,6 +44,15 @@ pub trait FockEngine {
     fn parallelism(&self) -> usize {
         1
     }
+    /// What the most recent `two_electron` call did (None = the engine
+    /// doesn't track builds; reference/ablation engines keep the default).
+    fn last_build_stats(&self) -> Option<FockBuildStats> {
+        None
+    }
+    /// Ask the engine to run its next build against the full schedule —
+    /// the SCF driver's drift guard (e.g. after an energy rise).  No-op
+    /// for engines without incremental state.
+    fn request_full_rebuild(&mut self) {}
 }
 
 #[derive(Clone, Debug)]
@@ -39,6 +65,9 @@ pub struct ScfOptions {
     /// the DIIS error is large; stabilizes small-gap systems. 0 = off.
     pub damping: f64,
     pub verbose: bool,
+    /// write a per-iteration CSV (iteration, energy, DIIS error, ΔD
+    /// max-norm, chunks executed/screened, Fock wall seconds) here
+    pub trace_path: Option<std::path::PathBuf>,
 }
 
 impl Default for ScfOptions {
@@ -51,6 +80,7 @@ impl Default for ScfOptions {
             diis_size: 8,
             damping: 0.0,
             verbose: false,
+            trace_path: None,
         }
     }
 }
@@ -116,16 +146,36 @@ pub fn run_rhf(
     let mut converged = false;
     let mut last = None;
     let mut iterations = 0;
+    let mut prev_density: Option<Matrix> = None;
+    let mut trace_rows: Vec<String> = Vec::new();
 
     for it in 0..opts.max_iterations {
         iterations = it + 1;
+        // ΔD the engine sees this iteration (0 on the guess iteration)
+        let dd_max = prev_density
+            .as_ref()
+            .map(|prev| {
+                let mut delta = density.clone();
+                delta.add_scaled(prev, -1.0);
+                delta.max_abs()
+            })
+            .unwrap_or(0.0);
+        prev_density = Some(density.clone());
+        let fock_sw = Stopwatch::start();
         let g = engine.two_electron(&density)?;
+        let fock_wall = fock_sw.elapsed_s();
         let mut fock = h.clone();
         fock.add_scaled(&g, 1.0);
 
         let e_elec = 0.5 * density.dot(&h) + 0.5 * density.dot(&fock);
         let e_total = e_elec + e_nn;
         energy_trace.push(e_total);
+        // drift guard: an energy rise means the trajectory left the
+        // variational descent — force the next Fock build to re-anchor on
+        // the full schedule (no-op for engines without incremental state)
+        if it > 0 && e_total > e_old {
+            engine.request_full_rebuild();
+        }
 
         // DIIS error in the orthonormal basis: Xᵀ(FDS − SDF)X
         let fds = fock.matmul(&density).matmul(&s);
@@ -134,6 +184,19 @@ pub fn run_rhf(
         err.add_scaled(&fds, 1.0); // FDS − (FDS)ᵀ = FDS − SDF
         let err_on = x.transa_matmul(&err).matmul(&x);
         let f_eff = diis.extrapolate(fock, err_on);
+        if opts.trace_path.is_some() {
+            let stats = engine.last_build_stats().unwrap_or_default();
+            trace_rows.push(format!(
+                "{},{:.12},{:.6e},{:.6e},{},{},{:.6}",
+                it,
+                e_total,
+                diis.last_error_norm(),
+                dd_max,
+                stats.chunks_executed,
+                stats.chunks_screened,
+                fock_wall
+            ));
+        }
 
         let (eigs, d_new) = density_from_fock(&f_eff, &x, nocc);
         let d_rms = d_new.diff_norm(&density) / (basis.nbf as f64);
@@ -163,6 +226,14 @@ pub fn run_rhf(
     }
 
     let (eig, _) = last.ok_or_else(|| anyhow::anyhow!("SCF made no iterations"))?;
+    if let Some(path) = &opts.trace_path {
+        let csv = format!(
+            "iteration,energy_ha,diis_error,dd_max,chunks_executed,chunks_screened,fock_wall_s\n{}\n",
+            trace_rows.join("\n")
+        );
+        std::fs::write(path, csv)
+            .map_err(|e| anyhow::anyhow!("cannot write SCF trace {}: {e}", path.display()))?;
+    }
     let e_elec = e_old - e_nn;
     Ok(ScfResult {
         energy: e_old,

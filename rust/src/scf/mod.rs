@@ -5,5 +5,5 @@ mod driver;
 mod properties;
 
 pub use diis::Diis;
-pub use driver::{run_rhf, FockEngine, ScfOptions, ScfResult};
+pub use driver::{run_rhf, FockBuildStats, FockEngine, ScfOptions, ScfResult};
 pub use properties::{dipole_matrices, dipole_moment, mulliken_charges};

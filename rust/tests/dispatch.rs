@@ -277,6 +277,7 @@ fn schedule_fingerprint_mismatch_is_rejected_before_any_execution() {
         &Msg::Build {
             iter: 1,
             fingerprint: 0xdead_beef,
+            delta_screen: false,
             snapshot: BTreeMap::new(),
             density: Matrix::zeros(nbf, nbf),
         },

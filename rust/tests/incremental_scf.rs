@@ -1,0 +1,374 @@
+//! Incremental-Fock acceptance tests (ISSUE 8).
+//!
+//! The bar: with `--incremental` the engine contracts ΔD = D_k − D_{k−1}
+//! over the ΔD-surviving chunk subset and accumulates G_k = G_{k−1} + ΔG —
+//! the final SCF energy must sit within 1e-9 Ha of the full-rebuild path
+//! (and the literature windows), each iteration's G must be bitwise
+//! invariant across thread counts AND `--dispatch local:2`, the
+//! density-weighted screen must actually shrink the executed chunk set as
+//! the SCF converges, and a worker whose re-screen drifts from the
+//! coordinator's chunk subset must be refused at the fingerprint check.
+
+use std::collections::BTreeMap;
+use std::io::{BufReader, BufWriter};
+use std::net::{TcpListener, TcpStream};
+use std::path::{Path, PathBuf};
+
+use matryoshka::basis::build_basis;
+use matryoshka::constructor::{
+    delta_threshold, filter_plan_by_delta, BlockPlan, PairList, SchwarzMode, ShellDeltaMax,
+};
+use matryoshka::dispatch::proto::{read_msg, write_msg};
+use matryoshka::dispatch::worker::{serve, WorkerOptions};
+use matryoshka::dispatch::{DispatchConfig, DispatchMode, JobSpec, Msg, PROTO_VERSION};
+use matryoshka::engines::{IncrementalMode, MatryoshkaConfig, MatryoshkaEngine};
+use matryoshka::linalg::Matrix;
+use matryoshka::molecule::library;
+use matryoshka::pipeline::{ChunkSchedule, PipelineMode, SchedulePolicy};
+use matryoshka::runtime::{BackendKind, LadderMode, NativeBackend};
+use matryoshka::runtime::EriBackend;
+use matryoshka::scf::{run_rhf, FockEngine, ScfOptions};
+
+fn worker_bin() -> PathBuf {
+    PathBuf::from(env!("CARGO_BIN_EXE_matryoshka"))
+}
+
+fn engine(molecule: &str, basis_name: &str, config: MatryoshkaConfig) -> MatryoshkaEngine {
+    let mol = library::by_name(molecule).unwrap();
+    let basis = build_basis(&mol, basis_name).unwrap();
+    MatryoshkaEngine::new(basis, Path::new("unused"), config).unwrap()
+}
+
+/// A small deterministic symmetric density sequence: k = 0 is the usual
+/// test density, later k's perturb it smoothly so every ΔD is nonzero
+/// but small — the regime incremental builds live in.
+fn density_sequence(n: usize, k: usize) -> Matrix {
+    let mut d = Matrix::zeros(n, n);
+    for i in 0..n {
+        for j in 0..n {
+            let base = 0.3 / (1.0 + (i as f64 - j as f64).abs());
+            let ripple = 1e-4 * (k as f64) / (1.0 + (i + j) as f64);
+            let v = base + ripple;
+            *d.at_mut(i, j) = v;
+            *d.at_mut(j, i) = v;
+        }
+    }
+    d
+}
+
+fn scf(molecule: &str, basis_name: &str, incremental: IncrementalMode) -> (f64, bool) {
+    let mol = library::by_name(molecule).unwrap();
+    let basis = build_basis(&mol, basis_name).unwrap();
+    let config = MatryoshkaConfig { incremental, ..Default::default() };
+    let mut eng = MatryoshkaEngine::new(basis.clone(), Path::new("unused"), config).unwrap();
+    let res = run_rhf(&mol, &basis, &mut eng, &ScfOptions::default()).unwrap();
+    (res.energy, res.converged)
+}
+
+#[test]
+fn incremental_energy_matches_full_rebuild_water_631gstar() {
+    let (full, c0) = scf("water", "6-31g*", IncrementalMode::Off);
+    let (inc, c1) = scf("water", "6-31g*", IncrementalMode::On);
+    let (cadence, c2) = scf("water", "6-31g*", IncrementalMode::Every(4));
+    assert!(c0 && c1 && c2, "all three SCFs must converge");
+    assert!((inc - full).abs() < 1e-9, "incremental {inc:.12} vs full {full:.12}");
+    assert!((cadence - full).abs() < 1e-9, "every:4 {cadence:.12} vs full {full:.12}");
+    // literature RHF/6-31G* water ≈ −76.01 Ha
+    assert!((full + 76.01).abs() < 0.01, "water E = {full:.7}");
+}
+
+#[test]
+fn incremental_energy_matches_full_rebuild_methane_631gstar() {
+    let (full, c0) = scf("methane", "6-31g*", IncrementalMode::Off);
+    let (inc, c1) = scf("methane", "6-31g*", IncrementalMode::On);
+    assert!(c0 && c1, "both SCFs must converge");
+    assert!((inc - full).abs() < 1e-9, "incremental {inc:.12} vs full {full:.12}");
+    // literature RHF/6-31G* methane ≈ −40.19 Ha
+    assert!((full + 40.19).abs() < 0.01, "methane E = {full:.7}");
+}
+
+#[test]
+fn delta_screen_shrinks_the_executed_chunk_set_as_scf_converges() {
+    let mol = library::by_name("water").unwrap();
+    let basis = build_basis(&mol, "6-31g*").unwrap();
+    let config = MatryoshkaConfig { incremental: IncrementalMode::On, ..Default::default() };
+    let mut eng = MatryoshkaEngine::new(basis.clone(), Path::new("unused"), config).unwrap();
+    let res = run_rhf(&mol, &basis, &mut eng, &ScfOptions::default()).unwrap();
+    assert!(res.converged);
+    let trace = eng.fock_trace();
+    assert!(trace.len() >= 3, "need several builds, got {}", trace.len());
+    assert!(!trace[0].incremental, "the guess build runs the full schedule");
+    let first = trace[0].chunks_executed;
+    // the tail of the SCF must run incremental builds (the drift guard may
+    // deterministically force an occasional full rebuild, but never pin the
+    // engine to the full path)
+    assert!(
+        trace.iter().rev().take(2).any(|s| s.incremental),
+        "no incremental build in the last two iterations"
+    );
+    let last = trace.iter().rev().find(|s| s.incremental).unwrap();
+    assert!(
+        last.chunks_executed < first,
+        "last build executed {} of iteration 1's {} chunks — the delta screen did nothing",
+        last.chunks_executed,
+        first
+    );
+    // a late build screens a nonzero share and records the ΔD it saw
+    assert!(last.chunks_screened > 0);
+    assert!(last.dd_max > 0.0 && last.dd_max < 1e-2, "late dD max {:.3e}", last.dd_max);
+    // every incremental + full split is reflected in the wire metrics too
+    let inc = trace.iter().filter(|s| s.incremental).count() as u64;
+    assert_eq!(eng.metrics.incremental_builds, inc);
+    assert_eq!(eng.metrics.full_builds, trace.len() as u64 - inc);
+}
+
+#[test]
+fn per_iteration_g_is_bitwise_invariant_across_threads_and_dispatch() {
+    // all variants run incremental mode and see the identical density
+    // sequence; every per-call G must agree bit for bit
+    let base = MatryoshkaConfig {
+        incremental: IncrementalMode::On,
+        schwarz: SchwarzMode::Estimate,
+        ..Default::default()
+    };
+    let mut variants: Vec<(String, MatryoshkaEngine)> = vec![
+        (
+            "threads:1".into(),
+            engine("water", "6-31g*", MatryoshkaConfig { threads: 1, ..base.clone() }),
+        ),
+        (
+            "threads:3".into(),
+            engine("water", "6-31g*", MatryoshkaConfig { threads: 3, ..base.clone() }),
+        ),
+        (
+            "threads:3 lockstep".into(),
+            engine(
+                "water",
+                "6-31g*",
+                MatryoshkaConfig {
+                    threads: 3,
+                    pipeline: PipelineMode::Lockstep,
+                    ..base.clone()
+                },
+            ),
+        ),
+        (
+            "dispatch local:2".into(),
+            engine(
+                "water",
+                "6-31g*",
+                MatryoshkaConfig {
+                    dispatch: DispatchConfig {
+                        mode: DispatchMode::Local(2),
+                        worker_bin: Some(worker_bin()),
+                        ..Default::default()
+                    },
+                    ..base.clone()
+                },
+            ),
+        ),
+    ];
+    let n = variants[0].1.basis.nbf;
+    for k in 0..4 {
+        let d = density_sequence(n, k);
+        let mut reference: Option<Vec<f64>> = None;
+        for (label, eng) in variants.iter_mut() {
+            let g = eng.two_electron(&d).unwrap();
+            match &reference {
+                None => reference = Some(g.data().to_vec()),
+                Some(want) => assert_eq!(
+                    g.data(),
+                    want.as_slice(),
+                    "iteration {k}: {label} diverged bitwise"
+                ),
+            }
+        }
+    }
+    // iterations 1..3 ran the delta path everywhere (same trace shape)
+    for (label, eng) in &variants {
+        let trace = eng.fock_trace();
+        assert_eq!(trace.len(), 4, "{label}");
+        assert!(!trace[0].incremental, "{label}");
+        assert!(trace[1..].iter().all(|s| s.incremental), "{label}");
+    }
+}
+
+#[test]
+fn dispatched_incremental_scf_matches_in_process_bitwise() {
+    let mol = library::by_name("water").unwrap();
+    let basis = build_basis(&mol, "6-31g*").unwrap();
+    let opts = ScfOptions::default();
+    let base = MatryoshkaConfig {
+        incremental: IncrementalMode::Every(4),
+        schwarz: SchwarzMode::Estimate,
+        ..Default::default()
+    };
+    let mut local = MatryoshkaEngine::new(basis.clone(), Path::new("unused"), base.clone()).unwrap();
+    let res_local = run_rhf(&mol, &basis, &mut local, &opts).unwrap();
+    let mut dispatched = MatryoshkaEngine::new(
+        basis.clone(),
+        Path::new("unused"),
+        MatryoshkaConfig {
+            dispatch: DispatchConfig {
+                mode: DispatchMode::Local(2),
+                worker_bin: Some(worker_bin()),
+                ..Default::default()
+            },
+            ..base
+        },
+    )
+    .unwrap();
+    let res_disp = run_rhf(&mol, &basis, &mut dispatched, &opts).unwrap();
+    assert!(res_local.converged && res_disp.converged);
+    // bitwise: the dispatched delta builds fold the same shards through
+    // the same merge tree the in-process path uses
+    assert_eq!(res_local.energy.to_bits(), res_disp.energy.to_bits());
+    assert_eq!(res_local.iterations, res_disp.iterations);
+}
+
+#[test]
+fn stored_mode_refuses_incremental() {
+    let mol = library::by_name("water").unwrap();
+    let basis = build_basis(&mol, "sto-3g").unwrap();
+    let config = MatryoshkaConfig {
+        stored: true,
+        incremental: IncrementalMode::On,
+        ..Default::default()
+    };
+    let err = MatryoshkaEngine::new(basis, Path::new("unused"), config).unwrap_err().to_string();
+    assert!(err.contains("--stored with --incremental"), "{err}");
+}
+
+#[test]
+fn incremental_mode_parses_and_rejects() {
+    assert_eq!(IncrementalMode::parse("off").unwrap(), IncrementalMode::Off);
+    assert_eq!(IncrementalMode::parse("on").unwrap(), IncrementalMode::On);
+    assert_eq!(IncrementalMode::parse("every:8").unwrap(), IncrementalMode::Every(8));
+    for bad in ["", "ON", "every", "every:", "every:1", "every:x", "delta"] {
+        assert!(IncrementalMode::parse(bad).is_err(), "{bad:?}");
+    }
+    assert_eq!(IncrementalMode::Every(8).describe(), "every:8");
+}
+
+#[test]
+fn worker_refuses_a_hand_shrunk_chunk_subset_at_the_fingerprint_check() {
+    // Round-trip a delta-screened Build over the real wire against a real
+    // worker, but fingerprint a hand-shrunk chunk subset (one surviving
+    // block emptied) — the worker re-runs the screen over the shipped ΔD,
+    // rebuilds the honest schedule, and must refuse at the fingerprint
+    // check before executing anything.
+    let mol = library::by_name("water").unwrap();
+    let basis = build_basis(&mol, "6-31g*").unwrap();
+    let nbf = basis.nbf;
+    let threshold = 1e-10;
+    let spec = JobSpec {
+        title: "delta fingerprint test".into(),
+        basis: basis.clone(),
+        threshold,
+        tile: 64,
+        clustered: true,
+        greedy_path: true,
+        fixed_batch: 512,
+        schwarz: SchwarzMode::Estimate,
+        backend: BackendKind::Native,
+        ladder: LadderMode::Elastic,
+        eri_strategy: Default::default(),
+        digest: Default::default(),
+        working_set_bytes: 4 << 20,
+        wide_opb_max: 4.0,
+        threads: 1,
+        pipeline: PipelineMode::Staged,
+        artifact_dir: "unused".into(),
+        schwarz_cal_path: None,
+    };
+
+    // coordinator-side replica of the worker's screen: same plan, same
+    // ΔD, same tightened threshold
+    let pairs = PairList::build_with_mode(&basis, threshold, SchwarzMode::Estimate);
+    let plan = BlockPlan::build(&pairs, threshold, 64, true);
+    let mut delta = Matrix::zeros(nbf, nbf);
+    for i in 0..nbf {
+        for j in 0..nbf {
+            let v = 1e-6 / (1.0 + (i as f64 - j as f64).abs()).powi(2);
+            *delta.at_mut(i, j) = v;
+            *delta.at_mut(j, i) = v;
+        }
+    }
+    let dmax = ShellDeltaMax::build(&basis, &delta);
+    let (filtered, stats) = filter_plan_by_delta(&plan, &pairs, &dmax, delta_threshold(threshold));
+    assert!(stats.surviving > 0 && stats.screened > 0, "screen must split the stream: {stats:?}");
+    let manifest = NativeBackend::with_kpair(basis.max_kpair()).manifest().clone();
+    let policy = SchedulePolicy::default();
+    let snapshot: BTreeMap<_, _> = BTreeMap::new();
+    let honest =
+        ChunkSchedule::build(&filtered, &manifest, &snapshot, &policy, &pairs, nbf).unwrap();
+
+    // hand-shrink the subset: empty one surviving block's quads
+    let mut shrunk = filtered.clone();
+    let victim = shrunk.blocks.iter().position(|b| !b.quads.is_empty()).unwrap();
+    shrunk.blocks[victim].quads.clear();
+    let forged = ChunkSchedule::build(&shrunk, &manifest, &snapshot, &policy, &pairs, nbf).unwrap();
+    assert_ne!(honest.fingerprint(), forged.fingerprint());
+
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let worker = std::thread::spawn(move || -> anyhow::Result<()> {
+        let (stream, _) = listener.accept()?;
+        let mut r = BufReader::new(stream.try_clone()?);
+        let mut w = BufWriter::new(stream);
+        serve(&mut r, &mut w, &WorkerOptions::default())
+    });
+    let stream = TcpStream::connect(addr).unwrap();
+    let mut r = BufReader::new(stream.try_clone().unwrap());
+    let mut w = BufWriter::new(stream);
+    match read_msg(&mut r).unwrap() {
+        Msg::Hello { version } => assert_eq!(version, PROTO_VERSION),
+        other => panic!("expected Hello, got {}", other.kind()),
+    }
+    write_msg(&mut w, &Msg::Setup { spec: Box::new(spec) }).unwrap();
+    match read_msg(&mut r).unwrap() {
+        Msg::SetupAck { nbf: got, .. } => assert_eq!(got, nbf),
+        other => panic!("expected SetupAck, got {}", other.kind()),
+    }
+    // honest fingerprint + honest ΔD round-trips: the worker's re-screen
+    // reproduces the coordinator's chunk subset exactly
+    write_msg(
+        &mut w,
+        &Msg::Build {
+            iter: 1,
+            fingerprint: honest.fingerprint(),
+            delta_screen: true,
+            snapshot: snapshot.clone(),
+            density: delta.clone(),
+        },
+    )
+    .unwrap();
+    match read_msg(&mut r).unwrap() {
+        Msg::BuildAck { iter, fingerprint } => {
+            assert_eq!(iter, 1);
+            assert_eq!(fingerprint, honest.fingerprint());
+        }
+        other => panic!("expected BuildAck, got {}", other.kind()),
+    }
+    // forged fingerprint (the hand-shrunk subset) must be refused
+    write_msg(
+        &mut w,
+        &Msg::Build {
+            iter: 2,
+            fingerprint: forged.fingerprint(),
+            delta_screen: true,
+            snapshot,
+            density: delta,
+        },
+    )
+    .unwrap();
+    match read_msg(&mut r).unwrap() {
+        Msg::Error { message } => {
+            assert!(message.contains("fingerprint mismatch"), "{message}");
+            assert!(message.contains("refusing to execute"), "{message}");
+        }
+        other => panic!("expected Error, got {}", other.kind()),
+    }
+    let err = worker.join().unwrap().unwrap_err().to_string();
+    assert!(err.contains("fingerprint mismatch"), "{err}");
+}
