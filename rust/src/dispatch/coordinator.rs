@@ -1,15 +1,29 @@
 //! The dispatch coordinator: spawns/connects workers, hands out merge
-//! units with work stealing, rebalances stragglers, folds shards back
-//! through the deterministic merge.
+//! units with work stealing, rebalances stragglers, survives worker
+//! loss, and folds shards back through the deterministic merge.
 //!
 //! Determinism story: the coordinator never decides *what* a unit
 //! computes — only *where*.  Workers prove they rebuilt the identical
 //! schedule (fingerprint check per build), every shard is a pure function
 //! of (schedule, unit, density), and [`crate::fock::merge_unit_shards`]
 //! folds shards in unit order regardless of arrival order or which worker
-//! produced them.  Work stealing and straggler rebalance can therefore
-//! duplicate execution freely: the first shard per unit wins, and a
-//! duplicate is bitwise the same anyway.
+//! produced them.  Work stealing, straggler rebalance, AND failure
+//! recovery can therefore duplicate or relocate execution freely: the
+//! first shard per unit wins, and a duplicate is bitwise the same anyway.
+//!
+//! Fault tolerance: a worker EOF, broken pipe, non-fatal `Error` frame,
+//! or hard per-worker timeout marks that worker dead and requeues its
+//! outstanding units onto survivors ([`Dispatcher::run_build`] never
+//! aborts for a recoverable loss).  If every worker dies the build
+//! returns a *partial* [`BuildOutcome`] whose `missing` units the engine
+//! finishes in-process through the same `run_units_streamed` path — G is
+//! bitwise identical in every case by construction.  Remote addresses
+//! that could not be dialed (or died) are parked and re-dialed with
+//! exponential backoff; a worker that connects mid-SCF is admitted
+//! through the normal Hello/Setup handshake plus a replay of the current
+//! Build frame (elastic membership).  Only protocol violations — version
+//! skew, auth-tag mismatch, schedule-fingerprint drift, a fatal `Error`
+//! frame — abort the build, as [`DispatchError::Fatal`].
 
 use std::collections::{BTreeMap, HashSet, VecDeque};
 use std::io::{BufReader, BufWriter, Read, Write};
@@ -21,9 +35,55 @@ use std::time::{Duration, Instant};
 use crate::linalg::Matrix;
 use crate::pipeline::ChunkSchedule;
 use crate::runtime::ClassKey;
+use crate::util::XorShift;
 
-use super::proto::{read_msg, write_frame, write_msg, JobSpec, Msg, UnitShard, PROTO_VERSION};
+use super::proto::{
+    auth_tag, read_msg, write_frame, write_msg, JobSpec, Msg, UnitShard, PROTO_VERSION,
+};
 use super::{DispatchConfig, DispatchMode};
+
+/// Typed failure taxonomy of the dispatch layer: retryable worker-scoped
+/// losses vs protocol violations that no retry can fix.
+#[derive(Debug)]
+pub enum DispatchError {
+    /// one worker is gone (EOF, broken pipe, hang, non-fatal error) —
+    /// its outstanding units are recoverable on survivors or in-process
+    WorkerLost { label: String, reason: String },
+    /// coordinator/worker disagreement (version, secret, system shape,
+    /// schedule fingerprint) or a fatal worker error — the build aborts
+    Fatal(String),
+}
+
+impl DispatchError {
+    pub fn is_retryable(&self) -> bool {
+        matches!(self, DispatchError::WorkerLost { .. })
+    }
+}
+
+impl std::fmt::Display for DispatchError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            DispatchError::WorkerLost { label, reason } => {
+                write!(f, "dispatch worker {label} lost: {reason}")
+            }
+            DispatchError::Fatal(message) => write!(f, "{message}"),
+        }
+    }
+}
+
+impl std::error::Error for DispatchError {}
+
+/// What one `run_build` actually produced.  `missing` is empty on the
+/// happy path; after unrecoverable worker loss it lists (sorted) the
+/// units no shard arrived for, which the engine executes in-process —
+/// same units, same code path, bitwise-same G.
+pub struct BuildOutcome {
+    /// delivered shards, sorted by unit id
+    pub shards: Vec<UnitShard>,
+    /// unit ids no worker delivered (sorted); empty unless the whole
+    /// fleet died mid-build
+    pub missing: Vec<usize>,
+}
 
 /// What the dispatcher attributes to one worker — the `report dispatch`
 /// table and the CLI's per-worker summary read these.
@@ -46,12 +106,30 @@ pub struct WorkerDispatchStats {
     pub wall_seconds: f64,
     /// times this worker's outstanding units were rebalanced away
     pub rebalanced_away: u64,
+    /// 1 once this worker was declared dead (EOF/error/hard timeout)
+    pub lost: u64,
+    /// units requeued off this worker when it was declared dead
+    pub recovered_units: u64,
+    /// transient send retries + dial retries attributed to this worker
+    pub retries: u64,
+    /// 1 if this worker was admitted after the fleet launched (late join)
+    pub joined_mid_scf: u64,
 }
 
 enum Event {
     Msg(Msg),
     /// reader thread saw EOF or a broken stream
     Gone(String),
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Phase {
+    /// connected, no Hello yet
+    AwaitHello,
+    /// Setup sent, waiting for the authenticated ack
+    AwaitSetupAck,
+    /// setup-verified; may take work once it acked the current build
+    Ready,
 }
 
 struct WorkerLink {
@@ -64,6 +142,25 @@ struct WorkerLink {
     /// units assigned in the current build with no shard yet
     outstanding: HashSet<usize>,
     idle: bool,
+    /// false once declared lost — the link is never revived (a remote
+    /// worker that comes back is admitted as a NEW link via the pending
+    /// dial list)
+    alive: bool,
+    phase: Phase,
+    /// nonce the coordinator sent in this link's Setup; the SetupAck
+    /// must return `auth_tag(secret, setup_nonce)`
+    setup_nonce: u64,
+    /// last Build iter this worker acked (0 = none)
+    acked_iter: u64,
+    last_heard: Instant,
+}
+
+/// A remote address we could not (or can no longer) reach — re-dialed
+/// with exponential backoff so late-started workers join mid-SCF.
+struct PendingDial {
+    addr: String,
+    attempts: u32,
+    next_attempt: Instant,
 }
 
 /// Multi-process executor of [`ChunkSchedule`]s.  One dispatcher serves
@@ -72,10 +169,28 @@ struct WorkerLink {
 pub struct Dispatcher {
     links: Vec<WorkerLink>,
     events: mpsc::Receiver<(usize, Event)>,
+    /// kept so reader threads for late-joining workers can be spawned
+    /// after launch (the channel stays connected for the session)
+    tx: mpsc::Sender<(usize, Event)>,
     timeout: Duration,
     iter: u64,
     stats: Vec<WorkerDispatchStats>,
     shutdown_sent: bool,
+    /// shared wire secret ("" when unset — both ends must agree)
+    secret: String,
+    /// retained for late-joiner Setup replay
+    spec: JobSpec,
+    expect_npairs: usize,
+    expect_nblocks: usize,
+    /// encoded Build frame of the in-flight build, replayed to workers
+    /// that finish their handshake mid-build: (iter, fingerprint, bytes)
+    current_build: Option<(u64, u64, Vec<u8>)>,
+    pending: Vec<PendingDial>,
+    dial_retries: u32,
+    dial_backoff: Duration,
+    /// dial retries for addresses that never produced a link yet
+    orphan_retries: u64,
+    nonces: XorShift,
 }
 
 /// Batch width of one work-stealing assignment: small enough that
@@ -85,10 +200,34 @@ fn batch_size(queue_len: usize, workers: usize) -> usize {
     (queue_len / (2 * workers.max(1))).clamp(1, 8)
 }
 
+/// Exponential dial backoff, capped so a long-dead address is still
+/// probed every ~10 s for elastic late join.
+fn dial_backoff(base: Duration, attempts: u32) -> Duration {
+    let factor = 1u64 << attempts.min(5);
+    (base * factor as u32).min(Duration::from_secs(10))
+}
+
+fn try_dial(addr: &str) -> std::io::Result<TcpStream> {
+    use std::net::ToSocketAddrs;
+    let mut last =
+        std::io::Error::new(std::io::ErrorKind::NotFound, format!("{addr} resolved to nothing"));
+    for sa in addr.to_socket_addrs()? {
+        match TcpStream::connect_timeout(&sa, Duration::from_millis(500)) {
+            Ok(s) => return Ok(s),
+            Err(e) => last = e,
+        }
+    }
+    Err(last)
+}
+
 impl Dispatcher {
     /// Spawn (`local:N`) or dial (`remote:...`) every worker, complete
-    /// the Hello/Setup handshake, and verify each worker rebuilt the same
-    /// system (nbf / pair count / block count echo).
+    /// the authenticated Hello/Setup handshake, and verify each worker
+    /// rebuilt the same system (nbf / pair count / block count echo).
+    ///
+    /// Remote addresses that stay unreachable after
+    /// `config.dial_retries` attempts are parked for mid-SCF late join;
+    /// launch fails only when NO worker is reachable.
     pub fn launch(
         config: &DispatchConfig,
         spec: &JobSpec,
@@ -96,7 +235,30 @@ impl Dispatcher {
         expect_nblocks: usize,
     ) -> anyhow::Result<Dispatcher> {
         let (tx, rx) = mpsc::channel::<(usize, Event)>();
-        let mut links = Vec::new();
+        let seed = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.as_nanos() as u64)
+            .unwrap_or(0x5eed)
+            ^ u64::from(std::process::id());
+        let mut d = Dispatcher {
+            links: Vec::new(),
+            events: rx,
+            tx,
+            timeout: Duration::from_millis(config.straggler_timeout_ms.max(1)),
+            iter: 0,
+            stats: Vec::new(),
+            shutdown_sent: false,
+            secret: config.secret.clone().unwrap_or_default(),
+            spec: spec.clone(),
+            expect_npairs,
+            expect_nblocks,
+            current_build: None,
+            pending: Vec::new(),
+            dial_retries: config.dial_retries.max(1),
+            dial_backoff: Duration::from_millis(config.dial_backoff_ms.max(1)),
+            orphan_retries: 0,
+            nonces: XorShift::new(seed),
+        };
         match &config.mode {
             DispatchMode::Off => anyhow::bail!("Dispatcher::launch with dispatch off"),
             DispatchMode::Local(n) => {
@@ -106,66 +268,116 @@ impl Dispatcher {
                         .map_err(|e| anyhow::anyhow!("cannot locate the worker binary: {e}"))?,
                 };
                 for i in 0..*n {
-                    let mut child = Command::new(&bin)
-                        .arg("worker")
-                        .arg("--stdio")
-                        .arg("--worker-index")
-                        .arg(i.to_string())
-                        .args(&config.worker_args)
-                        .stdin(Stdio::piped())
-                        .stdout(Stdio::piped())
-                        .stderr(Stdio::inherit())
-                        .spawn()
-                        .map_err(|e| anyhow::anyhow!("failed to spawn worker {i} ({bin:?}): {e}"))?;
-                    let stdout = child.stdout.take().expect("stdout piped");
-                    let stdin = child.stdin.take().expect("stdin piped");
-                    spawn_reader(i, Box::new(stdout), tx.clone());
-                    links.push(WorkerLink {
-                        label: format!("local:{i}"),
-                        writer: Box::new(BufWriter::new(stdin)),
-                        child: Some(child),
-                        tcp: None,
-                        outstanding: HashSet::new(),
-                        idle: true,
-                    });
+                    d.spawn_local(&bin, i, &config.worker_args)?;
                 }
             }
             DispatchMode::Remote(addrs) => {
-                for (i, addr) in addrs.iter().enumerate() {
-                    let stream = TcpStream::connect(addr)
-                        .map_err(|e| anyhow::anyhow!("cannot reach worker {addr}: {e}"))?;
-                    stream.set_nodelay(true).ok();
-                    let reader = stream
-                        .try_clone()
-                        .map_err(|e| anyhow::anyhow!("worker {addr}: {e}"))?;
-                    spawn_reader(i, Box::new(reader), tx.clone());
-                    links.push(WorkerLink {
-                        label: addr.clone(),
-                        writer: Box::new(BufWriter::new(
-                            stream.try_clone().map_err(|e| anyhow::anyhow!("worker {addr}: {e}"))?,
-                        )),
-                        tcp: Some(stream),
-                        child: None,
-                        outstanding: HashSet::new(),
-                        idle: true,
-                    });
+                for addr in addrs {
+                    let mut dialed = None;
+                    for attempt in 0..d.dial_retries {
+                        if attempt > 0 {
+                            d.orphan_retries += 1;
+                            std::thread::sleep(dial_backoff(d.dial_backoff, attempt - 1));
+                        }
+                        match try_dial(addr) {
+                            Ok(stream) => {
+                                dialed = Some(stream);
+                                break;
+                            }
+                            Err(e) => {
+                                eprintln!("dispatch: dial {addr} attempt {}: {e}", attempt + 1)
+                            }
+                        }
+                    }
+                    match dialed {
+                        Some(stream) => {
+                            d.add_tcp_link(stream, addr)?;
+                        }
+                        None => {
+                            eprintln!(
+                                "dispatch: worker {addr} unreachable after {} dial(s) — parked \
+                                 for late join",
+                                d.dial_retries
+                            );
+                            d.pending.push(PendingDial {
+                                addr: addr.clone(),
+                                attempts: d.dial_retries,
+                                next_attempt: Instant::now() + d.dial_backoff,
+                            });
+                        }
+                    }
+                }
+                if d.links.is_empty() {
+                    anyhow::bail!(DispatchError::Fatal(format!(
+                        "no dispatch worker reachable (tried {} address(es) × {} dial(s) each)",
+                        addrs.len(),
+                        d.dial_retries
+                    )));
                 }
             }
         }
-        let stats = links
-            .iter()
-            .map(|l| WorkerDispatchStats { label: l.label.clone(), ..Default::default() })
-            .collect();
-        let mut d = Dispatcher {
-            links,
-            events: rx,
-            timeout: Duration::from_millis(config.straggler_timeout_ms.max(1)),
-            iter: 0,
-            stats,
-            shutdown_sent: false,
-        };
-        d.handshake(spec, expect_npairs, expect_nblocks)?;
+        d.handshake()?;
         Ok(d)
+    }
+
+    fn spawn_local(&mut self, bin: &std::path::Path, i: usize, args: &[String]) -> anyhow::Result<()> {
+        let mut child = Command::new(bin)
+            .arg("worker")
+            .arg("--stdio")
+            .arg("--worker-index")
+            .arg(i.to_string())
+            .args(args)
+            // spawned workers inherit the coordinator's secret; an
+            // explicit empty value overrides any ambient env var
+            .env("MATRYOSHKA_DISPATCH_SECRET", &self.secret)
+            .stdin(Stdio::piped())
+            .stdout(Stdio::piped())
+            .stderr(Stdio::inherit())
+            .spawn()
+            .map_err(|e| anyhow::anyhow!("failed to spawn worker {i} ({bin:?}): {e}"))?;
+        let stdout = child.stdout.take().expect("stdout piped");
+        let stdin = child.stdin.take().expect("stdin piped");
+        let idx = self.links.len();
+        spawn_reader(idx, Box::new(stdout), self.tx.clone());
+        let label = format!("local:{i}");
+        self.links.push(WorkerLink {
+            label: label.clone(),
+            writer: Box::new(BufWriter::new(stdin)),
+            child: Some(child),
+            tcp: None,
+            outstanding: HashSet::new(),
+            idle: true,
+            alive: true,
+            phase: Phase::AwaitHello,
+            setup_nonce: 0,
+            acked_iter: 0,
+            last_heard: Instant::now(),
+        });
+        self.stats.push(WorkerDispatchStats { label, ..Default::default() });
+        Ok(())
+    }
+
+    fn add_tcp_link(&mut self, stream: TcpStream, addr: &str) -> anyhow::Result<usize> {
+        stream.set_nodelay(true).ok();
+        let reader = stream.try_clone().map_err(|e| anyhow::anyhow!("worker {addr}: {e}"))?;
+        let writer = stream.try_clone().map_err(|e| anyhow::anyhow!("worker {addr}: {e}"))?;
+        let idx = self.links.len();
+        spawn_reader(idx, Box::new(reader), self.tx.clone());
+        self.links.push(WorkerLink {
+            label: addr.to_string(),
+            writer: Box::new(BufWriter::new(writer)),
+            child: None,
+            tcp: Some(stream),
+            outstanding: HashSet::new(),
+            idle: true,
+            alive: true,
+            phase: Phase::AwaitHello,
+            setup_nonce: 0,
+            acked_iter: 0,
+            last_heard: Instant::now(),
+        });
+        self.stats.push(WorkerDispatchStats { label: addr.to_string(), ..Default::default() });
+        Ok(idx)
     }
 
     /// Generous ceiling for setup work (workers build pair data, which
@@ -175,102 +387,252 @@ impl Dispatcher {
         (self.timeout * 20).max(Duration::from_secs(120))
     }
 
-    fn handshake(
-        &mut self,
-        spec: &JobSpec,
-        expect_npairs: usize,
-        expect_nblocks: usize,
-    ) -> anyhow::Result<()> {
-        self.collect_from_each("Hello", |msg| match msg {
-            Msg::Hello { version: PROTO_VERSION } => Ok(Some(())),
-            Msg::Hello { version } => anyhow::bail!(
-                "protocol version skew: worker speaks v{version}, coordinator v{PROTO_VERSION}"
-            ),
-            other => anyhow::bail!("expected Hello, got {}", other.kind()),
-        })?;
-        let setup = Msg::Setup { spec: Box::new(spec.clone()) };
-        self.broadcast(&setup)?;
-        let acks = self.collect_from_each("SetupAck", |msg| match msg {
-            Msg::SetupAck { nbf, npairs, nblocks } => Ok(Some((nbf, npairs, nblocks))),
-            other => anyhow::bail!("expected SetupAck, got {}", other.kind()),
-        })?;
-        for (i, (nbf, npairs, nblocks)) in acks.into_iter().enumerate() {
-            if nbf != spec.basis.nbf || npairs != expect_npairs || nblocks != expect_nblocks {
-                anyhow::bail!(
-                    "worker {} rebuilt a different system: nbf {nbf} pairs {npairs} blocks \
-                     {nblocks}, coordinator has nbf {} pairs {expect_npairs} blocks \
-                     {expect_nblocks}",
-                    self.links[i].label,
-                    spec.basis.nbf
-                );
-            }
-        }
-        Ok(())
-    }
-
-    fn send(&mut self, worker: usize, msg: &Msg) -> anyhow::Result<()> {
-        let link = &mut self.links[worker];
-        write_msg(link.writer.as_mut(), msg)
-            .map_err(|e| anyhow::anyhow!("worker {}: send {} failed: {e}", link.label, msg.kind()))
-    }
-
-    /// Send one message to every worker, encoding it exactly once —
-    /// Build frames carry the full nbf² density, so a per-worker encode
-    /// would redo the heaviest serialization N times per SCF iteration.
-    fn broadcast(&mut self, msg: &Msg) -> anyhow::Result<()> {
-        let payload = msg.encode();
-        for link in &mut self.links {
-            write_frame(link.writer.as_mut(), &payload).map_err(|e| {
-                anyhow::anyhow!("worker {}: send {} failed: {e}", link.label, msg.kind())
+    /// Drive every launch worker to `Ready`.  Launch is strict: a
+    /// handshake failure here (version skew, secret mismatch, wrong
+    /// system, disconnect) aborts — a fleet that can't even say hello is
+    /// a config problem, not a runtime fault.  The deadline is measured
+    /// from the LAST handshake event, not handshake start, so a slow
+    /// serial setup across many workers doesn't trip it.
+    fn handshake(&mut self) -> anyhow::Result<()> {
+        let mut last_event = Instant::now();
+        while self.links.iter().any(|l| l.alive && l.phase != Phase::Ready) {
+            let remaining = self
+                .hard_deadline()
+                .checked_sub(last_event.elapsed())
+                .ok_or_else(|| {
+                    anyhow::Error::new(DispatchError::Fatal(
+                        "timed out waiting for worker handshake".into(),
+                    ))
+                })?;
+            let (widx, event) = self.events.recv_timeout(remaining).map_err(|_| {
+                anyhow::Error::new(DispatchError::Fatal(
+                    "timed out waiting for worker handshake".into(),
+                ))
             })?;
+            last_event = Instant::now();
+            self.links[widx].last_heard = last_event;
+            let label = self.links[widx].label.clone();
+            match event {
+                Event::Gone(why) => anyhow::bail!(DispatchError::Fatal(format!(
+                    "worker {label} disconnected during handshake: {why}"
+                ))),
+                Event::Msg(Msg::Error { message, .. }) => {
+                    anyhow::bail!(DispatchError::Fatal(format!("worker {label} failed: {message}")))
+                }
+                Event::Msg(Msg::Hello { version, nonce }) => {
+                    self.on_hello(widx, version, nonce).map_err(fatal_at_launch)?;
+                }
+                Event::Msg(Msg::SetupAck { nbf, npairs, nblocks, auth }) => {
+                    self.on_setup_ack(widx, nbf, npairs, nblocks, auth)
+                        .map_err(fatal_at_launch)?;
+                }
+                Event::Msg(other) => anyhow::bail!(DispatchError::Fatal(format!(
+                    "worker {label} sent {} during handshake",
+                    other.kind()
+                ))),
+            }
         }
         Ok(())
     }
 
-    /// Wait until every worker answered once; `accept` returns
-    /// `Ok(Some(v))` to record worker `v`, `Ok(None)` to ignore a stale
-    /// message.  `Error` frames and disconnects abort.
-    fn collect_from_each<T>(
+    /// A worker said Hello: check the protocol version, answer with the
+    /// authenticated Setup (auth tag keyed by the WORKER's nonce, so a
+    /// coordinator that doesn't know the secret can't replay one).
+    fn on_hello(&mut self, widx: usize, version: u32, nonce: u64) -> Result<(), DispatchError> {
+        let lost = |label: &str, reason: String| DispatchError::WorkerLost {
+            label: label.to_string(),
+            reason,
+        };
+        let label = self.links[widx].label.clone();
+        if self.links[widx].phase != Phase::AwaitHello {
+            return Err(lost(&label, format!("sent Hello in phase {:?}", self.links[widx].phase)));
+        }
+        if version != PROTO_VERSION {
+            return Err(lost(
+                &label,
+                format!(
+                    "protocol version skew: worker speaks v{version}, coordinator v{PROTO_VERSION}"
+                ),
+            ));
+        }
+        let setup_nonce = self.nonces.next_u64();
+        let setup = Msg::Setup {
+            spec: Box::new(self.spec.clone()),
+            nonce: setup_nonce,
+            auth: auth_tag(&self.secret, nonce),
+        };
+        let link = &mut self.links[widx];
+        link.setup_nonce = setup_nonce;
+        write_msg(link.writer.as_mut(), &setup)
+            .map_err(|e| lost(&label, format!("send Setup failed: {e}")))?;
+        self.links[widx].phase = Phase::AwaitSetupAck;
+        Ok(())
+    }
+
+    /// A worker acked Setup: verify it knows the secret (tag over OUR
+    /// nonce) and rebuilt the same system, then hand it the in-flight
+    /// Build frame if one exists (late join replay).
+    fn on_setup_ack(
         &mut self,
-        what: &str,
-        mut accept: impl FnMut(Msg) -> anyhow::Result<Option<T>>,
-    ) -> anyhow::Result<Vec<T>> {
-        let mut slots: Vec<Option<T>> = self.links.iter().map(|_| None).collect();
-        let deadline = Instant::now() + self.hard_deadline();
-        while slots.iter().any(|s| s.is_none()) {
-            let remaining = deadline
-                .checked_duration_since(Instant::now())
-                .ok_or_else(|| anyhow::anyhow!("timed out waiting for {what} from workers"))?;
-            let (widx, event) = self
-                .events
-                .recv_timeout(remaining)
-                .map_err(|_| anyhow::anyhow!("timed out waiting for {what} from workers"))?;
-            let label = &self.links[widx].label;
-            match event {
-                Event::Gone(why) => {
-                    anyhow::bail!("worker {label} disconnected while awaiting {what}: {why}")
-                }
-                Event::Msg(Msg::Error { message }) => {
-                    anyhow::bail!("worker {label} failed: {message}")
-                }
-                Event::Msg(msg) => {
-                    if let Some(v) =
-                        accept(msg).map_err(|e| anyhow::anyhow!("worker {label}: {e}"))?
-                    {
-                        if slots[widx].is_some() {
-                            anyhow::bail!("worker {label} answered {what} twice");
-                        }
-                        slots[widx] = Some(v);
+        widx: usize,
+        nbf: usize,
+        npairs: usize,
+        nblocks: usize,
+        auth: u64,
+    ) -> Result<(), DispatchError> {
+        let label = self.links[widx].label.clone();
+        let lost = |reason: String| DispatchError::WorkerLost { label: label.clone(), reason };
+        if self.links[widx].phase != Phase::AwaitSetupAck {
+            return Err(lost(format!("sent SetupAck in phase {:?}", self.links[widx].phase)));
+        }
+        if auth != auth_tag(&self.secret, self.links[widx].setup_nonce) {
+            return Err(lost(
+                "dispatch secret mismatch: worker returned a bad auth tag (set the same \
+                 --dispatch-secret / MATRYOSHKA_DISPATCH_SECRET on both ends)"
+                    .to_string(),
+            ));
+        }
+        if nbf != self.spec.basis.nbf
+            || npairs != self.expect_npairs
+            || nblocks != self.expect_nblocks
+        {
+            return Err(lost(format!(
+                "rebuilt a different system: nbf {nbf} pairs {npairs} blocks {nblocks}, \
+                 coordinator has nbf {} pairs {} blocks {}",
+                self.spec.basis.nbf, self.expect_npairs, self.expect_nblocks
+            )));
+        }
+        self.links[widx].phase = Phase::Ready;
+        if self.iter > 0 {
+            self.stats[widx].joined_mid_scf = 1;
+            eprintln!("dispatch: worker {label} joined mid-SCF (build {})", self.iter);
+        }
+        // replay the in-flight build so the joiner can take work now
+        let link = &mut self.links[widx];
+        if let Some((_, _, payload)) = &self.current_build {
+            write_frame(link.writer.as_mut(), payload)
+                .map_err(|e| lost(format!("send Build replay failed: {e}")))?;
+        }
+        Ok(())
+    }
+
+    /// Mark a worker dead: kill its transport, requeue its outstanding
+    /// units (the recovery that keeps the build alive), bump counters.
+    /// Idempotent — late Gone events for an already-dead link are no-ops.
+    fn declare_lost(
+        &mut self,
+        widx: usize,
+        reason: &str,
+        queue: &mut VecDeque<usize>,
+        done: &BTreeMap<usize, UnitShard>,
+    ) {
+        if !self.links[widx].alive {
+            return;
+        }
+        let remote;
+        let label;
+        let requeue: Vec<usize>;
+        {
+            let link = &mut self.links[widx];
+            link.alive = false;
+            link.idle = false;
+            if let Some(stream) = &link.tcp {
+                let _ = stream.shutdown(std::net::Shutdown::Both);
+            }
+            if let Some(child) = &mut link.child {
+                let _ = child.kill();
+                let _ = child.wait();
+            }
+            let mut r: Vec<usize> =
+                link.outstanding.drain().filter(|u| !done.contains_key(u)).collect();
+            r.sort_unstable();
+            requeue = r;
+            remote = link.child.is_none();
+            label = link.label.clone();
+        }
+        self.stats[widx].lost = 1;
+        self.stats[widx].recovered_units += requeue.len() as u64;
+        eprintln!(
+            "dispatch: worker {label} lost ({reason}); requeueing {} outstanding unit(s) onto \
+             survivors",
+            requeue.len()
+        );
+        queue.extend(requeue);
+        if remote {
+            // a remote worker may come back (`--listen` accepts a new
+            // session) — park its address for backoff re-dial
+            self.pending.push(PendingDial {
+                addr: label,
+                attempts: 0,
+                next_attempt: Instant::now() + self.dial_backoff,
+            });
+        }
+    }
+
+    /// Write an already-encoded frame with one short retry for transient
+    /// failures (EAGAIN-ish); a second failure means the link is dead.
+    fn send_with_retry(&mut self, widx: usize, payload: &[u8], what: &str) -> Result<(), String> {
+        let first = match write_frame(self.links[widx].writer.as_mut(), payload) {
+            Ok(()) => return Ok(()),
+            Err(e) => e,
+        };
+        self.stats[widx].retries += 1;
+        std::thread::sleep(Duration::from_millis(10));
+        write_frame(self.links[widx].writer.as_mut(), payload)
+            .map_err(|e| format!("send {what} failed twice: {first}; retry: {e}"))
+    }
+
+    /// Re-dial parked addresses whose backoff expired; with `force`, dial
+    /// every parked address now (used when the fleet just died and a
+    /// joiner is the only way to keep dispatching).
+    fn sweep_pending(&mut self, force: bool) {
+        if self.pending.is_empty() {
+            return;
+        }
+        let now = Instant::now();
+        let mut still_pending = Vec::new();
+        let pending = std::mem::take(&mut self.pending);
+        for mut p in pending {
+            if !force && p.next_attempt > now {
+                still_pending.push(p);
+                continue;
+            }
+            match try_dial(&p.addr) {
+                Ok(stream) => match self.add_tcp_link(stream, &p.addr) {
+                    Ok(idx) => {
+                        self.stats[idx].retries += u64::from(p.attempts);
+                        eprintln!("dispatch: worker {} connected after {} dial(s)", p.addr, p.attempts + 1);
                     }
+                    Err(e) => {
+                        eprintln!("dispatch: worker {} connected but setup failed: {e}", p.addr);
+                        p.attempts += 1;
+                        p.next_attempt = now + dial_backoff(self.dial_backoff, p.attempts);
+                        still_pending.push(p);
+                    }
+                },
+                Err(_) => {
+                    p.attempts += 1;
+                    self.orphan_retries += 1;
+                    p.next_attempt = now + dial_backoff(self.dial_backoff, p.attempts);
+                    still_pending.push(p);
                 }
             }
         }
-        Ok(slots.into_iter().map(|s| s.expect("all slots filled")).collect())
+        self.pending = still_pending;
     }
 
-    /// Execute one Fock build across the workers and return every unit's
-    /// shard, sorted by unit id (the caller folds them through
-    /// [`crate::fock::merge_unit_shards`]).
+    /// True when dispatching is pointless: every worker is dead and no
+    /// parked address remains to dial.  The engine then runs fully
+    /// in-process without paying a launch/timeout round trip.
+    pub fn fleet_exhausted(&self) -> bool {
+        !self.links.iter().any(|l| l.alive) && self.pending.is_empty()
+    }
+
+    /// Execute one Fock build across the workers and return a
+    /// [`BuildOutcome`]: every delivered shard sorted by unit id, plus
+    /// the ids of units no worker delivered (the caller folds shards
+    /// through [`crate::fock::merge_unit_shards`] and computes `missing`
+    /// in-process).
     ///
     /// With `delta_screen` the density frame carries ΔD and every worker
     /// re-runs the density-weighted screen to materialize the same
@@ -281,9 +643,13 @@ impl Dispatcher {
         snapshot: &BTreeMap<ClassKey, usize>,
         density: &Matrix,
         delta_screen: bool,
-    ) -> anyhow::Result<Vec<UnitShard>> {
+    ) -> anyhow::Result<BuildOutcome> {
         self.iter += 1;
         let iter = self.iter;
+        // probe parked addresses once per build so a late-started worker
+        // joins at the next build boundary even when the healthy fleet
+        // never leaves the event loop idle
+        self.sweep_pending(false);
         let fingerprint = schedule.fingerprint();
         let build = Msg::Build {
             iter,
@@ -292,21 +658,9 @@ impl Dispatcher {
             snapshot: snapshot.clone(),
             density: density.clone(),
         };
-        self.broadcast(&build)?;
-        let acks = self.collect_from_each("BuildAck", |msg| match msg {
-            Msg::BuildAck { iter: i, fingerprint: fp } if i == iter => Ok(Some(fp)),
-            // stale traffic from the previous build drains here
-            Msg::BuildAck { .. } | Msg::Shard { .. } | Msg::RunDone { .. } => Ok(None),
-            other => anyhow::bail!("expected BuildAck, got {}", other.kind()),
-        })?;
-        for (i, fp) in acks.into_iter().enumerate() {
-            if fp != fingerprint {
-                anyhow::bail!(
-                    "worker {} acked schedule {fp:#018x}, coordinator built {fingerprint:#018x}",
-                    self.links[i].label
-                );
-            }
-        }
+        // encode exactly once — the frame carries the full nbf² density,
+        // and it doubles as the replay payload for late joiners
+        let payload = build.encode();
 
         let nunits = schedule.units.len();
         let mut queue: VecDeque<usize> = (0..nunits).collect();
@@ -316,83 +670,156 @@ impl Dispatcher {
             link.outstanding.clear();
             link.idle = true;
         }
-        let nworkers = self.links.len();
+        self.current_build = Some((iter, fingerprint, payload.clone()));
+        for i in 0..self.links.len() {
+            if !self.links[i].alive || self.links[i].phase != Phase::Ready {
+                continue; // links mid-handshake get the replay on SetupAck
+            }
+            if let Err(why) = self.send_with_retry(i, &payload, "Build") {
+                self.declare_lost(i, &why, &mut queue, &done);
+            }
+        }
+
         let mut last_progress = Instant::now();
         while done.len() < nunits {
-            // hand batches to idle workers
-            for i in 0..nworkers {
-                if !self.links[i].idle || queue.is_empty() {
+            if !self.links.iter().any(|l| l.alive) {
+                // fleet is dead: one forced dial sweep, then give up and
+                // let the engine finish the remaining units in-process
+                self.sweep_pending(true);
+                if !self.links.iter().any(|l| l.alive) {
+                    break;
+                }
+            }
+            // hand batches to idle workers that acked THIS build
+            let active = self.links.iter().filter(|l| l.alive).count();
+            for i in 0..self.links.len() {
+                let ready = {
+                    let l = &self.links[i];
+                    l.alive && l.phase == Phase::Ready && l.acked_iter == iter && l.idle
+                };
+                if !ready || queue.is_empty() {
                     continue;
                 }
-                let width = batch_size(queue.len(), nworkers);
-                let units: Vec<usize> =
-                    queue.drain(..width.min(queue.len())).filter(|u| !done.contains_key(u)).collect();
+                let width = batch_size(queue.len(), active);
+                let units: Vec<usize> = queue
+                    .drain(..width.min(queue.len()))
+                    .filter(|u| !done.contains_key(u))
+                    .collect();
                 if units.is_empty() {
                     continue;
                 }
                 self.links[i].outstanding.extend(units.iter().copied());
                 self.links[i].idle = false;
-                self.send(i, &Msg::Run { iter, units })?;
+                let run = Msg::Run { iter, units }.encode();
+                if let Err(why) = self.send_with_retry(i, &run, "Run") {
+                    self.declare_lost(i, &why, &mut queue, &done);
+                }
             }
-            match self.events.recv_timeout(self.timeout) {
-                Ok((widx, Event::Gone(why))) => {
-                    anyhow::bail!(
-                        "worker {} disconnected mid-build ({} of {nunits} units merged): {why}",
-                        self.links[widx].label,
-                        done.len()
-                    );
-                }
-                Ok((widx, Event::Msg(Msg::Error { message }))) => {
-                    anyhow::bail!("worker {} failed: {message}", self.links[widx].label);
-                }
-                Ok((widx, Event::Msg(Msg::Shard { iter: si, shard }))) => {
-                    if si != iter {
-                        continue; // straggler shard of a previous build
+            let wait = if self.pending.is_empty() {
+                self.timeout
+            } else {
+                self.timeout.min(Duration::from_millis(500))
+            };
+            match self.events.recv_timeout(wait) {
+                Ok((widx, event)) => {
+                    self.links[widx].last_heard = Instant::now();
+                    match event {
+                        Event::Gone(why) => {
+                            self.declare_lost(widx, &why, &mut queue, &done);
+                        }
+                        Event::Msg(Msg::Error { fatal: true, message }) => {
+                            anyhow::bail!(DispatchError::Fatal(format!(
+                                "worker {} failed: {message}",
+                                self.links[widx].label
+                            )));
+                        }
+                        Event::Msg(Msg::Error { fatal: false, message }) => {
+                            self.declare_lost(widx, &message, &mut queue, &done);
+                        }
+                        Event::Msg(Msg::Hello { version, nonce }) => {
+                            last_progress = Instant::now();
+                            if let Err(e) = self.on_hello(widx, version, nonce) {
+                                self.refuse_joiner(widx, e, &mut queue, &done)?;
+                            }
+                        }
+                        Event::Msg(Msg::SetupAck { nbf, npairs, nblocks, auth }) => {
+                            last_progress = Instant::now();
+                            if let Err(e) = self.on_setup_ack(widx, nbf, npairs, nblocks, auth) {
+                                self.refuse_joiner(widx, e, &mut queue, &done)?;
+                            }
+                        }
+                        Event::Msg(Msg::BuildAck { iter: i, fingerprint: fp }) => {
+                            if i != iter {
+                                continue; // stale ack of a previous build
+                            }
+                            if fp != fingerprint {
+                                anyhow::bail!(DispatchError::Fatal(format!(
+                                    "worker {} acked schedule {fp:#018x}, coordinator built \
+                                     {fingerprint:#018x}",
+                                    self.links[widx].label
+                                )));
+                            }
+                            last_progress = Instant::now();
+                            self.links[widx].acked_iter = iter;
+                        }
+                        Event::Msg(Msg::Shard { iter: si, shard }) => {
+                            if si != iter {
+                                continue; // straggler shard of a previous build
+                            }
+                            let unit = shard.unit;
+                            if unit >= nunits {
+                                anyhow::bail!(DispatchError::Fatal(format!(
+                                    "worker {} sent shard for unit {unit} of {nunits}",
+                                    self.links[widx].label
+                                )));
+                            }
+                            self.links[widx].outstanding.remove(&unit);
+                            last_progress = Instant::now();
+                            let stats = &mut self.stats[widx];
+                            if done.contains_key(&unit) {
+                                stats.duplicate_shards += 1;
+                            } else {
+                                stats.units += 1;
+                                stats.quads += schedule.units[unit].quads;
+                                stats.flops += schedule.units[unit].flops;
+                                stats.execute_seconds += shard.metrics.total_seconds();
+                                stats.wall_seconds += shard.metrics.pipeline_wall_seconds;
+                                done.insert(unit, *shard);
+                            }
+                        }
+                        Event::Msg(Msg::RunDone { iter: si }) => {
+                            if si == iter {
+                                last_progress = Instant::now();
+                                self.links[widx].idle = true;
+                            }
+                        }
+                        Event::Msg(other) => {
+                            anyhow::bail!(DispatchError::Fatal(format!(
+                                "worker {} sent unexpected {} mid-build",
+                                self.links[widx].label,
+                                other.kind()
+                            )));
+                        }
                     }
-                    let unit = shard.unit;
-                    if unit >= nunits {
-                        anyhow::bail!(
-                            "worker {} sent shard for unit {unit} of {nunits}",
-                            self.links[widx].label
-                        );
-                    }
-                    self.links[widx].outstanding.remove(&unit);
-                    last_progress = Instant::now();
-                    let stats = &mut self.stats[widx];
-                    if done.contains_key(&unit) {
-                        stats.duplicate_shards += 1;
-                    } else {
-                        stats.units += 1;
-                        stats.quads += schedule.units[unit].quads;
-                        stats.flops += schedule.units[unit].flops;
-                        stats.execute_seconds += shard.metrics.total_seconds();
-                        stats.wall_seconds += shard.metrics.pipeline_wall_seconds;
-                        done.insert(unit, *shard);
-                    }
-                }
-                Ok((widx, Event::Msg(Msg::RunDone { iter: si }))) => {
-                    if si == iter {
-                        self.links[widx].idle = true;
-                    }
-                }
-                Ok((widx, Event::Msg(other))) => {
-                    anyhow::bail!(
-                        "worker {} sent unexpected {} mid-build",
-                        self.links[widx].label,
-                        other.kind()
-                    );
                 }
                 Err(mpsc::RecvTimeoutError::Disconnected) => {
-                    anyhow::bail!("every dispatch reader thread exited");
+                    unreachable!("dispatcher holds a sender clone; the channel cannot disconnect")
                 }
                 Err(mpsc::RecvTimeoutError::Timeout) => {
                     // straggler rebalance: if idle capacity exists, requeue
                     // outstanding units (once each) so another worker can
                     // race the straggler; first shard per unit wins and
                     // both are bitwise identical anyway
-                    if queue.is_empty() && self.links.iter().any(|l| l.idle) {
+                    let idle_capacity = self
+                        .links
+                        .iter()
+                        .any(|l| l.alive && l.phase == Phase::Ready && l.acked_iter == iter && l.idle);
+                    if queue.is_empty() && idle_capacity {
                         let mut resteal: Vec<usize> = Vec::new();
                         for (i, link) in self.links.iter().enumerate() {
+                            if !link.alive {
+                                continue;
+                            }
                             let mut took = false;
                             for &u in &link.outstanding {
                                 if !done.contains_key(&u) && stolen.insert(u) {
@@ -414,17 +841,58 @@ impl Dispatcher {
                             queue.extend(resteal);
                         }
                     }
+                    // a worker that holds work but has said nothing for
+                    // the whole hard deadline is hung, not slow
+                    for i in 0..self.links.len() {
+                        let hung = {
+                            let l = &self.links[i];
+                            l.alive
+                                && !l.outstanding.is_empty()
+                                && l.last_heard.elapsed() > self.hard_deadline()
+                        };
+                        if hung {
+                            self.declare_lost(i, "hard timeout (no frames)", &mut queue, &done);
+                        }
+                    }
+                    self.sweep_pending(false);
                     if last_progress.elapsed() > self.hard_deadline() {
-                        anyhow::bail!(
-                            "dispatch stalled: no shard in {:?} ({} of {nunits} units merged)",
+                        // true global stall: declare the fleet dead and
+                        // fall back in-process rather than erroring out
+                        eprintln!(
+                            "dispatch: stalled — no progress in {:?} ({} of {nunits} units); \
+                             abandoning the fleet",
                             last_progress.elapsed(),
                             done.len()
                         );
+                        for i in 0..self.links.len() {
+                            self.declare_lost(i, "global stall", &mut queue, &done);
+                        }
+                        break;
                     }
                 }
             }
         }
-        Ok(done.into_values().collect())
+        self.current_build = None;
+        let missing: Vec<usize> = (0..nunits).filter(|u| !done.contains_key(u)).collect();
+        Ok(BuildOutcome { shards: done.into_values().collect(), missing })
+    }
+
+    /// A mid-SCF joiner failed its handshake: refuse it (declare lost)
+    /// unless the failure is a Fatal protocol violation.
+    fn refuse_joiner(
+        &mut self,
+        widx: usize,
+        err: DispatchError,
+        queue: &mut VecDeque<usize>,
+        done: &BTreeMap<usize, UnitShard>,
+    ) -> anyhow::Result<()> {
+        match err {
+            DispatchError::WorkerLost { reason, .. } => {
+                self.declare_lost(widx, &reason, queue, done);
+                Ok(())
+            }
+            fatal => Err(anyhow::Error::new(fatal)),
+        }
     }
 
     /// Per-worker attribution of everything dispatched so far.
@@ -436,10 +904,23 @@ impl Dispatcher {
         self.iter
     }
 
+    /// Fleet-level fault counters, folded into
+    /// [`crate::metrics::EngineMetrics`] by the engine: (workers lost,
+    /// units recovered off dead workers, transient retries, mid-SCF
+    /// joins).
+    pub fn fault_counters(&self) -> (u64, u64, u64, u64) {
+        let lost = self.stats.iter().map(|s| s.lost).sum();
+        let recovered = self.stats.iter().map(|s| s.recovered_units).sum();
+        let retries =
+            self.stats.iter().map(|s| s.retries).sum::<u64>() + self.orphan_retries;
+        let joined = self.stats.iter().map(|s| s.joined_mid_scf).sum();
+        (lost, recovered, retries, joined)
+    }
+
     /// Human-readable per-worker table (CLI + `report dispatch`).
     pub fn summary(&self) -> String {
         let mut out = format!(
-            "Dispatch — {} worker(s), {} Fock build(s)\n  {:<14} {:>6} {:>4} {:>10} {:>12} {:>10} {:>9} {:>6}\n",
+            "Dispatch — {} worker(s), {} Fock build(s)\n  {:<14} {:>6} {:>4} {:>10} {:>12} {:>10} {:>9} {:>6} {:>4} {:>6} {:>5} {:>4}\n",
             self.links.len(),
             self.iter,
             "worker",
@@ -449,11 +930,15 @@ impl Dispatcher {
             "est_flops",
             "exec_s",
             "wall_s",
-            "rebal"
+            "rebal",
+            "lost",
+            "recov",
+            "retry",
+            "join"
         );
         for s in &self.stats {
             out.push_str(&format!(
-                "  {:<14} {:>6} {:>4} {:>10} {:>12.3e} {:>10.3} {:>9.3} {:>6}\n",
+                "  {:<14} {:>6} {:>4} {:>10} {:>12.3e} {:>10.3} {:>9.3} {:>6} {:>4} {:>6} {:>5} {:>4}\n",
                 s.label,
                 s.units,
                 s.duplicate_shards,
@@ -461,7 +946,11 @@ impl Dispatcher {
                 s.flops,
                 s.execute_seconds,
                 s.wall_seconds,
-                s.rebalanced_away
+                s.rebalanced_away,
+                s.lost,
+                s.recovered_units,
+                s.retries,
+                s.joined_mid_scf
             ));
         }
         let total_flops: f64 = self.stats.iter().map(|s| s.flops).sum();
@@ -477,6 +966,14 @@ impl Dispatcher {
                 total_flops
             ));
         }
+        let (lost, recovered, retries, joined) = self.fault_counters();
+        if lost + recovered + retries + joined > 0 || !self.pending.is_empty() {
+            out.push_str(&format!(
+                "  faults: {lost} worker(s) lost, {recovered} unit(s) recovered, {retries} \
+                 retry(ies), {joined} mid-SCF join(s), {} address(es) still parked\n",
+                self.pending.len()
+            ));
+        }
         out
     }
 
@@ -486,7 +983,9 @@ impl Dispatcher {
         }
         self.shutdown_sent = true;
         for link in &mut self.links {
-            let _ = write_msg(link.writer.as_mut(), &Msg::Shutdown);
+            if link.alive {
+                let _ = write_msg(link.writer.as_mut(), &Msg::Shutdown);
+            }
         }
         for link in &mut self.links {
             if let Some(stream) = &link.tcp {
@@ -510,6 +1009,16 @@ impl Dispatcher {
                 }
             }
         }
+    }
+}
+
+fn fatal_at_launch(e: DispatchError) -> anyhow::Error {
+    // launch is strict: even worker-scoped refusals abort it
+    match e {
+        DispatchError::WorkerLost { label, reason } => {
+            anyhow::Error::new(DispatchError::Fatal(format!("worker {label}: {reason}")))
+        }
+        fatal => anyhow::Error::new(fatal),
     }
 }
 
@@ -549,5 +1058,28 @@ mod tests {
         assert_eq!(batch_size(1, 4), 1);
         assert_eq!(batch_size(20, 2), 5);
         assert_eq!(batch_size(100, 0), 8);
+    }
+
+    #[test]
+    fn dial_backoff_doubles_and_caps() {
+        let base = Duration::from_millis(250);
+        assert_eq!(dial_backoff(base, 0), Duration::from_millis(250));
+        assert_eq!(dial_backoff(base, 1), Duration::from_millis(500));
+        assert_eq!(dial_backoff(base, 2), Duration::from_secs(1));
+        assert_eq!(dial_backoff(base, 5), Duration::from_secs(8));
+        // attempts past 5 stay at the 2^5 factor; huge bases hit the cap
+        assert_eq!(dial_backoff(base, 40), Duration::from_secs(8));
+        assert_eq!(dial_backoff(Duration::from_secs(4), 3), Duration::from_secs(10));
+    }
+
+    #[test]
+    fn dispatch_error_taxonomy_classifies() {
+        let lost = DispatchError::WorkerLost { label: "local:1".into(), reason: "EOF".into() };
+        let fatal = DispatchError::Fatal("fingerprint drift".into());
+        assert!(lost.is_retryable());
+        assert!(!fatal.is_retryable());
+        assert!(lost.to_string().contains("local:1"));
+        assert!(lost.to_string().contains("EOF"));
+        assert_eq!(fatal.to_string(), "fingerprint drift");
     }
 }

@@ -40,8 +40,9 @@ mod coordinator;
 pub mod proto;
 pub mod worker;
 
-pub use coordinator::{Dispatcher, WorkerDispatchStats};
+pub use coordinator::{BuildOutcome, DispatchError, Dispatcher, WorkerDispatchStats};
 pub use proto::{JobSpec, Msg, UnitShard, PROTO_VERSION};
+pub use worker::InjectSpec;
 
 use std::path::PathBuf;
 
@@ -124,9 +125,21 @@ pub struct DispatchConfig {
     /// no `worker` subcommand): `env!("CARGO_BIN_EXE_matryoshka")`.
     pub worker_bin: Option<PathBuf>,
     /// extra argv appended to spawned local workers — the
-    /// failure-injection hooks (`--test-stall`, `--test-exit-after-shards`)
-    /// ride here in tests
+    /// chaos-injection hooks (`--inject`, `--test-stall`,
+    /// `--test-exit-after-shards`) ride here
     pub worker_args: Vec<String>,
+    /// shared wire secret (`--dispatch-secret` /
+    /// `MATRYOSHKA_DISPATCH_SECRET`): both ends must derive the same
+    /// nonce-keyed auth tag or the handshake is refused.  `None` hashes
+    /// as the empty secret, so a secretless pair still agrees.
+    pub secret: Option<String>,
+    /// launch-time dial attempts per remote worker before the address is
+    /// parked for elastic late-join retries (launch fails only when
+    /// *every* worker stays unreachable)
+    pub dial_retries: u32,
+    /// base backoff between dial retries; doubles per attempt, capped at
+    /// ~10 s for the mid-SCF late-join sweep
+    pub dial_backoff_ms: u64,
 }
 
 impl Default for DispatchConfig {
@@ -136,6 +149,9 @@ impl Default for DispatchConfig {
             straggler_timeout_ms: 30_000,
             worker_bin: None,
             worker_args: Vec::new(),
+            secret: None,
+            dial_retries: 3,
+            dial_backoff_ms: 250,
         }
     }
 }

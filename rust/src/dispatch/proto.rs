@@ -12,9 +12,13 @@
 //! Message flow (w = worker, d = dispatcher):
 //!
 //! ```text
-//! w→d  Hello{version}              on connect
-//! d→w  Setup{JobSpec}              basis + engine config, verbatim floats
-//! w→d  SetupAck{nbf,npairs,nblocks}  sanity echo of the rebuilt system
+//! w→d  Hello{version, nonce}       on connect (nonce: the worker's
+//!                                   shared-secret challenge)
+//! d→w  Setup{JobSpec, nonce, auth}  basis + engine config, verbatim
+//!      floats; auth = auth_tag(secret, worker nonce) answers the
+//!      worker's challenge, nonce challenges the coordinator's peer
+//! w→d  SetupAck{nbf,npairs,nblocks,auth}  sanity echo of the rebuilt
+//!      system; auth answers the coordinator's challenge
 //! per Fock build:
 //! d→w  Build{iter, fingerprint, delta_screen, tuner snapshot, density}
 //!      (delta_screen: density is ΔD — re-run the density-weighted
@@ -24,8 +28,19 @@
 //! d→w  Run{iter, unit ids}           work-stealing batches
 //! w→d  Shard{iter, unit, partial G, observations, metrics}   per unit
 //! w→d  RunDone{iter}                 batch drained, worker idle
-//! either direction: Error{message}; d→w Shutdown at teardown
+//! either direction: Error{fatal, message} — fatal means the whole
+//! dispatch must abort (fingerprint/config drift, secret mismatch);
+//! non-fatal means only the sending worker is done for (execution
+//! failure — the coordinator requeues its units); d→w Shutdown at
+//! teardown
 //! ```
+//!
+//! The secret handshake is an *honesty* check, not cryptography: FNV-1a
+//! over (secret, nonce) proves both ends were configured with the same
+//! `--dispatch-secret`, so a stray process that dials a worker port (or
+//! a worker from a different deployment) is refused before any work or
+//! density data crosses the wire.  It does not resist an adversary who
+//! can read the wire.
 
 use std::collections::BTreeMap;
 use std::io::{Read, Write};
@@ -41,7 +56,23 @@ use crate::runtime::{BackendKind, ClassKey, EriEvalStrategy, LadderMode};
 
 /// Bumped whenever the frame layout changes; `Hello` carries it so a
 /// version-skewed worker fails loudly at connect time.
-pub const PROTO_VERSION: u32 = 4;
+/// v5: shared-secret nonce/auth handshake on Hello/Setup/SetupAck, typed
+/// fatal flag on Error frames, dispatch fault counters in the metrics
+/// codec.
+pub const PROTO_VERSION: u32 = 5;
+
+/// Keyed digest both ends derive from the shared dispatch secret and the
+/// peer's nonce.  No secret configured hashes as the empty string, so
+/// secretless↔secretless pairs agree and any secretless↔secretful pair
+/// is refused.  FNV-1a, i.e. an honesty check against misconfiguration,
+/// not cryptographic authentication (see the module docs).
+pub fn auth_tag(secret: &str, nonce: u64) -> u64 {
+    let mut h = crate::util::Fnv64::new();
+    h.str("matryoshka-dispatch-auth");
+    h.str(secret);
+    h.u64(nonce);
+    h.finish()
+}
 
 /// Upper bound on a single frame (density and partial-G frames are
 /// nbf²×8 bytes — 256 MiB covers nbf up to ~5700 with header room to
@@ -91,9 +122,9 @@ pub struct UnitShard {
 /// A dispatch protocol message.
 #[derive(Debug)]
 pub enum Msg {
-    Hello { version: u32 },
-    Setup { spec: Box<JobSpec> },
-    SetupAck { nbf: usize, npairs: usize, nblocks: usize },
+    Hello { version: u32, nonce: u64 },
+    Setup { spec: Box<JobSpec>, nonce: u64, auth: u64 },
+    SetupAck { nbf: usize, npairs: usize, nblocks: usize, auth: u64 },
     Build {
         iter: u64,
         fingerprint: u64,
@@ -107,7 +138,11 @@ pub enum Msg {
     Run { iter: u64, units: Vec<usize> },
     Shard { iter: u64, shard: Box<UnitShard> },
     RunDone { iter: u64 },
-    Error { message: String },
+    /// `fatal` marks errors that invalidate the whole dispatch (schedule
+    /// fingerprint / config drift, secret mismatch, protocol violation);
+    /// non-fatal errors lose only the sending worker — the coordinator
+    /// requeues its outstanding units onto survivors
+    Error { fatal: bool, message: String },
     Shutdown,
 }
 
@@ -208,6 +243,10 @@ impl Enc {
         self.u64(m.full_builds);
         self.f64(m.incremental_seconds);
         self.f64(m.full_seconds);
+        self.u64(m.dispatch_lost_workers);
+        self.u64(m.dispatch_recovered_units);
+        self.u64(m.dispatch_retries);
+        self.u64(m.dispatch_joined_mid_scf);
     }
     fn observation(&mut self, ob: &TunerObservation) {
         self.class(ob.class);
@@ -395,6 +434,10 @@ impl<'a> Dec<'a> {
         m.full_builds = self.u64()?;
         m.incremental_seconds = self.f64()?;
         m.full_seconds = self.f64()?;
+        m.dispatch_lost_workers = self.u64()?;
+        m.dispatch_recovered_units = self.u64()?;
+        m.dispatch_retries = self.u64()?;
+        m.dispatch_joined_mid_scf = self.u64()?;
         Ok(m)
     }
     fn observation(&mut self) -> anyhow::Result<TunerObservation> {
@@ -460,19 +503,23 @@ impl Msg {
     pub fn encode(&self) -> Vec<u8> {
         let mut e = Enc::default();
         match self {
-            Msg::Hello { version } => {
+            Msg::Hello { version, nonce } => {
                 e.u8(TAG_HELLO);
                 e.u32(*version);
+                e.u64(*nonce);
             }
-            Msg::Setup { spec } => {
+            Msg::Setup { spec, nonce, auth } => {
                 e.u8(TAG_SETUP);
+                e.u64(*nonce);
+                e.u64(*auth);
                 e.spec(spec);
             }
-            Msg::SetupAck { nbf, npairs, nblocks } => {
+            Msg::SetupAck { nbf, npairs, nblocks, auth } => {
                 e.u8(TAG_SETUP_ACK);
                 e.usize(*nbf);
                 e.usize(*npairs);
                 e.usize(*nblocks);
+                e.u64(*auth);
             }
             Msg::Build { iter, fingerprint, delta_screen, snapshot, density } => {
                 e.u8(TAG_BUILD);
@@ -514,8 +561,9 @@ impl Msg {
                 e.u8(TAG_RUN_DONE);
                 e.u64(*iter);
             }
-            Msg::Error { message } => {
+            Msg::Error { fatal, message } => {
                 e.u8(TAG_ERROR);
+                e.bool(*fatal);
                 e.str(message);
             }
             Msg::Shutdown => {
@@ -528,11 +576,18 @@ impl Msg {
     pub fn decode(buf: &[u8]) -> anyhow::Result<Msg> {
         let mut d = Dec::new(buf);
         let msg = match d.u8()? {
-            TAG_HELLO => Msg::Hello { version: d.u32()? },
-            TAG_SETUP => Msg::Setup { spec: Box::new(d.spec()?) },
-            TAG_SETUP_ACK => {
-                Msg::SetupAck { nbf: d.usize()?, npairs: d.usize()?, nblocks: d.usize()? }
+            TAG_HELLO => Msg::Hello { version: d.u32()?, nonce: d.u64()? },
+            TAG_SETUP => {
+                let nonce = d.u64()?;
+                let auth = d.u64()?;
+                Msg::Setup { spec: Box::new(d.spec()?), nonce, auth }
             }
+            TAG_SETUP_ACK => Msg::SetupAck {
+                nbf: d.usize()?,
+                npairs: d.usize()?,
+                nblocks: d.usize()?,
+                auth: d.u64()?,
+            },
             TAG_BUILD => {
                 let iter = d.u64()?;
                 let fingerprint = d.u64()?;
@@ -575,7 +630,7 @@ impl Msg {
                 }
             }
             TAG_RUN_DONE => Msg::RunDone { iter: d.u64()? },
-            TAG_ERROR => Msg::Error { message: d.str()? },
+            TAG_ERROR => Msg::Error { fatal: d.bool()?, message: d.str()? },
             TAG_SHUTDOWN => Msg::Shutdown,
             other => anyhow::bail!("unknown dispatch message tag {other}"),
         };
@@ -636,9 +691,13 @@ pub fn read_msg(r: &mut dyn Read) -> anyhow::Result<Msg> {
 
 impl JobSpec {
     /// Process-stable digest of the spec (logged on both ends; the real
-    /// schedule fingerprint is checked per build on top of this).
+    /// schedule fingerprint is checked per build on top of this).  Hashes
+    /// the spec encoding alone — Setup frames also carry per-link
+    /// nonce/auth words, which must not perturb the digest.
     pub fn fingerprint(&self) -> u64 {
-        crate::util::fnv1a64(&Msg::Setup { spec: Box::new(self.clone()) }.encode())
+        let mut e = Enc::default();
+        e.spec(self);
+        crate::util::fnv1a64(&e.0)
     }
 }
 
@@ -724,10 +783,26 @@ mod tests {
             metrics,
         };
 
+        let mut chaos_metrics = EngineMetrics::default();
+        chaos_metrics.dispatch_lost_workers = 2;
+        chaos_metrics.dispatch_recovered_units = 17;
+        chaos_metrics.dispatch_retries = 5;
+        chaos_metrics.dispatch_joined_mid_scf = 1;
+        let chaos_shard = UnitShard {
+            unit: 0,
+            g: Matrix::zeros(1, 1),
+            observations: Vec::new(),
+            metrics: chaos_metrics,
+        };
+
         for msg in [
-            Msg::Hello { version: PROTO_VERSION },
-            Msg::Setup { spec: Box::new(sample_spec()) },
-            Msg::SetupAck { nbf: 7, npairs: 28, nblocks: 12 },
+            Msg::Hello { version: PROTO_VERSION, nonce: 0xfeed_face_dead_0001 },
+            Msg::Setup {
+                spec: Box::new(sample_spec()),
+                nonce: 42,
+                auth: auth_tag("hunter2", 0xfeed_face_dead_0001),
+            },
+            Msg::SetupAck { nbf: 7, npairs: 28, nblocks: 12, auth: auth_tag("hunter2", 42) },
             Msg::Build {
                 iter: 3,
                 fingerprint: 0xdead_beef_cafe_f00d,
@@ -738,12 +813,29 @@ mod tests {
             Msg::BuildAck { iter: 3, fingerprint: 1 },
             Msg::Run { iter: 3, units: vec![0, 5, 63] },
             Msg::Shard { iter: 3, shard: Box::new(shard) },
+            Msg::Shard { iter: 4, shard: Box::new(chaos_shard) },
             Msg::RunDone { iter: 3 },
-            Msg::Error { message: "kaboom: worker 1 lost its marbles".into() },
+            Msg::Error { fatal: false, message: "kaboom: worker 1 lost its marbles".into() },
+            Msg::Error { fatal: true, message: "fingerprint mismatch".into() },
             Msg::Shutdown,
         ] {
             round_trip(&msg);
         }
+    }
+
+    #[test]
+    fn auth_tag_separates_secrets_and_nonces() {
+        // same secret + nonce agree; any mismatch disagrees
+        assert_eq!(auth_tag("s", 7), auth_tag("s", 7));
+        assert_ne!(auth_tag("s", 7), auth_tag("s", 8));
+        assert_ne!(auth_tag("s", 7), auth_tag("t", 7));
+        // "no secret" is the empty string: a secretless peer cannot
+        // satisfy a secretful one
+        assert_ne!(auth_tag("", 7), auth_tag("s", 7));
+        // decoded Error frames keep the fatal bit distinct
+        let fatal = Msg::Error { fatal: true, message: "x".into() };
+        let soft = Msg::Error { fatal: false, message: "x".into() };
+        assert_ne!(fatal.encode(), soft.encode());
     }
 
     #[test]
@@ -772,8 +864,8 @@ mod tests {
     #[test]
     fn setup_spec_reconstructs_the_basis_bit_exactly() {
         let spec = sample_spec();
-        match round_trip(&Msg::Setup { spec: Box::new(spec.clone()) }) {
-            Msg::Setup { spec: back } => {
+        match round_trip(&Msg::Setup { spec: Box::new(spec.clone()), nonce: 9, auth: 11 }) {
+            Msg::Setup { spec: back, nonce: 9, auth: 11 } => {
                 assert_eq!(back.basis.nbf, spec.basis.nbf);
                 assert_eq!(back.basis.shells.len(), spec.basis.shells.len());
                 for (a, b) in back.basis.shells.iter().zip(&spec.basis.shells) {

@@ -10,6 +10,10 @@
 //! (`--listen host:port`, dialed by `--dispatch remote:...`).  The serve
 //! loop is a plain function over `Read`/`Write`, so tests drive it
 //! in-process over a loopback socket too.
+//!
+//! Chaos injection ([`InjectSpec`], CLI `--inject`) makes every failure
+//! mode the coordinator must survive deterministic and reproducible:
+//! crash after N shards, stall, clean connection drop, corrupt frame.
 
 use std::io::{BufReader, BufWriter, Read, Write};
 use std::panic::{catch_unwind, AssertUnwindSafe};
@@ -27,7 +31,7 @@ use crate::pipeline::{
 };
 use crate::runtime::{create_backend, EriBackend};
 
-use super::proto::{read_msg, write_msg, JobSpec, Msg, UnitShard, PROTO_VERSION};
+use super::proto::{auth_tag, read_msg, write_frame, write_msg, JobSpec, Msg, UnitShard, PROTO_VERSION};
 
 /// Failure-injection hook: before sending the shard of `unit`, worker
 /// number `worker` sleeps `millis` — the deterministic straggler the
@@ -54,15 +58,75 @@ impl StallSpec {
     }
 }
 
+/// What a chaos injection does once it triggers.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum InjectKind {
+    /// crash (dirty stream death, no Error frame) after N shards sent
+    KillAfter(usize),
+    /// sleep this many ms before the first shard of every build
+    Stall(u64),
+    /// close the connection cleanly after N shards (a `--listen` worker
+    /// survives to accept a new session — the rejoin path)
+    DropConn(usize),
+    /// after N good shards, emit one garbage frame then die
+    CorruptFrame(usize),
+}
+
+/// Deterministic chaos injection for the fault-tolerance tests and the
+/// CI chaos smoke.  CLI form `--inject KIND[:ARG][@WORKER]`:
+/// `kill-after:2`, `stall:1500`, `drop-conn:1@0`, `corrupt-frame:2@1`.
+/// With `@WORKER` only the worker with that `--worker-index` misbehaves;
+/// without it, every worker does.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct InjectSpec {
+    pub kind: InjectKind,
+    pub only_worker: Option<usize>,
+}
+
+impl InjectSpec {
+    pub fn parse(spec: &str) -> anyhow::Result<InjectSpec> {
+        let bad = || {
+            anyhow::anyhow!(
+                "--inject wants kill-after:N | stall:MS | drop-conn:N | corrupt-frame:N, \
+                 optionally @WORKER; got {spec:?}"
+            )
+        };
+        let (body, only_worker) = match spec.split_once('@') {
+            Some((body, w)) => (body, Some(w.parse().map_err(|_| bad())?)),
+            None => (spec, None),
+        };
+        let (kind, arg) = body.split_once(':').ok_or_else(bad)?;
+        let kind = match kind {
+            "kill-after" => InjectKind::KillAfter(arg.parse().map_err(|_| bad())?),
+            "stall" => InjectKind::Stall(arg.parse().map_err(|_| bad())?),
+            "drop-conn" => InjectKind::DropConn(arg.parse().map_err(|_| bad())?),
+            "corrupt-frame" => InjectKind::CorruptFrame(arg.parse().map_err(|_| bad())?),
+            _ => return Err(bad()),
+        };
+        Ok(InjectSpec { kind, only_worker })
+    }
+
+    /// Does this injection apply to worker `index`?
+    pub fn applies_to(&self, index: usize) -> bool {
+        self.only_worker.map_or(true, |w| w == index)
+    }
+}
+
 /// Worker-process options (CLI flags / test hooks).
 #[derive(Clone, Debug, Default)]
 pub struct WorkerOptions {
     /// this worker's index as the coordinator numbered it (`--worker-index`)
     pub index: usize,
-    /// failure injection: deterministic straggler (see [`StallSpec`])
+    /// shared wire secret (`--dispatch-secret` /
+    /// `MATRYOSHKA_DISPATCH_SECRET`); "" pairs with a secretless
+    /// coordinator
+    pub secret: String,
+    /// chaos injection (see [`InjectSpec`])
+    pub inject: Option<InjectSpec>,
+    /// legacy injection: deterministic straggler (see [`StallSpec`])
     pub stall: Option<StallSpec>,
-    /// failure injection: simulate a crash by dropping the connection
-    /// (no Error frame, nonzero exit) after this many shards were sent
+    /// legacy injection: crash after this many shards
+    /// (`--inject kill-after:N` is the modern spelling)
     pub exit_after_shards: Option<usize>,
 }
 
@@ -148,25 +212,49 @@ fn panic_text(payload: Box<dyn std::any::Any + Send>) -> String {
         .unwrap_or_else(|| "non-string panic payload".to_string())
 }
 
-/// Report a fatal condition to the coordinator (best effort) and fail.
-fn fail<R>(w: &mut dyn Write, message: String) -> anyhow::Result<R> {
-    let _ = write_msg(w, &Msg::Error { message: message.clone() });
+/// Report an error to the coordinator (best effort) and fail.  `fatal`
+/// tells the coordinator whether to abort the whole build (protocol /
+/// config / auth violations) or just write this worker off and recover
+/// (panics, transient execution failures).
+fn fail<R>(w: &mut dyn Write, fatal: bool, message: String) -> anyhow::Result<R> {
+    let _ = write_msg(w, &Msg::Error { fatal, message: message.clone() });
     Err(anyhow::anyhow!(message))
 }
 
 /// Serve one dispatch session over a byte stream.  Returns `Ok(())` on a
-/// clean `Shutdown`; any protocol violation, engine error or fingerprint
-/// mismatch sends an `Error` frame (when possible) and returns `Err`.
+/// clean `Shutdown` (or a clean injected `drop-conn`); any protocol
+/// violation, engine error or fingerprint mismatch sends an `Error`
+/// frame (when possible) and returns `Err`.
 pub fn serve<R: Read, W: Write>(r: &mut R, w: &mut W, opts: &WorkerOptions) -> anyhow::Result<()> {
-    write_msg(w, &Msg::Hello { version: PROTO_VERSION })?;
-    let spec = match read_msg(r)? {
-        Msg::Setup { spec } => spec,
+    let inject = opts.inject.filter(|i| i.applies_to(opts.index));
+    // fresh per-session nonce for the Setup auth challenge — the
+    // coordinator must key its auth tag over exactly this value
+    let my_nonce = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_nanos() as u64)
+        .unwrap_or(0x6e6f_6e63)
+        ^ (u64::from(std::process::id()) << 32)
+        ^ (opts.index as u64).rotate_left(17);
+    write_msg(w, &Msg::Hello { version: PROTO_VERSION, nonce: my_nonce })?;
+    let (spec, setup_nonce) = match read_msg(r)? {
+        Msg::Setup { spec, nonce, auth } => {
+            if auth != auth_tag(&opts.secret, my_nonce) {
+                return fail(
+                    w,
+                    true,
+                    "dispatch secret mismatch: coordinator sent a bad auth tag (set the same \
+                     --dispatch-secret / MATRYOSHKA_DISPATCH_SECRET on both ends)"
+                        .to_string(),
+                );
+            }
+            (spec, nonce)
+        }
         Msg::Shutdown => return Ok(()),
-        other => return fail(w, format!("worker expected Setup, got {}", other.kind())),
+        other => return fail(w, true, format!("worker expected Setup, got {}", other.kind())),
     };
     let state = match WorkerState::build(&spec) {
         Ok(s) => s,
-        Err(e) => return fail(w, format!("worker failed to build {:?}: {e}", spec.title)),
+        Err(e) => return fail(w, true, format!("worker failed to build {:?}: {e}", spec.title)),
     };
     eprintln!(
         "worker {}: {} — {} shells, {} pairs, {} blocks, {} thread(s)",
@@ -183,6 +271,7 @@ pub fn serve<R: Read, W: Write>(r: &mut R, w: &mut W, opts: &WorkerOptions) -> a
             nbf: state.basis.nbf,
             npairs: state.pairs.pairs.len(),
             nblocks: state.plan.blocks.len(),
+            auth: auth_tag(&opts.secret, setup_nonce),
         },
     )?;
 
@@ -190,12 +279,14 @@ pub fn serve<R: Read, W: Write>(r: &mut R, w: &mut W, opts: &WorkerOptions) -> a
     // filtered plan is None for full builds (units index state.plan)
     let mut current: Option<(u64, ChunkSchedule, Matrix, Option<BlockPlan>)> = None;
     let mut shards_sent = 0usize;
+    let mut stalled_iter = 0u64;
     loop {
         match read_msg(r)? {
             Msg::Build { iter, fingerprint, delta_screen, snapshot, density } => {
                 if density.nrows() != state.basis.nbf || density.ncols() != state.basis.nbf {
                     return fail(
                         w,
+                        true,
                         format!(
                             "density is {}x{} but the basis has {} functions",
                             density.nrows(),
@@ -229,12 +320,13 @@ pub fn serve<R: Read, W: Write>(r: &mut R, w: &mut W, opts: &WorkerOptions) -> a
                     state.basis.nbf,
                 ) {
                     Ok(s) => s,
-                    Err(e) => return fail(w, format!("worker schedule build failed: {e}")),
+                    Err(e) => return fail(w, true, format!("worker schedule build failed: {e}")),
                 };
                 let mine = schedule.fingerprint();
                 if mine != fingerprint {
                     return fail(
                         w,
+                        true,
                         format!(
                             "schedule fingerprint mismatch: worker {} built {mine:#018x} but the \
                              coordinator sent {fingerprint:#018x} — coordinator and worker \
@@ -248,14 +340,19 @@ pub fn serve<R: Read, W: Write>(r: &mut R, w: &mut W, opts: &WorkerOptions) -> a
             }
             Msg::Run { iter, units } => {
                 let Some((cur, schedule, density, filtered)) = current.as_ref() else {
-                    return fail(w, "worker got Run before any Build".to_string());
+                    return fail(w, true, "worker got Run before any Build".to_string());
                 };
                 if *cur != iter {
-                    return fail(w, format!("worker got Run for build {iter}, current is {cur}"));
+                    return fail(
+                        w,
+                        true,
+                        format!("worker got Run for build {iter}, current is {cur}"),
+                    );
                 }
                 if let Some(&bad) = units.iter().find(|&&u| u >= schedule.units.len()) {
                     return fail(
                         w,
+                        true,
                         format!("assigned unit {bad} beyond the schedule's {}", schedule.units.len()),
                     );
                 }
@@ -275,12 +372,23 @@ pub fn serve<R: Read, W: Write>(r: &mut R, w: &mut W, opts: &WorkerOptions) -> a
                     run_units_streamed(&state.pool, workers, &ctx, density, &units)
                 }));
                 let outs = match ran {
+                    // a panic or execution failure poisons only this
+                    // worker — the coordinator requeues and recovers
                     Err(panic) => {
-                        return fail(w, format!("worker panicked: {}", panic_text(panic)))
+                        return fail(w, false, format!("worker panicked: {}", panic_text(panic)))
                     }
-                    Ok(Err(e)) => return fail(w, format!("worker unit execution failed: {e}")),
+                    Ok(Err(e)) => {
+                        return fail(w, false, format!("worker unit execution failed: {e}"))
+                    }
                     Ok(Ok(outs)) => outs,
                 };
+                if let Some(InjectSpec { kind: InjectKind::Stall(ms), .. }) = inject {
+                    if stalled_iter != iter {
+                        stalled_iter = iter;
+                        eprintln!("worker {}: injected {ms}ms stall (build {iter})", opts.index);
+                        std::thread::sleep(std::time::Duration::from_millis(ms));
+                    }
+                }
                 for (unit, out) in outs {
                     if let Some(stall) = opts.stall {
                         if stall.worker == opts.index && stall.unit == unit {
@@ -304,6 +412,41 @@ pub fn serve<R: Read, W: Write>(r: &mut R, w: &mut W, opts: &WorkerOptions) -> a
                         },
                     )?;
                     shards_sent += 1;
+                    match inject {
+                        Some(InjectSpec { kind: InjectKind::KillAfter(n), .. })
+                            if shards_sent >= n =>
+                        {
+                            // simulate a crash: no Error frame, the stream
+                            // just dies (the CLI exits nonzero on this)
+                            eprintln!("worker {}: injected crash after {n} shard(s)", opts.index);
+                            anyhow::bail!("injected worker crash after {n} shard(s)");
+                        }
+                        Some(InjectSpec { kind: InjectKind::DropConn(n), .. })
+                            if shards_sent >= n =>
+                        {
+                            // clean connection drop: the session ends, a
+                            // `--listen` worker accepts the coordinator's
+                            // re-dial as a fresh session (rejoin path)
+                            eprintln!(
+                                "worker {}: injected connection drop after {n} shard(s)",
+                                opts.index
+                            );
+                            return Ok(());
+                        }
+                        Some(InjectSpec { kind: InjectKind::CorruptFrame(n), .. })
+                            if shards_sent >= n =>
+                        {
+                            // a framed payload the decoder must reject
+                            // (bad message tag), then die
+                            eprintln!(
+                                "worker {}: injected corrupt frame after {n} shard(s)",
+                                opts.index
+                            );
+                            write_frame(w, &[0xFF, 0xDE, 0xAD, 0xBE, 0xEF])?;
+                            anyhow::bail!("injected corrupt frame after {n} shard(s)");
+                        }
+                        _ => {}
+                    }
                     if let Some(n) = opts.exit_after_shards {
                         if shards_sent >= n {
                             // simulate a crash: no Error frame, the stream
@@ -315,10 +458,10 @@ pub fn serve<R: Read, W: Write>(r: &mut R, w: &mut W, opts: &WorkerOptions) -> a
                 write_msg(w, &Msg::RunDone { iter })?;
             }
             Msg::Shutdown => return Ok(()),
-            Msg::Error { message } => {
+            Msg::Error { message, .. } => {
                 anyhow::bail!("coordinator reported: {message}");
             }
-            other => return fail(w, format!("worker got unexpected {}", other.kind())),
+            other => return fail(w, true, format!("worker got unexpected {}", other.kind())),
         }
     }
 }
@@ -374,5 +517,32 @@ mod tests {
         for bad in ["", "1:2", "1:2:3:4", "a:2:3", "1:b:3", "1:2:c"] {
             assert!(StallSpec::parse(bad).is_err(), "{bad:?}");
         }
+    }
+
+    #[test]
+    fn inject_spec_parses_every_kind_and_rejects_garbage() {
+        assert_eq!(
+            InjectSpec::parse("kill-after:2").unwrap(),
+            InjectSpec { kind: InjectKind::KillAfter(2), only_worker: None }
+        );
+        assert_eq!(
+            InjectSpec::parse("stall:1500@1").unwrap(),
+            InjectSpec { kind: InjectKind::Stall(1500), only_worker: Some(1) }
+        );
+        assert_eq!(
+            InjectSpec::parse("drop-conn:1@0").unwrap(),
+            InjectSpec { kind: InjectKind::DropConn(1), only_worker: Some(0) }
+        );
+        assert_eq!(
+            InjectSpec::parse("corrupt-frame:3").unwrap(),
+            InjectSpec { kind: InjectKind::CorruptFrame(3), only_worker: None }
+        );
+        for bad in ["", "kill-after", "kill-after:x", "vaporize:1", "stall:2@w", "@1"] {
+            assert!(InjectSpec::parse(bad).is_err(), "{bad:?}");
+        }
+        let gated = InjectSpec::parse("kill-after:1@2").unwrap();
+        assert!(gated.applies_to(2));
+        assert!(!gated.applies_to(0));
+        assert!(InjectSpec::parse("stall:5").unwrap().applies_to(7));
     }
 }

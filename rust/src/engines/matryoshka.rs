@@ -548,14 +548,26 @@ impl MatryoshkaEngine {
     /// fingerprint first).  With `delta_screen`, `density` is ΔD and
     /// workers re-run the density-weighted filter themselves to rebuild —
     /// and verify — the per-iteration schedule.
+    ///
+    /// Fault tolerance: worker loss never fails the build.  The
+    /// dispatcher requeues a dead worker's units onto survivors, and any
+    /// units the whole fleet failed to deliver come back as
+    /// `BuildOutcome::missing` — executed here through the SAME
+    /// `run_units_streamed` path the workers run, so the merged G is
+    /// bitwise identical no matter how many workers died.  `plan` = None
+    /// runs the static plan; incremental builds pass the ΔD-filtered
+    /// plan their schedule was materialized from (the fallback needs it
+    /// to execute units locally).
     fn run_dispatched(
         &mut self,
+        plan: Option<&BlockPlan>,
         schedule: &ChunkSchedule,
         density: &Matrix,
         delta_screen: bool,
     ) -> anyhow::Result<Matrix> {
         let n = self.basis.nbf;
-        if schedule.units.is_empty() {
+        let nunits = schedule.units.len();
+        if nunits == 0 {
             return Ok(Matrix::zeros(n, n));
         }
         if self.dispatcher.is_none() {
@@ -567,13 +579,59 @@ impl MatryoshkaEngine {
         }
         let snapshot = self.tuner.batch_snapshot();
         let dispatcher = self.dispatcher.as_mut().expect("dispatcher launched above");
-        let shards = dispatcher.run_build(schedule, &snapshot, density, delta_screen)?;
-        let g = merge_unit_shards(n, schedule.units.len(), shards.iter().map(|s| (s.unit, &s.g)))?;
+        let outcome = if dispatcher.fleet_exhausted() {
+            // every worker already died and no address is left to dial —
+            // skip the wire entirely and run the whole build in-process
+            crate::dispatch::BuildOutcome { shards: Vec::new(), missing: (0..nunits).collect() }
+        } else {
+            dispatcher.run_build(schedule, &snapshot, density, delta_screen)?
+        };
+        let mut local = Vec::new();
+        if !outcome.missing.is_empty() {
+            eprintln!(
+                "dispatch: completing {} of {nunits} unit(s) in-process after worker loss",
+                outcome.missing.len()
+            );
+            let ctx = ExecContext {
+                basis: &self.basis,
+                pairs: &self.pairs,
+                plan: plan.unwrap_or(&self.plan),
+                backend: self.backend.as_ref(),
+                schedule,
+                mode: self.config.pipeline,
+                digest: self.config.digest,
+                cache: None,
+                collect_cache: false,
+            };
+            let workers = self.threads.min(outcome.missing.len()).max(1);
+            local = run_units_streamed(&self.pool, workers, &ctx, density, &outcome.missing)?;
+        }
+        let g = merge_unit_shards(
+            n,
+            nunits,
+            outcome
+                .shards
+                .iter()
+                .map(|s| (s.unit, &s.g))
+                .chain(local.iter().map(|(u, o)| (*u, &o.g))),
+        )?;
         let mut observations = Vec::new();
-        for shard in &shards {
+        for shard in &outcome.shards {
             self.metrics.merge(&shard.metrics);
             observations.extend(shard.observations.iter().copied());
         }
+        for (_, out) in &local {
+            self.metrics.merge(&out.metrics);
+            observations.extend(out.observations.iter().copied());
+        }
+        // fleet fault counters are cumulative session totals — assign,
+        // don't accumulate (workers ship zeros in their shard metrics)
+        let (lost, recovered, retries, joined) =
+            self.dispatcher.as_ref().expect("dispatcher launched above").fault_counters();
+        self.metrics.dispatch_lost_workers = lost;
+        self.metrics.dispatch_recovered_units = recovered;
+        self.metrics.dispatch_retries = retries;
+        self.metrics.dispatch_joined_mid_scf = joined;
         observations.sort_by_key(|ob| ob.entry);
         self.tuner.apply_observations(&observations);
         Ok(g)
@@ -648,7 +706,7 @@ impl MatryoshkaEngine {
     fn build_full(&mut self, density: &Matrix) -> anyhow::Result<(Matrix, FockBuildStats)> {
         let mut g = if self.config.dispatch.mode.is_on() {
             let schedule = self.build_schedule()?;
-            self.run_dispatched(&schedule, density, false)?
+            self.run_dispatched(None, &schedule, density, false)?
         } else if self.config.stored {
             self.build_stored(density)?
         } else {
@@ -687,7 +745,7 @@ impl MatryoshkaEngine {
             // every contribution bounded out — ΔG is exactly zero
             Matrix::zeros(n, n)
         } else if self.config.dispatch.mode.is_on() {
-            self.run_dispatched(&schedule, &delta, true)?
+            self.run_dispatched(Some(&filtered), &schedule, &delta, true)?
         } else {
             self.run_schedule(Some(&filtered), &schedule, &delta, None, false)?.0
         };

@@ -47,6 +47,10 @@ fn usage() -> ! {
          \u{20}         [--threads N (0 = auto)] [--pipeline staged|lockstep]\n\
          \u{20}         [--ladder elastic|fixed] [--working-set-kb N|auto] [--wide-opb-max X]\n\
          \u{20}         [--dispatch off|local:N|remote:host:port,...] [--dispatch-timeout-ms N]\n\
+         \u{20}         [--dispatch-secret S (or MATRYOSHKA_DISPATCH_SECRET)]\n\
+         \u{20}         [--dispatch-retries N] [--dispatch-backoff-ms N]\n\
+         \u{20}         [--inject kill-after:N|stall:MS|drop-conn:N|corrupt-frame:N[@W]\n\
+         \u{20}          (chaos: forwarded to spawned local workers)]\n\
          \u{20}         [--schwarz-cal-path FILE]\n\
          \u{20}         [--incremental off|on|every:N (delta-Fock builds after iteration 1)]\n\
          \u{20}         [--diis-size N] [--scf-trace-path FILE (per-iteration CSV)]\n\
@@ -62,6 +66,8 @@ fn usage() -> ! {
          \n  info    [--backend native|pjrt] [--ladder elastic|fixed] [--artifacts DIR]\n\
          \u{20}         [--eri-strategy kernels|tables|recursion]\n\
          \n  worker  (--stdio | --listen HOST:PORT [--once]) [--worker-index N]\n\
+         \u{20}         [--dispatch-secret S (or MATRYOSHKA_DISPATCH_SECRET)]\n\
+         \u{20}         [--inject kill-after:N|stall:MS|drop-conn:N|corrupt-frame:N[@W]]\n\
          \u{20}         [--schwarz-cal-path FILE]\n\
          \n  codegen (--write FILE | --check FILE) — emit/verify the generated\n\
          \u{20}         ERI kernel source (CI drift job re-runs the generator)"
@@ -131,11 +137,31 @@ fn engine_config(args: &Args) -> anyhow::Result<MatryoshkaConfig> {
         dispatch: DispatchConfig {
             mode: DispatchMode::parse(&args.str_or("dispatch", "off"))?,
             straggler_timeout_ms: args.usize_or("dispatch-timeout-ms", 30_000)? as u64,
+            secret: dispatch_secret(args),
+            dial_retries: args.usize_or("dispatch-retries", 3)? as u32,
+            dial_backoff_ms: args.usize_or("dispatch-backoff-ms", 250)? as u64,
+            // chaos injection rides to spawned local workers as argv
+            worker_args: match args.get("inject") {
+                Some(spec) => {
+                    // parse up front so a typo fails here, not in N workers
+                    matryoshka::dispatch::InjectSpec::parse(spec)?;
+                    vec!["--inject".to_string(), spec.to_string()]
+                }
+                None => Vec::new(),
+            },
             ..Default::default()
         },
         schwarz_cal_path: args.get("schwarz-cal-path").map(str::to_string),
         incremental: IncrementalMode::parse(&args.str_or("incremental", "off"))?,
     })
+}
+
+/// `--dispatch-secret S` beats the `MATRYOSHKA_DISPATCH_SECRET` env var;
+/// both unset means the (authenticated) empty secret.
+fn dispatch_secret(args: &Args) -> Option<String> {
+    args.get("dispatch-secret")
+        .map(str::to_string)
+        .or_else(|| std::env::var("MATRYOSHKA_DISPATCH_SECRET").ok())
 }
 
 fn load_molecule(args: &Args) -> anyhow::Result<Molecule> {
@@ -380,16 +406,23 @@ fn cmd_info(args: &Args) -> anyhow::Result<()> {
 
 /// Dispatch worker mode: serve schedule slices over stdio (spawned by a
 /// `--dispatch local:N` coordinator) or TCP (`--dispatch remote:...`).
-/// `--test-stall W:U:MS` and `--test-exit-after-shards N` are
-/// failure-injection hooks for the dispatch tests.
+/// `--inject KIND:ARG[@W]` (and the legacy `--test-stall W:U:MS` /
+/// `--test-exit-after-shards N`) are chaos-injection hooks for the
+/// dispatch tests and the CI chaos smoke.
 fn cmd_worker(args: &Args) -> anyhow::Result<()> {
     use matryoshka::dispatch::worker::{serve_stdio, serve_tcp, StallSpec, WorkerOptions};
+    use matryoshka::dispatch::InjectSpec;
     if let Some(path) = args.get("schwarz-cal-path") {
         let outcome = schwarz_calibration_from_path(Path::new(path))?;
         eprintln!("worker: schwarz calibration {} ({path})", outcome.describe());
     }
     let opts = WorkerOptions {
         index: args.usize_or("worker-index", 0)?,
+        secret: dispatch_secret(args).unwrap_or_default(),
+        inject: match args.get("inject") {
+            Some(spec) => Some(InjectSpec::parse(spec)?),
+            None => None,
+        },
         stall: match args.get("test-stall") {
             Some(spec) => Some(StallSpec::parse(spec)?),
             None => None,

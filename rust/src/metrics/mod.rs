@@ -88,6 +88,16 @@ pub struct EngineMetrics {
     pub full_builds: u64,
     pub incremental_seconds: f64,
     pub full_seconds: f64,
+    /// dispatch fault-tolerance counters (coordinator-side: workers ship
+    /// zeros in their shard frames; the engine assigns the dispatcher's
+    /// cumulative totals after each dispatched build) — workers declared
+    /// lost (EOF/Error/hard-timeout), units requeued off lost workers,
+    /// bounded send/dial retries spent, and workers admitted after the
+    /// first Fock build started
+    pub dispatch_lost_workers: u64,
+    pub dispatch_recovered_units: u64,
+    pub dispatch_retries: u64,
+    pub dispatch_joined_mid_scf: u64,
 }
 
 impl EngineMetrics {
@@ -186,6 +196,10 @@ impl EngineMetrics {
         self.full_builds += other.full_builds;
         self.incremental_seconds += other.incremental_seconds;
         self.full_seconds += other.full_seconds;
+        self.dispatch_lost_workers += other.dispatch_lost_workers;
+        self.dispatch_recovered_units += other.dispatch_recovered_units;
+        self.dispatch_retries += other.dispatch_retries;
+        self.dispatch_joined_mid_scf += other.dispatch_joined_mid_scf;
     }
 
     /// Fig. 9 per-stage overlap: gather + digest CPU-seconds hidden under

@@ -413,7 +413,10 @@ pub fn run_unit_stream(
 /// boundaries, and reports per-unit results through a channel.  This is
 /// the one fan-out loop of the system — the in-process engine passes the
 /// full unit list, a dispatch worker process passes the slice the
-/// coordinator assigned it.
+/// coordinator assigned it, and the engine's fault-tolerance fallback
+/// passes whatever units a dead dispatch fleet never delivered (which is
+/// why a multi-process G survives worker loss bitwise intact: every
+/// execution path is this loop over the same schedule).
 ///
 /// Worker panics are caught per unit (inside `run_unit_stream`) and
 /// re-raised here with their original payload after every worker has

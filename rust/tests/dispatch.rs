@@ -1,26 +1,32 @@
 //! Distributed-dispatch acceptance tests.
 //!
-//! The acceptance bar (ISSUE 5): G and the final SCF energy must be
-//! **bitwise identical** across in-process, `--dispatch local:1` and
-//! `--dispatch local:2` builds; the unit-order merge must survive
-//! work-stealing rebalance; a worker crash must surface as a dispatcher
-//! error (never a hang); and a schedule-fingerprint mismatch must be
-//! rejected before any unit executes.
+//! The acceptance bar (ISSUE 5, extended by ISSUE 9): G and the final
+//! SCF energy must be **bitwise identical** across in-process,
+//! `--dispatch local:1` and `--dispatch local:2` builds; the unit-order
+//! merge must survive work-stealing rebalance; and — the fault-tolerance
+//! bar — a worker killed mid-build, a corrupt frame, a dropped TCP
+//! connection, or the death of the ENTIRE fleet must all still complete
+//! the build with the same bitwise G (survivors and the in-process
+//! fallback run the identical unit code path).  A schedule-fingerprint
+//! or shared-secret mismatch must be rejected before any unit executes.
 //!
 //! Local workers are real subprocesses of the `matryoshka` binary
 //! (`CARGO_BIN_EXE_matryoshka` — the test harness binary itself has no
 //! `worker` subcommand).  Remote mode is exercised over loopback TCP
 //! with in-thread workers running the same `dispatch::worker::serve`.
+//! Chaos is injected with the same `--inject` specs the CLI exposes, so
+//! every failure here is deterministic and reproducible by hand.
 
 use std::collections::BTreeMap;
 use std::io::{BufReader, BufWriter};
 use std::net::{TcpListener, TcpStream};
 use std::path::{Path, PathBuf};
+use std::time::Duration;
 
 use matryoshka::basis::build_basis;
 use matryoshka::constructor::SchwarzMode;
-use matryoshka::dispatch::proto::{read_msg, write_msg};
-use matryoshka::dispatch::worker::{serve, WorkerOptions};
+use matryoshka::dispatch::proto::{auth_tag, read_msg, write_msg};
+use matryoshka::dispatch::worker::{serve, InjectKind, InjectSpec, WorkerOptions};
 use matryoshka::dispatch::{DispatchConfig, DispatchMode, JobSpec, Msg, PROTO_VERSION};
 use matryoshka::engines::{MatryoshkaConfig, MatryoshkaEngine};
 use matryoshka::linalg::Matrix;
@@ -59,6 +65,41 @@ fn local_dispatch(n: usize) -> DispatchConfig {
     }
 }
 
+/// Spawn an in-thread TCP worker that serves exactly one session.
+fn one_shot_worker(
+    opts: WorkerOptions,
+) -> (String, std::thread::JoinHandle<anyhow::Result<()>>) {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let handle = std::thread::spawn(move || -> anyhow::Result<()> {
+        let (stream, _) = listener.accept()?;
+        stream.set_nodelay(true).ok();
+        let mut r = BufReader::new(stream.try_clone()?);
+        let mut w = BufWriter::new(stream);
+        serve(&mut r, &mut w, &opts)
+    });
+    (addr, handle)
+}
+
+/// Spawn an in-thread TCP worker that keeps accepting new sessions —
+/// the `worker --listen` loop the rejoin path needs.  Detached: the
+/// thread dies with the test process.
+fn rejoinable_worker(listener: TcpListener, opts: WorkerOptions) {
+    std::thread::spawn(move || {
+        loop {
+            let Ok((stream, _)) = listener.accept() else { return };
+            stream.set_nodelay(true).ok();
+            let Ok(clone) = stream.try_clone() else { return };
+            let mut r = BufReader::new(clone);
+            let mut w = BufWriter::new(stream);
+            match serve(&mut r, &mut w, &opts) {
+                Ok(()) => {}
+                Err(e) => eprintln!("test worker session ended: {e}"),
+            }
+        }
+    });
+}
+
 #[test]
 fn dispatched_g_is_bitwise_identical_to_in_process_on_631gstar_water() {
     // 6-31G* water lights up the d classes, multiple merge units, and
@@ -94,6 +135,7 @@ fn dispatched_g_is_bitwise_identical_to_in_process_on_631gstar_water() {
                 "both workers should have contributed: {stats:?}"
             );
         }
+        assert!(stats.iter().all(|s| s.lost == 0), "no faults on the happy path: {stats:?}");
     }
 }
 
@@ -126,15 +168,9 @@ fn remote_tcp_dispatch_matches_in_process_bitwise() {
     let mut addrs = Vec::new();
     let mut handles = Vec::new();
     for index in 0..2usize {
-        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
-        addrs.push(listener.local_addr().unwrap().to_string());
-        handles.push(std::thread::spawn(move || -> anyhow::Result<()> {
-            let (stream, _) = listener.accept()?;
-            stream.set_nodelay(true).ok();
-            let mut r = BufReader::new(stream.try_clone()?);
-            let mut w = BufWriter::new(stream);
-            serve(&mut r, &mut w, &WorkerOptions { index, ..Default::default() })
-        }));
+        let (addr, handle) = one_shot_worker(WorkerOptions { index, ..Default::default() });
+        addrs.push(addr);
+        handles.push(handle);
     }
 
     let mol = library::by_name("water").unwrap();
@@ -177,6 +213,7 @@ fn work_stealing_rebalance_preserves_the_unit_order_merge_bitwise() {
             worker_bin: Some(worker_bin()),
             straggler_timeout_ms: 200,
             worker_args: vec!["--test-stall".into(), "0:0:2500".into()],
+            ..Default::default()
         },
         ..Default::default()
     };
@@ -193,15 +230,293 @@ fn work_stealing_rebalance_preserves_the_unit_order_merge_bitwise() {
 }
 
 #[test]
-fn worker_crash_surfaces_as_a_dispatcher_error_not_a_hang() {
-    // both workers drop their connection after one shard — the reader
-    // threads see EOF and the build must fail fast with a real error
+fn killing_one_of_three_workers_mid_build_keeps_g_bitwise() {
+    // the ISSUE 9 acceptance case: `--dispatch local:3` with worker 1
+    // crashing after its first shard (dirty death, no Error frame).  The
+    // coordinator must requeue its outstanding units onto the survivors
+    // and the merged G must stay bitwise identical.
+    let mol = library::by_name("water").unwrap();
+    let basis = build_basis(&mol, "6-31g*").unwrap();
+    let d = test_density(basis.nbf);
+    let mut in_process = engine("water", "6-31g*", MatryoshkaConfig::default());
+    let g_ref = in_process.two_electron(&d).unwrap();
+
+    let config = MatryoshkaConfig {
+        dispatch: DispatchConfig {
+            mode: DispatchMode::Local(3),
+            worker_bin: Some(worker_bin()),
+            straggler_timeout_ms: 500,
+            worker_args: vec!["--inject".into(), "kill-after:1@1".into()],
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    let mut e = engine("water", "6-31g*", config);
+    let started = std::time::Instant::now();
+    let g = e.two_electron(&d).unwrap();
+    assert_eq!(g_ref.data(), g.data(), "G diverged after a mid-build worker crash");
+    assert!(
+        started.elapsed() < Duration::from_secs(120),
+        "recovery took {:?} — that is a hang, not fault tolerance",
+        started.elapsed()
+    );
+    let stats = e.dispatch_stats().expect("dispatched build ran");
+    let lost: u64 = stats.iter().map(|s| s.lost).sum();
+    assert_eq!(lost, 1, "exactly one worker died: {stats:?}");
+    let dead = stats.iter().find(|s| s.lost == 1).unwrap();
+    assert_eq!(dead.label, "local:1", "{stats:?}");
+    // every unit still attributed exactly once across survivors
+    let units: u64 = stats.iter().map(|s| s.units).sum();
+    let schedule = e.build_schedule().unwrap();
+    assert_eq!(units, schedule.units.len() as u64, "{stats:?}");
+}
+
+#[test]
+fn whole_fleet_death_falls_back_in_process_and_stays_bitwise() {
+    // every worker crashes after its first shard.  Builds must still
+    // COMPLETE: survivors absorb requeued units until nobody is left,
+    // then the engine executes the missing units in-process through the
+    // same run_units_streamed path — bitwise-identical G, never an error.
+    let mol = library::by_name("water").unwrap();
+    let basis = build_basis(&mol, "sto-3g").unwrap();
+    let d = test_density(basis.nbf);
+    let mut in_process = engine("water", "sto-3g", MatryoshkaConfig::default());
+    let g_ref = in_process.two_electron(&d).unwrap();
+
     let config = MatryoshkaConfig {
         dispatch: DispatchConfig {
             mode: DispatchMode::Local(2),
             worker_bin: Some(worker_bin()),
             straggler_timeout_ms: 500,
-            worker_args: vec!["--test-exit-after-shards".into(), "1".into()],
+            worker_args: vec!["--inject".into(), "kill-after:1".into()],
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    let mut e = engine("water", "sto-3g", config);
+    let started = std::time::Instant::now();
+    // a worker only dies after it delivers a shard, so keep building
+    // until both have been drawn in and killed (first build usually
+    // does it; a straggling second worker dies on the next build when
+    // it becomes the sole target)
+    let mut lost = 0u64;
+    for build in 0..4 {
+        let g = e.two_electron(&d).unwrap();
+        assert_eq!(g_ref.data(), g.data(), "build {build} diverged during fleet collapse");
+        lost = e.dispatch_stats().unwrap().iter().map(|s| s.lost).sum();
+        if lost == 2 {
+            break;
+        }
+    }
+    assert_eq!(lost, 2, "both workers should have died: {:?}", e.dispatch_stats());
+    assert!(
+        started.elapsed() < Duration::from_secs(120),
+        "fleet-death recovery took {:?} — that is a hang",
+        started.elapsed()
+    );
+    // with the fleet exhausted the engine skips the wire entirely and
+    // still produces the identical G fully in-process
+    let g = e.two_electron(&d).unwrap();
+    assert_eq!(g_ref.data(), g.data(), "post-collapse in-process build diverged");
+    let summary = e.dispatch_summary().unwrap();
+    assert!(summary.contains("faults:"), "{summary}");
+}
+
+#[test]
+fn corrupt_frame_loses_only_the_sending_worker() {
+    // worker 0 sends one good shard, then a garbage frame, then dies.
+    // The coordinator's decoder must reject the frame (never panic or
+    // misparse), write worker 0 off, and finish bitwise on worker 1.
+    let mol = library::by_name("water").unwrap();
+    let basis = build_basis(&mol, "sto-3g").unwrap();
+    let d = test_density(basis.nbf);
+    let mut in_process = engine("water", "sto-3g", MatryoshkaConfig::default());
+    let g_ref = in_process.two_electron(&d).unwrap();
+
+    let config = MatryoshkaConfig {
+        dispatch: DispatchConfig {
+            mode: DispatchMode::Local(2),
+            worker_bin: Some(worker_bin()),
+            straggler_timeout_ms: 500,
+            worker_args: vec!["--inject".into(), "corrupt-frame:1@0".into()],
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    let mut e = engine("water", "sto-3g", config);
+    let g = e.two_electron(&d).unwrap();
+    assert_eq!(g_ref.data(), g.data(), "G diverged after a corrupt frame");
+    let stats = e.dispatch_stats().expect("dispatched build ran");
+    let lost: u64 = stats.iter().map(|s| s.lost).sum();
+    assert_eq!(lost, 1, "only the corrupting worker dies: {stats:?}");
+    assert_eq!(stats.iter().find(|s| s.lost == 1).unwrap().label, "local:0", "{stats:?}");
+}
+
+#[test]
+fn dropped_tcp_worker_rejoins_as_a_new_member_bitwise() {
+    // worker 0 cleanly drops its connection after every first shard but
+    // keeps listening; worker 1 is healthy.  The coordinator must park
+    // the dropped address, re-dial it with backoff, and admit the fresh
+    // session mid-SCF through the full handshake — elastic membership.
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr0 = listener.local_addr().unwrap().to_string();
+    rejoinable_worker(
+        listener,
+        WorkerOptions {
+            index: 0,
+            inject: Some(InjectSpec { kind: InjectKind::DropConn(1), only_worker: None }),
+            ..Default::default()
+        },
+    );
+    let (addr1, healthy) = one_shot_worker(WorkerOptions { index: 1, ..Default::default() });
+
+    let mol = library::by_name("water").unwrap();
+    let basis = build_basis(&mol, "sto-3g").unwrap();
+    let d = test_density(basis.nbf);
+    let mut in_process = engine("water", "sto-3g", MatryoshkaConfig::default());
+    let g_ref = in_process.two_electron(&d).unwrap();
+
+    let config = MatryoshkaConfig {
+        dispatch: DispatchConfig {
+            mode: DispatchMode::Remote(vec![addr0, addr1]),
+            straggler_timeout_ms: 300,
+            dial_backoff_ms: 50,
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    let mut e = engine("water", "sto-3g", config);
+    let mut rejoined = false;
+    for build in 0..10 {
+        let g = e.two_electron(&d).unwrap();
+        assert_eq!(g_ref.data(), g.data(), "build {build} diverged across a connection drop");
+        let stats = e.dispatch_stats().unwrap();
+        if stats.iter().any(|s| s.lost == 1) && stats.iter().any(|s| s.joined_mid_scf == 1) {
+            rejoined = true;
+            break;
+        }
+        // give the parked address's backoff a chance to expire
+        std::thread::sleep(Duration::from_millis(60));
+    }
+    assert!(
+        rejoined,
+        "the dropped worker never rejoined: {:?}",
+        e.dispatch_stats()
+    );
+    drop(e);
+    healthy.join().unwrap().unwrap();
+}
+
+#[test]
+fn late_starting_worker_joins_mid_scf_bitwise() {
+    // addr0's worker is not even listening at launch: the coordinator
+    // must park it (launch succeeds on the one reachable worker) and
+    // keep re-dialing until the late worker appears, then admit it with
+    // the Setup + current-Build replay — without disturbing bitwise G.
+    let probe = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr0 = probe.local_addr().unwrap().to_string();
+    drop(probe); // free the port; the worker binds it 300ms from now
+    {
+        let addr0 = addr0.clone();
+        std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(300));
+            let listener = match TcpListener::bind(&addr0) {
+                Ok(l) => l,
+                Err(e) => {
+                    eprintln!("late worker could not rebind {addr0}: {e}");
+                    return;
+                }
+            };
+            rejoinable_worker(listener, WorkerOptions { index: 0, ..Default::default() });
+        });
+    }
+    let (addr1, healthy) = one_shot_worker(WorkerOptions { index: 1, ..Default::default() });
+
+    let mol = library::by_name("water").unwrap();
+    let basis = build_basis(&mol, "sto-3g").unwrap();
+    let d = test_density(basis.nbf);
+    let mut in_process = engine("water", "sto-3g", MatryoshkaConfig::default());
+    let g_ref = in_process.two_electron(&d).unwrap();
+
+    let config = MatryoshkaConfig {
+        dispatch: DispatchConfig {
+            mode: DispatchMode::Remote(vec![addr0, addr1]),
+            straggler_timeout_ms: 300,
+            dial_retries: 2,
+            dial_backoff_ms: 50,
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    let mut e = engine("water", "sto-3g", config);
+    let mut joined = false;
+    for build in 0..60 {
+        let g = e.two_electron(&d).unwrap();
+        assert_eq!(g_ref.data(), g.data(), "build {build} diverged around the late join");
+        if e.dispatch_stats().unwrap().iter().any(|s| s.joined_mid_scf == 1) {
+            joined = true;
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(100));
+    }
+    assert!(joined, "the late worker never joined: {:?}", e.dispatch_stats());
+    drop(e);
+    healthy.join().unwrap().unwrap();
+}
+
+#[test]
+fn scf_survives_a_collapsing_fleet_with_the_exact_reference_energy() {
+    // full SCF under maximum chaos: every worker crashes after its first
+    // shard, so the fleet collapses over the first builds and the rest
+    // of the SCF runs through the in-process fallback.  The trajectory
+    // must be EXACTLY the undisturbed one — same energy, same iteration
+    // count, same per-iteration trace.
+    let mol = library::by_name("water").unwrap();
+    let basis = build_basis(&mol, "sto-3g").unwrap();
+    let opts = ScfOptions::default();
+
+    let mut reference = engine("water", "sto-3g", MatryoshkaConfig::default());
+    let res_ref = run_rhf(&mol, &basis, &mut reference, &opts).unwrap();
+    assert!(res_ref.converged);
+
+    let config = MatryoshkaConfig {
+        dispatch: DispatchConfig {
+            mode: DispatchMode::Local(3),
+            worker_bin: Some(worker_bin()),
+            straggler_timeout_ms: 500,
+            worker_args: vec!["--inject".into(), "kill-after:1".into()],
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    let mut chaotic = engine("water", "sto-3g", config);
+    let res = run_rhf(&mol, &basis, &mut chaotic, &opts).unwrap();
+    assert!(res.converged);
+    assert_eq!(res.energy, res_ref.energy, "chaos SCF drifted from the reference");
+    assert_eq!(res.iterations, res_ref.iterations);
+    assert_eq!(res.energy_trace, res_ref.energy_trace);
+    let stats = chaotic.dispatch_stats().expect("dispatched builds ran");
+    let lost: u64 = stats.iter().map(|s| s.lost).sum();
+    assert!(lost >= 1, "at least one injected crash must have fired: {stats:?}");
+}
+
+#[test]
+fn wrong_dispatch_secret_is_refused_before_any_work() {
+    // the worker holds "s3cret", the coordinator dials with "wrong": the
+    // worker must refuse the Setup auth tag with a FATAL error (launch
+    // aborts — a misconfigured fleet is not a runtime fault) and no
+    // build may start
+    let (addr, worker) = one_shot_worker(WorkerOptions {
+        index: 0,
+        secret: "s3cret".into(),
+        ..Default::default()
+    });
+
+    let config = MatryoshkaConfig {
+        dispatch: DispatchConfig {
+            mode: DispatchMode::Remote(vec![addr]),
+            secret: Some("wrong".into()),
+            ..Default::default()
         },
         ..Default::default()
     };
@@ -209,24 +524,46 @@ fn worker_crash_surfaces_as_a_dispatcher_error_not_a_hang() {
     let basis = build_basis(&mol, "sto-3g").unwrap();
     let d = test_density(basis.nbf);
     let mut e = engine("water", "sto-3g", config);
-    let started = std::time::Instant::now();
     let err = e.two_electron(&d).unwrap_err().to_string();
-    assert!(
-        err.contains("disconnected"),
-        "crash must surface as a disconnect error, got: {err}"
-    );
-    assert!(
-        started.elapsed() < std::time::Duration::from_secs(60),
-        "crash detection took {:?} — that is a hang, not an error path",
-        started.elapsed()
-    );
+    assert!(err.contains("secret mismatch"), "launch must name the secret mismatch: {err}");
+    let worker_err = worker.join().unwrap().unwrap_err().to_string();
+    assert!(worker_err.contains("secret mismatch"), "{worker_err}");
+}
+
+#[test]
+fn matching_dispatch_secret_authenticates_and_stays_bitwise() {
+    // both ends hold the same secret: handshake succeeds, G is bitwise
+    let (addr, worker) = one_shot_worker(WorkerOptions {
+        index: 0,
+        secret: "s3cret".into(),
+        ..Default::default()
+    });
+    let mol = library::by_name("water").unwrap();
+    let basis = build_basis(&mol, "sto-3g").unwrap();
+    let d = test_density(basis.nbf);
+    let mut in_process = engine("water", "sto-3g", MatryoshkaConfig::default());
+    let g_ref = in_process.two_electron(&d).unwrap();
+
+    let config = MatryoshkaConfig {
+        dispatch: DispatchConfig {
+            mode: DispatchMode::Remote(vec![addr]),
+            secret: Some("s3cret".into()),
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    let mut e = engine("water", "sto-3g", config);
+    let g = e.two_electron(&d).unwrap();
+    assert_eq!(g_ref.data(), g.data(), "authenticated dispatch diverged");
+    drop(e);
+    worker.join().unwrap().unwrap();
 }
 
 #[test]
 fn schedule_fingerprint_mismatch_is_rejected_before_any_execution() {
-    // drive a real worker through the protocol by hand and hand it a
+    // drive a real worker through the v5 protocol by hand and hand it a
     // Build whose fingerprint cannot match: the worker must refuse with
-    // an Error frame (and die with the same message), never execute
+    // a FATAL Error frame (and die with the same message), never execute
     let mol = library::by_name("water").unwrap();
     let basis = build_basis(&mol, "sto-3g").unwrap();
     let nbf = basis.nbf;
@@ -263,13 +600,25 @@ fn schedule_fingerprint_mismatch_is_rejected_before_any_execution() {
     let stream = TcpStream::connect(addr).unwrap();
     let mut r = BufReader::new(stream.try_clone().unwrap());
     let mut w = BufWriter::new(stream);
-    match read_msg(&mut r).unwrap() {
-        Msg::Hello { version } => assert_eq!(version, PROTO_VERSION),
+    let hello_nonce = match read_msg(&mut r).unwrap() {
+        Msg::Hello { version, nonce } => {
+            assert_eq!(version, PROTO_VERSION);
+            nonce
+        }
         other => panic!("expected Hello, got {}", other.kind()),
-    }
-    write_msg(&mut w, &Msg::Setup { spec: Box::new(spec) }).unwrap();
+    };
+    // answer the worker's secret challenge (both ends secretless here)
+    // and issue our own
+    write_msg(
+        &mut w,
+        &Msg::Setup { spec: Box::new(spec), nonce: 7, auth: auth_tag("", hello_nonce) },
+    )
+    .unwrap();
     match read_msg(&mut r).unwrap() {
-        Msg::SetupAck { nbf: got, .. } => assert_eq!(got, nbf),
+        Msg::SetupAck { nbf: got, auth, .. } => {
+            assert_eq!(got, nbf);
+            assert_eq!(auth, auth_tag("", 7), "worker must answer the coordinator's challenge");
+        }
         other => panic!("expected SetupAck, got {}", other.kind()),
     }
     write_msg(
@@ -284,7 +633,8 @@ fn schedule_fingerprint_mismatch_is_rejected_before_any_execution() {
     )
     .unwrap();
     match read_msg(&mut r).unwrap() {
-        Msg::Error { message } => {
+        Msg::Error { fatal, message } => {
+            assert!(fatal, "fingerprint drift must be fatal, not a recoverable loss");
             assert!(message.contains("fingerprint mismatch"), "{message}");
             assert!(message.contains("refusing to execute"), "{message}");
         }

@@ -18,7 +18,7 @@ use matryoshka::basis::build_basis;
 use matryoshka::constructor::{
     delta_threshold, filter_plan_by_delta, BlockPlan, PairList, SchwarzMode, ShellDeltaMax,
 };
-use matryoshka::dispatch::proto::{read_msg, write_msg};
+use matryoshka::dispatch::proto::{auth_tag, read_msg, write_msg};
 use matryoshka::dispatch::worker::{serve, WorkerOptions};
 use matryoshka::dispatch::{DispatchConfig, DispatchMode, JobSpec, Msg, PROTO_VERSION};
 use matryoshka::engines::{IncrementalMode, MatryoshkaConfig, MatryoshkaEngine};
@@ -321,11 +321,18 @@ fn worker_refuses_a_hand_shrunk_chunk_subset_at_the_fingerprint_check() {
     let stream = TcpStream::connect(addr).unwrap();
     let mut r = BufReader::new(stream.try_clone().unwrap());
     let mut w = BufWriter::new(stream);
-    match read_msg(&mut r).unwrap() {
-        Msg::Hello { version } => assert_eq!(version, PROTO_VERSION),
+    let hello_nonce = match read_msg(&mut r).unwrap() {
+        Msg::Hello { version, nonce } => {
+            assert_eq!(version, PROTO_VERSION);
+            nonce
+        }
         other => panic!("expected Hello, got {}", other.kind()),
-    }
-    write_msg(&mut w, &Msg::Setup { spec: Box::new(spec) }).unwrap();
+    };
+    write_msg(
+        &mut w,
+        &Msg::Setup { spec: Box::new(spec), nonce: 3, auth: auth_tag("", hello_nonce) },
+    )
+    .unwrap();
     match read_msg(&mut r).unwrap() {
         Msg::SetupAck { nbf: got, .. } => assert_eq!(got, nbf),
         other => panic!("expected SetupAck, got {}", other.kind()),
@@ -363,7 +370,8 @@ fn worker_refuses_a_hand_shrunk_chunk_subset_at_the_fingerprint_check() {
     )
     .unwrap();
     match read_msg(&mut r).unwrap() {
-        Msg::Error { message } => {
+        Msg::Error { fatal, message } => {
+            assert!(fatal, "a fingerprint refusal is a fatal protocol error");
             assert!(message.contains("fingerprint mismatch"), "{message}");
             assert!(message.contains("refusing to execute"), "{message}");
         }
