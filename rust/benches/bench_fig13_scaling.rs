@@ -254,7 +254,9 @@ fn main() {
     // chunks: the d-heavy classes are where the unrolled recurrences and
     // the batch-major inner loop pay off.  Rows also land in
     // BENCH_fig13.json for machine consumption.
-    let mut json_rows: Vec<String> = Vec::new();
+    use matryoshka::trace::json::Value;
+    use matryoshka::trace::snapshot::row;
+    let mut bench_rows: Vec<Value> = Vec::new();
     for (bra_c, ket_c) in [
         ((0, 0), (0, 0)),
         ((1, 1), (0, 0)),
@@ -300,11 +302,22 @@ fn main() {
             t_ker,
             speedup
         );
-        json_rows.push(format!(
-            "    {{\"class\": [{}, {}, {}, {}], \"ncomp\": {}, \"batch\": {}, \
-             \"tables_s\": {:.6e}, \"kernels_s\": {:.6e}, \"speedup\": {:.3}}}",
-            class.0, class.1, class.2, class.3, ncomp, b, t_tab, t_ker, speedup
-        ));
+        bench_rows.push(row(vec![
+            (
+                "class",
+                Value::Arr(
+                    [class.0, class.1, class.2, class.3]
+                        .iter()
+                        .map(|&l| Value::Num(l as f64))
+                        .collect(),
+                ),
+            ),
+            ("ncomp", Value::Num(ncomp as f64)),
+            ("batch", Value::Num(b as f64)),
+            ("tables_s", Value::Num(t_tab)),
+            ("kernels_s", Value::Num(t_ker)),
+            ("speedup", Value::Num(speedup)),
+        ]));
         // the generated straight-line code must not lose to the
         // interpreter on the heaviest class (10% noise allowance)
         if class == (2, 2, 2, 2) {
@@ -314,11 +327,8 @@ fn main() {
             );
         }
     }
-    let json = format!(
-        "{{\n  \"figure\": \"fig13\",\n  \"section\": \"kernels_vs_tables\",\n  \
-         \"rows\": [\n{}\n  ]\n}}\n",
-        json_rows.join(",\n")
-    );
-    std::fs::write("BENCH_fig13.json", &json).expect("write BENCH_fig13.json");
+    let mut snap = bh::bench_snapshot("fig13", "kernels_vs_tables");
+    snap.table("rows", bench_rows);
+    snap.write(std::path::Path::new("BENCH_fig13.json")).expect("write BENCH_fig13.json");
     println!("(rows written to BENCH_fig13.json; straight-line SoA kernels vs table interpreter)");
 }

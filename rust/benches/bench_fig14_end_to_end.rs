@@ -87,7 +87,9 @@ fn main() {
     // must agree to the pinning tolerance (1e-9 Ha, the acceptance bar).
     let mol = library::by_name("water").expect("water");
     let basis = build_basis(&mol, "6-31g*").expect("6-31g* basis");
-    let mut json_rows: Vec<String> = Vec::new();
+    use matryoshka::trace::json::Value;
+    use matryoshka::trace::snapshot::row;
+    let mut bench_rows: Vec<Value> = Vec::new();
     let mut energies: Vec<f64> = Vec::new();
     let mut fock_walls: Vec<f64> = Vec::new();
     for (label, mode) in [
@@ -108,22 +110,18 @@ fn main() {
             "{:<18} {:>6} {:>6} {:>18.9} {:>10.3} {:>12} {:>12}",
             label, res.iterations, res.converged, res.energy, fock_s, chunks_total, chunks_last
         );
-        json_rows.push(format!(
-            "    {{\"mode\": \"{}\", \"iterations\": {}, \"converged\": {}, \
-             \"energy_ha\": {:.12}, \"scf_wall_s\": {:.6e}, \"fock_wall_s\": {:.6e}, \
-             \"incremental_builds\": {}, \"full_builds\": {}, \
-             \"chunks_total\": {}, \"chunks_last\": {}}}",
-            label,
-            res.iterations,
-            res.converged,
-            res.energy,
-            wall,
-            fock_s,
-            eng.metrics.incremental_builds,
-            eng.metrics.full_builds,
-            chunks_total,
-            chunks_last
-        ));
+        bench_rows.push(row(vec![
+            ("mode", Value::Str(label.to_string())),
+            ("iterations", Value::Num(res.iterations as f64)),
+            ("converged", Value::Bool(res.converged)),
+            ("energy_ha", Value::Num(res.energy)),
+            ("scf_wall_s", Value::Num(wall)),
+            ("fock_wall_s", Value::Num(fock_s)),
+            ("incremental_builds", Value::Num(eng.metrics.incremental_builds as f64)),
+            ("full_builds", Value::Num(eng.metrics.full_builds as f64)),
+            ("chunks_total", Value::Num(chunks_total as f64)),
+            ("chunks_last", Value::Num(chunks_last as f64)),
+        ]));
         assert!(res.converged, "{label}: SCF did not converge");
         energies.push(res.energy);
         fock_walls.push(fock_s);
@@ -135,12 +133,10 @@ fn main() {
             (e - energies[0]).abs()
         );
     }
-    let json = format!(
-        "{{\n  \"figure\": \"fig14\",\n  \"section\": \"incremental_vs_full_scf\",\n  \
-         \"molecule\": \"water\",\n  \"basis\": \"6-31g*\",\n  \"rows\": [\n{}\n  ]\n}}\n",
-        json_rows.join(",\n")
-    );
-    std::fs::write("BENCH_fig14.json", &json).expect("write BENCH_fig14.json");
+    let mut snap = bh::bench_snapshot("fig14", "incremental_vs_full_scf");
+    snap.ctx_str("molecule", "water").ctx_str("basis", "6-31g*");
+    snap.table("rows", bench_rows);
+    snap.write(std::path::Path::new("BENCH_fig14.json")).expect("write BENCH_fig14.json");
     println!(
         "\n(energies pinned within 1e-9 Ha of the full-rebuild path; \
          fock wall {:.3}s full vs {:.3}s incremental — rows in BENCH_fig14.json)",

@@ -93,7 +93,9 @@ fn digest_strategy_section(systems: &[&str]) {
         "{:<12} {:<9} {:>9} {:>10} {:>9}",
         "system", "digest", "wall_s", "digest_s", "speedup"
     );
-    let mut json_rows: Vec<String> = Vec::new();
+    use matryoshka::trace::json::Value;
+    use matryoshka::trace::snapshot::row;
+    let mut bench_rows: Vec<Value> = Vec::new();
     for name in systems {
         let (_, basis) = common::system(name);
         let d = common::test_density(basis.nbf);
@@ -118,22 +120,18 @@ fn digest_strategy_section(systems: &[&str]) {
                 digest_s,
                 speedup
             );
-            json_rows.push(format!(
-                "    {{\"system\": \"{name}\", \"digest\": \"{}\", \"wall_s\": {:.6e}, \
-                 \"digest_s\": {:.6e}, \"digest_speedup\": {:.3}}}",
-                digest.name(),
-                wall,
-                digest_s,
-                speedup
-            ));
+            bench_rows.push(row(vec![
+                ("system", Value::Str(name.to_string())),
+                ("digest", Value::Str(digest.name().to_string())),
+                ("wall_s", Value::Num(wall)),
+                ("digest_s", Value::Num(digest_s)),
+                ("digest_speedup", Value::Num(speedup)),
+            ]));
         }
     }
-    let json = format!(
-        "{{\n  \"figure\": \"fig9\",\n  \"section\": \"digest_gemm_vs_scatter\",\n  \
-         \"rows\": [\n{}\n  ]\n}}\n",
-        json_rows.join(",\n")
-    );
-    std::fs::write("BENCH_fig9.json", &json).expect("write BENCH_fig9.json");
+    let mut snap = bh::bench_snapshot("fig9", "digest_gemm_vs_scatter");
+    snap.table("rows", bench_rows);
+    snap.write(std::path::Path::new("BENCH_fig9.json")).expect("write BENCH_fig9.json");
     println!(
         "(rows written to BENCH_fig9.json; digest_s is CPU-s across workers — both \
          strategies digest the identical entry stream, G stays bitwise per strategy)"

@@ -67,6 +67,17 @@ pub fn report(result: &BenchResult) {
     println!("{}", result.row());
 }
 
+/// Start a `BENCH_*.json` metrics snapshot for one figure section.  Every
+/// bench target writes its machine-readable rows through this so all
+/// bench output shares the `--metrics-out` snapshot schema
+/// ([`crate::trace::snapshot::SCHEMA`]) and validates with
+/// `report metrics --in BENCH_*.json`.
+pub fn bench_snapshot(figure: &str, section: &str) -> crate::trace::snapshot::Snapshot {
+    let mut snap = crate::trace::snapshot::Snapshot::new("bench", &format!("{figure} {section}"));
+    snap.ctx_str("figure", figure).ctx_str("section", section);
+    snap
+}
+
 /// Speedup table row helper: baseline vs contender.
 pub fn speedup_row(name: &str, baseline_s: f64, contender_s: f64) -> String {
     format!(

@@ -35,6 +35,7 @@ use std::time::{Duration, Instant};
 use crate::linalg::Matrix;
 use crate::pipeline::ChunkSchedule;
 use crate::runtime::ClassKey;
+use crate::trace::{align_remote, ArgValue, TraceEvent, TraceSink, TID_DISPATCH};
 use crate::util::XorShift;
 
 use super::proto::{
@@ -153,6 +154,12 @@ struct WorkerLink {
     /// last Build iter this worker acked (0 = none)
     acked_iter: u64,
     last_heard: Instant,
+    /// set when this link's Setup frame goes out; a clock offset is only
+    /// computed for a SetupAck that answers a Setup we actually sent
+    setup_sent: Option<Instant>,
+    /// estimated (coordinator µs − worker µs); added to every remote
+    /// span timestamp so all processes share one trace timeline
+    clock_offset_us: i64,
 }
 
 /// A remote address we could not (or can no longer) reach — re-dialed
@@ -191,6 +198,9 @@ pub struct Dispatcher {
     /// dial retries for addresses that never produced a link yet
     orphan_retries: u64,
     nonces: XorShift,
+    /// shared structured-tracing sink (pid 0 timeline); worker span
+    /// buffers arriving in `Trace` frames are clock-aligned into it
+    trace: TraceSink,
 }
 
 /// Batch width of one work-stealing assignment: small enough that
@@ -233,6 +243,7 @@ impl Dispatcher {
         spec: &JobSpec,
         expect_npairs: usize,
         expect_nblocks: usize,
+        trace: TraceSink,
     ) -> anyhow::Result<Dispatcher> {
         let (tx, rx) = mpsc::channel::<(usize, Event)>();
         let seed = std::time::SystemTime::now()
@@ -258,6 +269,7 @@ impl Dispatcher {
             dial_backoff: Duration::from_millis(config.dial_backoff_ms.max(1)),
             orphan_retries: 0,
             nonces: XorShift::new(seed),
+            trace,
         };
         match &config.mode {
             DispatchMode::Off => anyhow::bail!("Dispatcher::launch with dispatch off"),
@@ -352,6 +364,8 @@ impl Dispatcher {
             setup_nonce: 0,
             acked_iter: 0,
             last_heard: Instant::now(),
+            setup_sent: None,
+            clock_offset_us: 0,
         });
         self.stats.push(WorkerDispatchStats { label, ..Default::default() });
         Ok(())
@@ -375,6 +389,8 @@ impl Dispatcher {
             setup_nonce: 0,
             acked_iter: 0,
             last_heard: Instant::now(),
+            setup_sent: None,
+            clock_offset_us: 0,
         });
         self.stats.push(WorkerDispatchStats { label: addr.to_string(), ..Default::default() });
         Ok(idx)
@@ -422,8 +438,8 @@ impl Dispatcher {
                 Event::Msg(Msg::Hello { version, nonce }) => {
                     self.on_hello(widx, version, nonce).map_err(fatal_at_launch)?;
                 }
-                Event::Msg(Msg::SetupAck { nbf, npairs, nblocks, auth }) => {
-                    self.on_setup_ack(widx, nbf, npairs, nblocks, auth)
+                Event::Msg(Msg::SetupAck { nbf, npairs, nblocks, auth, clock_us }) => {
+                    self.on_setup_ack(widx, nbf, npairs, nblocks, clock_us, auth)
                         .map_err(fatal_at_launch)?;
                 }
                 Event::Msg(other) => anyhow::bail!(DispatchError::Fatal(format!(
@@ -463,6 +479,9 @@ impl Dispatcher {
         };
         let link = &mut self.links[widx];
         link.setup_nonce = setup_nonce;
+        // the worker samples its trace clock while handling this Setup;
+        // the send/ack bracket estimates the offset onto our timeline
+        link.setup_sent = Some(Instant::now());
         write_msg(link.writer.as_mut(), &setup)
             .map_err(|e| lost(&label, format!("send Setup failed: {e}")))?;
         self.links[widx].phase = Phase::AwaitSetupAck;
@@ -471,13 +490,18 @@ impl Dispatcher {
 
     /// A worker acked Setup: verify it knows the secret (tag over OUR
     /// nonce) and rebuilt the same system, then hand it the in-flight
-    /// Build frame if one exists (late join replay).
+    /// Build frame if one exists (late join replay).  `clock_us` is the
+    /// worker's trace clock sampled immediately before it wrote the ack;
+    /// mapping that sample to the ack's arrival time gives the offset
+    /// that lifts the worker's span timestamps onto the coordinator's
+    /// timeline.
     fn on_setup_ack(
         &mut self,
         widx: usize,
         nbf: usize,
         npairs: usize,
         nblocks: usize,
+        clock_us: u64,
         auth: u64,
     ) -> Result<(), DispatchError> {
         let label = self.links[widx].label.clone();
@@ -503,9 +527,21 @@ impl Dispatcher {
             )));
         }
         self.links[widx].phase = Phase::Ready;
+        if self.trace.is_enabled() && self.links[widx].setup_sent.is_some() {
+            // the Setup→SetupAck interval brackets the worker's heavy
+            // state construction, and the worker samples clock_us right
+            // before writing the ack — so the arrival time estimates the
+            // sample far better than the round-trip midpoint (error ≈ one
+            // wire transit, not half the worker's build time)
+            self.links[widx].clock_offset_us =
+                self.trace.us_of(Instant::now()) as i64 - clock_us as i64;
+        }
         if self.iter > 0 {
             self.stats[widx].joined_mid_scf = 1;
             eprintln!("dispatch: worker {label} joined mid-SCF (build {})", self.iter);
+            self.trace.instant_with(TID_DISPATCH, "worker_rejoin", "dispatch", |a| {
+                a.push(("worker".into(), ArgValue::S(label.clone())));
+            });
         }
         // replay the in-flight build so the joiner can take work now
         let link = &mut self.links[widx];
@@ -557,6 +593,11 @@ impl Dispatcher {
              survivors",
             requeue.len()
         );
+        self.trace.instant_with(TID_DISPATCH, "worker_lost", "dispatch", |a| {
+            a.push(("worker".into(), ArgValue::S(label.clone())));
+            a.push(("reason".into(), ArgValue::S(reason.to_string())));
+            a.push(("requeued".into(), ArgValue::U(requeue.len() as u64)));
+        });
         queue.extend(requeue);
         if remote {
             // a remote worker may come back (`--listen` accepts a new
@@ -646,6 +687,10 @@ impl Dispatcher {
     ) -> anyhow::Result<BuildOutcome> {
         self.iter += 1;
         let iter = self.iter;
+        let build_span = self.trace.begin_with(TID_DISPATCH, "dispatch_build", "dispatch", |a| {
+            a.push(("iter".into(), ArgValue::U(iter)));
+            a.push(("units".into(), ArgValue::U(schedule.units.len() as u64)));
+        });
         // probe parked addresses once per build so a late-started worker
         // joins at the next build boundary even when the healthy fleet
         // never leaves the event loop idle
@@ -710,6 +755,12 @@ impl Dispatcher {
                 }
                 self.links[i].outstanding.extend(units.iter().copied());
                 self.links[i].idle = false;
+                let label = &self.links[i].label;
+                let nunits_batch = units.len() as u64;
+                self.trace.instant_with(TID_DISPATCH, "run_handout", "dispatch", |a| {
+                    a.push(("worker".into(), ArgValue::S(label.clone())));
+                    a.push(("units".into(), ArgValue::U(nunits_batch)));
+                });
                 let run = Msg::Run { iter, units }.encode();
                 if let Err(why) = self.send_with_retry(i, &run, "Run") {
                     self.declare_lost(i, &why, &mut queue, &done);
@@ -742,9 +793,11 @@ impl Dispatcher {
                                 self.refuse_joiner(widx, e, &mut queue, &done)?;
                             }
                         }
-                        Event::Msg(Msg::SetupAck { nbf, npairs, nblocks, auth }) => {
+                        Event::Msg(Msg::SetupAck { nbf, npairs, nblocks, auth, clock_us }) => {
                             last_progress = Instant::now();
-                            if let Err(e) = self.on_setup_ack(widx, nbf, npairs, nblocks, auth) {
+                            if let Err(e) =
+                                self.on_setup_ack(widx, nbf, npairs, nblocks, clock_us, auth)
+                            {
                                 self.refuse_joiner(widx, e, &mut queue, &done)?;
                             }
                         }
@@ -786,6 +839,10 @@ impl Dispatcher {
                                 stats.wall_seconds += shard.metrics.pipeline_wall_seconds;
                                 done.insert(unit, *shard);
                             }
+                        }
+                        Event::Msg(Msg::Trace { iter: ti, tracks, events }) => {
+                            last_progress = Instant::now();
+                            self.absorb_trace(widx, ti, iter, tracks, events);
                         }
                         Event::Msg(Msg::RunDone { iter: si }) => {
                             if si == iter {
@@ -838,6 +895,13 @@ impl Dispatcher {
                                 resteal.len(),
                                 self.timeout
                             );
+                            let nstolen = resteal.len() as u64;
+                            self.trace.instant_with(
+                                TID_DISPATCH,
+                                "rebalance_steal",
+                                "dispatch",
+                                |a| a.push(("units".into(), ArgValue::U(nstolen))),
+                            );
                             queue.extend(resteal);
                         }
                     }
@@ -872,9 +936,70 @@ impl Dispatcher {
                 }
             }
         }
+        // the final shard can land before its worker's Trace/RunDone frames;
+        // drain briefly so no span buffer is dropped.  Exits as soon as every
+        // live worker that took work this build reports idle again (Trace
+        // precedes RunDone on the wire), so the wait is usually ~0.
+        if self.trace.is_enabled() {
+            let deadline = Instant::now() + Duration::from_millis(500);
+            while self
+                .links
+                .iter()
+                .any(|l| l.alive && l.phase == Phase::Ready && l.acked_iter == iter && !l.idle)
+            {
+                let now = Instant::now();
+                if now >= deadline {
+                    break;
+                }
+                match self.events.recv_timeout(deadline - now) {
+                    Ok((widx, Event::Msg(Msg::Trace { iter: ti, tracks, events }))) => {
+                        self.links[widx].last_heard = Instant::now();
+                        self.absorb_trace(widx, ti, iter, tracks, events);
+                    }
+                    Ok((widx, Event::Msg(Msg::RunDone { iter: si }))) => {
+                        self.links[widx].last_heard = Instant::now();
+                        if si == iter {
+                            self.links[widx].idle = true;
+                        }
+                    }
+                    Ok((widx, Event::Gone(why))) => {
+                        self.declare_lost(widx, &why, &mut queue, &done);
+                    }
+                    Ok(_) => {} // stale frames / duplicate shards — the build is complete
+                    Err(_) => break,
+                }
+            }
+        }
         self.current_build = None;
+        self.trace.end(build_span);
         let missing: Vec<usize> = (0..nunits).filter(|u| !done.contains_key(u)).collect();
         Ok(BuildOutcome { shards: done.into_values().collect(), missing })
+    }
+
+    /// Fold one worker's shipped span buffer into the coordinator sink:
+    /// name its tracks under the worker's pid, shift every timestamp by
+    /// the link's handshake clock offset, and adopt the events.  Buffers
+    /// from a previous build (stale `iter`) are dropped.
+    fn absorb_trace(
+        &mut self,
+        widx: usize,
+        trace_iter: u64,
+        iter: u64,
+        tracks: Vec<(u32, String)>,
+        mut events: Vec<TraceEvent>,
+    ) {
+        if trace_iter != iter || !self.trace.is_enabled() {
+            return;
+        }
+        // worker w owns pid w+1 on the merged timeline; pid 0 is the
+        // coordinator process
+        let pid = widx as u32 + 1;
+        let label = &self.links[widx].label;
+        for (tid, name) in tracks {
+            self.trace.name_track(pid, tid, &format!("{label} {name}"));
+        }
+        align_remote(&mut events, pid, self.links[widx].clock_offset_us);
+        self.trace.adopt_events(events);
     }
 
     /// A mid-SCF joiner failed its handshake: refuse it (declare lost)

@@ -17,8 +17,10 @@
 //! d→w  Setup{JobSpec, nonce, auth}  basis + engine config, verbatim
 //!      floats; auth = auth_tag(secret, worker nonce) answers the
 //!      worker's challenge, nonce challenges the coordinator's peer
-//! w→d  SetupAck{nbf,npairs,nblocks,auth}  sanity echo of the rebuilt
-//!      system; auth answers the coordinator's challenge
+//! w→d  SetupAck{nbf,npairs,nblocks,auth,clock_us}  sanity echo of the
+//!      rebuilt system; auth answers the coordinator's challenge;
+//!      clock_us timestamps the ack on the worker's trace clock so the
+//!      coordinator can estimate the clock offset for merged timelines
 //! per Fock build:
 //! d→w  Build{iter, fingerprint, delta_screen, tuner snapshot, density}
 //!      (delta_screen: density is ΔD — re-run the density-weighted
@@ -27,6 +29,7 @@
 //! w→d  BuildAck{iter, fingerprint}   worker's own schedule digest
 //! d→w  Run{iter, unit ids}           work-stealing batches
 //! w→d  Shard{iter, unit, partial G, observations, metrics}   per unit
+//! w→d  Trace{iter, tracks, events}   drained span buffer (tracing only)
 //! w→d  RunDone{iter}                 batch drained, worker idle
 //! either direction: Error{fatal, message} — fatal means the whole
 //! dispatch must abort (fingerprint/config drift, secret mismatch);
@@ -50,16 +53,21 @@ use crate::basis::{BasisSet, Shell};
 use crate::constructor::SchwarzMode;
 use crate::fock::DigestStrategy;
 use crate::linalg::Matrix;
-use crate::metrics::{ClassStats, EngineMetrics};
+use crate::metrics::{ClassStats, EngineMetrics, Registry};
 use crate::pipeline::PipelineMode;
 use crate::runtime::{BackendKind, ClassKey, EriEvalStrategy, LadderMode};
+use crate::trace::{ArgValue, EventKind, TraceEvent};
 
 /// Bumped whenever the frame layout changes; `Hello` carries it so a
 /// version-skewed worker fails loudly at connect time.
 /// v5: shared-secret nonce/auth handshake on Hello/Setup/SetupAck, typed
 /// fatal flag on Error frames, dispatch fault counters in the metrics
 /// codec.
-pub const PROTO_VERSION: u32 = 5;
+/// v6: structured tracing — `JobSpec` carries the trace enable flag,
+/// `SetupAck` carries the worker's trace clock (µs since its epoch) for
+/// the coordinator's clock-offset estimate, and `Trace` frames ship each
+/// build's worker-local span buffer before `RunDone`.
+pub const PROTO_VERSION: u32 = 6;
 
 /// Keyed digest both ends derive from the shared dispatch secret and the
 /// peer's nonce.  No secret configured hashes as the empty string, so
@@ -107,6 +115,8 @@ pub struct JobSpec {
     pub artifact_dir: String,
     /// optional Schwarz calibration-table path on the worker host
     pub schwarz_cal_path: Option<String>,
+    /// workers record spans and ship them in `Trace` frames when set
+    pub trace: bool,
 }
 
 /// One merge unit's result crossing the wire: the partial-G shard plus
@@ -124,7 +134,17 @@ pub struct UnitShard {
 pub enum Msg {
     Hello { version: u32, nonce: u64 },
     Setup { spec: Box<JobSpec>, nonce: u64, auth: u64 },
-    SetupAck { nbf: usize, npairs: usize, nblocks: usize, auth: u64 },
+    SetupAck {
+        nbf: usize,
+        npairs: usize,
+        nblocks: usize,
+        auth: u64,
+        /// the worker's trace clock at ack time (µs since its sink epoch;
+        /// 0 when tracing is off) — the coordinator pairs it with its own
+        /// send/receive Instants to estimate the clock offset that maps
+        /// shipped `Trace` events onto the unified timeline
+        clock_us: u64,
+    },
     Build {
         iter: u64,
         fingerprint: u64,
@@ -138,6 +158,12 @@ pub enum Msg {
     Run { iter: u64, units: Vec<usize> },
     Shard { iter: u64, shard: Box<UnitShard> },
     RunDone { iter: u64 },
+    /// The worker's drained span buffer for one build (sent before
+    /// `RunDone` when the spec enabled tracing).  `tracks` are the
+    /// worker's `tid → label` registrations; timestamps are worker-epoch
+    /// µs — the coordinator applies its offset estimate
+    /// ([`crate::trace::align_remote`]) when adopting them.
+    Trace { iter: u64, tracks: Vec<(u32, String)>, events: Vec<TraceEvent> },
     /// `fatal` marks errors that invalidate the whole dispatch (schedule
     /// fingerprint / config drift, secret mismatch, protocol violation);
     /// non-fatal errors lose only the sending worker — the coordinator
@@ -156,6 +182,7 @@ const TAG_SHARD: u8 = 7;
 const TAG_RUN_DONE: u8 = 8;
 const TAG_ERROR: u8 = 9;
 const TAG_SHUTDOWN: u8 = 10;
+const TAG_TRACE: u8 = 11;
 
 // ---------------------------------------------------------------------
 // encoding
@@ -211,6 +238,15 @@ impl Enc {
         self.u64(s.padded_slots);
         self.f64(s.seconds);
     }
+    /// The `(name → seconds)` registry layout `per_strategy` and
+    /// `per_digest` share on the wire.
+    fn seconds_map(&mut self, m: &Registry<String, f64>) {
+        self.usize(m.len());
+        for (name, secs) in m {
+            self.str(name);
+            self.f64(*secs);
+        }
+    }
     fn metrics(&mut self, m: &EngineMetrics) {
         self.usize(m.per_class.len());
         for (class, s) in &m.per_class {
@@ -223,16 +259,8 @@ impl Enc {
             self.usize(*rung);
             self.class_stats(s);
         }
-        self.usize(m.per_strategy.len());
-        for (name, secs) in &m.per_strategy {
-            self.str(name);
-            self.f64(*secs);
-        }
-        self.usize(m.per_digest.len());
-        for (name, secs) in &m.per_digest {
-            self.str(name);
-            self.f64(*secs);
-        }
+        self.seconds_map(&m.per_strategy);
+        self.seconds_map(&m.per_digest);
         self.u64(m.wide_chunks);
         self.u64(m.split_chunks);
         self.f64(m.digest_seconds);
@@ -255,6 +283,40 @@ impl Enc {
         self.usize(ob.prior);
         self.usize(ob.quads);
         self.f64(ob.seconds);
+    }
+    fn event(&mut self, ev: &TraceEvent) {
+        self.u8(match ev.kind {
+            EventKind::Span => 0,
+            EventKind::Instant => 1,
+        });
+        self.str(&ev.name);
+        self.str(&ev.cat);
+        // worker timestamps are non-negative (own-epoch µs); the i64 ships
+        // as its bit pattern so the codec stays total anyway
+        self.u64(ev.ts_us as u64);
+        self.u64(ev.dur_us);
+        self.u64(ev.id);
+        // pid is NOT shipped: the coordinator assigns worker pids when it
+        // adopts the buffer (align_remote)
+        self.u32(ev.tid);
+        self.usize(ev.args.len());
+        for (key, value) in &ev.args {
+            self.str(key);
+            match value {
+                ArgValue::U(n) => {
+                    self.u8(0);
+                    self.u64(*n);
+                }
+                ArgValue::F(x) => {
+                    self.u8(1);
+                    self.f64(*x);
+                }
+                ArgValue::S(s) => {
+                    self.u8(2);
+                    self.str(s);
+                }
+            }
+        }
     }
     fn spec(&mut self, spec: &JobSpec) {
         self.str(&spec.title);
@@ -292,6 +354,7 @@ impl Enc {
                 self.str(p);
             }
         }
+        self.bool(spec.trace);
     }
 }
 
@@ -396,6 +459,18 @@ impl<'a> Dec<'a> {
             seconds: self.f64()?,
         })
     }
+    /// Inverse of [`Enc::seconds_map`]: entries are 8B name-length prefix
+    /// + 8B seconds minimum.
+    fn seconds_map(&mut self) -> anyhow::Result<Registry<String, f64>> {
+        let n = self.count(8 + 8)?;
+        let mut m = Registry::default();
+        for _ in 0..n {
+            let name = self.str()?;
+            let secs = self.f64()?;
+            m.insert(name, secs);
+        }
+        Ok(m)
+    }
     fn metrics(&mut self) -> anyhow::Result<EngineMetrics> {
         let mut m = EngineMetrics::default();
         // element sizes: ClassKey = 4B, ClassStats = 32B, rung = 8B
@@ -410,20 +485,8 @@ impl<'a> Dec<'a> {
             let rung = self.usize()?;
             m.per_rung.insert((class, rung), self.class_stats()?);
         }
-        // strategy entries: 8B name-length prefix + 8B seconds minimum
-        let nstrat = self.count(8 + 8)?;
-        for _ in 0..nstrat {
-            let name = self.str()?;
-            let secs = self.f64()?;
-            m.per_strategy.insert(name, secs);
-        }
-        // digest entries share the strategy layout: name + seconds
-        let ndig = self.count(8 + 8)?;
-        for _ in 0..ndig {
-            let name = self.str()?;
-            let secs = self.f64()?;
-            m.per_digest.insert(name, secs);
-        }
+        m.per_strategy = self.seconds_map()?;
+        m.per_digest = self.seconds_map()?;
         m.wide_chunks = self.u64()?;
         m.split_chunks = self.u64()?;
         m.digest_seconds = self.f64()?;
@@ -439,6 +502,33 @@ impl<'a> Dec<'a> {
         m.dispatch_retries = self.u64()?;
         m.dispatch_joined_mid_scf = self.u64()?;
         Ok(m)
+    }
+    fn event(&mut self) -> anyhow::Result<TraceEvent> {
+        let kind = match self.u8()? {
+            0 => EventKind::Span,
+            1 => EventKind::Instant,
+            other => anyhow::bail!("unknown trace-event kind {other} on the dispatch wire"),
+        };
+        let name = self.str()?;
+        let cat = self.str()?;
+        let ts_us = self.u64()? as i64;
+        let dur_us = self.u64()?;
+        let id = self.u64()?;
+        let tid = self.u32()?;
+        // arg = 8B key-length prefix + 1B type tag + ≥8B payload
+        let nargs = self.count(8 + 1 + 8)?;
+        let mut args = Vec::with_capacity(nargs);
+        for _ in 0..nargs {
+            let key = self.str()?;
+            let value = match self.u8()? {
+                0 => ArgValue::U(self.u64()?),
+                1 => ArgValue::F(self.f64()?),
+                2 => ArgValue::S(self.str()?),
+                other => anyhow::bail!("unknown trace-arg tag {other} on the dispatch wire"),
+            };
+            args.push((key, value));
+        }
+        Ok(TraceEvent { kind, name, cat, ts_us, dur_us, id, pid: 0, tid, args })
     }
     fn observation(&mut self) -> anyhow::Result<TunerObservation> {
         Ok(TunerObservation {
@@ -488,6 +578,7 @@ impl<'a> Dec<'a> {
             pipeline: PipelineMode::parse(&self.str()?)?,
             artifact_dir: self.str()?,
             schwarz_cal_path: if self.bool()? { Some(self.str()?) } else { None },
+            trace: self.bool()?,
         })
     }
 
@@ -514,12 +605,13 @@ impl Msg {
                 e.u64(*auth);
                 e.spec(spec);
             }
-            Msg::SetupAck { nbf, npairs, nblocks, auth } => {
+            Msg::SetupAck { nbf, npairs, nblocks, auth, clock_us } => {
                 e.u8(TAG_SETUP_ACK);
                 e.usize(*nbf);
                 e.usize(*npairs);
                 e.usize(*nblocks);
                 e.u64(*auth);
+                e.u64(*clock_us);
             }
             Msg::Build { iter, fingerprint, delta_screen, snapshot, density } => {
                 e.u8(TAG_BUILD);
@@ -561,6 +653,19 @@ impl Msg {
                 e.u8(TAG_RUN_DONE);
                 e.u64(*iter);
             }
+            Msg::Trace { iter, tracks, events } => {
+                e.u8(TAG_TRACE);
+                e.u64(*iter);
+                e.usize(tracks.len());
+                for (tid, name) in tracks {
+                    e.u32(*tid);
+                    e.str(name);
+                }
+                e.usize(events.len());
+                for ev in events {
+                    e.event(ev);
+                }
+            }
             Msg::Error { fatal, message } => {
                 e.u8(TAG_ERROR);
                 e.bool(*fatal);
@@ -587,6 +692,7 @@ impl Msg {
                 npairs: d.usize()?,
                 nblocks: d.usize()?,
                 auth: d.u64()?,
+                clock_us: d.u64()?,
             },
             TAG_BUILD => {
                 let iter = d.u64()?;
@@ -630,6 +736,24 @@ impl Msg {
                 }
             }
             TAG_RUN_DONE => Msg::RunDone { iter: d.u64()? },
+            TAG_TRACE => {
+                let iter = d.u64()?;
+                // track = 4B tid + 8B name-length prefix minimum
+                let ntracks = d.count(4 + 8)?;
+                let mut tracks = Vec::with_capacity(ntracks);
+                for _ in 0..ntracks {
+                    let tid = d.u32()?;
+                    tracks.push((tid, d.str()?));
+                }
+                // event = 1B kind + 2×8B name/cat prefixes + 3×8B
+                // ts/dur/id + 4B tid + 8B arg count minimum
+                let nevents = d.count(1 + 16 + 24 + 4 + 8)?;
+                let mut events = Vec::with_capacity(nevents);
+                for _ in 0..nevents {
+                    events.push(d.event()?);
+                }
+                Msg::Trace { iter, tracks, events }
+            }
             TAG_ERROR => Msg::Error { fatal: d.bool()?, message: d.str()? },
             TAG_SHUTDOWN => Msg::Shutdown,
             other => anyhow::bail!("unknown dispatch message tag {other}"),
@@ -649,6 +773,7 @@ impl Msg {
             Msg::Run { .. } => "Run",
             Msg::Shard { .. } => "Shard",
             Msg::RunDone { .. } => "RunDone",
+            Msg::Trace { .. } => "Trace",
             Msg::Error { .. } => "Error",
             Msg::Shutdown => "Shutdown",
         }
@@ -729,6 +854,7 @@ mod tests {
             pipeline: PipelineMode::Staged,
             artifact_dir: "artifacts".into(),
             schwarz_cal_path: Some("/tmp/cal.txt".into()),
+            trace: true,
         }
     }
 
@@ -802,7 +928,13 @@ mod tests {
                 nonce: 42,
                 auth: auth_tag("hunter2", 0xfeed_face_dead_0001),
             },
-            Msg::SetupAck { nbf: 7, npairs: 28, nblocks: 12, auth: auth_tag("hunter2", 42) },
+            Msg::SetupAck {
+                nbf: 7,
+                npairs: 28,
+                nblocks: 12,
+                auth: auth_tag("hunter2", 42),
+                clock_us: 123_456_789,
+            },
             Msg::Build {
                 iter: 3,
                 fingerprint: 0xdead_beef_cafe_f00d,
@@ -814,6 +946,38 @@ mod tests {
             Msg::Run { iter: 3, units: vec![0, 5, 63] },
             Msg::Shard { iter: 3, shard: Box::new(shard) },
             Msg::Shard { iter: 4, shard: Box::new(chaos_shard) },
+            Msg::Trace {
+                iter: 3,
+                tracks: vec![(2, "pipeline worker".into()), (0x8002, "compute companion".into())],
+                events: vec![
+                    TraceEvent {
+                        kind: EventKind::Span,
+                        name: "execute".into(),
+                        cat: "pipeline".into(),
+                        ts_us: 1234,
+                        dur_us: 567,
+                        id: 0,
+                        pid: 0,
+                        tid: 0x8002,
+                        args: vec![
+                            ("class".into(), ArgValue::S("ssss".into())),
+                            ("rung".into(), ArgValue::U(512)),
+                            ("seconds".into(), ArgValue::F(0.1 + 0.2)), // inexact sum
+                        ],
+                    },
+                    TraceEvent {
+                        kind: EventKind::Instant,
+                        name: "unit_done".into(),
+                        cat: "dispatch".into(),
+                        ts_us: 2000,
+                        dur_us: 0,
+                        id: 9,
+                        pid: 0,
+                        tid: 2,
+                        args: Vec::new(),
+                    },
+                ],
+            },
             Msg::RunDone { iter: 3 },
             Msg::Error { fatal: false, message: "kaboom: worker 1 lost its marbles".into() },
             Msg::Error { fatal: true, message: "fingerprint mismatch".into() },

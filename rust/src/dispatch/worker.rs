@@ -30,6 +30,7 @@ use crate::pipeline::{
     run_units_streamed, ChunkSchedule, ExecContext, PipelineMode, SchedulePolicy,
 };
 use crate::runtime::{create_backend, EriBackend};
+use crate::trace::{ArgValue, TraceSink, TID_ENGINE};
 
 use super::proto::{auth_tag, read_msg, write_frame, write_msg, JobSpec, Msg, UnitShard, PROTO_VERSION};
 
@@ -252,6 +253,9 @@ pub fn serve<R: Read, W: Write>(r: &mut R, w: &mut W, opts: &WorkerOptions) -> a
         Msg::Shutdown => return Ok(()),
         other => return fail(w, true, format!("worker expected Setup, got {}", other.kind())),
     };
+    // the sink's epoch starts here — `clock_us` in the SetupAck lets the
+    // coordinator map this worker's timestamps onto its own timeline
+    let sink = if spec.trace { TraceSink::enabled() } else { TraceSink::disabled() };
     let state = match WorkerState::build(&spec) {
         Ok(s) => s,
         Err(e) => return fail(w, true, format!("worker failed to build {:?}: {e}", spec.title)),
@@ -272,6 +276,7 @@ pub fn serve<R: Read, W: Write>(r: &mut R, w: &mut W, opts: &WorkerOptions) -> a
             npairs: state.pairs.pairs.len(),
             nblocks: state.plan.blocks.len(),
             auth: auth_tag(&opts.secret, setup_nonce),
+            clock_us: sink.now_us(),
         },
     )?;
 
@@ -300,17 +305,23 @@ pub fn serve<R: Read, W: Write>(r: &mut R, w: &mut W, opts: &WorkerOptions) -> a
                 // function of (plan, pairs, ΔD, threshold), so the
                 // schedule fingerprint below proves agreement
                 let filtered = if delta_screen {
+                    let span = sink.begin(TID_ENGINE, "delta_screen", "screen");
                     let dmax = ShellDeltaMax::build(&state.basis, &density);
-                    let (plan, _) = filter_plan_by_delta(
+                    let (plan, stats) = filter_plan_by_delta(
                         &state.plan,
                         &state.pairs,
                         &dmax,
                         delta_threshold(state.threshold),
                     );
+                    sink.end_with(span, |a| {
+                        a.push(("quads_surviving".into(), ArgValue::U(stats.surviving)));
+                        a.push(("quads_screened".into(), ArgValue::U(stats.screened)));
+                    });
                     Some(plan)
                 } else {
                     None
                 };
+                let span = sink.begin(TID_ENGINE, "schedule_build", "schedule");
                 let schedule = match ChunkSchedule::build(
                     filtered.as_ref().unwrap_or(&state.plan),
                     state.backend.manifest(),
@@ -322,6 +333,10 @@ pub fn serve<R: Read, W: Write>(r: &mut R, w: &mut W, opts: &WorkerOptions) -> a
                     Ok(s) => s,
                     Err(e) => return fail(w, true, format!("worker schedule build failed: {e}")),
                 };
+                sink.end_with(span, |a| {
+                    a.push(("entries".into(), ArgValue::U(schedule.entries.len() as u64)));
+                    a.push(("units".into(), ArgValue::U(schedule.units.len() as u64)));
+                });
                 let mine = schedule.fingerprint();
                 if mine != fingerprint {
                     return fail(
@@ -366,6 +381,7 @@ pub fn serve<R: Read, W: Write>(r: &mut R, w: &mut W, opts: &WorkerOptions) -> a
                     digest: state.digest,
                     cache: None,
                     collect_cache: false,
+                    trace: sink.clone(),
                 };
                 let workers = state.threads.min(units.len()).max(1);
                 let ran = catch_unwind(AssertUnwindSafe(|| {
@@ -454,6 +470,24 @@ pub fn serve<R: Read, W: Write>(r: &mut R, w: &mut W, opts: &WorkerOptions) -> a
                             anyhow::bail!("injected worker crash after {n} shard(s)");
                         }
                     }
+                }
+                if sink.is_enabled() {
+                    // ship this build's span buffer (worker-epoch
+                    // timestamps — the coordinator aligns them) and leave
+                    // the store empty for the next build
+                    let export = sink.drain();
+                    write_msg(
+                        w,
+                        &Msg::Trace {
+                            iter,
+                            tracks: export
+                                .tracks
+                                .into_iter()
+                                .map(|((_pid, tid), name)| (tid, name))
+                                .collect(),
+                            events: export.events,
+                        },
+                    )?;
                 }
                 write_msg(w, &Msg::RunDone { iter })?;
             }

@@ -46,6 +46,7 @@ use crate::runtime::{
     create_backend, BackendKind, ClassKey, EriBackend, EriEvalStrategy, LadderMode,
 };
 use crate::scf::{FockBuildStats, FockEngine};
+use crate::trace::{ArgValue, TraceSink, TID_ENGINE};
 use crate::util::Stopwatch;
 
 /// Default stored-mode cache budget (~1 GiB of contracted values).
@@ -171,6 +172,9 @@ pub struct MatryoshkaConfig {
     /// density-weighted surviving chunk subset and accumulate onto the
     /// previous G (`--incremental off|on|every:N`)
     pub incremental: IncrementalMode,
+    /// structured-tracing sink (`--trace-out`); the default disabled sink
+    /// costs one branch per span site and never changes results
+    pub trace: TraceSink,
 }
 
 impl Default for MatryoshkaConfig {
@@ -196,6 +200,7 @@ impl Default for MatryoshkaConfig {
             dispatch: DispatchConfig::default(),
             schwarz_cal_path: None,
             incremental: IncrementalMode::Off,
+            trace: TraceSink::disabled(),
         }
     }
 }
@@ -305,8 +310,17 @@ impl MatryoshkaEngine {
             // BEFORE pair construction triggers the lazy calibration
             schwarz_calibration_from_path(Path::new(path))?;
         }
+        let span = config.trace.begin(TID_ENGINE, "schwarz_screen", "screen");
         let pairs = PairList::build_with_mode(&basis, config.threshold, config.schwarz);
+        config.trace.end_with(span, |a| {
+            a.push(("pairs_surviving".into(), ArgValue::U(pairs.pairs.len() as u64)))
+        });
+        let span = config.trace.begin(TID_ENGINE, "block_plan", "screen");
         let plan = BlockPlan::build(&pairs, config.threshold, config.tile, config.clustered);
+        config.trace.end_with(span, |a| {
+            a.push(("blocks".into(), ArgValue::U(plan.blocks.len() as u64)));
+            a.push(("quads_surviving".into(), ArgValue::U(plan.stats.quadruples_surviving)));
+        });
         // every class the plan will execute must have catalog coverage and
         // compatible chunk shapes — surface the "no kernel variant" error
         // here, before any ClassTuner exists, instead of mid-Fock-build
@@ -445,14 +459,20 @@ impl MatryoshkaEngine {
     /// schedule — and its fingerprint — covers exactly the iteration's
     /// chunk subset.
     fn build_schedule_for(&self, plan: &BlockPlan) -> anyhow::Result<ChunkSchedule> {
-        ChunkSchedule::build(
+        let span = self.config.trace.begin(TID_ENGINE, "schedule_build", "schedule");
+        let schedule = ChunkSchedule::build(
             plan,
             self.backend.manifest(),
             &self.tuner.batch_snapshot(),
             &self.schedule_policy(),
             &self.pairs,
             self.basis.nbf,
-        )
+        )?;
+        self.config.trace.end_with(span, |a| {
+            a.push(("entries".into(), ArgValue::U(schedule.entries.len() as u64)));
+            a.push(("units".into(), ArgValue::U(schedule.units.len() as u64)));
+        });
+        Ok(schedule)
     }
 
     /// Shard the schedule's merge units over the worker pool, run them
@@ -484,6 +504,7 @@ impl MatryoshkaEngine {
             digest: self.config.digest,
             cache,
             collect_cache,
+            trace: self.config.trace.clone(),
         };
         let workers = self.threads.min(nunits).max(1);
         let unit_ids: Vec<usize> = (0..nunits).collect();
@@ -491,7 +512,11 @@ impl MatryoshkaEngine {
         let outs = run_units_streamed(&self.pool, workers, &ctx, density, &unit_ids)?;
         drop(ctx);
 
+        let span = self.config.trace.begin_with(TID_ENGINE, "merge_partials", "merge", |a| {
+            a.push(("units".into(), ArgValue::U(nunits as u64)))
+        });
         let g = merge_partials(n, outs.iter().map(|(_, o)| &o.g));
+        self.config.trace.end(span);
         let mut observations = Vec::new();
         let mut collected = Vec::new();
         for (_, out) in outs {
@@ -538,6 +563,7 @@ impl MatryoshkaEngine {
             pipeline: self.config.pipeline,
             artifact_dir: self.artifact_dir.to_string_lossy().into_owned(),
             schwarz_cal_path: self.config.schwarz_cal_path.clone(),
+            trace: self.config.trace.is_enabled(),
         }
     }
 
@@ -574,8 +600,13 @@ impl MatryoshkaEngine {
             let spec = self.job_spec();
             let npairs = self.pairs.pairs.len();
             let nblocks = self.plan.blocks.len();
-            self.dispatcher =
-                Some(Dispatcher::launch(&self.config.dispatch, &spec, npairs, nblocks)?);
+            self.dispatcher = Some(Dispatcher::launch(
+                &self.config.dispatch,
+                &spec,
+                npairs,
+                nblocks,
+                self.config.trace.clone(),
+            )?);
         }
         let snapshot = self.tuner.batch_snapshot();
         let dispatcher = self.dispatcher.as_mut().expect("dispatcher launched above");
@@ -602,10 +633,15 @@ impl MatryoshkaEngine {
                 digest: self.config.digest,
                 cache: None,
                 collect_cache: false,
+                trace: self.config.trace.clone(),
             };
             let workers = self.threads.min(outcome.missing.len()).max(1);
             local = run_units_streamed(&self.pool, workers, &ctx, density, &outcome.missing)?;
         }
+        let span = self.config.trace.begin_with(TID_ENGINE, "merge_unit_shards", "merge", |a| {
+            a.push(("units".into(), ArgValue::U(nunits as u64)));
+            a.push(("local_units".into(), ArgValue::U(local.len() as u64)));
+        });
         let g = merge_unit_shards(
             n,
             nunits,
@@ -615,6 +651,7 @@ impl MatryoshkaEngine {
                 .map(|s| (s.unit, &s.g))
                 .chain(local.iter().map(|(u, o)| (*u, &o.g))),
         )?;
+        self.config.trace.end(span);
         let mut observations = Vec::new();
         for shard in &outcome.shards {
             self.metrics.merge(&shard.metrics);
@@ -722,6 +759,7 @@ impl MatryoshkaEngine {
             chunks_screened: 0,
             dd_max: 0.0,
             wall_seconds: 0.0,
+            span: 0,
         };
         Ok((g, stats))
     }
@@ -737,9 +775,15 @@ impl MatryoshkaEngine {
         let prev_d = self.prev_density.as_ref().expect("incremental carry-over checked");
         let mut delta = density.clone();
         delta.add_scaled(prev_d, -1.0);
+        let span = self.config.trace.begin(TID_ENGINE, "delta_screen", "screen");
         let dmax = ShellDeltaMax::build(&self.basis, &delta);
         let threshold = delta_threshold(self.config.threshold);
         let (filtered, stats) = filter_plan_by_delta(&self.plan, &self.pairs, &dmax, threshold);
+        self.config.trace.end_with(span, |a| {
+            a.push(("dd_max".into(), ArgValue::F(stats.dd_max)));
+            a.push(("quads_surviving".into(), ArgValue::U(stats.surviving)));
+            a.push(("quads_screened".into(), ArgValue::U(stats.screened)));
+        });
         let schedule = self.build_schedule_for(&filtered)?;
         let mut dg = if stats.surviving == 0 {
             // every contribution bounded out — ΔG is exactly zero
@@ -760,6 +804,7 @@ impl MatryoshkaEngine {
             chunks_screened: stats.screened,
             dd_max: stats.dd_max,
             wall_seconds: 0.0,
+            span: 0,
         };
         Ok((g, stats))
     }
@@ -834,7 +879,13 @@ impl FockEngine for MatryoshkaEngine {
 
     fn two_electron(&mut self, density: &Matrix) -> anyhow::Result<Matrix> {
         let sw = Stopwatch::start();
-        let (g, stats) = if self.next_build_is_incremental() {
+        let incremental = self.next_build_is_incremental();
+        let build_no = self.fock_trace.len() as u64 + 1;
+        let build_span = self.config.trace.begin_with(TID_ENGINE, "fock_build", "scf", |a| {
+            a.push(("build".into(), ArgValue::U(build_no)));
+            a.push(("incremental".into(), ArgValue::U(incremental as u64)));
+        });
+        let (g, stats) = if incremental {
             self.build_incremental(density)?
         } else {
             self.build_full(density)?
@@ -853,7 +904,8 @@ impl FockEngine for MatryoshkaEngine {
             self.metrics.full_builds += 1;
             self.metrics.full_seconds += wall;
         }
-        self.fock_trace.push(FockBuildStats { wall_seconds: wall, ..stats });
+        self.config.trace.end(build_span);
+        self.fock_trace.push(FockBuildStats { wall_seconds: wall, span: build_span.id(), ..stats });
         Ok(g)
     }
 

@@ -56,4 +56,5 @@ pub mod report;
 pub mod runtime;
 pub mod scf;
 pub mod testing;
+pub mod trace;
 pub mod util;

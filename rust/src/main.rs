@@ -33,6 +33,7 @@ use matryoshka::pipeline::PipelineMode;
 use matryoshka::report;
 use matryoshka::runtime::{BackendKind, EriEvalStrategy, LadderMode};
 use matryoshka::scf::{dipole_moment, mulliken_charges, run_rhf, ScfOptions};
+use matryoshka::trace::{chrome, snapshot, TraceSink};
 
 fn artifact_dir(args: &Args) -> PathBuf {
     PathBuf::from(args.str_or("artifacts", "artifacts"))
@@ -54,15 +55,20 @@ fn usage() -> ! {
          \u{20}         [--schwarz-cal-path FILE]\n\
          \u{20}         [--incremental off|on|every:N (delta-Fock builds after iteration 1)]\n\
          \u{20}         [--diis-size N] [--scf-trace-path FILE (per-iteration CSV)]\n\
+         \u{20}         [--trace-out FILE (Chrome trace-event JSON — load in Perfetto)]\n\
+         \u{20}         [--metrics-out FILE (versioned metrics snapshot JSON)]\n\
          \u{20}         [--threshold T] [--max-iter N] [--tile N] [--fixed-batch N]\n\
          \u{20}         [--no-autotune] [--no-cluster] [--random-path]\n\
          \u{20}         [--schwarz exact|estimate] [--artifacts DIR] [--verbose]\n\
          \u{20}         [--xyz FILE] [--damping A] [--properties]\n\
-         \n  report  systems|tab4|fig6|compiler|schedule|dispatch|all [--artifacts DIR]\n\
+         \n  report  systems|tab4|fig6|compiler|schedule|dispatch|trace|metrics|all\n\
+         \u{20}         [--artifacts DIR]\n\
          \u{20}         (schedule: [--molecule NAME] [--basis B] [--iteration N] — merge-unit\n\
          \u{20}          work summary; --iteration N shows the delta-screened schedule the\n\
          \u{20}          incremental engine re-materialized at SCF iteration N)\n\
          \u{20}         (dispatch: [--molecule NAME] [--basis B] [--dispatch-workers N])\n\
+         \u{20}         (trace:   --in FILE [--top K] — self-time table of a --trace-out file)\n\
+         \u{20}         (metrics: --in FILE — summary of a --metrics-out / BENCH_*.json file)\n\
          \n  info    [--backend native|pjrt] [--ladder elastic|fixed] [--artifacts DIR]\n\
          \u{20}         [--eri-strategy kernels|tables|recursion]\n\
          \n  worker  (--stdio | --listen HOST:PORT [--once]) [--worker-index N]\n\
@@ -183,12 +189,18 @@ fn cmd_scf(args: &Args) -> anyhow::Result<()> {
     let mol = load_molecule(args)?;
     let basis_name = args.str_or("basis", "sto-3g");
     let basis = build_basis(&mol, &basis_name)?;
+    let trace_out = args.get("trace-out").map(PathBuf::from);
+    let metrics_out = args.get("metrics-out").map(PathBuf::from);
+    // one sink serves the SCF driver, the engine, and (on dispatched
+    // runs) the coordinator; disabled it costs one branch per span site
+    let sink = if trace_out.is_some() { TraceSink::enabled() } else { TraceSink::disabled() };
     let opts = ScfOptions {
         max_iterations: args.usize_or("max-iter", 60)?,
         diis_size: args.usize_or("diis-size", 8)?,
         damping: args.f64_or("damping", 0.0)?,
         verbose: args.flag("verbose"),
         trace_path: args.get("scf-trace-path").map(PathBuf::from),
+        trace: sink.clone(),
         ..Default::default()
     };
     println!(
@@ -208,7 +220,8 @@ fn cmd_scf(args: &Args) -> anyhow::Result<()> {
             run_rhf(&mol, &basis, &mut engine, &opts)?
         }
         "matryoshka" => {
-            let config = engine_config(args)?;
+            let mut config = engine_config(args)?;
+            config.trace = sink.clone();
             let mut engine = MatryoshkaEngine::new(basis.clone(), &artifact_dir(args), config)?;
             let res = run_rhf(&mol, &basis, &mut engine, &opts)?;
             let m = &engine.metrics;
@@ -281,10 +294,52 @@ fn cmd_scf(args: &Args) -> anyhow::Result<()> {
                 println!("engine: dispatch {}", engine.config.dispatch.mode.describe());
                 print!("{summary}");
             }
+            if let Some(path) = &metrics_out {
+                let mut snap =
+                    snapshot::Snapshot::new("scf", &format!("{} / {basis_name}", mol.name));
+                snap.ctx_str("molecule", &mol.name)
+                    .ctx_str("basis", &basis_name)
+                    .ctx_str("engine", "matryoshka")
+                    .ctx_num("nbf", basis.nbf as f64)
+                    .ctx_num("iterations", res.iterations as f64)
+                    .ctx_num("energy_ha", res.energy);
+                snapshot::put_engine_metrics(&mut snap, &engine.metrics);
+                if let Some(workers) = engine.dispatch_stats() {
+                    snapshot::put_dispatch_stats(&mut snap, workers);
+                }
+                snapshot::put_fock_builds(&mut snap, engine.fock_trace());
+                snap.write(path)?;
+                println!("metrics: snapshot written to {}", path.display());
+            }
             res
         }
         other => anyhow::bail!("unknown engine {other}"),
     };
+    if let Some(path) = &metrics_out {
+        if engine_name != "matryoshka" {
+            // no engine registry on reference runs — record the converged
+            // result in the same schema so downstream tooling still parses
+            let mut snap =
+                snapshot::Snapshot::new("scf", &format!("{} / {basis_name} (reference)", mol.name));
+            snap.ctx_str("molecule", &mol.name)
+                .ctx_str("basis", &basis_name)
+                .ctx_str("engine", &engine_name);
+            snap.counter("iterations", result.iterations as f64)
+                .counter("energy_ha", result.energy);
+            snap.write(path)?;
+            println!("metrics: snapshot written to {}", path.display());
+        }
+    }
+    if let Some(path) = &trace_out {
+        let export = sink.export();
+        chrome::write_chrome(path, &export)?;
+        println!(
+            "trace: {} event(s) on {} named track(s) written to {}",
+            export.events.len(),
+            export.tracks.len(),
+            path.display()
+        );
+    }
 
     let (homo, lumo) = result.homo_lumo();
     println!(
@@ -366,6 +421,17 @@ fn cmd_report(args: &Args) -> anyhow::Result<()> {
                 args.usize_or("dispatch-workers", 2)?,
                 None,
             )?,
+            // not part of `report all`: they read files produced by
+            // `scf --trace-out` / `--metrics-out`
+            "trace" => report::trace_report(
+                Path::new(args.get("in").ok_or_else(|| {
+                    anyhow::anyhow!("report trace requires --in FILE (from scf --trace-out)")
+                })?),
+                args.usize_or("top", 12)?,
+            )?,
+            "metrics" => report::metrics_report(Path::new(args.get("in").ok_or_else(
+                || anyhow::anyhow!("report metrics requires --in FILE (from scf --metrics-out)"),
+            )?))?,
             other => anyhow::bail!("unknown report {other}"),
         };
         println!("{text}");

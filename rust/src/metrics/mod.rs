@@ -9,8 +9,78 @@
 //!   per class plus measured quadruple throughput before/after tuning.
 
 use std::collections::BTreeMap;
+use std::ops::{Deref, DerefMut};
 
 use crate::runtime::ClassKey;
+
+/// Values a [`Registry`] can fold together (merging worker shards must
+/// equal sequential recording).
+pub trait Accumulate {
+    fn accumulate(&mut self, other: &Self);
+}
+
+impl Accumulate for f64 {
+    fn accumulate(&mut self, other: &f64) {
+        *self += *other;
+    }
+}
+
+/// A keyed counter family: the one shape behind `per_class`, `per_rung`,
+/// `per_strategy`, and `per_digest`, which used to each carry their own
+/// copy-pasted merge loop.  Backed by a `BTreeMap` (deterministic
+/// iteration order for wire encoding and reports) and `Deref`s to it, so
+/// read access (`iter`, `values`, indexing, `is_empty`, `len`) is exactly
+/// the map API.
+#[derive(Clone, Debug)]
+pub struct Registry<K: Ord, V>(BTreeMap<K, V>);
+
+impl<K: Ord, V> Default for Registry<K, V> {
+    fn default() -> Self {
+        Registry(BTreeMap::new())
+    }
+}
+
+impl<K: Ord, V> Deref for Registry<K, V> {
+    type Target = BTreeMap<K, V>;
+    fn deref(&self) -> &BTreeMap<K, V> {
+        &self.0
+    }
+}
+
+impl<K: Ord, V> DerefMut for Registry<K, V> {
+    fn deref_mut(&mut self) -> &mut BTreeMap<K, V> {
+        &mut self.0
+    }
+}
+
+impl<'a, K: Ord, V> IntoIterator for &'a Registry<K, V> {
+    type Item = (&'a K, &'a V);
+    type IntoIter = std::collections::btree_map::Iter<'a, K, V>;
+    fn into_iter(self) -> Self::IntoIter {
+        self.0.iter()
+    }
+}
+
+impl<K: Ord, V> Registry<K, V>
+where
+    V: Accumulate + Default,
+{
+    /// Fold `v` into the counter at `key` (creating it at default).
+    pub fn add(&mut self, key: K, v: &V) {
+        self.0.entry(key).or_default().accumulate(v);
+    }
+}
+
+impl<K: Ord + Clone, V: Accumulate + Default> Registry<K, V> {
+    /// Fold another registry in, key by key — the single merge loop that
+    /// replaces the per-map copies in `EngineMetrics::merge` and the
+    /// dispatch metrics-frame decode.
+    pub fn merge_from(&mut self, other: &Self) {
+        for (k, v) in &other.0 {
+            self.add(k.clone(), v);
+        }
+    }
+}
 
 /// Per-class execution accounting.
 #[derive(Clone, Copy, Debug, Default)]
@@ -39,6 +109,15 @@ impl ClassStats {
     }
 }
 
+impl Accumulate for ClassStats {
+    fn accumulate(&mut self, other: &ClassStats) {
+        self.executions += other.executions;
+        self.real_quads += other.real_quads;
+        self.padded_slots += other.padded_slots;
+        self.seconds += other.seconds;
+    }
+}
+
 /// Aggregated engine metrics, keyed by ERI class.
 ///
 /// Unit caveat under the parallel Fock pipeline: per-phase timers
@@ -49,21 +128,21 @@ impl ClassStats {
 /// denominator accumulate the same way).
 #[derive(Clone, Debug, Default)]
 pub struct EngineMetrics {
-    pub per_class: BTreeMap<ClassKey, ClassStats>,
+    pub per_class: Registry<ClassKey, ClassStats>,
     /// per-(class, batch rung) execution accounting — attributes wall
     /// time to the Workload Allocator's ladder decisions (Fig. 12)
-    pub per_rung: BTreeMap<(ClassKey, usize), ClassStats>,
+    pub per_rung: Registry<(ClassKey, usize), ClassStats>,
     /// execute CPU-seconds by the evaluator that *actually ran* each
     /// chunk ("kernels", "tables", "recursion", "pjrt") — under per-class
     /// fallback (a class past the generated catalog drops from `Kernels`
     /// to `Tables`) this attributes time to what happened, not what was
     /// configured
-    pub per_strategy: BTreeMap<String, f64>,
+    pub per_strategy: Registry<String, f64>,
     /// digestion CPU-seconds by digest strategy ("gemm", "scatter") —
     /// the per-strategy attribution of `digest_seconds`, so gemm-vs-
     /// scatter digest walls compare directly in `report schedule` and
     /// the fig9 bench
-    pub per_digest: BTreeMap<String, f64>,
+    pub per_digest: Registry<String, f64>,
     /// chunks staged wide (memory stage executed them inline) vs split
     /// (shipped to the compute companion) — the elastic stage split
     pub wide_chunks: u64,
@@ -102,11 +181,13 @@ pub struct EngineMetrics {
 
 impl EngineMetrics {
     pub fn record(&mut self, class: ClassKey, real: usize, padded: usize, seconds: f64) {
-        let s = self.per_class.entry(class).or_default();
-        s.executions += 1;
-        s.real_quads += real as u64;
-        s.padded_slots += padded as u64;
-        s.seconds += seconds;
+        let one = ClassStats {
+            executions: 1,
+            real_quads: real as u64,
+            padded_slots: padded as u64,
+            seconds,
+        };
+        self.per_class.add(class, &one);
     }
 
     /// Record one schedule entry's execution with its ladder attribution:
@@ -122,11 +203,13 @@ impl EngineMetrics {
         seconds: f64,
     ) {
         self.record(class, real, padded, seconds);
-        let s = self.per_rung.entry((class, rung)).or_default();
-        s.executions += 1;
-        s.real_quads += real as u64;
-        s.padded_slots += padded as u64;
-        s.seconds += seconds;
+        let one = ClassStats {
+            executions: 1,
+            real_quads: real as u64,
+            padded_slots: padded as u64,
+            seconds,
+        };
+        self.per_rung.add((class, rung), &one);
         if wide {
             self.wide_chunks += 1;
         } else {
@@ -141,12 +224,7 @@ impl EngineMetrics {
         if strategy.is_empty() {
             return;
         }
-        match self.per_strategy.get_mut(strategy) {
-            Some(s) => *s += seconds,
-            None => {
-                self.per_strategy.insert(strategy.to_string(), seconds);
-            }
-        }
+        self.per_strategy.add(strategy.to_string(), &seconds);
     }
 
     /// Attribute one entry's digest seconds to the digest strategy that
@@ -155,37 +233,16 @@ impl EngineMetrics {
         if strategy.is_empty() {
             return;
         }
-        match self.per_digest.get_mut(strategy) {
-            Some(s) => *s += seconds,
-            None => {
-                self.per_digest.insert(strategy.to_string(), seconds);
-            }
-        }
+        self.per_digest.add(strategy.to_string(), &seconds);
     }
 
     /// Fold a worker shard's metrics into this accumulator (the parallel
     /// Fock pipeline records per-worker and merges deterministically).
     pub fn merge(&mut self, other: &EngineMetrics) {
-        for (class, s) in &other.per_class {
-            let t = self.per_class.entry(*class).or_default();
-            t.executions += s.executions;
-            t.real_quads += s.real_quads;
-            t.padded_slots += s.padded_slots;
-            t.seconds += s.seconds;
-        }
-        for (key, s) in &other.per_rung {
-            let t = self.per_rung.entry(*key).or_default();
-            t.executions += s.executions;
-            t.real_quads += s.real_quads;
-            t.padded_slots += s.padded_slots;
-            t.seconds += s.seconds;
-        }
-        for (name, secs) in &other.per_strategy {
-            self.record_strategy(name, *secs);
-        }
-        for (name, secs) in &other.per_digest {
-            self.record_digest(name, *secs);
-        }
+        self.per_class.merge_from(&other.per_class);
+        self.per_rung.merge_from(&other.per_rung);
+        self.per_strategy.merge_from(&other.per_strategy);
+        self.per_digest.merge_from(&other.per_digest);
         self.wide_chunks += other.wide_chunks;
         self.split_chunks += other.split_chunks;
         self.digest_seconds += other.digest_seconds;
@@ -335,6 +392,35 @@ mod tests {
         folded.merge(&m);
         assert!((folded.per_digest["scatter"] - 1.125).abs() < 1e-12);
         assert!((folded.per_digest["gemm"] - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn registry_merge_equals_sequential_adds() {
+        let mut seq: Registry<String, f64> = Registry::default();
+        seq.add("kernels".into(), &0.5);
+        seq.add("tables".into(), &0.25);
+        seq.add("kernels".into(), &0.125);
+
+        let mut a: Registry<String, f64> = Registry::default();
+        a.add("kernels".into(), &0.5);
+        let mut b: Registry<String, f64> = Registry::default();
+        b.add("tables".into(), &0.25);
+        b.add("kernels".into(), &0.125);
+        let mut merged: Registry<String, f64> = Registry::default();
+        merged.merge_from(&a);
+        merged.merge_from(&b);
+
+        assert_eq!(merged.len(), seq.len());
+        assert!((merged["kernels"] - seq["kernels"]).abs() < 1e-15);
+        assert!((merged["tables"] - seq["tables"]).abs() < 1e-15);
+
+        // ClassStats registries fold field-wise
+        let mut r: Registry<ClassKey, ClassStats> = Registry::default();
+        let one = ClassStats { executions: 1, real_quads: 7, padded_slots: 8, seconds: 0.5 };
+        r.add((0, 0, 0, 0), &one);
+        r.add((0, 0, 0, 0), &one);
+        assert_eq!(r[&(0, 0, 0, 0)].executions, 2);
+        assert_eq!(r[&(0, 0, 0, 0)].real_quads, 14);
     }
 
     #[test]

@@ -52,7 +52,8 @@ use crate::constructor::{BlockPlan, PairList};
 use crate::fock::{digest_block, digest_block_gemm, DigestStrategy};
 use crate::linalg::Matrix;
 use crate::metrics::EngineMetrics;
-use crate::runtime::{ClassKey, EriBackend};
+use crate::runtime::{class_letters, ClassKey, EriBackend};
+use crate::trace::{ArgValue, LocalTrace, TraceSink, COMPANION_TID_OFFSET};
 use crate::util::Stopwatch;
 
 use super::schedule::{ChunkEntry, ChunkSchedule, StageShape};
@@ -77,6 +78,22 @@ pub struct ExecContext<'a> {
     pub cache: Option<&'a [Option<CachedChunk>]>,
     /// collect values of budget-marked entries into [`UnitOutput::cache`]
     pub collect_cache: bool,
+    /// structured-tracing sink; disabled sinks cost one branch per span
+    /// site and the workers' [`LocalTrace`] buffers stay inert
+    pub trace: TraceSink,
+}
+
+/// Argument payload shared by every per-chunk span: schedule entry id,
+/// ERI class, batch rung, frozen stage shape, real quad count.
+fn entry_args<'e>(entry: &'e ChunkEntry) -> impl FnOnce(&mut Vec<(String, ArgValue)>) + 'e {
+    move |a: &mut Vec<(String, ArgValue)>| {
+        a.push(("entry".into(), ArgValue::U(entry.entry as u64)));
+        a.push(("class".into(), ArgValue::S(class_letters(entry.class))));
+        a.push(("rung".into(), ArgValue::U(entry.rung as u64)));
+        let shape = if entry.shape == StageShape::Wide { "wide" } else { "split" };
+        a.push(("shape".into(), ArgValue::S(shape.into())));
+        a.push(("quads".into(), ArgValue::U(entry.len() as u64)));
+    }
 }
 
 /// Worker-local accumulator for one merge unit (or one shard run).
@@ -224,7 +241,9 @@ impl<'a> ExecContext<'a> {
         values: &[f64],
         ncomp: usize,
         out: &mut UnitOutput,
+        lt: &mut LocalTrace,
     ) {
+        let span = lt.begin_with("digest", "pipeline", entry_args(entry));
         let sw = Stopwatch::start();
         match self.digest {
             DigestStrategy::Scatter => digest_quads(
@@ -252,6 +271,8 @@ impl<'a> ExecContext<'a> {
         let dt = sw.elapsed_s();
         out.metrics.digest_seconds += dt;
         out.metrics.record_digest(self.digest.name(), dt);
+        let strategy = self.digest.name();
+        lt.end_with(span, |a| a.push(("strategy".into(), ArgValue::S(strategy.into()))));
     }
 
     fn cached(&self, entry: usize) -> Option<&'a CachedChunk> {
@@ -259,15 +280,29 @@ impl<'a> ExecContext<'a> {
     }
 
     /// Digest a cache hit (memory stage only; no execution involved).
-    fn digest_cached(&self, density: &Matrix, entry: &ChunkEntry, hit: &CachedChunk, out: &mut UnitOutput) {
-        self.digest_entry(density, entry, &hit.values, hit.ncomp, out);
+    fn digest_cached(
+        &self,
+        density: &Matrix,
+        entry: &ChunkEntry,
+        hit: &CachedChunk,
+        out: &mut UnitOutput,
+        lt: &mut LocalTrace,
+    ) {
+        self.digest_entry(density, entry, &hit.values, hit.ncomp, out, lt);
     }
 
     /// Post-execution bookkeeping for one entry: metrics (with the
     /// entry's rung/stage-shape attribution), tuner evidence, digestion,
     /// optional cache collection.  Called on the memory stage in strict
     /// entry order by both executors.
-    fn finish_entry(&self, density: &Matrix, entry: &ChunkEntry, set: &BufferSet, out: &mut UnitOutput) {
+    fn finish_entry(
+        &self,
+        density: &Matrix,
+        entry: &ChunkEntry,
+        set: &BufferSet,
+        out: &mut UnitOutput,
+        lt: &mut LocalTrace,
+    ) {
         let n = entry.len();
         // steady-state cost only: one-time kernel compilation must not
         // poison Algorithm 2's combine/revert decisions or Fig. 12
@@ -290,7 +325,7 @@ impl<'a> ExecContext<'a> {
             quads: n,
             seconds: set.out.steady_seconds,
         });
-        self.digest_entry(density, entry, &set.out.values, set.out.ncomp, out);
+        self.digest_entry(density, entry, &set.out.values, set.out.ncomp, out, lt);
         if self.collect_cache && entry.cacheable {
             out.cache.push((
                 entry.entry,
@@ -300,23 +335,27 @@ impl<'a> ExecContext<'a> {
     }
 
     /// Gather one entry's chunk into `set` (timed as the gather phase).
-    fn gather_entry(&self, entry: &ChunkEntry, set: &mut BufferSet, out: &mut UnitOutput) {
+    fn gather_entry(&self, entry: &ChunkEntry, set: &mut BufferSet, out: &mut UnitOutput, lt: &mut LocalTrace) {
+        let span = lt.begin_with("gather", "pipeline", entry_args(entry));
         let v = &entry.variant;
         let sw = Stopwatch::start();
         set.scratch.gather(self.pairs, self.entry_quads(entry), v.batch, v.kpair_bra, v.kpair_ket);
         out.metrics.gather_seconds += sw.elapsed_s();
+        lt.end(span);
     }
 
     /// Gather for the cross-unit prefetch: same work as
     /// [`ExecContext::gather_entry`], additionally attributed to
     /// `prefetch_gather_seconds` (time hidden under the tail drain).
-    fn prefetch_entry(&self, entry: &ChunkEntry, set: &mut BufferSet, out: &mut UnitOutput) {
+    fn prefetch_entry(&self, entry: &ChunkEntry, set: &mut BufferSet, out: &mut UnitOutput, lt: &mut LocalTrace) {
+        let span = lt.begin_with("prefetch_gather", "pipeline", entry_args(entry));
         let v = &entry.variant;
         let sw = Stopwatch::start();
         set.scratch.gather(self.pairs, self.entry_quads(entry), v.batch, v.kpair_bra, v.kpair_ket);
         let dt = sw.elapsed_s();
         out.metrics.gather_seconds += dt;
         out.metrics.prefetch_gather_seconds += dt;
+        lt.end(span);
     }
 }
 
@@ -334,7 +373,10 @@ pub fn run_entries(
     bufs: &mut PipelineBuffers,
 ) -> anyhow::Result<()> {
     let mut link = UnitLink::detached();
-    run_entries_linked(ctx, density, range, out, bufs, &mut link)
+    let mut lt = ctx.trace.local("pipeline worker");
+    let result = run_entries_linked(ctx, density, range, out, bufs, &mut link, &mut lt);
+    ctx.trace.adopt(lt);
+    result
 }
 
 fn run_entries_linked(
@@ -344,11 +386,12 @@ fn run_entries_linked(
     out: &mut UnitOutput,
     bufs: &mut PipelineBuffers,
     link: &mut UnitLink<'_>,
+    lt: &mut LocalTrace,
 ) -> anyhow::Result<()> {
     let sw = Stopwatch::start();
     let result = match ctx.mode {
-        PipelineMode::Lockstep => run_lockstep(ctx, density, range, out, bufs),
-        PipelineMode::Staged => run_staged(ctx, density, range, out, bufs, link),
+        PipelineMode::Lockstep => run_lockstep(ctx, density, range, out, bufs, lt),
+        PipelineMode::Staged => run_staged(ctx, density, range, out, bufs, link, lt),
     };
     out.metrics.pipeline_wall_seconds += sw.elapsed_s();
     result
@@ -374,6 +417,7 @@ pub fn run_unit_stream(
     let n = ctx.basis.nbf;
     let mut bufs = PipelineBuffers::default();
     let mut carry: Option<Prefetched> = None;
+    let mut lt = ctx.trace.local("pipeline worker");
     let claim = |next: &AtomicUsize| {
         let i = next.fetch_add(1, Ordering::Relaxed);
         units.get(i).copied()
@@ -381,17 +425,23 @@ pub fn run_unit_stream(
     let mut pending = claim(next);
     while let Some(u) = pending {
         let range = ctx.schedule.units[u].entries();
+        let nentries = range.len();
+        let unit_span = lt.begin_with("unit", "pipeline", |a| {
+            a.push(("unit".into(), ArgValue::U(u as u64)));
+            a.push(("entries".into(), ArgValue::U(nentries as u64)));
+        });
         let mut out = UnitOutput::new(n);
         let mut claim_next = || claim(next);
         let mut link =
             UnitLink { carry: carry.take(), claim: Some(&mut claim_next), claimed: None };
         let status = catch_unwind(AssertUnwindSafe(|| {
-            run_entries_linked(ctx, density, range, &mut out, &mut bufs, &mut link)
+            run_entries_linked(ctx, density, range, &mut out, &mut bufs, &mut link, &mut lt)
         }));
         let poisoned = status.is_err();
         carry = link.carry.take();
         let claimed = link.claimed;
         drop(link);
+        lt.end(unit_span);
         let payload = status.map(|result| result.map(|()| out));
         if !sink(u, payload) || poisoned {
             break;
@@ -404,6 +454,7 @@ pub fn run_unit_stream(
             None => claim(next),
         };
     }
+    ctx.trace.adopt(lt);
 }
 
 /// Fan the given merge units out over a worker pool with work stealing
@@ -494,15 +545,17 @@ fn run_lockstep(
     range: Range<usize>,
     out: &mut UnitOutput,
     bufs: &mut PipelineBuffers,
+    lt: &mut LocalTrace,
 ) -> anyhow::Result<()> {
     let mut set = bufs.take_set();
     for e in range {
         let entry = &ctx.schedule.entries[e];
         if let Some(hit) = ctx.cached(e) {
-            ctx.digest_cached(density, entry, hit, out);
+            ctx.digest_cached(density, entry, hit, out, lt);
             continue;
         }
-        ctx.gather_entry(entry, &mut set, out);
+        ctx.gather_entry(entry, &mut set, out, lt);
+        let span = lt.begin_with("execute", "pipeline", entry_args(entry));
         ctx.backend.execute_eri_into(
             &entry.variant,
             &set.scratch.bp,
@@ -511,7 +564,9 @@ fn run_lockstep(
             &set.scratch.kg,
             &mut set.out,
         )?;
-        ctx.finish_entry(density, entry, &set, out);
+        let strategy = set.out.strategy;
+        lt.end_with(span, |a| a.push(("strategy".into(), ArgValue::S(strategy.into()))));
+        ctx.finish_entry(density, entry, &set, out, lt);
     }
     bufs.put_set(set);
     Ok(())
@@ -540,6 +595,7 @@ fn drain_one(
     inflight: &mut VecDeque<usize>,
     pool: &mut Vec<BufferSet>,
     out: &mut UnitOutput,
+    lt: &mut LocalTrace,
 ) -> anyhow::Result<()> {
     let done = done_rx
         .recv()
@@ -551,7 +607,7 @@ fn drain_one(
         Ok(status) => status?,
     }
     let entry = &ctx.schedule.entries[done.entry];
-    ctx.finish_entry(density, entry, &done.set, out);
+    ctx.finish_entry(density, entry, &done.set, out, lt);
     pool.push(done.set);
     Ok(())
 }
@@ -566,10 +622,14 @@ fn run_staged(
     out: &mut UnitOutput,
     bufs: &mut PipelineBuffers,
     link: &mut UnitLink<'_>,
+    lt: &mut LocalTrace,
 ) -> anyhow::Result<()> {
     let mut pool = vec![bufs.take_set(), bufs.take_set()];
     let mut carry = link.carry.take();
     let mut carry_out: Option<Prefetched> = None;
+    // the companion's execute spans land on a derived track so they never
+    // interleave with (and never contend on) the memory stage's buffer
+    let companion_tid = lt.tid() + COMPANION_TID_OFFSET;
     let result = std::thread::scope(|s| -> anyhow::Result<()> {
         // rendezvous-depth-1 channels: the memory stage can run at most
         // one gather ahead, the compute stage at most one result behind —
@@ -577,8 +637,11 @@ fn run_staged(
         let (job_tx, job_rx) = mpsc::sync_channel::<Job>(1);
         let (done_tx, done_rx) = mpsc::sync_channel::<Done>(1);
         let (backend, schedule) = (ctx.backend, ctx.schedule);
+        let trace = &ctx.trace;
         s.spawn(move || {
+            let mut clt = trace.local_on(companion_tid, "compute companion");
             while let Ok(Job { entry, mut set }) = job_rx.recv() {
+                let span = clt.begin_with("execute", "pipeline", entry_args(&schedule.entries[entry]));
                 let status = catch_unwind(AssertUnwindSafe(|| {
                     let v = &schedule.entries[entry].variant;
                     backend.execute_eri_into(
@@ -590,10 +653,15 @@ fn run_staged(
                         &mut set.out,
                     )
                 }));
+                let strategy = set.out.strategy;
+                clt.end_with(span, |a| {
+                    a.push(("strategy".into(), ArgValue::S(strategy.into())))
+                });
                 if done_tx.send(Done { entry, set, status }).is_err() {
                     break; // memory stage bailed; nobody is listening
                 }
             }
+            trace.adopt(clt);
         });
 
         let mut inflight: VecDeque<usize> = VecDeque::with_capacity(2);
@@ -603,9 +671,9 @@ fn run_staged(
                 // cache hits digest in place; earlier in-flight chunks
                 // must land first to keep digestion in entry order
                 while !inflight.is_empty() {
-                    drain_one(ctx, density, &done_rx, &mut inflight, &mut pool, out)?;
+                    drain_one(ctx, density, &done_rx, &mut inflight, &mut pool, out, lt)?;
                 }
-                ctx.digest_cached(density, entry, hit, out);
+                ctx.digest_cached(density, entry, hit, out, lt);
                 continue;
             }
             // a chunk the previous unit prefetched arrives pre-gathered
@@ -616,7 +684,7 @@ fn run_staged(
                     let set = match pool.pop() {
                         Some(set) => set,
                         None => {
-                            drain_one(ctx, density, &done_rx, &mut inflight, &mut pool, out)?;
+                            drain_one(ctx, density, &done_rx, &mut inflight, &mut pool, out, lt)?;
                             pool.pop().expect("drain_one returned a buffer set")
                         }
                     };
@@ -624,7 +692,7 @@ fn run_staged(
                 }
             };
             if !gathered {
-                ctx.gather_entry(entry, &mut set, out);
+                ctx.gather_entry(entry, &mut set, out, lt);
             }
             match entry.shape {
                 StageShape::Wide => {
@@ -632,6 +700,7 @@ fn run_staged(
                     // the memory stage (overlapping whatever the compute
                     // companion still has in flight), then digests after
                     // the older chunks land — entry order intact
+                    let span = lt.begin_with("execute", "pipeline", entry_args(entry));
                     ctx.backend.execute_eri_into(
                         &entry.variant,
                         &set.scratch.bp,
@@ -640,10 +709,14 @@ fn run_staged(
                         &set.scratch.kg,
                         &mut set.out,
                     )?;
+                    let strategy = set.out.strategy;
+                    lt.end_with(span, |a| {
+                        a.push(("strategy".into(), ArgValue::S(strategy.into())))
+                    });
                     while !inflight.is_empty() {
-                        drain_one(ctx, density, &done_rx, &mut inflight, &mut pool, out)?;
+                        drain_one(ctx, density, &done_rx, &mut inflight, &mut pool, out, lt)?;
                     }
-                    ctx.finish_entry(density, entry, &set, out);
+                    ctx.finish_entry(density, entry, &set, out, lt);
                     pool.push(set);
                 }
                 StageShape::Split => {
@@ -654,7 +727,7 @@ fn run_staged(
                     // steady state: digest chunk k while the compute stage
                     // executes chunk k+1 (which we just gathered and sent)
                     if inflight.len() >= 2 {
-                        drain_one(ctx, density, &done_rx, &mut inflight, &mut pool, out)?;
+                        drain_one(ctx, density, &done_rx, &mut inflight, &mut pool, out, lt)?;
                     }
                 }
             }
@@ -669,13 +742,13 @@ fn run_staged(
                 let pe = ctx.schedule.units[nu].entry_start;
                 if ctx.cached(pe).is_none() {
                     let mut set = pool.pop().unwrap_or_else(|| bufs.take_set());
-                    ctx.prefetch_entry(&ctx.schedule.entries[pe], &mut set, out);
+                    ctx.prefetch_entry(&ctx.schedule.entries[pe], &mut set, out, lt);
                     carry_out = Some(Prefetched { entry: pe, set });
                 }
             }
         }
         while !inflight.is_empty() {
-            drain_one(ctx, density, &done_rx, &mut inflight, &mut pool, out)?;
+            drain_one(ctx, density, &done_rx, &mut inflight, &mut pool, out, lt)?;
         }
         Ok(())
         // job_tx drops here → compute stage drains and exits → scope joins

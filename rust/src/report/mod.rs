@@ -254,6 +254,44 @@ pub fn dispatch_table(
     Ok(format!("Dispatch attribution — {molecule} / {basis_name}\n{summary}"))
 }
 
+/// `report trace --in FILE`: validate a `--trace-out` Chrome trace and
+/// print the top-K self-time rows per (phase, name, class, strategy).
+pub fn trace_report(path: &Path, top_k: usize) -> anyhow::Result<String> {
+    let (doc, summary) = crate::trace::chrome::read_chrome(path)?;
+    let table = crate::trace::chrome::self_time_table(&doc, top_k).map_err(anyhow::Error::msg)?;
+    Ok(format!(
+        "Trace — {} ({} span(s), {} instant(s), {} process(es))\n{table}",
+        path.display(),
+        summary.spans,
+        summary.instants,
+        summary.pids.len(),
+    ))
+}
+
+/// `report metrics --in FILE`: validate a metrics snapshot (an scf
+/// `--metrics-out` file or a bench `BENCH_*.json`) and summarize its
+/// counters and tables.
+pub fn metrics_report(path: &Path) -> anyhow::Result<String> {
+    use crate::trace::json::Value;
+    let (doc, summary) = crate::trace::snapshot::read_snapshot(path)?;
+    let mut out = format!(
+        "Metrics snapshot — {} [{}] {}\n",
+        path.display(),
+        summary.kind,
+        summary.label
+    );
+    if let Some(Value::Obj(counters)) = doc.get("counters") {
+        out.push_str("  counters:\n");
+        for (name, v) in counters {
+            out.push_str(&format!("    {:<28} {}\n", name, v.to_json()));
+        }
+    }
+    for (name, rows) in &summary.tables {
+        out.push_str(&format!("  table {name:<24} {rows} row(s)\n"));
+    }
+    Ok(out)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -10,6 +10,7 @@ use crate::integrals::overlap_matrix;
 use crate::linalg::{eigh, inv_sqrt_symmetric, Matrix};
 use crate::molecule::Molecule;
 use crate::basis::BasisSet;
+use crate::trace::{ArgValue, TID_ENGINE};
 use crate::util::Stopwatch;
 
 use super::Diis;
@@ -29,6 +30,10 @@ pub struct FockBuildStats {
     pub dd_max: f64,
     /// wall-clock seconds of this build
     pub wall_seconds: f64,
+    /// Chrome-trace span id of this build's `fock_build` span — the
+    /// `--scf-trace-path` CSV carries it so rows cross-reference the
+    /// `--trace-out` timeline (0 = tracing disabled)
+    pub span: u64,
 }
 
 /// The two-electron (G-matrix) builder interface every engine implements.
@@ -65,9 +70,13 @@ pub struct ScfOptions {
     /// the DIIS error is large; stabilizes small-gap systems. 0 = off.
     pub damping: f64,
     pub verbose: bool,
-    /// write a per-iteration CSV (iteration, energy, DIIS error, ΔD
-    /// max-norm, chunks executed/screened, Fock wall seconds) here
+    /// write a per-iteration CSV here (column set documented in
+    /// README §Observability; written once at SCF end with a single
+    /// header row)
     pub trace_path: Option<std::path::PathBuf>,
+    /// structured span sink (`--trace-out`); disabled by default and
+    /// free when disabled
+    pub trace: crate::trace::TraceSink,
 }
 
 impl Default for ScfOptions {
@@ -81,6 +90,7 @@ impl Default for ScfOptions {
             damping: 0.0,
             verbose: false,
             trace_path: None,
+            trace: crate::trace::TraceSink::disabled(),
         }
     }
 }
@@ -147,10 +157,14 @@ pub fn run_rhf(
     let mut last = None;
     let mut iterations = 0;
     let mut prev_density: Option<Matrix> = None;
+    let mut prev_g: Option<Matrix> = None;
     let mut trace_rows: Vec<String> = Vec::new();
 
     for it in 0..opts.max_iterations {
         iterations = it + 1;
+        let iter_span = opts.trace.begin_with(TID_ENGINE, "scf_iteration", "scf", |a| {
+            a.push(("iteration".into(), ArgValue::U(it as u64 + 1)));
+        });
         // ΔD the engine sees this iteration (0 on the guess iteration)
         let dd_max = prev_density
             .as_ref()
@@ -164,6 +178,22 @@ pub fn run_rhf(
         let fock_sw = Stopwatch::start();
         let g = engine.two_electron(&density)?;
         let fock_wall = fock_sw.elapsed_s();
+        // max |ΔG| against the previous iteration's G — only computed when
+        // the CSV wants it (the clone is not free on large systems)
+        let dg_max = if opts.trace_path.is_some() {
+            let dg = prev_g
+                .as_ref()
+                .map(|prev| {
+                    let mut delta = g.clone();
+                    delta.add_scaled(prev, -1.0);
+                    delta.max_abs()
+                })
+                .unwrap_or(0.0);
+            prev_g = Some(g.clone());
+            dg
+        } else {
+            0.0
+        };
         let mut fock = h.clone();
         fock.add_scaled(&g, 1.0);
 
@@ -175,6 +205,10 @@ pub fn run_rhf(
         // the full schedule (no-op for engines without incremental state)
         if it > 0 && e_total > e_old {
             engine.request_full_rebuild();
+            opts.trace.instant_with(TID_ENGINE, "drift_guard_full_rebuild", "scf", |a| {
+                a.push(("iteration".into(), ArgValue::U(it as u64 + 1)));
+                a.push(("energy_rise".into(), ArgValue::F(e_total - e_old)));
+            });
         }
 
         // DIIS error in the orthonormal basis: Xᵀ(FDS − SDF)X
@@ -183,18 +217,24 @@ pub fn run_rhf(
         err.scale(-1.0);
         err.add_scaled(&fds, 1.0); // FDS − (FDS)ᵀ = FDS − SDF
         let err_on = x.transa_matmul(&err).matmul(&x);
+        let diis_span = opts.trace.begin(TID_ENGINE, "diis_extrapolate", "scf");
         let f_eff = diis.extrapolate(fock, err_on);
+        opts.trace.end(diis_span);
         if opts.trace_path.is_some() {
             let stats = engine.last_build_stats().unwrap_or_default();
+            // 1-based, matching the scf_iteration span arg and the
+            // fock_builds snapshot table
             trace_rows.push(format!(
-                "{},{:.12},{:.6e},{:.6e},{},{},{:.6}",
-                it,
+                "{},{:.12},{:.6e},{:.6e},{},{},{:.6},{:.6e},{}",
+                it + 1,
                 e_total,
                 diis.last_error_norm(),
                 dd_max,
                 stats.chunks_executed,
                 stats.chunks_screened,
-                fock_wall
+                fock_wall,
+                dg_max,
+                stats.span
             ));
         }
 
@@ -217,6 +257,7 @@ pub fn run_rhf(
         } else {
             density = d_new;
         }
+        opts.trace.end(iter_span);
         if it > 0 && de < opts.energy_tol && d_rms < opts.density_tol {
             converged = true;
             e_old = e_total;
@@ -227,10 +268,15 @@ pub fn run_rhf(
 
     let (eig, _) = last.ok_or_else(|| anyhow::anyhow!("SCF made no iterations"))?;
     if let Some(path) = &opts.trace_path {
-        let csv = format!(
-            "iteration,energy_ha,diis_error,dd_max,chunks_executed,chunks_screened,fock_wall_s\n{}\n",
-            trace_rows.join("\n")
+        // one write at SCF end: exactly one header row per file, no
+        // appends across reopens (column docs: README §Observability)
+        let mut csv = String::from(
+            "iteration,energy_ha,diis_error,dd_max,chunks_executed,chunks_screened,fock_wall_s,dg_max,fock_span\n",
         );
+        for row in &trace_rows {
+            csv.push_str(row);
+            csv.push('\n');
+        }
         std::fs::write(path, csv)
             .map_err(|e| anyhow::anyhow!("cannot write SCF trace {}: {e}", path.display()))?;
     }

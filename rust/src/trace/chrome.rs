@@ -1,0 +1,344 @@
+//! Chrome trace-event JSON: hand-rolled emitter, std-only validator, and
+//! the self-time aggregation behind `report trace`.
+//!
+//! The emitted document is the classic `traceEvents` object format that
+//! Perfetto and `chrome://tracing` load directly: complete spans
+//! (`"ph": "X"`, µs `ts`/`dur`), instant events (`"ph": "i"`), and
+//! `"M"` metadata events naming each `(pid, tid)` track.  pid 0 is this
+//! process (coordinator on dispatched runs); pid *w*+1 is dispatched
+//! worker *w*, clock-aligned by the handshake offset estimate.
+
+use std::path::Path;
+
+use super::json::Value;
+use super::{EventKind, TraceEvent, TraceExport};
+
+/// Render an export as the Chrome trace-event document.
+pub fn to_chrome(export: &TraceExport) -> Value {
+    let mut events: Vec<Value> = Vec::with_capacity(export.events.len() + export.tracks.len() + 4);
+    // process_name metadata for every pid that appears anywhere
+    let mut pids: Vec<u32> = export
+        .events
+        .iter()
+        .map(|e| e.pid)
+        .chain(export.tracks.iter().map(|((p, _), _)| *p))
+        .collect();
+    pids.sort_unstable();
+    pids.dedup();
+    for pid in &pids {
+        let label = if *pid == 0 {
+            "matryoshka (coordinator)".to_string()
+        } else {
+            format!("dispatch worker {}", pid - 1)
+        };
+        events.push(metadata_event("process_name", *pid, 0, &label));
+    }
+    for ((pid, tid), name) in &export.tracks {
+        events.push(metadata_event("thread_name", *pid, *tid, name));
+    }
+    for e in &export.events {
+        events.push(event_value(e));
+    }
+    Value::Obj(vec![
+        ("traceEvents".into(), Value::Arr(events)),
+        ("displayTimeUnit".into(), Value::Str("ms".into())),
+    ])
+}
+
+fn metadata_event(name: &str, pid: u32, tid: u32, label: &str) -> Value {
+    Value::Obj(vec![
+        ("name".into(), Value::Str(name.into())),
+        ("ph".into(), Value::Str("M".into())),
+        ("pid".into(), Value::Num(pid as f64)),
+        ("tid".into(), Value::Num(tid as f64)),
+        ("args".into(), Value::Obj(vec![("name".into(), Value::Str(label.into()))])),
+    ])
+}
+
+fn event_value(e: &TraceEvent) -> Value {
+    let mut members: Vec<(String, Value)> = vec![
+        ("name".into(), Value::Str(e.name.clone())),
+        ("cat".into(), Value::Str(e.cat.clone())),
+        (
+            "ph".into(),
+            Value::Str(match e.kind {
+                EventKind::Span => "X".into(),
+                EventKind::Instant => "i".into(),
+            }),
+        ),
+        ("ts".into(), Value::Num(e.ts_us as f64)),
+    ];
+    match e.kind {
+        EventKind::Span => members.push(("dur".into(), Value::Num(e.dur_us as f64))),
+        // thread-scoped instants render as small arrows on the track
+        EventKind::Instant => members.push(("s".into(), Value::Str("t".into()))),
+    }
+    members.push(("pid".into(), Value::Num(e.pid as f64)));
+    members.push(("tid".into(), Value::Num(e.tid as f64)));
+    let mut args: Vec<(String, Value)> =
+        e.args.iter().map(|(k, v)| (k.clone(), v.to_value())).collect();
+    if e.id != 0 {
+        args.push(("span_id".into(), Value::Num(e.id as f64)));
+    }
+    if !args.is_empty() {
+        members.push(("args".into(), Value::Obj(args)));
+    }
+    Value::Obj(members)
+}
+
+/// Write the trace to disk (pretty-printed so diffs stay reviewable).
+pub fn write_chrome(path: &Path, export: &TraceExport) -> anyhow::Result<()> {
+    std::fs::write(path, to_chrome(export).to_json_pretty())
+        .map_err(|e| anyhow::anyhow!("writing trace to {}: {e}", path.display()))
+}
+
+/// What the std-only validator learned about a trace document.
+#[derive(Clone, Debug, Default)]
+pub struct ChromeSummary {
+    pub spans: usize,
+    pub instants: usize,
+    pub metadata: usize,
+    /// Distinct pids seen on timed events, sorted.
+    pub pids: Vec<u32>,
+    /// Distinct event names seen on timed events, sorted.
+    pub names: Vec<String>,
+}
+
+impl ChromeSummary {
+    pub fn has_event(&self, name: &str) -> bool {
+        self.names.iter().any(|n| n == name)
+    }
+}
+
+/// Structural validation of a Chrome trace-event document: the shape that
+/// tests and the CI smoke hold `--trace-out` files to.
+pub fn validate_chrome(doc: &Value) -> Result<ChromeSummary, String> {
+    let events = doc
+        .get("traceEvents")
+        .ok_or("missing traceEvents")?
+        .as_arr()
+        .ok_or("traceEvents is not an array")?;
+    let mut summary = ChromeSummary::default();
+    for (i, e) in events.iter().enumerate() {
+        let name =
+            e.get("name").and_then(Value::as_str).ok_or(format!("event {i}: missing name"))?;
+        let ph = e.get("ph").and_then(Value::as_str).ok_or(format!("event {i}: missing ph"))?;
+        let pid = e
+            .get("pid")
+            .and_then(Value::as_f64)
+            .ok_or(format!("event {i} ({name}): missing pid"))?;
+        e.get("tid").and_then(Value::as_f64).ok_or(format!("event {i} ({name}): missing tid"))?;
+        match ph {
+            "M" => {
+                summary.metadata += 1;
+                continue;
+            }
+            "X" | "i" => {}
+            other => return Err(format!("event {i} ({name}): unsupported ph {other:?}")),
+        }
+        e.get("ts").and_then(Value::as_f64).ok_or(format!("event {i} ({name}): missing ts"))?;
+        if ph == "X" {
+            let dur = e
+                .get("dur")
+                .and_then(Value::as_f64)
+                .ok_or(format!("event {i} ({name}): span missing dur"))?;
+            if dur < 0.0 {
+                return Err(format!("event {i} ({name}): negative dur"));
+            }
+            summary.spans += 1;
+        } else {
+            summary.instants += 1;
+        }
+        summary.pids.push(pid as u32);
+        summary.names.push(name.to_string());
+    }
+    summary.pids.sort_unstable();
+    summary.pids.dedup();
+    summary.names.sort();
+    summary.names.dedup();
+    Ok(summary)
+}
+
+/// Load + validate a trace file in one step.
+pub fn read_chrome(path: &Path) -> anyhow::Result<(Value, ChromeSummary)> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?;
+    let doc = Value::parse(&text)
+        .map_err(|e| anyhow::anyhow!("{} is not valid JSON: {e}", path.display()))?;
+    let summary = validate_chrome(&doc)
+        .map_err(|e| anyhow::anyhow!("{} is not a valid Chrome trace: {e}", path.display()))?;
+    Ok((doc, summary))
+}
+
+#[derive(Clone, Debug, Default)]
+struct SelfTimeCell {
+    count: u64,
+    total_us: f64,
+    self_us: f64,
+}
+
+/// `report trace`: top-K rows of self time (span duration minus direct
+/// children on the same track) aggregated per (phase, name, class,
+/// strategy).  Children are recovered from temporal containment per
+/// `(pid, tid)`, which is exactly how the spans were produced.
+pub fn self_time_table(doc: &Value, top_k: usize) -> Result<String, String> {
+    let events = doc
+        .get("traceEvents")
+        .and_then(Value::as_arr)
+        .ok_or("missing traceEvents array")?;
+    // collect spans per (pid, tid)
+    let mut per_track: std::collections::BTreeMap<(u32, u32), Vec<(f64, f64, String)>> =
+        std::collections::BTreeMap::new();
+    let mut keyed: std::collections::BTreeMap<String, SelfTimeCell> =
+        std::collections::BTreeMap::new();
+    for e in events {
+        if e.get("ph").and_then(Value::as_str) != Some("X") {
+            continue;
+        }
+        let name = e.get("name").and_then(Value::as_str).unwrap_or("?");
+        let cat = e.get("cat").and_then(Value::as_str).unwrap_or("-");
+        let arg = |k: &str| {
+            e.get("args")
+                .and_then(|a| a.get(k))
+                .map(|v| match v {
+                    Value::Str(s) => s.clone(),
+                    other => other.to_json(),
+                })
+                .unwrap_or_else(|| "-".into())
+        };
+        let key = format!(
+            "{:<10} {:<16} {:<10} {:<10}",
+            cat,
+            name,
+            arg("class"),
+            arg("strategy")
+        );
+        let pid = e.get("pid").and_then(Value::as_f64).unwrap_or(0.0) as u32;
+        let tid = e.get("tid").and_then(Value::as_f64).unwrap_or(0.0) as u32;
+        let ts = e.get("ts").and_then(Value::as_f64).ok_or("span missing ts")?;
+        let dur = e.get("dur").and_then(Value::as_f64).ok_or("span missing dur")?;
+        per_track.entry((pid, tid)).or_default().push((ts, dur, key));
+    }
+    for spans in per_track.values_mut() {
+        // outer spans first at equal start so the stack nests correctly
+        spans.sort_by(|a, b| {
+            a.0.partial_cmp(&b.0).unwrap().then(b.1.partial_cmp(&a.1).unwrap())
+        });
+        // stack of open spans: (end_ts, key, dur, child_dur_accumulated)
+        let mut stack: Vec<(f64, String, f64, f64)> = Vec::new();
+        let mut close = |keyed: &mut std::collections::BTreeMap<String, SelfTimeCell>,
+                         (_, key, dur, child): (f64, String, f64, f64)| {
+            let cell = keyed.entry(key).or_default();
+            cell.count += 1;
+            cell.total_us += dur;
+            cell.self_us += (dur - child).max(0.0);
+        };
+        for (ts, dur, key) in spans.drain(..) {
+            while stack.last().is_some_and(|(end, ..)| *end <= ts) {
+                let top = stack.pop().unwrap();
+                close(&mut keyed, top);
+            }
+            if let Some(top) = stack.last_mut() {
+                top.3 += dur;
+            }
+            stack.push((ts + dur, key, dur, 0.0));
+        }
+        while let Some(top) = stack.pop() {
+            close(&mut keyed, top);
+        }
+    }
+    let mut rows: Vec<(String, SelfTimeCell)> = keyed.into_iter().collect();
+    rows.sort_by(|a, b| b.1.self_us.partial_cmp(&a.1.self_us).unwrap());
+    let mut out = String::from(
+        "top self-time per (phase, name, class, strategy) — CPU-µs summed across tracks\n",
+    );
+    out.push_str(&format!(
+        "{:<10} {:<16} {:<10} {:<10} {:>8} {:>12} {:>12}\n",
+        "phase", "name", "class", "strategy", "count", "total_s", "self_s"
+    ));
+    for (key, cell) in rows.iter().take(top_k.max(1)) {
+        out.push_str(&format!(
+            "{key} {:>8} {:>12.4} {:>12.4}\n",
+            cell.count,
+            cell.total_us / 1.0e6,
+            cell.self_us / 1.0e6
+        ));
+    }
+    if rows.is_empty() {
+        out.push_str("(no spans in trace)\n");
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::{ArgValue, TraceSink, TID_DISPATCH, TID_ENGINE};
+
+    fn sample_export() -> TraceExport {
+        let sink = TraceSink::enabled();
+        let build = sink.begin(TID_ENGINE, "fock_build", "scf");
+        let mut lt = sink.local("pipeline worker 0");
+        let unit = lt.begin_with("unit", "pipeline", |a| a.push(("unit".into(), ArgValue::U(0))));
+        let g = lt.begin_with("execute", "pipeline", |a| {
+            a.push(("class".into(), ArgValue::S("ssss".into())));
+            a.push(("strategy".into(), ArgValue::S("kernels".into())));
+        });
+        lt.end(g);
+        lt.end(unit);
+        sink.adopt(lt);
+        sink.instant_with(TID_DISPATCH, "worker_lost", "dispatch", |a| {
+            a.push(("worker".into(), ArgValue::U(1)))
+        });
+        sink.end(build);
+        sink.export()
+    }
+
+    #[test]
+    fn emitted_chrome_json_parses_and_validates() {
+        let doc_text = to_chrome(&sample_export()).to_json_pretty();
+        let doc = Value::parse(&doc_text).unwrap();
+        let summary = validate_chrome(&doc).unwrap();
+        assert_eq!(summary.spans, 3);
+        assert_eq!(summary.instants, 1);
+        assert!(summary.metadata >= 2, "process + thread names expected");
+        assert_eq!(summary.pids, vec![0]);
+        assert!(summary.has_event("fock_build"));
+        assert!(summary.has_event("worker_lost"));
+    }
+
+    #[test]
+    fn validator_rejects_malformed_traces() {
+        for bad in [
+            r#"{"notTraceEvents": []}"#,
+            r#"{"traceEvents": [{"ph": "X", "pid": 0, "tid": 0, "ts": 1, "dur": 2}]}"#,
+            r#"{"traceEvents": [{"name": "a", "ph": "X", "pid": 0, "tid": 0, "ts": 1}]}"#,
+            r#"{"traceEvents": [{"name": "a", "ph": "Q", "pid": 0, "tid": 0, "ts": 1}]}"#,
+        ] {
+            let doc = Value::parse(bad).unwrap();
+            assert!(validate_chrome(&doc).is_err(), "accepted {bad}");
+        }
+    }
+
+    #[test]
+    fn self_time_subtracts_direct_children_per_track() {
+        let doc = Value::parse(
+            r#"{"traceEvents": [
+                {"name":"unit","cat":"pipeline","ph":"X","ts":0,"dur":100,"pid":0,"tid":2},
+                {"name":"execute","cat":"pipeline","ph":"X","ts":10,"dur":30,"pid":0,"tid":2,
+                 "args":{"class":"ssss","strategy":"kernels"}},
+                {"name":"execute","cat":"pipeline","ph":"X","ts":50,"dur":20,"pid":0,"tid":2,
+                 "args":{"class":"ssss","strategy":"kernels"}},
+                {"name":"unit","cat":"pipeline","ph":"X","ts":0,"dur":40,"pid":1,"tid":2}
+            ]}"#,
+        )
+        .unwrap();
+        let table = self_time_table(&doc, 10).unwrap();
+        // unit self = (100 − 50) + 40 = 90µs; execute self = 50µs total
+        assert!(table.contains("unit"), "{table}");
+        assert!(table.contains("execute"), "{table}");
+        assert!(table.contains("kernels"), "{table}");
+        let unit_row = table.lines().find(|l| l.contains("unit")).unwrap();
+        assert!(unit_row.contains("0.0001"), "unit self-time 90µs ≈ 0.0001s: {unit_row}");
+    }
+}

@@ -1,0 +1,546 @@
+//! Structured tracing + metrics export (std-only).
+//!
+//! One timeline for everything the engine decides dynamically: spans for
+//! Schwarz/ΔD screening, `ChunkSchedule::build`, the gather/execute/digest
+//! pipeline stages (per merge unit and per chunk, tagged with class, rung,
+//! stage shape, and strategy), the fixed merge tree, SCF/DIIS iterations,
+//! and instant events for dispatch coordination (unit handout, steal,
+//! rebalance, worker loss, rejoin).  Exporters render the same event store
+//! as Chrome trace-event JSON (`--trace-out`, loadable in Perfetto /
+//! `chrome://tracing`) and as a versioned metrics snapshot
+//! (`--metrics-out`, the schema `BENCH_*.json` shares).
+//!
+//! Design rules, enforced throughout:
+//!
+//! - **Disabled means free.**  A disabled [`TraceSink`] is a `None`; every
+//!   entry point takes one branch and allocates nothing.  Argument payloads
+//!   are built via closures (`begin_with`) that never run when disabled.
+//! - **The hot path never locks.**  Pipeline workers record into a
+//!   [`LocalTrace`] — an append-only per-thread buffer adopted into the
+//!   sink with a single lock when the worker's unit stream ends.
+//! - **Tracing never changes results.**  G is produced by the fixed merge
+//!   tree from per-unit partials whose values do not depend on timing, so
+//!   it is bitwise identical with tracing on or off (test-asserted).
+//!
+//! Dispatched runs ship worker-local buffers on a dedicated wire frame at
+//! build end; the coordinator maps them onto its own clock with the
+//! handshake-derived offset estimate, so `--dispatch local:N|remote:…`
+//! renders as one multi-process timeline (worker *w* becomes pid *w+1*).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+pub mod chrome;
+pub mod json;
+pub mod snapshot;
+
+pub use json::Value;
+
+/// Track (tid) of single-threaded engine/SCF-driver spans (pid 0).
+pub const TID_ENGINE: u32 = 0;
+/// Track (tid) of dispatch-coordinator instant events (pid 0).
+pub const TID_DISPATCH: u32 = 1;
+/// A pipeline worker's staged-compute companion thread records on
+/// `worker_tid + COMPANION_TID_OFFSET` so execute spans get their own
+/// track without allocating a fresh tid per merge unit.
+pub const COMPANION_TID_OFFSET: u32 = 0x8000;
+
+/// Span (`ph: "X"`) or instant (`ph: "i"`) event.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EventKind {
+    Span,
+    Instant,
+}
+
+/// Typed argument payload; rendered into the Chrome event's `args` object.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ArgValue {
+    U(u64),
+    F(f64),
+    S(String),
+}
+
+impl ArgValue {
+    pub fn to_value(&self) -> Value {
+        match self {
+            ArgValue::U(n) => Value::Num(*n as f64),
+            ArgValue::F(x) => Value::Num(*x),
+            ArgValue::S(s) => Value::Str(s.clone()),
+        }
+    }
+}
+
+/// One timeline event.  `ts_us` is microseconds since the owning sink's
+/// epoch; it is signed because remote events can land (slightly) before
+/// the coordinator's epoch after clock-offset correction.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TraceEvent {
+    pub kind: EventKind,
+    pub name: String,
+    pub cat: String,
+    pub ts_us: i64,
+    pub dur_us: u64,
+    /// Span id (0 = unassigned).  Fock-build spans get real ids so the
+    /// `--scf-trace-path` CSV can cross-reference the trace.
+    pub id: u64,
+    /// Process track: 0 = this process; dispatched worker *w* = *w*+1.
+    pub pid: u32,
+    pub tid: u32,
+    pub args: Vec<(String, ArgValue)>,
+}
+
+/// Everything a sink collected: events plus `(pid, tid) → name` track
+/// labels (rendered as Chrome `"M"` metadata events).
+#[derive(Clone, Debug, Default)]
+pub struct TraceExport {
+    pub events: Vec<TraceEvent>,
+    pub tracks: Vec<((u32, u32), String)>,
+}
+
+#[derive(Debug)]
+struct SinkShared {
+    epoch: Instant,
+    next_id: AtomicU64,
+    next_tid: AtomicU64,
+    events: Mutex<Vec<TraceEvent>>,
+    tracks: Mutex<Vec<((u32, u32), String)>>,
+}
+
+/// Cloneable handle to the event store; `Default`/[`TraceSink::disabled`]
+/// is a no-op sink.
+#[derive(Clone, Debug, Default)]
+pub struct TraceSink(Option<Arc<SinkShared>>);
+
+/// Handle for a span recorded directly on the sink (engine-level,
+/// single-threaded call sites).  `id == 0` means the sink was disabled
+/// and [`TraceSink::end`] is a no-op.
+#[derive(Clone, Copy, Debug)]
+pub struct SharedSpan {
+    idx: usize,
+    id: u64,
+}
+
+impl SharedSpan {
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+}
+
+impl TraceSink {
+    pub fn enabled() -> Self {
+        TraceSink(Some(Arc::new(SinkShared {
+            epoch: Instant::now(),
+            next_id: AtomicU64::new(1),
+            // 0 and 1 are the fixed engine/dispatch tracks
+            next_tid: AtomicU64::new(2),
+            events: Mutex::new(Vec::new()),
+            tracks: Mutex::new(Vec::new()),
+        })))
+    }
+
+    pub fn disabled() -> Self {
+        TraceSink(None)
+    }
+
+    pub fn is_enabled(&self) -> bool {
+        self.0.is_some()
+    }
+
+    /// Microseconds since this sink's epoch (0 when disabled).
+    pub fn now_us(&self) -> u64 {
+        self.us_of(Instant::now())
+    }
+
+    /// Map an `Instant` onto this sink's timeline (0 when disabled or
+    /// before the epoch).
+    pub fn us_of(&self, t: Instant) -> u64 {
+        match &self.0 {
+            Some(s) => t.saturating_duration_since(s.epoch).as_micros() as u64,
+            None => 0,
+        }
+    }
+
+    /// Register a human-readable track label; first registration of a
+    /// `(pid, tid)` wins so repeated calls from per-unit code are cheap
+    /// and idempotent.
+    pub fn name_track(&self, pid: u32, tid: u32, name: &str) {
+        if let Some(s) = &self.0 {
+            let mut tracks = s.tracks.lock().unwrap();
+            if !tracks.iter().any(|((p, t), _)| *p == pid && *t == tid) {
+                tracks.push(((pid, tid), name.to_string()));
+            }
+        }
+    }
+
+    /// New per-thread local buffer on a freshly allocated track.
+    pub fn local(&self, track_name: &str) -> LocalTrace {
+        match &self.0 {
+            Some(s) => {
+                let tid = s.next_tid.fetch_add(1, Ordering::Relaxed) as u32;
+                self.name_track(0, tid, track_name);
+                LocalTrace { on: true, epoch: s.epoch, tid, events: Vec::new() }
+            }
+            None => LocalTrace::disabled(),
+        }
+    }
+
+    /// New local buffer on a caller-chosen track (used for the staged
+    /// compute companion, which reuses `worker_tid + COMPANION_TID_OFFSET`
+    /// across units).
+    pub fn local_on(&self, tid: u32, track_name: &str) -> LocalTrace {
+        match &self.0 {
+            Some(s) => {
+                self.name_track(0, tid, track_name);
+                LocalTrace { on: true, epoch: s.epoch, tid, events: Vec::new() }
+            }
+            None => LocalTrace::disabled(),
+        }
+    }
+
+    /// Fold a finished local buffer into the store (one lock total).
+    pub fn adopt(&self, local: LocalTrace) {
+        if let Some(s) = &self.0 {
+            if !local.events.is_empty() {
+                s.events.lock().unwrap().extend(local.events);
+            }
+        }
+    }
+
+    /// Fold already-stamped events (e.g. a worker's shipped buffer after
+    /// clock-offset correction) into the store.
+    pub fn adopt_events(&self, events: Vec<TraceEvent>) {
+        if let Some(s) = &self.0 {
+            if !events.is_empty() {
+                s.events.lock().unwrap().extend(events);
+            }
+        }
+    }
+
+    /// Begin a span on the shared store (engine-level call sites; takes a
+    /// lock, so keep this off per-chunk paths — those use [`LocalTrace`]).
+    pub fn begin(&self, tid: u32, name: &'static str, cat: &'static str) -> SharedSpan {
+        self.begin_with(tid, name, cat, |_| {})
+    }
+
+    /// Like [`TraceSink::begin`]; `fill` builds the argument payload and
+    /// only runs when the sink is enabled.
+    pub fn begin_with<F>(&self, tid: u32, name: &'static str, cat: &'static str, fill: F) -> SharedSpan
+    where
+        F: FnOnce(&mut Vec<(String, ArgValue)>),
+    {
+        let Some(s) = &self.0 else {
+            return SharedSpan { idx: 0, id: 0 };
+        };
+        let mut args = Vec::new();
+        fill(&mut args);
+        let id = s.next_id.fetch_add(1, Ordering::Relaxed);
+        let ev = TraceEvent {
+            kind: EventKind::Span,
+            name: name.to_string(),
+            cat: cat.to_string(),
+            ts_us: self.now_us() as i64,
+            dur_us: 0,
+            id,
+            pid: 0,
+            tid,
+            args,
+        };
+        let mut events = s.events.lock().unwrap();
+        events.push(ev);
+        SharedSpan { idx: events.len() - 1, id }
+    }
+
+    /// Close a shared span, patching its duration in place.
+    pub fn end(&self, span: SharedSpan) {
+        self.end_with(span, |_| {});
+    }
+
+    /// Close a shared span and append arguments only known after the fact
+    /// (screen survivor counts, schedule sizes, …); `fill` never runs when
+    /// the sink is disabled.
+    pub fn end_with<F>(&self, span: SharedSpan, fill: F)
+    where
+        F: FnOnce(&mut Vec<(String, ArgValue)>),
+    {
+        let Some(s) = &self.0 else { return };
+        if span.id == 0 {
+            return;
+        }
+        let now = self.now_us() as i64;
+        let mut events = s.events.lock().unwrap();
+        // the index is stable unless the store was drained mid-span;
+        // fall back to an id scan from the tail in that case
+        let idx = match events.get(span.idx) {
+            Some(e) if e.id == span.id => Some(span.idx),
+            _ => events.iter().rposition(|e| e.id == span.id),
+        };
+        if let Some(i) = idx {
+            events[i].dur_us = (now - events[i].ts_us).max(0) as u64;
+            fill(&mut events[i].args);
+        }
+    }
+
+    /// Record an instant event (dispatch coordination, drift guard, …).
+    pub fn instant_with<F>(&self, tid: u32, name: &'static str, cat: &'static str, fill: F)
+    where
+        F: FnOnce(&mut Vec<(String, ArgValue)>),
+    {
+        let Some(s) = &self.0 else { return };
+        let mut args = Vec::new();
+        fill(&mut args);
+        let ev = TraceEvent {
+            kind: EventKind::Instant,
+            name: name.to_string(),
+            cat: cat.to_string(),
+            ts_us: self.now_us() as i64,
+            dur_us: 0,
+            id: 0,
+            pid: 0,
+            tid,
+            args,
+        };
+        s.events.lock().unwrap().push(ev);
+    }
+
+    /// Snapshot the full store (events sorted by timestamp) for export.
+    pub fn export(&self) -> TraceExport {
+        match &self.0 {
+            Some(s) => {
+                let mut events = s.events.lock().unwrap().clone();
+                events.sort_by_key(|e| (e.ts_us, e.pid, e.tid));
+                TraceExport { events, tracks: s.tracks.lock().unwrap().clone() }
+            }
+            None => TraceExport::default(),
+        }
+    }
+
+    /// Take the store's contents, leaving it empty (a dispatched worker
+    /// drains between builds so each wire frame ships only new events).
+    pub fn drain(&self) -> TraceExport {
+        match &self.0 {
+            Some(s) => {
+                let mut events = std::mem::take(&mut *s.events.lock().unwrap());
+                events.sort_by_key(|e| (e.ts_us, e.pid, e.tid));
+                TraceExport { events, tracks: std::mem::take(&mut *s.tracks.lock().unwrap()) }
+            }
+            None => TraceExport::default(),
+        }
+    }
+}
+
+/// Per-thread append-only event buffer.  All methods are branch-on-a-bool
+/// cheap when the owning sink was disabled; when enabled nothing here
+/// takes a lock — the buffer is adopted wholesale at stream end.
+#[derive(Debug)]
+pub struct LocalTrace {
+    on: bool,
+    epoch: Instant,
+    tid: u32,
+    events: Vec<TraceEvent>,
+}
+
+/// Open-span handle into a [`LocalTrace`] (0 = disabled no-op).
+#[derive(Clone, Copy, Debug)]
+pub struct LocalSpan(u32);
+
+impl LocalTrace {
+    pub fn disabled() -> Self {
+        LocalTrace { on: false, epoch: Instant::now(), tid: 0, events: Vec::new() }
+    }
+
+    pub fn is_on(&self) -> bool {
+        self.on
+    }
+
+    pub fn tid(&self) -> u32 {
+        self.tid
+    }
+
+    fn now_us(&self) -> i64 {
+        self.epoch.elapsed().as_micros() as i64
+    }
+
+    pub fn begin(&mut self, name: &'static str, cat: &'static str) -> LocalSpan {
+        self.begin_with(name, cat, |_| {})
+    }
+
+    /// `fill` builds the argument payload; it never runs when disabled,
+    /// so call sites stay zero-allocation on the untraced path.
+    pub fn begin_with<F>(&mut self, name: &'static str, cat: &'static str, fill: F) -> LocalSpan
+    where
+        F: FnOnce(&mut Vec<(String, ArgValue)>),
+    {
+        if !self.on {
+            return LocalSpan(0);
+        }
+        let mut args = Vec::new();
+        fill(&mut args);
+        self.events.push(TraceEvent {
+            kind: EventKind::Span,
+            name: name.to_string(),
+            cat: cat.to_string(),
+            ts_us: self.now_us(),
+            dur_us: 0,
+            id: 0,
+            pid: 0,
+            tid: self.tid,
+            args,
+        });
+        LocalSpan(self.events.len() as u32)
+    }
+
+    pub fn end(&mut self, span: LocalSpan) {
+        self.end_with(span, |_| {});
+    }
+
+    /// Close a span and append arguments only known after the fact (e.g.
+    /// the evaluator strategy the backend actually picked).
+    pub fn end_with<F>(&mut self, span: LocalSpan, fill: F)
+    where
+        F: FnOnce(&mut Vec<(String, ArgValue)>),
+    {
+        if !self.on || span.0 == 0 {
+            return;
+        }
+        let now = self.now_us();
+        let ev = &mut self.events[span.0 as usize - 1];
+        ev.dur_us = (now - ev.ts_us).max(0) as u64;
+        fill(&mut ev.args);
+    }
+
+    pub fn instant_with<F>(&mut self, name: &'static str, cat: &'static str, fill: F)
+    where
+        F: FnOnce(&mut Vec<(String, ArgValue)>),
+    {
+        if !self.on {
+            return;
+        }
+        let mut args = Vec::new();
+        fill(&mut args);
+        self.events.push(TraceEvent {
+            kind: EventKind::Instant,
+            name: name.to_string(),
+            cat: cat.to_string(),
+            ts_us: self.now_us(),
+            dur_us: 0,
+            id: 0,
+            pid: 0,
+            tid: self.tid,
+            args,
+        });
+    }
+}
+
+/// Stamp a worker's shipped events onto the coordinator timeline: apply
+/// the handshake-derived clock offset and assign the worker's pid.
+pub fn align_remote(events: &mut [TraceEvent], pid: u32, clock_offset_us: i64) {
+    for e in events.iter_mut() {
+        e.ts_us += clock_offset_us;
+        e.pid = pid;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_sink_is_inert_and_allocation_free() {
+        let sink = TraceSink::disabled();
+        let span = sink.begin_with(TID_ENGINE, "x", "scf", |_| {
+            panic!("fill must not run when disabled")
+        });
+        sink.end(span);
+        sink.instant_with(TID_DISPATCH, "ev", "dispatch", |_| {
+            panic!("fill must not run when disabled")
+        });
+        let mut lt = sink.local("worker");
+        assert!(!lt.is_on());
+        let s = lt.begin_with("chunk", "pipeline", |_| panic!("fill must not run"));
+        lt.end(s);
+        sink.adopt(lt);
+        assert!(sink.export().events.is_empty());
+        assert_eq!(sink.now_us(), 0);
+    }
+
+    #[test]
+    fn spans_nest_and_durations_cover_children() {
+        let sink = TraceSink::enabled();
+        let build = sink.begin(TID_ENGINE, "fock_build", "scf");
+        assert_ne!(build.id(), 0);
+        let mut lt = sink.local("pipeline worker");
+        let unit = lt.begin_with("unit", "pipeline", |a| a.push(("unit".into(), ArgValue::U(3))));
+        let chunk = lt.begin("gather", "pipeline");
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        lt.end(chunk);
+        lt.end(unit);
+        sink.adopt(lt);
+        sink.end(build);
+        let export = sink.export();
+        assert_eq!(export.events.len(), 3);
+        let find = |name: &str| export.events.iter().find(|e| e.name == name).unwrap();
+        let (b, u, c) = (find("fock_build"), find("unit"), find("gather"));
+        // temporal containment: chunk ⊆ unit ⊆ build
+        for (inner, outer) in [(c, u), (u, b)] {
+            assert!(inner.ts_us >= outer.ts_us, "{inner:?} starts before {outer:?}");
+            assert!(
+                inner.ts_us + inner.dur_us as i64 <= outer.ts_us + outer.dur_us as i64,
+                "{inner:?} ends after {outer:?}"
+            );
+        }
+        assert_eq!(u.args, vec![("unit".to_string(), ArgValue::U(3))]);
+        assert_eq!(export.tracks.len(), 1);
+        assert_eq!(export.tracks[0].1, "pipeline worker");
+    }
+
+    #[test]
+    fn clock_offset_merge_aligns_two_synthetic_worker_buffers() {
+        // two workers whose clocks differ from the coordinator's by
+        // +5000 µs and −2000 µs; after alignment the interleaving must
+        // reflect true (coordinator-clock) order
+        let sink = TraceSink::enabled();
+        let ev = |name: &str, ts: i64| TraceEvent {
+            kind: EventKind::Span,
+            name: name.into(),
+            cat: "pipeline".into(),
+            ts_us: ts,
+            dur_us: 10,
+            id: 0,
+            pid: 0,
+            tid: 2,
+            args: Vec::new(),
+        };
+        // worker 0 clock runs 5000µs behind coordinator → offset +5000
+        let mut w0 = vec![ev("w0_first", 100), ev("w0_second", 4000)];
+        // worker 1 clock runs 2000µs ahead → offset −2000
+        let mut w1 = vec![ev("w1_first", 2200), ev("w1_second", 9000)];
+        align_remote(&mut w0, 1, 5000);
+        align_remote(&mut w1, 2, -2000);
+        sink.adopt_events(w0);
+        sink.adopt_events(w1);
+        let order: Vec<&str> =
+            sink.export().events.iter().map(|e| e.name.as_str()).collect();
+        assert_eq!(order, vec!["w1_first", "w0_first", "w1_second", "w0_second"]);
+        let export = sink.export();
+        let w1_first = export.events.iter().find(|e| e.name == "w1_first").unwrap();
+        assert_eq!(w1_first.ts_us, 200);
+        assert_eq!(w1_first.pid, 2);
+    }
+
+    #[test]
+    fn drain_empties_the_store_and_end_survives_a_drain() {
+        let sink = TraceSink::enabled();
+        let open = sink.begin(TID_ENGINE, "outer", "scf");
+        sink.instant_with(TID_DISPATCH, "handout", "dispatch", |a| {
+            a.push(("units".into(), ArgValue::U(4)))
+        });
+        let first = sink.drain();
+        assert_eq!(first.events.len(), 2);
+        assert!(sink.export().events.is_empty());
+        // ending a span whose event was drained must not panic or
+        // mispatch another event
+        sink.end(open);
+        assert!(sink.export().events.is_empty());
+    }
+}

@@ -1,0 +1,339 @@
+//! Versioned JSON metrics snapshots: one named registry unifying
+//! `EngineMetrics`, `WorkerDispatchStats`, and `FockBuildStats`, written
+//! by `--metrics-out` and adopted by every `BENCH_*.json` the benches
+//! emit, so SCF runs and benchmark figures share a single
+//! machine-readable schema.
+//!
+//! Document shape (`schema` is the version gate — bump it on any
+//! incompatible change):
+//!
+//! ```json
+//! {
+//!   "schema": "matryoshka-metrics-v1",
+//!   "kind": "scf" | "bench",
+//!   "label": "water / 6-31g*",
+//!   "context":  { "molecule": "water", ... },
+//!   "counters": { "total_real_quads": 123, ... },
+//!   "tables":   { "per_class": [ {...}, ... ], ... }
+//! }
+//! ```
+//!
+//! `counters` is a flat name → number registry; `tables` holds named
+//! arrays of row objects (per-class stats, per-worker dispatch
+//! attribution, per-iteration Fock builds, bench rows).
+
+use std::path::Path;
+
+use super::json::Value;
+use crate::metrics::EngineMetrics;
+
+/// The only schema tag [`validate_snapshot`] accepts.
+pub const SCHEMA: &str = "matryoshka-metrics-v1";
+
+/// Builder for one snapshot document.
+#[derive(Clone, Debug)]
+pub struct Snapshot {
+    kind: String,
+    label: String,
+    context: Vec<(String, Value)>,
+    counters: Vec<(String, Value)>,
+    tables: Vec<(String, Value)>,
+}
+
+impl Snapshot {
+    /// `kind` is the producer family ("scf" for engine runs, "bench" for
+    /// benchmark figures); `label` is a human-readable run description.
+    pub fn new(kind: &str, label: &str) -> Self {
+        Snapshot {
+            kind: kind.to_string(),
+            label: label.to_string(),
+            context: Vec::new(),
+            counters: Vec::new(),
+            tables: Vec::new(),
+        }
+    }
+
+    pub fn ctx_str(&mut self, key: &str, value: &str) -> &mut Self {
+        self.context.push((key.to_string(), Value::Str(value.to_string())));
+        self
+    }
+
+    pub fn ctx_num(&mut self, key: &str, value: f64) -> &mut Self {
+        self.context.push((key.to_string(), Value::Num(value)));
+        self
+    }
+
+    /// Register one named counter (last write wins on duplicate names).
+    pub fn counter(&mut self, name: &str, value: f64) -> &mut Self {
+        if let Some(slot) = self.counters.iter_mut().find(|(n, _)| n == name) {
+            slot.1 = Value::Num(value);
+        } else {
+            self.counters.push((name.to_string(), Value::Num(value)));
+        }
+        self
+    }
+
+    /// Attach a named table of row objects (see [`row`]).
+    pub fn table(&mut self, name: &str, rows: Vec<Value>) -> &mut Self {
+        self.tables.push((name.to_string(), Value::Arr(rows)));
+        self
+    }
+
+    pub fn to_value(&self) -> Value {
+        Value::Obj(vec![
+            ("schema".into(), Value::Str(SCHEMA.into())),
+            ("kind".into(), Value::Str(self.kind.clone())),
+            ("label".into(), Value::Str(self.label.clone())),
+            ("context".into(), Value::Obj(self.context.clone())),
+            ("counters".into(), Value::Obj(self.counters.clone())),
+            ("tables".into(), Value::Obj(self.tables.clone())),
+        ])
+    }
+
+    pub fn write(&self, path: &Path) -> anyhow::Result<()> {
+        std::fs::write(path, self.to_value().to_json_pretty())
+            .map_err(|e| anyhow::anyhow!("writing metrics snapshot to {}: {e}", path.display()))
+    }
+}
+
+/// Build a table row from `(column, value)` pairs.
+pub fn row(fields: Vec<(&str, Value)>) -> Value {
+    Value::Obj(fields.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+}
+
+fn num(n: f64) -> Value {
+    Value::Num(n)
+}
+
+/// Fold an [`EngineMetrics`] into the snapshot: every scalar becomes a
+/// named counter, every keyed registry becomes a table.
+pub fn put_engine_metrics(snap: &mut Snapshot, m: &EngineMetrics) {
+    snap.counter("total_real_quads", m.total_real_quads() as f64)
+        .counter("execute_seconds", m.total_seconds())
+        .counter("gather_seconds", m.gather_seconds)
+        .counter("prefetch_gather_seconds", m.prefetch_gather_seconds)
+        .counter("digest_seconds", m.digest_seconds)
+        .counter("pipeline_wall_seconds", m.pipeline_wall_seconds)
+        .counter("overlap_hidden_seconds", m.overlap_hidden_seconds())
+        .counter("mean_lane_utilization", m.mean_lane_utilization())
+        .counter("wide_chunks", m.wide_chunks as f64)
+        .counter("split_chunks", m.split_chunks as f64)
+        .counter("incremental_builds", m.incremental_builds as f64)
+        .counter("full_builds", m.full_builds as f64)
+        .counter("incremental_seconds", m.incremental_seconds)
+        .counter("full_seconds", m.full_seconds)
+        .counter("dispatch_lost_workers", m.dispatch_lost_workers as f64)
+        .counter("dispatch_recovered_units", m.dispatch_recovered_units as f64)
+        .counter("dispatch_retries", m.dispatch_retries as f64)
+        .counter("dispatch_joined_mid_scf", m.dispatch_joined_mid_scf as f64);
+    let class_row = |class: &crate::runtime::ClassKey, s: &crate::metrics::ClassStats| {
+        vec![
+            ("class", Value::Str(crate::runtime::class_letters(*class))),
+            ("executions", num(s.executions as f64)),
+            ("real_quads", num(s.real_quads as f64)),
+            ("padded_slots", num(s.padded_slots as f64)),
+            ("seconds", num(s.seconds)),
+            ("lane_utilization", num(s.lane_utilization())),
+        ]
+    };
+    snap.table(
+        "per_class",
+        m.per_class.iter().map(|(c, s)| row(class_row(c, s))).collect(),
+    );
+    snap.table(
+        "per_rung",
+        m.per_rung
+            .iter()
+            .map(|((c, rung), s)| {
+                let mut fields = class_row(c, s);
+                fields.insert(1, ("rung", num(*rung as f64)));
+                row(fields)
+            })
+            .collect(),
+    );
+    snap.table(
+        "per_strategy_seconds",
+        m.per_strategy
+            .iter()
+            .map(|(name, secs)| row(vec![("strategy", Value::Str(name.clone())), ("seconds", num(*secs))]))
+            .collect(),
+    );
+    snap.table(
+        "per_digest_seconds",
+        m.per_digest
+            .iter()
+            .map(|(name, secs)| row(vec![("strategy", Value::Str(name.clone())), ("seconds", num(*secs))]))
+            .collect(),
+    );
+}
+
+/// Fold per-worker dispatch attribution into the snapshot.
+pub fn put_dispatch_stats(snap: &mut Snapshot, workers: &[crate::dispatch::WorkerDispatchStats]) {
+    snap.table(
+        "workers",
+        workers
+            .iter()
+            .map(|w| {
+                row(vec![
+                    ("label", Value::Str(w.label.clone())),
+                    ("units", num(w.units as f64)),
+                    ("duplicate_shards", num(w.duplicate_shards as f64)),
+                    ("quads", num(w.quads as f64)),
+                    ("flops", num(w.flops)),
+                    ("execute_seconds", num(w.execute_seconds)),
+                    ("wall_seconds", num(w.wall_seconds)),
+                    ("rebalanced_away", num(w.rebalanced_away as f64)),
+                    ("lost", num(w.lost as f64)),
+                    ("recovered_units", num(w.recovered_units as f64)),
+                    ("retries", num(w.retries as f64)),
+                    ("joined_mid_scf", num(w.joined_mid_scf as f64)),
+                ])
+            })
+            .collect(),
+    );
+}
+
+/// Fold the per-iteration Fock-build trace into the snapshot; `span`
+/// cross-references the Chrome trace's `fock_build` span ids.
+pub fn put_fock_builds(snap: &mut Snapshot, builds: &[crate::scf::FockBuildStats]) {
+    snap.table(
+        "fock_builds",
+        builds
+            .iter()
+            .enumerate()
+            .map(|(i, b)| {
+                row(vec![
+                    ("iteration", num((i + 1) as f64)),
+                    ("incremental", Value::Bool(b.incremental)),
+                    ("chunks_executed", num(b.chunks_executed as f64)),
+                    ("chunks_screened", num(b.chunks_screened as f64)),
+                    ("dd_max", num(b.dd_max)),
+                    ("wall_seconds", num(b.wall_seconds)),
+                    ("span", num(b.span as f64)),
+                ])
+            })
+            .collect(),
+    );
+}
+
+/// What the std-only validator learned about a snapshot document.
+#[derive(Clone, Debug, Default)]
+pub struct SnapshotSummary {
+    pub kind: String,
+    pub label: String,
+    pub counters: usize,
+    /// `(table name, row count)` in document order.
+    pub tables: Vec<(String, usize)>,
+}
+
+impl SnapshotSummary {
+    pub fn table_rows(&self, name: &str) -> Option<usize> {
+        self.tables.iter().find(|(n, _)| n == name).map(|(_, r)| *r)
+    }
+}
+
+/// Structural validation: the shape tests and the CI smoke hold
+/// `--metrics-out` and `BENCH_*.json` files to.
+pub fn validate_snapshot(doc: &Value) -> Result<SnapshotSummary, String> {
+    match doc.get("schema").and_then(Value::as_str) {
+        Some(s) if s == SCHEMA => {}
+        Some(s) => return Err(format!("unsupported schema {s:?} (expected {SCHEMA:?})")),
+        None => return Err("missing schema tag".into()),
+    }
+    let mut summary = SnapshotSummary {
+        kind: doc.get("kind").and_then(Value::as_str).ok_or("missing kind")?.to_string(),
+        label: doc.get("label").and_then(Value::as_str).ok_or("missing label")?.to_string(),
+        ..Default::default()
+    };
+    let Some(Value::Obj(counters)) = doc.get("counters") else {
+        return Err("missing counters object".into());
+    };
+    for (name, v) in counters {
+        if v.as_f64().is_none() {
+            return Err(format!("counter {name:?} is not a number"));
+        }
+    }
+    summary.counters = counters.len();
+    let Some(Value::Obj(tables)) = doc.get("tables") else {
+        return Err("missing tables object".into());
+    };
+    for (name, v) in tables {
+        let rows = v.as_arr().ok_or(format!("table {name:?} is not an array"))?;
+        for r in rows {
+            if !matches!(r, Value::Obj(_)) {
+                return Err(format!("table {name:?} has a non-object row"));
+            }
+        }
+        summary.tables.push((name.clone(), rows.len()));
+    }
+    if !matches!(doc.get("context"), Some(Value::Obj(_))) {
+        return Err("missing context object".into());
+    }
+    Ok(summary)
+}
+
+/// Load + validate a snapshot file in one step.
+pub fn read_snapshot(path: &Path) -> anyhow::Result<(Value, SnapshotSummary)> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?;
+    let doc = Value::parse(&text)
+        .map_err(|e| anyhow::anyhow!("{} is not valid JSON: {e}", path.display()))?;
+    let summary = validate_snapshot(&doc)
+        .map_err(|e| anyhow::anyhow!("{} is not a valid metrics snapshot: {e}", path.display()))?;
+    Ok((doc, summary))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn engine_metrics_snapshot_round_trips_and_validates() {
+        let mut m = EngineMetrics::default();
+        m.record_entry((0, 0, 0, 0), 512, true, 100, 512, 0.5);
+        m.record_entry((1, 0, 1, 0), 32, false, 30, 32, 0.1);
+        m.record_strategy("kernels", 0.6);
+        m.record_digest("gemm", 0.2);
+        m.gather_seconds = 0.25;
+        let mut snap = Snapshot::new("scf", "water / sto-3g");
+        snap.ctx_str("molecule", "water").ctx_num("threads", 2.0);
+        put_engine_metrics(&mut snap, &m);
+        let doc = Value::parse(&snap.to_value().to_json_pretty()).unwrap();
+        let summary = validate_snapshot(&doc).unwrap();
+        assert_eq!(summary.kind, "scf");
+        assert_eq!(summary.table_rows("per_class"), Some(2));
+        assert_eq!(summary.table_rows("per_rung"), Some(2));
+        assert_eq!(summary.table_rows("per_strategy_seconds"), Some(1));
+        assert!(summary.counters >= 15);
+        // counters carry the real values through the JSON layer
+        let quads = doc
+            .get("counters")
+            .and_then(|c| c.get("total_real_quads"))
+            .and_then(Value::as_f64)
+            .unwrap();
+        assert_eq!(quads, 130.0);
+    }
+
+    #[test]
+    fn counter_overwrites_by_name() {
+        let mut snap = Snapshot::new("bench", "x");
+        snap.counter("a", 1.0).counter("a", 2.0);
+        let doc = snap.to_value();
+        assert_eq!(doc.get("counters").and_then(|c| c.get("a")).and_then(Value::as_f64), Some(2.0));
+    }
+
+    #[test]
+    fn validator_rejects_wrong_schema_and_shapes() {
+        for bad in [
+            r#"{"kind": "scf"}"#,
+            r#"{"schema": "matryoshka-metrics-v0", "kind": "scf", "label": "x"}"#,
+            r#"{"schema": "matryoshka-metrics-v1", "kind": "scf", "label": "x",
+                "context": {}, "counters": {"a": "not-a-number"}, "tables": {}}"#,
+            r#"{"schema": "matryoshka-metrics-v1", "kind": "scf", "label": "x",
+                "context": {}, "counters": {}, "tables": {"t": {"not": "array"}}}"#,
+        ] {
+            let doc = Value::parse(bad).unwrap();
+            assert!(validate_snapshot(&doc).is_err(), "accepted {bad}");
+        }
+    }
+}

@@ -586,6 +586,7 @@ fn schedule_fingerprint_mismatch_is_rejected_before_any_execution() {
         pipeline: PipelineMode::Staged,
         artifact_dir: "unused".into(),
         schwarz_cal_path: None,
+        trace: false,
     };
 
     let listener = TcpListener::bind("127.0.0.1:0").unwrap();

@@ -1,0 +1,269 @@
+//! Observability acceptance tests (ISSUE 10).
+//!
+//! The bar: tracing must be bitwise invisible — G and the whole SCF
+//! trajectory identical with the sink enabled or disabled, in-process
+//! and across `--dispatch local:2` — while an enabled sink produces a
+//! structurally valid Chrome trace: spans that nest properly per track,
+//! a single timeline holding the coordinator (pid 0) plus every
+//! dispatched worker (pid w+1) clock-aligned, and `fock_build` span ids
+//! that cross-reference the engine's per-iteration [`FockBuildStats`].
+
+use std::collections::HashSet;
+use std::path::{Path, PathBuf};
+
+use matryoshka::basis::build_basis;
+use matryoshka::dispatch::{DispatchConfig, DispatchMode};
+use matryoshka::engines::{MatryoshkaConfig, MatryoshkaEngine};
+use matryoshka::linalg::Matrix;
+use matryoshka::molecule::library;
+use matryoshka::scf::{run_rhf, FockEngine, ScfOptions};
+use matryoshka::trace::{chrome, EventKind, TraceExport, TraceSink};
+
+fn worker_bin() -> PathBuf {
+    PathBuf::from(env!("CARGO_BIN_EXE_matryoshka"))
+}
+
+fn test_density(n: usize) -> Matrix {
+    let mut d = Matrix::zeros(n, n);
+    for i in 0..n {
+        for j in 0..n {
+            let v = 0.3 / (1.0 + (i as f64 - j as f64).abs());
+            *d.at_mut(i, j) = v;
+            *d.at_mut(j, i) = v;
+        }
+    }
+    d
+}
+
+fn engine(molecule: &str, basis_name: &str, config: MatryoshkaConfig) -> MatryoshkaEngine {
+    let mol = library::by_name(molecule).unwrap();
+    let basis = build_basis(&mol, basis_name).unwrap();
+    MatryoshkaEngine::new(basis, Path::new("unused"), config).unwrap()
+}
+
+fn span_names(export: &TraceExport) -> HashSet<String> {
+    export
+        .events
+        .iter()
+        .filter(|e| e.kind == EventKind::Span)
+        .map(|e| e.name.clone())
+        .collect()
+}
+
+/// Spans on one `(pid, tid)` track came off a call stack, so any two must
+/// either nest or be disjoint — never partially overlap.
+fn assert_stack_nesting(export: &TraceExport) {
+    let mut per_track: std::collections::BTreeMap<(u32, u32), Vec<(i64, i64, &str)>> =
+        std::collections::BTreeMap::new();
+    for e in &export.events {
+        if e.kind == EventKind::Span {
+            per_track
+                .entry((e.pid, e.tid))
+                .or_default()
+                .push((e.ts_us, e.ts_us + e.dur_us as i64, &e.name));
+        }
+    }
+    for ((pid, tid), spans) in &per_track {
+        for (i, a) in spans.iter().enumerate() {
+            for b in spans.iter().skip(i + 1) {
+                let disjoint = a.1 <= b.0 || b.1 <= a.0;
+                let a_in_b = b.0 <= a.0 && a.1 <= b.1;
+                let b_in_a = a.0 <= b.0 && b.1 <= a.1;
+                assert!(
+                    disjoint || a_in_b || b_in_a,
+                    "spans {a:?} and {b:?} partially overlap on track ({pid}, {tid})"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn tracing_is_bitwise_invisible_and_spans_nest_in_process() {
+    // 6-31G* water exercises d classes, both stage shapes, and multiple
+    // merge units — the full span surface
+    let mol = library::by_name("water").unwrap();
+    let basis = build_basis(&mol, "6-31g*").unwrap();
+    let d = test_density(basis.nbf);
+
+    let mut plain = engine("water", "6-31g*", MatryoshkaConfig::default());
+    let g_ref = plain.two_electron(&d).unwrap();
+
+    let sink = TraceSink::enabled();
+    let config = MatryoshkaConfig { trace: sink.clone(), ..Default::default() };
+    let mut traced = engine("water", "6-31g*", config);
+    let g = traced.two_electron(&d).unwrap();
+    assert_eq!(g_ref.data(), g.data(), "enabling tracing changed G");
+
+    let export = sink.export();
+    let names = span_names(&export);
+    for expected in [
+        "schwarz_screen",
+        "block_plan",
+        "schedule_build",
+        "fock_build",
+        "unit",
+        "gather",
+        "digest",
+        "execute",
+        "merge_partials",
+    ] {
+        assert!(names.contains(expected), "missing span {expected:?}; got {names:?}");
+    }
+    assert_stack_nesting(&export);
+    // every execute span carries its evaluator; every digest its strategy
+    for e in &export.events {
+        if e.kind == EventKind::Span && (e.name == "execute" || e.name == "digest") {
+            assert!(
+                e.args.iter().any(|(k, _)| k == "strategy"),
+                "{} span missing strategy arg: {:?}",
+                e.name,
+                e.args
+            );
+        }
+    }
+}
+
+#[test]
+fn scf_trajectory_is_identical_with_tracing_and_spans_cross_reference() {
+    let mol = library::by_name("water").unwrap();
+    let basis = build_basis(&mol, "sto-3g").unwrap();
+
+    let mut plain = engine("water", "sto-3g", MatryoshkaConfig::default());
+    let res_ref = run_rhf(&mol, &basis, &mut plain, &ScfOptions::default()).unwrap();
+    assert!(res_ref.converged);
+
+    let sink = TraceSink::enabled();
+    let config = MatryoshkaConfig { trace: sink.clone(), ..Default::default() };
+    let mut traced = engine("water", "sto-3g", config);
+    let opts = ScfOptions { trace: sink.clone(), ..Default::default() };
+    let res = run_rhf(&mol, &basis, &mut traced, &opts).unwrap();
+
+    assert_eq!(res.energy, res_ref.energy, "tracing changed the SCF energy");
+    assert_eq!(res.iterations, res_ref.iterations);
+    assert_eq!(res.energy_trace, res_ref.energy_trace);
+
+    let export = sink.export();
+    let names = span_names(&export);
+    assert!(names.contains("scf_iteration"), "{names:?}");
+    assert!(names.contains("diis_extrapolate"), "{names:?}");
+    // each recorded Fock build points at a real fock_build span id
+    let span_ids: HashSet<u64> = export
+        .events
+        .iter()
+        .filter(|e| e.name == "fock_build")
+        .map(|e| e.id)
+        .collect();
+    let builds = traced.fock_trace();
+    assert!(!builds.is_empty());
+    for b in builds {
+        assert!(b.span != 0, "FockBuildStats.span unset with tracing on");
+        assert!(span_ids.contains(&b.span), "span {} has no fock_build event", b.span);
+    }
+}
+
+#[test]
+fn dispatched_trace_merges_both_workers_onto_the_coordinator_timeline() {
+    // the ISSUE 10 acceptance case: a dispatched 6-31G* water build with
+    // tracing must keep G bitwise AND produce one Chrome JSON holding
+    // pid 0 (coordinator) plus pids 1 and 2 (both workers), clock-aligned
+    let mol = library::by_name("water").unwrap();
+    let basis = build_basis(&mol, "6-31g*").unwrap();
+    let d = test_density(basis.nbf);
+
+    let mut plain = engine("water", "6-31g*", MatryoshkaConfig::default());
+    let g_ref = plain.two_electron(&d).unwrap();
+
+    let sink = TraceSink::enabled();
+    let config = MatryoshkaConfig {
+        trace: sink.clone(),
+        dispatch: DispatchConfig {
+            mode: DispatchMode::Local(2),
+            worker_bin: Some(worker_bin()),
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    let mut e = engine("water", "6-31g*", config);
+    let g = e.two_electron(&d).unwrap();
+    assert_eq!(g_ref.data(), g.data(), "traced dispatched G diverged");
+    drop(e); // shut the fleet down before inspecting the merged timeline
+
+    let export = sink.export();
+    let end_us = sink.now_us() as i64;
+    let pids: HashSet<u32> = export.events.iter().map(|ev| ev.pid).collect();
+    assert!(pids.contains(&0), "coordinator events missing: {pids:?}");
+    assert!(
+        pids.contains(&1) && pids.contains(&2),
+        "both workers must appear on the timeline: {pids:?}"
+    );
+    // clock alignment: every remote timestamp maps into the coordinator's
+    // clock window (non-negative, not in the future)
+    for ev in &export.events {
+        assert!(
+            ev.ts_us >= 0 && ev.ts_us <= end_us,
+            "event {:?} (pid {}) off the unified timeline: ts {}us, end {}us",
+            ev.name,
+            ev.pid,
+            ev.ts_us,
+            end_us
+        );
+    }
+    // worker pipeline spans and coordinator dispatch events coexist
+    assert!(
+        export
+            .events
+            .iter()
+            .any(|ev| ev.pid > 0 && ev.kind == EventKind::Span && ev.name == "unit"),
+        "no worker unit spans crossed the wire"
+    );
+    assert!(
+        export.events.iter().any(|ev| ev.pid == 0 && ev.name == "dispatch_build"),
+        "no coordinator dispatch_build span"
+    );
+    assert!(
+        export.events.iter().any(|ev| ev.pid == 0 && ev.name == "run_handout"),
+        "no run_handout instants"
+    );
+    // every worker track is named after its link label
+    assert!(
+        export.tracks.iter().any(|((pid, _), name)| *pid > 0 && name.contains("local:")),
+        "worker tracks not labeled: {:?}",
+        export.tracks
+    );
+    assert_stack_nesting(&export);
+
+    // the file round-trip the CLI performs: write, re-read, validate
+    let path = std::env::temp_dir()
+        .join(format!("matryoshka_trace_{}.json", std::process::id()));
+    chrome::write_chrome(&path, &export).unwrap();
+    let (_doc, summary) = chrome::read_chrome(&path).unwrap();
+    assert_eq!(summary.pids, vec![0, 1, 2], "{summary:?}");
+    assert!(summary.has_event("fock_build"), "{summary:?}");
+    assert!(summary.has_event("execute"), "{summary:?}");
+    assert!(summary.spans > 0 && summary.metadata > 0);
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn disabled_sink_records_nothing_across_a_dispatched_build() {
+    // dispatch with tracing off: the JobSpec flag stays false, workers
+    // ship no Trace frames, and the export is empty
+    let mol = library::by_name("water").unwrap();
+    let basis = build_basis(&mol, "sto-3g").unwrap();
+    let d = test_density(basis.nbf);
+    let sink = TraceSink::disabled();
+    let config = MatryoshkaConfig {
+        trace: sink.clone(),
+        dispatch: DispatchConfig {
+            mode: DispatchMode::Local(2),
+            worker_bin: Some(worker_bin()),
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    let mut e = engine("water", "sto-3g", config);
+    e.two_electron(&d).unwrap();
+    let export = sink.export();
+    assert!(export.events.is_empty() && export.tracks.is_empty());
+}
